@@ -1,0 +1,53 @@
+//! Codec throughput ablation: encode/decode Mev/s for every format.
+//!
+//! Not a paper figure (the paper leaves cross-library format benchmarks
+//! to future work, §6 Limitations) — this quantifies the cost of each
+//! wire format on the ingest path, which bounds the whole pipeline when
+//! reading from disk. The packed `raw` format is the one the Fig. 3
+//! benchmark caches in RAM.
+//!
+//! Run: `cargo bench --bench codec_throughput`
+
+use aestream::aer::Resolution;
+use aestream::bench::{fmt_rate, measure, Table};
+use aestream::formats::{EventCodec, Format};
+use aestream::testutil::synthetic_events;
+
+fn main() {
+    let fast = std::env::var_os("AESTREAM_BENCH_FAST").is_some();
+    let n: usize = if fast { 50_000 } else { 1_000_000 };
+    let samples = if fast { 3 } else { 8 };
+    let res = Resolution::DAVIS_346;
+    let events = synthetic_events(n, res.width, res.height);
+
+    println!("Codec throughput over {n} events (DAVIS346 geometry)\n");
+    let mut table = Table::new(&[
+        "format", "encode", "decode", "bytes/event", "encode ev/s", "decode ev/s",
+    ]);
+    for format in Format::ALL {
+        let codec = format.codec();
+        let mut encoded = Vec::new();
+        codec.encode(&events, res, &mut encoded).unwrap();
+
+        let enc = measure(1, samples, || {
+            let mut buf = Vec::with_capacity(encoded.len());
+            codec.encode(&events, res, &mut buf).unwrap();
+            std::hint::black_box(buf.len());
+        });
+        let dec = measure(1, samples, || {
+            let (decoded, _) = codec.decode(&mut &encoded[..]).unwrap();
+            std::hint::black_box(decoded.len());
+        });
+        table.row(&[
+            format.to_string(),
+            format!("{:.1}ms", enc.mean_s * 1e3),
+            format!("{:.1}ms", dec.mean_s * 1e3),
+            format!("{:.2}", encoded.len() as f64 / n as f64),
+            fmt_rate(enc.throughput(n as u64), "ev/s"),
+            fmt_rate(dec.throughput(n as u64), "ev/s"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("raw (packed u64) is the RAM-cache format of the Fig. 3 bench;");
+    println!("EVT3 trades decode state for the smallest structured-scene wire size.");
+}

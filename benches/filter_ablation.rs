@@ -1,0 +1,86 @@
+//! Ablations beyond the paper's figures:
+//!
+//! 1. **engine design space** — coroutine channel capacity sweep, thread
+//!    buffer-size × worker sweep, and the lock-free SPSC ring (§2.1's
+//!    "approaches to eliminate locks"), all on the Fig. 3 workload;
+//! 2. **filter-chain cost** — per-event cost of each pipeline op and of
+//!    a realistic composed chain, bounding the L3 hot path.
+//!
+//! Run: `cargo bench --bench filter_ablation`
+
+use aestream::aer::{Polarity, Resolution};
+use aestream::bench::{fmt_rate, measure, Table};
+use aestream::engine::EngineKind;
+use aestream::pipeline::ops;
+use aestream::pipeline::Pipeline;
+use aestream::testutil::synthetic_events;
+
+fn main() {
+    let fast = std::env::var_os("AESTREAM_BENCH_FAST").is_some();
+    let n: usize = if fast { 1 << 15 } else { 1 << 19 };
+    let samples = if fast { 3 } else { 8 };
+    let res = Resolution::DAVIS_346;
+    let events = synthetic_events(n, res.width, res.height);
+
+    // ------------------------------------------------ engine ablation
+    println!("Engine design space on the checksum workload ({n} events)\n");
+    let mut engines = Table::new(&["engine", "mean", "throughput"]);
+    let kinds = [
+        EngineKind::Sync,
+        EngineKind::Coro,
+        EngineKind::CoroChannel { channel_capacity: 1 },
+        EngineKind::CoroChannel { channel_capacity: 256 },
+        EngineKind::CoroChannel { channel_capacity: 4096 },
+        EngineKind::Spsc { ring_capacity: 256 },
+        EngineKind::Spsc { ring_capacity: 4096 },
+        EngineKind::Threaded { buffer_size: 256, workers: 1 },
+        EngineKind::Threaded { buffer_size: 4096, workers: 1 },
+        EngineKind::Threaded { buffer_size: 4096, workers: 4 },
+    ];
+    for kind in kinds {
+        let stats = measure(1, samples, || {
+            std::hint::black_box(kind.run_checksum(&events));
+        });
+        engines.row(&[
+            kind.label(),
+            format!("{:.2}ms", stats.mean_s * 1e3),
+            fmt_rate(stats.throughput(n as u64), "ev/s"),
+        ]);
+    }
+    println!("{}", engines.render());
+
+    // ------------------------------------------------ filter ablation
+    println!("Per-event filter cost ({n} events)\n");
+    let mut filters = Table::new(&["pipeline", "mean", "ns/event", "kept %"]);
+    let mut cases: Vec<(&str, Pipeline)> = vec![
+        ("identity", Pipeline::new()),
+        ("polarity", Pipeline::new().then(ops::PolarityFilter::keep(Polarity::On))),
+        ("downsample", Pipeline::new().then(ops::Downsample::new(2))),
+        ("crop", Pipeline::new().then(ops::RoiCrop::new(50, 50, 200, 150))),
+        ("refractory", Pipeline::new().then(ops::RefractoryFilter::new(res, 500))),
+        ("denoise", Pipeline::new().then(ops::BackgroundActivityFilter::new(res, 5000))),
+        (
+            "full chain",
+            Pipeline::new()
+                .then(ops::BackgroundActivityFilter::new(res, 5000))
+                .then(ops::RefractoryFilter::new(res, 500))
+                .then(ops::RoiCrop::new(20, 20, 300, 220))
+                .then(ops::Downsample::new(2)),
+        ),
+    ];
+    for (name, pipeline) in &mut cases {
+        let mut kept = 0usize;
+        let stats = measure(1, samples, || {
+            pipeline.reset();
+            kept = pipeline.process(&events).len();
+            std::hint::black_box(kept);
+        });
+        filters.row(&[
+            name.to_string(),
+            format!("{:.2}ms", stats.mean_s * 1e3),
+            format!("{:.1}", stats.mean_s * 1e9 / n as f64),
+            format!("{:.1}", 100.0 * kept as f64 / n as f64),
+        ]);
+    }
+    println!("{}", filters.render());
+}

@@ -1,0 +1,112 @@
+//! Closed-loop neuromorphic tracking — the paper's §6 future-work demo.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example closed_loop
+//! ```
+//!
+//! A rotating-dot scene streams through the synthetic camera into the
+//! AOT-compiled LIF+conv edge detector on the device; the edge map's
+//! activity centroid feeds a proportional controller that pans a
+//! simulated actuator to keep the target on the crosshair — events in,
+//! commands out, fully in the loop:
+//!
+//! ```text
+//! scene ─▶ camera ─▶ framer ─▶ edge detector (XLA) ─▶ centroid
+//!   ▲                                                    │
+//!   └───────── pan actuator ◀── P controller ◀───────────┘
+//! ```
+
+use aestream::aer::Resolution;
+use aestream::camera::{CameraConfig, Scene, SyntheticCamera};
+use aestream::control::{centroid, PController, PanActuator};
+use aestream::pipeline::framer::Framer;
+use aestream::runtime::{DetectorSession, Device, TransferMode};
+
+fn main() -> anyhow::Result<()> {
+    let device = Device::open_default()?;
+    let m = device.manifest();
+    let res = Resolution::new(m.width as u16, m.height as u16);
+    let mut session = DetectorSession::new(&device, TransferMode::Sparse)?;
+
+    let controller = PController::new(8.0, 400.0);
+    let mut actuator = PanActuator::new(400.0);
+
+    // The target orbits the scene centre; the "camera" view is shifted
+    // by the actuator's pan, so good control keeps the apparent target
+    // near the crosshair.
+    let window_us = 2_000u64;
+    let mut errors = Vec::new();
+    println!("step  pan(px)  apparent-err(px)  activity");
+    for step in 0..120u64 {
+        // Render the scene as seen from the current pan position: the
+        // orbit centre shifts opposite to the pan.
+        let mut camera = SyntheticCamera::new(CameraConfig {
+            resolution: res,
+            scene: Scene::RotatingDot {
+                radius_px: 60.0,
+                period_s: 1.2,
+                dot_radius_px: 9.0,
+            },
+            noise_rate_hz: 1.0,
+            frame_interval_us: window_us,
+            seed: 1000 + step,
+        });
+        // Advance the simulated clock to this step's window so the dot
+        // is at the right orbital phase.
+        let mut events = Vec::new();
+        let mut t = 0u64;
+        while t < (step + 1) * window_us {
+            let burst = camera.step();
+            if t >= step * window_us {
+                events.extend(burst);
+            }
+            t = camera.now_us();
+        }
+        // Apply the pan: shift apparent x by the actuator position.
+        let pan = actuator.position;
+        let events: Vec<_> = events
+            .into_iter()
+            .filter_map(|mut ev| {
+                let x = ev.x as f32 - pan;
+                if x < 0.0 || x >= res.width as f32 {
+                    return None;
+                }
+                ev.x = x as u16;
+                Some(ev)
+            })
+            .collect();
+
+        // One frame window through the device edge detector.
+        let frames = Framer::frames_of(res, window_us, &events);
+        let Some(frame) = frames.last() else { continue };
+        let out = session.step_sparse(
+            &events[events.len().saturating_sub(session.max_events())..],
+        )?;
+        let _ = frame;
+
+        // Close the loop on the edge map.
+        if let Some((cx, _cy)) = centroid(&out.edges, res) {
+            let err = cx - res.width as f32 / 2.0;
+            let cmd = controller.command(err);
+            actuator.apply(cmd, window_us);
+            errors.push(err.abs());
+            if step % 12 == 0 {
+                println!(
+                    "{step:>4}  {:>7.1}  {:>16.1}  {:>8.0}",
+                    actuator.position,
+                    err,
+                    out.edges.iter().map(|v| v.abs()).sum::<f32>()
+                );
+            }
+        }
+    }
+
+    let early = errors.iter().take(10).sum::<f32>() / errors.len().min(10).max(1) as f32;
+    let late_n = errors.len().saturating_sub(10);
+    let late = errors.iter().skip(late_n).sum::<f32>() / errors.len().min(10).max(1) as f32;
+    println!("\nmean |error|: first 10 windows {early:.1} px → last 10 windows {late:.1} px");
+    println!("commands issued: {}", actuator.commands);
+    anyhow::ensure!(actuator.commands > 50, "loop never engaged");
+    println!("closed loop OK — events in, actuator commands out, no Python in the path");
+    Ok(())
+}

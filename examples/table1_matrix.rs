@@ -1,0 +1,19 @@
+//! Regenerate Table 1 of the paper: the library I/O feature matrix.
+//!
+//! ```sh
+//! cargo run --release --example table1_matrix
+//! ```
+//!
+//! The survey rows are transcribed from the paper; this library's row is
+//! derived from the compiled-in capabilities (see
+//! `pipeline::registry::our_row` and its tests, which assert each claim
+//! against the actual modules).
+
+fn main() {
+    println!("Table 1 — open-source AER library comparison (paper + this repo)\n");
+    print!("{}", aestream::pipeline::registry::render_table());
+    println!("\nIcons: GPU = device/tensor sink, CAM = camera input,");
+    println!("       FILE = native file I/O, NET = network streaming.");
+    println!("This repo's GPU column is the XLA/PJRT device runtime");
+    println!("(the paper's CUDA path, adapted per DESIGN.md §Hardware-Adaptation).");
+}

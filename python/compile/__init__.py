@@ -1,0 +1,6 @@
+"""Build-time compile package: JAX model (L2) + Pallas kernels (L1).
+
+Nothing in this package runs on the request path. ``make artifacts``
+invokes :mod:`compile.aot` once to lower the model to HLO text under
+``artifacts/``; the Rust coordinator loads those artifacts via PJRT.
+"""

@@ -1,0 +1,73 @@
+"""AOT exporter: lower the L2 model to HLO text for the Rust runtime.
+
+HLO *text* (not ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla_extension 0.5.1 behind the ``xla``
+crate rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Every exported function is lowered with ``return_tuple=True`` so the
+Rust side unwraps one tuple per execution.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str) -> dict:
+    """Lower every EXPORTS entry; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "height": model.HEIGHT,
+        "width": model.WIDTH,
+        "max_events": model.MAX_EVENTS,
+        "modules": {},
+    }
+    for name, fn in model.EXPORTS.items():
+        args = model.example_args(name)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["modules"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(a.shape), "dtype": a.dtype.name} for a in args
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    export_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels (build-time only; lowered to HLO via aot.py).
+
+Kernels:
+  * ``event_scatter`` -- bin a padded sparse event list into a dense frame
+    on-device (the paper's custom CUDA scatter kernel, re-thought for the
+    XLA device; see DESIGN.md section Hardware-Adaptation).
+  * ``lif_step`` -- tiled elementwise LIF-with-refractory state update.
+
+Every kernel has a pure-jnp oracle in ``ref.py``; pytest + hypothesis
+enforce equivalence before anything is exported.
+"""
+
+from .event_scatter import event_scatter  # noqa: F401
+from .lif_step import lif_step  # noqa: F401
+from . import ref  # noqa: F401

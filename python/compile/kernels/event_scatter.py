@@ -1,0 +1,80 @@
+"""Pallas kernel: scatter a padded sparse event list into a dense frame.
+
+This is the paper's custom CUDA kernel (section 5, scenarios 3 and 4)
+re-thought for the XLA device per DESIGN.md section Hardware-Adaptation:
+
+* CUDA: a threadblock per event chunk, atomicAdd into a device-resident
+  frame.
+* Here: a Pallas grid over event *blocks* (``BLOCK_EVENTS`` rows per
+  step); each grid step scatter-accumulates its block into the output
+  frame block, which stays VMEM-resident across the whole grid (constant
+  ``index_map``) -- the HBM <-> VMEM schedule the paper expressed with
+  threadblocks is expressed with BlockSpecs. A 346x260 f32 frame is
+  ~352 KiB, comfortably inside a TPU core's ~16 MiB VMEM.
+
+The block-local accumulation uses a vectorized ``scatter-add`` over the
+block rather than a per-event loop: on the interpret/CPU path this
+lowers to a single native HLO Scatter per block (a per-event
+``fori_loop`` of dynamic-update-slices measured ~40 us *per event* on
+the CPU backend -- see EXPERIMENTS.md section Perf for the comparison);
+on a real TPU the same structure maps to VPU gather/scatter within the
+resident tile.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO, which is
+exactly what ``aot.py`` exports for the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Events per grid step. 1024 rows x 3 i32 = 12 KiB per block transfer.
+BLOCK_EVENTS = 1024
+
+
+def _scatter_kernel(ev_ref, o_ref):
+    """One grid step: accumulate BLOCK_EVENTS (masked) events into o_ref."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    height, width = o_ref.shape
+
+    ev = ev_ref[...]  # (BLOCK_EVENTS, 3) i32 values in registers/VMEM
+    pol = ev[:, 2]
+    # Padding rows carry the sentinel p < 0 and contribute 0.
+    sign = jnp.where(pol >= 0, (2 * pol - 1).astype(jnp.float32), 0.0)
+    # Clamp coordinates so padded/malformed rows cannot index out of
+    # bounds (their contribution is zero anyway).
+    x = jnp.clip(ev[:, 0], 0, width - 1)
+    y = jnp.clip(ev[:, 1], 0, height - 1)
+    block_frame = jnp.zeros((height, width), jnp.float32).at[y, x].add(sign)
+    o_ref[...] += block_frame
+
+
+@functools.partial(jax.jit, static_argnames=("height", "width"))
+def event_scatter(events, *, height, width):
+    """Bin ``events`` (i32[N, 3] of (x, y, p), padded) into f32[H, W].
+
+    Padding rows carry the sentinel polarity ``p < 0`` and contribute
+    nothing. N must be a multiple of BLOCK_EVENTS (aot.py pads the
+    shape).
+    """
+    n = events.shape[0]
+    if n % BLOCK_EVENTS != 0:
+        raise ValueError(f"event count {n} not a multiple of {BLOCK_EVENTS}")
+    grid = n // BLOCK_EVENTS
+    return pl.pallas_call(
+        _scatter_kernel,
+        out_shape=jax.ShapeDtypeStruct((height, width), jnp.float32),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_EVENTS, 3), lambda i: (i, 0)),  # event block
+        ],
+        out_specs=pl.BlockSpec((height, width), lambda i: (0, 0)),  # resident
+        interpret=True,
+    )(events)

@@ -1,0 +1,57 @@
+"""Pallas kernel: tiled elementwise LIF-with-refractory update.
+
+The VPU-friendly half of the edge detector: pure elementwise math over
+the frame, tiled by rows so each grid step streams one
+``(ROW_BLOCK, W)`` stripe of x/v/r through VMEM. Semantics match
+``ref.lif_step_ref`` exactly (which in turn matches
+rust/src/snn/lif.rs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _lif_kernel(x_ref, v_ref, r_ref, s_out, v_out, r_out):
+    x = x_ref[...]
+    v = v_ref[...]
+    r = r_ref[...]
+    integrating = r == 0.0
+    v2 = v * ref.DECAY + jnp.where(integrating, x, 0.0)
+    spike = jnp.logical_and(integrating, v2 >= ref.THRESHOLD)
+    s_out[...] = spike.astype(jnp.float32)
+    v_out[...] = jnp.where(spike, ref.V_RESET, v2)
+    r_out[...] = jnp.where(spike, ref.REFRAC_STEPS, jnp.maximum(r - 1.0, 0.0))
+
+
+def _row_block(height):
+    """Largest row-block <= 64 that divides the frame height evenly."""
+    for cand in range(min(64, height), 0, -1):
+        if height % cand == 0:
+            return cand
+    return height
+
+
+@functools.partial(jax.jit)
+def lif_step(x, v, r):
+    """One LIF step over f32[H, W] (x, v, r) -> (spikes, v', r')."""
+    height, width = x.shape
+    rb = _row_block(height)
+    grid = height // rb
+    spec = pl.BlockSpec((rb, width), lambda i: (i, 0))
+    return pl.pallas_call(
+        _lif_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((height, width), jnp.float32),
+            jax.ShapeDtypeStruct((height, width), jnp.float32),
+            jax.ShapeDtypeStruct((height, width), jnp.float32),
+        ),
+        grid=(grid,),
+        in_specs=[spec, spec, spec],
+        out_specs=(spec, spec, spec),
+        interpret=True,
+    )(x, v, r)

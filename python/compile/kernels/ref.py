@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *specification*: small, obviously-correct jax.numpy
+implementations. They intentionally mirror the pure-Rust reference in
+``rust/src/snn/`` (operation order included, for float agreement) and
+are what the pytest + hypothesis suites compare the Pallas kernels
+against.
+"""
+
+import jax.numpy as jnp
+
+# LIF parameters -- keep in sync with rust/src/snn/lif.rs::LifParams::default().
+DECAY = 0.9
+THRESHOLD = 1.0
+V_RESET = 0.0
+REFRAC_STEPS = 3.0
+
+
+def lif_step_ref(x, v, r):
+    """One LIF-with-refractory step. All arrays share one shape.
+
+    Args:
+      x: input frame (f32).
+      v: membrane voltage state (f32).
+      r: remaining refractory steps (f32, integer-valued).
+
+    Returns:
+      (spikes, v_next, r_next), all f32 with the input shape.
+    """
+    integrating = r == 0.0
+    v2 = v * DECAY + jnp.where(integrating, x, 0.0)
+    spike = jnp.logical_and(integrating, v2 >= THRESHOLD)
+    spikes = spike.astype(jnp.float32)
+    v_next = jnp.where(spike, V_RESET, v2)
+    r_next = jnp.where(spike, REFRAC_STEPS, jnp.maximum(r - 1.0, 0.0))
+    return spikes, v_next, r_next
+
+
+def event_scatter_ref(events, height, width):
+    """Bin a padded event list into a dense signed-count frame.
+
+    Args:
+      events: i32[N, 3] rows of (x, y, p) with p in {0, 1} for real
+        events; padding rows carry the sentinel p < 0 and must not
+        contribute. (Sentinel padding keeps the sparse transfer a single
+        host->device operation -- no separate count scalar.)
+      height, width: frame geometry (static).
+
+    Returns:
+      f32[height, width] frame of sum(2p - 1) per pixel.
+    """
+    pol = events[:, 2]
+    sign = jnp.where(pol >= 0, (2 * pol - 1).astype(jnp.float32), 0.0)
+    # Clamp coordinates so padded/malformed rows cannot index out of
+    # bounds (their contribution is zero anyway).
+    x = jnp.clip(events[:, 0], 0, width - 1)
+    y = jnp.clip(events[:, 1], 0, height - 1)
+    frame = jnp.zeros((height, width), dtype=jnp.float32)
+    return frame.at[y, x].add(sign)
+
+
+def conv2d_3x3_ref(img, kernel):
+    """'Same' 3x3 cross-correlation with zero padding over f32[H, W].
+
+    Matches rust/src/snn/conv.rs::conv2d_3x3 and the lax.conv the model
+    uses.
+    """
+    import jax
+
+    lhs = img[None, None, :, :]
+    rhs = kernel.reshape(1, 1, 3, 3)
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0, 0]
+
+
+LAPLACIAN_3X3 = jnp.array(
+    [[0.0, -1.0, 0.0], [-1.0, 4.0, -1.0], [0.0, -1.0, 0.0]], dtype=jnp.float32
+)

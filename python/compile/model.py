@@ -1,0 +1,129 @@
+"""Layer-2 JAX model: the spiking edge detector of the paper's section 5.
+
+A LIF neuron layer with refractory term (the L1 Pallas ``lif_step``
+kernel) followed by a regular 3x3 Laplacian convolution. Two step
+functions correspond to the paper's two device-transfer strategies:
+
+* :func:`dense_step` -- host builds the dense frame, device runs the
+  detector (scenarios 1-2: full-tensor copy);
+* :func:`sparse_step` -- host ships the *sparse* event list, the L1
+  ``event_scatter`` Pallas kernel bins it on-device, then the detector
+  runs (scenarios 3-4: sparse copy, the paper's custom CUDA kernels).
+
+Both are state-carrying: ``(inputs, v, r) -> (edges, spikes, v', r')``;
+the Rust runtime feeds v/r back each frame, so the network persists
+across the stream without Python in the loop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import event_scatter, lif_step
+from .kernels import ref
+
+# Paper use-case geometry (DAVIS346) and the per-frame event capacity.
+HEIGHT = 260
+WIDTH = 346
+# Max events per frame window. The paper's recording averages ~3.6 Mev/s
+# = ~3629 events per 1 ms window; 4096 gives headroom and is a multiple
+# of the scatter kernel's 1024-event block.
+MAX_EVENTS = 4096
+
+
+def laplacian_shift_add(s):
+    """Laplacian via shifted adds: ``4s - up - down - left - right``.
+
+    Numerically identical (to f32 rounding) to the generic
+    ``lax.conv_general_dilated`` with the LAPLACIAN_3X3 kernel, but ~59x
+    faster on the CPU PJRT backend (5.31 ms -> 0.09 ms per 260x346
+    frame; EXPERIMENTS.md section Perf, L2 entry). The generic-conv form
+    remains in ``ref.conv2d_3x3_ref`` as the oracle; a pytest pins the
+    two together.
+    """
+    up = jnp.pad(s[1:, :], ((0, 1), (0, 0)))
+    down = jnp.pad(s[:-1, :], ((1, 0), (0, 0)))
+    left = jnp.pad(s[:, 1:], ((0, 0), (0, 1)))
+    right = jnp.pad(s[:, :-1], ((0, 0), (1, 0)))
+    return 4.0 * s - up - down - left - right
+
+
+def detector_core(frame, v, r):
+    """LIF + Laplacian conv over a dense f32[H, W] frame."""
+    spikes, v_next, r_next = lif_step(frame, v, r)
+    edges = laplacian_shift_add(spikes)
+    return edges, spikes, v_next, r_next
+
+
+def dense_step(frame, v, r):
+    """Dense-transfer step: host supplies the full f32[H, W] frame."""
+    return detector_core(frame, v, r)
+
+
+def sparse_step(events, v, r):
+    """Sparse-transfer step: events i32[MAX_EVENTS, 3], sentinel-padded.
+
+    The frame is built on-device by the Pallas scatter kernel; the host
+    copies only ``MAX_EVENTS * 12`` bytes instead of ``H * W * 4``, in a
+    single transfer operation (padding rows carry polarity -1).
+    """
+    frame = event_scatter(events, height=HEIGHT, width=WIDTH)
+    return detector_core(frame, v, r)
+
+
+def scatter_only(events):
+    """Just the binning kernel (micro-bench + unit-verification module)."""
+    return (event_scatter(events, height=HEIGHT, width=WIDTH),)
+
+
+def lif_only(x, v, r):
+    """Just the LIF kernel (micro-bench module)."""
+    return lif_step(x, v, r)
+
+
+def dense_step_free(frame, v, r):
+    """Free-running dense step: edges are consumed on-device.
+
+    The paper's benchmark loop never copies results back to the host --
+    frames live and die on the GPU. Returning the full edge/spike maps
+    through the PJRT tuple would haul H*W*8 bytes across the boundary
+    every frame, so the free-running variant reduces the edge map to a
+    scalar activity readout (|edges| summed; keeps the convolution from
+    being dead-code-eliminated) and returns only the recycled state.
+    EXPERIMENTS.md section Perf, L3 entry.
+    """
+    edges, _spikes, v_next, r_next = detector_core(frame, v, r)
+    activity = jnp.sum(jnp.abs(edges)).reshape(1)
+    return activity, v_next, r_next
+
+
+def sparse_step_free(events, v, r):
+    """Free-running sparse step (see dense_step_free)."""
+    edges, _spikes, v_next, r_next = sparse_step(events, v, r)
+    activity = jnp.sum(jnp.abs(edges)).reshape(1)
+    return activity, v_next, r_next
+
+
+def example_args(name):
+    """ShapeDtypeStructs for lowering each exported function."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    frame = jax.ShapeDtypeStruct((HEIGHT, WIDTH), f32)
+    events = jax.ShapeDtypeStruct((MAX_EVENTS, 3), i32)
+    return {
+        "dense_step": (frame, frame, frame),
+        "sparse_step": (events, frame, frame),
+        "dense_step_free": (frame, frame, frame),
+        "sparse_step_free": (events, frame, frame),
+        "scatter_only": (events,),
+        "lif_only": (frame, frame, frame),
+    }[name]
+
+
+EXPORTS = {
+    "dense_step": dense_step,
+    "sparse_step": sparse_step,
+    "dense_step_free": dense_step_free,
+    "sparse_step_free": sparse_step_free,
+    "scatter_only": scatter_only,
+    "lif_only": lif_only,
+}

@@ -1,0 +1,150 @@
+"""Kernel-vs-oracle equivalence: Pallas kernels against ref.py.
+
+Hypothesis sweeps shapes, counts and value ranges; every property pins
+the Pallas output to the pure-jnp oracle with tight tolerances (the
+kernels are float32 elementwise / integer scatter, so differences beyond
+1e-6 indicate a real bug, not float noise).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import event_scatter, lif_step, ref
+from compile.kernels.event_scatter import BLOCK_EVENTS
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ----------------------------------------------------------------- LIF
+
+def _lif_case(h, w, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, 1.0, size=(h, w)).astype(np.float32)
+    v = rng.normal(0.0, 1.0, size=(h, w)).astype(np.float32)
+    r = rng.integers(0, 5, size=(h, w)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(v), jnp.asarray(r)
+
+
+@given(
+    h=st.integers(min_value=1, max_value=96),
+    w=st.integers(min_value=1, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lif_matches_ref_over_shapes(h, w, seed):
+    x, v, r = _lif_case(h, w, seed)
+    s_k, v_k, r_k = lif_step(x, v, r)
+    s_r, v_r, r_r = ref.lif_step_ref(x, v, r)
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
+
+
+def test_lif_paper_geometry():
+    x, v, r = _lif_case(260, 346, 7)
+    s_k, v_k, r_k = lif_step(x, v, r)
+    s_r, v_r, r_r = ref.lif_step_ref(x, v, r)
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
+
+
+def test_lif_spike_semantics():
+    # One neuron above threshold, one below, one refractory.
+    x = jnp.asarray([[2.0, 0.5, 2.0]], dtype=jnp.float32)
+    v = jnp.zeros((1, 3), jnp.float32)
+    r = jnp.asarray([[0.0, 0.0, 2.0]], dtype=jnp.float32)
+    s, v2, r2 = lif_step(x, v, r)
+    assert s.tolist() == [[1.0, 0.0, 0.0]]
+    assert v2.tolist() == [[0.0, 0.5, 0.0]]  # reset / integrate / blocked
+    assert r2.tolist() == [[3.0, 0.0, 1.0]]  # set / idle / count down
+
+
+def test_lif_state_chain_matches_ref_over_time():
+    # Multi-step chaining: state errors would compound and be caught.
+    x, v, r = _lif_case(52, 64, 3)
+    vk, rk = v, r
+    vr, rr = v, r
+    for _ in range(10):
+        _, vk, rk = lif_step(x, vk, rk)
+        _, vr, rr = ref.lif_step_ref(x, vr, rr)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+
+
+# ------------------------------------------------------------- scatter
+
+def _events_case(n_blocks, count, h, w, seed):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * BLOCK_EVENTS
+    ev = np.zeros((n, 3), dtype=np.int32)
+    ev[:count, 0] = rng.integers(0, w, count)
+    ev[:count, 1] = rng.integers(0, h, count)
+    ev[:count, 2] = rng.integers(0, 2, count)
+    # Sentinel padding: p < 0 marks a row as void; coordinates may be
+    # garbage (the kernel must clamp, the sign mask must zero them).
+    ev[count:, 0] = rng.integers(-5, w + 5, n - count)
+    ev[count:, 1] = rng.integers(-5, h + 5, n - count)
+    ev[count:, 2] = -rng.integers(1, 4, n - count)
+    return jnp.asarray(ev)
+
+
+@given(
+    n_blocks=st.integers(min_value=1, max_value=4),
+    frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_scatter_matches_ref(n_blocks, frac, seed):
+    h, w = 64, 80
+    n = n_blocks * BLOCK_EVENTS
+    count = int(frac * n)
+    ev = _events_case(n_blocks, count, h, w, seed)
+    got = event_scatter(ev, height=h, width=w)
+    want = ref.event_scatter_ref(ev, h, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_scatter_paper_geometry_full_capacity():
+    ev = _events_case(4, 4096, 260, 346, 11)
+    got = event_scatter(ev, height=260, width=346)
+    want = ref.event_scatter_ref(ev, 260, 346)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # Conservation: sum of frame == sum of signs of valid rows.
+    pol = np.asarray(ev[:, 2])
+    signs = np.where(pol >= 0, 2 * pol - 1, 0)
+    assert float(jnp.sum(got)) == float(signs.sum())
+
+
+def test_scatter_all_padding_is_zero_frame():
+    ev = _events_case(1, 0, 32, 32, 5)
+    got = event_scatter(ev, height=32, width=32)
+    assert float(jnp.abs(got).sum()) == 0.0
+
+
+def test_scatter_repeated_pixel_accumulates():
+    n = BLOCK_EVENTS
+    ev = np.full((n, 3), -1, np.int32)  # all padding
+    ev[:10] = [5, 7, 1]   # ten ON events at (5,7)
+    ev[10:15] = [5, 7, 0]  # five OFF events at (5,7)
+    got = event_scatter(jnp.asarray(ev), height=16, width=16)
+    assert got[7, 5] == 5.0  # 10 - 5
+    assert float(jnp.abs(got).sum()) == 5.0
+
+
+def test_scatter_rejects_non_block_multiple():
+    ev = jnp.zeros((100, 3), jnp.int32)
+    with pytest.raises(ValueError):
+        event_scatter(ev, height=8, width=8)
+
+
+# ---------------------------------------------------------------- conv
+
+def test_conv_ref_matches_manual_laplacian():
+    img = np.zeros((5, 5), np.float32)
+    img[2, 2] = 1.0
+    out = np.asarray(ref.conv2d_3x3_ref(jnp.asarray(img), ref.LAPLACIAN_3X3))
+    assert out[2, 2] == 4.0
+    assert out[2, 1] == out[1, 2] == out[2, 3] == out[3, 2] == -1.0
+    assert out[0, 0] == 0.0

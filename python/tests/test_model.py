@@ -1,0 +1,156 @@
+"""L2 model tests: dense/sparse step equivalence and export sanity.
+
+The key property: running ``sparse_step`` on an event list must produce
+*exactly* the same edges/state as binning on the host and running
+``dense_step`` — that equivalence is what lets the Fig. 4 benchmark
+attribute performance differences purely to the transfer strategy.
+"""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def _random_events(count, seed):
+    rng = np.random.default_rng(seed)
+    ev = np.full((model.MAX_EVENTS, 3), -1, dtype=np.int32)  # sentinel pad
+    ev[:count, 0] = rng.integers(0, model.WIDTH, count)
+    ev[:count, 1] = rng.integers(0, model.HEIGHT, count)
+    ev[:count, 2] = rng.integers(0, 2, count)
+    return jnp.asarray(ev)
+
+
+def _zero_state():
+    z = jnp.zeros((model.HEIGHT, model.WIDTH), jnp.float32)
+    return z, z
+
+
+@given(
+    count=st.integers(min_value=0, max_value=model.MAX_EVENTS),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sparse_equals_dense_on_host_binned_frame(count, seed):
+    ev = _random_events(count, seed)
+    v, r = _zero_state()
+    frame = ref.event_scatter_ref(ev, model.HEIGHT, model.WIDTH)
+    e_d, s_d, v_d, r_d = model.dense_step(frame, v, r)
+    e_s, s_s, v_s, r_s = model.sparse_step(ev, v, r)
+    np.testing.assert_allclose(np.asarray(e_d), np.asarray(e_s), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_s))
+    np.testing.assert_allclose(np.asarray(v_d), np.asarray(v_s), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(r_d), np.asarray(r_s))
+
+
+def test_state_persists_across_frames():
+    # Subthreshold input twice: second step must spike (integration),
+    # proving state actually carries.
+    v, r = _zero_state()
+    frame = jnp.full((model.HEIGHT, model.WIDTH), 0.6, jnp.float32)
+    _, s1, v1, r1 = model.dense_step(frame, v, r)
+    assert float(s1.sum()) == 0.0
+    _, s2, _, _ = model.dense_step(frame, v1, r1)
+    assert float(s2.sum()) == model.HEIGHT * model.WIDTH
+
+
+def test_edges_zero_on_uniform_spikes_interior():
+    # All pixels spike together -> Laplacian cancels in the interior.
+    v, r = _zero_state()
+    frame = jnp.full((model.HEIGHT, model.WIDTH), 2.0, jnp.float32)
+    edges, spikes, _, _ = model.dense_step(frame, v, r)
+    e = np.asarray(edges)
+    assert np.abs(e[1:-1, 1:-1]).max() == 0.0
+    assert np.abs(e[0, :]).max() > 0.0  # border sees zero padding
+
+
+def test_example_args_cover_exports():
+    for name in model.EXPORTS:
+        args = model.example_args(name)
+        assert len(args) >= 1
+
+
+def test_manifest_matches_artifacts_if_present():
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert manifest["height"] == model.HEIGHT
+    assert manifest["width"] == model.WIDTH
+    assert manifest["max_events"] == model.MAX_EVENTS
+    for name, meta in manifest["modules"].items():
+        path = os.path.join(art, meta["file"])
+        assert os.path.exists(path), f"missing artifact {path}"
+        with open(path) as fh:
+            text = fh.read()
+        import hashlib
+
+        assert hashlib.sha256(text.encode()).hexdigest() == meta["sha256"], (
+            f"{name}: artifact out of date; run `make artifacts`"
+        )
+
+
+def test_shift_add_laplacian_matches_generic_conv():
+    # The optimized L2 edge extraction must equal the generic-conv oracle
+    # (EXPERIMENTS.md §Perf, L2 entry).
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(model.HEIGHT, model.WIDTH)).astype(np.float32))
+    got = model.laplacian_shift_add(x)
+    want = ref.conv2d_3x3_ref(x, ref.LAPLACIAN_3X3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_free_variants_match_full_steps():
+    # The free-running exports must produce the same state trajectory as
+    # the full exports, and their activity readout must equal sum(|edges|).
+    ev = _random_events(2000, 17)
+    v, r = _zero_state()
+    e_full, _s, v_full, r_full = model.sparse_step(ev, v, r)
+    act, v_free, r_free = model.sparse_step_free(ev, v, r)
+    np.testing.assert_allclose(np.asarray(v_full), np.asarray(v_free), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(r_full), np.asarray(r_free))
+    np.testing.assert_allclose(
+        float(act[0]), float(jnp.sum(jnp.abs(e_full))), rtol=1e-5
+    )
+
+    frame = ref.event_scatter_ref(ev, model.HEIGHT, model.WIDTH)
+    e_full, _s, v_full, r_full = model.dense_step(frame, v, r)
+    act, v_free, r_free = model.dense_step_free(frame, v, r)
+    np.testing.assert_allclose(np.asarray(v_full), np.asarray(v_free), atol=1e-6)
+    np.testing.assert_allclose(
+        float(act[0]), float(jnp.sum(jnp.abs(e_full))), rtol=1e-5
+    )
+
+
+def test_aot_hlo_text_is_parseable_hlo():
+    # The exporter's interchange format is HLO *text*; every export must
+    # contain an HloModule header and an ENTRY computation (what the
+    # Rust-side text parser requires).
+    import jax
+    from compile import aot
+
+    for name, fn in model.EXPORTS.items():
+        lowered = jax.jit(fn).lower(*model.example_args(name))
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_manifest_export_is_idempotent(tmp_path):
+    from compile import aot
+
+    m1 = aot.export_all(str(tmp_path))
+    m2 = aot.export_all(str(tmp_path))
+    assert m1 == m2, "AOT export must be deterministic"
+    assert set(m1["modules"]) == set(model.EXPORTS)

@@ -1,0 +1,104 @@
+//! The Fig. 3 benchmark workload.
+//!
+//! "The actual work done in the benchmark is as straight-forward as
+//! possible to separate the effect of the synchronization: we simply sum
+//! up the coordinates in every event as a form of checksum that is
+//! verified against the true checksum at the end of the benchmark."
+//! (paper §4.1)
+//!
+//! [`CoordinateChecksum`] is that workload; it is deliberately trivial
+//! (two integer adds per event) so any throughput difference between the
+//! [`crate::engine`] implementations is attributable to synchronization,
+//! not compute.
+
+use super::Event;
+
+/// Accumulates the sum of `x` and `y` coordinates over a stream.
+///
+/// Wrapping arithmetic: 90 M events × max-coordinate sums stay far below
+/// `u64::MAX`, but wrapping makes the checksum well-defined for any
+/// stream length and keeps the hot loop branch-free.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CoordinateChecksum {
+    /// Running sum of x + y over all consumed events.
+    pub sum: u64,
+    /// Number of events consumed.
+    pub count: u64,
+}
+
+impl CoordinateChecksum {
+    /// Fresh, zeroed checksum.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Consume one event.
+    #[inline(always)]
+    pub fn push(&mut self, ev: &Event) {
+        self.sum = self.sum.wrapping_add(ev.x as u64 + ev.y as u64);
+        self.count += 1;
+    }
+
+    /// Consume a buffer of events (the threaded engines hand over slices).
+    #[inline]
+    pub fn push_slice(&mut self, evs: &[Event]) {
+        // Manually accumulated in a local so the compiler keeps it in a
+        // register across the loop; `push` via &mut self defeats that on
+        // some codegen paths.
+        let mut s = self.sum;
+        for ev in evs {
+            s = s.wrapping_add(ev.x as u64 + ev.y as u64);
+        }
+        self.sum = s;
+        self.count += evs.len() as u64;
+    }
+
+    /// Merge a partial checksum computed by another worker.
+    #[inline]
+    pub fn merge(&mut self, other: &CoordinateChecksum) {
+        self.sum = self.sum.wrapping_add(other.sum);
+        self.count += other.count;
+    }
+}
+
+/// Ground-truth checksum of a full slice, used to verify every engine's
+/// result at the end of each benchmark run.
+pub fn reference_checksum(events: &[Event]) -> CoordinateChecksum {
+    let mut c = CoordinateChecksum::new();
+    c.push_slice(events);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::Event;
+
+    #[test]
+    fn push_matches_slice() {
+        let evs: Vec<Event> = (0..257).map(|i| Event::on(i as u16, (i * 3) as u16, i)).collect();
+        let mut a = CoordinateChecksum::new();
+        for e in &evs {
+            a.push(e);
+        }
+        let b = reference_checksum(&evs);
+        assert_eq!(a, b);
+        assert_eq!(a.count, 257);
+    }
+
+    #[test]
+    fn merge_partials_equals_whole() {
+        let evs: Vec<Event> = (0..1000).map(|i| Event::off((i % 346) as u16, (i % 260) as u16, i)).collect();
+        let whole = reference_checksum(&evs);
+        let mut merged = CoordinateChecksum::new();
+        for chunk in evs.chunks(97) {
+            merged.merge(&reference_checksum(chunk));
+        }
+        assert_eq!(merged, whole);
+    }
+
+    #[test]
+    fn empty_stream_is_zero() {
+        assert_eq!(reference_checksum(&[]), CoordinateChecksum::new());
+    }
+}

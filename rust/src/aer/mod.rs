@@ -1,0 +1,228 @@
+//! Address-event representation (AER) primitives.
+//!
+//! AER formats individual sensor events as singular atoms of spatial,
+//! temporal, and polarity information: 4-tuples `(x, y, p, t)` where
+//! `x`/`y` are pixel coordinates, `t` is a microsecond timestamp and `p`
+//! is the polarity (direction) of the luminosity change — see §2 of the
+//! paper and Lichtsteiner et al. (2008).
+//!
+//! This module defines the in-memory [`Event`] type used throughout the
+//! library, the packed 64-bit wire/RAM encoding ([`packed`]), camera
+//! geometry ([`Resolution`]) and the checksum workload used by the
+//! Fig. 3 concurrency benchmark ([`checksum`]).
+
+pub mod checksum;
+pub mod packed;
+
+use std::fmt;
+
+/// Event polarity: the direction of the luminosity change at a pixel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Polarity {
+    /// Luminosity decreased ("OFF" event).
+    Off = 0,
+    /// Luminosity increased ("ON" event).
+    On = 1,
+}
+
+impl Polarity {
+    /// Construct from a boolean (`true` ⇒ [`Polarity::On`]).
+    #[inline]
+    pub fn from_bool(b: bool) -> Self {
+        if b {
+            Polarity::On
+        } else {
+            Polarity::Off
+        }
+    }
+
+    /// `true` iff this is an ON event.
+    #[inline]
+    pub fn is_on(self) -> bool {
+        matches!(self, Polarity::On)
+    }
+
+    /// Signed contribution of this polarity: `+1.0` for ON, `-1.0` for OFF.
+    #[inline]
+    pub fn signum(self) -> f32 {
+        match self {
+            Polarity::On => 1.0,
+            Polarity::Off => -1.0,
+        }
+    }
+}
+
+impl From<bool> for Polarity {
+    fn from(b: bool) -> Self {
+        Polarity::from_bool(b)
+    }
+}
+
+/// A single address-event: the atomic unit of the whole library.
+///
+/// Field order and types follow the AER 4-tuple `(x, y, p, t)` of the
+/// paper with a microsecond timestamp, which is the native resolution of
+/// the DVS sensors AEStream supports (Inivation DAVIS, Prophesee Gen3/4).
+///
+/// The struct is 16 bytes and `Copy`; streams of events are `Vec<Event>`
+/// or `&[Event]` slices, never boxed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Event {
+    /// Timestamp in microseconds since stream start.
+    pub t: u64,
+    /// Horizontal pixel coordinate (column), `0 ≤ x < width`.
+    pub x: u16,
+    /// Vertical pixel coordinate (row), `0 ≤ y < height`.
+    pub y: u16,
+    /// Polarity of the luminosity change.
+    pub p: Polarity,
+}
+
+impl Event {
+    /// Construct a new event.
+    #[inline]
+    pub fn new(x: u16, y: u16, p: Polarity, t: u64) -> Self {
+        Event { t, x, y, p }
+    }
+
+    /// Construct an ON event (convenience for tests and generators).
+    #[inline]
+    pub fn on(x: u16, y: u16, t: u64) -> Self {
+        Event::new(x, y, Polarity::On, t)
+    }
+
+    /// Construct an OFF event (convenience for tests and generators).
+    #[inline]
+    pub fn off(x: u16, y: u16, t: u64) -> Self {
+        Event::new(x, y, Polarity::Off, t)
+    }
+
+    /// Linear pixel index in row-major order for a sensor of `width` columns.
+    #[inline]
+    pub fn pixel_index(&self, width: u16) -> usize {
+        self.y as usize * width as usize + self.x as usize
+    }
+}
+
+impl fmt::Display for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "({},{},{},{})",
+            self.x,
+            self.y,
+            if self.p.is_on() { 1 } else { 0 },
+            self.t
+        )
+    }
+}
+
+/// Sensor geometry: width × height in pixels.
+///
+/// The paper's use-case recording is 346×260 (DAVIS346); common presets
+/// are provided as constants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Resolution {
+    pub width: u16,
+    pub height: u16,
+}
+
+impl Resolution {
+    /// DAVIS346 (Inivation), the paper's use-case camera: 346×260.
+    pub const DAVIS_346: Resolution = Resolution::new(346, 260);
+    /// DVS128, the original 128×128 silicon retina.
+    pub const DVS_128: Resolution = Resolution::new(128, 128);
+    /// Prophesee Gen4 HD: 1280×720.
+    pub const PROPHESEE_GEN4: Resolution = Resolution::new(1280, 720);
+
+    /// Construct a resolution.
+    pub const fn new(width: u16, height: u16) -> Self {
+        Resolution { width, height }
+    }
+
+    /// Number of pixels.
+    #[inline]
+    pub const fn pixels(&self) -> usize {
+        self.width as usize * self.height as usize
+    }
+
+    /// `true` iff the event's coordinates are inside the sensor array.
+    #[inline]
+    pub fn contains(&self, ev: &Event) -> bool {
+        ev.x < self.width && ev.y < self.height
+    }
+}
+
+impl fmt::Display for Resolution {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.width, self.height)
+    }
+}
+
+/// Validate that every event of a slice lies within `res` and that
+/// timestamps are monotonically non-decreasing. Returns the index of the
+/// first offending event, or `None` if the stream is well-formed.
+pub fn validate_stream(events: &[Event], res: Resolution) -> Option<usize> {
+    let mut last_t = 0u64;
+    for (i, ev) in events.iter().enumerate() {
+        if !res.contains(ev) || ev.t < last_t {
+            return Some(i);
+        }
+        last_t = ev.t;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_size_is_16_bytes() {
+        // Events are ferried by the hundreds of millions; the memory
+        // layout is part of the public contract.
+        assert_eq!(std::mem::size_of::<Event>(), 16);
+    }
+
+    #[test]
+    fn polarity_roundtrip() {
+        assert_eq!(Polarity::from_bool(true), Polarity::On);
+        assert_eq!(Polarity::from_bool(false), Polarity::Off);
+        assert!(Polarity::On.is_on());
+        assert!(!Polarity::Off.is_on());
+        assert_eq!(Polarity::On.signum(), 1.0);
+        assert_eq!(Polarity::Off.signum(), -1.0);
+    }
+
+    #[test]
+    fn pixel_index_row_major() {
+        let ev = Event::on(3, 2, 0);
+        assert_eq!(ev.pixel_index(10), 23);
+    }
+
+    #[test]
+    fn resolution_contains() {
+        let res = Resolution::DAVIS_346;
+        assert_eq!(res.pixels(), 346 * 260);
+        assert!(res.contains(&Event::on(345, 259, 0)));
+        assert!(!res.contains(&Event::on(346, 0, 0)));
+        assert!(!res.contains(&Event::on(0, 260, 0)));
+    }
+
+    #[test]
+    fn validate_stream_detects_out_of_bounds_and_time_travel() {
+        let res = Resolution::new(4, 4);
+        let ok = [Event::on(0, 0, 1), Event::off(3, 3, 2)];
+        assert_eq!(validate_stream(&ok, res), None);
+        let oob = [Event::on(0, 0, 1), Event::on(4, 0, 2)];
+        assert_eq!(validate_stream(&oob, res), Some(1));
+        let unsorted = [Event::on(0, 0, 5), Event::on(0, 0, 4)];
+        assert_eq!(validate_stream(&unsorted, res), Some(1));
+    }
+
+    #[test]
+    fn display_formats_as_tuple() {
+        assert_eq!(Event::on(1, 2, 3).to_string(), "(1,2,1,3)");
+    }
+}

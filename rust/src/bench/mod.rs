@@ -1,0 +1,203 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Small, deterministic measurement core used by every target in
+//! `benches/`: warmup, fixed sample counts, robust summary statistics,
+//! and aligned table rendering. Benches are plain binaries
+//! (`harness = false`), so `cargo bench` runs them directly.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of duration samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    /// Number of samples.
+    pub n: usize,
+    /// Mean, seconds.
+    pub mean_s: f64,
+    /// Sample standard deviation, seconds.
+    pub std_s: f64,
+    /// Minimum, seconds.
+    pub min_s: f64,
+    /// Median, seconds.
+    pub median_s: f64,
+    /// Maximum, seconds.
+    pub max_s: f64,
+}
+
+impl Stats {
+    /// Compute from raw samples. Panics on empty input.
+    pub fn from_samples(samples: &[Duration]) -> Stats {
+        assert!(!samples.is_empty(), "no samples");
+        let mut secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = secs.len();
+        let mean = secs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            secs.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Stats {
+            n,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: secs[0],
+            median_s: secs[n / 2],
+            max_s: secs[n - 1],
+        }
+    }
+
+    /// Mean expressed as items/second for `items` per run.
+    pub fn throughput(&self, items: u64) -> f64 {
+        items as f64 / self.mean_s.max(1e-12)
+    }
+
+    /// Human-readable mean ± std.
+    pub fn display_mean(&self) -> String {
+        format!("{} ± {}", fmt_duration(self.mean_s), fmt_duration(self.std_s))
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `samples` measured iterations.
+pub fn measure<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed());
+    }
+    Stats::from_samples(&out)
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// Format a rate with an adaptive SI prefix (e.g. `"12.3 Mev/s"`).
+pub fn fmt_rate(rate: f64, unit: &str) -> String {
+    if rate >= 1e9 {
+        format!("{:.2} G{unit}", rate / 1e9)
+    } else if rate >= 1e6 {
+        format!("{:.2} M{unit}", rate / 1e6)
+    } else if rate >= 1e3 {
+        format!("{:.2} k{unit}", rate / 1e3)
+    } else {
+        format!("{rate:.2} {unit}")
+    }
+}
+
+/// Aligned plain-text table builder for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header count).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row/header mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let samples: Vec<Duration> =
+            [1, 2, 3, 4, 5].iter().map(|&ms| Duration::from_millis(ms)).collect();
+        let s = Stats::from_samples(&samples);
+        assert_eq!(s.n, 5);
+        assert!((s.mean_s - 0.003).abs() < 1e-9);
+        assert!((s.min_s - 0.001).abs() < 1e-9);
+        assert!((s.max_s - 0.005).abs() < 1e-9);
+        assert!((s.median_s - 0.003).abs() < 1e-9);
+        assert!(s.std_s > 0.0);
+    }
+
+    #[test]
+    fn throughput_of_known_rate() {
+        let s = Stats::from_samples(&[Duration::from_secs(1)]);
+        assert!((s.throughput(1_000_000) - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn measure_runs_expected_times() {
+        let mut calls = 0;
+        let s = measure(3, 7, || calls += 1);
+        assert_eq!(calls, 10);
+        assert_eq!(s.n, 7);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.0), "2.000s");
+        assert_eq!(fmt_duration(0.002), "2.000ms");
+        assert_eq!(fmt_duration(0.000002), "2.000µs");
+        assert_eq!(fmt_duration(2e-9), "2ns");
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(fmt_rate(2_500_000.0, "ev/s"), "2.50 Mev/s");
+        assert_eq!(fmt_rate(12.0, "fps"), "12.00 fps");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("name"));
+        assert!(r.lines().count() == 4);
+    }
+}

@@ -1,0 +1,155 @@
+//! Scene models for the synthetic camera: luminance fields over time.
+//!
+//! A scene renders to a row-major `f32` luminance frame in `[0, 1]` at a
+//! given simulated time; the camera differentiates consecutive frames to
+//! produce events. Scenes are chosen to exercise the edge detector the
+//! way the paper's recording does: high-contrast moving structure.
+
+use crate::aer::Resolution;
+
+/// A time-parameterized luminance field.
+#[derive(Debug, Clone)]
+pub enum Scene {
+    /// Uniform black frame: only noise events.
+    Blank,
+    /// A vertical bright bar sweeping horizontally, wrapping around.
+    MovingBar {
+        /// Horizontal speed in pixels per second.
+        speed_px_per_s: f64,
+        /// Bar thickness in pixels.
+        thickness_px: u16,
+    },
+    /// A bright dot orbiting the sensor centre.
+    RotatingDot {
+        /// Orbit radius in pixels.
+        radius_px: f64,
+        /// Orbit period in seconds.
+        period_s: f64,
+        /// Dot radius in pixels.
+        dot_radius_px: f64,
+    },
+    /// A checkerboard flipping phase at a fixed frequency (stress test:
+    /// every pixel changes at once).
+    FlickeringCheckerboard {
+        /// Square edge length in pixels.
+        square_px: u16,
+        /// Flips per second.
+        rate_hz: f64,
+    },
+    /// Pixel-wise maximum of sub-scenes.
+    Composite(Vec<Scene>),
+}
+
+impl Scene {
+    /// Render the luminance frame at simulated time `t_us`.
+    pub fn render(&self, res: Resolution, t_us: u64) -> Vec<f32> {
+        let (w, h) = (res.width as usize, res.height as usize);
+        let t_s = t_us as f64 / 1e6;
+        match self {
+            Scene::Blank => vec![0.0; w * h],
+            Scene::MovingBar { speed_px_per_s, thickness_px } => {
+                let mut frame = vec![0.0; w * h];
+                let pos = (speed_px_per_s * t_s) % w as f64;
+                for y in 0..h {
+                    for dx in 0..*thickness_px as usize {
+                        let x = (pos as usize + dx) % w;
+                        frame[y * w + x] = 1.0;
+                    }
+                }
+                frame
+            }
+            Scene::RotatingDot { radius_px, period_s, dot_radius_px } => {
+                let mut frame = vec![0.0; w * h];
+                let angle = 2.0 * std::f64::consts::PI * (t_s / period_s);
+                let cx = w as f64 / 2.0 + radius_px * angle.cos();
+                let cy = h as f64 / 2.0 + radius_px * angle.sin();
+                let r2 = dot_radius_px * dot_radius_px;
+                // Only touch the dot's bounding box.
+                let x0 = (cx - dot_radius_px).floor().max(0.0) as usize;
+                let x1 = ((cx + dot_radius_px).ceil() as usize).min(w.saturating_sub(1));
+                let y0 = (cy - dot_radius_px).floor().max(0.0) as usize;
+                let y1 = ((cy + dot_radius_px).ceil() as usize).min(h.saturating_sub(1));
+                for y in y0..=y1.min(h - 1) {
+                    for x in x0..=x1.min(w - 1) {
+                        let (dx, dy) = (x as f64 - cx, y as f64 - cy);
+                        if dx * dx + dy * dy <= r2 {
+                            frame[y * w + x] = 1.0;
+                        }
+                    }
+                }
+                frame
+            }
+            Scene::FlickeringCheckerboard { square_px, rate_hz } => {
+                let phase = ((t_s * rate_hz).floor() as u64) % 2;
+                let sq = (*square_px).max(1) as usize;
+                let mut frame = vec![0.0; w * h];
+                for y in 0..h {
+                    for x in 0..w {
+                        let parity = ((x / sq) + (y / sq) + phase as usize) % 2;
+                        frame[y * w + x] = parity as f32;
+                    }
+                }
+                frame
+            }
+            Scene::Composite(scenes) => {
+                let mut frame = vec![0.0; w * h];
+                for s in scenes {
+                    for (acc, v) in frame.iter_mut().zip(s.render(res, t_us)) {
+                        *acc = f32::max(*acc, v);
+                    }
+                }
+                frame
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RES: Resolution = Resolution::new(64, 48);
+
+    #[test]
+    fn blank_is_black() {
+        assert!(Scene::Blank.render(RES, 123).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn moving_bar_moves() {
+        let s = Scene::MovingBar { speed_px_per_s: 64.0, thickness_px: 2 };
+        let a = s.render(RES, 0);
+        let b = s.render(RES, 500_000); // half a second → 32 px
+        assert_ne!(a, b);
+        // Lit area is thickness × height in both frames.
+        let lit = |f: &[f32]| f.iter().filter(|&&v| v > 0.0).count();
+        assert_eq!(lit(&a), 2 * 48);
+        assert_eq!(lit(&b), 2 * 48);
+    }
+
+    #[test]
+    fn rotating_dot_stays_in_bounds_and_moves() {
+        let s = Scene::RotatingDot { radius_px: 20.0, period_s: 1.0, dot_radius_px: 3.0 };
+        let a = s.render(RES, 0);
+        let b = s.render(RES, 250_000); // quarter turn
+        assert_ne!(a, b);
+        assert!(a.iter().filter(|&&v| v > 0.0).count() > 0);
+    }
+
+    #[test]
+    fn checkerboard_flips_every_period() {
+        let s = Scene::FlickeringCheckerboard { square_px: 8, rate_hz: 10.0 };
+        let a = s.render(RES, 0);
+        let b = s.render(RES, 100_000); // exactly one flip later
+        let c = s.render(RES, 200_000); // two flips: back to phase 0
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn composite_is_pixelwise_max() {
+        let bar = Scene::MovingBar { speed_px_per_s: 0.0, thickness_px: 4 };
+        let comp = Scene::Composite(vec![Scene::Blank, bar.clone()]);
+        assert_eq!(comp.render(RES, 0), bar.render(RES, 0));
+    }
+}

@@ -1,0 +1,309 @@
+//! Command-line interface — the paper's Fig. 2(B) composition syntax.
+//!
+//! ```text
+//! aestream input file recording.aedat output udp 127.0.0.1:3333
+//! aestream input synthetic --duration 2s filter polarity on output stdout
+//! aestream input udp 0.0.0.0:3333 output file out.aedat
+//! aestream scenarios --duration 2s --time-scale 20
+//! aestream table1
+//! ```
+//!
+//! Hand-rolled parsing (no clap offline): a token-stream grammar of
+//! `input <spec> [filter <name> <args>…]* output <spec>` mirrors the
+//! original AEStream CLI's free input/output pairing.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::aer::{Polarity, Resolution};
+use crate::camera::CameraConfig;
+use crate::coordinator::stream::{Sink, Source};
+use crate::formats::Format;
+use crate::pipeline::ops;
+use crate::pipeline::Pipeline;
+
+/// A parsed CLI invocation.
+pub enum Command {
+    /// `input … [filter …] output …`
+    Stream { source: Source, pipeline: Pipeline, sink: Sink },
+    /// Run the four Fig. 4 scenarios.
+    Scenarios {
+        /// Synthetic recording length (µs).
+        duration_us: u64,
+        /// Replay speed multiplier.
+        time_scale: f64,
+    },
+    /// Print the Table 1 feature matrix.
+    Table1,
+    /// Print usage.
+    Help,
+}
+
+/// Parse a full argv (excluding the program name).
+pub fn parse(args: &[String]) -> Result<Command> {
+    let mut toks = args.iter().map(String::as_str).peekable();
+    match toks.peek() {
+        None => Ok(Command::Help),
+        Some(&"help") | Some(&"--help") | Some(&"-h") => Ok(Command::Help),
+        Some(&"table1") => Ok(Command::Table1),
+        Some(&"scenarios") => {
+            toks.next();
+            let mut duration_us = 1_000_000;
+            let mut time_scale = 10.0;
+            while let Some(tok) = toks.next() {
+                match tok {
+                    "--duration" => {
+                        duration_us = parse_duration(
+                            toks.next().context("--duration needs a value")?,
+                        )?
+                        .as_micros() as u64
+                    }
+                    "--time-scale" => {
+                        time_scale = toks
+                            .next()
+                            .context("--time-scale needs a value")?
+                            .parse()
+                            .context("bad --time-scale")?
+                    }
+                    other => bail!("unknown scenarios flag {other}"),
+                }
+            }
+            Ok(Command::Scenarios { duration_us, time_scale })
+        }
+        Some(&"input") => parse_stream(&mut toks),
+        Some(other) => bail!("unknown command {other:?}; try `aestream help`"),
+    }
+}
+
+fn parse_stream<'a, I: Iterator<Item = &'a str>>(
+    toks: &mut std::iter::Peekable<I>,
+) -> Result<Command> {
+    // ---- input
+    let kw = toks.next();
+    debug_assert_eq!(kw, Some("input"));
+    let source = match toks.next().context("input needs a kind")? {
+        "file" => Source::File(PathBuf::from(toks.next().context("input file needs a path")?)),
+        "udp" => Source::Udp {
+            bind: toks.next().context("input udp needs an address")?.to_string(),
+            idle_timeout: Duration::from_millis(500),
+        },
+        "synthetic" => {
+            let mut duration_us = 1_000_000u64;
+            while toks.peek() == Some(&"--duration") {
+                toks.next();
+                duration_us = parse_duration(toks.next().context("--duration needs a value")?)?
+                    .as_micros() as u64;
+            }
+            Source::Synthetic { config: CameraConfig::default(), duration_us }
+        }
+        other => bail!("unknown input kind {other:?} (file|udp|synthetic)"),
+    };
+
+    // ---- filters
+    let mut pipeline = Pipeline::new();
+    let res = Resolution::DAVIS_346; // stateful filters need geometry
+    while toks.peek() == Some(&"filter") {
+        toks.next();
+        let name = toks.next().context("filter needs a name")?;
+        pipeline = match name {
+            "polarity" => {
+                let which = toks.next().context("filter polarity needs on|off")?;
+                let p = match which {
+                    "on" => Polarity::On,
+                    "off" => Polarity::Off,
+                    other => bail!("polarity must be on|off, got {other:?}"),
+                };
+                pipeline.then(ops::PolarityFilter::keep(p))
+            }
+            "crop" => {
+                let mut dims = [0u16; 4];
+                for d in dims.iter_mut() {
+                    *d = toks
+                        .next()
+                        .context("filter crop needs x0 y0 w h")?
+                        .parse()
+                        .context("bad crop dimension")?;
+                }
+                pipeline.then(ops::RoiCrop::new(dims[0], dims[1], dims[2], dims[3]))
+            }
+            "downsample" => {
+                let f = toks
+                    .next()
+                    .context("filter downsample needs a factor")?
+                    .parse()
+                    .context("bad factor")?;
+                pipeline.then(ops::Downsample::new(f))
+            }
+            "refractory" => {
+                let us = toks
+                    .next()
+                    .context("filter refractory needs µs")?
+                    .parse()
+                    .context("bad refractory period")?;
+                pipeline.then(ops::RefractoryFilter::new(res, us))
+            }
+            "denoise" => {
+                let us = toks
+                    .next()
+                    .context("filter denoise needs µs")?
+                    .parse()
+                    .context("bad denoise window")?;
+                pipeline.then(ops::BackgroundActivityFilter::new(res, us))
+            }
+            "flip-x" => pipeline.then(ops::FlipX::new(res.width)),
+            "flip-y" => pipeline.then(ops::FlipY::new(res.height)),
+            other => bail!("unknown filter {other:?}"),
+        };
+    }
+
+    // ---- output
+    match toks.next() {
+        Some("output") => {}
+        other => bail!("expected `output`, got {other:?}"),
+    }
+    let sink = match toks.next().context("output needs a kind")? {
+        "file" => {
+            let path = PathBuf::from(toks.next().context("output file needs a path")?);
+            let format = path
+                .extension()
+                .and_then(|e| e.to_str())
+                .and_then(Format::from_extension)
+                .context("cannot infer output format from extension")?;
+            Sink::File(path, format)
+        }
+        "udp" => Sink::Udp(toks.next().context("output udp needs an address")?.to_string()),
+        "stdout" => Sink::Stdout,
+        "null" => Sink::Null,
+        "frames" => {
+            let window_us = toks
+                .next()
+                .context("output frames needs a window (µs)")?
+                .parse()
+                .context("bad window")?;
+            Sink::Frames { window_us }
+        }
+        "view" => {
+            let window_us = toks
+                .next()
+                .context("output view needs a window (µs)")?
+                .parse()
+                .context("bad window")?;
+            Sink::View { window_us, max_frames: 8 }
+        }
+        other => bail!("unknown output kind {other:?} (file|udp|stdout|null|frames|view)"),
+    };
+    if let Some(extra) = toks.next() {
+        bail!("unexpected trailing argument {extra:?}");
+    }
+    Ok(Command::Stream { source, pipeline, sink })
+}
+
+/// Parse `"500ms"`, `"2s"`, `"1500us"`, or a bare number of seconds.
+pub fn parse_duration(s: &str) -> Result<Duration> {
+    let (num, unit) = match s.find(|c: char| c.is_alphabetic()) {
+        Some(i) => s.split_at(i),
+        None => (s, "s"),
+    };
+    let value: f64 = num.parse().with_context(|| format!("bad duration {s:?}"))?;
+    let secs = match unit {
+        "s" => value,
+        "ms" => value / 1e3,
+        "us" | "µs" => value / 1e6,
+        other => bail!("unknown duration unit {other:?}"),
+    };
+    Ok(Duration::from_secs_f64(secs))
+}
+
+/// Usage text.
+pub const USAGE: &str = "\
+aestream — accelerated event-based processing with coroutines (reproduction)
+
+USAGE:
+  aestream input <file PATH | udp ADDR | synthetic [--duration D]>
+           [filter <polarity on|off | crop X Y W H | downsample F |
+                    refractory US | denoise US | flip-x | flip-y>]...
+           output <file PATH | udp ADDR | stdout | null | frames WINDOW_US |
+                   view WINDOW_US>
+  aestream scenarios [--duration D] [--time-scale X]
+  aestream table1
+  aestream help
+
+EXAMPLES (paper Fig. 2B):
+  aestream input file recording.aedat output udp 10.0.0.1:3333
+  aestream input synthetic --duration 2s filter polarity on output stdout
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_paper_example() {
+        let cmd =
+            parse(&sv(&["input", "file", "r.aedat", "output", "udp", "1.2.3.4:3333"])).unwrap();
+        match cmd {
+            Command::Stream { source: Source::File(p), sink: Sink::Udp(a), .. } => {
+                assert_eq!(p, PathBuf::from("r.aedat"));
+                assert_eq!(a, "1.2.3.4:3333");
+            }
+            _ => panic!("wrong parse"),
+        }
+    }
+
+    #[test]
+    fn parses_filters_in_order() {
+        let cmd = parse(&sv(&[
+            "input", "synthetic", "filter", "polarity", "on", "filter", "downsample", "2",
+            "output", "null",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { pipeline, .. } => {
+                assert_eq!(pipeline.describe(), "polarity(on) | downsample(/2)");
+            }
+            _ => panic!("wrong parse"),
+        }
+    }
+
+    #[test]
+    fn parses_scenarios_flags() {
+        let cmd =
+            parse(&sv(&["scenarios", "--duration", "500ms", "--time-scale", "5"])).unwrap();
+        match cmd {
+            Command::Scenarios { duration_us, time_scale } => {
+                assert_eq!(duration_us, 500_000);
+                assert_eq!(time_scale, 5.0);
+            }
+            _ => panic!("wrong parse"),
+        }
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(parse_duration("2s").unwrap(), Duration::from_secs(2));
+        assert_eq!(parse_duration("500ms").unwrap(), Duration::from_millis(500));
+        assert_eq!(parse_duration("1500us").unwrap(), Duration::from_micros(1500));
+        assert_eq!(parse_duration("3").unwrap(), Duration::from_secs(3));
+        assert!(parse_duration("5fortnights").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse(&sv(&["input"])).is_err());
+        assert!(parse(&sv(&["input", "file", "x", "output"])).is_err());
+        assert!(parse(&sv(&["input", "file", "x", "output", "file", "y.weird"])).is_err());
+        assert!(parse(&sv(&["frobnicate"])).is_err());
+        assert!(parse(&sv(&["input", "file", "x", "output", "null", "extra"])).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert!(matches!(parse(&[]).unwrap(), Command::Help));
+    }
+}

@@ -1,0 +1,177 @@
+//! Closed-loop neuromorphic control — the paper's §6 headline future
+//! work: "we aim to stream events *back* to an actuator to create a
+//! closed-loop, fully neuromorphic control system in real-time."
+//!
+//! The loop implemented here (exercised end-to-end by the
+//! `closed_loop` example):
+//!
+//! ```text
+//!   scene (moving target) ──▶ synthetic camera ──▶ events
+//!        ▲                                            │
+//!        │                                     edge detector
+//!   pan actuator ◀── controller ◀── activity centroid ┘
+//! ```
+//!
+//! * [`centroid`] extracts the activity centroid of an edge/spike map —
+//!   the "where is the object" readout of the SNN;
+//! * [`PController`] is a proportional tracker commanding pan velocity;
+//! * [`PanActuator`] is the simulated plant: a first-order pan axis
+//!   with slew-rate limiting, the stand-in for real motor hardware
+//!   (DESIGN.md §Substitutions).
+
+use crate::aer::Resolution;
+
+/// Activity centroid of a row-major map. `None` if the map is silent.
+/// Uses |activity| so ON/OFF edge polarity doesn't cancel the target.
+pub fn centroid(map: &[f32], res: Resolution) -> Option<(f32, f32)> {
+    let w = res.width as usize;
+    let mut mass = 0.0f64;
+    let (mut mx, mut my) = (0.0f64, 0.0f64);
+    for (i, &v) in map.iter().enumerate() {
+        let a = v.abs() as f64;
+        if a > 0.0 {
+            mass += a;
+            mx += a * (i % w) as f64;
+            my += a * (i / w) as f64;
+        }
+    }
+    if mass == 0.0 {
+        None
+    } else {
+        Some(((mx / mass) as f32, (my / mass) as f32))
+    }
+}
+
+/// Proportional controller: drives the horizontal tracking error (px)
+/// to zero by commanding pan velocity (px/s).
+#[derive(Debug, Clone)]
+pub struct PController {
+    /// Proportional gain (1/s): velocity per pixel of error.
+    pub gain: f32,
+    /// Output saturation (px/s).
+    pub max_velocity: f32,
+}
+
+impl PController {
+    /// New controller.
+    pub fn new(gain: f32, max_velocity: f32) -> Self {
+        PController { gain, max_velocity }
+    }
+
+    /// Velocity command for a horizontal error (target − crosshair).
+    pub fn command(&self, error_px: f32) -> f32 {
+        (self.gain * error_px).clamp(-self.max_velocity, self.max_velocity)
+    }
+}
+
+/// Simulated pan axis: integrates commanded velocity with slew limiting.
+#[derive(Debug, Clone)]
+pub struct PanActuator {
+    /// Current pan position (px in scene coordinates).
+    pub position: f32,
+    /// Hard slew-rate limit of the axis (px/s).
+    pub slew_limit: f32,
+    /// Commands applied so far.
+    pub commands: u64,
+}
+
+impl PanActuator {
+    /// New actuator at position 0.
+    pub fn new(slew_limit: f32) -> Self {
+        PanActuator { position: 0.0, slew_limit, commands: 0 }
+    }
+
+    /// Apply a velocity command for `dt_us` microseconds.
+    pub fn apply(&mut self, velocity_px_s: f32, dt_us: u64) {
+        let v = velocity_px_s.clamp(-self.slew_limit, self.slew_limit);
+        self.position += v * dt_us as f32 / 1e6;
+        self.commands += 1;
+    }
+}
+
+/// One closed-loop step: map → centroid → error → command → actuate.
+/// Returns the tracking error (px) if the map had activity.
+pub fn track_step(
+    map: &[f32],
+    res: Resolution,
+    controller: &PController,
+    actuator: &mut PanActuator,
+    dt_us: u64,
+) -> Option<f32> {
+    let (cx, _cy) = centroid(map, res)?;
+    // Error of the target relative to the sensor crosshair; the actuator
+    // pans the *camera*, so positive error ⇒ pan right.
+    let error = cx - res.width as f32 / 2.0;
+    let cmd = controller.command(error);
+    actuator.apply(cmd, dt_us);
+    Some(error)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RES: Resolution = Resolution::new(16, 8);
+
+    #[test]
+    fn centroid_of_point_mass() {
+        let mut map = vec![0.0; RES.pixels()];
+        map[3 * 16 + 10] = 2.0;
+        let (cx, cy) = centroid(&map, RES).unwrap();
+        assert_eq!((cx, cy), (10.0, 3.0));
+    }
+
+    #[test]
+    fn centroid_uses_magnitude_not_sign() {
+        let mut map = vec![0.0; RES.pixels()];
+        map[5] = 1.0;
+        map[11] = -1.0; // opposite polarity must not cancel
+        let (cx, _) = centroid(&map, RES).unwrap();
+        assert_eq!(cx, 8.0);
+    }
+
+    #[test]
+    fn centroid_of_silence_is_none() {
+        assert!(centroid(&vec![0.0; RES.pixels()], RES).is_none());
+    }
+
+    #[test]
+    fn controller_saturates() {
+        let c = PController::new(10.0, 50.0);
+        assert_eq!(c.command(1.0), 10.0);
+        assert_eq!(c.command(100.0), 50.0);
+        assert_eq!(c.command(-100.0), -50.0);
+    }
+
+    #[test]
+    fn actuator_integrates_with_slew_limit() {
+        let mut a = PanActuator::new(100.0);
+        a.apply(50.0, 1_000_000); // 1 s at 50 px/s
+        assert!((a.position - 50.0).abs() < 1e-4);
+        a.apply(1000.0, 1_000_000); // clamped to 100 px/s
+        assert!((a.position - 150.0).abs() < 1e-3);
+        assert_eq!(a.commands, 2);
+    }
+
+    #[test]
+    fn loop_converges_on_static_target() {
+        // Target fixed at x=12; crosshair at 8. The loop should pan the
+        // camera until the (simulated) error is driven toward zero.
+        let controller = PController::new(5.0, 200.0);
+        let mut actuator = PanActuator::new(200.0);
+        let mut target_in_sensor = 12.0f32;
+        let mut last_err = f32::INFINITY;
+        for _ in 0..50 {
+            let mut map = vec![0.0; RES.pixels()];
+            let xi = (target_in_sensor.round() as usize).min(15);
+            map[4 * 16 + xi] = 1.0;
+            let err = track_step(&map, RES, &controller, &mut actuator, 10_000)
+                .expect("target visible");
+            // Panning the camera shifts the target's apparent position
+            // opposite to the pan motion.
+            target_in_sensor = 12.0 - actuator.position;
+            last_err = err;
+        }
+        assert!(last_err.abs() < 1.0, "loop did not converge: err {last_err}");
+    }
+}

@@ -1,0 +1,16 @@
+//! The streaming coordinator (L3's top layer).
+//!
+//! Two entry points:
+//!
+//! * [`scenarios`] — the paper's §5 use-case: replay a recording through
+//!   the four (feed × transfer) scenarios of Fig. 4 against the
+//!   XLA/PJRT edge detector, measuring frames processed and HtoD copy
+//!   cost;
+//! * [`stream`] — the generic `input → filters → output` orchestrator
+//!   behind the CLI's free composition (Fig. 2B).
+
+pub mod scenarios;
+pub mod stream;
+
+pub use scenarios::{run_scenario, FeedMode, ScenarioConfig, ScenarioReport};
+pub use stream::{run_stream, Sink, Source, StreamReport};

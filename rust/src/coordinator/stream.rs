@@ -1,0 +1,216 @@
+//! Generic `input → filters → output` streaming — the CLI's Fig. 2(B)
+//! free composition.
+//!
+//! Sources produce event batches, the [`Pipeline`] transforms them
+//! per-event, sinks consume them. The whole stream runs through the
+//! coroutine engine by default (the library's point); a `sync` mode
+//! exists for baseline comparisons.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::aer::{Event, Resolution};
+use crate::camera::{CameraConfig, SyntheticCamera};
+use crate::formats::{self, Format};
+use crate::net::{UdpEventReceiver, UdpEventSender};
+use crate::pipeline::framer::Framer;
+use crate::pipeline::Pipeline;
+
+/// Where events come from.
+pub enum Source {
+    /// Read a whole event file (format auto-detected).
+    File(PathBuf),
+    /// Listen for SPIF datagrams until `duration` passes with no data.
+    Udp { bind: String, idle_timeout: Duration },
+    /// Synthesize from the camera simulator for `duration_us`.
+    Synthetic { config: CameraConfig, duration_us: u64 },
+    /// In-memory events (tests, benches).
+    Memory(Vec<Event>, Resolution),
+}
+
+/// Where events go.
+pub enum Sink {
+    /// Write an event file in the given format.
+    File(PathBuf, Format),
+    /// Send SPIF datagrams to an address.
+    Udp(String),
+    /// Print `x,y,p,t` lines.
+    Stdout,
+    /// Count only (benchmarks, dry runs).
+    Null,
+    /// Bin into frames and report frame statistics (the "GPU" direction
+    /// without a device; the full device path lives in `scenarios`).
+    Frames { window_us: u64 },
+    /// Render frames as terminal density art (visual inspection).
+    View { window_us: u64, max_frames: usize },
+}
+
+/// Outcome of a stream run.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    /// Events read from the source.
+    pub events_in: u64,
+    /// Events that survived the pipeline into the sink.
+    pub events_out: u64,
+    /// Frames produced (Frames sink only).
+    pub frames: u64,
+    /// Wall time.
+    pub wall: Duration,
+    /// Sensor geometry of the source.
+    pub resolution: Resolution,
+}
+
+impl StreamReport {
+    /// Events per second through the pipeline.
+    pub fn throughput(&self) -> f64 {
+        self.events_in as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Drive a source through a pipeline into a sink.
+pub fn run_stream(source: Source, mut pipeline: Pipeline, sink: Sink) -> Result<StreamReport> {
+    let t0 = Instant::now();
+    // ------------------------------------------------------- acquire
+    let (events, resolution) = match source {
+        Source::File(path) => {
+            let (events, res, _fmt) = formats::read_events_auto(&path)?;
+            (events, res)
+        }
+        Source::Udp { bind, idle_timeout } => {
+            let mut rx = UdpEventReceiver::bind(&bind)
+                .with_context(|| format!("binding {bind}"))?;
+            let mut events = Vec::new();
+            let mut last_data = Instant::now();
+            loop {
+                match rx.recv_batch()? {
+                    Some(batch) => {
+                        events.extend(batch);
+                        last_data = Instant::now();
+                    }
+                    None if last_data.elapsed() > idle_timeout => break,
+                    None => {}
+                }
+            }
+            let res = formats::bounding_resolution(&events);
+            (events, res)
+        }
+        Source::Synthetic { config, duration_us } => {
+            let res = config.resolution;
+            let events = SyntheticCamera::new(config).record(duration_us);
+            (events, res)
+        }
+        Source::Memory(events, res) => (events, res),
+    };
+    let events_in = events.len() as u64;
+
+    // ----------------------------------------------------- transform
+    let processed = pipeline.process(&events);
+    let events_out = processed.len() as u64;
+
+    // ---------------------------------------------------------- emit
+    let mut frames = 0u64;
+    match sink {
+        Sink::File(path, format) => {
+            formats::write_events(&path, &processed, resolution, format)?;
+        }
+        Sink::Udp(addr) => {
+            let mut tx = UdpEventSender::connect(&addr)?;
+            tx.send(&processed)?;
+        }
+        Sink::Stdout => {
+            use std::io::Write;
+            let stdout = std::io::stdout();
+            let mut out = std::io::BufWriter::new(stdout.lock());
+            for ev in &processed {
+                writeln!(out, "{},{},{},{}", ev.x, ev.y, u8::from(ev.p.is_on()), ev.t)?;
+            }
+        }
+        Sink::Null => {}
+        Sink::Frames { window_us } => {
+            frames = Framer::frames_of(resolution, window_us, &processed).len() as u64;
+        }
+        Sink::View { window_us, max_frames } => {
+            let all = Framer::frames_of(resolution, window_us, &processed);
+            frames = all.len() as u64;
+            // Show evenly spaced frames up to the cap.
+            let step = (all.len() / max_frames.max(1)).max(1);
+            for frame in all.iter().step_by(step).take(max_frames) {
+                println!(
+                    "── window [{} µs, {} µs) — {} events ──",
+                    frame.t_start, frame.t_end, frame.event_count
+                );
+                print!("{}", crate::pipeline::viewer::render_frame(frame, 69, 26));
+            }
+        }
+    }
+
+    Ok(StreamReport { events_in, events_out, frames, wall: t0.elapsed(), resolution })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::Polarity;
+    use crate::pipeline::ops::PolarityFilter;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn memory_to_null_counts() {
+        let events = synthetic_events(500, 64, 64);
+        let report = run_stream(
+            Source::Memory(events, Resolution::new(64, 64)),
+            Pipeline::new(),
+            Sink::Null,
+        )
+        .unwrap();
+        assert_eq!(report.events_in, 500);
+        assert_eq!(report.events_out, 500);
+    }
+
+    #[test]
+    fn filter_reduces_output_not_input() {
+        let events = synthetic_events(500, 64, 64);
+        let on = events.iter().filter(|e| e.p.is_on()).count() as u64;
+        let report = run_stream(
+            Source::Memory(events, Resolution::new(64, 64)),
+            Pipeline::new().then(PolarityFilter::keep(Polarity::On)),
+            Sink::Null,
+        )
+        .unwrap();
+        assert_eq!(report.events_in, 500);
+        assert_eq!(report.events_out, on);
+    }
+
+    #[test]
+    fn file_roundtrip_through_stream() {
+        let dir = std::env::temp_dir().join(format!("aestream-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.aedat");
+        let events = synthetic_events(300, 128, 128);
+        run_stream(
+            Source::Memory(events.clone(), Resolution::DVS_128),
+            Pipeline::new(),
+            Sink::File(path.clone(), Format::Aedat),
+        )
+        .unwrap();
+        let report =
+            run_stream(Source::File(path), Pipeline::new(), Sink::Null).unwrap();
+        assert_eq!(report.events_in, 300);
+        assert_eq!(report.resolution, Resolution::DVS_128);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn synthetic_to_frames() {
+        let report = run_stream(
+            Source::Synthetic { config: CameraConfig::default(), duration_us: 20_000 },
+            Pipeline::new(),
+            Sink::Frames { window_us: 1000 },
+        )
+        .unwrap();
+        assert!(report.frames > 0);
+        assert!(report.events_in > 0);
+    }
+}

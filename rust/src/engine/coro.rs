@@ -1,0 +1,172 @@
+//! The coroutine engine: Fig. 1(B) of the paper.
+//!
+//! Two forms, both stackless coroutines:
+//!
+//! * [`run_checksum`] — **direct transfer** (the Fig. 3 contender): the
+//!   producer is a [`crate::rt::Generator`] the consumer polls inline.
+//!   Per-event handoff is one state-machine advance — the "overhead
+//!   comparable to a regular function call" of the paper's C++20
+//!   symmetric transfer. No buffers, no locks, no scheduler.
+//! * [`run_checksum_channel`] — **scheduled transfer** (ablation): a
+//!   producer/consumer task pair on the [`crate::rt::LocalExecutor`]
+//!   exchanging events through an async channel. This is what a
+//!   pipeline with real concurrent I/O uses; the `filter_ablation`
+//!   bench quantifies its scheduling overhead against direct transfer.
+
+use crate::aer::checksum::CoordinateChecksum;
+use crate::aer::Event;
+use crate::rt::generator::drive;
+use crate::rt::{channel, LocalExecutor};
+use std::cell::Cell;
+
+/// Fig. 3 contender: producer coroutine polled directly by the consumer
+/// via the zero-dispatch [`drive`] (C++20 symmetric-transfer analog).
+pub fn run_checksum(events: &[Event]) -> CoordinateChecksum {
+    let mut sum = CoordinateChecksum::new();
+    drive(
+        |y| async move {
+            for ev in events {
+                y.yield_item(*ev).await;
+            }
+        },
+        |ev: Event| sum.push(&ev),
+    );
+    sum
+}
+
+/// Drive an arbitrary per-event workload through the direct-transfer
+/// coroutine. Returns the number of events processed.
+pub fn for_each<F: FnMut(&Event)>(events: &[Event], mut work: F) -> u64 {
+    let mut n = 0u64;
+    drive(
+        |y| async move {
+            for ev in events {
+                y.yield_item(*ev).await;
+            }
+        },
+        |ev: Event| {
+            work(&ev);
+            n += 1;
+        },
+    );
+    n
+}
+
+/// Cross-thread coroutine variant (§6: "more work is needed to explore
+/// further concurrency and parallelism"): the producer coroutine runs on
+/// its own OS thread and feeds the consumer coroutine through the
+/// lock-free [`crate::rt::sync_channel`] — coroutines *and* pipeline
+/// parallelism, still without a mutex on the event path.
+pub fn run_checksum_parallel(events: &[Event], ring_capacity: usize) -> CoordinateChecksum {
+    use crate::rt::{block_on, sync_channel};
+    let (mut tx, mut rx) = sync_channel::<Event>(ring_capacity.max(2));
+    std::thread::scope(|scope| {
+        let consumer = scope.spawn(move || {
+            block_on(async move {
+                let mut local = CoordinateChecksum::new();
+                while let Some(ev) = rx.recv().await {
+                    local.push(&ev);
+                }
+                local
+            })
+        });
+        block_on(async move {
+            for ev in events {
+                if tx.send(*ev).await.is_err() {
+                    return;
+                }
+            }
+        });
+        consumer.join().expect("consumer panicked")
+    })
+}
+
+/// Ablation variant: the same pipeline through the run-queue executor
+/// and an async channel of the given capacity.
+pub fn run_checksum_channel(events: &[Event], channel_capacity: usize) -> CoordinateChecksum {
+    let result = Cell::new(CoordinateChecksum::new());
+    {
+        let ex = LocalExecutor::new();
+        let (tx, mut rx) = channel::<Event>(channel_capacity.max(1));
+        ex.spawn(async move {
+            for ev in events {
+                // If the consumer is gone the stream is dead; stop.
+                if tx.send(*ev).await.is_err() {
+                    return;
+                }
+            }
+        });
+        let result_ref = &result;
+        ex.spawn(async move {
+            let mut local = CoordinateChecksum::new();
+            while let Some(ev) = rx.recv().await {
+                local.push(&ev);
+            }
+            result_ref.set(local);
+        });
+        ex.run();
+    }
+    result.get()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::checksum::reference_checksum;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn direct_transfer_matches_reference() {
+        let events = synthetic_events(3000, 346, 260);
+        assert_eq!(run_checksum(&events), reference_checksum(&events));
+    }
+
+    #[test]
+    fn direct_transfer_empty_stream() {
+        assert_eq!(run_checksum(&[]), CoordinateChecksum::new());
+    }
+
+    #[test]
+    fn parallel_variant_matches_reference() {
+        let events = synthetic_events(20_000, 346, 260);
+        for cap in [4, 256, 4096] {
+            assert_eq!(
+                run_checksum_parallel(&events, cap),
+                reference_checksum(&events),
+                "cap={cap}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_variant_empty_stream() {
+        assert_eq!(run_checksum_parallel(&[], 8), CoordinateChecksum::new());
+    }
+
+    #[test]
+    fn channel_variant_matches_reference() {
+        let events = synthetic_events(3000, 346, 260);
+        for cap in [1, 16, 256, 4096] {
+            assert_eq!(
+                run_checksum_channel(&events, cap),
+                reference_checksum(&events),
+                "cap={cap}"
+            );
+        }
+    }
+
+    #[test]
+    fn for_each_preserves_order() {
+        let events = synthetic_events(500, 64, 64);
+        let mut seen = Vec::new();
+        let n = for_each(&events, |e| seen.push(*e));
+        assert_eq!(n, 500);
+        assert_eq!(seen, events);
+    }
+
+    #[test]
+    fn zero_capacity_clamped_to_one() {
+        let events = synthetic_events(10, 8, 8);
+        assert_eq!(run_checksum_channel(&events, 0), reference_checksum(&events));
+    }
+}

@@ -1,0 +1,135 @@
+//! Concurrency engines — the contenders of the paper's Fig. 3 benchmark.
+//!
+//! All engines solve the same problem: ferry a stream of events from a
+//! producer to one or more consumers that apply a per-event workload
+//! (the coordinate checksum of §4.1), and return the merged result. They
+//! differ *only* in the synchronization mechanism:
+//!
+//! | Engine | Paper analog | Mechanism |
+//! |---|---|---|
+//! | [`sync`] | dashed baseline in Fig. 3 | direct function call per event, single thread, zero synchronization |
+//! | [`threaded`] | "threads" (Fig. 1A) | producer fills fixed-size buffers, hands them through a `Mutex<VecDeque>` + `Condvar` to worker threads |
+//! | [`coro`] | "coroutines" (Fig. 1B) | producer/consumer stackless coroutines with per-event cooperative handoff, no locks |
+//! | [`spsc`] | §2.1's lock-free alternative (ablation) | producer thread → consumer thread over a wait-free ring |
+//!
+//! Every engine is verified against [`crate::aer::checksum::reference_checksum`]
+//! at the end of each run, exactly as the paper verifies its checksum.
+
+pub mod coro;
+pub mod spsc;
+pub mod sync;
+pub mod threaded;
+
+use crate::aer::checksum::CoordinateChecksum;
+use crate::aer::Event;
+
+/// Which engine to run — used by benches, the coordinator and the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Single-threaded direct call (no synchronization baseline).
+    Sync,
+    /// Lock-based buffered threading with the given buffer size and
+    /// worker count.
+    Threaded { buffer_size: usize, workers: usize },
+    /// Coroutines with direct control transfer (generator polled by the
+    /// consumer) — the paper's Fig. 3 contender.
+    Coro,
+    /// Coroutines through the run-queue executor + an async channel of
+    /// the given capacity (scheduled transfer; ablation).
+    CoroChannel { channel_capacity: usize },
+    /// Lock-free SPSC ring between two threads (ablation).
+    Spsc { ring_capacity: usize },
+}
+
+impl EngineKind {
+    /// Human-readable name used in bench reports.
+    pub fn label(&self) -> String {
+        match self {
+            EngineKind::Sync => "sync".into(),
+            EngineKind::Threaded { buffer_size, workers } => {
+                format!("threads(buf={buffer_size},n={workers})")
+            }
+            EngineKind::Coro => "coro".into(),
+            EngineKind::CoroChannel { channel_capacity } => {
+                format!("coro-chan(cap={channel_capacity})")
+            }
+            EngineKind::Spsc { ring_capacity } => format!("spsc(cap={ring_capacity})"),
+        }
+    }
+
+    /// Run the checksum workload over `events` with this engine.
+    pub fn run_checksum(&self, events: &[Event]) -> CoordinateChecksum {
+        match *self {
+            EngineKind::Sync => sync::run_checksum(events),
+            EngineKind::Threaded { buffer_size, workers } => {
+                threaded::run_checksum(events, buffer_size, workers)
+            }
+            EngineKind::Coro => coro::run_checksum(events),
+            EngineKind::CoroChannel { channel_capacity } => {
+                coro::run_checksum_channel(events, channel_capacity)
+            }
+            EngineKind::Spsc { ring_capacity } => spsc::run_checksum(events, ring_capacity),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::checksum::reference_checksum;
+    use crate::testutil::synthetic_events;
+
+    /// Every engine must produce exactly the reference checksum — this is
+    /// the cross-engine equivalence invariant the whole Fig. 3 benchmark
+    /// rests on.
+    #[test]
+    fn all_engines_agree_with_reference() {
+        let events = synthetic_events(10_000, 346, 260);
+        let expected = reference_checksum(&events);
+        let kinds = [
+            EngineKind::Sync,
+            EngineKind::Threaded { buffer_size: 256, workers: 1 },
+            EngineKind::Threaded { buffer_size: 1024, workers: 2 },
+            EngineKind::Threaded { buffer_size: 4096, workers: 4 },
+            EngineKind::Coro,
+            EngineKind::CoroChannel { channel_capacity: 1 },
+            EngineKind::CoroChannel { channel_capacity: 64 },
+            EngineKind::Spsc { ring_capacity: 1024 },
+        ];
+        for kind in kinds {
+            let got = kind.run_checksum(&events);
+            assert_eq!(got.sum, expected.sum, "engine {} checksum mismatch", kind.label());
+            assert_eq!(got.count, expected.count, "engine {} count mismatch", kind.label());
+        }
+    }
+
+    #[test]
+    fn empty_stream_all_engines() {
+        for kind in [
+            EngineKind::Sync,
+            EngineKind::Threaded { buffer_size: 256, workers: 2 },
+            EngineKind::Coro,
+            EngineKind::CoroChannel { channel_capacity: 1 },
+            EngineKind::Spsc { ring_capacity: 16 },
+        ] {
+            let got = kind.run_checksum(&[]);
+            assert_eq!(got.count, 0, "engine {}", kind.label());
+            assert_eq!(got.sum, 0, "engine {}", kind.label());
+        }
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(EngineKind::Sync.label(), "sync");
+        assert_eq!(
+            EngineKind::Threaded { buffer_size: 256, workers: 2 }.label(),
+            "threads(buf=256,n=2)"
+        );
+        assert_eq!(EngineKind::Coro.label(), "coro");
+        assert_eq!(
+            EngineKind::CoroChannel { channel_capacity: 1 }.label(),
+            "coro-chan(cap=1)"
+        );
+        assert_eq!(EngineKind::Spsc { ring_capacity: 8 }.label(), "spsc(cap=8)");
+    }
+}

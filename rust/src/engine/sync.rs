@@ -1,0 +1,45 @@
+//! The no-synchronization baseline: "a single-threaded
+//! non-synchronization method" (paper §4.1), i.e. a plain function call
+//! per event. This is the dashed black line in Fig. 3 — the upper bound
+//! any synchronization mechanism is measured against.
+
+use crate::aer::checksum::CoordinateChecksum;
+use crate::aer::Event;
+
+/// Run the checksum workload with direct calls, no threads, no buffers.
+pub fn run_checksum(events: &[Event]) -> CoordinateChecksum {
+    let mut sum = CoordinateChecksum::new();
+    for ev in events {
+        sum.push(ev);
+    }
+    sum
+}
+
+/// Generic single-threaded drive: apply `work` to every event in order.
+/// Used by the pipeline when no concurrency is requested.
+pub fn for_each<F: FnMut(&Event)>(events: &[Event], mut work: F) {
+    for ev in events {
+        work(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::checksum::reference_checksum;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn matches_reference_by_construction() {
+        let events = synthetic_events(1234, 100, 100);
+        assert_eq!(run_checksum(&events), reference_checksum(&events));
+    }
+
+    #[test]
+    fn for_each_visits_in_order() {
+        let events = synthetic_events(10, 8, 8);
+        let mut seen = Vec::new();
+        for_each(&events, |e| seen.push(*e));
+        assert_eq!(seen, events);
+    }
+}

@@ -1,0 +1,160 @@
+//! The conventional lock-based engine: Fig. 1(A) of the paper.
+//!
+//! "…one or more threads wait for fixed-size buffers to process. To
+//! create the buffers, a single thread reads from a massive event array
+//! cached in RAM…" (§4.1). The producer copies events into fixed-size
+//! `Vec<Event>` buffers and hands them to workers through a
+//! `Mutex<VecDeque>` + `Condvar` — the textbook synchronized queue the
+//! paper benchmarks against. The locking cost, buffer-fill latency and
+//! wake-up latency are precisely what the coroutine engine eliminates.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::aer::checksum::CoordinateChecksum;
+use crate::aer::Event;
+
+/// Shared state between the producer and the worker pool.
+struct SharedQueue {
+    queue: Mutex<QueueState>,
+    /// Workers wait here for buffers; the producer waits here for space.
+    ready: Condvar,
+    space: Condvar,
+}
+
+struct QueueState {
+    buffers: VecDeque<Vec<Event>>,
+    /// Producer finished: workers drain and exit.
+    done: bool,
+}
+
+/// Maximum number of filled buffers in flight before the producer blocks.
+///
+/// Two, i.e. double buffering — exactly the design the paper's Fig. 1(A)
+/// depicts: the IO thread fills one buffer while the worker drains the
+/// other, and each full buffer "activates" the waiting side. A deeper
+/// queue would amortize the wake-up latency the paper is measuring
+/// (and is swept explicitly by the `filter_ablation` bench).
+const MAX_QUEUED_BUFFERS: usize = 2;
+
+/// Run the checksum workload through the lock-based buffered pipeline.
+///
+/// * `buffer_size` — events per hand-off buffer (the paper sweeps 2^8,
+///   2^10, 2^12);
+/// * `workers` — number of consumer threads (≥ 1).
+pub fn run_checksum(events: &[Event], buffer_size: usize, workers: usize) -> CoordinateChecksum {
+    let buffer_size = buffer_size.max(1);
+    let workers = workers.max(1);
+    let shared = SharedQueue {
+        queue: Mutex::new(QueueState { buffers: VecDeque::new(), done: false }),
+        ready: Condvar::new(),
+        space: Condvar::new(),
+    };
+
+    std::thread::scope(|scope| {
+        // ------------------------------------------------------- workers
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            handles.push(scope.spawn(|| {
+                let mut local = CoordinateChecksum::new();
+                loop {
+                    let buffer = {
+                        let mut state = shared.queue.lock().unwrap();
+                        loop {
+                            if let Some(buf) = state.buffers.pop_front() {
+                                shared.space.notify_one();
+                                break Some(buf);
+                            }
+                            if state.done {
+                                break None;
+                            }
+                            state = shared.ready.wait(state).unwrap();
+                        }
+                    };
+                    match buffer {
+                        // Per-event work, identical to the sync and
+                        // coroutine engines: the benchmark isolates the
+                        // synchronization cost, so no engine may get a
+                        // differently-shaped (e.g. vectorized) inner loop.
+                        Some(buf) => {
+                            for ev in &buf {
+                                local.push(ev);
+                            }
+                        }
+                        None => return local,
+                    }
+                }
+            }));
+        }
+
+        // ------------------------------------------------------ producer
+        // The producer is this thread: fill buffers and hand them over.
+        for chunk in events.chunks(buffer_size) {
+            // The copy into a fresh Vec is part of what's being measured:
+            // the buffered design pays it, the coroutine design doesn't.
+            let buf = chunk.to_vec();
+            let mut state = shared.queue.lock().unwrap();
+            while state.buffers.len() >= MAX_QUEUED_BUFFERS {
+                state = shared.space.wait(state).unwrap();
+            }
+            state.buffers.push_back(buf);
+            drop(state);
+            shared.ready.notify_one();
+        }
+        {
+            let mut state = shared.queue.lock().unwrap();
+            state.done = true;
+        }
+        shared.ready.notify_all();
+
+        // --------------------------------------------------------- merge
+        let mut total = CoordinateChecksum::new();
+        for h in handles {
+            total.merge(&h.join().expect("worker panicked"));
+        }
+        total
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::checksum::reference_checksum;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn matches_reference_single_worker() {
+        let events = synthetic_events(5000, 346, 260);
+        assert_eq!(run_checksum(&events, 256, 1), reference_checksum(&events));
+    }
+
+    #[test]
+    fn matches_reference_many_workers() {
+        let events = synthetic_events(5000, 346, 260);
+        for workers in [2, 4, 8] {
+            assert_eq!(
+                run_checksum(&events, 128, workers),
+                reference_checksum(&events),
+                "workers={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn buffer_size_larger_than_stream() {
+        let events = synthetic_events(10, 64, 64);
+        assert_eq!(run_checksum(&events, 4096, 2), reference_checksum(&events));
+    }
+
+    #[test]
+    fn buffer_size_one_degenerates_gracefully() {
+        let events = synthetic_events(100, 64, 64);
+        assert_eq!(run_checksum(&events, 1, 1), reference_checksum(&events));
+    }
+
+    #[test]
+    fn zero_params_are_clamped() {
+        let events = synthetic_events(50, 64, 64);
+        assert_eq!(run_checksum(&events, 0, 0), reference_checksum(&events));
+    }
+}

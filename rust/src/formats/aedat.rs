@@ -1,0 +1,222 @@
+//! AEDAT 3.1 (Inivation) — packet-framed polarity events.
+//!
+//! The format the DV ecosystem used before the flatbuffers-based AEDAT4:
+//! an ASCII header terminated by `#End Of ASCII Header\r\n`, followed by
+//! binary *packets*. Each packet has a 28-byte little-endian header
+//!
+//! ```text
+//! i16 eventType      (1 = POLARITY_EVENT)
+//! i16 eventSource
+//! i32 eventSize      (8 bytes for polarity)
+//! i32 eventTSOffset  (4: timestamp lives at byte 4 of the record)
+//! i32 eventTSOverflow(upper 31-bit epoch of the 32-bit timestamps)
+//! i32 eventCapacity
+//! i32 eventNumber
+//! i32 eventValid
+//! ```
+//!
+//! and `eventNumber` 8-byte records: `u32 data | i32 timestamp(µs)`,
+//! where `data` packs `bit0 = valid`, `bit1 = polarity`,
+//! `bits 2..17 = y`, `bits 17..32 = x` (AEDAT 3.1 spec).
+//!
+//! Timestamps beyond 2^31 µs (~35.8 min) roll into `eventTSOverflow`,
+//! which this codec handles on both sides.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::aer::{Event, Polarity, Resolution};
+
+use super::EventCodec;
+
+const HEADER_END: &[u8] = b"#End Of ASCII Header\r\n";
+const POLARITY_EVENT: i16 = 1;
+const EVENT_SIZE: i32 = 8;
+/// Events per packet when encoding (spec allows any; DV uses ~4096).
+const PACKET_CAPACITY: usize = 4096;
+
+/// The codec object.
+pub struct Aedat31;
+
+impl EventCodec for Aedat31 {
+    fn name(&self) -> &'static str {
+        "aedat"
+    }
+
+    fn encode(&self, events: &[Event], res: Resolution, w: &mut dyn Write) -> Result<()> {
+        write!(
+            w,
+            "#!AER-DAT3.1\r\n#Format: RAW\r\n#Source 1: Davis346 [{}x{}]\r\n#Start-Time: 1970-01-01 00:00:00 (TZ+0000)\r\n",
+            res.width, res.height
+        )?;
+        w.write_all(HEADER_END)?;
+
+        let mut buf = Vec::with_capacity(28 + 8 * PACKET_CAPACITY);
+        let mut chunk_start = 0usize;
+        while chunk_start < events.len() {
+            // A packet may not span a timestamp-overflow boundary: all
+            // events in a packet share one eventTSOverflow epoch.
+            let epoch = events[chunk_start].t >> 31;
+            let mut end = (chunk_start + PACKET_CAPACITY).min(events.len());
+            if let Some(split) =
+                events[chunk_start..end].iter().position(|e| e.t >> 31 != epoch)
+            {
+                end = chunk_start + split;
+            }
+            let chunk = &events[chunk_start..end];
+            chunk_start = end;
+
+            buf.clear();
+            let n = chunk.len() as i32;
+            buf.extend_from_slice(&POLARITY_EVENT.to_le_bytes());
+            buf.extend_from_slice(&0i16.to_le_bytes()); // source
+            buf.extend_from_slice(&EVENT_SIZE.to_le_bytes());
+            buf.extend_from_slice(&4i32.to_le_bytes()); // ts offset
+            buf.extend_from_slice(&(epoch as i32).to_le_bytes());
+            buf.extend_from_slice(&n.to_le_bytes()); // capacity
+            buf.extend_from_slice(&n.to_le_bytes()); // number
+            buf.extend_from_slice(&n.to_le_bytes()); // valid
+            for ev in chunk {
+                let data: u32 = 1 // valid bit
+                    | (u32::from(ev.p.is_on()) << 1)
+                    | ((ev.y as u32 & 0x7FFF) << 2)
+                    | ((ev.x as u32 & 0x7FFF) << 17);
+                let ts = (ev.t & 0x7FFF_FFFF) as u32;
+                buf.extend_from_slice(&data.to_le_bytes());
+                buf.extend_from_slice(&ts.to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    fn decode(&self, r: &mut dyn Read) -> Result<(Vec<Event>, Resolution)> {
+        let mut bytes = Vec::new();
+        r.read_to_end(&mut bytes)?;
+        if !bytes.starts_with(b"#!AER-DAT3.1") {
+            bail!("aedat: missing #!AER-DAT3.1 signature");
+        }
+        let body_start = find(&bytes, HEADER_END)
+            .context("aedat: missing '#End Of ASCII Header'")?
+            + HEADER_END.len();
+
+        // Geometry from the "#Source …[WxH]" header line, if present.
+        let header_text = String::from_utf8_lossy(&bytes[..body_start]);
+        let res = parse_geometry(&header_text);
+
+        let mut events = Vec::new();
+        let mut off = body_start;
+        while off < bytes.len() {
+            if bytes.len() - off < 28 {
+                bail!("aedat: truncated packet header at byte {off}");
+            }
+            let h = &bytes[off..off + 28];
+            let event_type = i16::from_le_bytes([h[0], h[1]]);
+            let event_size = i32::from_le_bytes(h[4..8].try_into().unwrap());
+            let ts_overflow = i32::from_le_bytes(h[12..16].try_into().unwrap()) as u64;
+            let event_number = i32::from_le_bytes(h[20..24].try_into().unwrap());
+            off += 28;
+            if event_size <= 0 || event_number < 0 {
+                bail!("aedat: corrupt packet header (size {event_size}, n {event_number})");
+            }
+            let payload = event_size as usize * event_number as usize;
+            if bytes.len() - off < payload {
+                bail!("aedat: truncated packet payload at byte {off}");
+            }
+            if event_type == POLARITY_EVENT && event_size == EVENT_SIZE {
+                for rec in bytes[off..off + payload].chunks_exact(8) {
+                    let data = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+                    if data & 1 == 0 {
+                        continue; // invalidated event
+                    }
+                    let ts = u32::from_le_bytes(rec[4..8].try_into().unwrap()) as u64;
+                    events.push(Event {
+                        x: ((data >> 17) & 0x7FFF) as u16,
+                        y: ((data >> 2) & 0x7FFF) as u16,
+                        p: Polarity::from_bool(data & 2 != 0),
+                        t: (ts_overflow << 31) | ts,
+                    });
+                }
+            }
+            // Unknown event types are skipped (spec: readers must ignore).
+            off += payload;
+        }
+        let res = res.unwrap_or_else(|| super::bounding_resolution(&events));
+        Ok((events, res))
+    }
+}
+
+/// Find the first occurrence of `needle` in `haystack`.
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Parse `[WxH]` out of a `#Source …` header line.
+fn parse_geometry(header: &str) -> Option<Resolution> {
+    let line = header.lines().find(|l| l.starts_with("#Source"))?;
+    let open = line.rfind('[')?;
+    let close = line.rfind(']')?;
+    let (w, h) = line.get(open + 1..close)?.split_once('x')?;
+    Some(Resolution::new(w.parse().ok()?, h.parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn roundtrip() {
+        let events = synthetic_events(10_000, 346, 260);
+        let mut buf = Vec::new();
+        Aedat31.encode(&events, Resolution::DAVIS_346, &mut buf).unwrap();
+        let (decoded, res) = Aedat31.decode(&mut &buf[..]).unwrap();
+        assert_eq!(decoded, events);
+        assert_eq!(res, Resolution::DAVIS_346);
+    }
+
+    #[test]
+    fn roundtrip_across_timestamp_overflow() {
+        // Events straddling the 2^31 µs boundary must keep exact
+        // timestamps via the eventTSOverflow epoch.
+        let base = (1u64 << 31) - 2;
+        let events: Vec<Event> =
+            (0..8).map(|i| Event::on(10, 20, base + i)).collect();
+        let mut buf = Vec::new();
+        Aedat31.encode(&events, Resolution::new(64, 64), &mut buf).unwrap();
+        let (decoded, _) = Aedat31.decode(&mut &buf[..]).unwrap();
+        assert_eq!(decoded, events);
+    }
+
+    #[test]
+    fn skips_invalid_events() {
+        let events = vec![Event::on(1, 2, 3), Event::off(4, 5, 6)];
+        let mut buf = Vec::new();
+        Aedat31.encode(&events, Resolution::new(64, 64), &mut buf).unwrap();
+        // Clear the valid bit of the first record (body starts after the
+        // ASCII header + 28-byte packet header).
+        let body = find(&buf, HEADER_END).unwrap() + HEADER_END.len() + 28;
+        buf[body] &= !1;
+        let (decoded, _) = Aedat31.decode(&mut &buf[..]).unwrap();
+        assert_eq!(decoded, vec![Event::off(4, 5, 6)]);
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let events = synthetic_events(100, 64, 64);
+        let mut buf = Vec::new();
+        Aedat31.encode(&events, Resolution::new(64, 64), &mut buf).unwrap();
+        buf.truncate(buf.len() - 5);
+        assert!(Aedat31.decode(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn geometry_parsed_from_source_line() {
+        assert_eq!(
+            parse_geometry("#!AER-DAT3.1\r\n#Source 1: Davis346 [346x260]\r\n"),
+            Some(Resolution::DAVIS_346)
+        );
+        assert_eq!(parse_geometry("#no source"), None);
+    }
+}

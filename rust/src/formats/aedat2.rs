@@ -1,0 +1,153 @@
+//! AEDAT 2.0 (jAER) — the oldest widely-deployed AER file format.
+//!
+//! An ASCII header of `#`-prefixed lines beginning `#!AER-DAT2.0`,
+//! followed by **big-endian** 8-byte records:
+//!
+//! ```text
+//! u32 address | u32 timestamp (µs)
+//! ```
+//!
+//! with the DVS128/DAVIS address layout (jAER `ApsDvsEventExtractor`):
+//! `bit 0 = polarity (1 = ON)`, `bits 1..11 = x`, `bits 12..22 = y`.
+//! Timestamps are 32-bit with no overflow epoch (jAER wraps); like the
+//! vendor tooling we reject longer streams at encode time.
+//!
+//! Completes the format matrix: jAER is one of the Table 1 libraries,
+//! and its files are the bulk of older public DVS datasets.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::aer::{Event, Polarity, Resolution};
+
+use super::EventCodec;
+
+const X_SHIFT: u32 = 1;
+const Y_SHIFT: u32 = 12;
+const COORD_MASK: u32 = 0x7FF; // 11 bits
+
+/// The codec object.
+pub struct Aedat2;
+
+impl EventCodec for Aedat2 {
+    fn name(&self) -> &'static str {
+        "aedat2"
+    }
+
+    fn encode(&self, events: &[Event], res: Resolution, w: &mut dyn Write) -> Result<()> {
+        write!(
+            w,
+            "#!AER-DAT2.0\r\n# This is a raw AE data file - do not edit\r\n\
+             # Data format is int32 address, int32 timestamp (8 bytes total), repeated\r\n\
+             # Timestamps tick is 1 us\r\n# Source: Davis346 [{}x{}]\r\n",
+            res.width, res.height
+        )?;
+        let mut buf = Vec::with_capacity(8 * events.len());
+        for ev in events {
+            if ev.t > u32::MAX as u64 {
+                bail!("aedat2: timestamp {} exceeds 32 bits", ev.t);
+            }
+            if ev.x > COORD_MASK as u16 || ev.y > COORD_MASK as u16 {
+                bail!("aedat2: coordinate out of 11-bit range: {ev}");
+            }
+            let addr: u32 = (u32::from(ev.p.is_on()))
+                | ((ev.x as u32) << X_SHIFT)
+                | ((ev.y as u32) << Y_SHIFT);
+            buf.extend_from_slice(&addr.to_be_bytes());
+            buf.extend_from_slice(&(ev.t as u32).to_be_bytes());
+        }
+        w.write_all(&buf)?;
+        Ok(())
+    }
+
+    fn decode(&self, r: &mut dyn Read) -> Result<(Vec<Event>, Resolution)> {
+        let mut bytes = Vec::new();
+        r.read_to_end(&mut bytes)?;
+        if !bytes.starts_with(b"#!AER-DAT2.0") {
+            bail!("aedat2: missing #!AER-DAT2.0 signature");
+        }
+        // Header: consecutive lines starting with '#'.
+        let mut off = 0usize;
+        while off < bytes.len() && bytes[off] == b'#' {
+            match bytes[off..].iter().position(|&b| b == b'\n') {
+                Some(nl) => off += nl + 1,
+                None => bail!("aedat2: unterminated header"),
+            }
+        }
+        let header = String::from_utf8_lossy(&bytes[..off]).into_owned();
+        let body = &bytes[off..];
+        if body.len() % 8 != 0 {
+            bail!("aedat2: body length {} not a multiple of 8", body.len());
+        }
+        let mut events = Vec::with_capacity(body.len() / 8);
+        for rec in body.chunks_exact(8) {
+            let addr = u32::from_be_bytes(rec[0..4].try_into().unwrap());
+            let t = u32::from_be_bytes(rec[4..8].try_into().unwrap()) as u64;
+            events.push(Event {
+                t,
+                x: ((addr >> X_SHIFT) & COORD_MASK) as u16,
+                y: ((addr >> Y_SHIFT) & COORD_MASK) as u16,
+                p: Polarity::from_bool(addr & 1 == 1),
+            });
+        }
+        let res = parse_geometry(&header)
+            .unwrap_or_else(|| super::bounding_resolution(&events));
+        Ok((events, res))
+    }
+}
+
+/// Parse `[WxH]` out of a `# Source …` header line.
+fn parse_geometry(header: &str) -> Option<Resolution> {
+    let line = header.lines().find(|l| l.contains("Source"))?;
+    let open = line.rfind('[')?;
+    let close = line.rfind(']')?;
+    let (w, h) = line.get(open + 1..close)?.split_once('x')?;
+    Some(Resolution::new(w.parse().ok()?, h.parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn roundtrip() {
+        let events = synthetic_events(4000, 346, 260);
+        let mut buf = Vec::new();
+        Aedat2.encode(&events, Resolution::DAVIS_346, &mut buf).unwrap();
+        let (decoded, res) = Aedat2.decode(&mut &buf[..]).unwrap();
+        assert_eq!(decoded, events);
+        assert_eq!(res, Resolution::DAVIS_346);
+    }
+
+    #[test]
+    fn records_are_big_endian() {
+        let events = vec![Event::on(1, 0, 0x0102_0304)];
+        let mut buf = Vec::new();
+        Aedat2.encode(&events, Resolution::new(4, 4), &mut buf).unwrap();
+        // Timestamp bytes appear MSB-first at the end of the record.
+        assert_eq!(&buf[buf.len() - 4..], &[0x01, 0x02, 0x03, 0x04]);
+    }
+
+    #[test]
+    fn rejects_oversized_values() {
+        let mut buf = Vec::new();
+        assert!(Aedat2
+            .encode(&[Event::on(0, 0, 1 << 33)], Resolution::new(4, 4), &mut buf)
+            .is_err());
+        assert!(Aedat2
+            .encode(&[Event::on(3000, 0, 0)], Resolution::new(4000, 4), &mut buf)
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_bad_magic() {
+        let events = synthetic_events(5, 64, 64);
+        let mut buf = Vec::new();
+        Aedat2.encode(&events, Resolution::new(64, 64), &mut buf).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(Aedat2.decode(&mut &buf[..]).is_err());
+        assert!(Aedat2.decode(&mut &b"#!AER-DAT3.1\r\n"[..]).is_err());
+    }
+}

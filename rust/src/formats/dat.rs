@@ -1,0 +1,133 @@
+//! Prophesee DAT — fixed 8-byte records, the simplest vendor format.
+//!
+//! An ASCII `% …` header, then two bytes (event type `0x0C` = 2D CD
+//! event, event size `8`), then records of
+//!
+//! ```text
+//! u32 timestamp (µs, little-endian)
+//! u32 data: x(14) | y(14) | p(4)    (x in bits 0..14, y 14..28, p 28..32)
+//! ```
+//!
+//! 32-bit timestamps cap a recording at ~71.6 minutes; like the vendor
+//! tooling we reject longer streams at encode time rather than silently
+//! wrapping.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::aer::{Event, Polarity, Resolution};
+
+use super::evt2::{parse_geometry, split_percent_header};
+use super::EventCodec;
+
+const EVENT_TYPE_CD: u8 = 0x0C;
+const EVENT_SIZE: u8 = 8;
+
+/// The codec object.
+pub struct Dat;
+
+impl EventCodec for Dat {
+    fn name(&self) -> &'static str {
+        "dat"
+    }
+
+    fn encode(&self, events: &[Event], res: Resolution, w: &mut dyn Write) -> Result<()> {
+        write!(
+            w,
+            "% DAT v2\n% format DAT;width={};height={}\n% end\n",
+            res.width, res.height
+        )?;
+        w.write_all(&[EVENT_TYPE_CD, EVENT_SIZE])?;
+        let mut buf = Vec::with_capacity(8 * events.len());
+        for ev in events {
+            if ev.t > u32::MAX as u64 {
+                bail!("dat: timestamp {} exceeds 32 bits", ev.t);
+            }
+            if ev.x >= 1 << 14 || ev.y >= 1 << 14 {
+                bail!("dat: coordinate out of 14-bit range: {ev}");
+            }
+            let data: u32 = (ev.x as u32)
+                | ((ev.y as u32) << 14)
+                | (u32::from(ev.p.is_on()) << 28);
+            buf.extend_from_slice(&(ev.t as u32).to_le_bytes());
+            buf.extend_from_slice(&data.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+        Ok(())
+    }
+
+    fn decode(&self, r: &mut dyn Read) -> Result<(Vec<Event>, Resolution)> {
+        let mut bytes = Vec::new();
+        r.read_to_end(&mut bytes)?;
+        let (header, body) = split_percent_header(&bytes);
+        let res = parse_geometry(header);
+        if body.len() < 2 {
+            bail!("dat: missing binary preamble");
+        }
+        let (event_type, event_size) = (body[0], body[1]);
+        if event_type != EVENT_TYPE_CD {
+            bail!("dat: unsupported event type {event_type:#x}");
+        }
+        if event_size != EVENT_SIZE {
+            bail!("dat: unsupported event size {event_size}");
+        }
+        let body = &body[2..];
+        if body.len() % 8 != 0 {
+            bail!("dat: body length {} not a multiple of 8", body.len());
+        }
+        let mut events = Vec::with_capacity(body.len() / 8);
+        for rec in body.chunks_exact(8) {
+            let t = u32::from_le_bytes(rec[0..4].try_into().unwrap()) as u64;
+            let data = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+            events.push(Event {
+                t,
+                x: (data & 0x3FFF) as u16,
+                y: ((data >> 14) & 0x3FFF) as u16,
+                p: Polarity::from_bool((data >> 28) & 0xF != 0),
+            });
+        }
+        let res = res.unwrap_or_else(|| super::bounding_resolution(&events));
+        Ok((events, res))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn roundtrip() {
+        let events = synthetic_events(3000, 1280, 720);
+        let mut buf = Vec::new();
+        Dat.encode(&events, Resolution::PROPHESEE_GEN4, &mut buf).unwrap();
+        let (decoded, res) = Dat.decode(&mut &buf[..]).unwrap();
+        assert_eq!(decoded, events);
+        assert_eq!(res, Resolution::PROPHESEE_GEN4);
+    }
+
+    #[test]
+    fn rejects_over_32bit_timestamps() {
+        let events = vec![Event::on(0, 0, 1 << 33)];
+        let mut buf = Vec::new();
+        assert!(Dat.encode(&events, Resolution::new(4, 4), &mut buf).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_event_type() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"% DAT v2\n");
+        buf.extend_from_slice(&[0x01, 8]);
+        assert!(Dat.decode(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_record() {
+        let events = synthetic_events(4, 64, 64);
+        let mut buf = Vec::new();
+        Dat.encode(&events, Resolution::new(64, 64), &mut buf).unwrap();
+        buf.truncate(buf.len() - 1);
+        assert!(Dat.decode(&mut &buf[..]).is_err());
+    }
+}

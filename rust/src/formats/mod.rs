@@ -1,0 +1,251 @@
+//! Event file formats.
+//!
+//! Table 1 of the paper surveys event-processing libraries by their
+//! native file I/O. This module implements real, publicly specified
+//! formats end-to-end (encode + decode) rather than binding vendor SDKs:
+//!
+//! * [`aedat`] — AEDAT 3.1 (Inivation), packet-framed polarity events;
+//! * [`aedat2`] — AEDAT 2.0 (jAER), big-endian address/timestamp pairs;
+//! * [`evt2`] — Prophesee EVT 2.0, 32-bit words with TIME_HIGH state;
+//! * [`evt3`] — Prophesee EVT 3.0, 16-bit words with vectorized runs;
+//! * [`dat`] — Prophesee DAT, fixed 8-byte records;
+//! * [`raw`] — this library's packed 64-bit format (fastest, lossless);
+//! * [`text`] — human-readable CSV (`x,y,p,t` per line).
+//!
+//! The paper's `.aedat4` container is flatbuffers+lz4; per DESIGN.md
+//! §Substitutions we cover the same decode-to-stream code path with the
+//! fully specified AEDAT 3.1 instead.
+//!
+//! All codecs implement [`EventCodec`]; [`detect_format`] sniffs
+//! magic bytes, and [`read_events_auto`] is the "open anything" helper
+//! the CLI uses.
+
+pub mod aedat;
+pub mod aedat2;
+pub mod dat;
+pub mod evt2;
+pub mod evt3;
+pub mod raw;
+pub mod text;
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::aer::{Event, Resolution};
+
+/// A bidirectional event codec.
+///
+/// Codecs are stateless objects; stream state (e.g. EVT2's TIME_HIGH)
+/// lives inside the encode/decode call.
+pub trait EventCodec {
+    /// Short identifier, also the conventional file extension.
+    fn name(&self) -> &'static str;
+
+    /// Serialize `events` (timestamps must be non-decreasing) for a
+    /// sensor of geometry `res`.
+    fn encode(&self, events: &[Event], res: Resolution, w: &mut dyn Write) -> Result<()>;
+
+    /// Deserialize a full stream. Returns the events and the sensor
+    /// geometry if the format records one (otherwise `res` is inferred
+    /// as the bounding box rounded up).
+    fn decode(&self, r: &mut dyn Read) -> Result<(Vec<Event>, Resolution)>;
+}
+
+/// Known formats, in sniffing order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    Aedat,
+    Aedat2,
+    Dat,
+    Evt2,
+    Evt3,
+    Raw,
+    Text,
+}
+
+impl Format {
+    /// All formats (for registries and round-trip property tests).
+    pub const ALL: [Format; 7] = [
+        Format::Aedat,
+        Format::Aedat2,
+        Format::Dat,
+        Format::Evt2,
+        Format::Evt3,
+        Format::Raw,
+        Format::Text,
+    ];
+
+    /// The codec object for this format.
+    pub fn codec(&self) -> Box<dyn EventCodec> {
+        match self {
+            Format::Aedat => Box::new(aedat::Aedat31),
+            Format::Aedat2 => Box::new(aedat2::Aedat2),
+            Format::Dat => Box::new(dat::Dat),
+            Format::Evt2 => Box::new(evt2::Evt2),
+            Format::Evt3 => Box::new(evt3::Evt3),
+            Format::Raw => Box::new(raw::RawPacked),
+            Format::Text => Box::new(text::TextCsv),
+        }
+    }
+
+    /// Guess from a file extension (`"aedat"`, `"evt2"`, …).
+    pub fn from_extension(ext: &str) -> Option<Format> {
+        match ext.to_ascii_lowercase().as_str() {
+            "aedat" | "aedat3" => Some(Format::Aedat),
+            "aedat2" => Some(Format::Aedat2),
+            "dat" => Some(Format::Dat),
+            "evt2" | "raw2" => Some(Format::Evt2),
+            "evt3" | "raw3" => Some(Format::Evt3),
+            "aeraw" | "bin" => Some(Format::Raw),
+            "csv" | "txt" => Some(Format::Text),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Format {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Format::Aedat => "aedat3.1",
+            Format::Aedat2 => "aedat2.0",
+            Format::Dat => "dat",
+            Format::Evt2 => "evt2",
+            Format::Evt3 => "evt3",
+            Format::Raw => "raw",
+            Format::Text => "text",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Sniff the format from the first bytes of a stream.
+pub fn detect_format(prefix: &[u8]) -> Option<Format> {
+    if prefix.starts_with(b"#!AER-DAT3.1") {
+        return Some(Format::Aedat);
+    }
+    if prefix.starts_with(b"#!AER-DAT2.0") {
+        return Some(Format::Aedat2);
+    }
+    if prefix.starts_with(raw::MAGIC) {
+        return Some(Format::Raw);
+    }
+    if prefix.starts_with(b"% evt 2.0") || prefix.starts_with(b"% evt 2.1") {
+        return Some(Format::Evt2);
+    }
+    if prefix.starts_with(b"% evt 3.0") {
+        return Some(Format::Evt3);
+    }
+    if prefix.starts_with(b"% DAT") {
+        return Some(Format::Dat);
+    }
+    // Text: printable ASCII with commas in the first line.
+    if let Ok(s) = std::str::from_utf8(prefix) {
+        let first = s.lines().next().unwrap_or("");
+        if first.starts_with('#') || first.split(',').count() == 4 {
+            return Some(Format::Text);
+        }
+    }
+    None
+}
+
+/// Read a whole event file, sniffing the format from content first and
+/// the extension second.
+pub fn read_events_auto(path: &Path) -> Result<(Vec<Event>, Resolution, Format)> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let sniffed = detect_format(&bytes[..bytes.len().min(64)]);
+    let by_ext = path.extension().and_then(|e| e.to_str()).and_then(Format::from_extension);
+    let format = match sniffed.or(by_ext) {
+        Some(f) => f,
+        None => bail!("cannot determine event format of {}", path.display()),
+    };
+    let (events, res) = format
+        .codec()
+        .decode(&mut &bytes[..])
+        .with_context(|| format!("decoding {} as {format}", path.display()))?;
+    Ok((events, res, format))
+}
+
+/// Write a whole event file in the given format.
+pub fn write_events(path: &Path, events: &[Event], res: Resolution, format: Format) -> Result<()> {
+    let mut file = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    format.codec().encode(events, res, &mut file)?;
+    Ok(())
+}
+
+/// Smallest resolution covering every event in the stream (fallback when
+/// a format does not record geometry).
+pub(crate) fn bounding_resolution(events: &[Event]) -> Resolution {
+    let (mut w, mut h) = (1u16, 1u16);
+    for ev in events {
+        w = w.max(ev.x + 1);
+        h = h.max(ev.y + 1);
+    }
+    Resolution::new(w, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    /// Every codec round-trips an arbitrary (valid) stream losslessly.
+    #[test]
+    fn all_formats_roundtrip() {
+        let events = synthetic_events(2000, 346, 260);
+        let res = Resolution::DAVIS_346;
+        for format in Format::ALL {
+            let codec = format.codec();
+            let mut buf = Vec::new();
+            codec.encode(&events, res, &mut buf).unwrap_or_else(|e| panic!("{format}: {e}"));
+            let (decoded, dres) =
+                codec.decode(&mut &buf[..]).unwrap_or_else(|e| panic!("{format}: {e}"));
+            assert_eq!(decoded, events, "format {format} round-trip mismatch");
+            assert_eq!(dres, res, "format {format} resolution mismatch");
+        }
+    }
+
+    #[test]
+    fn all_formats_roundtrip_empty() {
+        let res = Resolution::new(64, 64);
+        for format in Format::ALL {
+            let codec = format.codec();
+            let mut buf = Vec::new();
+            codec.encode(&[], res, &mut buf).unwrap();
+            let (decoded, _) = codec.decode(&mut &buf[..]).unwrap();
+            assert!(decoded.is_empty(), "format {format} produced phantom events");
+        }
+    }
+
+    #[test]
+    fn detection_from_encoded_bytes() {
+        let events = synthetic_events(50, 64, 64);
+        let res = Resolution::new(64, 64);
+        for format in Format::ALL {
+            let mut buf = Vec::new();
+            format.codec().encode(&events, res, &mut buf).unwrap();
+            assert_eq!(
+                detect_format(&buf[..buf.len().min(64)]),
+                Some(format),
+                "sniffing {format}"
+            );
+        }
+    }
+
+    #[test]
+    fn extension_mapping() {
+        assert_eq!(Format::from_extension("AEDAT"), Some(Format::Aedat));
+        assert_eq!(Format::from_extension("csv"), Some(Format::Text));
+        assert_eq!(Format::from_extension("xyz"), None);
+    }
+
+    #[test]
+    fn bounding_resolution_covers_all() {
+        let events = vec![crate::aer::Event::on(10, 5, 0), crate::aer::Event::off(3, 20, 1)];
+        let res = bounding_resolution(&events);
+        assert_eq!((res.width, res.height), (11, 21));
+    }
+}

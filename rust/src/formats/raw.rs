@@ -1,0 +1,113 @@
+//! AEStream's native packed format: a 16-byte header followed by
+//! little-endian packed 64-bit event words ([`crate::aer::packed`]).
+//!
+//! This is the format the benchmarks cache in RAM — zero parsing state,
+//! one `u64` load + bit masks per event, and the decoder is a straight
+//! `memcpy`-shaped loop the compiler vectorizes.
+//!
+//! Layout:
+//! ```text
+//! bytes 0..8   magic  "AERAW1\0\0"
+//! bytes 8..10  width  (u16 LE)
+//! bytes 10..12 height (u16 LE)
+//! bytes 12..16 reserved (zero)
+//! bytes 16..   packed events, 8 bytes each (LE)
+//! ```
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::aer::packed;
+use crate::aer::{Event, Resolution};
+
+use super::EventCodec;
+
+/// File magic.
+pub const MAGIC: &[u8; 8] = b"AERAW1\0\0";
+
+/// The codec object.
+pub struct RawPacked;
+
+impl EventCodec for RawPacked {
+    fn name(&self) -> &'static str {
+        "aeraw"
+    }
+
+    fn encode(&self, events: &[Event], res: Resolution, w: &mut dyn Write) -> Result<()> {
+        let mut header = [0u8; 16];
+        header[..8].copy_from_slice(MAGIC);
+        header[8..10].copy_from_slice(&res.width.to_le_bytes());
+        header[10..12].copy_from_slice(&res.height.to_le_bytes());
+        w.write_all(&header)?;
+        // Chunked encode: bounded memory for arbitrarily long streams.
+        let mut buf = Vec::with_capacity(8 * 4096.min(events.len().max(1)));
+        for chunk in events.chunks(4096) {
+            buf.clear();
+            for ev in chunk {
+                buf.extend_from_slice(&packed::pack(ev).to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    fn decode(&self, r: &mut dyn Read) -> Result<(Vec<Event>, Resolution)> {
+        let mut header = [0u8; 16];
+        r.read_exact(&mut header).context("raw: truncated header")?;
+        if &header[..8] != MAGIC {
+            bail!("raw: bad magic");
+        }
+        let width = u16::from_le_bytes([header[8], header[9]]);
+        let height = u16::from_le_bytes([header[10], header[11]]);
+        let mut body = Vec::new();
+        r.read_to_end(&mut body)?;
+        if body.len() % 8 != 0 {
+            bail!("raw: body length {} not a multiple of 8", body.len());
+        }
+        let mut events = Vec::with_capacity(body.len() / 8);
+        for word in body.chunks_exact(8) {
+            let w = u64::from_le_bytes(word.try_into().unwrap());
+            events.push(packed::unpack(w));
+        }
+        Ok((events, Resolution::new(width, height)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn roundtrip() {
+        let events = synthetic_events(500, 346, 260);
+        let mut buf = Vec::new();
+        RawPacked.encode(&events, Resolution::DAVIS_346, &mut buf).unwrap();
+        assert_eq!(buf.len(), 16 + 8 * 500);
+        let (decoded, res) = RawPacked.decode(&mut &buf[..]).unwrap();
+        assert_eq!(decoded, events);
+        assert_eq!(res, Resolution::DAVIS_346);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = vec![0u8; 32];
+        assert!(RawPacked.decode(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_body() {
+        let events = synthetic_events(3, 64, 64);
+        let mut buf = Vec::new();
+        RawPacked.encode(&events, Resolution::new(64, 64), &mut buf).unwrap();
+        buf.truncate(buf.len() - 3); // chop mid-word
+        assert!(RawPacked.decode(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_header() {
+        let buf = vec![b'A'; 7];
+        assert!(RawPacked.decode(&mut &buf[..]).is_err());
+    }
+}

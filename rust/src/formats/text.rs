@@ -1,0 +1,128 @@
+//! Human-readable CSV event format: one `x,y,p,t` line per event.
+//!
+//! Matches what `aestream output stdout` prints (Fig. 2B of the paper
+//! pipes events to standard output) so shell pipelines can round-trip.
+//! Header lines start with `#`; geometry is recorded as
+//! `# resolution WxH`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::aer::{Event, Polarity, Resolution};
+
+use super::EventCodec;
+
+/// The codec object.
+pub struct TextCsv;
+
+impl EventCodec for TextCsv {
+    fn name(&self) -> &'static str {
+        "csv"
+    }
+
+    fn encode(&self, events: &[Event], res: Resolution, w: &mut dyn Write) -> Result<()> {
+        // Buffer lines manually; going through `writeln!` per event costs
+        // a formatter setup each time and this encoder doubles as the
+        // stdout sink on the hot path.
+        let mut out = String::with_capacity(24 * events.len().min(4096) + 64);
+        out.push_str(&format!("# aestream csv\n# resolution {}x{}\n", res.width, res.height));
+        for (i, ev) in events.iter().enumerate() {
+            use std::fmt::Write as _;
+            writeln!(out, "{},{},{},{}", ev.x, ev.y, u8::from(ev.p.is_on()), ev.t).unwrap();
+            if i % 4096 == 4095 {
+                w.write_all(out.as_bytes())?;
+                out.clear();
+            }
+        }
+        w.write_all(out.as_bytes())?;
+        Ok(())
+    }
+
+    fn decode(&self, r: &mut dyn Read) -> Result<(Vec<Event>, Resolution)> {
+        let reader = BufReader::new(r);
+        let mut events = Vec::new();
+        let mut res: Option<Resolution> = None;
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('#') {
+                let rest = rest.trim();
+                if let Some(geom) = rest.strip_prefix("resolution ") {
+                    let (w, h) = geom
+                        .split_once('x')
+                        .with_context(|| format!("line {}: bad resolution", lineno + 1))?;
+                    res = Some(Resolution::new(w.trim().parse()?, h.trim().parse()?));
+                }
+                continue;
+            }
+            let mut parts = line.split(',');
+            let (x, y, p, t) = (
+                parts.next().with_context(|| format!("line {}: missing x", lineno + 1))?,
+                parts.next().with_context(|| format!("line {}: missing y", lineno + 1))?,
+                parts.next().with_context(|| format!("line {}: missing p", lineno + 1))?,
+                parts.next().with_context(|| format!("line {}: missing t", lineno + 1))?,
+            );
+            if parts.next().is_some() {
+                bail!("line {}: too many fields", lineno + 1);
+            }
+            events.push(Event {
+                x: x.trim().parse().with_context(|| format!("line {}: x", lineno + 1))?,
+                y: y.trim().parse().with_context(|| format!("line {}: y", lineno + 1))?,
+                p: Polarity::from_bool(match p.trim() {
+                    "0" | "false" => false,
+                    "1" | "true" => true,
+                    other => bail!("line {}: bad polarity {other:?}", lineno + 1),
+                }),
+                t: t.trim().parse().with_context(|| format!("line {}: t", lineno + 1))?,
+            });
+        }
+        let res = res.unwrap_or_else(|| super::bounding_resolution(&events));
+        Ok((events, res))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn roundtrip() {
+        let events = synthetic_events(300, 128, 128);
+        let mut buf = Vec::new();
+        TextCsv.encode(&events, Resolution::DVS_128, &mut buf).unwrap();
+        let (decoded, res) = TextCsv.decode(&mut &buf[..]).unwrap();
+        assert_eq!(decoded, events);
+        assert_eq!(res, Resolution::DVS_128);
+    }
+
+    #[test]
+    fn parses_hand_written_variants() {
+        let src = "# comment\n\n1, 2, true, 100\n3,4,0,200\n";
+        let (events, res) = TextCsv.decode(&mut src.as_bytes()).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0], Event::on(1, 2, 100));
+        assert_eq!(events[1], Event::off(3, 4, 200));
+        // No geometry header: inferred bounding box.
+        assert_eq!((res.width, res.height), (4, 5));
+    }
+
+    #[test]
+    fn rejects_garbage_polarity() {
+        assert!(TextCsv.decode(&mut "1,2,maybe,3\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_extra_fields() {
+        assert!(TextCsv.decode(&mut "1,2,1,3,9\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(TextCsv.decode(&mut "1,2,1\n".as_bytes()).is_err());
+    }
+}

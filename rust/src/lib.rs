@@ -1,0 +1,47 @@
+//! # AEStream (reproduction)
+//!
+//! A Rust + JAX + Pallas reproduction of *"AEStream: Accelerated
+//! event-based processing with coroutines"* (Pedersen & Conradt, 2022).
+//!
+//! AEStream streams **address-event representations** (AER) — the
+//! `(x, y, p, t)` tuples emitted by event cameras and neuromorphic
+//! hardware — from sources (files, UDP/SPIF, synthetic cameras) to sinks
+//! (files, UDP, stdout, an XLA/PJRT compute device), using **stackless
+//! coroutines** for per-event handoff instead of lock-guarded buffers.
+//!
+//! ## Layer map
+//!
+//! * [`aer`] — event types, packed encodings, the checksum workload;
+//! * [`formats`] — file codecs (AEDAT 3.1, Prophesee EVT2/EVT3/DAT, raw, text);
+//! * [`net`] — SPIF wire protocol over UDP;
+//! * [`camera`] — synthetic event-camera source;
+//! * [`pipeline`] — composable source → transform → sink streaming;
+//! * [`engine`] — the Fig. 3 concurrency contenders (sync / threads /
+//!   coroutines / lock-free ring);
+//! * [`rt`] — the hand-rolled cooperative async runtime (coroutines);
+//! * [`sync`] — lock-free SPSC ring;
+//! * [`runtime`] — XLA/PJRT device runtime with host→device transfer
+//!   accounting (the paper's GPU stand-in);
+//! * [`snn`] — pure-Rust LIF + convolution reference edge detector;
+//! * [`coordinator`] — the four-scenario Fig. 4 use-case runner;
+//! * [`metrics`] — counters, rate meters, timing histograms;
+//! * [`bench`] — statistics harness used by `benches/` (no criterion
+//!   offline);
+//! * [`testutil`] — deterministic RNG, generators, mini property harness.
+
+pub mod aer;
+pub mod bench;
+pub mod camera;
+pub mod cli;
+pub mod control;
+pub mod coordinator;
+pub mod engine;
+pub mod formats;
+pub mod metrics;
+pub mod net;
+pub mod pipeline;
+pub mod rt;
+pub mod runtime;
+pub mod snn;
+pub mod sync;
+pub mod testutil;

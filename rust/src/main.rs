@@ -1,0 +1,59 @@
+//! `aestream` binary: the paper's CLI (Fig. 2B) plus the Fig. 4
+//! scenario runner.
+
+use anyhow::Result;
+
+use aestream::bench::{fmt_rate, Table};
+use aestream::camera;
+use aestream::cli::{self, Command};
+use aestream::coordinator::{run_scenario, run_stream, ScenarioConfig};
+use aestream::pipeline::registry;
+use aestream::runtime::Device;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match cli::parse(&args)? {
+        Command::Help => {
+            print!("{}", cli::USAGE);
+        }
+        Command::Table1 => {
+            print!("{}", registry::render_table());
+        }
+        Command::Stream { source, pipeline, sink } => {
+            let report = run_stream(source, pipeline, sink)?;
+            eprintln!(
+                "processed {} events ({} out) in {:?} ({}) [{}x{}]",
+                report.events_in,
+                report.events_out,
+                report.wall,
+                fmt_rate(report.throughput(), "ev/s"),
+                report.resolution.width,
+                report.resolution.height,
+            );
+        }
+        Command::Scenarios { duration_us, time_scale } => {
+            eprintln!("generating {duration_us} µs synthetic recording (346x260)…");
+            let recording = camera::paper_recording(duration_us, 42);
+            eprintln!("  {} events", recording.len());
+            let device = Device::open_default()?;
+            let mut table = Table::new(&[
+                "scenario", "frames", "fps", "events", "HtoD ms", "HtoD %", "HtoD MB", "wall ms",
+            ]);
+            for cfg in ScenarioConfig::paper_four(time_scale) {
+                let r = run_scenario(&device, &recording, &cfg)?;
+                table.row(&[
+                    r.label.clone(),
+                    r.frames.to_string(),
+                    format!("{:.0}", r.fps()),
+                    r.events.to_string(),
+                    format!("{:.1}", r.stats.htod_ns as f64 / 1e6),
+                    format!("{:.2}", r.htod_percent()),
+                    format!("{:.2}", r.stats.htod_bytes as f64 / 1e6),
+                    format!("{:.0}", r.wall.as_secs_f64() * 1e3),
+                ]);
+            }
+            print!("{}", table.render());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Lightweight metrics: counters, rate meters, and timing histograms.
+//!
+//! The coordinator and benches report throughput (events/s, frames/s)
+//! and latency distributions; everything here is allocation-free on the
+//! hot path and has no dependencies.
+
+use std::time::{Duration, Instant};
+
+/// Wall-clock stopwatch with µs readout.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed time.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed microseconds.
+    pub fn elapsed_us(&self) -> u64 {
+        self.elapsed().as_micros() as u64
+    }
+}
+
+/// Throughput meter: items per second over the measured span.
+#[derive(Debug, Default, Clone)]
+pub struct RateMeter {
+    items: u64,
+    span: Duration,
+}
+
+impl RateMeter {
+    /// Fresh meter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `n` items processed over `span`.
+    pub fn record(&mut self, n: u64, span: Duration) {
+        self.items += n;
+        self.span += span;
+    }
+
+    /// Total items recorded.
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    /// Items per second (0 if nothing recorded).
+    pub fn rate(&self) -> f64 {
+        if self.span.is_zero() {
+            0.0
+        } else {
+            self.items as f64 / self.span.as_secs_f64()
+        }
+    }
+}
+
+/// Fixed-bucket log-scale duration histogram: 1 µs … ~17 s in 25
+/// power-of-two buckets, constant memory, O(1) record.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// buckets[i] counts samples in [2^i, 2^(i+1)) µs.
+    buckets: [u64; 25],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: [0; 25], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    /// Fresh histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one duration.
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(24);
+        self.buckets[bucket] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean in µs.
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Maximum recorded µs.
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate quantile (bucket upper bound), `q` in [0,1].
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1 << (i + 1);
+            }
+        }
+        1 << 25
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_meter_computes_rate() {
+        let mut m = RateMeter::new();
+        m.record(1000, Duration::from_millis(500));
+        m.record(1000, Duration::from_millis(500));
+        assert_eq!(m.items(), 2000);
+        assert!((m.rate() - 2000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_meter_rate_is_zero() {
+        assert_eq!(RateMeter::new().rate(), 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_stats() {
+        let mut h = LatencyHistogram::new();
+        for us in [1u64, 2, 4, 1000, 1000, 1_000_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.max_us(), 1_000_000);
+        assert!(h.mean_us() > 0.0);
+        // Median: 3rd of 6 ordered samples is 4 µs → bucket bound 8 µs.
+        let p50 = h.quantile_us(0.5);
+        assert!((4..=8).contains(&p50), "p50 = {p50}");
+        // p100 covers the max.
+        assert!(h.quantile_us(1.0) >= 1_000_000);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let s = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(s.elapsed_us() >= 1000);
+    }
+}

@@ -1,0 +1,13 @@
+//! Network transport: the SPIF protocol over UDP.
+//!
+//! The paper streams events to/from the SpiNNaker neuromorphic platform
+//! through the SpiNNaker Peripheral Interface (SPIF), a UDP-based
+//! protocol of packed 32-bit event words. [`spif`] implements the wire
+//! codec; [`udp`] the socket source/sink used by the CLI and the
+//! `spif_stream` example.
+
+pub mod spif;
+pub mod udp;
+
+pub use spif::{decode_datagram, encode_datagrams, SPIF_MAX_WORDS};
+pub use udp::{UdpEventReceiver, UdpEventSender};

@@ -1,0 +1,118 @@
+//! SPIF wire codec: packed 32-bit event words.
+//!
+//! SPIF (SpiNNaker Peripheral Interface) ships *live* events as packed
+//! words in UDP datagrams — deliberately without timestamps: the
+//! receiving side (a SpiNNaker router, or this library's UDP source)
+//! timestamps on arrival. Word layout used here (SPIF's default
+//! P_Y_X key layout for a 16-bit X field):
+//!
+//! ```text
+//! | 31: polarity | 30..16: y (15 bits) | 15..0: x (16 bits) |
+//! ```
+//!
+//! Datagrams carry at most [`SPIF_MAX_WORDS`] words so they fit a
+//! standard 1500-byte MTU with UDP/IP headers to spare.
+
+use anyhow::{bail, Result};
+
+use crate::aer::{Event, Polarity};
+
+/// Max words per datagram: 1400 bytes of payload / 4.
+pub const SPIF_MAX_WORDS: usize = 350;
+
+/// Pack one event into a SPIF word (timestamp is dropped by design).
+#[inline]
+pub fn pack_word(ev: &Event) -> u32 {
+    (u32::from(ev.p.is_on()) << 31) | ((ev.y as u32 & 0x7FFF) << 16) | ev.x as u32
+}
+
+/// Unpack a SPIF word, stamping it with `t` (receiver arrival time).
+#[inline]
+pub fn unpack_word(word: u32, t: u64) -> Event {
+    Event {
+        t,
+        x: (word & 0xFFFF) as u16,
+        y: ((word >> 16) & 0x7FFF) as u16,
+        p: Polarity::from_bool(word >> 31 == 1),
+    }
+}
+
+/// Encode a slice of events into one or more UDP-ready datagrams.
+pub fn encode_datagrams(events: &[Event]) -> Vec<Vec<u8>> {
+    events
+        .chunks(SPIF_MAX_WORDS)
+        .map(|chunk| {
+            let mut dgram = Vec::with_capacity(4 * chunk.len());
+            for ev in chunk {
+                dgram.extend_from_slice(&pack_word(ev).to_le_bytes());
+            }
+            dgram
+        })
+        .collect()
+}
+
+/// Decode one received datagram, stamping all events with arrival time
+/// `t` (µs since stream start).
+pub fn decode_datagram(payload: &[u8], t: u64) -> Result<Vec<Event>> {
+    if payload.len() % 4 != 0 {
+        bail!("spif: datagram length {} not a multiple of 4", payload.len());
+    }
+    Ok(payload
+        .chunks_exact(4)
+        .map(|b| unpack_word(u32::from_le_bytes(b.try_into().unwrap()), t))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn word_roundtrip_preserves_xyp() {
+        let events = synthetic_events(1000, 346, 260);
+        for ev in &events {
+            let back = unpack_word(pack_word(ev), 42);
+            assert_eq!((back.x, back.y, back.p), (ev.x, ev.y, ev.p));
+            assert_eq!(back.t, 42);
+        }
+    }
+
+    #[test]
+    fn datagrams_respect_mtu() {
+        let events = synthetic_events(1000, 346, 260);
+        let dgrams = encode_datagrams(&events);
+        assert_eq!(dgrams.len(), events.len().div_ceil(SPIF_MAX_WORDS));
+        for d in &dgrams {
+            assert!(d.len() <= SPIF_MAX_WORDS * 4);
+            assert_eq!(d.len() % 4, 0);
+        }
+        let total: usize = dgrams.iter().map(|d| d.len() / 4).sum();
+        assert_eq!(total, events.len());
+    }
+
+    #[test]
+    fn decode_rejects_ragged_datagram() {
+        assert!(decode_datagram(&[1, 2, 3], 0).is_err());
+    }
+
+    #[test]
+    fn decode_roundtrip_through_datagrams() {
+        let events = synthetic_events(777, 640, 480);
+        let mut decoded = Vec::new();
+        for d in encode_datagrams(&events) {
+            decoded.extend(decode_datagram(&d, 7).unwrap());
+        }
+        assert_eq!(decoded.len(), events.len());
+        for (a, b) in decoded.iter().zip(&events) {
+            assert_eq!((a.x, a.y, a.p), (b.x, b.y, b.p));
+        }
+    }
+
+    #[test]
+    fn polarity_lives_in_bit_31() {
+        let on = pack_word(&Event::on(1, 2, 0));
+        let off = pack_word(&Event::off(1, 2, 0));
+        assert_eq!(on ^ off, 1 << 31);
+    }
+}

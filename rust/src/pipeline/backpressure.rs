@@ -1,0 +1,173 @@
+//! Backpressure policies for bounded event queues.
+//!
+//! §6 of the paper: "We have had success deploying AEStream on embedded
+//! systems, but there is presently no guarantee that bottlenecks do not
+//! occur." This module makes the bottleneck behaviour *explicit and
+//! configurable*: a bounded accumulation queue with a policy for what
+//! happens when the consumer falls behind, plus high-watermark metrics
+//! so deployments can observe pressure instead of silently losing data.
+
+use crate::aer::Event;
+
+/// What to do when the queue is full and another event arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Drop the incoming event (favor old data; bounded latency for
+    /// what's already queued).
+    DropNewest,
+    /// Drop the oldest queued event (favor fresh data; the right choice
+    /// for closed-loop control where stale events are worthless).
+    DropOldest,
+    /// Reject the push; the producer must retry (lossless, couples the
+    /// producer's rate to the consumer's).
+    Reject,
+}
+
+/// A bounded event queue with an overflow policy and pressure metrics.
+#[derive(Debug)]
+pub struct BoundedQueue {
+    buf: std::collections::VecDeque<Event>,
+    capacity: usize,
+    policy: OverflowPolicy,
+    /// Events dropped by policy so far.
+    pub dropped: u64,
+    /// Pushes rejected (Reject policy) so far.
+    pub rejected: u64,
+    /// Highest queue occupancy observed.
+    pub high_watermark: usize,
+    /// Total events accepted.
+    pub accepted: u64,
+}
+
+impl BoundedQueue {
+    /// New queue with `capacity` (≥1) and `policy`.
+    pub fn new(capacity: usize, policy: OverflowPolicy) -> Self {
+        BoundedQueue {
+            buf: std::collections::VecDeque::with_capacity(capacity.max(1)),
+            capacity: capacity.max(1),
+            policy,
+            dropped: 0,
+            rejected: 0,
+            high_watermark: 0,
+            accepted: 0,
+        }
+    }
+
+    /// Capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current occupancy.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// `true` when empty.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Occupancy as a fraction of capacity (pressure gauge).
+    pub fn pressure(&self) -> f64 {
+        self.buf.len() as f64 / self.capacity as f64
+    }
+
+    /// Push one event, applying the overflow policy. Returns `false`
+    /// iff the event was not enqueued (dropped or rejected).
+    pub fn push(&mut self, ev: Event) -> bool {
+        if self.buf.len() == self.capacity {
+            match self.policy {
+                OverflowPolicy::DropNewest => {
+                    self.dropped += 1;
+                    return false;
+                }
+                OverflowPolicy::DropOldest => {
+                    self.buf.pop_front();
+                    self.dropped += 1;
+                }
+                OverflowPolicy::Reject => {
+                    self.rejected += 1;
+                    return false;
+                }
+            }
+        }
+        self.buf.push_back(ev);
+        self.accepted += 1;
+        self.high_watermark = self.high_watermark.max(self.buf.len());
+        true
+    }
+
+    /// Drain up to `max` events (consumer side).
+    pub fn drain(&mut self, max: usize) -> Vec<Event> {
+        let n = max.min(self.buf.len());
+        self.buf.drain(..n).collect()
+    }
+
+    /// Drain everything.
+    pub fn drain_all(&mut self) -> Vec<Event> {
+        self.buf.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64) -> Event {
+        Event::on(1, 1, t)
+    }
+
+    #[test]
+    fn drop_newest_keeps_oldest() {
+        let mut q = BoundedQueue::new(2, OverflowPolicy::DropNewest);
+        assert!(q.push(ev(1)));
+        assert!(q.push(ev(2)));
+        assert!(!q.push(ev(3)));
+        assert_eq!(q.dropped, 1);
+        assert_eq!(q.drain_all().iter().map(|e| e.t).collect::<Vec<_>>(), [1, 2]);
+    }
+
+    #[test]
+    fn drop_oldest_keeps_newest() {
+        let mut q = BoundedQueue::new(2, OverflowPolicy::DropOldest);
+        q.push(ev(1));
+        q.push(ev(2));
+        assert!(q.push(ev(3)), "incoming event is enqueued");
+        assert_eq!(q.dropped, 1);
+        assert_eq!(q.drain_all().iter().map(|e| e.t).collect::<Vec<_>>(), [2, 3]);
+    }
+
+    #[test]
+    fn reject_preserves_content_and_counts() {
+        let mut q = BoundedQueue::new(1, OverflowPolicy::Reject);
+        assert!(q.push(ev(1)));
+        assert!(!q.push(ev(2)));
+        assert_eq!((q.rejected, q.dropped), (1, 0));
+        assert_eq!(q.drain_all().len(), 1);
+    }
+
+    #[test]
+    fn watermark_and_pressure_track_occupancy() {
+        let mut q = BoundedQueue::new(4, OverflowPolicy::DropNewest);
+        for t in 0..3 {
+            q.push(ev(t));
+        }
+        assert_eq!(q.high_watermark, 3);
+        assert!((q.pressure() - 0.75).abs() < 1e-9);
+        q.drain(2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.high_watermark, 3, "watermark is sticky");
+    }
+
+    #[test]
+    fn drain_respects_max_and_order() {
+        let mut q = BoundedQueue::new(8, OverflowPolicy::Reject);
+        for t in 0..6 {
+            q.push(ev(t));
+        }
+        let first = q.drain(4);
+        assert_eq!(first.iter().map(|e| e.t).collect::<Vec<_>>(), [0, 1, 2, 3]);
+        assert_eq!(q.len(), 2);
+    }
+}

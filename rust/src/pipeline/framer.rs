@@ -1,0 +1,192 @@
+//! Event → dense-frame binning.
+//!
+//! Tensor consumers (the paper's GPU / our XLA device) operate on dense
+//! `[H, W]` frames: the framer accumulates the events of each fixed time
+//! window into a frame of per-pixel signed event counts (ON − OFF),
+//! which is exactly what the Norse/PyTorch path of the paper feeds its
+//! spiking network. Also the reference oracle for the L1 Pallas
+//! `event_scatter` kernel.
+
+use crate::aer::{Event, Resolution};
+
+/// A dense frame of per-pixel accumulated polarity counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Window start (inclusive), µs.
+    pub t_start: u64,
+    /// Window end (exclusive), µs.
+    pub t_end: u64,
+    /// Row-major `height × width` signed event counts.
+    pub data: Vec<f32>,
+    /// Geometry.
+    pub resolution: Resolution,
+    /// Number of events binned into this frame.
+    pub event_count: u64,
+}
+
+impl Frame {
+    /// Zeroed frame for a window.
+    pub fn zeroed(resolution: Resolution, t_start: u64, t_end: u64) -> Self {
+        Frame {
+            t_start,
+            t_end,
+            data: vec![0.0; resolution.pixels()],
+            resolution,
+            event_count: 0,
+        }
+    }
+
+    /// Accumulate one event (must be within the window; unchecked).
+    #[inline]
+    pub fn accumulate(&mut self, ev: &Event) {
+        self.data[ev.pixel_index(self.resolution.width)] += ev.p.signum();
+        self.event_count += 1;
+    }
+
+    /// Sum of absolute pixel values (≤ event_count; equality iff no
+    /// pixel saw both polarities).
+    pub fn l1(&self) -> f64 {
+        self.data.iter().map(|v| v.abs() as f64).sum()
+    }
+}
+
+/// Bins a time-ordered event stream into fixed windows.
+///
+/// `push` returns completed frames (possibly several, if the stream
+/// jumps over empty windows — empty windows are *not* emitted, matching
+/// AEStream's behaviour of only shipping frames that carry events unless
+/// `emit_empty` is set).
+#[derive(Debug)]
+pub struct Framer {
+    resolution: Resolution,
+    window_us: u64,
+    /// Emit zero frames for windows with no events.
+    pub emit_empty: bool,
+    current: Option<Frame>,
+}
+
+impl Framer {
+    /// New framer with the given window length.
+    pub fn new(resolution: Resolution, window_us: u64) -> Self {
+        Framer { resolution, window_us: window_us.max(1), emit_empty: false, current: None }
+    }
+
+    /// Window length in µs.
+    pub fn window_us(&self) -> u64 {
+        self.window_us
+    }
+
+    /// Feed one event; returns any frames completed *before* it.
+    pub fn push(&mut self, ev: &Event) -> Vec<Frame> {
+        let window_start = (ev.t / self.window_us) * self.window_us;
+        let mut completed = Vec::new();
+        match &mut self.current {
+            Some(frame) if frame.t_start == window_start => {}
+            Some(frame) => {
+                let prev_end = frame.t_end;
+                completed.push(self.current.take().unwrap());
+                if self.emit_empty {
+                    let mut t = prev_end;
+                    while t < window_start {
+                        completed.push(Frame::zeroed(self.resolution, t, t + self.window_us));
+                        t += self.window_us;
+                    }
+                }
+            }
+            None => {}
+        }
+        let frame = self.current.get_or_insert_with(|| {
+            Frame::zeroed(self.resolution, window_start, window_start + self.window_us)
+        });
+        frame.accumulate(ev);
+        completed
+    }
+
+    /// End of stream: flush the in-progress frame, if any.
+    pub fn finish(&mut self) -> Option<Frame> {
+        self.current.take()
+    }
+
+    /// Bin a whole slice (convenience for tests/benches).
+    pub fn frames_of(resolution: Resolution, window_us: u64, events: &[Event]) -> Vec<Frame> {
+        let mut framer = Framer::new(resolution, window_us);
+        let mut frames = Vec::new();
+        for ev in events {
+            frames.extend(framer.push(ev));
+        }
+        frames.extend(framer.finish());
+        frames
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::Event;
+    use crate::testutil::synthetic_events;
+
+    const RES: Resolution = Resolution::new(32, 32);
+
+    #[test]
+    fn bins_by_window() {
+        let events = vec![
+            Event::on(0, 0, 100),
+            Event::off(1, 1, 900),
+            Event::on(2, 2, 1100), // next window
+        ];
+        let frames = Framer::frames_of(RES, 1000, &events);
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0].t_start, 0);
+        assert_eq!(frames[0].event_count, 2);
+        assert_eq!(frames[1].t_start, 1000);
+        assert_eq!(frames[1].event_count, 1);
+    }
+
+    #[test]
+    fn event_count_is_conserved() {
+        let events = synthetic_events(5000, 32, 32);
+        let frames = Framer::frames_of(RES, 700, &events);
+        let total: u64 = frames.iter().map(|f| f.event_count).sum();
+        assert_eq!(total, 5000);
+    }
+
+    #[test]
+    fn polarity_accumulates_signed() {
+        let events = vec![Event::on(3, 3, 0), Event::on(3, 3, 1), Event::off(3, 3, 2)];
+        let frames = Framer::frames_of(RES, 1000, &events);
+        assert_eq!(frames.len(), 1);
+        assert_eq!(frames[0].data[3 * 32 + 3], 1.0); // +1 +1 -1
+    }
+
+    #[test]
+    fn empty_windows_skipped_by_default_emitted_on_request() {
+        let events = vec![Event::on(0, 0, 0), Event::on(0, 0, 5000)];
+        let skipping = Framer::frames_of(RES, 1000, &events);
+        assert_eq!(skipping.len(), 2);
+
+        let mut framer = Framer::new(RES, 1000);
+        framer.emit_empty = true;
+        let mut frames = Vec::new();
+        for ev in &events {
+            frames.extend(framer.push(ev));
+        }
+        frames.extend(framer.finish());
+        assert_eq!(frames.len(), 6); // windows 0..6000
+        assert_eq!(frames.iter().filter(|f| f.event_count == 0).count(), 4);
+    }
+
+    #[test]
+    fn window_boundary_is_half_open() {
+        // t = window_us lands in the *second* window.
+        let events = vec![Event::on(0, 0, 999), Event::on(0, 0, 1000)];
+        let frames = Framer::frames_of(RES, 1000, &events);
+        assert_eq!(frames.len(), 2);
+    }
+
+    #[test]
+    fn l1_matches_event_count_without_cancellation() {
+        let events = vec![Event::on(1, 1, 0), Event::on(2, 2, 1)];
+        let frames = Framer::frames_of(RES, 1000, &events);
+        assert_eq!(frames[0].l1(), 2.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Multi-sensor stream fusion — the paper's §6 future-work item
+//! ("AEStream is also well suited for multimodal sensing and sensor
+//! fusion. Sending multiple inputs to a single neuromorphic compute
+//! platform would, for instance, be trivial.").
+//!
+//! [`merge_streams`] performs a timestamp-ordered k-way merge of event
+//! streams; [`SourceLayout`] maps each source into a region of a shared
+//! output canvas (the way SPIF multiplexes several sensors into one
+//! SpiNNaker address space) by offsetting coordinates and validating
+//! bounds.
+
+use crate::aer::{Event, Resolution};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Placement of one source within the fused canvas.
+#[derive(Debug, Clone, Copy)]
+pub struct SourcePlacement {
+    /// Horizontal offset of this source's origin in the canvas.
+    pub x_offset: u16,
+    /// Vertical offset of this source's origin in the canvas.
+    pub y_offset: u16,
+    /// The source's own geometry (events outside are dropped).
+    pub resolution: Resolution,
+}
+
+/// Layout of all fused sources on one canvas.
+#[derive(Debug, Clone)]
+pub struct SourceLayout {
+    /// Fused canvas geometry.
+    pub canvas: Resolution,
+    /// Per-source placements (index = source id).
+    pub placements: Vec<SourcePlacement>,
+}
+
+impl SourceLayout {
+    /// Side-by-side layout: sources in a single row, left to right.
+    pub fn side_by_side(resolutions: &[Resolution]) -> SourceLayout {
+        let mut placements = Vec::with_capacity(resolutions.len());
+        let mut x = 0u16;
+        let mut height = 1u16;
+        for &res in resolutions {
+            placements.push(SourcePlacement { x_offset: x, y_offset: 0, resolution: res });
+            x += res.width;
+            height = height.max(res.height);
+        }
+        SourceLayout { canvas: Resolution::new(x.max(1), height), placements }
+    }
+
+    /// Map one event of `source` onto the canvas. `None` if the source
+    /// id is unknown or the event violates the source's geometry.
+    #[inline]
+    pub fn place(&self, source: usize, ev: &Event) -> Option<Event> {
+        let p = self.placements.get(source)?;
+        if !p.resolution.contains(ev) {
+            return None;
+        }
+        Some(Event { x: ev.x + p.x_offset, y: ev.y + p.y_offset, ..*ev })
+    }
+}
+
+/// Heap entry for the k-way merge (min-heap by timestamp, then source
+/// id for determinism).
+#[derive(PartialEq, Eq)]
+struct Head {
+    t: u64,
+    source: usize,
+    index: usize,
+}
+
+impl Ord for Head {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t, self.source, self.index).cmp(&(other.t, other.source, other.index))
+    }
+}
+
+impl PartialOrd for Head {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Timestamp-ordered k-way merge of per-source event streams (each
+/// stream must itself be time-ordered). Ties break by source id, making
+/// the merge fully deterministic.
+pub fn merge_streams(streams: &[&[Event]]) -> Vec<Event> {
+    let total: usize = streams.iter().map(|s| s.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    let mut heap: BinaryHeap<Reverse<Head>> = BinaryHeap::with_capacity(streams.len());
+    for (source, s) in streams.iter().enumerate() {
+        if let Some(ev) = s.first() {
+            heap.push(Reverse(Head { t: ev.t, source, index: 0 }));
+        }
+    }
+    while let Some(Reverse(head)) = heap.pop() {
+        let stream = streams[head.source];
+        out.push(stream[head.index]);
+        let next = head.index + 1;
+        if next < stream.len() {
+            heap.push(Reverse(Head { t: stream[next].t, source: head.source, index: next }));
+        }
+    }
+    out
+}
+
+/// Merge + spatially place several sources onto one canvas in one pass.
+/// Returns the fused, time-ordered stream (out-of-bounds events counted
+/// in the second return value).
+pub fn fuse(streams: &[&[Event]], layout: &SourceLayout) -> (Vec<Event>, u64) {
+    // Tag-merge: k-way merge but remembering the source of each event.
+    let total: usize = streams.iter().map(|s| s.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    let mut dropped = 0u64;
+    let mut heap: BinaryHeap<Reverse<Head>> = BinaryHeap::with_capacity(streams.len());
+    for (source, s) in streams.iter().enumerate() {
+        if let Some(ev) = s.first() {
+            heap.push(Reverse(Head { t: ev.t, source, index: 0 }));
+        }
+    }
+    while let Some(Reverse(head)) = heap.pop() {
+        let stream = streams[head.source];
+        match layout.place(head.source, &stream[head.index]) {
+            Some(ev) => out.push(ev),
+            None => dropped += 1,
+        }
+        let next = head.index + 1;
+        if next < stream.len() {
+            heap.push(Reverse(Head { t: stream[next].t, source: head.source, index: next }));
+        }
+    }
+    (out, dropped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::validate_stream;
+    use crate::testutil::synthetic_events_seeded;
+
+    #[test]
+    fn merge_is_time_ordered_and_complete() {
+        let a = synthetic_events_seeded(500, 64, 64, 1);
+        let b = synthetic_events_seeded(700, 64, 64, 2);
+        let c = synthetic_events_seeded(300, 64, 64, 3);
+        let merged = merge_streams(&[&a, &b, &c]);
+        assert_eq!(merged.len(), 1500);
+        assert!(merged.windows(2).all(|w| w[0].t <= w[1].t), "must be time-ordered");
+    }
+
+    #[test]
+    fn merge_is_deterministic_on_ties() {
+        let a = vec![Event::on(1, 1, 100)];
+        let b = vec![Event::off(2, 2, 100)];
+        let m1 = merge_streams(&[&a, &b]);
+        let m2 = merge_streams(&[&a, &b]);
+        assert_eq!(m1, m2);
+        assert_eq!(m1[0], a[0], "tie breaks to lower source id");
+    }
+
+    #[test]
+    fn merge_empty_and_unbalanced() {
+        let a: Vec<Event> = vec![];
+        let b = vec![Event::on(0, 0, 1)];
+        assert_eq!(merge_streams(&[&a, &b]).len(), 1);
+        assert!(merge_streams(&[&a, &a]).is_empty());
+        assert!(merge_streams(&[]).is_empty());
+    }
+
+    #[test]
+    fn side_by_side_layout_places_without_overlap() {
+        let layout = SourceLayout::side_by_side(&[
+            Resolution::new(64, 48),
+            Resolution::new(128, 96),
+        ]);
+        assert_eq!(layout.canvas, Resolution::new(192, 96));
+        let left = layout.place(0, &Event::on(63, 47, 0)).unwrap();
+        let right = layout.place(1, &Event::on(0, 0, 0)).unwrap();
+        assert_eq!((left.x, left.y), (63, 47));
+        assert_eq!((right.x, right.y), (64, 0));
+        // Out of the source's own bounds: rejected even if canvas fits.
+        assert!(layout.place(0, &Event::on(64, 0, 0)).is_none());
+        assert!(layout.place(2, &Event::on(0, 0, 0)).is_none());
+    }
+
+    #[test]
+    fn fuse_produces_valid_canvas_stream() {
+        let a = synthetic_events_seeded(400, 64, 48, 4);
+        let b = synthetic_events_seeded(400, 64, 48, 5);
+        let layout =
+            SourceLayout::side_by_side(&[Resolution::new(64, 48), Resolution::new(64, 48)]);
+        let (fused, dropped) = fuse(&[&a, &b], &layout);
+        assert_eq!(dropped, 0);
+        assert_eq!(fused.len(), 800);
+        assert_eq!(validate_stream(&fused, layout.canvas), None);
+        // Events from source 1 live in the right half.
+        assert!(fused.iter().any(|e| e.x >= 64));
+    }
+}

@@ -1,0 +1,378 @@
+//! Standard per-event transforms.
+//!
+//! Each transform is a small, independently testable function object
+//! with the uniform [`EventTransform`] signature — the paper's
+//! freely-composable pipeline stages.
+
+use crate::aer::{Event, Polarity, Resolution};
+use crate::pipeline::EventTransform;
+
+// ---------------------------------------------------------------------
+// Polarity filter
+// ---------------------------------------------------------------------
+
+/// Keep only events of one polarity.
+#[derive(Debug, Clone)]
+pub struct PolarityFilter {
+    keep: Polarity,
+}
+
+impl PolarityFilter {
+    /// Keep only `keep`-polarity events.
+    pub fn keep(keep: Polarity) -> Self {
+        PolarityFilter { keep }
+    }
+}
+
+impl EventTransform for PolarityFilter {
+    #[inline]
+    fn apply(&mut self, ev: Event) -> Option<Event> {
+        (ev.p == self.keep).then_some(ev)
+    }
+    fn describe(&self) -> String {
+        format!("polarity({})", if self.keep.is_on() { "on" } else { "off" })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Region-of-interest crop
+// ---------------------------------------------------------------------
+
+/// Keep events inside `[x0, x0+w) × [y0, y0+h)` and re-origin them to
+/// the crop window.
+#[derive(Debug, Clone)]
+pub struct RoiCrop {
+    pub x0: u16,
+    pub y0: u16,
+    pub width: u16,
+    pub height: u16,
+}
+
+impl RoiCrop {
+    /// New crop window.
+    pub fn new(x0: u16, y0: u16, width: u16, height: u16) -> Self {
+        RoiCrop { x0, y0, width, height }
+    }
+}
+
+impl EventTransform for RoiCrop {
+    #[inline]
+    fn apply(&mut self, ev: Event) -> Option<Event> {
+        if ev.x >= self.x0
+            && ev.x < self.x0 + self.width
+            && ev.y >= self.y0
+            && ev.y < self.y0 + self.height
+        {
+            Some(Event { x: ev.x - self.x0, y: ev.y - self.y0, ..ev })
+        } else {
+            None
+        }
+    }
+    fn describe(&self) -> String {
+        format!("crop({},{},{}x{})", self.x0, self.y0, self.width, self.height)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spatial downsample
+// ---------------------------------------------------------------------
+
+/// Integer spatial downsampling: coordinates divided by `factor`.
+/// (Event-count preserving; use with a refractory filter to thin.)
+#[derive(Debug, Clone)]
+pub struct Downsample {
+    factor: u16,
+}
+
+impl Downsample {
+    /// Downsample by `factor` (≥1).
+    pub fn new(factor: u16) -> Self {
+        Downsample { factor: factor.max(1) }
+    }
+}
+
+impl EventTransform for Downsample {
+    #[inline]
+    fn apply(&mut self, ev: Event) -> Option<Event> {
+        Some(Event { x: ev.x / self.factor, y: ev.y / self.factor, ..ev })
+    }
+    fn describe(&self) -> String {
+        format!("downsample(/{})", self.factor)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Refractory filter
+// ---------------------------------------------------------------------
+
+/// Drop events from a pixel within `period_us` of its previous event —
+/// the same refractory mechanism the paper adds to its LIF layer to
+/// reduce noise, applied at the stream level.
+#[derive(Debug)]
+pub struct RefractoryFilter {
+    period_us: u64,
+    resolution: Resolution,
+    /// Last accepted timestamp + 1 per pixel (0 = never fired).
+    last: Vec<u64>,
+}
+
+impl RefractoryFilter {
+    /// New filter for a sensor of `resolution`.
+    pub fn new(resolution: Resolution, period_us: u64) -> Self {
+        RefractoryFilter { period_us, resolution, last: vec![0; resolution.pixels()] }
+    }
+}
+
+impl EventTransform for RefractoryFilter {
+    #[inline]
+    fn apply(&mut self, ev: Event) -> Option<Event> {
+        let idx = ev.pixel_index(self.resolution.width);
+        let last = self.last[idx];
+        // Stored as t+1 so 0 means "never".
+        if last != 0 && ev.t < last - 1 + self.period_us {
+            return None;
+        }
+        self.last[idx] = ev.t + 1;
+        Some(ev)
+    }
+    fn describe(&self) -> String {
+        format!("refractory({}µs)", self.period_us)
+    }
+    fn reset(&mut self) {
+        self.last.fill(0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Background-activity denoise
+// ---------------------------------------------------------------------
+
+/// Classic neighbourhood-support denoiser: keep an event only if one of
+/// its 8 spatial neighbours fired within `window_us`. Removes the
+/// uncorrelated background activity a real DVS produces in the dark.
+#[derive(Debug)]
+pub struct BackgroundActivityFilter {
+    window_us: u64,
+    resolution: Resolution,
+    /// Last event time + 1 per pixel.
+    last: Vec<u64>,
+}
+
+impl BackgroundActivityFilter {
+    /// New filter for a sensor of `resolution`.
+    pub fn new(resolution: Resolution, window_us: u64) -> Self {
+        BackgroundActivityFilter {
+            window_us,
+            resolution,
+            last: vec![0; resolution.pixels()],
+        }
+    }
+}
+
+impl EventTransform for BackgroundActivityFilter {
+    fn apply(&mut self, ev: Event) -> Option<Event> {
+        let (w, h) = (self.resolution.width, self.resolution.height);
+        let mut supported = false;
+        let x0 = ev.x.saturating_sub(1);
+        let x1 = (ev.x + 1).min(w - 1);
+        let y0 = ev.y.saturating_sub(1);
+        let y1 = (ev.y + 1).min(h - 1);
+        for ny in y0..=y1 {
+            for nx in x0..=x1 {
+                if nx == ev.x && ny == ev.y {
+                    continue;
+                }
+                let t = self.last[ny as usize * w as usize + nx as usize];
+                if t != 0 && ev.t < (t - 1).saturating_add(self.window_us) {
+                    supported = true;
+                }
+            }
+        }
+        self.last[ev.pixel_index(w)] = ev.t + 1;
+        supported.then_some(ev)
+    }
+    fn describe(&self) -> String {
+        format!("denoise({}µs)", self.window_us)
+    }
+    fn reset(&mut self) {
+        self.last.fill(0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Geometric transforms
+// ---------------------------------------------------------------------
+
+/// Mirror x within a sensor of the given width.
+#[derive(Debug, Clone)]
+pub struct FlipX {
+    width: u16,
+}
+
+impl FlipX {
+    /// New horizontal mirror.
+    pub fn new(width: u16) -> Self {
+        FlipX { width }
+    }
+}
+
+impl EventTransform for FlipX {
+    #[inline]
+    fn apply(&mut self, ev: Event) -> Option<Event> {
+        Some(Event { x: self.width - 1 - ev.x, ..ev })
+    }
+    fn describe(&self) -> String {
+        "flip_x".into()
+    }
+}
+
+/// Mirror y within a sensor of the given height.
+#[derive(Debug, Clone)]
+pub struct FlipY {
+    height: u16,
+}
+
+impl FlipY {
+    /// New vertical mirror.
+    pub fn new(height: u16) -> Self {
+        FlipY { height }
+    }
+}
+
+impl EventTransform for FlipY {
+    #[inline]
+    fn apply(&mut self, ev: Event) -> Option<Event> {
+        Some(Event { y: self.height - 1 - ev.y, ..ev })
+    }
+    fn describe(&self) -> String {
+        "flip_y".into()
+    }
+}
+
+/// Swap x and y (rotate+mirror; geometry must be square or tracked by
+/// the caller).
+#[derive(Debug, Clone)]
+pub struct Transpose;
+
+impl EventTransform for Transpose {
+    #[inline]
+    fn apply(&mut self, ev: Event) -> Option<Event> {
+        Some(Event { x: ev.y, y: ev.x, ..ev })
+    }
+    fn describe(&self) -> String {
+        "transpose".into()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Time shift
+// ---------------------------------------------------------------------
+
+/// Add a constant offset to every timestamp (stream alignment for
+/// multi-sensor fusion).
+#[derive(Debug, Clone)]
+pub struct TimeShift {
+    offset_us: u64,
+}
+
+impl TimeShift {
+    /// Shift by `offset_us` into the future.
+    pub fn new(offset_us: u64) -> Self {
+        TimeShift { offset_us }
+    }
+}
+
+impl EventTransform for TimeShift {
+    #[inline]
+    fn apply(&mut self, ev: Event) -> Option<Event> {
+        Some(Event { t: ev.t + self.offset_us, ..ev })
+    }
+    fn describe(&self) -> String {
+        format!("time_shift(+{}µs)", self.offset_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    const RES: Resolution = Resolution::new(64, 48);
+
+    #[test]
+    fn polarity_filter_splits_stream() {
+        let events = synthetic_events(1000, 64, 48);
+        let mut on = PolarityFilter::keep(Polarity::On);
+        let mut off = PolarityFilter::keep(Polarity::Off);
+        let n_on = events.iter().filter(|e| on.apply(**e).is_some()).count();
+        let n_off = events.iter().filter(|e| off.apply(**e).is_some()).count();
+        assert_eq!(n_on + n_off, events.len());
+    }
+
+    #[test]
+    fn crop_reorigins_and_bounds() {
+        let mut crop = RoiCrop::new(10, 10, 20, 20);
+        assert_eq!(crop.apply(Event::on(10, 10, 0)), Some(Event::on(0, 0, 0)));
+        assert_eq!(crop.apply(Event::on(29, 29, 0)), Some(Event::on(19, 19, 0)));
+        assert_eq!(crop.apply(Event::on(30, 10, 0)), None);
+        assert_eq!(crop.apply(Event::on(9, 15, 0)), None);
+    }
+
+    #[test]
+    fn downsample_divides() {
+        let mut d = Downsample::new(4);
+        assert_eq!(d.apply(Event::on(63, 47, 5)), Some(Event::on(15, 11, 5)));
+        let mut d1 = Downsample::new(1);
+        assert_eq!(d1.apply(Event::on(7, 7, 1)), Some(Event::on(7, 7, 1)));
+    }
+
+    #[test]
+    fn refractory_drops_rapid_repeats() {
+        let mut r = RefractoryFilter::new(RES, 100);
+        assert!(r.apply(Event::on(5, 5, 1000)).is_some());
+        assert!(r.apply(Event::on(5, 5, 1050)).is_none()); // too soon
+        assert!(r.apply(Event::on(6, 5, 1050)).is_some()); // other pixel ok
+        assert!(r.apply(Event::on(5, 5, 1100)).is_some()); // period elapsed
+        r.reset();
+        assert!(r.apply(Event::on(5, 5, 1050)).is_some());
+    }
+
+    #[test]
+    fn refractory_accepts_t_zero() {
+        let mut r = RefractoryFilter::new(RES, 100);
+        assert!(r.apply(Event::on(0, 0, 0)).is_some());
+        assert!(r.apply(Event::on(0, 0, 50)).is_none());
+    }
+
+    #[test]
+    fn denoise_requires_neighbour_support() {
+        let mut f = BackgroundActivityFilter::new(RES, 1000);
+        // Lone event: no support, dropped.
+        assert!(f.apply(Event::on(10, 10, 100)).is_none());
+        // Neighbour within the window: kept.
+        assert!(f.apply(Event::on(11, 10, 200)).is_some());
+        // Far-away pixel: dropped again.
+        assert!(f.apply(Event::on(40, 40, 300)).is_none());
+        // Same pixel does not self-support.
+        assert!(f.apply(Event::on(40, 40, 301)).is_none());
+    }
+
+    #[test]
+    fn flips_are_involutions() {
+        let events = synthetic_events(200, 64, 48);
+        let mut fx = FlipX::new(64);
+        let mut fy = FlipY::new(48);
+        for ev in events {
+            let once = fx.apply(ev).unwrap();
+            assert_eq!(fx.apply(once).unwrap(), ev);
+            let once = fy.apply(ev).unwrap();
+            assert_eq!(fy.apply(once).unwrap(), ev);
+        }
+    }
+
+    #[test]
+    fn transpose_swaps() {
+        let mut t = Transpose;
+        assert_eq!(t.apply(Event::on(3, 9, 7)), Some(Event::on(9, 3, 7)));
+    }
+}

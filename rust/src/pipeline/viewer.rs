@@ -1,0 +1,99 @@
+//! Terminal frame viewer: render event frames as ASCII/Unicode art.
+//!
+//! The paper's ecosystem pairs AEStream with "graphical libraries for
+//! visual inspection" (§6); in a terminal-only environment the
+//! equivalent is a density renderer — handy for eyeballing whether a
+//! recording, filter chain, or the edge detector's output looks sane
+//! (`aestream input … output view`).
+
+use crate::aer::Resolution;
+use crate::pipeline::framer::Frame;
+
+/// Density glyphs from silent to saturated.
+const RAMP: &[char] = &[' ', '·', ':', '+', '*', '#', '@'];
+
+/// Render a frame's |activity| as `rows` lines of `cols` glyphs.
+/// The frame is box-downsampled to the requested character grid.
+pub fn render_frame(frame: &Frame, cols: usize, rows: usize) -> String {
+    render_map(&frame.data, frame.resolution, cols, rows)
+}
+
+/// Render any row-major map (frames, spike maps, edge maps).
+pub fn render_map(data: &[f32], res: Resolution, cols: usize, rows: usize) -> String {
+    let cols = cols.clamp(1, res.width as usize);
+    let rows = rows.clamp(1, res.height as usize);
+    let (w, h) = (res.width as usize, res.height as usize);
+    // Box-filter each character cell.
+    let mut cells = vec![0.0f32; cols * rows];
+    for y in 0..h {
+        let cy = y * rows / h;
+        for x in 0..w {
+            let cx = x * cols / w;
+            cells[cy * cols + cx] += data[y * w + x].abs();
+        }
+    }
+    let max = cells.iter().cloned().fold(0.0f32, f32::max);
+    let mut out = String::with_capacity((cols + 1) * rows);
+    for row in cells.chunks(cols) {
+        for &c in row {
+            let idx = if max == 0.0 {
+                0
+            } else {
+                ((c / max) * (RAMP.len() - 1) as f32).round() as usize
+            };
+            out.push(RAMP[idx.min(RAMP.len() - 1)]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::{Event, Resolution};
+
+    #[test]
+    fn silent_frame_renders_blank() {
+        let frame = Frame::zeroed(Resolution::new(32, 16), 0, 1000);
+        let art = render_frame(&frame, 16, 8);
+        assert_eq!(art.lines().count(), 8);
+        assert!(art.chars().all(|c| c == ' ' || c == '\n'));
+    }
+
+    #[test]
+    fn hot_pixel_renders_saturated_glyph() {
+        let mut frame = Frame::zeroed(Resolution::new(32, 16), 0, 1000);
+        for _ in 0..10 {
+            frame.accumulate(&Event::on(0, 0, 5));
+        }
+        let art = render_frame(&frame, 16, 8);
+        assert!(art.starts_with('@'), "top-left cell must be saturated: {art:?}");
+    }
+
+    #[test]
+    fn geometry_clamps() {
+        let frame = Frame::zeroed(Resolution::new(4, 4), 0, 1);
+        let art = render_frame(&frame, 1000, 1000);
+        assert_eq!(art.lines().count(), 4);
+        assert_eq!(art.lines().next().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn edge_map_renders_structure() {
+        // A vertical line of activity should occupy one character column.
+        let res = Resolution::new(64, 32);
+        let mut data = vec![0.0f32; res.pixels()];
+        for y in 0..32 {
+            data[y * 64 + 32] = 1.0;
+        }
+        let art = render_map(&data, res, 32, 16);
+        let lit_cols: std::collections::HashSet<usize> = art
+            .lines()
+            .flat_map(|l| {
+                l.char_indices().filter(|(_, c)| *c != ' ').map(|(i, _)| i).collect::<Vec<_>>()
+            })
+            .collect();
+        assert_eq!(lit_cols.len(), 1, "one column lit: {art}");
+    }
+}

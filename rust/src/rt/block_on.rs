@@ -1,0 +1,85 @@
+//! Drive a future to completion on the current thread.
+
+use std::future::Future;
+use std::pin::pin;
+use std::task::{Context, Poll};
+
+use super::waker::thread_waker;
+
+/// Run `fut` to completion, parking the current thread while the future
+/// is pending. This is the entry point from synchronous code (CLI, tests,
+/// benches) into coroutine land.
+pub fn block_on<F: Future>(fut: F) -> F::Output {
+    let mut fut = pin!(fut);
+    let waker = thread_waker(std::thread::current());
+    let mut cx = Context::from_waker(&waker);
+    loop {
+        match fut.as_mut().poll(&mut cx) {
+            Poll::Ready(out) => return out,
+            // A spurious unpark is possible (the platform permits it), so
+            // re-poll in a loop rather than asserting on wake causality.
+            Poll::Pending => std::thread::park(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::yield_now;
+
+    #[test]
+    fn immediate_future() {
+        assert_eq!(block_on(async { 7 }), 7);
+    }
+
+    #[test]
+    fn future_that_yields() {
+        let out = block_on(async {
+            let mut acc = 0;
+            for i in 0..10 {
+                acc += i;
+                yield_now().await;
+            }
+            acc
+        });
+        assert_eq!(out, 45);
+    }
+
+    #[test]
+    fn future_woken_from_another_thread() {
+        use std::sync::mpsc;
+        use std::task::Waker;
+
+        // A tiny one-shot future: pending until another thread sends.
+        struct OneShot {
+            rx: mpsc::Receiver<u32>,
+            waker_tx: mpsc::Sender<Waker>,
+            registered: bool,
+        }
+        impl Future for OneShot {
+            type Output = u32;
+            fn poll(mut self: std::pin::Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<u32> {
+                if let Ok(v) = self.rx.try_recv() {
+                    return Poll::Ready(v);
+                }
+                if !self.registered {
+                    self.waker_tx.send(cx.waker().clone()).unwrap();
+                    self.registered = true;
+                }
+                Poll::Pending
+            }
+        }
+
+        let (tx, rx) = mpsc::channel();
+        let (waker_tx, waker_rx) = mpsc::channel();
+        let t = std::thread::spawn(move || {
+            let waker: Waker = waker_rx.recv().unwrap();
+            tx.send(99).unwrap();
+            waker.wake();
+        });
+        let v = block_on(OneShot { rx, waker_tx, registered: false });
+        assert_eq!(v, 99);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,302 @@
+//! Single-threaded bounded async channel: per-event coroutine handoff.
+//!
+//! This is the anti-buffer primitive of the paper: instead of filling a
+//! lock-guarded buffer (Fig. 1A), the producer coroutine suspends the
+//! moment the consumer is behind, and control transfers with
+//! function-call-like overhead. With capacity 1 this is a rendezvous
+//! cell; larger capacities let the scheduler amortize task switches
+//! without introducing locks (the queue is `Rc<RefCell<…>>`, only ever
+//! touched from the owning thread).
+//!
+//! For cross-thread handoff see [`crate::rt::sync_channel`].
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::fmt;
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::task::{Context, Poll, Waker};
+
+struct Inner<T> {
+    queue: VecDeque<T>,
+    cap: usize,
+    /// Consumer waiting for an item.
+    recv_waker: Option<Waker>,
+    /// Producers waiting for space.
+    send_wakers: Vec<Waker>,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+impl<T> Inner<T> {
+    fn wake_recv(&mut self) {
+        if let Some(w) = self.recv_waker.take() {
+            w.wake();
+        }
+    }
+    fn wake_senders(&mut self) {
+        for w in self.send_wakers.drain(..) {
+            w.wake();
+        }
+    }
+}
+
+/// Sending half. Clonable (MPSC within one thread).
+pub struct Sender<T> {
+    inner: Rc<RefCell<Inner<T>>>,
+}
+
+/// Receiving half.
+pub struct Receiver<T> {
+    inner: Rc<RefCell<Inner<T>>>,
+}
+
+/// Error returned when sending into a channel whose receiver is gone.
+/// Carries the rejected item back to the caller.
+pub struct SendError<T>(pub T);
+
+impl<T> fmt::Debug for SendError<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("SendError(..)")
+    }
+}
+
+/// Error returned by [`Receiver::recv`] once all senders are dropped and
+/// the queue is drained — represented as `None` from `recv`.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+/// Create a bounded channel with capacity `cap` (min 1).
+pub fn channel<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let inner = Rc::new(RefCell::new(Inner {
+        queue: VecDeque::with_capacity(cap.max(1)),
+        cap: cap.max(1),
+        recv_waker: None,
+        send_wakers: Vec::new(),
+        senders: 1,
+        receiver_alive: true,
+    }));
+    (Sender { inner: inner.clone() }, Receiver { inner })
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.borrow_mut().senders += 1;
+        Sender { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut inner = self.inner.borrow_mut();
+        inner.senders -= 1;
+        if inner.senders == 0 {
+            // Let a suspended consumer observe the close.
+            inner.wake_recv();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut inner = self.inner.borrow_mut();
+        inner.receiver_alive = false;
+        // Unblock all suspended producers so they can fail fast.
+        inner.wake_senders();
+    }
+}
+
+impl<T> Sender<T> {
+    /// Send an item, suspending while the channel is full.
+    pub fn send(&self, item: T) -> SendFuture<'_, T> {
+        SendFuture { sender: self, item: Some(item) }
+    }
+
+    /// Non-suspending send attempt. `Err` carries the item back, tagged
+    /// with whether the failure is fatal (receiver dropped) or transient
+    /// (full).
+    pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
+        let mut inner = self.inner.borrow_mut();
+        if !inner.receiver_alive {
+            return Err(TrySendError::Closed(item));
+        }
+        if inner.queue.len() == inner.cap {
+            return Err(TrySendError::Full(item));
+        }
+        inner.queue.push_back(item);
+        inner.wake_recv();
+        Ok(())
+    }
+}
+
+/// Error for [`Sender::try_send`].
+#[derive(Debug)]
+pub enum TrySendError<T> {
+    /// Channel at capacity; retry after the consumer catches up.
+    Full(T),
+    /// Receiver dropped; the channel is dead.
+    Closed(T),
+}
+
+/// Future returned by [`Sender::send`].
+pub struct SendFuture<'s, T> {
+    sender: &'s Sender<T>,
+    item: Option<T>,
+}
+
+// The future only takes `item` out of the Option and never relies on its
+// own address; safe to be Unpin irrespective of `T`.
+impl<T> Unpin for SendFuture<'_, T> {}
+
+impl<T> Future for SendFuture<'_, T> {
+    type Output = Result<(), SendError<T>>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        // SAFETY-free projection: we never move out of `self` structurally;
+        // `item` is an Option we take from.
+        let this = self.get_mut();
+        let item = this.item.take().expect("SendFuture polled after completion");
+        match this.sender.try_send(item) {
+            Ok(()) => Poll::Ready(Ok(())),
+            Err(TrySendError::Closed(item)) => Poll::Ready(Err(SendError(item))),
+            Err(TrySendError::Full(item)) => {
+                this.item = Some(item);
+                this.sender.inner.borrow_mut().send_wakers.push(cx.waker().clone());
+                Poll::Pending
+            }
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Receive the next item, suspending while the channel is empty.
+    /// Resolves to `None` once every sender is dropped and the queue is
+    /// drained.
+    pub fn recv(&mut self) -> RecvFuture<'_, T> {
+        RecvFuture { receiver: self }
+    }
+
+    /// Non-suspending receive attempt.
+    pub fn try_recv(&mut self) -> Option<T> {
+        let mut inner = self.inner.borrow_mut();
+        let item = inner.queue.pop_front();
+        if item.is_some() {
+            inner.wake_senders();
+        }
+        item
+    }
+
+    /// `true` once all senders are gone and the queue is empty.
+    pub fn is_terminated(&self) -> bool {
+        let inner = self.inner.borrow();
+        inner.senders == 0 && inner.queue.is_empty()
+    }
+}
+
+/// Future returned by [`Receiver::recv`].
+pub struct RecvFuture<'r, T> {
+    receiver: &'r mut Receiver<T>,
+}
+
+impl<T> Future for RecvFuture<'_, T> {
+    type Output = Option<T>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let this = self.get_mut();
+        let mut inner = this.receiver.inner.borrow_mut();
+        if let Some(item) = inner.queue.pop_front() {
+            inner.wake_senders();
+            return Poll::Ready(Some(item));
+        }
+        if inner.senders == 0 {
+            return Poll::Ready(None);
+        }
+        inner.recv_waker = Some(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::{block_on, LocalExecutor};
+    use std::cell::Cell;
+
+    #[test]
+    fn try_send_try_recv_fifo() {
+        let (tx, mut rx) = channel(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert!(matches!(tx.try_send(3), Err(TrySendError::Full(3))));
+        assert_eq!(rx.try_recv(), Some(1));
+        assert_eq!(rx.try_recv(), Some(2));
+        assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
+    fn recv_none_after_senders_dropped() {
+        let (tx, mut rx) = channel::<u32>(1);
+        tx.try_send(9).unwrap();
+        drop(tx);
+        assert_eq!(block_on(rx.recv()), Some(9));
+        assert_eq!(block_on(rx.recv()), None);
+        assert!(rx.is_terminated());
+    }
+
+    #[test]
+    fn send_fails_once_receiver_dropped() {
+        let (tx, rx) = channel::<u32>(1);
+        drop(rx);
+        assert!(block_on(tx.send(5)).is_err());
+        assert!(matches!(tx.try_send(6), Err(TrySendError::Closed(6))));
+    }
+
+    #[test]
+    fn rendezvous_capacity_one_ping_pong() {
+        let got = RefCell::new(Vec::new());
+        let got_ref = &got;
+        let ex = LocalExecutor::new();
+        let (tx, mut rx) = channel(1);
+        ex.spawn(async move {
+            for i in 0..50u32 {
+                tx.send(i).await.unwrap();
+            }
+        });
+        ex.spawn(async move {
+            while let Some(v) = rx.recv().await {
+                got_ref.borrow_mut().push(v);
+            }
+        });
+        ex.run();
+        assert_eq!(*got.borrow(), (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn multiple_senders_all_drain() {
+        let total = Cell::new(0u64);
+        let n_seen = Cell::new(0u32);
+        let ex = LocalExecutor::new();
+        let (tx, mut rx) = channel(4);
+        for s in 0..3u64 {
+            let tx = tx.clone();
+            ex.spawn(async move {
+                for i in 0..10u64 {
+                    tx.send(s * 100 + i).await.unwrap();
+                }
+            });
+        }
+        drop(tx);
+        let (total_ref, n_ref) = (&total, &n_seen);
+        ex.spawn(async move {
+            while let Some(v) = rx.recv().await {
+                total_ref.set(total_ref.get() + v);
+                n_ref.set(n_ref.get() + 1);
+            }
+        });
+        ex.run();
+        assert_eq!(n_seen.get(), 30);
+        // 3 senders × Σ(0..10) + (0+100+200)×10
+        assert_eq!(total.get(), 3 * 45 + 3000);
+    }
+}

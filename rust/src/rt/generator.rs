@@ -1,0 +1,234 @@
+//! Pull-based coroutine generator: the C++20 symmetric-transfer analog.
+//!
+//! The paper's Fig. 1(B) coroutines hand single events from producer to
+//! consumer "with an overhead comparable to a regular function call".
+//! The C++20 mechanism is symmetric transfer: resuming the consumer
+//! *is* a jump, no scheduler involved. The Rust equivalent is a
+//! **generator**: the producer is an `async fn` state machine that the
+//! consumer polls directly — each `next()` is one (devirtualized,
+//! inlineable) `poll` that advances the producer exactly one `yield`.
+//!
+//! No executor, no channel, no wakers (a noop waker is passed because
+//! `poll` demands one): per-event cost is the state-machine advance plus
+//! one `Cell` swap. This is what [`crate::engine::coro`] benchmarks in
+//! Fig. 3; the executor-based form ([`crate::rt::LocalExecutor`] +
+//! channels) is what pipelines with real concurrent I/O use.
+
+use std::cell::Cell;
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::task::{Context, Poll, Waker};
+
+/// The producer side: `y.yield_item(v).await` suspends the coroutine
+/// and transfers control (the value) to the consumer's `next()`.
+pub struct Yielder<T> {
+    slot: Rc<Cell<Option<T>>>,
+}
+
+impl<T> Yielder<T> {
+    /// Yield one item to the consumer. The returned future completes on
+    /// the *next* poll (after the consumer took the item).
+    pub fn yield_item(&self, item: T) -> YieldFut<'_, T> {
+        YieldFut { slot: &self.slot, item: Some(item) }
+    }
+}
+
+/// Future returned by [`Yielder::yield_item`].
+pub struct YieldFut<'y, T> {
+    slot: &'y Rc<Cell<Option<T>>>,
+    item: Option<T>,
+}
+
+impl<T> Unpin for YieldFut<'_, T> {}
+
+impl<T> Future for YieldFut<'_, T> {
+    type Output = ();
+
+    #[inline]
+    fn poll(mut self: Pin<&mut Self>, _cx: &mut Context<'_>) -> Poll<()> {
+        match self.item.take() {
+            Some(item) => {
+                // First poll: publish the item and suspend. No waker —
+                // the consumer polls us again by construction.
+                self.slot.set(Some(item));
+                Poll::Pending
+            }
+            None => Poll::Ready(()),
+        }
+    }
+}
+
+/// A coroutine generator over items of type `T`.
+///
+/// ```
+/// use aestream::rt::generator::Generator;
+/// let data = [1u64, 2, 3];
+/// let mut gen = Generator::new(|y| async move {
+///     for &v in &data {
+///         y.yield_item(v * 10).await;
+///     }
+/// });
+/// assert_eq!(gen.next(), Some(10));
+/// assert_eq!(gen.next(), Some(20));
+/// assert_eq!(gen.next(), Some(30));
+/// assert_eq!(gen.next(), None);
+/// ```
+pub struct Generator<'a, T> {
+    fut: Pin<Box<dyn Future<Output = ()> + 'a>>,
+    slot: Rc<Cell<Option<T>>>,
+    done: bool,
+}
+
+impl<'a, T: 'a> Generator<'a, T> {
+    /// Create a generator from an async closure over a [`Yielder`].
+    /// The single `Box::pin` is the coroutine frame allocation (C++20
+    /// heap-allocates the frame the same way).
+    pub fn new<F, Fut>(f: F) -> Self
+    where
+        F: FnOnce(Yielder<T>) -> Fut,
+        Fut: Future<Output = ()> + 'a,
+    {
+        let slot = Rc::new(Cell::new(None));
+        let fut = Box::pin(f(Yielder { slot: slot.clone() }));
+        Generator { fut, slot, done: false }
+    }
+
+    /// Resume the coroutine until it yields the next item (or finishes).
+    #[inline]
+    pub fn next(&mut self) -> Option<T> {
+        if self.done {
+            return None;
+        }
+        let waker = Waker::noop();
+        let mut cx = Context::from_waker(waker);
+        match self.fut.as_mut().poll(&mut cx) {
+            Poll::Pending => self.slot.take(),
+            Poll::Ready(()) => {
+                self.done = true;
+                // A final item may have been yielded right before return.
+                self.slot.take()
+            }
+        }
+    }
+}
+
+impl<T> Iterator for Generator<'_, T>
+where
+    T: 'static,
+{
+    type Item = T;
+    fn next(&mut self) -> Option<T> {
+        Generator::next(self)
+    }
+}
+
+/// Zero-dispatch generator drive: stack-pin the coroutine frame and poll
+/// it with a *concrete* future type, so the compiler inlines the resume
+/// into the consumer loop — this is the true analog of C++20 symmetric
+/// transfer, where resuming the next coroutine is a plain jump.
+///
+/// [`Generator`] (boxed, type-erased) pays a virtual call per item;
+/// `drive` pays none. The Fig. 3 engine uses `drive`.
+#[inline]
+pub fn drive<T, MkFut, Fut, F>(mk: MkFut, mut consume: F)
+where
+    MkFut: FnOnce(Yielder<T>) -> Fut,
+    Fut: Future<Output = ()>,
+    F: FnMut(T),
+{
+    let slot = Rc::new(Cell::new(None));
+    let fut = mk(Yielder { slot: slot.clone() });
+    let mut fut = std::pin::pin!(fut);
+    let waker = Waker::noop();
+    let mut cx = Context::from_waker(waker);
+    loop {
+        match fut.as_mut().poll(&mut cx) {
+            Poll::Pending => {
+                if let Some(item) = slot.take() {
+                    consume(item);
+                }
+            }
+            Poll::Ready(()) => {
+                if let Some(item) = slot.take() {
+                    consume(item);
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yields_all_items_in_order() {
+        let mut gen = Generator::new(|y| async move {
+            for i in 0..100u32 {
+                y.yield_item(i).await;
+            }
+        });
+        for i in 0..100 {
+            assert_eq!(gen.next(), Some(i));
+        }
+        assert_eq!(gen.next(), None);
+        assert_eq!(gen.next(), None, "post-completion polls are safe");
+    }
+
+    #[test]
+    fn empty_generator() {
+        let mut gen = Generator::<u32>::new(|_y| async move {});
+        assert_eq!(gen.next(), None);
+    }
+
+    #[test]
+    fn borrows_external_data() {
+        let data = vec![5u64, 6, 7];
+        let mut gen = Generator::new(|y| {
+            let data = &data;
+            async move {
+                for &v in data {
+                    y.yield_item(v).await;
+                }
+            }
+        });
+        assert_eq!(gen.by_ref().count(), 3);
+    }
+
+    #[test]
+    fn drive_matches_generator() {
+        let data: Vec<u32> = (0..1000).collect();
+        let mut out = Vec::new();
+        drive(
+            |y| {
+                let data = &data;
+                async move {
+                    for &v in data {
+                        y.yield_item(v).await;
+                    }
+                }
+            },
+            |v| out.push(v),
+        );
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn nested_compute_between_yields() {
+        // The coroutine can do arbitrary work between yields; control
+        // still alternates strictly.
+        let mut gen = Generator::new(|y| async move {
+            let mut acc = 0u64;
+            for i in 1..=10u64 {
+                acc += i;
+                if acc % 2 == 0 {
+                    y.yield_item(acc).await;
+                }
+            }
+        });
+        let collected: Vec<u64> = std::iter::from_fn(|| gen.next()).collect();
+        assert_eq!(collected, vec![6, 10, 28, 36]);
+    }
+}

@@ -1,0 +1,41 @@
+//! Minimal cooperative async runtime — the "coroutine" substrate.
+//!
+//! The paper's contribution rests on C++20 *stackless coroutines*:
+//! functions that suspend and resume with function-call-like overhead,
+//! passing control (and single events) without centralized
+//! synchronization. Rust's `async fn` compiles to exactly the same
+//! artifact — a stackless state machine resumed via [`Future::poll`] —
+//! so this module provides the scheduling substrate that C++20 leaves to
+//! the library author, built from scratch (no tokio):
+//!
+//! * [`Generator`] — pull-based coroutine with direct control transfer
+//!   (the C++20 symmetric-transfer analog; per-item cost ≈ a function
+//!   call — the Fig. 3 contender);
+//! * [`block_on`] — drive a single future to completion on the current
+//!   thread (parking when pending);
+//! * [`LocalExecutor`] — a single-threaded, run-queue based cooperative
+//!   executor: the direct analog of the paper's Fig. 1(B), where control
+//!   is transferred between coroutines without locks;
+//! * [`channel`] — single-threaded async channels for event handoff at
+//!   per-event granularity (the anti-buffer primitive);
+//! * [`sync_channel`] — a thread-safe async MPSC channel used when
+//!   coroutines hop threads;
+//! * [`yield_now`] — cooperative preemption point.
+//!
+//! Everything is intentionally small and auditable: the Fig. 3 benchmark
+//! measures this machinery, so it must not hide locks.
+
+pub mod block_on;
+pub mod channel;
+pub mod executor;
+pub mod generator;
+pub mod sync_channel;
+pub mod waker;
+pub mod yield_now;
+
+pub use block_on::block_on;
+pub use channel::{channel, Receiver, RecvError, SendError, Sender};
+pub use executor::LocalExecutor;
+pub use generator::{Generator, Yielder};
+pub use sync_channel::{sync_channel, SyncReceiver, SyncSender};
+pub use yield_now::yield_now;

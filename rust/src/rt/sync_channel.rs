@@ -1,0 +1,245 @@
+//! Cross-thread async channel: lock-free SPSC ring + waker slots.
+//!
+//! Used when a coroutine pipeline spans threads (e.g. a camera/UDP
+//! reader thread feeding a processing executor). The data path is the
+//! wait-free [`crate::sync::spsc`] ring; a mutex is touched only on the
+//! empty/full edges to park and wake the opposing side, never per event
+//! in steady state — preserving the paper's "no per-event locks"
+//! property while staying sound across threads.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Waker};
+
+use crate::sync::spsc::{spsc_ring, RingConsumer, RingProducer};
+
+/// Waker mailboxes for the two sides. Locked only when a side is about
+/// to suspend or has just crossed an empty/full edge.
+#[derive(Default)]
+struct Shared {
+    recv_waker: Mutex<Option<Waker>>,
+    send_waker: Mutex<Option<Waker>>,
+}
+
+impl Shared {
+    fn wake_recv(&self) {
+        if let Some(w) = self.recv_waker.lock().unwrap().take() {
+            w.wake();
+        }
+    }
+    fn wake_send(&self) {
+        if let Some(w) = self.send_waker.lock().unwrap().take() {
+            w.wake();
+        }
+    }
+}
+
+/// Sending half (single producer).
+pub struct SyncSender<T: Send> {
+    ring: RingProducer<T>,
+    shared: Arc<Shared>,
+}
+
+/// Receiving half (single consumer).
+pub struct SyncReceiver<T: Send> {
+    ring: RingConsumer<T>,
+    shared: Arc<Shared>,
+}
+
+/// Create a bounded cross-thread async channel with capacity `cap`
+/// (rounded up to a power of two).
+pub fn sync_channel<T: Send>(cap: usize) -> (SyncSender<T>, SyncReceiver<T>) {
+    let (p, c) = spsc_ring(cap);
+    let shared = Arc::new(Shared::default());
+    (
+        SyncSender { ring: p, shared: shared.clone() },
+        SyncReceiver { ring: c, shared },
+    )
+}
+
+impl<T: Send> SyncSender<T> {
+    /// Send an item, suspending while the ring is full.
+    /// Returns `Err(item)` if the receiver was dropped.
+    pub async fn send(&mut self, item: T) -> Result<(), T> {
+        let mut item = Some(item);
+        std::future::poll_fn(move |cx| {
+            let it = item.take().expect("polled after completion");
+            match self.try_send_inner(it) {
+                Ok(()) => Poll::Ready(Ok(())),
+                Err(TrySend::Closed(it)) => Poll::Ready(Err(it)),
+                Err(TrySend::Full(it)) => {
+                    item = Some(it);
+                    *self.shared.send_waker.lock().unwrap() = Some(cx.waker().clone());
+                    // Re-check after registering: the consumer may have
+                    // drained between our try and the registration.
+                    let it = item.take().unwrap();
+                    match self.try_send_inner(it) {
+                        Ok(()) => {
+                            self.shared.send_waker.lock().unwrap().take();
+                            Poll::Ready(Ok(()))
+                        }
+                        Err(TrySend::Closed(it)) => Poll::Ready(Err(it)),
+                        Err(TrySend::Full(it)) => {
+                            item = Some(it);
+                            Poll::Pending
+                        }
+                    }
+                }
+            }
+        })
+        .await
+    }
+
+    /// Non-suspending send attempt.
+    pub fn try_send(&mut self, item: T) -> Result<(), T> {
+        match self.try_send_inner(item) {
+            Ok(()) => Ok(()),
+            Err(TrySend::Full(i)) | Err(TrySend::Closed(i)) => Err(i),
+        }
+    }
+
+    fn try_send_inner(&mut self, item: T) -> Result<(), TrySend<T>> {
+        // Check liveness *first*: a dropped receiver drains the ring on
+        // drop, so a post-hoc "full" check would let sends silently
+        // succeed into the void.
+        if self.receiver_gone() {
+            return Err(TrySend::Closed(item));
+        }
+        match self.ring.try_push(item) {
+            Ok(()) => {
+                self.shared.wake_recv();
+                Ok(())
+            }
+            Err(item) => Err(TrySend::Full(item)),
+        }
+    }
+
+    fn receiver_gone(&self) -> bool {
+        Arc::strong_count(&self.shared) == 1
+    }
+}
+
+enum TrySend<T> {
+    Full(T),
+    Closed(T),
+}
+
+impl<T: Send> Drop for SyncSender<T> {
+    fn drop(&mut self) {
+        // Publish the close *before* waking, otherwise a receiver could
+        // wake, observe "not closed", re-park, and miss the shutdown.
+        self.ring.close();
+        self.shared.wake_recv();
+    }
+}
+
+impl<T: Send> Drop for SyncReceiver<T> {
+    fn drop(&mut self) {
+        self.shared.wake_send();
+    }
+}
+
+impl<T: Send> SyncReceiver<T> {
+    /// Receive the next item, suspending while the ring is empty.
+    /// Resolves to `None` once the sender is dropped and the ring drained.
+    pub fn recv(&mut self) -> RecvFut<'_, T> {
+        RecvFut { rx: self }
+    }
+
+    /// Non-suspending receive attempt.
+    pub fn try_recv(&mut self) -> Option<T> {
+        let item = self.ring.try_pop();
+        if item.is_some() {
+            self.shared.wake_send();
+        }
+        item
+    }
+}
+
+/// Future returned by [`SyncReceiver::recv`].
+pub struct RecvFut<'r, T: Send> {
+    rx: &'r mut SyncReceiver<T>,
+}
+
+impl<T: Send> Future for RecvFut<'_, T> {
+    type Output = Option<T>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Option<T>> {
+        let rx = &mut self.get_mut().rx;
+        if let Some(item) = rx.try_recv() {
+            return Poll::Ready(Some(item));
+        }
+        if rx.ring.is_closed() {
+            // Drain-then-close: one more pop attempt after seeing closed.
+            return Poll::Ready(rx.try_recv());
+        }
+        *rx.shared.recv_waker.lock().unwrap() = Some(cx.waker().clone());
+        // Re-check after registering to close the lost-wake window.
+        if let Some(item) = rx.try_recv() {
+            rx.shared.recv_waker.lock().unwrap().take();
+            return Poll::Ready(Some(item));
+        }
+        if rx.ring.is_closed() {
+            return Poll::Ready(rx.try_recv());
+        }
+        Poll::Pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::block_on;
+
+    #[test]
+    fn cross_thread_stream_drains_fully() {
+        let (mut tx, mut rx) = sync_channel::<u64>(16);
+        let n = 10_000u64;
+        let producer = std::thread::spawn(move || {
+            block_on(async move {
+                for i in 0..n {
+                    tx.send(i).await.unwrap();
+                }
+            });
+        });
+        let sum = block_on(async {
+            let mut sum = 0u64;
+            while let Some(v) = rx.recv().await {
+                sum += v;
+            }
+            sum
+        });
+        assert_eq!(sum, n * (n - 1) / 2);
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn recv_none_after_sender_drop() {
+        let (mut tx, mut rx) = sync_channel::<u32>(4);
+        tx.try_send(1).unwrap();
+        drop(tx);
+        assert_eq!(block_on(rx.recv()), Some(1));
+        assert_eq!(block_on(rx.recv()), None);
+    }
+
+    #[test]
+    fn send_err_after_receiver_drop() {
+        let (mut tx, rx) = sync_channel::<u32>(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        drop(rx);
+        // Ring full and receiver gone: must resolve to Err, not hang.
+        assert_eq!(block_on(tx.send(3)), Err(3));
+    }
+
+    #[test]
+    fn try_send_full_returns_item() {
+        let (mut tx, mut rx) = sync_channel::<u32>(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert_eq!(tx.try_send(3), Err(3));
+        assert_eq!(rx.try_recv(), Some(1));
+        tx.try_send(3).unwrap();
+    }
+}

@@ -1,0 +1,48 @@
+//! Cooperative preemption point.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::task::{Context, Poll};
+
+/// Suspend the current coroutine once, handing control back to the
+/// scheduler (which will resume it on the next sweep). The suspend point
+/// is exactly the paper's Fig. 1(B) control transfer.
+pub fn yield_now() -> YieldNow {
+    YieldNow { yielded: false }
+}
+
+/// Future returned by [`yield_now`].
+#[derive(Debug)]
+pub struct YieldNow {
+    yielded: bool,
+}
+
+impl Future for YieldNow {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.yielded {
+            Poll::Ready(())
+        } else {
+            self.yielded = true;
+            // Mark ourselves immediately ready so the scheduler re-polls
+            // us on its next pass, after giving other coroutines a turn.
+            cx.waker().wake_by_ref();
+            Poll::Pending
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::block_on;
+
+    #[test]
+    fn completes_after_one_suspend() {
+        block_on(async {
+            yield_now().await;
+            yield_now().await;
+        });
+    }
+}

@@ -1,0 +1,307 @@
+//! PJRT device wrapper with host↔device transfer accounting.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::aer::Event;
+
+use super::manifest::Manifest;
+
+/// Counters for traffic across the host/device boundary.
+///
+/// The paper's Fig. 4(B) reports "time spent copying memory from host to
+/// device (HtoD) as a percentage of the total runtime"; these counters
+/// are the measured equivalents. Device→host reads (fetching edge maps
+/// back) are tracked separately — the paper's benchmark leaves results
+/// on the GPU, ours verifies them, so DtoH must not pollute HtoD.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct TransferStats {
+    /// Host→device copy operations for *model inputs* (frames / event
+    /// lists) — the quantity the paper's Fig. 4(B) varies.
+    pub htod_ops: u64,
+    /// Host→device input bytes.
+    pub htod_bytes: u64,
+    /// Nanoseconds spent in host→device input copies.
+    pub htod_ns: u64,
+    /// Host→device copies of recycled LIF state (v, r). On the paper's
+    /// GPU, Norse keeps state resident; our PJRT tuple-output API forces
+    /// a symmetric round-trip, so it is accounted separately to keep the
+    /// input-transfer asymmetry measurable (DESIGN.md §Substitutions).
+    pub state_ops: u64,
+    /// Host→device state bytes.
+    pub state_bytes: u64,
+    /// Nanoseconds spent in state re-uploads.
+    pub state_ns: u64,
+    /// Device→host copy operations.
+    pub dtoh_ops: u64,
+    /// Device→host bytes.
+    pub dtoh_bytes: u64,
+    /// Nanoseconds spent in device→host copies.
+    pub dtoh_ns: u64,
+    /// Nanoseconds spent executing compiled modules.
+    pub exec_ns: u64,
+    /// Number of module executions.
+    pub executions: u64,
+}
+
+impl TransferStats {
+    /// Fresh zeroed stats.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Merge another stats block into this one.
+    pub fn merge(&mut self, o: &TransferStats) {
+        self.htod_ops += o.htod_ops;
+        self.htod_bytes += o.htod_bytes;
+        self.htod_ns += o.htod_ns;
+        self.state_ops += o.state_ops;
+        self.state_bytes += o.state_bytes;
+        self.state_ns += o.state_ns;
+        self.dtoh_ops += o.dtoh_ops;
+        self.dtoh_bytes += o.dtoh_bytes;
+        self.dtoh_ns += o.dtoh_ns;
+        self.exec_ns += o.exec_ns;
+        self.executions += o.executions;
+    }
+
+    /// HtoD time as a fraction of `total_ns`.
+    pub fn htod_fraction(&self, total_ns: u64) -> f64 {
+        if total_ns == 0 {
+            0.0
+        } else {
+            self.htod_ns as f64 / total_ns as f64
+        }
+    }
+}
+
+/// The PJRT device plus the artifacts manifest.
+pub struct Device {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+}
+
+/// A compiled module ready to execute.
+pub struct Module {
+    exe: xla::PjRtLoadedExecutable,
+    /// Export name (for errors/labels).
+    pub name: String,
+    /// Number of inputs the module expects.
+    pub arity: usize,
+}
+
+impl Device {
+    /// Open the CPU PJRT client and load the manifest from `dir`.
+    pub fn open(dir: &Path) -> Result<Device> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Device { client, manifest })
+    }
+
+    /// Open with the default artifacts directory.
+    pub fn open_default() -> Result<Device> {
+        Self::open(&super::default_artifacts_dir())
+    }
+
+    /// The manifest (geometry, module specs).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one exported module.
+    pub fn load(&self, name: &str) -> Result<Module> {
+        let spec = self.manifest.module(name)?;
+        let path = self.manifest.module_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling module {name}"))?;
+        Ok(Module { exe, name: name.to_string(), arity: spec.inputs.len() })
+    }
+
+    /// Copy an *input* literal to the device, accounting the transfer.
+    pub fn to_device(
+        &self,
+        lit: &xla::Literal,
+        stats: &mut TransferStats,
+    ) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, lit)
+            .context("host→device transfer")?;
+        stats.htod_ns += t0.elapsed().as_nanos() as u64;
+        stats.htod_ops += 1;
+        stats.htod_bytes += lit.size_bytes() as u64;
+        Ok(buf)
+    }
+
+    /// Copy a recycled *state* literal to the device (accounted apart
+    /// from inputs; see [`TransferStats::state_ops`]).
+    pub fn to_device_state(
+        &self,
+        lit: &xla::Literal,
+        stats: &mut TransferStats,
+    ) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, lit)
+            .context("host→device state transfer")?;
+        stats.state_ns += t0.elapsed().as_nanos() as u64;
+        stats.state_ops += 1;
+        stats.state_bytes += lit.size_bytes() as u64;
+        Ok(buf)
+    }
+
+    /// Execute a module on device buffers; returns the raw output buffer
+    /// (a tuple for our exports) and accounts execution time.
+    pub fn execute(
+        &self,
+        module: &Module,
+        args: &[&xla::PjRtBuffer],
+        stats: &mut TransferStats,
+    ) -> Result<xla::PjRtBuffer> {
+        if args.len() != module.arity {
+            bail!("module {} expects {} inputs, got {}", module.name, module.arity, args.len());
+        }
+        let t0 = Instant::now();
+        let mut out = module.exe.execute_b(args).with_context(|| format!("executing {}", module.name))?;
+        stats.exec_ns += t0.elapsed().as_nanos() as u64;
+        stats.executions += 1;
+        let replica = out.pop().context("no execution output")?;
+        replica.into_iter().next().context("no output buffer")
+    }
+
+    /// Read a device buffer back to host literals (decomposing the
+    /// result tuple), accounting the transfer.
+    pub fn from_device(
+        &self,
+        buf: &xla::PjRtBuffer,
+        stats: &mut TransferStats,
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let mut lit = buf.to_literal_sync().context("device→host transfer")?;
+        stats.dtoh_ns += t0.elapsed().as_nanos() as u64;
+        stats.dtoh_ops += 1;
+        let parts = lit.decompose_tuple().context("decomposing result tuple")?;
+        // NB: size_bytes() on the *tuple* literal aborts inside XLA
+        // (ByteSizeOf(TUPLE) needs a pointer size); sum the leaves.
+        stats.dtoh_bytes += parts.iter().map(|p| p.size_bytes() as u64).sum::<u64>();
+        Ok(parts)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Literal builders (host-side encode of model inputs)
+// ---------------------------------------------------------------------
+
+/// Build an `f32[h, w]` literal from a row-major frame.
+///
+/// Single-copy construction: `vec1(..).reshape(..)` would copy the
+/// 360 KB frame twice per step (EXPERIMENTS.md §Perf, L3 entry).
+pub fn frame_literal(frame: &[f32], h: usize, w: usize) -> Result<xla::Literal> {
+    if frame.len() != h * w {
+        bail!("frame has {} elements, expected {}", frame.len(), h * w);
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(frame.as_ptr() as *const u8, frame.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[h, w],
+        bytes,
+    )?)
+}
+
+/// Build the sparse input: `i32[max_events, 3]` event rows, padded with
+/// sentinel rows (`p = -1`) that the on-device scatter kernel masks out.
+/// A single literal ⇒ a single HtoD operation per frame. Events beyond
+/// `max_events` are dropped (counted in the return value).
+pub fn events_literal(events: &[Event], max_events: usize) -> Result<(xla::Literal, usize)> {
+    let mut arena = Vec::new();
+    events_literal_into(events, max_events, &mut arena)
+}
+
+/// Arena-reusing variant of [`events_literal`]: `arena` is resized and
+/// overwritten, avoiding a per-frame allocation on the hot path.
+pub fn events_literal_into(
+    events: &[Event],
+    max_events: usize,
+    arena: &mut Vec<i32>,
+) -> Result<(xla::Literal, usize)> {
+    let n = events.len().min(max_events);
+    let dropped = events.len() - n;
+    arena.clear();
+    arena.resize(max_events * 3, 0);
+    for (i, ev) in events[..n].iter().enumerate() {
+        arena[i * 3] = ev.x as i32;
+        arena[i * 3 + 1] = ev.y as i32;
+        arena[i * 3 + 2] = ev.p.is_on() as i32;
+    }
+    for i in n..max_events {
+        arena[i * 3 + 2] = -1; // sentinel: void row
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(arena.as_ptr() as *const u8, arena.len() * 4) };
+    let ev_lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[max_events, 3],
+        bytes,
+    )?;
+    Ok((ev_lit, dropped))
+}
+
+/// Read an `f32` literal into a Vec.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::Event;
+
+    #[test]
+    fn events_literal_pads_and_truncates() {
+        let events = vec![Event::on(1, 2, 0), Event::off(3, 4, 1)];
+        let (ev, dropped) = events_literal(&events, 4).unwrap();
+        assert_eq!(dropped, 0);
+        let rows = ev.to_vec::<i32>().unwrap();
+        assert_eq!(&rows[..6], &[1, 2, 1, 3, 4, 0]);
+        // Sentinel padding rows: p = -1.
+        assert_eq!(&rows[6..], &[0, 0, -1, 0, 0, -1]);
+
+        let (_, dropped) = events_literal(&events, 1).unwrap();
+        assert_eq!(dropped, 1);
+    }
+
+    #[test]
+    fn frame_literal_validates_size() {
+        assert!(frame_literal(&[0.0; 6], 2, 3).is_ok());
+        assert!(frame_literal(&[0.0; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn stats_merge_and_fraction() {
+        let mut a = TransferStats { htod_ns: 30, htod_ops: 1, ..Default::default() };
+        let b = TransferStats { htod_ns: 70, htod_ops: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.htod_ops, 3);
+        assert!((a.htod_fraction(1000) - 0.1).abs() < 1e-9);
+        assert_eq!(TransferStats::new().htod_fraction(0), 0.0);
+    }
+
+    // Device-dependent tests live in rust/tests/runtime_integration.rs
+    // (they need built artifacts).
+}

@@ -1,0 +1,227 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! exported HLO module (file, input shapes/dtypes, content hash). The
+//! runtime refuses to run against a manifest whose geometry disagrees
+//! with what the coordinator expects — catching stale artifacts at load
+//! time instead of as garbage numerics.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+
+/// Input tensor spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSpec {
+    /// Dimensions, row-major.
+    pub shape: Vec<usize>,
+    /// Dtype name as jax spells it (`"float32"`, `"int32"`).
+    pub dtype: String,
+}
+
+impl InputSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Bytes per element.
+    pub fn element_size(&self) -> Result<usize> {
+        Ok(match self.dtype.as_str() {
+            "float32" | "int32" | "uint32" => 4,
+            "float64" | "int64" | "uint64" => 8,
+            "float16" | "bfloat16" | "int16" | "uint16" => 2,
+            "int8" | "uint8" | "bool" => 1,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+
+    /// Total byte size of one tensor of this spec.
+    pub fn byte_size(&self) -> Result<usize> {
+        Ok(self.elements() * self.element_size()?)
+    }
+}
+
+/// One exported HLO module.
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    /// File name within the artifacts dir.
+    pub file: String,
+    /// Input specs, in call order.
+    pub inputs: Vec<InputSpec>,
+    /// SHA-256 of the HLO text (as hex), for staleness errors.
+    pub sha256: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Frame height (paper: 260).
+    pub height: usize,
+    /// Frame width (paper: 346).
+    pub width: usize,
+    /// Sparse event capacity per frame (paper config: 4096).
+    pub max_events: usize,
+    /// Modules by export name.
+    pub modules: BTreeMap<String, ModuleSpec>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest: invalid json")?;
+        let get_dim = |k: &str| -> Result<usize> {
+            Ok(root
+                .get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("manifest: missing {k}"))? as usize)
+        };
+        let mut modules = BTreeMap::new();
+        let mods = root
+            .get("modules")
+            .and_then(Json::as_obj)
+            .context("manifest: missing modules")?;
+        for (name, m) in mods {
+            let file = m
+                .get("file")
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest: module {name} missing file"))?
+                .to_string();
+            let mut inputs = Vec::new();
+            for inp in m
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .with_context(|| format!("manifest: module {name} missing inputs"))?
+            {
+                let shape = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("manifest: input missing shape")?
+                    .iter()
+                    .map(|d| d.as_u64().context("bad dim").map(|d| d as usize))
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = inp
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .context("manifest: input missing dtype")?
+                    .to_string();
+                inputs.push(InputSpec { shape, dtype });
+            }
+            let sha256 = m
+                .get("sha256")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string();
+            modules.insert(name.clone(), ModuleSpec { file, inputs, sha256 });
+        }
+        Ok(Manifest {
+            height: get_dim("height")?,
+            width: get_dim("width")?,
+            max_events: get_dim("max_events")?,
+            modules,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Spec for a module, or a helpful error.
+    pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
+        self.modules.get(name).with_context(|| {
+            format!(
+                "module {name} not in manifest (have: {:?}); run `make artifacts`",
+                self.modules.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of a module's HLO file.
+    pub fn module_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.module(name)?.file))
+    }
+}
+
+/// Default artifacts directory: `$AESTREAM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("AESTREAM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "height": 260, "width": 346, "max_events": 4096,
+        "modules": {
+            "dense_step": {
+                "file": "dense_step.hlo.txt",
+                "inputs": [
+                    {"shape": [260, 346], "dtype": "float32"},
+                    {"shape": [260, 346], "dtype": "float32"},
+                    {"shape": [260, 346], "dtype": "float32"}
+                ],
+                "sha256": "deadbeef", "bytes": 1
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!((m.height, m.width, m.max_events), (260, 346, 4096));
+        let spec = m.module("dense_step").unwrap();
+        assert_eq!(spec.inputs.len(), 3);
+        assert_eq!(spec.inputs[0].byte_size().unwrap(), 260 * 346 * 4);
+        assert_eq!(
+            m.module_path("dense_step").unwrap(),
+            Path::new("/tmp/a/dense_step.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_module_is_helpful() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        let err = m.module("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"height": 1}"#, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn input_spec_sizes() {
+        let s = InputSpec { shape: vec![4096, 3], dtype: "int32".into() };
+        assert_eq!(s.byte_size().unwrap(), 49152);
+        let bad = InputSpec { shape: vec![1], dtype: "complex64".into() };
+        assert!(bad.byte_size().is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!((m.height, m.width), (260, 346));
+            for name in ["dense_step", "sparse_step", "scatter_only", "lif_only"] {
+                assert!(m.module_path(name).unwrap().exists(), "missing {name}");
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! XLA/PJRT device runtime — the paper's "GPU" boundary.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`,
+//! compiles them on the PJRT CPU client, and executes them from the L3
+//! hot path with **explicit, instrumented host→device transfers**:
+//! every input literal crosses the boundary through
+//! [`Device::to_device`], which counts operations, bytes and
+//! nanoseconds into [`TransferStats`] — the measurement behind the
+//! Fig. 4(B) reproduction.
+//!
+//! Python never runs here: artifacts are plain text files on disk.
+//!
+//! * [`json`] — minimal JSON parser (no serde offline);
+//! * [`manifest`] — the artifacts contract;
+//! * [`device`] — client, module cache, transfer accounting;
+//! * [`detector`] — state-carrying edge-detector sessions (dense/sparse).
+
+pub mod detector;
+pub mod device;
+pub mod json;
+pub mod manifest;
+
+pub use detector::{DetectorSession, StepOutput, TransferMode};
+pub use device::{Device, Module, TransferStats};
+pub use manifest::{default_artifacts_dir, Manifest};

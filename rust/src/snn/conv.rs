@@ -1,0 +1,98 @@
+//! 3×3 "same" convolution with zero padding — the edge-extraction stage.
+
+/// Discrete Laplacian: responds to spatial discontinuities (edges) in the
+/// spike map and cancels on uniform regions.
+pub const LAPLACIAN_3X3: [f32; 9] = [0.0, -1.0, 0.0, -1.0, 4.0, -1.0, 0.0, -1.0, 0.0];
+
+/// 3×3 convolution over a row-major `height × width` image with zero
+/// padding ("same" output size). Kernel is row-major and applied in
+/// cross-correlation orientation (matching `jax.lax.conv`).
+pub fn conv2d_3x3(input: &[f32], width: usize, height: usize, kernel: &[f32; 9]) -> Vec<f32> {
+    assert_eq!(input.len(), width * height, "image size mismatch");
+    let mut out = vec![0.0f32; width * height];
+    if width == 0 || height == 0 {
+        return out;
+    }
+    for y in 0..height {
+        for x in 0..width {
+            let mut acc = 0.0f32;
+            for ky in 0..3usize {
+                let iy = y as isize + ky as isize - 1;
+                if iy < 0 || iy >= height as isize {
+                    continue;
+                }
+                for kx in 0..3usize {
+                    let ix = x as isize + kx as isize - 1;
+                    if ix < 0 || ix >= width as isize {
+                        continue;
+                    }
+                    acc += input[iy as usize * width + ix as usize] * kernel[ky * 3 + kx];
+                }
+            }
+            out[y * width + x] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_is_identity() {
+        let mut k = [0.0; 9];
+        k[4] = 1.0;
+        let img: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        assert_eq!(conv2d_3x3(&img, 5, 4, &k), img);
+    }
+
+    #[test]
+    fn laplacian_of_uniform_interior_is_zero() {
+        let img = vec![3.0; 6 * 6];
+        let out = conv2d_3x3(&img, 6, 6, &LAPLACIAN_3X3);
+        // Interior pixels cancel exactly.
+        for y in 1..5 {
+            for x in 1..5 {
+                assert_eq!(out[y * 6 + x], 0.0);
+            }
+        }
+        // Border pixels see missing neighbours (zero padding).
+        assert_eq!(out[0], 3.0 * 4.0 - 3.0 - 3.0);
+    }
+
+    #[test]
+    fn laplacian_highlights_step_edge() {
+        // Left half 1, right half 0: response concentrates at the edge.
+        let w = 8;
+        let mut img = vec![0.0; w * 4];
+        for y in 0..4 {
+            for x in 0..4 {
+                img[y * w + x] = 1.0;
+            }
+        }
+        let out = conv2d_3x3(&img, w, 4, &LAPLACIAN_3X3);
+        // Interior row: positive on the bright side of the edge,
+        // negative on the dark side.
+        assert!(out[w + 3] > 0.0);
+        assert!(out[w + 4] < 0.0);
+        assert_eq!(out[w + 1], 0.0); // uniform region
+    }
+
+    #[test]
+    fn offset_kernel_shifts() {
+        // Kernel with 1 at top-left: out(y,x) = in(y-1, x-1).
+        let mut k = [0.0; 9];
+        k[0] = 1.0;
+        let mut img = vec![0.0; 16];
+        img[5] = 7.0; // (y=1, x=1)
+        let out = conv2d_3x3(&img, 4, 4, &k);
+        assert_eq!(out[10], 7.0); // (y=2, x=2)
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn size_mismatch_panics() {
+        conv2d_3x3(&[0.0; 5], 2, 2, &LAPLACIAN_3X3);
+    }
+}

@@ -1,0 +1,125 @@
+//! Leaky integrate-and-fire layer with refractory period.
+//!
+//! This function *is* the specification the JAX/Pallas `lif_step` kernel
+//! must reproduce (operation order matters for float equality; keep in
+//! sync with `python/compile/kernels/ref.py`).
+
+/// Neuron parameters (shared across all pixels).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LifParams {
+    /// Membrane decay per step (`v ← v·decay`), in (0, 1].
+    pub decay: f32,
+    /// Spike threshold.
+    pub threshold: f32,
+    /// Post-spike reset voltage.
+    pub v_reset: f32,
+    /// Refractory duration in steps.
+    pub refrac_steps: u32,
+}
+
+impl Default for LifParams {
+    fn default() -> Self {
+        // Chosen to match the paper's qualitative behaviour: integrate a
+        // few frames of event input, spike on sustained edges, stay quiet
+        // for a few frames afterwards (noise suppression).
+        LifParams { decay: 0.9, threshold: 1.0, v_reset: 0.0, refrac_steps: 3 }
+    }
+}
+
+/// Per-pixel state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LifState {
+    /// Membrane voltages.
+    pub v: Vec<f32>,
+    /// Remaining refractory steps (0 = integrating).
+    pub r: Vec<u32>,
+}
+
+impl LifState {
+    /// Zeroed state for `n` neurons.
+    pub fn zeroed(n: usize) -> Self {
+        LifState { v: vec![0.0; n], r: vec![0; n] }
+    }
+}
+
+/// One LIF step over an input frame. Returns the spike map (0.0 / 1.0).
+///
+/// Refractory pixels leak but do not integrate input — matching Norse's
+/// `LIFRefrac` semantics that the paper uses.
+pub fn lif_step(params: &LifParams, state: &mut LifState, input: &[f32]) -> Vec<f32> {
+    assert_eq!(state.v.len(), input.len());
+    let mut spikes = vec![0.0f32; input.len()];
+    for i in 0..input.len() {
+        let integrating = state.r[i] == 0;
+        let mut v = state.v[i] * params.decay;
+        if integrating {
+            v += input[i];
+        }
+        let spike = integrating && v >= params.threshold;
+        if spike {
+            spikes[i] = 1.0;
+            v = params.v_reset;
+            state.r[i] = params.refrac_steps;
+        } else if state.r[i] > 0 {
+            state.r[i] -= 1;
+        }
+        state.v[i] = v;
+    }
+    spikes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spike_resets_voltage_and_sets_refractory() {
+        let p = LifParams::default();
+        let mut s = LifState::zeroed(1);
+        let spikes = lif_step(&p, &mut s, &[1.5]);
+        assert_eq!(spikes, vec![1.0]);
+        assert_eq!(s.v[0], 0.0);
+        assert_eq!(s.r[0], 3);
+    }
+
+    #[test]
+    fn refractory_counts_down() {
+        let p = LifParams::default();
+        let mut s = LifState::zeroed(1);
+        lif_step(&p, &mut s, &[1.5]);
+        for expected_r in [2, 1, 0] {
+            lif_step(&p, &mut s, &[0.0]);
+            assert_eq!(s.r[0], expected_r);
+        }
+    }
+
+    #[test]
+    fn refractory_blocks_input_but_leaks() {
+        let p = LifParams { refrac_steps: 2, ..Default::default() };
+        let mut s = LifState::zeroed(1);
+        lif_step(&p, &mut s, &[1.5]); // spike, v=0, r=2
+        let spikes = lif_step(&p, &mut s, &[100.0]); // blocked
+        assert_eq!(spikes, vec![0.0]);
+        assert_eq!(s.v[0], 0.0, "input must not integrate during refractory");
+    }
+
+    #[test]
+    fn exact_threshold_spikes() {
+        let p = LifParams::default();
+        let mut s = LifState::zeroed(1);
+        let spikes = lif_step(&p, &mut s, &[1.0]);
+        assert_eq!(spikes, vec![1.0], "v ≥ threshold is inclusive");
+    }
+
+    #[test]
+    fn decay_is_geometric() {
+        let p = LifParams { threshold: 10.0, ..Default::default() };
+        let mut s = LifState::zeroed(1);
+        lif_step(&p, &mut s, &[1.0]);
+        assert!((s.v[0] - 1.0).abs() < 1e-6);
+        lif_step(&p, &mut s, &[0.0]);
+        assert!((s.v[0] - 0.9).abs() < 1e-6);
+        lif_step(&p, &mut s, &[0.0]);
+        assert!((s.v[0] - 0.81).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,175 @@
+//! Pure-Rust spiking edge detector: the reference oracle.
+//!
+//! The paper's use case (§5) runs "a leaky integrate-and-fire (LIF)
+//! neuron layer (with an added refractory term to reduce noise) and a
+//! regular convolution" on the GPU via Norse. This module is the
+//! bit-level specification of that network, shared by:
+//!
+//! * the **JAX model** (`python/compile/model.py`) — must match this
+//!   implementation to float tolerance (checked by integration tests
+//!   through the compiled HLO);
+//! * the **CPU-baseline scenario** of the Fig. 4 coordinator;
+//! * unit tests of the L1 Pallas kernels (via golden frames).
+//!
+//! Semantics of one step over an input frame `x` (per pixel):
+//!
+//! ```text
+//! integrating = (r == 0)
+//! v ← v·decay + x·[integrating]
+//! spike = integrating ∧ (v ≥ threshold)
+//! v ← v_reset where spike
+//! r ← refrac_steps where spike, else max(r−1, 0)
+//! edges = conv2d_3×3(spike, LAPLACIAN)   (zero padding)
+//! ```
+
+pub mod conv;
+pub mod lif;
+
+use crate::aer::Resolution;
+use crate::pipeline::framer::Frame;
+
+pub use conv::{conv2d_3x3, LAPLACIAN_3X3};
+pub use lif::{LifParams, LifState};
+
+/// Full edge-detector: LIF layer + Laplacian convolution.
+#[derive(Debug, Clone)]
+pub struct EdgeDetector {
+    /// Neuron parameters.
+    pub params: LifParams,
+    /// Membrane/refractory state.
+    pub state: LifState,
+    resolution: Resolution,
+    /// 3×3 convolution kernel (row-major).
+    pub kernel: [f32; 9],
+}
+
+impl EdgeDetector {
+    /// New detector with default parameters for a sensor geometry.
+    pub fn new(resolution: Resolution) -> Self {
+        EdgeDetector {
+            params: LifParams::default(),
+            state: LifState::zeroed(resolution.pixels()),
+            resolution,
+            kernel: LAPLACIAN_3X3,
+        }
+    }
+
+    /// Sensor geometry.
+    pub fn resolution(&self) -> Resolution {
+        self.resolution
+    }
+
+    /// Process one dense input frame; returns the edge map (row-major
+    /// `H×W`). The spike map is an intermediate; expose it for tests via
+    /// [`step_full`](Self::step_full).
+    pub fn step(&mut self, frame: &[f32]) -> Vec<f32> {
+        self.step_full(frame).1
+    }
+
+    /// Process one frame, returning `(spikes, edges)`.
+    pub fn step_full(&mut self, frame: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(
+            frame.len(),
+            self.resolution.pixels(),
+            "frame size does not match detector geometry"
+        );
+        let spikes = lif::lif_step(&self.params, &mut self.state, frame);
+        let edges = conv2d_3x3(
+            &spikes,
+            self.resolution.width as usize,
+            self.resolution.height as usize,
+            &self.kernel,
+        );
+        (spikes, edges)
+    }
+
+    /// Convenience: run over a [`Frame`] from the framer.
+    pub fn step_frame(&mut self, frame: &Frame) -> Vec<f32> {
+        self.step(&frame.data)
+    }
+
+    /// Reset neuron state (new stream).
+    pub fn reset(&mut self) {
+        self.state = LifState::zeroed(self.resolution.pixels());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RES: Resolution = Resolution::new(16, 12);
+
+    fn impulse_frame(x: usize, y: usize, v: f32) -> Vec<f32> {
+        let mut f = vec![0.0; RES.pixels()];
+        f[y * 16 + x] = v;
+        f
+    }
+
+    #[test]
+    fn single_strong_input_spikes_and_makes_edges() {
+        let mut det = EdgeDetector::new(RES);
+        let (spikes, edges) = det.step_full(&impulse_frame(8, 6, 2.0));
+        assert_eq!(spikes[6 * 16 + 8], 1.0);
+        assert_eq!(spikes.iter().filter(|&&s| s != 0.0).count(), 1);
+        // Laplacian of a single spike: +4 at centre, -1 at 4-neighbours.
+        assert_eq!(edges[6 * 16 + 8], 4.0);
+        assert_eq!(edges[6 * 16 + 7], -1.0);
+        assert_eq!(edges[5 * 16 + 8], -1.0);
+    }
+
+    #[test]
+    fn refractory_blocks_immediate_re_spike() {
+        let mut det = EdgeDetector::new(RES);
+        let frame = impulse_frame(2, 2, 2.0);
+        let (s1, _) = det.step_full(&frame);
+        assert_eq!(s1[2 * 16 + 2], 1.0);
+        // Next frames: pixel is refractory (default 3 steps) despite input.
+        for step in 0..det.params.refrac_steps {
+            let (s, _) = det.step_full(&frame);
+            assert_eq!(s[2 * 16 + 2], 0.0, "should be refractory at step {step}");
+        }
+        // Refractory over: spikes again.
+        let (s, _) = det.step_full(&frame);
+        assert_eq!(s[2 * 16 + 2], 1.0);
+    }
+
+    #[test]
+    fn subthreshold_input_integrates_across_steps() {
+        let mut det = EdgeDetector::new(RES);
+        let frame = impulse_frame(1, 1, 0.6);
+        let (s1, _) = det.step_full(&frame);
+        assert_eq!(s1[17], 0.0, "0.6 < threshold: no spike");
+        // v = 0.6·decay + 0.6 ≥ 1.0 for decay 0.9 → spike on step 2.
+        let (s2, _) = det.step_full(&frame);
+        assert_eq!(s2[17], 1.0);
+    }
+
+    #[test]
+    fn leak_decays_voltage_to_zero() {
+        let mut det = EdgeDetector::new(RES);
+        det.step(&impulse_frame(1, 1, 0.9));
+        let v_after_1 = det.state.v[17];
+        assert!(v_after_1 > 0.0);
+        let zero = vec![0.0; RES.pixels()];
+        for _ in 0..100 {
+            det.step(&zero);
+        }
+        assert!(det.state.v[17] < 1e-4);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut det = EdgeDetector::new(RES);
+        det.step(&impulse_frame(3, 3, 5.0));
+        det.reset();
+        assert!(det.state.v.iter().all(|&v| v == 0.0));
+        assert!(det.state.r.iter().all(|&r| r == 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "frame size")]
+    fn wrong_frame_size_panics() {
+        EdgeDetector::new(RES).step(&[0.0; 3]);
+    }
+}

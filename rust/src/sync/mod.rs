@@ -1,0 +1,11 @@
+//! Low-level synchronization substrates built from scratch.
+//!
+//! The paper contrasts lock-based buffer handoff (Fig. 1A) with
+//! coroutine handoff (Fig. 1B) and mentions lock-free structures as the
+//! classical alternative (§2.1). This module provides the lock-free
+//! piece: a bounded single-producer/single-consumer ring buffer used by
+//! the multi-threaded coroutine engine and the `spsc` ablation engine.
+
+pub mod spsc;
+
+pub use spsc::{spsc_ring, RingConsumer, RingProducer};

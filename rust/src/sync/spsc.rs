@@ -1,0 +1,311 @@
+//! Bounded lock-free single-producer single-consumer ring buffer.
+//!
+//! Classic Lamport queue with cached indices (the FastForward
+//! optimization): producer and consumer each keep a local copy of the
+//! opposing index and only reload it (an `Acquire` load) when the cached
+//! value implies full/empty. In steady state, a push or pop touches only
+//! one shared cache line.
+//!
+//! Used by:
+//! * [`crate::engine::spsc`] — the lock-free ablation engine (§2.1's
+//!   "approaches to eliminate locks"),
+//! * [`crate::rt::sync_channel`] — the cross-thread async channel for
+//!   coroutines that hop threads.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+struct Ring<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    /// Capacity, always a power of two (mask = cap - 1).
+    mask: usize,
+    /// Next slot to write (monotonically increasing, wrapped via mask).
+    head: AtomicUsize,
+    /// Next slot to read.
+    tail: AtomicUsize,
+    /// Set when the producer handle is dropped.
+    closed: AtomicBool,
+}
+
+// SAFETY: T is sent across the channel; slots are accessed exclusively by
+// the producer (between tail..head+cap) or consumer (between tail..head),
+// coordinated by the acquire/release index protocol below.
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+/// Producer half of the ring. Not `Clone`: single producer.
+pub struct RingProducer<T> {
+    ring: Arc<Ring<T>>,
+    /// Local monotonic write index.
+    head: usize,
+    /// Cached copy of the consumer's tail.
+    cached_tail: usize,
+}
+
+/// Consumer half of the ring. Not `Clone`: single consumer.
+pub struct RingConsumer<T> {
+    ring: Arc<Ring<T>>,
+    /// Local monotonic read index.
+    tail: usize,
+    /// Cached copy of the producer's head.
+    cached_head: usize,
+}
+
+/// Create a ring with capacity `cap` (rounded up to a power of two, min 2).
+pub fn spsc_ring<T>(cap: usize) -> (RingProducer<T>, RingConsumer<T>) {
+    let cap = cap.max(2).next_power_of_two();
+    let buf: Box<[UnsafeCell<MaybeUninit<T>>]> =
+        (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+    let ring = Arc::new(Ring {
+        buf,
+        mask: cap - 1,
+        head: AtomicUsize::new(0),
+        tail: AtomicUsize::new(0),
+        closed: AtomicBool::new(false),
+    });
+    (
+        RingProducer { ring: ring.clone(), head: 0, cached_tail: 0 },
+        RingConsumer { ring, tail: 0, cached_head: 0 },
+    )
+}
+
+impl<T> RingProducer<T> {
+    /// Capacity of the ring (power of two).
+    pub fn capacity(&self) -> usize {
+        self.ring.mask + 1
+    }
+
+    /// Attempt to push; returns `Err(item)` if the ring is full.
+    #[inline]
+    pub fn try_push(&mut self, item: T) -> Result<(), T> {
+        let cap = self.ring.mask + 1;
+        if self.head - self.cached_tail == cap {
+            // Looks full with the cached tail; refresh from shared state.
+            self.cached_tail = self.ring.tail.load(Ordering::Acquire);
+            if self.head - self.cached_tail == cap {
+                return Err(item);
+            }
+        }
+        let slot = &self.ring.buf[self.head & self.ring.mask];
+        // SAFETY: slot is outside tail..head, exclusively ours to write.
+        unsafe { (*slot.get()).write(item) };
+        self.head += 1;
+        self.ring.head.store(self.head, Ordering::Release);
+        Ok(())
+    }
+
+    /// Spin/yield until the push succeeds. Returns `false` (dropping the
+    /// item) if the consumer side has been dropped.
+    pub fn push_blocking(&mut self, mut item: T) -> bool {
+        let mut spins = 0u32;
+        loop {
+            // Consumer gone (Arc count 2 → 1 means we're alone): pushing
+            // would silently discard, so bail out before writing.
+            if Arc::strong_count(&self.ring) == 1 {
+                return false;
+            }
+            match self.try_push(item) {
+                Ok(()) => return true,
+                Err(back) => {
+                    item = back;
+                    backoff(&mut spins);
+                }
+            }
+        }
+    }
+
+    /// Number of items currently buffered (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        self.head - self.ring.tail.load(Ordering::Acquire)
+    }
+
+    /// `true` if no items are buffered (approximate under concurrency).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Mark the ring closed *before* this handle is dropped — used by
+    /// wrappers that must publish the close and then wake a parked
+    /// consumer in a single, ordered sequence.
+    pub fn close(&self) {
+        self.ring.closed.store(true, Ordering::Release);
+    }
+}
+
+impl<T> Drop for RingProducer<T> {
+    fn drop(&mut self) {
+        self.ring.closed.store(true, Ordering::Release);
+    }
+}
+
+impl<T> RingConsumer<T> {
+    /// Attempt to pop; `None` if the ring is currently empty.
+    #[inline]
+    pub fn try_pop(&mut self) -> Option<T> {
+        if self.cached_head == self.tail {
+            self.cached_head = self.ring.head.load(Ordering::Acquire);
+            if self.cached_head == self.tail {
+                return None;
+            }
+        }
+        let slot = &self.ring.buf[self.tail & self.ring.mask];
+        // SAFETY: slot is inside tail..head: initialized and exclusively ours.
+        let item = unsafe { (*slot.get()).assume_init_read() };
+        self.tail += 1;
+        self.ring.tail.store(self.tail, Ordering::Release);
+        Some(item)
+    }
+
+    /// Pop, spinning/yielding while empty. `None` once the producer is
+    /// dropped *and* the ring is drained.
+    pub fn pop_blocking(&mut self) -> Option<T> {
+        let mut spins = 0u32;
+        loop {
+            if let Some(item) = self.try_pop() {
+                return Some(item);
+            }
+            if self.is_closed() {
+                // Drain anything the producer pushed before closing.
+                return self.try_pop();
+            }
+            backoff(&mut spins);
+        }
+    }
+
+    /// `true` once the producer handle has been dropped.
+    pub fn is_closed(&self) -> bool {
+        self.ring.closed.load(Ordering::Acquire)
+    }
+
+    /// Number of items currently buffered (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        self.ring.head.load(Ordering::Acquire) - self.tail
+    }
+
+    /// `true` if no items are buffered (approximate under concurrency).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Drop for RingConsumer<T> {
+    fn drop(&mut self) {
+        // Drop any items the producer left behind.
+        while self.try_pop().is_some() {}
+    }
+}
+
+/// Exponential-ish backoff: spin briefly, then yield to the OS. On the
+/// single-core CI machine yielding early matters — a pinned spinner
+/// starves the opposing side for a whole quantum otherwise.
+#[inline]
+fn backoff(spins: &mut u32) {
+    if *spins < 6 {
+        for _ in 0..(1 << *spins) {
+            std::hint::spin_loop();
+        }
+        *spins += 1;
+    } else {
+        std::thread::yield_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        let (p, _c) = spsc_ring::<u32>(100);
+        assert_eq!(p.capacity(), 128);
+        let (p, _c) = spsc_ring::<u32>(0);
+        assert_eq!(p.capacity(), 2);
+    }
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let (mut p, mut c) = spsc_ring(8);
+        for i in 0..8 {
+            p.try_push(i).unwrap();
+        }
+        assert!(p.try_push(99).is_err(), "ring should be full");
+        for i in 0..8 {
+            assert_eq!(c.try_pop(), Some(i));
+        }
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn wraparound_many_times() {
+        let (mut p, mut c) = spsc_ring(4);
+        for round in 0u64..100 {
+            for i in 0..3 {
+                p.try_push(round * 10 + i).unwrap();
+            }
+            for i in 0..3 {
+                assert_eq!(c.try_pop(), Some(round * 10 + i));
+            }
+        }
+    }
+
+    #[test]
+    fn cross_thread_transfers_everything() {
+        let (mut p, mut c) = spsc_ring(64);
+        let n = 100_000u64;
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                assert!(p.push_blocking(i));
+            }
+        });
+        let mut expected = 0u64;
+        while let Some(v) = c.pop_blocking() {
+            assert_eq!(v, expected);
+            expected += 1;
+        }
+        assert_eq!(expected, n);
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn consumer_drop_unblocks_producer() {
+        let (mut p, c) = spsc_ring(2);
+        p.try_push(1).unwrap();
+        p.try_push(2).unwrap();
+        drop(c);
+        // Full ring + dropped consumer: push_blocking must bail out.
+        assert!(!p.push_blocking(3));
+    }
+
+    #[test]
+    fn producer_drop_lets_consumer_drain_then_close() {
+        let (mut p, mut c) = spsc_ring(8);
+        p.try_push(7).unwrap();
+        drop(p);
+        assert!(c.is_closed());
+        assert_eq!(c.pop_blocking(), Some(7));
+        assert_eq!(c.pop_blocking(), None);
+    }
+
+    #[test]
+    fn drops_leftover_items() {
+        // Drop-counting payload to verify no leaks of undrained items.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        #[derive(Debug)]
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let (mut p, c) = spsc_ring(8);
+        for _ in 0..5 {
+            p.try_push(D).unwrap();
+        }
+        drop(c);
+        drop(p);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 5);
+    }
+}

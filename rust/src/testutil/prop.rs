@@ -1,0 +1,136 @@
+//! Miniature property-testing harness.
+//!
+//! The offline environment ships no `proptest`/`quickcheck`, so this
+//! module provides the 10% that covers our needs: generate N random
+//! cases from a seeded [`SplitMix64`], run the property, and on failure
+//! *shrink* vectors by bisection before reporting the minimal
+//! reproduction (seed + case index are printed so failures replay
+//! deterministically).
+
+use super::rng::SplitMix64;
+
+/// Number of cases per property (tuned for single-core CI).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `property` against `cases` inputs produced by `gen`.
+///
+/// Panics with the seed and case index on the first failing input.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut property: P)
+where
+    G: FnMut(&mut SplitMix64) -> T,
+    P: FnMut(&T) -> bool,
+    T: std::fmt::Debug,
+{
+    let base_seed = prop_seed();
+    for case in 0..cases {
+        let mut rng = SplitMix64::new(base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+        let input = gen(&mut rng);
+        if !property(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {base_seed:#x}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Run a property over random event-vector inputs with shrinking: on
+/// failure the vector is bisected to a locally minimal failing slice.
+pub fn check_vec<T, G, P>(name: &str, cases: usize, mut gen: G, mut property: P)
+where
+    G: FnMut(&mut SplitMix64) -> Vec<T>,
+    P: FnMut(&[T]) -> bool,
+    T: std::fmt::Debug + Clone,
+{
+    let base_seed = prop_seed();
+    for case in 0..cases {
+        let mut rng = SplitMix64::new(base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+        let input = gen(&mut rng);
+        if !property(&input) {
+            let minimal = shrink_vec(&input, &mut property);
+            panic!(
+                "property '{name}' failed at case {case} (seed {base_seed:#x});\n  \
+                 shrunk from {} to {} elements:\n  input = {minimal:?}",
+                input.len(),
+                minimal.len()
+            );
+        }
+    }
+}
+
+/// Bisection shrinker: repeatedly try dropping the first/second half and
+/// then individual elements while the property still fails.
+fn shrink_vec<T, P>(failing: &[T], property: &mut P) -> Vec<T>
+where
+    P: FnMut(&[T]) -> bool,
+    T: Clone,
+{
+    let mut current: Vec<T> = failing.to_vec();
+    loop {
+        let mut improved = false;
+        // Halves first (log-time progress on big inputs)…
+        for (start, end) in [(0, current.len() / 2), (current.len() / 2, current.len())] {
+            if end > start && end - start < current.len() {
+                let candidate: Vec<T> = current[start..end].to_vec();
+                if !property(&candidate) {
+                    current = candidate;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        if improved {
+            continue;
+        }
+        // …then single-element removal.
+        let mut i = 0;
+        while i < current.len() {
+            let mut candidate = current.clone();
+            candidate.remove(i);
+            if !candidate.is_empty() && !property(&candidate) {
+                current = candidate;
+                improved = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !improved {
+            return current;
+        }
+    }
+}
+
+/// Stable base seed; override with `AESTREAM_PROP_SEED` for replay.
+fn prop_seed() -> u64 {
+    std::env::var("AESTREAM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xae57_12ea)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("sum is commutative", 32, |rng| (rng.next_u64() >> 32, rng.next_u64() >> 32), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics_with_name() {
+        check("always false", 4, |rng| rng.next_u64(), |_| false);
+    }
+
+    #[test]
+    fn shrinker_minimizes_to_single_offender() {
+        // Property: no element is divisible by 1000. Failing inputs
+        // shrink to exactly one offending element.
+        let failing: Vec<u64> = vec![1, 2, 3000, 4, 5];
+        let mut prop = |v: &[u64]| v.iter().all(|&x| x % 1000 != 0);
+        let minimal = shrink_vec(&failing, &mut prop);
+        assert_eq!(minimal, vec![3000]);
+    }
+}

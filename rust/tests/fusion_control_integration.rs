@@ -1,0 +1,114 @@
+//! Integration for the §6 future-work modules: fusing two synthetic
+//! cameras onto one canvas and closing the control loop on the Rust SNN
+//! oracle (the device-backed loop lives in `examples/closed_loop.rs`).
+
+use aestream::aer::{validate_stream, Resolution};
+use aestream::camera::{CameraConfig, Scene, SyntheticCamera};
+use aestream::control::{track_step, PController, PanActuator};
+use aestream::pipeline::backpressure::{BoundedQueue, OverflowPolicy};
+use aestream::pipeline::framer::Framer;
+use aestream::pipeline::fusion::{fuse, SourceLayout};
+use aestream::snn::EdgeDetector;
+
+#[test]
+fn two_cameras_fuse_into_one_valid_canvas_stream() {
+    let res = Resolution::new(128, 96);
+    let cam = |seed: u64, scene: Scene| {
+        SyntheticCamera::new(CameraConfig {
+            resolution: res,
+            scene,
+            noise_rate_hz: 1.0,
+            frame_interval_us: 1000,
+            seed,
+        })
+        .record(50_000)
+    };
+    let left = cam(1, Scene::MovingBar { speed_px_per_s: 200.0, thickness_px: 4 });
+    let right = cam(2, Scene::RotatingDot { radius_px: 30.0, period_s: 0.4, dot_radius_px: 5.0 });
+
+    let layout = SourceLayout::side_by_side(&[res, res]);
+    let (fused, dropped) = fuse(&[&left, &right], &layout);
+    assert_eq!(dropped, 0);
+    assert_eq!(fused.len(), left.len() + right.len());
+    assert_eq!(validate_stream(&fused, layout.canvas), None);
+
+    // Frame the fused canvas: both halves must carry activity.
+    let frames = Framer::frames_of(layout.canvas, 10_000, &fused);
+    let any_left = frames.iter().any(|f| {
+        f.data[..].chunks(layout.canvas.width as usize).any(|row| {
+            row[..res.width as usize].iter().any(|&v| v != 0.0)
+        })
+    });
+    let any_right = frames.iter().any(|f| {
+        f.data[..].chunks(layout.canvas.width as usize).any(|row| {
+            row[res.width as usize..].iter().any(|&v| v != 0.0)
+        })
+    });
+    assert!(any_left && any_right, "both sources must reach the canvas");
+}
+
+#[test]
+fn control_loop_tracks_through_the_snn_oracle() {
+    // Full software loop: camera → framer → Rust LIF+conv → centroid →
+    // controller → actuator. The rotating target orbits ±60 px; engaged
+    // control must keep the mean |error| well inside that swing.
+    let res = Resolution::DAVIS_346;
+    let mut detector = EdgeDetector::new(res);
+    let controller = PController::new(6.0, 300.0);
+    let mut actuator = PanActuator::new(300.0);
+    let window = 2_000u64;
+
+    let mut errors = Vec::new();
+    for step in 0..60u64 {
+        let mut camera = SyntheticCamera::new(CameraConfig {
+            resolution: res,
+            scene: Scene::RotatingDot { radius_px: 60.0, period_s: 1.0, dot_radius_px: 8.0 },
+            noise_rate_hz: 0.0,
+            frame_interval_us: window,
+            seed: 7,
+        });
+        let mut events = Vec::new();
+        while camera.now_us() < (step + 1) * window {
+            let burst = camera.step();
+            if camera.now_us() > step * window {
+                events.extend(burst);
+            }
+        }
+        // Pan shifts the apparent scene.
+        let pan = actuator.position;
+        let shifted: Vec<_> = events
+            .into_iter()
+            .filter_map(|mut ev| {
+                let x = ev.x as f32 - pan;
+                (x >= 0.0 && x < res.width as f32).then(|| {
+                    ev.x = x as u16;
+                    ev
+                })
+            })
+            .collect();
+        let frames = Framer::frames_of(res, window, &shifted);
+        let Some(frame) = frames.last() else { continue };
+        let edges = detector.step_frame(frame);
+        if let Some(err) = track_step(&edges, res, &controller, &mut actuator, window) {
+            errors.push(err.abs());
+        }
+    }
+    assert!(errors.len() > 20, "loop must engage");
+    let mean: f32 = errors.iter().sum::<f32>() / errors.len() as f32;
+    assert!(mean < 45.0, "tracking mean |error| {mean} vs ±60 px open-loop swing");
+}
+
+#[test]
+fn backpressure_queue_feeds_framer_without_loss_below_capacity() {
+    let res = Resolution::new(64, 64);
+    let events = aestream::testutil::synthetic_events(500, 64, 64);
+    let mut q = BoundedQueue::new(1024, OverflowPolicy::Reject);
+    for ev in &events {
+        assert!(q.push(*ev));
+    }
+    assert_eq!(q.high_watermark, 500);
+    let drained = q.drain_all();
+    let frames = Framer::frames_of(res, 100, &drained);
+    let total: u64 = frames.iter().map(|f| f.event_count).sum();
+    assert_eq!(total, 500);
+}

@@ -1,0 +1,142 @@
+//! Cross-module pipeline integration: files ⇆ pipelines ⇆ network ⇆ CLI.
+
+use std::time::{Duration, Instant};
+
+use aestream::aer::{Polarity, Resolution};
+use aestream::camera::{CameraConfig, SyntheticCamera};
+use aestream::cli;
+use aestream::coordinator::{run_stream, Sink, Source};
+use aestream::formats::{self, Format};
+use aestream::net::{UdpEventReceiver, UdpEventSender};
+use aestream::pipeline::ops;
+use aestream::pipeline::Pipeline;
+use aestream::testutil::synthetic_events;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("aestream-it-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn every_format_survives_a_file_pipeline() {
+    let dir = tmpdir("fmt");
+    let events = synthetic_events(800, 346, 260);
+    let res = Resolution::DAVIS_346;
+    for format in Format::ALL {
+        let path = dir.join(format!("stream.{}", format.codec().name()));
+        formats::write_events(&path, &events, res, format).unwrap();
+        let (decoded, dres, detected) = formats::read_events_auto(&path).unwrap();
+        assert_eq!(decoded, events, "{format}");
+        assert_eq!(dres, res, "{format}");
+        assert_eq!(detected, format, "{format}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn camera_to_file_to_filtered_file() {
+    let dir = tmpdir("cam");
+    let raw_path = dir.join("recording.aedat");
+    let on_path = dir.join("on_only.csv");
+
+    // Record a synthetic stream to AEDAT.
+    let report = run_stream(
+        Source::Synthetic { config: CameraConfig::default(), duration_us: 50_000 },
+        Pipeline::new(),
+        Sink::File(raw_path.clone(), Format::Aedat),
+    )
+    .unwrap();
+    assert!(report.events_in > 100);
+
+    // Re-read, keep ON polarity, write CSV.
+    let filtered = run_stream(
+        Source::File(raw_path),
+        Pipeline::new().then(ops::PolarityFilter::keep(Polarity::On)),
+        Sink::File(on_path.clone(), Format::Text),
+    )
+    .unwrap();
+    assert!(filtered.events_out < filtered.events_in);
+
+    // CSV contains only ON events.
+    let (events, _, _) = formats::read_events_auto(&on_path).unwrap();
+    assert_eq!(events.len() as u64, filtered.events_out);
+    assert!(events.iter().all(|e| e.p.is_on()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn udp_loopback_stream_preserves_payload() {
+    let mut rx = UdpEventReceiver::bind("127.0.0.1:0").unwrap();
+    let addr = rx.local_addr().unwrap();
+    let events = synthetic_events(2000, 346, 260);
+
+    // Sender on a second thread (the normal deployment shape).
+    let sender_events = events.clone();
+    let sender = std::thread::spawn(move || {
+        let mut tx = UdpEventSender::connect(addr).unwrap();
+        tx.send(&sender_events).unwrap();
+        (tx.datagrams_sent, tx.events_sent)
+    });
+
+    let got = rx
+        .recv_until(Instant::now() + Duration::from_secs(3), events.len())
+        .unwrap();
+    let (dgrams, sent) = sender.join().unwrap();
+    assert_eq!(sent, 2000);
+    assert!(dgrams >= 6);
+    assert_eq!(got.len(), events.len());
+    for (a, b) in got.iter().zip(&events) {
+        assert_eq!((a.x, a.y, a.p), (b.x, b.y, b.p));
+    }
+}
+
+#[test]
+fn camera_stream_through_full_filter_chain() {
+    // A realistic chain: denoise → refractory → crop → downsample.
+    let res = Resolution::DAVIS_346;
+    let recording = SyntheticCamera::new(CameraConfig::default()).record(100_000);
+    let mut pipeline = Pipeline::new()
+        .then(ops::BackgroundActivityFilter::new(res, 5000))
+        .then(ops::RefractoryFilter::new(res, 500))
+        .then(ops::RoiCrop::new(20, 20, 300, 220))
+        .then(ops::Downsample::new(2));
+    let out = pipeline.process(&recording);
+    assert!(!out.is_empty(), "structured motion must survive the chain");
+    assert!(out.len() < recording.len(), "filters must thin the stream");
+    assert!(out.iter().all(|e| e.x < 150 && e.y < 110));
+}
+
+#[test]
+fn cli_parse_and_run_synthetic_to_null() {
+    let args: Vec<String> = [
+        "input", "synthetic", "--duration", "20ms", "filter", "polarity", "on", "output", "null",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    match cli::parse(&args).unwrap() {
+        cli::Command::Stream { source, pipeline, sink } => {
+            let report = run_stream(source, pipeline, sink).unwrap();
+            assert!(report.events_in > 0);
+        }
+        _ => panic!("expected stream command"),
+    }
+}
+
+#[test]
+fn engines_drive_pipeline_workloads_identically() {
+    // The coroutine engine and the sync baseline must see identical
+    // pipeline results (order preserved).
+    let events = synthetic_events(5000, 128, 128);
+    let collect = |engine_coro: bool| -> Vec<aestream::aer::Event> {
+        let mut out = Vec::new();
+        if engine_coro {
+            aestream::engine::coro::for_each(&events, |e| out.push(*e));
+        } else {
+            aestream::engine::sync::for_each(&events, |e| out.push(*e));
+        }
+        out
+    };
+    assert_eq!(collect(true), collect(false));
+}

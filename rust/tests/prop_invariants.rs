@@ -1,0 +1,208 @@
+//! Property-based invariant suites (mini-harness in `testutil::prop`).
+//!
+//! Each property generates randomized event streams / parameters and
+//! asserts a library-wide invariant: codecs are lossless, engines are
+//! equivalent, framing conserves events, filters respect their specs.
+
+use aestream::aer::checksum::reference_checksum;
+use aestream::aer::{packed, validate_stream, Event, Polarity, Resolution};
+use aestream::engine::EngineKind;
+use aestream::formats::{EventCodec, Format};
+use aestream::net::spif;
+use aestream::pipeline::framer::Framer;
+use aestream::pipeline::ops;
+use aestream::pipeline::{EventTransform, Pipeline};
+#[allow(unused_imports)]
+use aestream::pipeline::framer::Frame;
+use aestream::testutil::prop::{check, check_vec};
+use aestream::testutil::SplitMix64;
+
+/// Random well-formed event stream: sorted timestamps, in-bounds coords.
+fn gen_stream(rng: &mut SplitMix64, max_len: usize, res: Resolution) -> Vec<Event> {
+    let len = rng.next_below(max_len as u64 + 1) as usize;
+    let mut t = 0u64;
+    (0..len)
+        .map(|_| {
+            t += rng.next_below(50);
+            Event {
+                t,
+                x: rng.next_below(res.width as u64) as u16,
+                y: rng.next_below(res.height as u64) as u16,
+                p: Polarity::from_bool(rng.next_below(2) == 1),
+            }
+        })
+        .collect()
+}
+
+const RES: Resolution = Resolution::DAVIS_346;
+
+#[test]
+fn prop_all_codecs_roundtrip_losslessly() {
+    for format in Format::ALL {
+        check_vec(
+            &format!("codec {format} roundtrip"),
+            24,
+            |rng| gen_stream(rng, 600, RES),
+            |events| {
+                let codec = format.codec();
+                let mut buf = Vec::new();
+                codec.encode(events, RES, &mut buf).unwrap();
+                match codec.decode(&mut &buf[..]) {
+                    Ok((decoded, res)) => decoded == events && res == RES,
+                    Err(_) => false,
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_packed_encoding_is_bijective() {
+    check_vec(
+        "packed 64-bit roundtrip",
+        48,
+        |rng| gen_stream(rng, 400, RES),
+        |events| packed::unpack_slice(&packed::pack_slice(events)) == *events,
+    );
+}
+
+#[test]
+fn prop_all_engines_agree_with_sync() {
+    check_vec(
+        "engine equivalence",
+        12,
+        |rng| gen_stream(rng, 3000, RES),
+        |events| {
+            let expected = reference_checksum(events);
+            [
+                EngineKind::Threaded { buffer_size: 64, workers: 2 },
+                EngineKind::Threaded { buffer_size: 1024, workers: 4 },
+                EngineKind::Coro,
+                EngineKind::CoroChannel { channel_capacity: 1 },
+                EngineKind::CoroChannel { channel_capacity: 128 },
+                EngineKind::Spsc { ring_capacity: 256 },
+            ]
+            .into_iter()
+            .all(|kind| kind.run_checksum(events) == expected)
+        },
+    );
+}
+
+#[test]
+fn prop_framer_conserves_events_and_windows_nest() {
+    check(
+        "framer conservation",
+        24,
+        |rng| {
+            let events = gen_stream(rng, 2000, RES);
+            let window = 1 + rng.next_below(5000);
+            (events, window)
+        },
+        |(events, window)| {
+            let frames = Framer::frames_of(RES, *window, events);
+            let total: u64 = frames.iter().map(|f| f.event_count).sum();
+            let windows_ok = frames.iter().all(|f| {
+                f.t_end - f.t_start == *window && f.t_start % *window == 0
+            });
+            // Frames must be in increasing window order.
+            let ordered = frames.windows(2).all(|w| w[0].t_start < w[1].t_start);
+            total == events.len() as u64 && windows_ok && ordered
+        },
+    );
+}
+
+#[test]
+fn prop_spif_words_preserve_xyp() {
+    check_vec(
+        "spif word roundtrip",
+        48,
+        |rng| gen_stream(rng, 400, Resolution::PROPHESEE_GEN4),
+        |events| {
+            let mut out = Vec::new();
+            for d in spif::encode_datagrams(events) {
+                out.extend(spif::decode_datagram(&d, 0).unwrap());
+            }
+            out.len() == events.len()
+                && out
+                    .iter()
+                    .zip(events)
+                    .all(|(a, b)| (a.x, a.y, a.p) == (b.x, b.y, b.p))
+        },
+    );
+}
+
+#[test]
+fn prop_refractory_output_respects_period() {
+    check(
+        "refractory spacing",
+        24,
+        |rng| {
+            let events = gen_stream(rng, 1500, RES);
+            let period = 1 + rng.next_below(2000);
+            (events, period)
+        },
+        |(events, period)| {
+            let mut last: std::collections::HashMap<(u16, u16), u64> = Default::default();
+            let mut f = ops::RefractoryFilter::new(RES, *period);
+            events.iter().all(|ev| match f.apply(*ev) {
+                Some(out) => {
+                    let ok = match last.get(&(out.x, out.y)) {
+                        Some(&prev) => out.t >= prev + *period,
+                        None => true,
+                    };
+                    last.insert((out.x, out.y), out.t);
+                    ok
+                }
+                None => true,
+            })
+        },
+    );
+}
+
+
+#[test]
+fn prop_crop_then_bounds() {
+    check_vec(
+        "crop bounds + re-origin",
+        32,
+        |rng| gen_stream(rng, 800, RES),
+        |events| {
+            let mut crop = ops::RoiCrop::new(40, 30, 100, 80);
+            events.iter().all(|ev| match crop.apply(*ev) {
+                Some(out) => out.x < 100 && out.y < 80,
+                None => {
+                    !(ev.x >= 40 && ev.x < 140 && ev.y >= 30 && ev.y < 110)
+                }
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_pipeline_output_is_subset_in_order() {
+    check_vec(
+        "pipeline subset/order",
+        24,
+        |rng| gen_stream(rng, 800, RES),
+        |events| {
+            let mut p = Pipeline::new()
+                .then(ops::PolarityFilter::keep(Polarity::On))
+                .then(ops::Downsample::new(2))
+                .then(ops::RoiCrop::new(0, 0, 80, 80));
+            let out = p.process(events);
+            // Timestamps must be a subsequence of the input's.
+            let mut it = events.iter();
+            out.iter().all(|o| it.any(|e| e.t == o.t))
+        },
+    );
+}
+
+#[test]
+fn prop_generated_streams_are_valid() {
+    check_vec(
+        "generator sanity",
+        24,
+        |rng| gen_stream(rng, 1000, RES),
+        |events| validate_stream(events, RES).is_none(),
+    );
+}

@@ -1,0 +1,165 @@
+//! Failure injection & robustness: hostile inputs must error, never
+//! panic, hang, or return corrupt streams silently.
+
+use aestream::aer::Resolution;
+use aestream::formats::{detect_format, EventCodec, Format};
+use aestream::net::spif;
+use aestream::runtime::json::Json;
+use aestream::testutil::prop::check;
+use aestream::testutil::{synthetic_events, SplitMix64};
+
+/// Random bytes into every decoder: must return Ok or Err, never panic.
+#[test]
+fn fuzz_codecs_on_random_bytes() {
+    for format in Format::ALL {
+        check(
+            &format!("{format} decoder survives garbage"),
+            64,
+            |rng: &mut SplitMix64| {
+                let len = rng.next_below(512) as usize;
+                (0..len).map(|_| rng.next_u64() as u8).collect::<Vec<u8>>()
+            },
+            |bytes| {
+                let codec = format.codec();
+                // Any outcome but a panic is acceptable.
+                let _ = codec.decode(&mut &bytes[..]);
+                true
+            },
+        );
+    }
+}
+
+/// Bit-flip a valid encoding: decode must not panic, and when it
+/// succeeds the events must still be within sane bounds for the format.
+#[test]
+fn fuzz_codecs_on_bitflipped_valid_streams() {
+    let events = synthetic_events(200, 128, 128);
+    let res = Resolution::DVS_128;
+    for format in Format::ALL {
+        let codec = format.codec();
+        let mut clean = Vec::new();
+        codec.encode(&events, res, &mut clean).unwrap();
+        check(
+            &format!("{format} decoder survives bit flips"),
+            48,
+            |rng: &mut SplitMix64| {
+                let mut corrupted = clean.clone();
+                for _ in 0..4 {
+                    let pos = rng.next_below(corrupted.len() as u64) as usize;
+                    let bit = rng.next_below(8) as u8;
+                    corrupted[pos] ^= 1 << bit;
+                }
+                corrupted
+            },
+            |bytes| {
+                let _ = format.codec().decode(&mut &bytes[..]);
+                true
+            },
+        );
+    }
+}
+
+/// Truncation at every length of a small valid file: no panics.
+#[test]
+fn codecs_survive_all_truncations() {
+    let events = synthetic_events(20, 64, 64);
+    let res = Resolution::new(64, 64);
+    for format in Format::ALL {
+        let codec = format.codec();
+        let mut full = Vec::new();
+        codec.encode(&events, res, &mut full).unwrap();
+        for cut in 0..full.len() {
+            let _ = codec.decode(&mut &full[..cut]);
+        }
+    }
+}
+
+/// Format detection never misidentifies another codec's output.
+#[test]
+fn detection_is_unambiguous_across_formats() {
+    let events = synthetic_events(100, 64, 64);
+    let res = Resolution::new(64, 64);
+    for format in Format::ALL {
+        let mut buf = Vec::new();
+        format.codec().encode(&events, res, &mut buf).unwrap();
+        let sniffed = detect_format(&buf[..buf.len().min(64)]);
+        assert_eq!(sniffed, Some(format));
+    }
+}
+
+/// SPIF decoding of arbitrary word-aligned garbage yields in-range
+/// coordinates (the receiver feeds them straight into pipelines).
+#[test]
+fn spif_garbage_words_stay_in_range() {
+    check(
+        "spif word range",
+        64,
+        |rng: &mut SplitMix64| {
+            (0..64).flat_map(|_| (rng.next_u64() as u32).to_le_bytes()).collect::<Vec<u8>>()
+        },
+        |payload| {
+            let events = spif::decode_datagram(payload, 0).unwrap();
+            events.iter().all(|e| e.x <= 0xFFFF && e.y <= 0x7FFF)
+        },
+    );
+}
+
+/// JSON parser: arbitrary input never panics; valid-prefix slicing of a
+/// real manifest errors cleanly.
+#[test]
+fn json_parser_robustness() {
+    check(
+        "json garbage",
+        64,
+        |rng: &mut SplitMix64| {
+            let len = rng.next_below(128) as usize;
+            (0..len)
+                .map(|_| (rng.next_below(94) + 32) as u8 as char)
+                .collect::<String>()
+        },
+        |src| {
+            let _ = Json::parse(src);
+            true
+        },
+    );
+    let manifest = r#"{"height": 260, "modules": {"a": {"file": "x"}}}"#;
+    for cut in 0..manifest.len() {
+        let _ = Json::parse(&manifest[..cut]);
+    }
+}
+
+/// Executor under churn: many short-lived coroutines with interleaved
+/// channels complete exactly once each.
+#[test]
+fn executor_survives_task_churn() {
+    use aestream::rt::{channel, LocalExecutor};
+    use std::cell::Cell;
+    let finished = Cell::new(0u32);
+    let finished_ref = &finished;
+    let ex = LocalExecutor::new();
+    let mut receivers = Vec::new();
+    for i in 0..50u64 {
+        let (tx, rx) = channel::<u64>(2);
+        receivers.push(rx);
+        ex.spawn(async move {
+            for k in 0..10 {
+                if tx.send(i * 10 + k).await.is_err() {
+                    return;
+                }
+            }
+        });
+    }
+    for mut rx in receivers {
+        ex.spawn(async move {
+            let mut n = 0;
+            while rx.recv().await.is_some() {
+                n += 1;
+            }
+            assert_eq!(n, 10);
+            finished_ref.set(finished_ref.get() + 1);
+        });
+    }
+    let completed = ex.run();
+    assert_eq!(completed, 100);
+    assert_eq!(finished.get(), 50);
+}

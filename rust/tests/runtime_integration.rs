@@ -1,0 +1,207 @@
+//! Runtime integration: AOT artifacts × PJRT device × Rust oracle.
+//!
+//! These tests require `make artifacts` to have run (they skip politely
+//! otherwise) and validate the full cross-language contract:
+//!
+//! * the HLO `scatter_only` module equals the Rust framer on real events;
+//! * the HLO `lif_only` module equals `snn::lif` bit-for-bit-ish;
+//! * the dense and sparse sessions track the pure-Rust `EdgeDetector`
+//!   over multi-frame streams (state feedback through the device);
+//! * dense and sparse sessions agree with each other;
+//! * transfer accounting observes the documented byte asymmetry.
+
+use aestream::aer::Resolution;
+use aestream::camera;
+use aestream::pipeline::framer::Framer;
+use aestream::runtime::{
+    default_artifacts_dir, DetectorSession, Device, TransferMode, TransferStats,
+};
+use aestream::snn::EdgeDetector;
+use aestream::testutil::synthetic_events;
+
+fn device_or_skip() -> Option<&'static Device> {
+    // One PJRT client per test process, created once and never
+    // destroyed: cycling TfrtCpuClient create/destroy per test
+    // intermittently segfaults inside the XLA runtime (its background
+    // threads outlive the destructor). The CPU client is internally
+    // thread-safe; tests only need shared access.
+    struct Shared(Option<Device>);
+    // SAFETY: the PJRT CPU client is internally synchronized; the Rc
+    // handles inside are only cloned/dropped under the test harness's
+    // single-threaded schedule (and the static is never dropped).
+    unsafe impl Send for Shared {}
+    unsafe impl Sync for Shared {}
+    static DEVICE: std::sync::OnceLock<Shared> = std::sync::OnceLock::new();
+    DEVICE
+        .get_or_init(|| {
+            let dir = default_artifacts_dir();
+            if !dir.join("manifest.json").exists() {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return Shared(None);
+            }
+            Shared(Some(Device::open(&dir).expect("device open")))
+        })
+        .0
+        .as_ref()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    let mut worst = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst <= tol, "{what}: max abs diff {worst} > {tol}");
+}
+
+#[test]
+fn scatter_module_matches_rust_framer() {
+    let Some(device) = device_or_skip() else { return };
+    let m = device.manifest();
+    let res = Resolution::new(m.width as u16, m.height as u16);
+    let module = device.load("scatter_only").expect("load scatter_only");
+    let mut stats = TransferStats::new();
+
+    let events = synthetic_events(3000, res.width, res.height);
+    let (lit, dropped) =
+        aestream::runtime::device::events_literal(&events, m.max_events).unwrap();
+    assert_eq!(dropped, 0);
+    let buf = device.to_device(&lit, &mut stats).unwrap();
+    let out = device.execute(&module, &[&buf], &mut stats).unwrap();
+    let parts = device.from_device(&out, &mut stats).unwrap();
+    assert_eq!(parts.len(), 1);
+    let frame_dev = parts[0].to_vec::<f32>().unwrap();
+
+    // Rust oracle: bin all events into one frame.
+    let mut frame = aestream::pipeline::framer::Frame::zeroed(res, 0, u64::MAX);
+    for ev in &events {
+        frame.accumulate(ev);
+    }
+    assert_close(&frame_dev, &frame.data, 0.0, "scatter vs framer");
+    assert_eq!(stats.htod_ops, 1);
+    assert_eq!(stats.htod_bytes, (m.max_events * 12) as u64);
+}
+
+#[test]
+fn lif_module_matches_rust_lif() {
+    let Some(device) = device_or_skip() else { return };
+    let m = device.manifest();
+    let n = m.width * m.height;
+    let module = device.load("lif_only").expect("load lif_only");
+    let mut stats = TransferStats::new();
+
+    // Deterministic pseudo-random input, voltage, refractory planes.
+    let mut rng = aestream::testutil::SplitMix64::new(99);
+    let x: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32 * 2.0).collect();
+    let v: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32).collect();
+    let r: Vec<f32> = (0..n).map(|_| (rng.next_below(4)) as f32).collect();
+
+    let mk = |d: &[f32]| aestream::runtime::device::frame_literal(d, m.height, m.width).unwrap();
+    let bufs = [
+        device.to_device(&mk(&x), &mut stats).unwrap(),
+        device.to_device(&mk(&v), &mut stats).unwrap(),
+        device.to_device(&mk(&r), &mut stats).unwrap(),
+    ];
+    let out = device
+        .execute(&module, &[&bufs[0], &bufs[1], &bufs[2]], &mut stats)
+        .unwrap();
+    let parts = device.from_device(&out, &mut stats).unwrap();
+    assert_eq!(parts.len(), 3);
+    let (s_dev, v_dev, r_dev) = (
+        parts[0].to_vec::<f32>().unwrap(),
+        parts[1].to_vec::<f32>().unwrap(),
+        parts[2].to_vec::<f32>().unwrap(),
+    );
+
+    // Rust oracle.
+    let params = aestream::snn::LifParams::default();
+    let mut state = aestream::snn::LifState {
+        v: v.clone(),
+        r: r.iter().map(|&f| f as u32).collect(),
+    };
+    let spikes = aestream::snn::lif::lif_step(&params, &mut state, &x);
+
+    assert_close(&s_dev, &spikes, 0.0, "lif spikes");
+    assert_close(&v_dev, &state.v, 1e-5, "lif voltage");
+    let r_rust: Vec<f32> = state.r.iter().map(|&u| u as f32).collect();
+    assert_close(&r_dev, &r_rust, 0.0, "lif refractory");
+}
+
+#[test]
+fn dense_session_tracks_rust_oracle_over_stream() {
+    let Some(device) = device_or_skip() else { return };
+    let m = device.manifest();
+    let res = Resolution::new(m.width as u16, m.height as u16);
+
+    let recording = camera::paper_recording(30_000, 5); // 30 ms
+    let frames = Framer::frames_of(res, 1000, &recording);
+    assert!(frames.len() >= 10, "need a real stream, got {}", frames.len());
+
+    let mut session = DetectorSession::new(&device, TransferMode::Dense).unwrap();
+    let mut oracle = EdgeDetector::new(res);
+    for frame in frames.iter().take(15) {
+        let out = session.step_dense(&frame.data).unwrap();
+        let (spikes, edges) = oracle.step_full(&frame.data);
+        assert_close(&out.spikes, &spikes, 0.0, "spikes");
+        assert_close(&out.edges, &edges, 1e-4, "edges");
+    }
+}
+
+#[test]
+fn sparse_session_equals_dense_session() {
+    let Some(device) = device_or_skip() else { return };
+    let m = device.manifest();
+    let res = Resolution::new(m.width as u16, m.height as u16);
+
+    let recording = camera::paper_recording(20_000, 9);
+    let frames = Framer::frames_of(res, 1000, &recording);
+
+    let mut dense = DetectorSession::new(&device, TransferMode::Dense).unwrap();
+    let mut sparse = DetectorSession::new(&device, TransferMode::Sparse).unwrap();
+
+    let mut window_events = Vec::new();
+    let mut idx = 0usize;
+    for frame in frames.iter().take(10) {
+        // Reconstruct the window's raw events for the sparse path.
+        window_events.clear();
+        while idx < recording.len() && recording[idx].t < frame.t_end {
+            if recording[idx].t >= frame.t_start {
+                window_events.push(recording[idx]);
+            }
+            idx += 1;
+        }
+        let d = dense.step_dense(&frame.data).unwrap();
+        let s = sparse.step_sparse(&window_events).unwrap();
+        assert_eq!(s.dropped_events, 0);
+        assert_close(&d.spikes, &s.spikes, 0.0, "dense vs sparse spikes");
+        assert_close(&d.edges, &s.edges, 1e-4, "dense vs sparse edges");
+    }
+
+    // The documented byte asymmetry: dense input bytes ≫ sparse.
+    assert!(
+        dense.stats.htod_bytes > 5 * sparse.stats.htod_bytes,
+        "dense {} vs sparse {} input bytes",
+        dense.stats.htod_bytes,
+        sparse.stats.htod_bytes
+    );
+    // Both modes are one HtoD input op per frame.
+    assert_eq!(dense.stats.htod_ops, sparse.stats.htod_ops);
+}
+
+#[test]
+fn sparse_session_counts_dropped_events() {
+    let Some(device) = device_or_skip() else { return };
+    let m = device.manifest();
+    let mut session = DetectorSession::new(&device, TransferMode::Sparse).unwrap();
+    let too_many = synthetic_events(m.max_events + 500, m.width as u16, m.height as u16);
+    let out = session.step_sparse(&too_many).unwrap();
+    assert_eq!(out.dropped_events, 500);
+}
+
+#[test]
+fn manifest_geometry_matches_paper() {
+    let Some(device) = device_or_skip() else { return };
+    let m = device.manifest();
+    assert_eq!((m.height, m.width), (260, 346), "paper's DAVIS346 geometry");
+    assert!(m.max_events >= 1024);
+}
