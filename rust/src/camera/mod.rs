@@ -73,6 +73,11 @@ impl SyntheticCamera {
         self.now_us
     }
 
+    /// Sensor geometry of this camera.
+    pub fn resolution(&self) -> Resolution {
+        self.config.resolution
+    }
+
     /// Advance one scene frame and return the events it generated,
     /// sorted by timestamp.
     pub fn step(&mut self) -> Vec<Event> {

@@ -19,15 +19,15 @@ use anyhow::{bail, Context, Result};
 
 use crate::aer::{Polarity, Resolution};
 use crate::camera::CameraConfig;
-use crate::coordinator::stream::{Sink, Source};
+use crate::coordinator::stream::{Sink, Source, StreamConfig, StreamDriver};
 use crate::formats::Format;
 use crate::pipeline::ops;
 use crate::pipeline::Pipeline;
 
 /// A parsed CLI invocation.
 pub enum Command {
-    /// `input … [filter …] output …`
-    Stream { source: Source, pipeline: Pipeline, sink: Sink },
+    /// `input … [filter …] output … [--chunk N] [--sync]`
+    Stream { source: Source, pipeline: Pipeline, sink: Sink, config: StreamConfig },
     /// Run the four Fig. 4 scenarios.
     Scenarios {
         /// Synthetic recording length (µs).
@@ -194,10 +194,25 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
         }
         other => bail!("unknown output kind {other:?} (file|udp|stdout|null|frames|view)"),
     };
-    if let Some(extra) = toks.next() {
-        bail!("unexpected trailing argument {extra:?}");
+    // ---- streaming options
+    let mut config = StreamConfig::default();
+    while let Some(tok) = toks.next() {
+        match tok {
+            "--chunk" => {
+                config.chunk_size = toks
+                    .next()
+                    .context("--chunk needs an event count")?
+                    .parse()
+                    .context("bad --chunk")?;
+                if config.chunk_size == 0 {
+                    bail!("--chunk must be at least 1");
+                }
+            }
+            "--sync" => config.driver = StreamDriver::Sync,
+            extra => bail!("unexpected trailing argument {extra:?}"),
+        }
     }
-    Ok(Command::Stream { source, pipeline, sink })
+    Ok(Command::Stream { source, pipeline, sink, config })
 }
 
 /// Parse `"500ms"`, `"2s"`, `"1500us"`, or a bare number of seconds.
@@ -226,9 +241,14 @@ USAGE:
                     refractory US | denoise US | flip-x | flip-y>]...
            output <file PATH | udp ADDR | stdout | null | frames WINDOW_US |
                    view WINDOW_US>
+           [--chunk EVENTS] [--sync]
   aestream scenarios [--duration D] [--time-scale X]
   aestream table1
   aestream help
+
+Streams run incrementally (O(chunk) memory) on the coroutine driver;
+--chunk sets the batch size (default 4096) and --sync selects the
+synchronous baseline driver instead.
 
 EXAMPLES (paper Fig. 2B):
   aestream input file recording.aedat output udp 10.0.0.1:3333
@@ -282,6 +302,30 @@ mod tests {
             }
             _ => panic!("wrong parse"),
         }
+    }
+
+    #[test]
+    fn parses_streaming_flags() {
+        let cmd = parse(&sv(&[
+            "input", "synthetic", "output", "null", "--chunk", "512", "--sync",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { config, .. } => {
+                assert_eq!(config.chunk_size, 512);
+                assert_eq!(config.driver, StreamDriver::Sync);
+            }
+            _ => panic!("wrong parse"),
+        }
+        // Defaults: coroutine driver, 4096-event chunks.
+        match parse(&sv(&["input", "synthetic", "output", "null"])).unwrap() {
+            Command::Stream { config, .. } => {
+                assert_eq!(config.chunk_size, 4096);
+                assert_ne!(config.driver, StreamDriver::Sync);
+            }
+            _ => panic!("wrong parse"),
+        }
+        assert!(parse(&sv(&["input", "synthetic", "output", "null", "--chunk", "0"])).is_err());
     }
 
     #[test]

@@ -12,5 +12,7 @@
 pub mod scenarios;
 pub mod stream;
 
-pub use scenarios::{run_scenario, FeedMode, ScenarioConfig, ScenarioReport};
-pub use stream::{run_stream, Sink, Source, StreamReport};
+pub use scenarios::{run_scenario, run_scenario_source, FeedMode, ScenarioConfig, ScenarioReport};
+pub use stream::{
+    run_stream, run_stream_with, Sink, Source, StreamConfig, StreamDriver, StreamReport,
+};

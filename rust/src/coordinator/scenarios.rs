@@ -31,6 +31,11 @@ use anyhow::Result;
 use crate::aer::Event;
 use crate::rt::{yield_now, LocalExecutor};
 use crate::runtime::{Device, DetectorSession, TransferMode, TransferStats};
+use crate::stream::{EventSource, SliceSource};
+
+/// Events per [`EventSource`] batch when replaying a RAM-cached
+/// recording through [`run_scenario`].
+const REPLAY_CHUNK: usize = 4096;
 
 /// How events travel from the paced producer to the device loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -163,10 +168,23 @@ fn pace(start: Instant, t_us: u64, scale: f64) {
     }
 }
 
-/// Run one scenario over a recording.
+/// Run one scenario over a RAM-cached recording (borrowed, chunked —
+/// no copy of the recording is made).
 pub fn run_scenario(
     device: &Device,
     recording: &[Event],
+    cfg: &ScenarioConfig,
+) -> Result<ScenarioReport> {
+    let mut source = SliceSource::new(recording, REPLAY_CHUNK);
+    run_scenario_source(device, &mut source, cfg)
+}
+
+/// Run one scenario over any [`EventSource`] — files, UDP, synthetic
+/// cameras — without materializing the stream; the producer pulls
+/// bounded batches and paces individual events per their timestamps.
+pub fn run_scenario_source(
+    device: &Device,
+    source: &mut dyn EventSource,
     cfg: &ScenarioConfig,
 ) -> Result<ScenarioReport> {
     let mut session =
@@ -176,9 +194,9 @@ pub fn run_scenario(
 
     let report = match cfg.feed {
         FeedMode::Threaded { buffer_size } => {
-            run_threaded(&mut session, recording, cfg, buffer_size, h, w, cap)?
+            run_threaded(&mut session, source, cfg, buffer_size, h, w, cap)?
         }
-        FeedMode::Coroutine => run_coro(&mut session, recording, cfg, h, w, cap)?,
+        FeedMode::Coroutine => run_coro(&mut session, source, cfg, h, w, cap)?,
     };
     Ok(report)
 }
@@ -191,11 +209,15 @@ struct ThreadShared {
     events: Mutex<Vec<Event>>,
     prepare_ns: std::sync::atomic::AtomicU64,
     done: AtomicBool,
+    /// Consumer → producer cancellation: set on a device error so a
+    /// live/endless source stops streaming instead of growing the
+    /// shared buffer unboundedly while the scope joins.
+    stop: AtomicBool,
 }
 
 fn run_threaded(
     session: &mut DetectorSession,
-    recording: &[Event],
+    source: &mut dyn EventSource,
     cfg: &ScenarioConfig,
     buffer_size: usize,
     h: usize,
@@ -207,26 +229,37 @@ fn run_threaded(
         events: Mutex::new(Vec::new()),
         prepare_ns: std::sync::atomic::AtomicU64::new(0),
         done: AtomicBool::new(false),
+        stop: AtomicBool::new(false),
     };
     let dense = cfg.transfer == TransferMode::Dense;
     let t_start = Instant::now();
 
     let report = std::thread::scope(|scope| -> Result<ScenarioReport> {
         // ---------------------------------------------------- producer
-        scope.spawn(|| {
-            let mut buffer = Vec::with_capacity(buffer_size);
-            for ev in recording {
-                buffer.push(*ev);
-                if buffer.len() == buffer_size {
-                    flush_buffer(&shared, &buffer, dense, w);
-                    buffer.clear();
+        let shared_ref = &shared;
+        let producer = scope.spawn(move || {
+            let result = (|| -> Result<()> {
+                let mut buffer = Vec::with_capacity(buffer_size);
+                while let Some(batch) = source.next_batch()? {
+                    if shared_ref.stop.load(Ordering::Acquire) {
+                        break; // consumer died; stop streaming
+                    }
+                    for ev in batch {
+                        buffer.push(ev);
+                        if buffer.len() == buffer_size {
+                            flush_buffer(shared_ref, &buffer, dense, w);
+                            buffer.clear();
+                        }
+                        pace(t_start, ev.t, cfg.time_scale);
+                    }
                 }
-                pace(t_start, ev.t, cfg.time_scale);
-            }
-            if !buffer.is_empty() {
-                flush_buffer(&shared, &buffer, dense, w);
-            }
-            shared.done.store(true, Ordering::Release);
+                if !buffer.is_empty() {
+                    flush_buffer(shared_ref, &buffer, dense, w);
+                }
+                Ok(())
+            })();
+            shared_ref.done.store(true, Ordering::Release);
+            result
         });
 
         // ---------------------------------------------------- consumer
@@ -247,7 +280,13 @@ fn run_threaded(
                 };
                 match grabbed {
                     Some((frame, n)) => {
-                        let out = session.step_dense(&frame)?;
+                        let out = match session.step_dense(&frame) {
+                            Ok(out) => out,
+                            Err(e) => {
+                                shared.stop.store(true, Ordering::Release);
+                                return Err(e);
+                            }
+                        };
                         frames += 1;
                         events += n;
                         dropped += out.dropped_events as u64;
@@ -273,7 +312,13 @@ fn run_threaded(
                 };
                 match grabbed {
                     Some(evs) => {
-                        let out = session.step_sparse(&evs)?;
+                        let out = match session.step_sparse(&evs) {
+                            Ok(out) => out,
+                            Err(e) => {
+                                shared.stop.store(true, Ordering::Release);
+                                return Err(e);
+                            }
+                        };
                         frames += 1;
                         events += evs.len() as u64;
                         dropped += out.dropped_events as u64;
@@ -283,6 +328,7 @@ fn run_threaded(
                 }
             }
         }
+        producer.join().expect("producer panicked")?;
         Ok(ScenarioReport {
             label: cfg.label(),
             frames,
@@ -316,7 +362,7 @@ fn flush_buffer(shared: &ThreadShared, buffer: &[Event], dense: bool, w: usize) 
 
 fn run_coro(
     session: &mut DetectorSession,
-    recording: &[Event],
+    source: &mut dyn EventSource,
     cfg: &ScenarioConfig,
     h: usize,
     w: usize,
@@ -329,7 +375,11 @@ fn run_coro(
     let acc_frame = RefCell::new((vec![0f32; h * w], 0u64));
     let acc_events: RefCell<Vec<Event>> = RefCell::new(Vec::new());
     let producer_done = std::cell::Cell::new(false);
+    // Consumer → producer cancellation (device error with a possibly
+    // endless source: stop accumulating).
+    let consumer_dead = std::cell::Cell::new(false);
     let prepare_ns = std::cell::Cell::new(0u64);
+    let source_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
     let session = RefCell::new(session);
     let result: RefCell<Option<Result<(u64, u64, u64)>>> = RefCell::new(None);
 
@@ -337,25 +387,44 @@ fn run_coro(
         let ex = LocalExecutor::new();
         // ---------------------------------------------------- producer
         ex.spawn(async {
-            for ev in recording {
-                {
-                    let t0 = Instant::now();
-                    if dense {
-                        let mut acc = acc_frame.borrow_mut();
-                        acc.0[ev.pixel_index(w as u16)] += ev.p.signum();
-                        acc.1 += 1;
-                    } else {
-                        acc_events.borrow_mut().push(*ev);
-                    }
-                    prepare_ns.set(prepare_ns.get() + t0.elapsed().as_nanos() as u64);
+            'stream: loop {
+                if consumer_dead.get() {
+                    break 'stream;
                 }
-                // Cooperative pacing: instead of sleeping (which would
-                // stall the consumer sharing this thread), yield until
-                // the event is due.
-                if cfg.time_scale.is_finite() {
-                    let due = Duration::from_nanos((ev.t as f64 * 1000.0 / cfg.time_scale) as u64);
-                    while t_start.elapsed() < due {
-                        yield_now().await;
+                let batch = match source.next_batch() {
+                    Ok(Some(batch)) => batch,
+                    Ok(None) => break 'stream,
+                    Err(e) => {
+                        *source_err.borrow_mut() = Some(e);
+                        break 'stream;
+                    }
+                };
+                if batch.is_empty() {
+                    // Live source idle: hand control to the consumer.
+                    yield_now().await;
+                    continue;
+                }
+                for ev in batch {
+                    {
+                        let t0 = Instant::now();
+                        if dense {
+                            let mut acc = acc_frame.borrow_mut();
+                            acc.0[ev.pixel_index(w as u16)] += ev.p.signum();
+                            acc.1 += 1;
+                        } else {
+                            acc_events.borrow_mut().push(ev);
+                        }
+                        prepare_ns.set(prepare_ns.get() + t0.elapsed().as_nanos() as u64);
+                    }
+                    // Cooperative pacing: instead of sleeping (which
+                    // would stall the consumer sharing this thread),
+                    // yield until the event is due.
+                    if cfg.time_scale.is_finite() {
+                        let due =
+                            Duration::from_nanos((ev.t as f64 * 1000.0 / cfg.time_scale) as u64);
+                        while t_start.elapsed() < due {
+                            yield_now().await;
+                        }
                     }
                 }
             }
@@ -406,7 +475,10 @@ fn run_coro(
                         events += n;
                         dropped += out.dropped_events as u64;
                     }
-                    Some(Err(e)) => break Err(e),
+                    Some(Err(e)) => {
+                        consumer_dead.set(true);
+                        break Err(e);
+                    }
                     None if producer_done.get() => break Ok((frames, events, dropped)),
                     None => {}
                 }
@@ -417,6 +489,9 @@ fn run_coro(
         ex.run();
     }
 
+    if let Some(e) = source_err.into_inner() {
+        return Err(e);
+    }
     let (frames, events, dropped) =
         result.into_inner().expect("consumer did not report")?;
     Ok(ScenarioReport {

@@ -1,28 +1,44 @@
 //! Generic `input → filters → output` streaming — the CLI's Fig. 2(B)
-//! free composition.
+//! free composition, driven **incrementally** over
+//! [`crate::stream`]'s `EventSource`/`EventSink` traits.
 //!
-//! Sources produce event batches, the [`Pipeline`] transforms them
-//! per-event, sinks consume them. The whole stream runs through the
-//! coroutine engine by default (the library's point); a `sync` mode
-//! exists for baseline comparisons.
+//! The [`Source`] and [`Sink`] enums are the CLI-facing configuration;
+//! [`run_stream`] converts them into trait objects and hands them to
+//! the coroutine driver (default) or the `sync` baseline. Unlike the
+//! old batch path, the stream is never materialized: a file source
+//! decodes in chunks, a UDP source ends after a bounded idle wait, and
+//! memory stays O(chunk) for arbitrarily long (or endless) inputs.
+//!
+//! Geometry note: sinks that record geometry (file headers, frame
+//! binning) take it from the source *before* the first batch. File
+//! sources read ahead until their header yields it; live sources (UDP)
+//! only learn geometry by observation, so frame sinks grow on demand
+//! and file sinks spool to a temporary raw file and re-encode at the
+//! end with the exact observed bounding box (same geometry as the old
+//! batch path, still O(chunk) memory).
 
 use std::path::PathBuf;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::aer::{Event, Resolution};
-use crate::camera::{CameraConfig, SyntheticCamera};
-use crate::formats::{self, Format};
-use crate::net::{UdpEventReceiver, UdpEventSender};
-use crate::pipeline::framer::Framer;
+use crate::camera::CameraConfig;
+use crate::formats::Format;
 use crate::pipeline::Pipeline;
+use crate::stream::{
+    self, CameraSource, EventSink, EventSource, FileSink, FileSource, FrameSink, MemorySource,
+    NullSink, StdoutSink, UdpSink, UdpSource, ViewSink,
+};
+
+pub use crate::stream::{StreamConfig, StreamDriver, StreamReport};
 
 /// Where events come from.
 pub enum Source {
-    /// Read a whole event file (format auto-detected).
+    /// Stream an event file in chunks (format auto-detected).
     File(PathBuf),
-    /// Listen for SPIF datagrams until `duration` passes with no data.
+    /// Listen for SPIF datagrams until `idle_timeout` passes with no
+    /// data (each poll is a cheap bounded wait, not a spin).
     Udp { bind: String, idle_timeout: Duration },
     /// Synthesize from the camera simulator for `duration_us`.
     Synthetic { config: CameraConfig, duration_us: u64 },
@@ -30,9 +46,25 @@ pub enum Source {
     Memory(Vec<Event>, Resolution),
 }
 
+impl Source {
+    /// Open the source as a streaming trait object.
+    pub fn into_source(self, chunk_size: usize) -> Result<Box<dyn EventSource>> {
+        Ok(match self {
+            Source::File(path) => Box::new(FileSource::open(&path, chunk_size)?),
+            Source::Udp { bind, idle_timeout } => {
+                Box::new(UdpSource::bind(&bind, idle_timeout)?)
+            }
+            Source::Synthetic { config, duration_us } => {
+                Box::new(CameraSource::new(config, duration_us))
+            }
+            Source::Memory(events, res) => Box::new(MemorySource::new(events, res, chunk_size)),
+        })
+    }
+}
+
 /// Where events go.
 pub enum Sink {
-    /// Write an event file in the given format.
+    /// Write an event file in the given format, batch by batch.
     File(PathBuf, Format),
     /// Send SPIF datagrams to an address.
     Udp(String),
@@ -47,106 +79,45 @@ pub enum Sink {
     View { window_us: u64, max_frames: usize },
 }
 
-/// Outcome of a stream run.
-#[derive(Debug, Clone)]
-pub struct StreamReport {
-    /// Events read from the source.
-    pub events_in: u64,
-    /// Events that survived the pipeline into the sink.
-    pub events_out: u64,
-    /// Frames produced (Frames sink only).
-    pub frames: u64,
-    /// Wall time.
-    pub wall: Duration,
-    /// Sensor geometry of the source.
-    pub resolution: Resolution,
-}
-
-impl StreamReport {
-    /// Events per second through the pipeline.
-    pub fn throughput(&self) -> f64 {
-        self.events_in as f64 / self.wall.as_secs_f64().max(1e-9)
+impl Sink {
+    /// Open the sink as a streaming trait object for geometry `res`.
+    /// `geometry_known` is the source's claim about `res`: when false
+    /// (live sources), geometry-recording file sinks spool and stamp
+    /// the exact observed bounding box at finish instead.
+    pub fn into_sink(self, res: Resolution, geometry_known: bool) -> Result<Box<dyn EventSink>> {
+        Ok(match self {
+            Sink::File(path, format) if !geometry_known => {
+                Box::new(FileSink::create_observing(&path, format)?)
+            }
+            Sink::File(path, format) => Box::new(FileSink::create(&path, format, res)?),
+            Sink::Udp(addr) => Box::new(UdpSink::connect(&addr)?),
+            Sink::Stdout => Box::new(StdoutSink::new()),
+            Sink::Null => Box::new(NullSink::default()),
+            Sink::Frames { window_us } => Box::new(FrameSink::new(res, window_us)),
+            Sink::View { window_us, max_frames } => {
+                Box::new(ViewSink::new(res, window_us, max_frames))
+            }
+        })
     }
 }
 
-/// Drive a source through a pipeline into a sink.
-pub fn run_stream(source: Source, mut pipeline: Pipeline, sink: Sink) -> Result<StreamReport> {
-    let t0 = Instant::now();
-    // ------------------------------------------------------- acquire
-    let (events, resolution) = match source {
-        Source::File(path) => {
-            let (events, res, _fmt) = formats::read_events_auto(&path)?;
-            (events, res)
-        }
-        Source::Udp { bind, idle_timeout } => {
-            let mut rx = UdpEventReceiver::bind(&bind)
-                .with_context(|| format!("binding {bind}"))?;
-            let mut events = Vec::new();
-            let mut last_data = Instant::now();
-            loop {
-                match rx.recv_batch()? {
-                    Some(batch) => {
-                        events.extend(batch);
-                        last_data = Instant::now();
-                    }
-                    None if last_data.elapsed() > idle_timeout => break,
-                    None => {}
-                }
-            }
-            let res = formats::bounding_resolution(&events);
-            (events, res)
-        }
-        Source::Synthetic { config, duration_us } => {
-            let res = config.resolution;
-            let events = SyntheticCamera::new(config).record(duration_us);
-            (events, res)
-        }
-        Source::Memory(events, res) => (events, res),
-    };
-    let events_in = events.len() as u64;
+/// Drive a source through a pipeline into a sink with the default
+/// streaming configuration (coroutine driver, rendezvous channel,
+/// 4096-event chunks).
+pub fn run_stream(source: Source, pipeline: Pipeline, sink: Sink) -> Result<StreamReport> {
+    run_stream_with(source, pipeline, sink, StreamConfig::default())
+}
 
-    // ----------------------------------------------------- transform
-    let processed = pipeline.process(&events);
-    let events_out = processed.len() as u64;
-
-    // ---------------------------------------------------------- emit
-    let mut frames = 0u64;
-    match sink {
-        Sink::File(path, format) => {
-            formats::write_events(&path, &processed, resolution, format)?;
-        }
-        Sink::Udp(addr) => {
-            let mut tx = UdpEventSender::connect(&addr)?;
-            tx.send(&processed)?;
-        }
-        Sink::Stdout => {
-            use std::io::Write;
-            let stdout = std::io::stdout();
-            let mut out = std::io::BufWriter::new(stdout.lock());
-            for ev in &processed {
-                writeln!(out, "{},{},{},{}", ev.x, ev.y, u8::from(ev.p.is_on()), ev.t)?;
-            }
-        }
-        Sink::Null => {}
-        Sink::Frames { window_us } => {
-            frames = Framer::frames_of(resolution, window_us, &processed).len() as u64;
-        }
-        Sink::View { window_us, max_frames } => {
-            let all = Framer::frames_of(resolution, window_us, &processed);
-            frames = all.len() as u64;
-            // Show evenly spaced frames up to the cap.
-            let step = (all.len() / max_frames.max(1)).max(1);
-            for frame in all.iter().step_by(step).take(max_frames) {
-                println!(
-                    "── window [{} µs, {} µs) — {} events ──",
-                    frame.t_start, frame.t_end, frame.event_count
-                );
-                print!("{}", crate::pipeline::viewer::render_frame(frame, 69, 26));
-            }
-        }
-    }
-
-    Ok(StreamReport { events_in, events_out, frames, wall: t0.elapsed(), resolution })
+/// [`run_stream`] with explicit chunking/driver configuration.
+pub fn run_stream_with(
+    source: Source,
+    mut pipeline: Pipeline,
+    sink: Sink,
+    config: StreamConfig,
+) -> Result<StreamReport> {
+    let mut source = source.into_source(config.chunk_size)?;
+    let mut sink = sink.into_sink(source.resolution(), source.geometry_known())?;
+    stream::run(source.as_mut(), &mut pipeline, sink.as_mut(), config)
 }
 
 #[cfg(test)]
@@ -212,5 +183,42 @@ mod tests {
         .unwrap();
         assert!(report.frames > 0);
         assert!(report.events_in > 0);
+    }
+
+    #[test]
+    fn sync_driver_counts_like_coroutine_driver() {
+        let events = synthetic_events(4000, 64, 64);
+        let coro = run_stream_with(
+            Source::Memory(events.clone(), Resolution::new(64, 64)),
+            Pipeline::new(),
+            Sink::Null,
+            StreamConfig::default(),
+        )
+        .unwrap();
+        let sync = run_stream_with(
+            Source::Memory(events, Resolution::new(64, 64)),
+            Pipeline::new(),
+            Sink::Null,
+            StreamConfig::sync(),
+        )
+        .unwrap();
+        assert_eq!(coro.events_in, sync.events_in);
+        assert_eq!(coro.events_out, sync.events_out);
+        assert_eq!(coro.batches, sync.batches);
+    }
+
+    #[test]
+    fn chunking_bounds_in_flight_events() {
+        let events = synthetic_events(50_000, 64, 64);
+        let config = StreamConfig { chunk_size: 1024, ..Default::default() };
+        let report = run_stream_with(
+            Source::Memory(events, Resolution::new(64, 64)),
+            Pipeline::new(),
+            Sink::Null,
+            config,
+        )
+        .unwrap();
+        assert!(report.peak_in_flight <= 1024, "peak {}", report.peak_in_flight);
+        assert_eq!(report.batches, 50_000 / 1024 + 1);
     }
 }

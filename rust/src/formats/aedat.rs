@@ -30,9 +30,9 @@ use crate::aer::{Event, Polarity, Resolution};
 
 use super::EventCodec;
 
-const HEADER_END: &[u8] = b"#End Of ASCII Header\r\n";
-const POLARITY_EVENT: i16 = 1;
-const EVENT_SIZE: i32 = 8;
+pub(super) const HEADER_END: &[u8] = b"#End Of ASCII Header\r\n";
+pub(super) const POLARITY_EVENT: i16 = 1;
+pub(super) const EVENT_SIZE: i32 = 8;
 /// Events per packet when encoding (spec allows any; DV uses ~4096).
 const PACKET_CAPACITY: usize = 4096;
 
@@ -147,13 +147,14 @@ impl EventCodec for Aedat31 {
     }
 }
 
-/// Find the first occurrence of `needle` in `haystack`.
-fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+/// Find the first occurrence of `needle` in `haystack` (also used by
+/// the chunked [`super::streaming`] decoder to locate the header end).
+pub(super) fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
     haystack.windows(needle.len()).position(|w| w == needle)
 }
 
 /// Parse `[WxH]` out of a `#Source …` header line.
-fn parse_geometry(header: &str) -> Option<Resolution> {
+pub(super) fn parse_geometry(header: &str) -> Option<Resolution> {
     let line = header.lines().find(|l| l.starts_with("#Source"))?;
     let open = line.rfind('[')?;
     let close = line.rfind(']')?;

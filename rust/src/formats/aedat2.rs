@@ -23,9 +23,9 @@ use crate::aer::{Event, Polarity, Resolution};
 
 use super::EventCodec;
 
-const X_SHIFT: u32 = 1;
-const Y_SHIFT: u32 = 12;
-const COORD_MASK: u32 = 0x7FF; // 11 bits
+pub(super) const X_SHIFT: u32 = 1;
+pub(super) const Y_SHIFT: u32 = 12;
+pub(super) const COORD_MASK: u32 = 0x7FF; // 11 bits
 
 /// The codec object.
 pub struct Aedat2;
@@ -98,7 +98,7 @@ impl EventCodec for Aedat2 {
 }
 
 /// Parse `[WxH]` out of a `# Source …` header line.
-fn parse_geometry(header: &str) -> Option<Resolution> {
+pub(super) fn parse_geometry(header: &str) -> Option<Resolution> {
     let line = header.lines().find(|l| l.contains("Source"))?;
     let open = line.rfind('[')?;
     let close = line.rfind(']')?;

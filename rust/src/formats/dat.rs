@@ -21,8 +21,8 @@ use crate::aer::{Event, Polarity, Resolution};
 use super::evt2::{parse_geometry, split_percent_header};
 use super::EventCodec;
 
-const EVENT_TYPE_CD: u8 = 0x0C;
-const EVENT_SIZE: u8 = 8;
+pub(super) const EVENT_TYPE_CD: u8 = 0x0C;
+pub(super) const EVENT_SIZE: u8 = 8;
 
 /// The codec object.
 pub struct Dat;

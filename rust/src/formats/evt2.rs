@@ -23,10 +23,10 @@ use crate::aer::{Event, Polarity, Resolution};
 
 use super::EventCodec;
 
-const TYPE_CD_OFF: u32 = 0x0;
-const TYPE_CD_ON: u32 = 0x1;
-const TYPE_TIME_HIGH: u32 = 0x8;
-const TYPE_EXT_TRIGGER: u32 = 0xA;
+pub(super) const TYPE_CD_OFF: u32 = 0x0;
+pub(super) const TYPE_CD_ON: u32 = 0x1;
+pub(super) const TYPE_TIME_HIGH: u32 = 0x8;
+pub(super) const TYPE_EXT_TRIGGER: u32 = 0xA;
 
 /// The codec object.
 pub struct Evt2;

@@ -29,13 +29,13 @@ use crate::aer::{Event, Polarity, Resolution};
 use super::evt2::{parse_geometry, split_percent_header};
 use super::EventCodec;
 
-const TY_ADDR_Y: u16 = 0x0;
-const TY_ADDR_X: u16 = 0x2;
-const TY_VECT_BASE_X: u16 = 0x3;
-const TY_VECT_12: u16 = 0x4;
-const TY_VECT_8: u16 = 0x5;
-const TY_TIME_LOW: u16 = 0x6;
-const TY_TIME_HIGH: u16 = 0x8;
+pub(super) const TY_ADDR_Y: u16 = 0x0;
+pub(super) const TY_ADDR_X: u16 = 0x2;
+pub(super) const TY_VECT_BASE_X: u16 = 0x3;
+pub(super) const TY_VECT_12: u16 = 0x4;
+pub(super) const TY_VECT_8: u16 = 0x5;
+pub(super) const TY_TIME_LOW: u16 = 0x6;
+pub(super) const TY_TIME_HIGH: u16 = 0x8;
 
 /// The codec object.
 pub struct Evt3;

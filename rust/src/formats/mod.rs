@@ -18,7 +18,9 @@
 //!
 //! All codecs implement [`EventCodec`]; [`detect_format`] sniffs
 //! magic bytes, and [`read_events_auto`] is the "open anything" helper
-//! the CLI uses.
+//! the CLI uses. For O(chunk)-memory streaming I/O, [`streaming`]
+//! wraps every codec in an incremental decoder/encoder pair used by
+//! the [`crate::stream`] sources and sinks.
 
 pub mod aedat;
 pub mod aedat2;
@@ -26,6 +28,7 @@ pub mod dat;
 pub mod evt2;
 pub mod evt3;
 pub mod raw;
+pub mod streaming;
 pub mod text;
 
 use std::io::{Read, Write};

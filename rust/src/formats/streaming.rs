@@ -1,0 +1,763 @@
+//! Incremental (chunked) decode/encode around the batch codecs.
+//!
+//! The batch [`EventCodec`](super::EventCodec) API reads a whole stream
+//! into memory; the streaming layer ([`crate::stream`]) needs O(chunk)
+//! memory instead. [`StreamingDecoder`] accepts arbitrary byte chunks —
+//! including chunks that split packed words, packet headers, or CSV
+//! lines — carries the partial tail across calls, and emits events as
+//! soon as complete records arrive. [`StreamingEncoder`] writes a
+//! stream batch-by-batch through the existing codecs: every format's
+//! header is a deterministic function of the geometry, so the encoder
+//! strips the header from every batch after the first, and the stateful
+//! formats (EVT2 `TIME_HIGH`, EVT3 time/row words) simply re-emit their
+//! state words at batch boundaries, which decodes identically.
+//!
+//! Decoder state per format mirrors the batch decoders exactly: EVT2
+//! tracks `time_high` across chunks, EVT3 tracks the full
+//! (y, time, epoch, vector-base) machine, AEDAT 3.1 waits for complete
+//! packets, CSV waits for complete lines.
+
+use std::io::Write;
+
+use anyhow::{bail, Context, Result};
+
+use crate::aer::{packed, Event, Polarity, Resolution};
+
+use super::{aedat, aedat2, dat, evt2, evt3, text, Format};
+
+/// Upper bound on the bytes a header may occupy before the decoder
+/// gives up (prevents unbounded buffering on garbage input).
+const MAX_HEADER_BYTES: usize = 1 << 20;
+
+/// Upper bound on one AEDAT 3.1 packet's payload. Real encoders cap
+/// packets at a few thousand events (ours: 4096 × 8 bytes); anything
+/// past this is a corrupt header, which must error rather than buffer.
+const MAX_PACKET_BYTES: usize = 1 << 24;
+
+/// Upper bound on one CSV line. Real lines are ~25 bytes; a newline-free
+/// stream (binary data misdetected as text) must error rather than
+/// buffer the whole input waiting for one.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Per-format body decoding state.
+#[derive(Debug)]
+enum Body {
+    Raw,
+    Aedat2,
+    Dat,
+    Text { lineno: usize },
+    Evt2 { time_high: Option<u64> },
+    Evt3(Evt3State),
+    Aedat31,
+}
+
+/// The EVT3 decoder state machine (identical to the batch decoder's
+/// local variables, lifted into a struct so it survives chunk breaks).
+#[derive(Debug)]
+struct Evt3State {
+    y: u16,
+    time_low: u64,
+    time_high: u64,
+    time_epoch: u64,
+    have_time: bool,
+    vect_base_x: u16,
+    vect_pol: Polarity,
+}
+
+impl Default for Evt3State {
+    fn default() -> Self {
+        Evt3State {
+            y: 0,
+            time_low: 0,
+            time_high: 0,
+            time_epoch: 0,
+            have_time: false,
+            vect_base_x: 0,
+            vect_pol: Polarity::Off,
+        }
+    }
+}
+
+/// Incremental decoder: feed byte chunks, receive events.
+///
+/// ```
+/// use aestream::formats::{streaming::StreamingDecoder, EventCodec, Format};
+/// use aestream::aer::Resolution;
+/// let events = aestream::testutil::synthetic_events(100, 64, 64);
+/// let mut bytes = Vec::new();
+/// Format::Raw.codec().encode(&events, Resolution::new(64, 64), &mut bytes).unwrap();
+/// let mut dec = StreamingDecoder::new(Format::Raw);
+/// let mut out = Vec::new();
+/// for chunk in bytes.chunks(7) { // deliberately splits 8-byte words
+///     dec.feed(chunk, &mut out).unwrap();
+/// }
+/// dec.finish(&mut out).unwrap();
+/// assert_eq!(out, events);
+/// ```
+#[derive(Debug)]
+pub struct StreamingDecoder {
+    format: Format,
+    /// Bytes carried across `feed` calls (undecoded header prefix or a
+    /// partial trailing record).
+    pending: Vec<u8>,
+    header_done: bool,
+    res: Option<Resolution>,
+    body: Body,
+}
+
+impl StreamingDecoder {
+    /// Fresh decoder for a known format.
+    pub fn new(format: Format) -> Self {
+        let body = match format {
+            Format::Raw => Body::Raw,
+            Format::Aedat2 => Body::Aedat2,
+            Format::Dat => Body::Dat,
+            Format::Text => Body::Text { lineno: 0 },
+            Format::Evt2 => Body::Evt2 { time_high: None },
+            Format::Evt3 => Body::Evt3(Evt3State::default()),
+            Format::Aedat => Body::Aedat31,
+        };
+        // Text has no framing header: comment lines are handled inline.
+        let header_done = matches!(format, Format::Text);
+        StreamingDecoder { format, pending: Vec::new(), header_done, res: None, body }
+    }
+
+    /// The format being decoded.
+    pub fn format(&self) -> Format {
+        self.format
+    }
+
+    /// Geometry, once the header has been parsed (formats that do not
+    /// record geometry keep returning `None`; callers fall back to a
+    /// running bounding box).
+    pub fn resolution(&self) -> Option<Resolution> {
+        self.res
+    }
+
+    /// Feed one chunk of bytes, appending decoded events to `out`.
+    /// Chunks may split records/packets/lines arbitrarily.
+    pub fn feed(&mut self, bytes: &[u8], out: &mut Vec<Event>) -> Result<()> {
+        self.pending.extend_from_slice(bytes);
+        if !self.header_done {
+            if !self.try_header()? {
+                if self.pending.len() > MAX_HEADER_BYTES {
+                    bail!("{}: header exceeds {} bytes", self.format, MAX_HEADER_BYTES);
+                }
+                return Ok(());
+            }
+        }
+        self.decode_body(out)
+    }
+
+    /// End of stream: flush trailing state and validate completeness
+    /// (a partial record or packet is an error, exactly as in the batch
+    /// decoders).
+    pub fn finish(&mut self, out: &mut Vec<Event>) -> Result<()> {
+        if !self.header_done {
+            self.finish_header()?;
+            if self.header_done {
+                self.decode_body(out)?;
+            }
+        }
+        match &mut self.body {
+            Body::Raw => {
+                if !self.pending.is_empty() {
+                    bail!("raw: trailing {} bytes (body not a multiple of 8)", self.pending.len());
+                }
+            }
+            Body::Aedat2 => {
+                if !self.pending.is_empty() {
+                    bail!(
+                        "aedat2: trailing {} bytes (body not a multiple of 8)",
+                        self.pending.len()
+                    );
+                }
+            }
+            Body::Dat => {
+                if !self.pending.is_empty() {
+                    bail!("dat: trailing {} bytes (body not a multiple of 8)", self.pending.len());
+                }
+            }
+            Body::Evt2 { .. } => {
+                if !self.pending.is_empty() {
+                    bail!("evt2: trailing {} bytes (body not a multiple of 4)", self.pending.len());
+                }
+            }
+            Body::Evt3(_) => {
+                if !self.pending.is_empty() {
+                    bail!("evt3: trailing {} bytes (body not a multiple of 2)", self.pending.len());
+                }
+            }
+            Body::Aedat31 => {
+                if !self.pending.is_empty() {
+                    bail!("aedat: truncated packet ({} trailing bytes)", self.pending.len());
+                }
+            }
+            Body::Text { lineno } => {
+                // The final line may lack a newline, matching the batch
+                // decoder's `lines()` behaviour.
+                if !self.pending.is_empty() {
+                    let line = std::str::from_utf8(&self.pending)
+                        .context("text: stream is not valid UTF-8")?
+                        .to_owned();
+                    text::parse_line(&line, *lineno, &mut self.res, out)?;
+                    *lineno += 1;
+                    self.pending.clear();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Try to complete the header from `pending`. Returns `true` once
+    /// the header is consumed (body bytes remain in `pending`).
+    fn try_header(&mut self) -> Result<bool> {
+        match self.format {
+            Format::Text => unreachable!("text has no framing header"),
+            Format::Raw => {
+                if self.pending.len() < 16 {
+                    return Ok(false);
+                }
+                if &self.pending[..8] != super::raw::MAGIC {
+                    bail!("raw: bad magic");
+                }
+                let width = u16::from_le_bytes([self.pending[8], self.pending[9]]);
+                let height = u16::from_le_bytes([self.pending[10], self.pending[11]]);
+                self.res = Some(Resolution::new(width, height));
+                self.pending.drain(..16);
+                self.header_done = true;
+                Ok(true)
+            }
+            Format::Aedat => {
+                if self.pending.len() >= 12 && !self.pending.starts_with(b"#!AER-DAT3.1") {
+                    bail!("aedat: missing #!AER-DAT3.1 signature");
+                }
+                let Some(pos) = aedat::find(&self.pending, aedat::HEADER_END) else {
+                    return Ok(false);
+                };
+                let end = pos + aedat::HEADER_END.len();
+                let header_text = String::from_utf8_lossy(&self.pending[..end]).into_owned();
+                self.res = aedat::parse_geometry(&header_text);
+                self.pending.drain(..end);
+                self.header_done = true;
+                Ok(true)
+            }
+            Format::Aedat2 => {
+                if self.pending.len() < 12 {
+                    return Ok(false); // signature not yet decidable
+                }
+                if !self.pending.starts_with(b"#!AER-DAT2.0") {
+                    bail!("aedat2: missing #!AER-DAT2.0 signature");
+                }
+                let Some(end) = scan_comment_header(&self.pending, b'#') else {
+                    return Ok(false);
+                };
+                let header = String::from_utf8_lossy(&self.pending[..end]).into_owned();
+                self.res = aedat2::parse_geometry(&header);
+                self.pending.drain(..end);
+                self.header_done = true;
+                Ok(true)
+            }
+            Format::Evt2 | Format::Evt3 | Format::Dat => {
+                let Some(end) = scan_comment_header(&self.pending, b'%') else {
+                    return Ok(false);
+                };
+                let mut consumed = end;
+                if self.format == Format::Dat {
+                    // Two binary preamble bytes follow the header.
+                    if self.pending.len() < end + 2 {
+                        return Ok(false);
+                    }
+                    let (event_type, event_size) = (self.pending[end], self.pending[end + 1]);
+                    if event_type != dat::EVENT_TYPE_CD {
+                        bail!("dat: unsupported event type {event_type:#x}");
+                    }
+                    if event_size != dat::EVENT_SIZE {
+                        bail!("dat: unsupported event size {event_size}");
+                    }
+                    consumed = end + 2;
+                }
+                self.res = evt2::parse_geometry(&self.pending[..end]);
+                self.pending.drain(..consumed);
+                self.header_done = true;
+                Ok(true)
+            }
+        }
+    }
+
+    /// End-of-stream header resolution: either the whole stream was a
+    /// header (legal for the `%`-comment formats) or it is an error.
+    fn finish_header(&mut self) -> Result<()> {
+        match self.format {
+            Format::Text => Ok(()),
+            Format::Raw => bail!("raw: truncated header"),
+            Format::Aedat => {
+                if !self.pending.starts_with(b"#!AER-DAT3.1") {
+                    bail!("aedat: missing #!AER-DAT3.1 signature");
+                }
+                bail!("aedat: missing '#End Of ASCII Header'");
+            }
+            Format::Aedat2 => {
+                if !self.pending.starts_with(b"#!AER-DAT2.0") {
+                    bail!("aedat2: missing #!AER-DAT2.0 signature");
+                }
+                // All bytes must be complete '#' lines (⇒ empty body);
+                // a dangling line without its newline is an error,
+                // exactly as in the batch decoder.
+                let mut off = 0usize;
+                while off < self.pending.len() && self.pending[off] == b'#' {
+                    match self.pending[off..].iter().position(|&b| b == b'\n') {
+                        Some(nl) => off += nl + 1,
+                        None => bail!("aedat2: unterminated header"),
+                    }
+                }
+                let header = String::from_utf8_lossy(&self.pending[..off]).into_owned();
+                self.res = aedat2::parse_geometry(&header);
+                self.pending.drain(..off);
+                self.header_done = true;
+                Ok(())
+            }
+            Format::Evt2 | Format::Evt3 | Format::Dat => {
+                // Mirror `split_percent_header`: an unterminated final
+                // `%` line is still header.
+                let end = scan_comment_header_permissive(&self.pending, b'%');
+                if self.format == Format::Dat {
+                    if end == self.pending.len() {
+                        bail!("dat: missing binary preamble");
+                    }
+                    // A lone preamble byte is a truncation error.
+                    if self.pending.len() < end + 2 {
+                        bail!("dat: missing binary preamble");
+                    }
+                }
+                self.res = evt2::parse_geometry(&self.pending[..end]);
+                let body_start = if self.format == Format::Dat {
+                    let (event_type, event_size) = (self.pending[end], self.pending[end + 1]);
+                    if event_type != dat::EVENT_TYPE_CD {
+                        bail!("dat: unsupported event type {event_type:#x}");
+                    }
+                    if event_size != dat::EVENT_SIZE {
+                        bail!("dat: unsupported event size {event_size}");
+                    }
+                    end + 2
+                } else {
+                    end
+                };
+                self.pending.drain(..body_start);
+                self.header_done = true;
+                Ok(())
+            }
+        }
+    }
+
+    /// Decode every complete record in `pending`, retaining the partial
+    /// tail for the next `feed`.
+    fn decode_body(&mut self, out: &mut Vec<Event>) -> Result<()> {
+        match &mut self.body {
+            Body::Raw => {
+                let n = self.pending.len() / 8 * 8;
+                for word in self.pending[..n].chunks_exact(8) {
+                    out.push(packed::unpack(u64::from_le_bytes(word.try_into().unwrap())));
+                }
+                self.pending.drain(..n);
+                Ok(())
+            }
+            Body::Aedat2 => {
+                let n = self.pending.len() / 8 * 8;
+                for rec in self.pending[..n].chunks_exact(8) {
+                    let addr = u32::from_be_bytes(rec[0..4].try_into().unwrap());
+                    let t = u32::from_be_bytes(rec[4..8].try_into().unwrap()) as u64;
+                    out.push(Event {
+                        t,
+                        x: ((addr >> aedat2::X_SHIFT) & aedat2::COORD_MASK) as u16,
+                        y: ((addr >> aedat2::Y_SHIFT) & aedat2::COORD_MASK) as u16,
+                        p: Polarity::from_bool(addr & 1 == 1),
+                    });
+                }
+                self.pending.drain(..n);
+                Ok(())
+            }
+            Body::Dat => {
+                let n = self.pending.len() / 8 * 8;
+                for rec in self.pending[..n].chunks_exact(8) {
+                    let t = u32::from_le_bytes(rec[0..4].try_into().unwrap()) as u64;
+                    let data = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+                    out.push(Event {
+                        t,
+                        x: (data & 0x3FFF) as u16,
+                        y: ((data >> 14) & 0x3FFF) as u16,
+                        p: Polarity::from_bool((data >> 28) & 0xF != 0),
+                    });
+                }
+                self.pending.drain(..n);
+                Ok(())
+            }
+            Body::Evt2 { time_high } => {
+                let n = self.pending.len() / 4 * 4;
+                for word in self.pending[..n].chunks_exact(4) {
+                    let w = u32::from_le_bytes(word.try_into().unwrap());
+                    match w >> 28 {
+                        evt2::TYPE_TIME_HIGH => *time_high = Some((w & 0x0FFF_FFFF) as u64),
+                        ty @ (evt2::TYPE_CD_OFF | evt2::TYPE_CD_ON) => {
+                            let Some(th) = *time_high else {
+                                bail!("evt2: CD word before any TIME_HIGH");
+                            };
+                            out.push(Event {
+                                t: (th << 6) | ((w >> 22) & 0x3F) as u64,
+                                x: ((w >> 11) & 0x7FF) as u16,
+                                y: (w & 0x7FF) as u16,
+                                p: Polarity::from_bool(ty == evt2::TYPE_CD_ON),
+                            });
+                        }
+                        evt2::TYPE_EXT_TRIGGER => {}
+                        _ => {} // forward-compatible: ignore unknown types
+                    }
+                }
+                self.pending.drain(..n);
+                Ok(())
+            }
+            Body::Evt3(st) => {
+                let n = self.pending.len() / 2 * 2;
+                for wbytes in self.pending[..n].chunks_exact(2) {
+                    let w = u16::from_le_bytes(wbytes.try_into().unwrap());
+                    let payload = w & 0x0FFF;
+                    match w >> 12 {
+                        evt3::TY_ADDR_Y => st.y = payload & 0x7FF,
+                        evt3::TY_TIME_HIGH => {
+                            let new_high = payload as u64;
+                            if st.have_time && new_high < st.time_high {
+                                st.time_epoch += 1 << 24; // 24-bit rollover
+                            }
+                            st.time_high = new_high;
+                            st.time_low = 0;
+                            st.have_time = true;
+                        }
+                        evt3::TY_TIME_LOW => {
+                            st.time_low = payload as u64;
+                            st.have_time = true;
+                        }
+                        evt3::TY_ADDR_X => {
+                            if !st.have_time {
+                                bail!("evt3: CD word before any time word");
+                            }
+                            out.push(Event {
+                                t: st.time_epoch | (st.time_high << 12) | st.time_low,
+                                x: payload & 0x7FF,
+                                y: st.y,
+                                p: Polarity::from_bool(payload & 0x800 != 0),
+                            });
+                        }
+                        evt3::TY_VECT_BASE_X => {
+                            st.vect_base_x = payload & 0x7FF;
+                            st.vect_pol = Polarity::from_bool(payload & 0x800 != 0);
+                        }
+                        evt3::TY_VECT_12 | evt3::TY_VECT_8 => {
+                            if !st.have_time {
+                                bail!("evt3: vector word before any time word");
+                            }
+                            let width = if w >> 12 == evt3::TY_VECT_12 { 12 } else { 8 };
+                            let t = st.time_epoch | (st.time_high << 12) | st.time_low;
+                            let mut mask = payload & ((1u16 << width) - 1);
+                            while mask != 0 {
+                                let bit = mask.trailing_zeros() as u16;
+                                out.push(Event {
+                                    t,
+                                    x: st.vect_base_x + bit,
+                                    y: st.y,
+                                    p: st.vect_pol,
+                                });
+                                mask &= mask - 1;
+                            }
+                            st.vect_base_x += width;
+                        }
+                        _ => {} // EXT_TRIGGER, OTHERS, CONTINUED: skipped
+                    }
+                }
+                self.pending.drain(..n);
+                Ok(())
+            }
+            Body::Aedat31 => {
+                let mut off = 0usize;
+                loop {
+                    if self.pending.len() - off < 28 {
+                        break;
+                    }
+                    let h = &self.pending[off..off + 28];
+                    let event_type = i16::from_le_bytes([h[0], h[1]]);
+                    let event_size = i32::from_le_bytes(h[4..8].try_into().unwrap());
+                    let ts_overflow = i32::from_le_bytes(h[12..16].try_into().unwrap()) as u64;
+                    let event_number = i32::from_le_bytes(h[20..24].try_into().unwrap());
+                    if event_size <= 0 || event_number < 0 {
+                        bail!("aedat: corrupt packet header (size {event_size}, n {event_number})");
+                    }
+                    let payload = event_size as usize * event_number as usize;
+                    // A streaming decoder cannot compare against the
+                    // remaining file length (the batch decoder's
+                    // truncation check), so an implausible payload must
+                    // be rejected outright — otherwise a corrupt header
+                    // would make `pending` buffer the entire rest of the
+                    // input, defeating the O(chunk) guarantee.
+                    if payload > MAX_PACKET_BYTES {
+                        bail!("aedat: implausible packet payload of {payload} bytes");
+                    }
+                    if self.pending.len() - off < 28 + payload {
+                        break; // wait for the rest of this packet
+                    }
+                    let body = &self.pending[off + 28..off + 28 + payload];
+                    if event_type == aedat::POLARITY_EVENT && event_size == aedat::EVENT_SIZE {
+                        for rec in body.chunks_exact(8) {
+                            let data = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+                            if data & 1 == 0 {
+                                continue; // invalidated event
+                            }
+                            let ts = u32::from_le_bytes(rec[4..8].try_into().unwrap()) as u64;
+                            out.push(Event {
+                                x: ((data >> 17) & 0x7FFF) as u16,
+                                y: ((data >> 2) & 0x7FFF) as u16,
+                                p: Polarity::from_bool(data & 2 != 0),
+                                t: (ts_overflow << 31) | ts,
+                            });
+                        }
+                    }
+                    // Unknown event types are skipped (spec: readers must ignore).
+                    off += 28 + payload;
+                }
+                self.pending.drain(..off);
+                Ok(())
+            }
+            Body::Text { lineno } => {
+                let Some(last_nl) = self.pending.iter().rposition(|&b| b == b'\n') else {
+                    if self.pending.len() > MAX_LINE_BYTES {
+                        bail!("text: line exceeds {} bytes", MAX_LINE_BYTES);
+                    }
+                    return Ok(()); // no complete line yet
+                };
+                let complete = std::str::from_utf8(&self.pending[..=last_nl])
+                    .context("text: stream is not valid UTF-8")?
+                    .to_owned();
+                for line in complete.lines() {
+                    text::parse_line(line, *lineno, &mut self.res, out)?;
+                    *lineno += 1;
+                }
+                self.pending.drain(..=last_nl);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Scan comment-prefixed header lines. Returns the body offset once a
+/// line starting with something other than `marker` is seen; `None`
+/// while the header may still be growing (mid-line, or the buffer ends
+/// exactly at a line boundary).
+fn scan_comment_header(bytes: &[u8], marker: u8) -> Option<usize> {
+    let mut off = 0;
+    while off < bytes.len() && bytes[off] == marker {
+        match bytes[off..].iter().position(|&b| b == b'\n') {
+            Some(nl) => off += nl + 1,
+            None => return None,
+        }
+    }
+    if off < bytes.len() {
+        Some(off)
+    } else {
+        None
+    }
+}
+
+/// End-of-stream variant: an unterminated final comment line (or a
+/// buffer that is all header) counts as header, mirroring the batch
+/// `split_percent_header`.
+fn scan_comment_header_permissive(bytes: &[u8], marker: u8) -> usize {
+    let mut off = 0;
+    while off < bytes.len() && bytes[off] == marker {
+        match bytes[off..].iter().position(|&b| b == b'\n') {
+            Some(nl) => off += nl + 1,
+            None => return bytes.len(),
+        }
+    }
+    off
+}
+
+/// Incremental encoder: write a stream batch-by-batch in any format.
+///
+/// Each batch is encoded through the batch codec; the deterministic
+/// header (exactly the bytes `encode(&[], res)` produces) is stripped
+/// from every batch after the first. Stateful formats re-emit their
+/// state words (EVT2 `TIME_HIGH`, EVT3 time/row words, AEDAT 3.1 packet
+/// headers) at batch boundaries — byte output can differ from a
+/// single-shot encode, but decodes to the identical event stream.
+pub struct StreamingEncoder {
+    format: Format,
+    res: Resolution,
+    header_len: usize,
+    started: bool,
+    scratch: Vec<u8>,
+}
+
+impl StreamingEncoder {
+    /// New encoder for a sensor of geometry `res`.
+    pub fn new(format: Format, res: Resolution) -> Result<Self> {
+        let mut empty = Vec::new();
+        format.codec().encode(&[], res, &mut empty)?;
+        Ok(StreamingEncoder {
+            format,
+            res,
+            header_len: empty.len(),
+            started: false,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// The target format.
+    pub fn format(&self) -> Format {
+        self.format
+    }
+
+    /// Encode one batch (timestamps must continue the stream's
+    /// non-decreasing order across batches).
+    pub fn write_batch(&mut self, events: &[Event], w: &mut dyn Write) -> Result<()> {
+        if events.is_empty() && self.started {
+            return Ok(());
+        }
+        self.scratch.clear();
+        self.format.codec().encode(events, self.res, &mut self.scratch)?;
+        let skip = if self.started { self.header_len } else { 0 };
+        w.write_all(&self.scratch[skip..])?;
+        self.started = true;
+        Ok(())
+    }
+
+    /// Finish the stream: ensures the header exists even for an empty
+    /// stream (so zero-event files stay readable).
+    pub fn finish(&mut self, w: &mut dyn Write) -> Result<()> {
+        if !self.started {
+            self.write_batch(&[], w)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::EventCodec;
+    use super::*;
+    use crate::testutil::{synthetic_events, synthetic_events_seeded};
+
+    /// Decode `bytes` through the streaming decoder in fixed-size
+    /// chunks, returning events and the final geometry.
+    fn chunked_decode(
+        format: Format,
+        bytes: &[u8],
+        chunk: usize,
+    ) -> (Vec<Event>, Option<Resolution>) {
+        let mut dec = StreamingDecoder::new(format);
+        let mut out = Vec::new();
+        for piece in bytes.chunks(chunk.max(1)) {
+            dec.feed(piece, &mut out).unwrap_or_else(|e| panic!("{format}: feed: {e}"));
+        }
+        dec.finish(&mut out).unwrap_or_else(|e| panic!("{format}: finish: {e}"));
+        (out, dec.resolution())
+    }
+
+    #[test]
+    fn chunked_decode_matches_batch_for_all_formats_and_chunk_sizes() {
+        let events = synthetic_events(3000, 346, 260);
+        let res = Resolution::DAVIS_346;
+        for format in Format::ALL {
+            let codec = format.codec();
+            let mut bytes = Vec::new();
+            codec.encode(&events, res, &mut bytes).unwrap();
+            // 1 and 3 split every multi-byte word; 7 misaligns 8-byte
+            // records; 64 splits AEDAT packets mid-payload.
+            for chunk in [1usize, 3, 7, 64, 4096] {
+                let (decoded, dres) = chunked_decode(format, &bytes, chunk);
+                assert_eq!(decoded, events, "{format} chunk={chunk}");
+                assert_eq!(dres, Some(res), "{format} chunk={chunk} geometry");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_encode_decodes_identically_for_all_formats() {
+        let events = synthetic_events_seeded(2500, 640, 480, 0xBEEF);
+        let res = Resolution::new(640, 480);
+        for format in Format::ALL {
+            let mut enc = StreamingEncoder::new(format, res).unwrap();
+            let mut bytes = Vec::new();
+            for batch in events.chunks(317) {
+                enc.write_batch(batch, &mut bytes).unwrap();
+            }
+            enc.finish(&mut bytes).unwrap();
+            let (decoded, dres) =
+                format.codec().decode(&mut &bytes[..]).unwrap_or_else(|e| panic!("{format}: {e}"));
+            assert_eq!(decoded, events, "{format}");
+            assert_eq!(dres, res, "{format}");
+        }
+    }
+
+    #[test]
+    fn empty_stream_roundtrips_through_streaming_pair() {
+        let res = Resolution::new(64, 64);
+        for format in Format::ALL {
+            let mut enc = StreamingEncoder::new(format, res).unwrap();
+            let mut bytes = Vec::new();
+            enc.finish(&mut bytes).unwrap();
+            let (decoded, _) = chunked_decode(format, &bytes, 5);
+            assert!(decoded.is_empty(), "{format} produced phantom events");
+        }
+    }
+
+    #[test]
+    fn evt3_rollover_survives_chunk_boundaries() {
+        let base = (1u64 << 24) - 3;
+        let events: Vec<Event> = (0..6).map(|i| Event::off(5, 6, base + i)).collect();
+        let mut bytes = Vec::new();
+        Format::Evt3.codec().encode(&events, Resolution::new(64, 64), &mut bytes).unwrap();
+        let (decoded, _) = chunked_decode(Format::Evt3, &bytes, 1);
+        assert_eq!(decoded, events);
+    }
+
+    #[test]
+    fn truncated_tail_is_an_error_not_a_panic() {
+        let events = synthetic_events(50, 64, 64);
+        let res = Resolution::new(64, 64);
+        for format in Format::ALL {
+            if format == Format::Text {
+                continue; // text tolerates a missing trailing newline
+            }
+            let mut bytes = Vec::new();
+            format.codec().encode(&events, res, &mut bytes).unwrap();
+            bytes.truncate(bytes.len() - 1);
+            let mut dec = StreamingDecoder::new(format);
+            let mut out = Vec::new();
+            let fed = dec.feed(&bytes, &mut out);
+            let result = fed.and_then(|_| dec.finish(&mut out));
+            assert!(result.is_err(), "{format} accepted a truncated stream");
+        }
+    }
+
+    #[test]
+    fn streaming_decoder_rejects_bad_magic_early() {
+        let mut dec = StreamingDecoder::new(Format::Raw);
+        let mut out = Vec::new();
+        assert!(dec.feed(&[0u8; 32], &mut out).is_err());
+    }
+
+    #[test]
+    fn aedat_implausible_packet_payload_errors_instead_of_buffering() {
+        // A corrupt packet header claiming a multi-GiB payload must
+        // error immediately, not buffer the rest of the stream.
+        let events = synthetic_events(4, 64, 64);
+        let mut bytes = Vec::new();
+        Format::Aedat.codec().encode(&events, Resolution::new(64, 64), &mut bytes).unwrap();
+        let body = super::aedat::find(&bytes, super::aedat::HEADER_END).unwrap()
+            + super::aedat::HEADER_END.len();
+        // Overwrite eventNumber (bytes 20..24 of the packet header).
+        bytes[body + 20..body + 24].copy_from_slice(&i32::MAX.to_le_bytes());
+        let mut dec = StreamingDecoder::new(Format::Aedat);
+        let mut out = Vec::new();
+        let err = dec.feed(&bytes, &mut out).unwrap_err();
+        assert!(format!("{err}").contains("implausible"), "{err}");
+    }
+}

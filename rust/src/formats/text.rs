@@ -45,44 +45,58 @@ impl EventCodec for TextCsv {
         let mut res: Option<Resolution> = None;
         for (lineno, line) in reader.lines().enumerate() {
             let line = line?;
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
-            }
-            if let Some(rest) = line.strip_prefix('#') {
-                let rest = rest.trim();
-                if let Some(geom) = rest.strip_prefix("resolution ") {
-                    let (w, h) = geom
-                        .split_once('x')
-                        .with_context(|| format!("line {}: bad resolution", lineno + 1))?;
-                    res = Some(Resolution::new(w.trim().parse()?, h.trim().parse()?));
-                }
-                continue;
-            }
-            let mut parts = line.split(',');
-            let (x, y, p, t) = (
-                parts.next().with_context(|| format!("line {}: missing x", lineno + 1))?,
-                parts.next().with_context(|| format!("line {}: missing y", lineno + 1))?,
-                parts.next().with_context(|| format!("line {}: missing p", lineno + 1))?,
-                parts.next().with_context(|| format!("line {}: missing t", lineno + 1))?,
-            );
-            if parts.next().is_some() {
-                bail!("line {}: too many fields", lineno + 1);
-            }
-            events.push(Event {
-                x: x.trim().parse().with_context(|| format!("line {}: x", lineno + 1))?,
-                y: y.trim().parse().with_context(|| format!("line {}: y", lineno + 1))?,
-                p: Polarity::from_bool(match p.trim() {
-                    "0" | "false" => false,
-                    "1" | "true" => true,
-                    other => bail!("line {}: bad polarity {other:?}", lineno + 1),
-                }),
-                t: t.trim().parse().with_context(|| format!("line {}: t", lineno + 1))?,
-            });
+            parse_line(&line, lineno, &mut res, &mut events)?;
         }
         let res = res.unwrap_or_else(|| super::bounding_resolution(&events));
         Ok((events, res))
     }
+}
+
+/// Parse one CSV line, appending to `events` (or updating `res` for a
+/// `# resolution WxH` comment). Shared by the batch decoder above and
+/// the chunked [`super::streaming`] decoder; `lineno` is 0-based and
+/// only used for error messages.
+pub(super) fn parse_line(
+    line: &str,
+    lineno: usize,
+    res: &mut Option<Resolution>,
+    events: &mut Vec<Event>,
+) -> Result<()> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(());
+    }
+    if let Some(rest) = line.strip_prefix('#') {
+        let rest = rest.trim();
+        if let Some(geom) = rest.strip_prefix("resolution ") {
+            let (w, h) = geom
+                .split_once('x')
+                .with_context(|| format!("line {}: bad resolution", lineno + 1))?;
+            *res = Some(Resolution::new(w.trim().parse()?, h.trim().parse()?));
+        }
+        return Ok(());
+    }
+    let mut parts = line.split(',');
+    let (x, y, p, t) = (
+        parts.next().with_context(|| format!("line {}: missing x", lineno + 1))?,
+        parts.next().with_context(|| format!("line {}: missing y", lineno + 1))?,
+        parts.next().with_context(|| format!("line {}: missing p", lineno + 1))?,
+        parts.next().with_context(|| format!("line {}: missing t", lineno + 1))?,
+    );
+    if parts.next().is_some() {
+        bail!("line {}: too many fields", lineno + 1);
+    }
+    events.push(Event {
+        x: x.trim().parse().with_context(|| format!("line {}: x", lineno + 1))?,
+        y: y.trim().parse().with_context(|| format!("line {}: y", lineno + 1))?,
+        p: Polarity::from_bool(match p.trim() {
+            "0" | "false" => false,
+            "1" | "true" => true,
+            other => bail!("line {}: bad polarity {other:?}", lineno + 1),
+        }),
+        t: t.trim().parse().with_context(|| format!("line {}: t", lineno + 1))?,
+    });
+    Ok(())
 }
 
 #[cfg(test)]

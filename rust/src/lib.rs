@@ -12,10 +12,16 @@
 //! ## Layer map
 //!
 //! * [`aer`] — event types, packed encodings, the checksum workload;
-//! * [`formats`] — file codecs (AEDAT 3.1, Prophesee EVT2/EVT3/DAT, raw, text);
+//! * [`formats`] — file codecs (AEDAT 3.1, Prophesee EVT2/EVT3/DAT,
+//!   raw, text), each with batch ([`formats::EventCodec`]) and
+//!   incremental ([`formats::streaming`]) decode/encode;
 //! * [`net`] — SPIF wire protocol over UDP;
 //! * [`camera`] — synthetic event-camera source;
-//! * [`pipeline`] — composable source → transform → sink streaming;
+//! * [`pipeline`] — composable per-event transforms (the paper's
+//!   uniform-signature functions), frame binning, backpressure;
+//! * [`stream`] — the `EventSource` → `Pipeline` → `EventSink` trait
+//!   layer and its incremental drivers (coroutine + sync): O(chunk)
+//!   memory for endless streams;
 //! * [`engine`] — the Fig. 3 concurrency contenders (sync / threads /
 //!   coroutines / lock-free ring);
 //! * [`rt`] — the hand-rolled cooperative async runtime (coroutines);
@@ -23,7 +29,8 @@
 //! * [`runtime`] — XLA/PJRT device runtime with host→device transfer
 //!   accounting (the paper's GPU stand-in);
 //! * [`snn`] — pure-Rust LIF + convolution reference edge detector;
-//! * [`coordinator`] — the four-scenario Fig. 4 use-case runner;
+//! * [`coordinator`] — the four-scenario Fig. 4 use-case runner and the
+//!   CLI's free `input → filters → output` composition over [`stream`];
 //! * [`metrics`] — counters, rate meters, timing histograms;
 //! * [`bench`] — statistics harness used by `benches/` (no criterion
 //!   offline);
@@ -43,5 +50,6 @@ pub mod pipeline;
 pub mod rt;
 pub mod runtime;
 pub mod snn;
+pub mod stream;
 pub mod sync;
 pub mod testutil;

@@ -6,7 +6,7 @@ use anyhow::Result;
 use aestream::bench::{fmt_rate, Table};
 use aestream::camera;
 use aestream::cli::{self, Command};
-use aestream::coordinator::{run_scenario, run_stream, ScenarioConfig};
+use aestream::coordinator::{run_scenario, run_stream_with, ScenarioConfig};
 use aestream::pipeline::registry;
 use aestream::runtime::Device;
 
@@ -19,16 +19,20 @@ fn main() -> Result<()> {
         Command::Table1 => {
             print!("{}", registry::render_table());
         }
-        Command::Stream { source, pipeline, sink } => {
-            let report = run_stream(source, pipeline, sink)?;
+        Command::Stream { source, pipeline, sink, config } => {
+            let report = run_stream_with(source, pipeline, sink, config)?;
             eprintln!(
-                "processed {} events ({} out) in {:?} ({}) [{}x{}]",
+                "processed {} events ({} out) in {:?} ({}) [{}x{}] — {} batches, \
+                 peak {} in flight, {} backpressure waits",
                 report.events_in,
                 report.events_out,
                 report.wall,
                 fmt_rate(report.throughput(), "ev/s"),
                 report.resolution.width,
                 report.resolution.height,
+                report.batches,
+                report.peak_in_flight,
+                report.backpressure_waits,
             );
         }
         Command::Scenarios { duration_us, time_scale } => {

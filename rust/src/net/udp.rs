@@ -80,6 +80,18 @@ impl UdpEventReceiver {
         Ok(self.socket.local_addr()?)
     }
 
+    /// Bound how long one [`recv_batch`](Self::recv_batch) may block
+    /// waiting for a datagram. Callers polling in a loop (the streaming
+    /// [`crate::stream::UdpSource`]) size this against their idle
+    /// timeout so an idle socket costs a cheap bounded wait per poll
+    /// instead of a hot spin.
+    pub fn set_poll_timeout(&mut self, timeout: Duration) -> Result<()> {
+        self.socket
+            .set_read_timeout(Some(timeout.max(Duration::from_micros(100))))
+            .context("udp receiver: timeout")?;
+        Ok(())
+    }
+
     /// Receive one datagram's worth of events, or `None` on timeout.
     pub fn recv_batch(&mut self) -> Result<Option<Vec<Event>>> {
         match self.socket.recv_from(&mut self.buf[..]) {

@@ -76,6 +76,36 @@ impl Framer {
         self.window_us
     }
 
+    /// Sensor geometry frames are binned for.
+    pub fn resolution(&self) -> Resolution {
+        self.resolution
+    }
+
+    /// Grow the binning geometry mid-stream (sources that learn their
+    /// extent by observation, e.g. UDP). The in-progress frame is
+    /// zero-padded into the new geometry, so windows and event counts
+    /// are unaffected. Geometry never shrinks.
+    pub fn rebind(&mut self, res: Resolution) {
+        let res = Resolution::new(
+            res.width.max(self.resolution.width),
+            res.height.max(self.resolution.height),
+        );
+        if res == self.resolution {
+            return;
+        }
+        if let Some(frame) = &mut self.current {
+            let mut data = vec![0.0f32; res.pixels()];
+            let (old_w, new_w) = (frame.resolution.width as usize, res.width as usize);
+            for y in 0..frame.resolution.height as usize {
+                data[y * new_w..y * new_w + old_w]
+                    .copy_from_slice(&frame.data[y * old_w..(y + 1) * old_w]);
+            }
+            frame.data = data;
+            frame.resolution = res;
+        }
+        self.resolution = res;
+    }
+
     /// Feed one event; returns any frames completed *before* it.
     pub fn push(&mut self, ev: &Event) -> Vec<Frame> {
         let window_start = (ev.t / self.window_us) * self.window_us;
@@ -173,6 +203,22 @@ mod tests {
         frames.extend(framer.finish());
         assert_eq!(frames.len(), 6); // windows 0..6000
         assert_eq!(frames.iter().filter(|f| f.event_count == 0).count(), 4);
+    }
+
+    #[test]
+    fn rebind_grows_without_splitting_the_window() {
+        let mut framer = Framer::new(Resolution::new(4, 4), 1000);
+        let mut frames = Vec::new();
+        frames.extend(framer.push(&Event::on(2, 2, 10)));
+        framer.rebind(Resolution::new(100, 90));
+        frames.extend(framer.push(&Event::on(99, 89, 20)));
+        frames.extend(framer.finish());
+        // One window, both events, activity preserved at both pixels.
+        assert_eq!(frames.len(), 1);
+        assert_eq!(frames[0].event_count, 2);
+        assert_eq!(frames[0].resolution, Resolution::new(100, 90));
+        assert_eq!(frames[0].data[2 * 100 + 2], 1.0);
+        assert_eq!(frames[0].data[89 * 100 + 99], 1.0);
     }
 
     #[test]

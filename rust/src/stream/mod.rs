@@ -1,0 +1,425 @@
+//! True incremental streaming: the `EventSource` → [`Pipeline`] →
+//! `EventSink` layer.
+//!
+//! The paper's architecture streams events from inputs to outputs with
+//! per-event coroutine handoff; this module is the library's uniform
+//! interface for that flow. An [`EventSource`] *pulls* bounded batches
+//! (chunked file decoders, UDP receivers, synthetic cameras, in-memory
+//! slices), an [`EventSink`] consumes them and `finish()`es to flush,
+//! and [`run`] drives the pair through the cooperative coroutine
+//! runtime ([`crate::rt::LocalExecutor`] + a bounded
+//! [`crate::rt::channel`]) so memory stays **O(chunk)** instead of
+//! O(stream) and I/O overlaps compute. A `Sync` fallback driver exists
+//! for baseline comparisons (the Fig. 1(A)-vs-(B) contrast at the
+//! orchestration layer).
+//!
+//! The split mirrors vector's `FunctionTransform`/`TaskTransform`
+//! idiom: per-event functions stay in [`crate::pipeline`], while
+//! sources and sinks are scheduled by whatever driver fits the
+//! deployment.
+
+pub mod sinks;
+pub mod sources;
+
+use std::cell::{Cell, RefCell};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::aer::{Event, Resolution};
+use crate::pipeline::Pipeline;
+use crate::rt::channel::TrySendError;
+use crate::rt::{channel, yield_now, LocalExecutor};
+
+pub use sinks::{FileSink, FrameSink, NullSink, SinkSummary, StdoutSink, UdpSink, ViewSink};
+pub use sources::{CameraSource, FileSource, MemorySource, SliceSource, UdpSource};
+
+/// A pull-based, bounded-batch event producer.
+///
+/// Implementations must never materialize the whole stream: each
+/// [`next_batch`](EventSource::next_batch) call returns at most a
+/// chunk's worth of events.
+pub trait EventSource: Send {
+    /// Pull the next batch.
+    ///
+    /// * `Ok(Some(batch))` — more events; an **empty** batch means
+    ///   "nothing available right now" (live sources between datagrams),
+    ///   not end of stream — drivers yield and poll again.
+    /// * `Ok(None)` — the stream is exhausted.
+    fn next_batch(&mut self) -> Result<Option<Vec<Event>>>;
+
+    /// Best-effort sensor geometry. Sources that only learn geometry by
+    /// observing events (headerless files, UDP) report a growing
+    /// bounding box; read it after the stream for the final value.
+    fn resolution(&self) -> Resolution;
+
+    /// `false` when [`resolution`](EventSource::resolution) is only an
+    /// observed lower bound that may still grow (live sources).
+    /// Geometry-recording sinks spool and re-encode in that case.
+    fn geometry_known(&self) -> bool {
+        true
+    }
+
+    /// Human-readable description (logs, reports).
+    fn describe(&self) -> String {
+        "source".into()
+    }
+}
+
+/// A batch consumer with an explicit end-of-stream flush.
+pub trait EventSink: Send {
+    /// Consume one batch (already pipeline-processed).
+    fn consume(&mut self, batch: &[Event]) -> Result<()>;
+
+    /// The driver's report of the *source* geometry, delivered once
+    /// just before [`finish`](EventSink::finish). Geometry-recording
+    /// sinks fed through a thinning pipeline use it so the recorded
+    /// geometry covers the sensor, not just the surviving events
+    /// (parity with the batch path). Default: ignored.
+    fn observe_geometry(&mut self, _res: Resolution) {}
+
+    /// End of stream: flush buffered state and report sink-side totals.
+    /// Called exactly once, after the last `consume`.
+    fn finish(&mut self) -> Result<SinkSummary>;
+
+    /// Human-readable description (logs, reports).
+    fn describe(&self) -> String {
+        "sink".into()
+    }
+}
+
+/// How [`run`] schedules the source and sink.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamDriver {
+    /// Producer and consumer coroutines on one cooperative executor,
+    /// handing batches through a bounded async channel — the paper's
+    /// Fig. 1(B) shape. `channel_capacity` is in *batches*; 1 is a
+    /// rendezvous (strictest backpressure, lowest memory).
+    Coroutine {
+        /// Queue capacity in batches (min 1).
+        channel_capacity: usize,
+    },
+    /// Plain pull-process-push loop on the calling thread (baseline).
+    Sync,
+}
+
+/// Streaming run parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamConfig {
+    /// Target events per batch for chunkable sources and the peak
+    /// per-hop memory unit.
+    pub chunk_size: usize,
+    /// Scheduling strategy.
+    pub driver: StreamDriver,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            chunk_size: 4096,
+            driver: StreamDriver::Coroutine { channel_capacity: 1 },
+        }
+    }
+}
+
+impl StreamConfig {
+    /// The synchronous baseline with the default chunk size.
+    pub fn sync() -> Self {
+        StreamConfig { driver: StreamDriver::Sync, ..Default::default() }
+    }
+}
+
+/// Outcome of a streaming run.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    /// Events read from the source.
+    pub events_in: u64,
+    /// Events that survived the pipeline into the sink.
+    pub events_out: u64,
+    /// Frames produced (frame-binning sinks only).
+    pub frames: u64,
+    /// Batches pulled from the source.
+    pub batches: u64,
+    /// Peak events queued between producer and consumer at any instant
+    /// (coroutine driver: channel occupancy; sync driver: the single
+    /// resident batch). Bounded by
+    /// `channel_capacity × max_batch_len` — the O(chunk) guarantee.
+    pub peak_in_flight: usize,
+    /// Times the producer found the channel full and suspended
+    /// (coroutine driver only): a backpressure gauge.
+    pub backpressure_waits: u64,
+    /// Wall time.
+    pub wall: Duration,
+    /// Sensor geometry of the source (final value for growing sources).
+    pub resolution: Resolution,
+}
+
+impl StreamReport {
+    /// Events per second through the pipeline.
+    pub fn throughput(&self) -> f64 {
+        self.events_in as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Drive `source → pipeline → sink` to completion.
+///
+/// Never materializes the stream: memory is bounded by the chunk size
+/// times the channel capacity regardless of stream length.
+pub fn run(
+    source: &mut dyn EventSource,
+    pipeline: &mut Pipeline,
+    sink: &mut dyn EventSink,
+    config: StreamConfig,
+) -> Result<StreamReport> {
+    match config.driver {
+        StreamDriver::Sync => run_sync(source, pipeline, sink),
+        StreamDriver::Coroutine { channel_capacity } => {
+            run_coroutine(source, pipeline, sink, channel_capacity.max(1))
+        }
+    }
+}
+
+/// Baseline driver: one loop, no overlap.
+fn run_sync(
+    source: &mut dyn EventSource,
+    pipeline: &mut Pipeline,
+    sink: &mut dyn EventSink,
+) -> Result<StreamReport> {
+    let t0 = Instant::now();
+    let mut events_in = 0u64;
+    let mut events_out = 0u64;
+    let mut batches = 0u64;
+    let mut peak_in_flight = 0usize;
+    while let Some(batch) = source.next_batch().context("stream source")? {
+        if batch.is_empty() {
+            continue; // live source idle; its poll timeout bounds the wait
+        }
+        events_in += batch.len() as u64;
+        batches += 1;
+        peak_in_flight = peak_in_flight.max(batch.len());
+        let processed = pipeline.process(&batch);
+        events_out += processed.len() as u64;
+        sink.consume(&processed).context("stream sink")?;
+    }
+    sink.observe_geometry(source.resolution());
+    let summary = sink.finish().context("stream sink finish")?;
+    Ok(StreamReport {
+        events_in,
+        events_out,
+        frames: summary.frames,
+        batches,
+        peak_in_flight,
+        backpressure_waits: 0,
+        wall: t0.elapsed(),
+        resolution: source.resolution(),
+    })
+}
+
+/// Coroutine driver: producer and consumer tasks on one cooperative
+/// executor, batches handed through a bounded channel. The producer
+/// suspends the moment the consumer is behind (`channel_capacity`
+/// batches queued), which is the backpressure that keeps memory
+/// O(chunk) for endless sources.
+fn run_coroutine(
+    source: &mut dyn EventSource,
+    pipeline: &mut Pipeline,
+    sink: &mut dyn EventSink,
+    channel_capacity: usize,
+) -> Result<StreamReport> {
+    let t0 = Instant::now();
+    let events_in = Cell::new(0u64);
+    let events_out = Cell::new(0u64);
+    let batches = Cell::new(0u64);
+    let in_flight = Cell::new(0usize);
+    let peak_in_flight = Cell::new(0usize);
+    let backpressure_waits = Cell::new(0u64);
+    let source_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
+    let sink_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
+
+    {
+        let ex = LocalExecutor::new();
+        let (tx, mut rx) = channel::<Vec<Event>>(channel_capacity);
+
+        // ---------------------------------------------------- producer
+        {
+            let (events_in, batches) = (&events_in, &batches);
+            let (in_flight, peak_in_flight) = (&in_flight, &peak_in_flight);
+            let backpressure_waits = &backpressure_waits;
+            let source_err = &source_err;
+            let source = &mut *source;
+            ex.spawn(async move {
+                loop {
+                    let batch = match source.next_batch() {
+                        Ok(Some(batch)) => batch,
+                        Ok(None) => break,
+                        Err(e) => {
+                            *source_err.borrow_mut() = Some(e);
+                            break;
+                        }
+                    };
+                    if batch.is_empty() {
+                        // Live source with nothing pending: hand control
+                        // to the consumer instead of spinning.
+                        yield_now().await;
+                        continue;
+                    }
+                    let n = batch.len();
+                    events_in.set(events_in.get() + n as u64);
+                    batches.set(batches.get() + 1);
+                    match tx.try_send(batch) {
+                        Ok(()) => {}
+                        Err(TrySendError::Closed(_)) => break, // consumer died
+                        Err(TrySendError::Full(batch)) => {
+                            backpressure_waits.set(backpressure_waits.get() + 1);
+                            if tx.send(batch).await.is_err() {
+                                break;
+                            }
+                        }
+                    }
+                    in_flight.set(in_flight.get() + n);
+                    peak_in_flight.set(peak_in_flight.get().max(in_flight.get()));
+                }
+                // `tx` drops here, letting the consumer observe the close.
+            });
+        }
+
+        // ---------------------------------------------------- consumer
+        {
+            let (events_out, in_flight) = (&events_out, &in_flight);
+            let sink_err = &sink_err;
+            let pipeline = &mut *pipeline;
+            let sink = &mut *sink;
+            ex.spawn(async move {
+                while let Some(batch) = rx.recv().await {
+                    in_flight.set(in_flight.get() - batch.len());
+                    let processed = pipeline.process(&batch);
+                    events_out.set(events_out.get() + processed.len() as u64);
+                    if let Err(e) = sink.consume(&processed) {
+                        *sink_err.borrow_mut() = Some(e);
+                        break; // dropping `rx` fails producer sends fast
+                    }
+                }
+            });
+        }
+
+        ex.run();
+    }
+
+    if let Some(e) = source_err.into_inner() {
+        return Err(e.context("stream source"));
+    }
+    if let Some(e) = sink_err.into_inner() {
+        return Err(e.context("stream sink"));
+    }
+    sink.observe_geometry(source.resolution());
+    let summary = sink.finish().context("stream sink finish")?;
+    Ok(StreamReport {
+        events_in: events_in.get(),
+        events_out: events_out.get(),
+        frames: summary.frames,
+        batches: batches.get(),
+        peak_in_flight: peak_in_flight.get(),
+        backpressure_waits: backpressure_waits.get(),
+        wall: t0.elapsed(),
+        resolution: source.resolution(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::Polarity;
+    use crate::pipeline::ops::PolarityFilter;
+    use crate::testutil::synthetic_events;
+
+    fn drivers() -> [StreamConfig; 3] {
+        let wide = StreamDriver::Coroutine { channel_capacity: 4 };
+        [
+            StreamConfig::default(),
+            StreamConfig { driver: wide, ..Default::default() },
+            StreamConfig::sync(),
+        ]
+    }
+
+    #[test]
+    fn all_drivers_count_identically() {
+        let events = synthetic_events(5000, 64, 64);
+        let on = events.iter().filter(|e| e.p.is_on()).count() as u64;
+        for config in drivers() {
+            let mut source =
+                MemorySource::new(events.clone(), Resolution::new(64, 64), config.chunk_size);
+            let mut pipeline = Pipeline::new().then(PolarityFilter::keep(Polarity::On));
+            let mut sink = NullSink::default();
+            let report = run(&mut source, &mut pipeline, &mut sink, config).unwrap();
+            assert_eq!(report.events_in, 5000, "{config:?}");
+            assert_eq!(report.events_out, on, "{config:?}");
+            assert!(report.batches >= 5000 / config.chunk_size as u64, "{config:?}");
+        }
+    }
+
+    #[test]
+    fn peak_in_flight_is_bounded_by_channel_times_chunk() {
+        let events = synthetic_events(100_000, 128, 128);
+        let config = StreamConfig {
+            chunk_size: 512,
+            driver: StreamDriver::Coroutine { channel_capacity: 1 },
+        };
+        let mut source = MemorySource::new(events, Resolution::DVS_128, config.chunk_size);
+        let mut sink = NullSink::default();
+        let report = run(&mut source, &mut Pipeline::new(), &mut sink, config).unwrap();
+        assert_eq!(report.events_in, 100_000);
+        assert!(
+            report.peak_in_flight <= config.chunk_size,
+            "peak {} exceeds chunk {}",
+            report.peak_in_flight,
+            config.chunk_size
+        );
+        assert!(report.peak_in_flight > 0);
+    }
+
+    #[test]
+    fn sink_counts_frames() {
+        let events = synthetic_events(2000, 64, 64);
+        let mut source = MemorySource::new(events, Resolution::new(64, 64), 256);
+        let mut sink = FrameSink::new(Resolution::new(64, 64), 1000);
+        let report =
+            run(&mut source, &mut Pipeline::new(), &mut sink, StreamConfig::default()).unwrap();
+        assert!(report.frames > 0);
+        assert_eq!(report.events_out, 2000);
+    }
+
+    #[test]
+    fn empty_source_still_finishes_sink() {
+        for config in drivers() {
+            let mut source = MemorySource::new(Vec::new(), Resolution::new(4, 4), 16);
+            let mut sink = NullSink::default();
+            let report = run(&mut source, &mut Pipeline::new(), &mut sink, config).unwrap();
+            assert_eq!(report.events_in, 0);
+            assert_eq!(report.batches, 0);
+        }
+    }
+
+    #[test]
+    fn source_error_propagates() {
+        struct Failing(u32);
+        impl EventSource for Failing {
+            fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
+                self.0 += 1;
+                if self.0 < 3 {
+                    Ok(Some(vec![Event::on(0, 0, self.0 as u64)]))
+                } else {
+                    anyhow::bail!("sensor unplugged")
+                }
+            }
+            fn resolution(&self) -> Resolution {
+                Resolution::new(4, 4)
+            }
+        }
+        for config in drivers() {
+            let mut source = Failing(0);
+            let mut sink = NullSink::default();
+            let err = run(&mut source, &mut Pipeline::new(), &mut sink, config).unwrap_err();
+            assert!(format!("{err:?}").contains("sensor unplugged"), "{config:?}");
+        }
+    }
+}

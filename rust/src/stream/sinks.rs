@@ -1,0 +1,528 @@
+//! [`EventSink`] implementations: file writers, UDP sender, stdout,
+//! null, frame binning, and the terminal viewer.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::aer::{Event, Resolution};
+use crate::formats::streaming::StreamingEncoder;
+use crate::formats::Format;
+use crate::net::UdpEventSender;
+use crate::pipeline::framer::Framer;
+use crate::pipeline::viewer;
+
+use super::EventSink;
+
+/// Sink-side totals reported by [`EventSink::finish`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SinkSummary {
+    /// Frames produced (frame-binning sinks; 0 elsewhere).
+    pub frames: u64,
+}
+
+/// Count-only sink (benchmarks, dry runs).
+#[derive(Debug, Default)]
+pub struct NullSink {
+    /// Events consumed.
+    pub events: u64,
+}
+
+impl EventSink for NullSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        self.events += batch.len() as u64;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        Ok(SinkSummary::default())
+    }
+
+    fn describe(&self) -> String {
+        "null".into()
+    }
+}
+
+/// Incremental event-file writer in any [`Format`].
+///
+/// Two modes: when the source geometry is known up front
+/// ([`create`](FileSink::create)), batches encode straight to the
+/// target file. When it is not — live sources, where the header's
+/// geometry would otherwise be stamped before the events defining it
+/// arrive — [`create_observing`](FileSink::create_observing) spools
+/// lossless fixed-width records to a temporary file and re-encodes at
+/// `finish()` with the exact observed bounding box (O(chunk) memory,
+/// one extra pass of disk I/O), matching the old batch path's geometry.
+pub struct FileSink {
+    path: PathBuf,
+    mode: FileSinkMode,
+}
+
+enum FileSinkMode {
+    Direct {
+        writer: std::io::BufWriter<std::fs::File>,
+        encoder: StreamingEncoder,
+    },
+    Spooled {
+        format: Format,
+        tmp_path: PathBuf,
+        writer: std::io::BufWriter<std::fs::File>,
+        observed: Resolution,
+    },
+}
+
+/// Spool record layout: fixed 16 bytes, lossless for any [`Event`]
+/// (the packed raw format masks coordinates to 11 bits and timestamps
+/// to 40, so it cannot serve as a spool for formats with wider ranges).
+const SPOOL_RECORD: usize = 16;
+
+fn spool_write(batch: &[Event], w: &mut impl Write) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(SPOOL_RECORD * batch.len());
+    for ev in batch {
+        buf.extend_from_slice(&ev.t.to_le_bytes());
+        buf.extend_from_slice(&ev.x.to_le_bytes());
+        buf.extend_from_slice(&ev.y.to_le_bytes());
+        buf.push(u8::from(ev.p.is_on()));
+        buf.extend_from_slice(&[0u8; 3]);
+    }
+    w.write_all(&buf)
+}
+
+fn spool_decode(rec: &[u8]) -> Event {
+    Event {
+        t: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
+        x: u16::from_le_bytes(rec[8..10].try_into().unwrap()),
+        y: u16::from_le_bytes(rec[10..12].try_into().unwrap()),
+        p: crate::aer::Polarity::from_bool(rec[12] != 0),
+    }
+}
+
+impl FileSink {
+    /// Create/truncate `path`, writing a stream for geometry `res`.
+    pub fn create(path: &Path, format: Format, res: Resolution) -> Result<Self> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(FileSink {
+            path: path.to_path_buf(),
+            mode: FileSinkMode::Direct {
+                writer: std::io::BufWriter::new(file),
+                encoder: StreamingEncoder::new(format, res)?,
+            },
+        })
+    }
+
+    /// Create/truncate `path` for a source whose geometry is only
+    /// learned by observation: the header is written at `finish()` with
+    /// the exact bounding box of everything consumed.
+    pub fn create_observing(path: &Path, format: Format) -> Result<Self> {
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".spool");
+        let tmp_path = PathBuf::from(tmp);
+        let file = std::fs::File::create(&tmp_path)
+            .with_context(|| format!("creating {}", tmp_path.display()))?;
+        Ok(FileSink {
+            path: path.to_path_buf(),
+            mode: FileSinkMode::Spooled {
+                format,
+                writer: std::io::BufWriter::new(file),
+                observed: Resolution::new(1, 1),
+                tmp_path,
+            },
+        })
+    }
+
+    fn format(&self) -> Format {
+        match &self.mode {
+            FileSinkMode::Direct { encoder, .. } => encoder.format(),
+            FileSinkMode::Spooled { format, .. } => *format,
+        }
+    }
+}
+
+impl Drop for FileSink {
+    fn drop(&mut self) {
+        // Error paths skip finish(); don't leave a (possibly large)
+        // spool file behind. After a successful finish this is a no-op.
+        if let FileSinkMode::Spooled { tmp_path, .. } = &self.mode {
+            std::fs::remove_file(tmp_path.as_path()).ok();
+        }
+    }
+}
+
+impl EventSink for FileSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        match &mut self.mode {
+            FileSinkMode::Direct { writer, encoder } => encoder
+                .write_batch(batch, writer)
+                .with_context(|| format!("writing {}", self.path.display())),
+            FileSinkMode::Spooled { writer, observed, .. } => {
+                super::sources::grow_resolution(observed, batch);
+                spool_write(batch, writer)
+                    .with_context(|| format!("spooling for {}", self.path.display()))
+            }
+        }
+    }
+
+    fn observe_geometry(&mut self, res: Resolution) {
+        // Cover the full source geometry, not just the events that
+        // survived the pipeline into this file (batch-path parity).
+        if let FileSinkMode::Spooled { observed, .. } = &mut self.mode {
+            observed.width = observed.width.max(res.width);
+            observed.height = observed.height.max(res.height);
+        }
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        match &mut self.mode {
+            FileSinkMode::Direct { writer, encoder } => {
+                encoder.finish(writer)?;
+                writer
+                    .flush()
+                    .with_context(|| format!("flushing {}", self.path.display()))?;
+            }
+            FileSinkMode::Spooled { format, tmp_path, writer, observed } => {
+                writer
+                    .flush()
+                    .with_context(|| format!("flushing {}", tmp_path.display()))?;
+                // Second pass: re-encode the spool with the now-exact
+                // geometry, still one chunk at a time.
+                use std::io::Read;
+                let mut spool = std::io::BufReader::new(
+                    std::fs::File::open(&tmp_path)
+                        .with_context(|| format!("reopening {}", tmp_path.display()))?,
+                );
+                let file = std::fs::File::create(&self.path)
+                    .with_context(|| format!("creating {}", self.path.display()))?;
+                let mut out = std::io::BufWriter::new(file);
+                let mut enc = StreamingEncoder::new(*format, *observed)?;
+                let mut rec = [0u8; SPOOL_RECORD];
+                let mut batch = Vec::with_capacity(4096);
+                loop {
+                    match spool.read_exact(&mut rec) {
+                        Ok(()) => {
+                            batch.push(spool_decode(&rec));
+                            if batch.len() == 4096 {
+                                enc.write_batch(&batch, &mut out)?;
+                                batch.clear();
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+                        Err(e) => {
+                            return Err(e)
+                                .with_context(|| format!("reading {}", tmp_path.display()));
+                        }
+                    }
+                }
+                if !batch.is_empty() {
+                    enc.write_batch(&batch, &mut out)?;
+                }
+                enc.finish(&mut out)?;
+                out.flush().with_context(|| format!("flushing {}", self.path.display()))?;
+                std::fs::remove_file(tmp_path.as_path()).ok();
+            }
+        }
+        Ok(SinkSummary::default())
+    }
+
+    fn describe(&self) -> String {
+        format!("file({}, {})", self.path.display(), self.format())
+    }
+}
+
+/// SPIF datagrams to a UDP peer.
+pub struct UdpSink {
+    tx: UdpEventSender,
+}
+
+impl UdpSink {
+    /// Aim at `addr` (e.g. `"10.0.0.1:3333"`).
+    pub fn connect(addr: &str) -> Result<Self> {
+        Ok(UdpSink { tx: UdpEventSender::connect(addr)? })
+    }
+
+    /// Events sent so far.
+    pub fn events_sent(&self) -> u64 {
+        self.tx.events_sent
+    }
+}
+
+impl EventSink for UdpSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        self.tx.send(batch)
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        Ok(SinkSummary::default())
+    }
+
+    fn describe(&self) -> String {
+        "udp".into()
+    }
+}
+
+/// `x,y,p,t` lines to standard output (shell pipelines, Fig. 2B).
+pub struct StdoutSink {
+    out: std::io::BufWriter<std::io::Stdout>,
+}
+
+impl Default for StdoutSink {
+    fn default() -> Self {
+        StdoutSink { out: std::io::BufWriter::new(std::io::stdout()) }
+    }
+}
+
+impl StdoutSink {
+    /// New stdout sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EventSink for StdoutSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        for ev in batch {
+            writeln!(self.out, "{},{},{},{}", ev.x, ev.y, u8::from(ev.p.is_on()), ev.t)?;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        self.out.flush()?;
+        Ok(SinkSummary::default())
+    }
+
+    fn describe(&self) -> String {
+        "stdout".into()
+    }
+}
+
+/// Bin events into fixed windows and count frames (the "GPU direction"
+/// without a device; the full device path lives in
+/// [`crate::coordinator::scenarios`]).
+pub struct FrameSink {
+    framer: Framer,
+    window_us: u64,
+    frames: u64,
+    /// Events skipped because their coordinates are unrepresentable as
+    /// a geometry (x or y == `u16::MAX`).
+    pub oob_dropped: u64,
+}
+
+impl FrameSink {
+    /// Bin into `window_us` windows for geometry `res`.
+    pub fn new(res: Resolution, window_us: u64) -> Self {
+        FrameSink { framer: Framer::new(res, window_us), window_us, frames: 0, oob_dropped: 0 }
+    }
+
+    /// Frames completed so far.
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    /// Grow the binning geometry when a source only learns its extent
+    /// by observation (UDP, headerless files). The in-progress frame is
+    /// carried over ([`Framer::rebind`]), so windows and counts stay
+    /// exactly what a whole-stream binning would produce.
+    fn ensure_geometry(&mut self, batch: &[Event]) {
+        if let Some(need) = grown_geometry(self.framer.resolution(), batch) {
+            self.framer.rebind(need);
+        }
+    }
+}
+
+/// `Some(grown)` iff `batch` contains events outside `current` (shared
+/// by the frame-binning sinks; see also
+/// [`super::sources::grow_resolution`] for the source-side tracker).
+fn grown_geometry(current: Resolution, batch: &[Event]) -> Option<Resolution> {
+    let mut need = current;
+    super::sources::grow_resolution(&mut need, batch);
+    (need != current).then_some(need)
+}
+
+impl EventSink for FrameSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        self.ensure_geometry(batch);
+        let res = self.framer.resolution();
+        for ev in batch {
+            // Only unrepresentable coordinates (x or y == u16::MAX,
+            // where width/height would need 65536) fall outside after
+            // growth; count them instead of indexing out of bounds.
+            if !res.contains(ev) {
+                self.oob_dropped += 1;
+                continue;
+            }
+            self.frames += self.framer.push(ev).len() as u64;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        self.frames += u64::from(self.framer.finish().is_some());
+        Ok(SinkSummary { frames: self.frames })
+    }
+
+    fn describe(&self) -> String {
+        format!("frames({} µs)", self.window_us)
+    }
+}
+
+/// Terminal density-art viewer: renders the first `max_frames`
+/// completed windows as they stream (the batch path rendered evenly
+/// spaced frames; a live stream has no total to space against).
+pub struct ViewSink {
+    framer: Framer,
+    window_us: u64,
+    max_frames: usize,
+    rendered: usize,
+    frames: u64,
+}
+
+impl ViewSink {
+    /// Render up to `max_frames` windows of `window_us` each.
+    pub fn new(res: Resolution, window_us: u64, max_frames: usize) -> Self {
+        ViewSink {
+            framer: Framer::new(res, window_us),
+            window_us,
+            max_frames,
+            rendered: 0,
+            frames: 0,
+        }
+    }
+
+    fn show(&mut self, frame: &crate::pipeline::framer::Frame) {
+        if self.rendered >= self.max_frames {
+            return;
+        }
+        self.rendered += 1;
+        println!(
+            "── window [{} µs, {} µs) — {} events ──",
+            frame.t_start, frame.t_end, frame.event_count
+        );
+        print!("{}", viewer::render_frame(frame, 69, 26));
+    }
+}
+
+impl EventSink for ViewSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        // Same growth rule as FrameSink: live sources only learn their
+        // geometry by observation; the in-progress window is carried.
+        if let Some(need) = grown_geometry(self.framer.resolution(), batch) {
+            self.framer.rebind(need);
+        }
+        let res = self.framer.resolution();
+        for ev in batch {
+            if !res.contains(ev) {
+                continue; // unrepresentable coordinate (u16::MAX)
+            }
+            for frame in self.framer.push(ev) {
+                self.frames += 1;
+                self.show(&frame);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        if let Some(frame) = self.framer.finish() {
+            self.frames += 1;
+            self.show(&frame);
+        }
+        Ok(SinkSummary { frames: self.frames })
+    }
+
+    fn describe(&self) -> String {
+        format!("view({} µs, ≤{} frames)", self.window_us, self.max_frames)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn null_sink_counts() {
+        let events = synthetic_events(123, 16, 16);
+        let mut sink = NullSink::default();
+        sink.consume(&events).unwrap();
+        sink.consume(&events).unwrap();
+        assert_eq!(sink.events, 246);
+        assert_eq!(sink.finish().unwrap().frames, 0);
+    }
+
+    #[test]
+    fn frame_sink_matches_batch_framer() {
+        let events = synthetic_events(5000, 32, 32);
+        let expected =
+            Framer::frames_of(Resolution::new(32, 32), 700, &events).len() as u64;
+        let mut sink = FrameSink::new(Resolution::new(32, 32), 700);
+        for batch in events.chunks(137) {
+            sink.consume(batch).unwrap();
+        }
+        assert_eq!(sink.finish().unwrap().frames, expected);
+    }
+
+    #[test]
+    fn frame_sink_grows_geometry_instead_of_panicking() {
+        let mut sink = FrameSink::new(Resolution::new(4, 4), 1000);
+        sink.consume(&[Event::on(2, 2, 10)]).unwrap();
+        // Outside the initial 4×4 geometry: must bin, not panic — and
+        // both events share one window, so exactly one frame results.
+        sink.consume(&[Event::on(100, 80, 20)]).unwrap();
+        assert_eq!(sink.finish().unwrap().frames, 1);
+    }
+
+    #[test]
+    fn view_sink_grows_geometry_instead_of_panicking() {
+        // A live (UDP-like) source starts at the 1×1 placeholder
+        // geometry; the viewer must grow, not index out of bounds.
+        let mut sink = ViewSink::new(Resolution::new(1, 1), 1000, 0);
+        sink.consume(&[Event::on(0, 0, 10)]).unwrap();
+        sink.consume(&[Event::on(120, 90, 20)]).unwrap();
+        assert_eq!(sink.finish().unwrap().frames, 1);
+    }
+
+    #[test]
+    fn observing_file_sink_stamps_exact_bounding_geometry() {
+        // The UDP→file path: geometry unknown at creation, learned by
+        // observation, header must record the exact bounding box.
+        let dir = std::env::temp_dir()
+            .join(format!("aestream-spool-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("observed.aedat");
+        let events = synthetic_events(700, 346, 260);
+        let expected_res = crate::formats::bounding_resolution(&events);
+        let mut sink = FileSink::create_observing(&path, Format::Aedat).unwrap();
+        for batch in events.chunks(100) {
+            sink.consume(batch).unwrap();
+        }
+        sink.finish().unwrap();
+        let (decoded, res, fmt) = crate::formats::read_events_auto(&path).unwrap();
+        assert_eq!(decoded, events);
+        assert_eq!(res, expected_res);
+        assert_eq!(fmt, Format::Aedat);
+        // The spool file is cleaned up.
+        assert!(!dir.join("observed.aedat.spool").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_sink_roundtrips_through_batch_reader() {
+        let dir = std::env::temp_dir()
+            .join(format!("aestream-sink-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.aeraw");
+        let events = synthetic_events(900, 128, 128);
+        let mut sink = FileSink::create(&path, Format::Raw, Resolution::DVS_128).unwrap();
+        for batch in events.chunks(250) {
+            sink.consume(batch).unwrap();
+        }
+        sink.finish().unwrap();
+        let (decoded, res, fmt) = crate::formats::read_events_auto(&path).unwrap();
+        assert_eq!(decoded, events);
+        assert_eq!(res, Resolution::DVS_128);
+        assert_eq!(fmt, Format::Raw);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
