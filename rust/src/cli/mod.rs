@@ -4,13 +4,17 @@
 //! aestream input file recording.aedat output udp 127.0.0.1:3333
 //! aestream input synthetic --duration 2s filter polarity on output stdout
 //! aestream input udp 0.0.0.0:3333 output file out.aedat
+//! aestream input synthetic input synthetic output file fused.aedat output null --threads 2
 //! aestream scenarios --duration 2s --time-scale 20
 //! aestream table1
 //! ```
 //!
 //! Hand-rolled parsing (no clap offline): a token-stream grammar of
-//! `input <spec> [filter <name> <args>…]* output <spec>` mirrors the
-//! original AEStream CLI's free input/output pairing.
+//! `input <spec>… [filter <name> <args>…]* output <spec>…` mirrors the
+//! original AEStream CLI's free input/output pairing. Repeating
+//! `input`/`output` clauses builds a fan-in/fan-out topology: the
+//! inputs are merged in timestamp order onto a side-by-side canvas and
+//! the outputs are fed per `--route` (broadcast by default).
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -19,15 +23,30 @@ use anyhow::{bail, Context, Result};
 
 use crate::aer::{Polarity, Resolution};
 use crate::camera::CameraConfig;
-use crate::coordinator::stream::{Sink, Source, StreamConfig, StreamDriver};
+use crate::coordinator::stream::{RoutePolicy, Sink, Source, StreamConfig, StreamDriver};
 use crate::formats::Format;
+use crate::pipeline::fusion::SourceLayout;
 use crate::pipeline::ops;
 use crate::pipeline::Pipeline;
 
 /// A parsed CLI invocation.
 pub enum Command {
-    /// `input … [filter …] output … [--chunk N] [--sync]`
-    Stream { source: Source, pipeline: Pipeline, sink: Sink, config: StreamConfig },
+    /// `input …+ [filter …]* output …+ [--chunk N] [--sync] [--threads N] [--route R]`
+    Stream {
+        /// One or more inputs (several fan in through the merge).
+        sources: Vec<Source>,
+        /// The shared filter pipeline.
+        pipeline: Pipeline,
+        /// One or more outputs (several fan out per `route`).
+        sinks: Vec<Sink>,
+        /// Chunking and edge-driver configuration.
+        config: StreamConfig,
+        /// `--threads N`: 0/1 keeps every source on the executor
+        /// thread; ≥ 2 pins each source to its own OS thread.
+        threads: usize,
+        /// How events are distributed across the outputs.
+        route: RoutePolicy,
+    },
     /// Run the four Fig. 4 scenarios.
     Scenarios {
         /// Synthetic recording length (µs).
@@ -77,18 +96,22 @@ pub fn parse(args: &[String]) -> Result<Command> {
     }
 }
 
-fn parse_stream<'a, I: Iterator<Item = &'a str>>(
+fn parse_input<'a, I: Iterator<Item = &'a str>>(
     toks: &mut std::iter::Peekable<I>,
-) -> Result<Command> {
-    // ---- input
-    let kw = toks.next();
-    debug_assert_eq!(kw, Some("input"));
-    let source = match toks.next().context("input needs a kind")? {
+) -> Result<Source> {
+    Ok(match toks.next().context("input needs a kind")? {
         "file" => Source::File(PathBuf::from(toks.next().context("input file needs a path")?)),
-        "udp" => Source::Udp {
-            bind: toks.next().context("input udp needs an address")?.to_string(),
-            idle_timeout: Duration::from_millis(500),
-        },
+        "udp" => {
+            let bind = toks.next().context("input udp needs an address")?.to_string();
+            let mut geometry = None;
+            while toks.peek() == Some(&"--geometry") {
+                toks.next();
+                geometry = Some(parse_geometry(
+                    toks.next().context("--geometry needs WxH")?,
+                )?);
+            }
+            Source::Udp { bind, idle_timeout: Duration::from_millis(500), geometry }
+        }
         "synthetic" => {
             let mut duration_us = 1_000_000u64;
             while toks.peek() == Some(&"--duration") {
@@ -99,11 +122,82 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
             Source::Synthetic { config: CameraConfig::default(), duration_us }
         }
         other => bail!("unknown input kind {other:?} (file|udp|synthetic)"),
-    };
+    })
+}
 
-    // ---- filters
+fn parse_output<'a, I: Iterator<Item = &'a str>>(
+    toks: &mut std::iter::Peekable<I>,
+) -> Result<Sink> {
+    Ok(match toks.next().context("output needs a kind")? {
+        "file" => {
+            let path = PathBuf::from(toks.next().context("output file needs a path")?);
+            let format = path
+                .extension()
+                .and_then(|e| e.to_str())
+                .and_then(Format::from_extension)
+                .context("cannot infer output format from extension")?;
+            Sink::File(path, format)
+        }
+        "udp" => Sink::Udp(toks.next().context("output udp needs an address")?.to_string()),
+        "stdout" => Sink::Stdout,
+        "null" => Sink::Null,
+        "frames" => {
+            let window_us = toks
+                .next()
+                .context("output frames needs a window (µs)")?
+                .parse()
+                .context("bad window")?;
+            Sink::Frames { window_us }
+        }
+        "view" => {
+            let window_us = toks
+                .next()
+                .context("output view needs a window (µs)")?
+                .parse()
+                .context("bad window")?;
+            Sink::View { window_us, max_frames: 8 }
+        }
+        other => bail!("unknown output kind {other:?} (file|udp|stdout|null|frames|view)"),
+    })
+}
+
+/// The canvas geometry the parsed inputs will fuse onto, as far as the
+/// command line can know it before sources are opened: declared
+/// geometries where given, DAVIS_346 otherwise, laid out by the same
+/// [`SourceLayout::side_by_side`] the topology will use (one source of
+/// truth for the layout math).
+fn assumed_canvas(sources: &[Source]) -> Resolution {
+    let resolutions: Vec<Resolution> = sources
+        .iter()
+        .map(|source| match source {
+            Source::Udp { geometry: Some(res), .. } => *res,
+            Source::Memory(_, res) => *res,
+            _ => Resolution::DAVIS_346,
+        })
+        .collect();
+    SourceLayout::side_by_side(&resolutions).canvas
+}
+
+fn parse_stream<'a, I: Iterator<Item = &'a str>>(
+    toks: &mut std::iter::Peekable<I>,
+) -> Result<Command> {
+    // ---- inputs (one or more clauses fan in)
+    let mut sources = Vec::new();
+    while toks.peek() == Some(&"input") {
+        toks.next();
+        sources.push(parse_input(toks)?);
+    }
+    debug_assert!(!sources.is_empty(), "parse_stream is entered on `input`");
+
+    // ---- filters (one shared pipeline)
     let mut pipeline = Pipeline::new();
-    let res = Resolution::DAVIS_346; // stateful filters need geometry
+    // Stateful filters need geometry before the sources are opened. Use
+    // what the command line declares: each input's explicit geometry
+    // where given, the DAVIS_346 assumption otherwise, summed side by
+    // side the way the fused canvas will be laid out. (Events beyond a
+    // filter's geometry pass through it untracked rather than
+    // panicking, so an undeclared larger sensor degrades gracefully.)
+    let res = assumed_canvas(&sources);
     while toks.peek() == Some(&"filter") {
         toks.next();
         let name = toks.next().context("filter needs a name")?;
@@ -158,44 +252,21 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
         };
     }
 
-    // ---- output
+    // ---- outputs (one or more clauses fan out)
+    let mut sinks = Vec::new();
     match toks.next() {
-        Some("output") => {}
+        Some("output") => sinks.push(parse_output(toks)?),
         other => bail!("expected `output`, got {other:?}"),
     }
-    let sink = match toks.next().context("output needs a kind")? {
-        "file" => {
-            let path = PathBuf::from(toks.next().context("output file needs a path")?);
-            let format = path
-                .extension()
-                .and_then(|e| e.to_str())
-                .and_then(Format::from_extension)
-                .context("cannot infer output format from extension")?;
-            Sink::File(path, format)
-        }
-        "udp" => Sink::Udp(toks.next().context("output udp needs an address")?.to_string()),
-        "stdout" => Sink::Stdout,
-        "null" => Sink::Null,
-        "frames" => {
-            let window_us = toks
-                .next()
-                .context("output frames needs a window (µs)")?
-                .parse()
-                .context("bad window")?;
-            Sink::Frames { window_us }
-        }
-        "view" => {
-            let window_us = toks
-                .next()
-                .context("output view needs a window (µs)")?
-                .parse()
-                .context("bad window")?;
-            Sink::View { window_us, max_frames: 8 }
-        }
-        other => bail!("unknown output kind {other:?} (file|udp|stdout|null|frames|view)"),
-    };
+    while toks.peek() == Some(&"output") {
+        toks.next();
+        sinks.push(parse_output(toks)?);
+    }
+
     // ---- streaming options
     let mut config = StreamConfig::default();
+    let mut threads = 1usize;
+    let mut route = RoutePolicy::Broadcast;
     while let Some(tok) = toks.next() {
         match tok {
             "--chunk" => {
@@ -209,10 +280,25 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
                 }
             }
             "--sync" => config.driver = StreamDriver::Sync,
+            "--threads" => {
+                threads = toks
+                    .next()
+                    .context("--threads needs a count")?
+                    .parse()
+                    .context("bad --threads")?;
+            }
+            "--route" => {
+                route = match toks.next().context("--route needs a policy")? {
+                    "broadcast" => RoutePolicy::Broadcast,
+                    "polarity" => RoutePolicy::Polarity,
+                    "stripes" => RoutePolicy::Stripes,
+                    other => bail!("unknown route {other:?} (broadcast|polarity|stripes)"),
+                };
+            }
             extra => bail!("unexpected trailing argument {extra:?}"),
         }
     }
-    Ok(Command::Stream { source, pipeline, sink, config })
+    Ok(Command::Stream { sources, pipeline, sinks, config, threads, route })
 }
 
 /// Parse `"500ms"`, `"2s"`, `"1500us"`, or a bare number of seconds.
@@ -231,17 +317,30 @@ pub fn parse_duration(s: &str) -> Result<Duration> {
     Ok(Duration::from_secs_f64(secs))
 }
 
+/// Parse `"346x260"` into a [`Resolution`].
+pub fn parse_geometry(s: &str) -> Result<Resolution> {
+    let (w, h) = s.split_once('x').with_context(|| format!("geometry {s:?} must be WxH"))?;
+    let width = w.parse().with_context(|| format!("bad geometry width {w:?}"))?;
+    let height = h.parse().with_context(|| format!("bad geometry height {h:?}"))?;
+    if width == 0 || height == 0 {
+        bail!("geometry must be at least 1x1");
+    }
+    Ok(Resolution::new(width, height))
+}
+
 /// Usage text.
 pub const USAGE: &str = "\
 aestream — accelerated event-based processing with coroutines (reproduction)
 
 USAGE:
-  aestream input <file PATH | udp ADDR | synthetic [--duration D]>
+  aestream input <file PATH | udp ADDR [--geometry WxH] |
+                  synthetic [--duration D]>...
            [filter <polarity on|off | crop X Y W H | downsample F |
                     refractory US | denoise US | flip-x | flip-y>]...
            output <file PATH | udp ADDR | stdout | null | frames WINDOW_US |
-                   view WINDOW_US>
-           [--chunk EVENTS] [--sync]
+                   view WINDOW_US>...
+           [--chunk EVENTS] [--sync] [--threads N]
+           [--route broadcast|polarity|stripes]
   aestream scenarios [--duration D] [--time-scale X]
   aestream table1
   aestream help
@@ -250,9 +349,18 @@ Streams run incrementally (O(chunk) memory) on the coroutine driver;
 --chunk sets the batch size (default 4096) and --sync selects the
 synchronous baseline driver instead.
 
-EXAMPLES (paper Fig. 2B):
+Repeat `input` to fan several sources in: they merge in timestamp
+order onto a side-by-side canvas (live UDP inputs must declare
+--geometry). Repeat `output` to fan out; --route picks broadcast
+(default), polarity (ON→first, OFF→second), or vertical stripes.
+--threads 2+ pins each source to its own OS thread, feeding the
+coroutine executor through a lock-free ring.
+
+EXAMPLES (paper Fig. 2B and §6 fusion):
   aestream input file recording.aedat output udp 10.0.0.1:3333
   aestream input synthetic --duration 2s filter polarity on output stdout
+  aestream input synthetic input synthetic \\
+           output file fused.aedat output view 10000 --threads 2
 ";
 
 #[cfg(test)]
@@ -268,9 +376,16 @@ mod tests {
         let cmd =
             parse(&sv(&["input", "file", "r.aedat", "output", "udp", "1.2.3.4:3333"])).unwrap();
         match cmd {
-            Command::Stream { source: Source::File(p), sink: Sink::Udp(a), .. } => {
-                assert_eq!(p, PathBuf::from("r.aedat"));
-                assert_eq!(a, "1.2.3.4:3333");
+            Command::Stream { sources, sinks, .. } => {
+                assert_eq!(sources.len(), 1);
+                assert_eq!(sinks.len(), 1);
+                match (&sources[0], &sinks[0]) {
+                    (Source::File(p), Sink::Udp(a)) => {
+                        assert_eq!(*p, PathBuf::from("r.aedat"));
+                        assert_eq!(a, "1.2.3.4:3333");
+                    }
+                    _ => panic!("wrong parse"),
+                }
             }
             _ => panic!("wrong parse"),
         }
@@ -311,9 +426,11 @@ mod tests {
         ]))
         .unwrap();
         match cmd {
-            Command::Stream { config, .. } => {
+            Command::Stream { config, threads, route, .. } => {
                 assert_eq!(config.chunk_size, 512);
                 assert_eq!(config.driver, StreamDriver::Sync);
+                assert_eq!(threads, 1);
+                assert_eq!(route, RoutePolicy::Broadcast);
             }
             _ => panic!("wrong parse"),
         }
@@ -329,6 +446,53 @@ mod tests {
     }
 
     #[test]
+    fn parses_multi_io_topology() {
+        // The acceptance-criteria invocation shape.
+        let cmd = parse(&sv(&[
+            "input", "synthetic", "--duration", "50ms", "input", "synthetic", "--duration",
+            "50ms", "output", "file", "fused.aedat", "output", "null", "--threads", "2",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { sources, sinks, threads, route, .. } => {
+                assert_eq!(sources.len(), 2);
+                assert_eq!(sinks.len(), 2);
+                assert_eq!(threads, 2);
+                assert_eq!(route, RoutePolicy::Broadcast);
+                assert!(matches!(sinks[0], Sink::File(..)));
+                assert!(matches!(sinks[1], Sink::Null));
+            }
+            _ => panic!("wrong parse"),
+        }
+    }
+
+    #[test]
+    fn parses_route_and_udp_geometry() {
+        let cmd = parse(&sv(&[
+            "input", "udp", "0.0.0.0:3333", "--geometry", "346x260", "input", "udp",
+            "0.0.0.0:4444", "--geometry", "128x128", "output", "null", "output", "null",
+            "--route", "polarity",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { sources, route, .. } => {
+                assert_eq!(route, RoutePolicy::Polarity);
+                match &sources[0] {
+                    Source::Udp { geometry, .. } => {
+                        assert_eq!(*geometry, Some(Resolution::new(346, 260)));
+                    }
+                    _ => panic!("wrong parse"),
+                }
+            }
+            _ => panic!("wrong parse"),
+        }
+        assert!(parse(&sv(&[
+            "input", "synthetic", "output", "null", "--route", "zigzag",
+        ]))
+        .is_err());
+    }
+
+    #[test]
     fn duration_units() {
         assert_eq!(parse_duration("2s").unwrap(), Duration::from_secs(2));
         assert_eq!(parse_duration("500ms").unwrap(), Duration::from_millis(500));
@@ -338,12 +502,21 @@ mod tests {
     }
 
     #[test]
+    fn geometry_syntax() {
+        assert_eq!(parse_geometry("346x260").unwrap(), Resolution::new(346, 260));
+        assert!(parse_geometry("346").is_err());
+        assert!(parse_geometry("0x260").is_err());
+        assert!(parse_geometry("axb").is_err());
+    }
+
+    #[test]
     fn rejects_malformed() {
         assert!(parse(&sv(&["input"])).is_err());
         assert!(parse(&sv(&["input", "file", "x", "output"])).is_err());
         assert!(parse(&sv(&["input", "file", "x", "output", "file", "y.weird"])).is_err());
         assert!(parse(&sv(&["frobnicate"])).is_err());
         assert!(parse(&sv(&["input", "file", "x", "output", "null", "extra"])).is_err());
+        assert!(parse(&sv(&["input", "file", "x", "output", "null", "--threads"])).is_err());
     }
 
     #[test]

@@ -12,7 +12,11 @@
 pub mod scenarios;
 pub mod stream;
 
-pub use scenarios::{run_scenario, run_scenario_source, FeedMode, ScenarioConfig, ScenarioReport};
+pub use scenarios::{
+    run_scenario, run_scenario_fused, run_scenario_source, FeedMode, ScenarioConfig,
+    ScenarioReport,
+};
 pub use stream::{
-    run_stream, run_stream_with, Sink, Source, StreamConfig, StreamDriver, StreamReport,
+    run_stream, run_stream_with, run_topology, RoutePolicy, Sink, Source, StreamConfig,
+    StreamDriver, StreamReport, TopologyOptions,
 };

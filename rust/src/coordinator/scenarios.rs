@@ -29,9 +29,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::aer::Event;
+use crate::pipeline::fusion::SourceLayout;
 use crate::rt::{yield_now, LocalExecutor};
 use crate::runtime::{Device, DetectorSession, TransferMode, TransferStats};
-use crate::stream::{EventSource, SliceSource};
+use crate::stream::{EventSource, FusedSource, SliceSource};
 
 /// Events per [`EventSource`] batch when replaying a RAM-cached
 /// recording through [`run_scenario`].
@@ -177,6 +178,33 @@ pub fn run_scenario(
 ) -> Result<ScenarioReport> {
     let mut source = SliceSource::new(recording, REPLAY_CHUNK);
     run_scenario_source(device, &mut source, cfg)
+}
+
+/// Run one scenario over several sources at once — the paper's §6
+/// multi-sensor fusion ("sending multiple inputs to a single
+/// neuromorphic compute platform"): the sources are merged by the
+/// streaming timestamp-ordered [`FusedSource`] on an
+/// [overlay](SourceLayout::overlay) layout (every sensor shares the
+/// detector's fixed address plane), then driven through the ordinary
+/// scenario path. Each source must itself be time-ordered.
+pub fn run_scenario_fused(
+    device: &Device,
+    sources: Vec<&mut dyn EventSource>,
+    cfg: &ScenarioConfig,
+) -> Result<ScenarioReport> {
+    anyhow::ensure!(!sources.is_empty(), "fused scenario needs at least one source");
+    // The overlay layout is cut from each source's claimed resolution; a
+    // live source still reporting its observed placeholder would get a
+    // near-empty placement and lose its events silently. Refuse instead.
+    anyhow::ensure!(
+        sources.iter().all(|s| s.geometry_known()),
+        "fused scenario sources must declare their geometry \
+         (a live source reported observed-only bounds)"
+    );
+    let resolutions: Vec<_> = sources.iter().map(|s| s.resolution()).collect();
+    let layout = SourceLayout::overlay(&resolutions);
+    let mut fused = FusedSource::new(sources, Some(layout), REPLAY_CHUNK);
+    run_scenario_source(device, &mut fused, cfg)
 }
 
 /// Run one scenario over any [`EventSource`] — files, UDP, synthetic

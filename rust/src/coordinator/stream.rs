@@ -3,11 +3,15 @@
 //! [`crate::stream`]'s `EventSource`/`EventSink` traits.
 //!
 //! The [`Source`] and [`Sink`] enums are the CLI-facing configuration;
-//! [`run_stream`] converts them into trait objects and hands them to
-//! the coroutine driver (default) or the `sync` baseline. Unlike the
-//! old batch path, the stream is never materialized: a file source
-//! decodes in chunks, a UDP source ends after a bounded idle wait, and
-//! memory stays O(chunk) for arbitrarily long (or endless) inputs.
+//! [`run_topology`] converts them into trait objects and hands them to
+//! [`crate::stream::run_topology`], which fans N sources in through a
+//! streaming timestamp-ordered merge (optionally one OS thread per
+//! source) and fans out to M sinks by [`RoutePolicy`]. The single-edge
+//! [`run_stream`]/[`run_stream_with`] are thin wrappers over the same
+//! path. Unlike the old batch path, the stream is never materialized:
+//! a file source decodes in chunks, a UDP source ends after a bounded
+//! idle wait, and memory stays O(chunk) for arbitrarily long (or
+//! endless) inputs.
 //!
 //! Geometry note: sinks that record geometry (file headers, frame
 //! binning) take it from the source *before* the first batch. File
@@ -15,12 +19,14 @@
 //! only learn geometry by observation, so frame sinks grow on demand
 //! and file sinks spool to a temporary raw file and re-encode at the
 //! end with the exact observed bounding box (same geometry as the old
-//! batch path, still O(chunk) memory).
+//! batch path, still O(chunk) memory). Fused topologies need real
+//! extents up front for their canvas offsets, so a UDP source joining
+//! one must declare its geometry (`input udp ADDR --geometry WxH`).
 
 use std::path::PathBuf;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::aer::{Event, Resolution};
 use crate::camera::CameraConfig;
@@ -31,15 +37,19 @@ use crate::stream::{
     NullSink, StdoutSink, UdpSink, UdpSource, ViewSink,
 };
 
-pub use crate::stream::{StreamConfig, StreamDriver, StreamReport};
+pub use crate::stream::{
+    RoutePolicy, StreamConfig, StreamDriver, StreamReport, ThreadMode, TopologyConfig,
+};
 
 /// Where events come from.
 pub enum Source {
     /// Stream an event file in chunks (format auto-detected).
     File(PathBuf),
     /// Listen for SPIF datagrams until `idle_timeout` passes with no
-    /// data (each poll is a cheap bounded wait, not a spin).
-    Udp { bind: String, idle_timeout: Duration },
+    /// data (each poll is a cheap bounded wait, not a spin). `geometry`
+    /// declares the sensor extents up front (required for fused
+    /// topologies, where canvas offsets need real sizes).
+    Udp { bind: String, idle_timeout: Duration, geometry: Option<Resolution> },
     /// Synthesize from the camera simulator for `duration_us`.
     Synthetic { config: CameraConfig, duration_us: u64 },
     /// In-memory events (tests, benches).
@@ -51,8 +61,12 @@ impl Source {
     pub fn into_source(self, chunk_size: usize) -> Result<Box<dyn EventSource>> {
         Ok(match self {
             Source::File(path) => Box::new(FileSource::open(&path, chunk_size)?),
-            Source::Udp { bind, idle_timeout } => {
-                Box::new(UdpSource::bind(&bind, idle_timeout)?)
+            Source::Udp { bind, idle_timeout, geometry } => {
+                let source = UdpSource::bind(&bind, idle_timeout)?;
+                match geometry {
+                    Some(res) => Box::new(source.with_geometry(res)),
+                    None => Box::new(source),
+                }
             }
             Source::Synthetic { config, duration_us } => {
                 Box::new(CameraSource::new(config, duration_us))
@@ -101,6 +115,75 @@ impl Sink {
     }
 }
 
+/// Topology-level options layered on the per-edge [`StreamConfig`].
+#[derive(Debug, Clone, Default)]
+pub struct TopologyOptions {
+    /// Chunking and edge-driver selection.
+    pub config: StreamConfig,
+    /// Pin each source to its own OS thread (fed through the lock-free
+    /// SPSC ring) instead of polling them all from the executor thread.
+    pub source_threads: bool,
+    /// How processed events are distributed across the sinks.
+    pub route: RoutePolicy,
+}
+
+/// Drive an N-source, M-sink topology: sources fan in through the
+/// streaming timestamp-ordered merge onto a side-by-side canvas, flow
+/// through `pipeline` once, and fan out per `opts.route`.
+pub fn run_topology(
+    sources: Vec<Source>,
+    mut pipeline: Pipeline,
+    sinks: Vec<Sink>,
+    opts: TopologyOptions,
+) -> Result<StreamReport> {
+    if sources.is_empty() {
+        bail!("topology needs at least one input");
+    }
+    if sinks.is_empty() {
+        bail!("topology needs at least one output");
+    }
+    let chunk = opts.config.chunk_size;
+    let opened: Vec<Box<dyn EventSource>> = sources
+        .into_iter()
+        .map(|s| s.into_source(chunk))
+        .collect::<Result<_>>()?;
+    let fused = opened.len() > 1;
+    let geometry_known = opened.iter().all(|s| s.geometry_known());
+    if fused && !geometry_known {
+        bail!(
+            "fusing requires every input's geometry up front: declare it for \
+             live inputs (input udp ADDR --geometry WxH) and use formats with \
+             a geometry header for file inputs (headerless recordings such as \
+             .txt only learn their extent by observation)"
+        );
+    }
+    let layout = if fused {
+        // Shared with the library-level default-layout path, including
+        // its hard u16 canvas-width bound.
+        let resolutions: Vec<Resolution> =
+            opened.iter().map(|s| s.resolution()).collect();
+        Some(stream::topology::default_layout(&resolutions)?)
+    } else {
+        None
+    };
+    let canvas = layout.as_ref().map_or_else(|| opened[0].resolution(), |l| l.canvas);
+    let sinks: Vec<Box<dyn EventSink>> = sinks
+        .into_iter()
+        .map(|k| k.into_sink(canvas, geometry_known))
+        .collect::<Result<_>>()?;
+    let config = TopologyConfig {
+        chunk_size: chunk,
+        driver: opts.config.driver,
+        threads: if opts.source_threads {
+            ThreadMode::PerSourceThread
+        } else {
+            ThreadMode::Inline
+        },
+        route: opts.route,
+    };
+    stream::run_topology(opened, &mut pipeline, sinks, layout, &config)
+}
+
 /// Drive a source through a pipeline into a sink with the default
 /// streaming configuration (coroutine driver, rendezvous channel,
 /// 4096-event chunks).
@@ -108,16 +191,20 @@ pub fn run_stream(source: Source, pipeline: Pipeline, sink: Sink) -> Result<Stre
     run_stream_with(source, pipeline, sink, StreamConfig::default())
 }
 
-/// [`run_stream`] with explicit chunking/driver configuration.
+/// [`run_stream`] with explicit chunking/driver configuration — the
+/// single-edge wrapper over [`run_topology`].
 pub fn run_stream_with(
     source: Source,
-    mut pipeline: Pipeline,
+    pipeline: Pipeline,
     sink: Sink,
     config: StreamConfig,
 ) -> Result<StreamReport> {
-    let mut source = source.into_source(config.chunk_size)?;
-    let mut sink = sink.into_sink(source.resolution(), source.geometry_known())?;
-    stream::run(source.as_mut(), &mut pipeline, sink.as_mut(), config)
+    run_topology(
+        vec![source],
+        pipeline,
+        vec![sink],
+        TopologyOptions { config, ..Default::default() },
+    )
 }
 
 #[cfg(test)]
@@ -125,7 +212,7 @@ mod tests {
     use super::*;
     use crate::aer::Polarity;
     use crate::pipeline::ops::PolarityFilter;
-    use crate::testutil::synthetic_events;
+    use crate::testutil::{synthetic_events, synthetic_events_seeded};
 
     #[test]
     fn memory_to_null_counts() {
@@ -220,5 +307,47 @@ mod tests {
         .unwrap();
         assert!(report.peak_in_flight <= 1024, "peak {}", report.peak_in_flight);
         assert_eq!(report.batches, 50_000 / 1024 + 1);
+    }
+
+    #[test]
+    fn fused_memory_sources_share_a_side_by_side_canvas() {
+        let a = synthetic_events_seeded(400, 64, 64, 1);
+        let b = synthetic_events_seeded(600, 64, 64, 2);
+        let report = run_topology(
+            vec![
+                Source::Memory(a, Resolution::new(64, 64)),
+                Source::Memory(b, Resolution::new(64, 64)),
+            ],
+            Pipeline::new(),
+            vec![Sink::Null, Sink::Null],
+            TopologyOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(report.events_in, 1000);
+        assert_eq!(report.resolution, Resolution::new(128, 64));
+        assert_eq!(report.sources.len(), 2);
+        assert_eq!(report.sinks.len(), 2);
+        for sink in &report.sinks {
+            assert_eq!(sink.events, 1000, "broadcast");
+        }
+    }
+
+    #[test]
+    fn fusing_live_sources_without_geometry_is_rejected() {
+        let err = run_topology(
+            vec![
+                Source::Udp {
+                    bind: "127.0.0.1:0".into(),
+                    idle_timeout: Duration::from_millis(10),
+                    geometry: None,
+                },
+                Source::Memory(Vec::new(), Resolution::new(8, 8)),
+            ],
+            Pipeline::new(),
+            vec![Sink::Null],
+            TopologyOptions::default(),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("--geometry"));
     }
 }

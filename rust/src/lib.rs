@@ -22,6 +22,10 @@
 //! * [`stream`] — the `EventSource` → `Pipeline` → `EventSink` trait
 //!   layer and its incremental drivers (coroutine + sync): O(chunk)
 //!   memory for endless streams;
+//! * [`stream::topology`] — fan-in/fan-out graphs over that layer:
+//!   N sources merged in timestamp order (optionally one OS thread per
+//!   source over the lock-free ring), one shared pipeline, M routed
+//!   sinks, with per-node counters in `StreamReport`;
 //! * [`engine`] — the Fig. 3 concurrency contenders (sync / threads /
 //!   coroutines / lock-free ring);
 //! * [`rt`] — the hand-rolled cooperative async runtime (coroutines);

@@ -6,7 +6,7 @@ use anyhow::Result;
 use aestream::bench::{fmt_rate, Table};
 use aestream::camera;
 use aestream::cli::{self, Command};
-use aestream::coordinator::{run_scenario, run_stream_with, ScenarioConfig};
+use aestream::coordinator::{run_scenario, run_topology, ScenarioConfig, TopologyOptions};
 use aestream::pipeline::registry;
 use aestream::runtime::Device;
 
@@ -19,8 +19,14 @@ fn main() -> Result<()> {
         Command::Table1 => {
             print!("{}", registry::render_table());
         }
-        Command::Stream { source, pipeline, sink, config } => {
-            let report = run_stream_with(source, pipeline, sink, config)?;
+        Command::Stream { sources, pipeline, sinks, config, threads, route } => {
+            let multi = sources.len() > 1 || sinks.len() > 1;
+            let report = run_topology(
+                sources,
+                pipeline,
+                sinks,
+                TopologyOptions { config, source_threads: threads > 1, route },
+            )?;
             eprintln!(
                 "processed {} events ({} out) in {:?} ({}) [{}x{}] — {} batches, \
                  peak {} in flight, {} backpressure waits",
@@ -34,6 +40,35 @@ fn main() -> Result<()> {
                 report.peak_in_flight,
                 report.backpressure_waits,
             );
+            let source_dropped: u64 = report.sources.iter().map(|s| s.dropped).sum();
+            if !multi && source_dropped > 0 {
+                eprintln!(
+                    "  warning: {source_dropped} events outside the declared \
+                     geometry were dropped"
+                );
+            }
+            if multi {
+                for node in &report.sources {
+                    eprintln!(
+                        "  in  {}: {} events / {} batches, {} backpressure waits, \
+                         {} dropped",
+                        node.name, node.events, node.batches, node.backpressure_waits,
+                        node.dropped,
+                    );
+                }
+                eprintln!(
+                    "  merge: peak {} events buffered, {} out-of-canvas dropped",
+                    report.merge_peak_buffered, report.merge_dropped,
+                );
+                for node in &report.sinks {
+                    eprintln!(
+                        "  out {}: {} events / {} batches, {} frames, \
+                         {} backpressure waits",
+                        node.name, node.events, node.batches, node.frames,
+                        node.backpressure_waits,
+                    );
+                }
+            }
         }
         Command::Scenarios { duration_us, time_scale } => {
             eprintln!("generating {duration_us} µs synthetic recording (346x260)…");

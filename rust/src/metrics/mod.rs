@@ -6,6 +6,30 @@
 
 use std::time::{Duration, Instant};
 
+/// Per-node counters for one source or sink of a stream topology.
+///
+/// [`crate::stream::StreamReport`] carries one of these per topology
+/// node, so fan-in/fan-out runs can attribute traffic (and stalls) to
+/// individual sensors and outputs instead of reporting only edge-level
+/// aggregates.
+#[derive(Debug, Clone, Default)]
+pub struct NodeReport {
+    /// Human-readable node description (the node's `describe()`).
+    pub name: String,
+    /// Events through this node (sources: pulled; sinks: routed in).
+    pub events: u64,
+    /// Non-empty batches through this node.
+    pub batches: u64,
+    /// Times a writer found this node's queue full and suspended
+    /// (source pump threads / the fan-out router).
+    pub backpressure_waits: u64,
+    /// Events the node itself discarded (e.g. outside a source's
+    /// claimed geometry; 0 elsewhere).
+    pub dropped: u64,
+    /// Frames produced (frame-binning sinks; 0 elsewhere).
+    pub frames: u64,
+}
+
 /// Wall-clock stopwatch with µs readout.
 #[derive(Debug, Clone)]
 pub struct Stopwatch {

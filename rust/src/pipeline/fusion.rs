@@ -8,6 +8,12 @@
 //! output canvas (the way SPIF multiplexes several sensors into one
 //! SpiNNaker address space) by offsetting coordinates and validating
 //! bounds.
+//!
+//! These entry points are *batch-only*: they need every stream fully
+//! materialized. The streaming lift — same merge order, same layouts,
+//! but over live [`crate::stream::EventSource`]s with per-source carry
+//! buffers and O(chunk × sources) memory — is
+//! [`crate::stream::FusedSource`].
 
 use crate::aer::{Event, Resolution};
 use std::cmp::Reverse;
@@ -35,27 +41,52 @@ pub struct SourceLayout {
 
 impl SourceLayout {
     /// Side-by-side layout: sources in a single row, left to right.
+    ///
+    /// The canvas width saturates at `u16::MAX`; sources pushed past the
+    /// address space get placements whose events can never fit (callers
+    /// that need a hard error should validate the width sum first, as
+    /// [`crate::stream::run_topology`] does).
     pub fn side_by_side(resolutions: &[Resolution]) -> SourceLayout {
         let mut placements = Vec::with_capacity(resolutions.len());
         let mut x = 0u16;
         let mut height = 1u16;
         for &res in resolutions {
             placements.push(SourcePlacement { x_offset: x, y_offset: 0, resolution: res });
-            x += res.width;
+            x = x.saturating_add(res.width);
             height = height.max(res.height);
         }
         SourceLayout { canvas: Resolution::new(x.max(1), height), placements }
     }
 
+    /// Overlay layout: every source shares the canvas origin (no
+    /// offsets) and the canvas is the union bounding box — several
+    /// sensors interleaved on one address plane, the layout
+    /// [`crate::coordinator::run_scenario_fused`] uses to feed multiple
+    /// sources into one fixed-geometry compute device.
+    pub fn overlay(resolutions: &[Resolution]) -> SourceLayout {
+        let mut canvas = Resolution::new(1, 1);
+        let mut placements = Vec::with_capacity(resolutions.len());
+        for &res in resolutions {
+            placements.push(SourcePlacement { x_offset: 0, y_offset: 0, resolution: res });
+            canvas.width = canvas.width.max(res.width);
+            canvas.height = canvas.height.max(res.height);
+        }
+        SourceLayout { canvas, placements }
+    }
+
     /// Map one event of `source` onto the canvas. `None` if the source
-    /// id is unknown or the event violates the source's geometry.
+    /// id is unknown, the event violates the source's geometry, or the
+    /// placed coordinate would leave the u16 address space (possible
+    /// only for layouts saturated past it).
     #[inline]
     pub fn place(&self, source: usize, ev: &Event) -> Option<Event> {
         let p = self.placements.get(source)?;
         if !p.resolution.contains(ev) {
             return None;
         }
-        Some(Event { x: ev.x + p.x_offset, y: ev.y + p.y_offset, ..*ev })
+        let x = ev.x.checked_add(p.x_offset)?;
+        let y = ev.y.checked_add(p.y_offset)?;
+        Some(Event { x, y, ..*ev })
     }
 }
 
@@ -180,6 +211,19 @@ mod tests {
         // Out of the source's own bounds: rejected even if canvas fits.
         assert!(layout.place(0, &Event::on(64, 0, 0)).is_none());
         assert!(layout.place(2, &Event::on(0, 0, 0)).is_none());
+    }
+
+    #[test]
+    fn overlay_layout_shares_the_origin() {
+        let layout =
+            SourceLayout::overlay(&[Resolution::new(64, 48), Resolution::new(128, 96)]);
+        assert_eq!(layout.canvas, Resolution::new(128, 96));
+        let a = layout.place(0, &Event::on(63, 47, 0)).unwrap();
+        let b = layout.place(1, &Event::on(63, 47, 0)).unwrap();
+        assert_eq!((a.x, a.y), (b.x, b.y), "overlay must not offset");
+        // Bounds are still per-source: source 0 is only 64×48.
+        assert!(layout.place(0, &Event::on(64, 0, 0)).is_none());
+        assert!(layout.place(1, &Event::on(64, 0, 0)).is_some());
     }
 
     #[test]

@@ -126,6 +126,12 @@ impl RefractoryFilter {
 impl EventTransform for RefractoryFilter {
     #[inline]
     fn apply(&mut self, ev: Event) -> Option<Event> {
+        if !self.resolution.contains(&ev) {
+            // Outside the configured geometry (e.g. a fused canvas wider
+            // than the assumed sensor): pass through untracked rather
+            // than index out of bounds.
+            return Some(ev);
+        }
         let idx = ev.pixel_index(self.resolution.width);
         let last = self.last[idx];
         // Stored as t+1 so 0 means "never".
@@ -171,6 +177,11 @@ impl BackgroundActivityFilter {
 
 impl EventTransform for BackgroundActivityFilter {
     fn apply(&mut self, ev: Event) -> Option<Event> {
+        if !self.resolution.contains(&ev) {
+            // Outside the configured geometry: pass through untracked
+            // rather than index out of bounds.
+            return Some(ev);
+        }
         let (w, h) = (self.resolution.width, self.resolution.height);
         let mut supported = false;
         let x0 = ev.x.saturating_sub(1);
@@ -219,6 +230,9 @@ impl FlipX {
 impl EventTransform for FlipX {
     #[inline]
     fn apply(&mut self, ev: Event) -> Option<Event> {
+        if ev.x >= self.width {
+            return Some(ev); // outside the mirror axis: pass through
+        }
         Some(Event { x: self.width - 1 - ev.x, ..ev })
     }
     fn describe(&self) -> String {
@@ -242,6 +256,9 @@ impl FlipY {
 impl EventTransform for FlipY {
     #[inline]
     fn apply(&mut self, ev: Event) -> Option<Event> {
+        if ev.y >= self.height {
+            return Some(ev); // outside the mirror axis: pass through
+        }
         Some(Event { y: self.height - 1 - ev.y, ..ev })
     }
     fn describe(&self) -> String {

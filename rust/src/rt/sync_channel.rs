@@ -155,6 +155,14 @@ impl<T: Send> SyncReceiver<T> {
         }
         item
     }
+
+    /// `true` once the sender has been dropped. Items pushed before the
+    /// close may still be pending: poll [`try_recv`](Self::try_recv)
+    /// once more after observing the close to drain them (the same
+    /// drain-then-close protocol [`recv`](Self::recv) follows).
+    pub fn is_closed(&self) -> bool {
+        self.ring.is_closed()
+    }
 }
 
 /// Future returned by [`SyncReceiver::recv`].

@@ -13,6 +13,13 @@
 //! for baseline comparisons (the Fig. 1(A)-vs-(B) contrast at the
 //! orchestration layer).
 //!
+//! Graphs wider than one edge live in [`topology`]: N sources fan in
+//! through a streaming timestamp-ordered merge (optionally one OS
+//! thread per source, fed through the lock-free
+//! [`crate::rt::sync_channel`] ring), share one pipeline, and fan out
+//! to M sinks by [`RoutePolicy`]. [`run`] itself is a thin single-edge
+//! wrapper over [`topology::run_topology`].
+//!
 //! The split mirrors vector's `FunctionTransform`/`TaskTransform`
 //! idiom: per-event functions stay in [`crate::pipeline`], while
 //! sources and sinks are scheduled by whatever driver fits the
@@ -20,19 +27,19 @@
 
 pub mod sinks;
 pub mod sources;
+pub mod topology;
 
-use std::cell::{Cell, RefCell};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{Context as _, Result};
+use anyhow::Result;
 
 use crate::aer::{Event, Resolution};
+use crate::metrics::NodeReport;
 use crate::pipeline::Pipeline;
-use crate::rt::channel::TrySendError;
-use crate::rt::{channel, yield_now, LocalExecutor};
 
 pub use sinks::{FileSink, FrameSink, NullSink, SinkSummary, StdoutSink, UdpSink, ViewSink};
 pub use sources::{CameraSource, FileSource, MemorySource, SliceSource, UdpSource};
+pub use topology::{run_topology, FusedSource, RoutePolicy, ThreadMode, TopologyConfig};
 
 /// A pull-based, bounded-batch event producer.
 ///
@@ -60,9 +67,51 @@ pub trait EventSource: Send {
         true
     }
 
+    /// Events this source discarded before emission (e.g. outside a
+    /// claimed geometry). Surfaced per node in reports. Default 0.
+    fn dropped(&self) -> u64 {
+        0
+    }
+
     /// Human-readable description (logs, reports).
     fn describe(&self) -> String {
         "source".into()
+    }
+}
+
+impl<S: EventSource + ?Sized> EventSource for &mut S {
+    fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
+        (**self).next_batch()
+    }
+    fn resolution(&self) -> Resolution {
+        (**self).resolution()
+    }
+    fn geometry_known(&self) -> bool {
+        (**self).geometry_known()
+    }
+    fn dropped(&self) -> u64 {
+        (**self).dropped()
+    }
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+}
+
+impl<S: EventSource + ?Sized> EventSource for Box<S> {
+    fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
+        (**self).next_batch()
+    }
+    fn resolution(&self) -> Resolution {
+        (**self).resolution()
+    }
+    fn geometry_known(&self) -> bool {
+        (**self).geometry_known()
+    }
+    fn dropped(&self) -> u64 {
+        (**self).dropped()
+    }
+    fn describe(&self) -> String {
+        (**self).describe()
     }
 }
 
@@ -85,6 +134,36 @@ pub trait EventSink: Send {
     /// Human-readable description (logs, reports).
     fn describe(&self) -> String {
         "sink".into()
+    }
+}
+
+impl<K: EventSink + ?Sized> EventSink for &mut K {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        (**self).consume(batch)
+    }
+    fn observe_geometry(&mut self, res: Resolution) {
+        (**self).observe_geometry(res)
+    }
+    fn finish(&mut self) -> Result<SinkSummary> {
+        (**self).finish()
+    }
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+}
+
+impl<K: EventSink + ?Sized> EventSink for Box<K> {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        (**self).consume(batch)
+    }
+    fn observe_geometry(&mut self, res: Resolution) {
+        (**self).observe_geometry(res)
+    }
+    fn finish(&mut self) -> Result<SinkSummary> {
+        (**self).finish()
+    }
+    fn describe(&self) -> String {
+        (**self).describe()
     }
 }
 
@@ -132,13 +211,16 @@ impl StreamConfig {
 /// Outcome of a streaming run.
 #[derive(Debug, Clone)]
 pub struct StreamReport {
-    /// Events read from the source.
+    /// Events read from the source (for topologies: events emitted by
+    /// the fan-in merge onto the shared canvas).
     pub events_in: u64,
-    /// Events that survived the pipeline into the sink.
+    /// Events that survived the pipeline into the sink(s). Counted once
+    /// per event even when broadcast to several sinks — see
+    /// [`sinks`](StreamReport::sinks) for per-sink delivery counts.
     pub events_out: u64,
-    /// Frames produced (frame-binning sinks only).
+    /// Frames produced, summed over frame-binning sinks.
     pub frames: u64,
-    /// Batches pulled from the source.
+    /// Batches pulled from the (merged) source.
     pub batches: u64,
     /// Peak events queued between producer and consumer at any instant
     /// (coroutine driver: channel occupancy; sync driver: the single
@@ -150,8 +232,22 @@ pub struct StreamReport {
     pub backpressure_waits: u64,
     /// Wall time.
     pub wall: Duration,
-    /// Sensor geometry of the source (final value for growing sources).
+    /// Sensor geometry of the source (final value for growing sources;
+    /// the fused canvas for topologies).
     pub resolution: Resolution,
+    /// Per-source counters: events/batches pulled from each source, and
+    /// (threaded topologies) full-ring suspensions of its pump thread.
+    /// Single-edge runs have exactly one entry.
+    pub sources: Vec<NodeReport>,
+    /// Per-sink counters: events/batches routed to each sink, frames it
+    /// produced, and times the router found its queue full.
+    pub sinks: Vec<NodeReport>,
+    /// Peak events resident in the fan-in merge's carry buffers (its
+    /// reorder depth), bounded by `sources × chunk`; 0 without fusion.
+    pub merge_peak_buffered: usize,
+    /// Events dropped by the fan-in layout for violating their source's
+    /// geometry (0 without fusion).
+    pub merge_dropped: u64,
 }
 
 impl StreamReport {
@@ -164,165 +260,16 @@ impl StreamReport {
 /// Drive `source → pipeline → sink` to completion.
 ///
 /// Never materializes the stream: memory is bounded by the chunk size
-/// times the channel capacity regardless of stream length.
+/// times the channel capacity regardless of stream length. This is the
+/// single-edge special case of [`topology::run_topology`].
 pub fn run(
     source: &mut dyn EventSource,
     pipeline: &mut Pipeline,
     sink: &mut dyn EventSink,
     config: StreamConfig,
 ) -> Result<StreamReport> {
-    match config.driver {
-        StreamDriver::Sync => run_sync(source, pipeline, sink),
-        StreamDriver::Coroutine { channel_capacity } => {
-            run_coroutine(source, pipeline, sink, channel_capacity.max(1))
-        }
-    }
-}
-
-/// Baseline driver: one loop, no overlap.
-fn run_sync(
-    source: &mut dyn EventSource,
-    pipeline: &mut Pipeline,
-    sink: &mut dyn EventSink,
-) -> Result<StreamReport> {
-    let t0 = Instant::now();
-    let mut events_in = 0u64;
-    let mut events_out = 0u64;
-    let mut batches = 0u64;
-    let mut peak_in_flight = 0usize;
-    while let Some(batch) = source.next_batch().context("stream source")? {
-        if batch.is_empty() {
-            continue; // live source idle; its poll timeout bounds the wait
-        }
-        events_in += batch.len() as u64;
-        batches += 1;
-        peak_in_flight = peak_in_flight.max(batch.len());
-        let processed = pipeline.process(&batch);
-        events_out += processed.len() as u64;
-        sink.consume(&processed).context("stream sink")?;
-    }
-    sink.observe_geometry(source.resolution());
-    let summary = sink.finish().context("stream sink finish")?;
-    Ok(StreamReport {
-        events_in,
-        events_out,
-        frames: summary.frames,
-        batches,
-        peak_in_flight,
-        backpressure_waits: 0,
-        wall: t0.elapsed(),
-        resolution: source.resolution(),
-    })
-}
-
-/// Coroutine driver: producer and consumer tasks on one cooperative
-/// executor, batches handed through a bounded channel. The producer
-/// suspends the moment the consumer is behind (`channel_capacity`
-/// batches queued), which is the backpressure that keeps memory
-/// O(chunk) for endless sources.
-fn run_coroutine(
-    source: &mut dyn EventSource,
-    pipeline: &mut Pipeline,
-    sink: &mut dyn EventSink,
-    channel_capacity: usize,
-) -> Result<StreamReport> {
-    let t0 = Instant::now();
-    let events_in = Cell::new(0u64);
-    let events_out = Cell::new(0u64);
-    let batches = Cell::new(0u64);
-    let in_flight = Cell::new(0usize);
-    let peak_in_flight = Cell::new(0usize);
-    let backpressure_waits = Cell::new(0u64);
-    let source_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
-    let sink_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
-
-    {
-        let ex = LocalExecutor::new();
-        let (tx, mut rx) = channel::<Vec<Event>>(channel_capacity);
-
-        // ---------------------------------------------------- producer
-        {
-            let (events_in, batches) = (&events_in, &batches);
-            let (in_flight, peak_in_flight) = (&in_flight, &peak_in_flight);
-            let backpressure_waits = &backpressure_waits;
-            let source_err = &source_err;
-            let source = &mut *source;
-            ex.spawn(async move {
-                loop {
-                    let batch = match source.next_batch() {
-                        Ok(Some(batch)) => batch,
-                        Ok(None) => break,
-                        Err(e) => {
-                            *source_err.borrow_mut() = Some(e);
-                            break;
-                        }
-                    };
-                    if batch.is_empty() {
-                        // Live source with nothing pending: hand control
-                        // to the consumer instead of spinning.
-                        yield_now().await;
-                        continue;
-                    }
-                    let n = batch.len();
-                    events_in.set(events_in.get() + n as u64);
-                    batches.set(batches.get() + 1);
-                    match tx.try_send(batch) {
-                        Ok(()) => {}
-                        Err(TrySendError::Closed(_)) => break, // consumer died
-                        Err(TrySendError::Full(batch)) => {
-                            backpressure_waits.set(backpressure_waits.get() + 1);
-                            if tx.send(batch).await.is_err() {
-                                break;
-                            }
-                        }
-                    }
-                    in_flight.set(in_flight.get() + n);
-                    peak_in_flight.set(peak_in_flight.get().max(in_flight.get()));
-                }
-                // `tx` drops here, letting the consumer observe the close.
-            });
-        }
-
-        // ---------------------------------------------------- consumer
-        {
-            let (events_out, in_flight) = (&events_out, &in_flight);
-            let sink_err = &sink_err;
-            let pipeline = &mut *pipeline;
-            let sink = &mut *sink;
-            ex.spawn(async move {
-                while let Some(batch) = rx.recv().await {
-                    in_flight.set(in_flight.get() - batch.len());
-                    let processed = pipeline.process(&batch);
-                    events_out.set(events_out.get() + processed.len() as u64);
-                    if let Err(e) = sink.consume(&processed) {
-                        *sink_err.borrow_mut() = Some(e);
-                        break; // dropping `rx` fails producer sends fast
-                    }
-                }
-            });
-        }
-
-        ex.run();
-    }
-
-    if let Some(e) = source_err.into_inner() {
-        return Err(e.context("stream source"));
-    }
-    if let Some(e) = sink_err.into_inner() {
-        return Err(e.context("stream sink"));
-    }
-    sink.observe_geometry(source.resolution());
-    let summary = sink.finish().context("stream sink finish")?;
-    Ok(StreamReport {
-        events_in: events_in.get(),
-        events_out: events_out.get(),
-        frames: summary.frames,
-        batches: batches.get(),
-        peak_in_flight: peak_in_flight.get(),
-        backpressure_waits: backpressure_waits.get(),
-        wall: t0.elapsed(),
-        resolution: source.resolution(),
-    })
+    let config = TopologyConfig::from(config);
+    topology::run_topology(vec![source], pipeline, vec![sink], None, &config)
 }
 
 #[cfg(test)]
@@ -354,6 +301,11 @@ mod tests {
             assert_eq!(report.events_in, 5000, "{config:?}");
             assert_eq!(report.events_out, on, "{config:?}");
             assert!(report.batches >= 5000 / config.chunk_size as u64, "{config:?}");
+            // Single-edge runs still report their (single) nodes.
+            assert_eq!(report.sources.len(), 1, "{config:?}");
+            assert_eq!(report.sources[0].events, 5000, "{config:?}");
+            assert_eq!(report.sinks.len(), 1, "{config:?}");
+            assert_eq!(report.sinks[0].events, on, "{config:?}");
         }
     }
 
@@ -375,6 +327,7 @@ mod tests {
             config.chunk_size
         );
         assert!(report.peak_in_flight > 0);
+        assert_eq!(report.merge_peak_buffered, 0, "single edge must not buffer a merge");
     }
 
     #[test]

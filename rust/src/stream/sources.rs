@@ -240,6 +240,11 @@ pub struct UdpSource {
     idle_timeout: Duration,
     last_data: Instant,
     observed_res: Resolution,
+    /// `true` when the operator declared the sensor geometry up front
+    /// (`--geometry`), making it exact instead of merely observed.
+    claimed: bool,
+    /// Events dropped for falling outside a claimed geometry.
+    out_of_claim: u64,
 }
 
 impl UdpSource {
@@ -256,6 +261,8 @@ impl UdpSource {
             idle_timeout,
             last_data: Instant::now(),
             observed_res: Resolution::new(1, 1),
+            claimed: false,
+            out_of_claim: 0,
         })
     }
 
@@ -266,21 +273,51 @@ impl UdpSource {
             idle_timeout,
             last_data: Instant::now(),
             observed_res: Resolution::new(1, 1),
+            claimed: false,
+            out_of_claim: 0,
         }
+    }
+
+    /// Declare the sensor geometry up front (SPIF deployments configure
+    /// it per sensor). The source then reports
+    /// [`geometry_known`](EventSource::geometry_known), which lets it
+    /// join fused topologies (layout offsets need real extents) and
+    /// lets file sinks skip the observe-and-respool pass. The claim is
+    /// authoritative: events outside it are dropped and counted (same
+    /// contract as a fused layout placement), so headers written from
+    /// the claim stay exact.
+    pub fn with_geometry(mut self, res: Resolution) -> Self {
+        self.observed_res = res;
+        self.claimed = true;
+        self
     }
 
     /// Events received so far.
     pub fn events_received(&self) -> u64 {
         self.rx.events_received
     }
+
+    /// Events dropped for falling outside a claimed geometry.
+    pub fn out_of_claim(&self) -> u64 {
+        self.out_of_claim
+    }
 }
 
 impl EventSource for UdpSource {
     fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
         match self.rx.recv_batch()? {
-            Some(batch) => {
+            Some(mut batch) => {
                 self.last_data = Instant::now();
-                grow_resolution(&mut self.observed_res, &batch);
+                if self.claimed {
+                    // The claim is authoritative (headers/layouts were
+                    // cut from it): out-of-claim events are dropped and
+                    // counted, never silently recorded past the header.
+                    let before = batch.len();
+                    batch.retain(|ev| self.observed_res.contains(ev));
+                    self.out_of_claim += (before - batch.len()) as u64;
+                } else {
+                    grow_resolution(&mut self.observed_res, &batch);
+                }
                 Ok(Some(batch))
             }
             None if self.last_data.elapsed() > self.idle_timeout => Ok(None),
@@ -295,7 +332,13 @@ impl EventSource for UdpSource {
     }
 
     fn geometry_known(&self) -> bool {
-        false // live wire: geometry is only ever observed
+        // Live wire: geometry is only ever observed unless the operator
+        // claimed it explicitly.
+        self.claimed
+    }
+
+    fn dropped(&self) -> u64 {
+        self.out_of_claim
     }
 
     fn describe(&self) -> String {

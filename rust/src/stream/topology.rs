@@ -1,0 +1,1232 @@
+//! Stream topology: multi-threaded fan-in/fan-out graphs over the
+//! streaming layer.
+//!
+//! The paper's §6 names multi-sensor fusion as the natural extension of
+//! coroutine streaming ("sending multiple inputs to a single
+//! neuromorphic compute platform would … be trivial"). This module
+//! generalizes the single `source → pipeline → sink` edge into a graph:
+//!
+//! * **Fan-in** — [`FusedSource`] lifts [`crate::pipeline::fusion`]'s
+//!   batch-only k-way merge to a *streaming*, timestamp-ordered merge:
+//!   per-source carry buffers hold at most one batch each (O(chunk ×
+//!   sources) memory), and an optional [`SourceLayout`] offsets each
+//!   source onto a shared canvas as events flow.
+//! * **Threads** — with [`ThreadMode::PerSourceThread`], every source is
+//!   pinned to its own OS thread and feeds the cooperative executor
+//!   through [`crate::rt::sync_channel`] (the wait-free SPSC ring in
+//!   [`crate::sync::spsc`]); the merge and the pipeline stay on the
+//!   executor thread, so there is still no per-event lock anywhere.
+//! * **Fan-out** — M sinks each run as their own coroutine behind a
+//!   bounded channel; a router task applies the shared [`Pipeline`] once
+//!   and distributes batches by [`RoutePolicy`] (broadcast, polarity
+//!   split, or vertical region stripes).
+//!
+//! [`run_topology`] drives the whole graph; the single-edge
+//! [`super::run`] is a thin wrapper over it (one source, one sink,
+//! inline threading). Merge correctness requires each individual source
+//! to be time-ordered (the same precondition as
+//! [`crate::pipeline::fusion::merge_streams`]); the streaming merge
+//! only emits an event once every live source has data buffered, so an
+//! idle live source stalls the merge until its idle timeout — fuse live
+//! sources with explicit geometry and sensible timeouts.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::aer::{Event, Resolution};
+use crate::metrics::NodeReport;
+use crate::pipeline::fusion::SourceLayout;
+use crate::pipeline::Pipeline;
+use crate::rt::channel::TrySendError;
+use crate::rt::{
+    block_on, channel, sync_channel, yield_now, LocalExecutor, Sender, SyncReceiver, SyncSender,
+};
+
+use super::sources::grow_resolution;
+use super::{EventSink, EventSource, StreamConfig, StreamDriver, StreamReport};
+
+/// Batches buffered per source-thread channel (in addition to the batch
+/// being assembled on either side): small, so per-source memory stays
+/// O(chunk) while still decoupling the reader from momentary merge
+/// stalls.
+const PUMP_QUEUE_BATCHES: usize = 2;
+
+/// How processed batches are distributed across a topology's sinks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Every sink receives every event.
+    #[default]
+    Broadcast,
+    /// Sink 0 receives ON events, sink 1 receives OFF events
+    /// (requires exactly two sinks).
+    Polarity,
+    /// The canvas is cut into M vertical stripes; sink i receives the
+    /// events of stripe i.
+    Stripes,
+}
+
+/// Where each source of a topology runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ThreadMode {
+    /// All sources are pulled from the executor thread (cooperative
+    /// scheduling only — the paper's Fig. 1(B) shape).
+    #[default]
+    Inline,
+    /// Each source is pinned to its own OS thread and hands batches to
+    /// the executor through the lock-free SPSC ring: a true
+    /// multi-threaded driver with no per-event locks.
+    PerSourceThread,
+}
+
+/// Parameters for [`run_topology`].
+#[derive(Debug, Clone)]
+pub struct TopologyConfig {
+    /// Target events per batch (and the per-hop memory unit).
+    pub chunk_size: usize,
+    /// Edge scheduling strategy (shared with the single-edge driver).
+    pub driver: StreamDriver,
+    /// Source threading.
+    pub threads: ThreadMode,
+    /// Sink routing.
+    pub route: RoutePolicy,
+}
+
+impl From<StreamConfig> for TopologyConfig {
+    fn from(config: StreamConfig) -> Self {
+        TopologyConfig {
+            chunk_size: config.chunk_size,
+            driver: config.driver,
+            threads: ThreadMode::Inline,
+            route: RoutePolicy::Broadcast,
+        }
+    }
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        StreamConfig::default().into()
+    }
+}
+
+/// Escalating bounded wait for idle live sources: a few scheduler
+/// yields first (cheap when data is imminent), then exponentially
+/// growing sleeps capped at 1 ms — an idle UDP topology wakes ≤ 1000
+/// times a second instead of burning a core.
+#[derive(Debug, Default)]
+pub(crate) struct IdleBackoff {
+    streak: u32,
+}
+
+impl IdleBackoff {
+    /// Yields before the first sleep.
+    const YIELDS: u32 = 8;
+    /// Sleep cap in microseconds.
+    const MAX_SLEEP_US: u64 = 1000;
+
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    /// Data arrived: restart the escalation from cheap yields.
+    pub(crate) fn reset(&mut self) {
+        self.streak = 0;
+    }
+
+    /// One bounded wait step, escalating with the idle streak
+    /// (50 µs → 100 → 200 → … capped at [`Self::MAX_SLEEP_US`]).
+    pub(crate) fn wait(&mut self) {
+        self.streak = self.streak.saturating_add(1);
+        if self.streak <= Self::YIELDS {
+            std::thread::yield_now();
+        } else {
+            let exp = u64::from((self.streak - Self::YIELDS - 1).min(5));
+            let us = (50u64 << exp).min(Self::MAX_SLEEP_US);
+            std::thread::sleep(Duration::from_micros(us));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- fan-in
+
+struct FusedInput<S: EventSource> {
+    source: S,
+    /// Decoded-but-unmerged events (at most one batch).
+    carry: VecDeque<Event>,
+    exhausted: bool,
+    events: u64,
+    batches: u64,
+}
+
+impl<S: EventSource> FusedInput<S> {
+    /// Pull one batch into the carry. `Ok(true)` iff new events arrived;
+    /// `Ok(false)` means end of stream (`exhausted` set) or a live
+    /// source with nothing pending right now.
+    fn refill(&mut self) -> Result<bool> {
+        debug_assert!(self.carry.is_empty());
+        match self.source.next_batch()? {
+            None => {
+                self.exhausted = true;
+                Ok(false)
+            }
+            Some(batch) if batch.is_empty() => Ok(false),
+            Some(batch) => {
+                self.events += batch.len() as u64;
+                self.batches += 1;
+                self.carry.extend(batch);
+                Ok(true)
+            }
+        }
+    }
+}
+
+/// Streaming, timestamp-ordered k-way merge of N [`EventSource`]s — the
+/// incremental lift of [`crate::pipeline::fusion::merge_streams`] /
+/// [`fuse`](crate::pipeline::fusion::fuse).
+///
+/// Each input keeps a carry buffer of at most one batch; an event is
+/// emitted only when every live input has data buffered, so the output
+/// is globally time-ordered whenever each input is. With a
+/// [`SourceLayout`], events are offset onto the shared canvas as they
+/// are merged (out-of-bounds events are counted, not emitted). A single
+/// input with no layout passes batches through untouched, which is what
+/// makes the single-edge [`super::run`] a zero-cost wrapper.
+pub struct FusedSource<S: EventSource> {
+    inputs: Vec<FusedInput<S>>,
+    layout: Option<SourceLayout>,
+    chunk: usize,
+    /// Peak events resident across all carry buffers — the merge's
+    /// reorder depth, bounded by `sources × chunk`.
+    peak_buffered: usize,
+    /// Events rejected by the layout (outside their source's geometry).
+    dropped: u64,
+}
+
+impl<S: EventSource> FusedSource<S> {
+    /// Merge `sources` (each individually time-ordered) into one stream
+    /// of at most `chunk`-event batches. `layout` offsets each source
+    /// onto a shared canvas; `None` leaves coordinates untouched (the
+    /// canvas is then the union bounding box of the source geometries).
+    pub fn new(sources: Vec<S>, layout: Option<SourceLayout>, chunk: usize) -> Self {
+        assert!(!sources.is_empty(), "FusedSource needs at least one source");
+        if let Some(layout) = &layout {
+            assert_eq!(
+                layout.placements.len(),
+                sources.len(),
+                "layout placements must match source count"
+            );
+        }
+        FusedSource {
+            inputs: sources
+                .into_iter()
+                .map(|source| FusedInput {
+                    source,
+                    carry: VecDeque::new(),
+                    exhausted: false,
+                    events: 0,
+                    batches: 0,
+                })
+                .collect(),
+            layout,
+            chunk: chunk.max(1),
+            peak_buffered: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Peak events buffered across carry buffers (the merge's memory
+    /// high-water mark; 0 for pass-through single-source use).
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered
+    }
+
+    /// Events dropped for violating their source's layout geometry
+    /// (layout rejections only; the [`EventSource::dropped`] impl also
+    /// sums what the inputs discarded themselves).
+    pub fn layout_dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Per-source counters for [`StreamReport::sources`].
+    pub fn node_reports(&self) -> Vec<NodeReport> {
+        self.inputs
+            .iter()
+            .map(|input| NodeReport {
+                name: input.source.describe(),
+                events: input.events,
+                batches: input.batches,
+                backpressure_waits: 0,
+                dropped: input.source.dropped(),
+                frames: 0,
+            })
+            .collect()
+    }
+
+    fn note_buffered(&mut self) {
+        let buffered: usize = self.inputs.iter().map(|i| i.carry.len()).sum();
+        self.peak_buffered = self.peak_buffered.max(buffered);
+    }
+
+    /// Single input, no layout: forward batches untouched.
+    fn next_single(&mut self) -> Result<Option<Vec<Event>>> {
+        let input = &mut self.inputs[0];
+        match input.source.next_batch()? {
+            None => Ok(None),
+            Some(batch) => {
+                if !batch.is_empty() {
+                    input.events += batch.len() as u64;
+                    input.batches += 1;
+                }
+                Ok(Some(batch))
+            }
+        }
+    }
+
+    fn next_merged(&mut self) -> Result<Option<Vec<Event>>> {
+        // Refill every empty carry — one pull per input per call, so
+        // each call does bounded work even over slow live sources.
+        for input in &mut self.inputs {
+            if !input.exhausted && input.carry.is_empty() {
+                input.refill()?;
+            }
+        }
+        if self.inputs.iter().all(|i| i.exhausted && i.carry.is_empty()) {
+            return Ok(None);
+        }
+        if self.inputs.iter().any(|i| !i.exhausted && i.carry.is_empty()) {
+            // A live input has nothing buffered: emitting now could
+            // violate global timestamp order (its next event may be
+            // earlier than every buffered one). Report idle upward.
+            return Ok(Some(Vec::new()));
+        }
+        self.note_buffered();
+        let mut out = Vec::with_capacity(self.chunk);
+        while out.len() < self.chunk {
+            // Min-head scan (k is small); ties break to the lowest
+            // source id, matching `fusion::merge_streams` determinism.
+            let mut best: Option<(u64, usize)> = None;
+            for (i, input) in self.inputs.iter().enumerate() {
+                if let Some(head) = input.carry.front() {
+                    if best.map_or(true, |(t, _)| head.t < t) {
+                        best = Some((head.t, i));
+                    }
+                }
+            }
+            let Some((_, i)) = best else { break };
+            let ev = self.inputs[i].carry.pop_front().expect("nonempty carry");
+            match &self.layout {
+                Some(layout) => match layout.place(i, &ev) {
+                    Some(placed) => out.push(placed),
+                    None => self.dropped += 1,
+                },
+                None => out.push(ev),
+            }
+            let input = &mut self.inputs[i];
+            if input.carry.is_empty() && !input.exhausted {
+                if input.refill()? {
+                    self.note_buffered();
+                } else if !self.inputs[i].exhausted {
+                    // Live source momentarily dry: its future timestamps
+                    // are unknown, so this merge round must stop here.
+                    break;
+                }
+            }
+        }
+        Ok(Some(out))
+    }
+}
+
+impl<S: EventSource> EventSource for FusedSource<S> {
+    fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
+        if self.inputs.len() == 1 && self.layout.is_none() {
+            self.next_single()
+        } else {
+            self.next_merged()
+        }
+    }
+
+    fn resolution(&self) -> Resolution {
+        match &self.layout {
+            Some(layout) => layout.canvas,
+            None => {
+                let mut res = self.inputs[0].source.resolution();
+                for input in &self.inputs[1..] {
+                    let r = input.source.resolution();
+                    res.width = res.width.max(r.width);
+                    res.height = res.height.max(r.height);
+                }
+                res
+            }
+        }
+    }
+
+    fn geometry_known(&self) -> bool {
+        self.inputs.iter().all(|i| i.source.geometry_known())
+    }
+
+    fn dropped(&self) -> u64 {
+        // Layout rejections plus whatever the inputs discarded
+        // themselves ([`Self::layout_dropped`] reports layout-only).
+        self.dropped + self.inputs.iter().map(|i| i.source.dropped()).sum::<u64>()
+    }
+
+    fn describe(&self) -> String {
+        if self.inputs.len() == 1 {
+            self.inputs[0].source.describe()
+        } else {
+            format!("fused({} sources)", self.inputs.len())
+        }
+    }
+}
+
+// ------------------------------------------------------------- threading
+
+/// Executor-side end of a pinned source thread: a non-blocking
+/// [`EventSource`] over the SPSC ring. An empty channel reads as a live
+/// source with nothing pending; a closed channel as end of stream —
+/// unless the pump recorded an error, which is surfaced *now* so a
+/// failed sensor aborts the whole topology instead of looking like a
+/// clean end-of-stream while its siblings keep it running forever.
+struct ChannelSource<'e> {
+    rx: SyncReceiver<Vec<Event>>,
+    err: &'e Mutex<Option<anyhow::Error>>,
+    res: Resolution,
+    known: bool,
+    name: String,
+}
+
+impl EventSource for ChannelSource<'_> {
+    fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
+        if let Some(batch) = self.rx.try_recv() {
+            grow_resolution(&mut self.res, &batch);
+            return Ok(Some(batch));
+        }
+        if self.rx.is_closed() {
+            // Drain-then-close: one more pop after observing the close.
+            if let Some(batch) = self.rx.try_recv() {
+                grow_resolution(&mut self.res, &batch);
+                return Ok(Some(batch));
+            }
+            // The pump stores its error before dropping the sender, so
+            // after observing the close any failure is visible here.
+            if let Some(e) = self.err.lock().unwrap().take() {
+                return Err(e);
+            }
+            return Ok(None);
+        }
+        Ok(Some(Vec::new()))
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.res
+    }
+
+    fn geometry_known(&self) -> bool {
+        self.known
+    }
+
+    fn describe(&self) -> String {
+        format!("thread({})", self.name)
+    }
+}
+
+/// Source-thread body: pull batches and push them through the ring,
+/// counting full-ring suspensions as backpressure. Exits when the
+/// source ends or errors, or when the executor side hangs up.
+fn pump<S: EventSource>(
+    mut source: S,
+    mut tx: SyncSender<Vec<Event>>,
+    err: &Mutex<Option<anyhow::Error>>,
+    waits: &AtomicU64,
+    drops: &AtomicU64,
+) {
+    let mut idle = IdleBackoff::new();
+    loop {
+        match source.next_batch() {
+            Ok(Some(batch)) => {
+                if batch.is_empty() {
+                    idle.wait();
+                    continue;
+                }
+                idle.reset();
+                match tx.try_send(batch) {
+                    Ok(()) => {}
+                    Err(batch) => {
+                        waits.fetch_add(1, Ordering::Relaxed);
+                        if block_on(tx.send(batch)).is_err() {
+                            break; // merge side hung up
+                        }
+                    }
+                }
+            }
+            Ok(None) => break,
+            Err(e) => {
+                *err.lock().unwrap() = Some(e);
+                break;
+            }
+        }
+    }
+    // Publish the source's own discard count (the executor side only
+    // sees the ring, not the source) before the sender drops.
+    drops.store(source.dropped(), Ordering::Relaxed);
+}
+
+// --------------------------------------------------------------- fan-out
+
+/// Split one processed batch into per-sink batches.
+fn partition(
+    processed: Vec<Event>,
+    route: &RoutePolicy,
+    canvas: Resolution,
+    m: usize,
+) -> Vec<Vec<Event>> {
+    match route {
+        RoutePolicy::Broadcast => {
+            let mut parts = Vec::with_capacity(m);
+            for _ in 0..m - 1 {
+                parts.push(processed.clone());
+            }
+            parts.push(processed);
+            parts
+        }
+        RoutePolicy::Polarity => {
+            let (mut on, mut off) = (Vec::new(), Vec::new());
+            for ev in processed {
+                if ev.p.is_on() {
+                    on.push(ev);
+                } else {
+                    off.push(ev);
+                }
+            }
+            vec![on, off]
+        }
+        RoutePolicy::Stripes => {
+            let stripe = (canvas.width as usize).div_ceil(m).max(1);
+            let mut parts = vec![Vec::new(); m];
+            for ev in processed {
+                parts[(ev.x as usize / stripe).min(m - 1)].push(ev);
+            }
+            parts
+        }
+    }
+}
+
+// ---------------------------------------------------------------- driver
+
+/// Build the default fused layout for `resolutions`: side by side, with
+/// the hard errors a silent saturating layout would otherwise hide.
+/// Shared by the library driver and the coordinator (which needs the
+/// canvas before the run to size its sinks).
+pub fn default_layout(resolutions: &[Resolution]) -> Result<SourceLayout> {
+    let total_width: u32 = resolutions.iter().map(|r| u32::from(r.width)).sum();
+    if total_width > u32::from(u16::MAX) {
+        bail!(
+            "fused side-by-side canvas width {total_width} exceeds the \
+             u16 address space"
+        );
+    }
+    Ok(SourceLayout::side_by_side(resolutions))
+}
+
+/// Counters produced by one edge drive, merged into [`StreamReport`].
+struct DriveOutcome {
+    events_in: u64,
+    events_out: u64,
+    batches: u64,
+    peak_in_flight: usize,
+    backpressure_waits: u64,
+    per_sink_events: Vec<u64>,
+    per_sink_batches: Vec<u64>,
+    per_sink_waits: Vec<u64>,
+}
+
+/// Drive an N-source, M-sink topology to completion.
+///
+/// Sources fan in through the streaming timestamp-ordered merge
+/// (`layout` defaults to [`SourceLayout::side_by_side`] when several
+/// sources are given), flow through the shared `pipeline` once, and fan
+/// out per `config.route`. Memory stays O(chunk × (sources + sinks)).
+pub fn run_topology<S: EventSource, K: EventSink>(
+    sources: Vec<S>,
+    pipeline: &mut Pipeline,
+    mut sinks: Vec<K>,
+    layout: Option<SourceLayout>,
+    config: &TopologyConfig,
+) -> Result<StreamReport> {
+    if sources.is_empty() {
+        bail!("topology needs at least one source");
+    }
+    if sinks.is_empty() {
+        bail!("topology needs at least one sink");
+    }
+    if config.route == RoutePolicy::Polarity && sinks.len() != 2 {
+        bail!("polarity routing requires exactly 2 sinks, got {}", sinks.len());
+    }
+    if config.route == RoutePolicy::Stripes && !sources.iter().all(|s| s.geometry_known()) {
+        // Stripe boundaries are cut from the canvas before the run; a
+        // geometry that is only observed (1×1 at start) would degenerate
+        // every stripe to the last sink.
+        bail!("stripes routing requires known source geometry (declare --geometry)");
+    }
+    let layout = match layout {
+        Some(layout) => {
+            if layout.placements.len() != sources.len() {
+                bail!(
+                    "layout has {} placements for {} sources",
+                    layout.placements.len(),
+                    sources.len()
+                );
+            }
+            Some(layout)
+        }
+        None if sources.len() > 1 => {
+            // The default layout is fabricated from the sources' claimed
+            // resolutions; a live source still reporting its observed
+            // placeholder (1×1) would get a placement that rejects
+            // nearly every event. Refuse rather than silently drop.
+            if !sources.iter().all(|s| s.geometry_known()) {
+                bail!(
+                    "fusing a source with unknown geometry needs an explicit \
+                     layout (or a declared source geometry)"
+                );
+            }
+            let resolutions: Vec<Resolution> =
+                sources.iter().map(|s| s.resolution()).collect();
+            Some(default_layout(&resolutions)?)
+        }
+        None => None,
+    };
+    let t0 = Instant::now();
+    match config.threads {
+        ThreadMode::Inline => {
+            let mut merged = FusedSource::new(sources, layout, config.chunk_size);
+            drive_and_report(&mut merged, pipeline, &mut sinks, config, t0)
+        }
+        ThreadMode::PerSourceThread => {
+            run_threaded(sources, pipeline, &mut sinks, layout, config, t0)
+        }
+    }
+}
+
+/// Per-source-thread variant: pin each source to its own OS thread and
+/// merge their rings on the executor thread.
+fn run_threaded<S: EventSource, K: EventSink>(
+    sources: Vec<S>,
+    pipeline: &mut Pipeline,
+    sinks: &mut Vec<K>,
+    layout: Option<SourceLayout>,
+    config: &TopologyConfig,
+    t0: Instant,
+) -> Result<StreamReport> {
+    let n = sources.len();
+    let pump_errs: Vec<Mutex<Option<anyhow::Error>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let pump_waits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let pump_drops: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let result = std::thread::scope(|scope| {
+        let mut taps = Vec::with_capacity(n);
+        for (i, source) in sources.into_iter().enumerate() {
+            let res = source.resolution();
+            let known = source.geometry_known();
+            let name = source.describe();
+            let (tx, rx) = sync_channel::<Vec<Event>>(PUMP_QUEUE_BATCHES);
+            let (err, waits, drops) = (&pump_errs[i], &pump_waits[i], &pump_drops[i]);
+            scope.spawn(move || pump(source, tx, err, waits, drops));
+            taps.push(ChannelSource { rx, err, res, known, name });
+        }
+        let mut merged = FusedSource::new(taps, layout, config.chunk_size);
+        drive_and_report(&mut merged, pipeline, sinks, config, t0)
+        // `merged` (and with it every ring receiver) drops here, so any
+        // pump still parked in a full-ring send unblocks before the
+        // scope joins the threads.
+    });
+    let mut report = result?;
+    for (i, err) in pump_errs.into_iter().enumerate() {
+        if let Some(e) = err.into_inner().unwrap() {
+            return Err(e.context(format!("stream source {i} (thread)")));
+        }
+    }
+    for ((node, waits), drops) in
+        report.sources.iter_mut().zip(&pump_waits).zip(&pump_drops)
+    {
+        node.backpressure_waits = waits.load(Ordering::Relaxed);
+        node.dropped = drops.load(Ordering::Relaxed);
+    }
+    Ok(report)
+}
+
+/// Drive the merged edge with the configured driver, then flush sinks
+/// and assemble the report.
+fn drive_and_report<S: EventSource, K: EventSink>(
+    merged: &mut FusedSource<S>,
+    pipeline: &mut Pipeline,
+    sinks: &mut [K],
+    config: &TopologyConfig,
+    t0: Instant,
+) -> Result<StreamReport> {
+    let canvas = merged.resolution();
+    let outcome = match config.driver {
+        StreamDriver::Sync => drive_sync(merged, pipeline, sinks, &config.route, canvas)?,
+        StreamDriver::Coroutine { channel_capacity } => {
+            let cap = channel_capacity.max(1);
+            if sinks.len() == 1 {
+                drive_coro_single(merged, pipeline, &mut sinks[0], cap)?
+            } else {
+                drive_coro_fan(merged, pipeline, sinks, &config.route, canvas, cap)?
+            }
+        }
+    };
+    let final_res = merged.resolution();
+    for sink in sinks.iter_mut() {
+        sink.observe_geometry(final_res);
+    }
+    let mut frames = 0u64;
+    let mut sink_reports = Vec::with_capacity(sinks.len());
+    for (i, sink) in sinks.iter_mut().enumerate() {
+        let summary = sink.finish().context("stream sink finish")?;
+        frames += summary.frames;
+        sink_reports.push(NodeReport {
+            name: sink.describe(),
+            events: outcome.per_sink_events[i],
+            batches: outcome.per_sink_batches[i],
+            backpressure_waits: outcome.per_sink_waits[i],
+            dropped: 0,
+            frames: summary.frames,
+        });
+    }
+    Ok(StreamReport {
+        events_in: outcome.events_in,
+        events_out: outcome.events_out,
+        frames,
+        batches: outcome.batches,
+        peak_in_flight: outcome.peak_in_flight,
+        backpressure_waits: outcome.backpressure_waits,
+        wall: t0.elapsed(),
+        resolution: final_res,
+        sources: merged.node_reports(),
+        sinks: sink_reports,
+        merge_peak_buffered: merged.peak_buffered(),
+        merge_dropped: merged.layout_dropped(),
+    })
+}
+
+/// Baseline driver: one loop, no overlap, any fan-out width.
+fn drive_sync<S: EventSource, K: EventSink>(
+    source: &mut FusedSource<S>,
+    pipeline: &mut Pipeline,
+    sinks: &mut [K],
+    route: &RoutePolicy,
+    canvas: Resolution,
+) -> Result<DriveOutcome> {
+    let m = sinks.len();
+    let mut outcome = DriveOutcome {
+        events_in: 0,
+        events_out: 0,
+        batches: 0,
+        peak_in_flight: 0,
+        backpressure_waits: 0,
+        per_sink_events: vec![0; m],
+        per_sink_batches: vec![0; m],
+        per_sink_waits: vec![0; m],
+    };
+    let mut idle = IdleBackoff::new();
+    while let Some(batch) = source.next_batch().context("stream source")? {
+        if batch.is_empty() {
+            idle.wait(); // live source idle: bounded escalating wait
+            continue;
+        }
+        idle.reset();
+        outcome.events_in += batch.len() as u64;
+        outcome.batches += 1;
+        outcome.peak_in_flight = outcome.peak_in_flight.max(batch.len());
+        let processed = pipeline.process(&batch);
+        outcome.events_out += processed.len() as u64;
+        if m == 1 {
+            if !processed.is_empty() {
+                outcome.per_sink_events[0] += processed.len() as u64;
+                outcome.per_sink_batches[0] += 1;
+            }
+            sinks[0].consume(&processed).context("stream sink")?;
+            continue;
+        }
+        if processed.is_empty() {
+            continue;
+        }
+        if *route == RoutePolicy::Broadcast {
+            // Sinks borrow the batch; the sync path needs no owned
+            // copies (the coroutine path does, for its channels).
+            for (i, sink) in sinks.iter_mut().enumerate() {
+                outcome.per_sink_events[i] += processed.len() as u64;
+                outcome.per_sink_batches[i] += 1;
+                sink.consume(&processed).context("stream sink")?;
+            }
+            continue;
+        }
+        for (i, part) in partition(processed, route, canvas, m).into_iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            outcome.per_sink_events[i] += part.len() as u64;
+            outcome.per_sink_batches[i] += 1;
+            sinks[i].consume(&part).context("stream sink")?;
+        }
+    }
+    Ok(outcome)
+}
+
+/// Producer-side counters shared by the coroutine drivers (single-cell
+/// interior mutability: everything runs on one executor thread).
+#[derive(Default)]
+struct ProducerGauges {
+    events_in: Cell<u64>,
+    batches: Cell<u64>,
+    in_flight: Cell<usize>,
+    peak_in_flight: Cell<usize>,
+    backpressure_waits: Cell<u64>,
+}
+
+/// Spawn the shared producer coroutine: pull batches from the merged
+/// source, count them, and push them into the edge channel with
+/// try-then-suspend backpressure accounting. Used by both coroutine
+/// drivers so the pull/backoff/error logic cannot diverge.
+fn spawn_producer<'a, S: EventSource>(
+    ex: &LocalExecutor<'a>,
+    source: &'a mut FusedSource<S>,
+    tx: Sender<Vec<Event>>,
+    gauges: &'a ProducerGauges,
+    source_err: &'a RefCell<Option<anyhow::Error>>,
+) {
+    ex.spawn(async move {
+        let mut idle = IdleBackoff::new();
+        loop {
+            let batch = match source.next_batch() {
+                Ok(Some(batch)) => batch,
+                Ok(None) => break,
+                Err(e) => {
+                    *source_err.borrow_mut() = Some(e);
+                    break;
+                }
+            };
+            if batch.is_empty() {
+                // Live source with nothing pending: let the consumer
+                // drain, then wait a bounded, escalating amount instead
+                // of spinning.
+                yield_now().await;
+                idle.wait();
+                continue;
+            }
+            idle.reset();
+            let n = batch.len();
+            gauges.events_in.set(gauges.events_in.get() + n as u64);
+            gauges.batches.set(gauges.batches.get() + 1);
+            match tx.try_send(batch) {
+                Ok(()) => {}
+                Err(TrySendError::Closed(_)) => break, // consumer died
+                Err(TrySendError::Full(batch)) => {
+                    gauges.backpressure_waits.set(gauges.backpressure_waits.get() + 1);
+                    if tx.send(batch).await.is_err() {
+                        break;
+                    }
+                }
+            }
+            gauges.in_flight.set(gauges.in_flight.get() + n);
+            gauges
+                .peak_in_flight
+                .set(gauges.peak_in_flight.get().max(gauges.in_flight.get()));
+        }
+        // `tx` drops here, letting the consumer observe the close.
+    });
+}
+
+/// Coroutine driver, single sink: producer and consumer tasks on one
+/// cooperative executor, batches handed through a bounded channel. The
+/// producer suspends the moment the consumer is behind, which is the
+/// backpressure that keeps memory O(chunk) for endless sources.
+fn drive_coro_single<S: EventSource, K: EventSink>(
+    source: &mut FusedSource<S>,
+    pipeline: &mut Pipeline,
+    sink: &mut K,
+    channel_capacity: usize,
+) -> Result<DriveOutcome> {
+    let gauges = ProducerGauges::default();
+    let events_out = Cell::new(0u64);
+    let delivered = Cell::new(0u64);
+    let source_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
+    let sink_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
+
+    {
+        let ex = LocalExecutor::new();
+        let (tx, mut rx) = channel::<Vec<Event>>(channel_capacity);
+        spawn_producer(&ex, source, tx, &gauges, &source_err);
+
+        // ---------------------------------------------------- consumer
+        {
+            let (events_out, delivered) = (&events_out, &delivered);
+            let in_flight = &gauges.in_flight;
+            let sink_err = &sink_err;
+            let pipeline = &mut *pipeline;
+            let sink = &mut *sink;
+            ex.spawn(async move {
+                while let Some(batch) = rx.recv().await {
+                    in_flight.set(in_flight.get() - batch.len());
+                    let processed = pipeline.process(&batch);
+                    events_out.set(events_out.get() + processed.len() as u64);
+                    if !processed.is_empty() {
+                        delivered.set(delivered.get() + 1);
+                    }
+                    if let Err(e) = sink.consume(&processed) {
+                        *sink_err.borrow_mut() = Some(e);
+                        break; // dropping `rx` fails producer sends fast
+                    }
+                }
+            });
+        }
+
+        ex.run();
+    }
+
+    if let Some(e) = source_err.into_inner() {
+        return Err(e.context("stream source"));
+    }
+    if let Some(e) = sink_err.into_inner() {
+        return Err(e.context("stream sink"));
+    }
+    Ok(DriveOutcome {
+        events_in: gauges.events_in.get(),
+        events_out: events_out.get(),
+        batches: gauges.batches.get(),
+        peak_in_flight: gauges.peak_in_flight.get(),
+        backpressure_waits: gauges.backpressure_waits.get(),
+        per_sink_events: vec![events_out.get()],
+        per_sink_batches: vec![delivered.get()],
+        per_sink_waits: vec![0],
+    })
+}
+
+/// Coroutine driver, M ≥ 2 sinks: producer → router → per-sink tasks,
+/// all cooperative on one executor. The router applies the pipeline
+/// once and distributes per [`RoutePolicy`]; each sink sits behind its
+/// own bounded channel, so a slow sink backpressures the router (and
+/// transitively the producer) without blocking its siblings' queues.
+fn drive_coro_fan<S: EventSource, K: EventSink>(
+    source: &mut FusedSource<S>,
+    pipeline: &mut Pipeline,
+    sinks: &mut [K],
+    route: &RoutePolicy,
+    canvas: Resolution,
+    channel_capacity: usize,
+) -> Result<DriveOutcome> {
+    let m = sinks.len();
+    let gauges = ProducerGauges::default();
+    let events_out = Cell::new(0u64);
+    let per_sink_events: Vec<Cell<u64>> = (0..m).map(|_| Cell::new(0)).collect();
+    let per_sink_batches: Vec<Cell<u64>> = (0..m).map(|_| Cell::new(0)).collect();
+    let per_sink_waits: Vec<Cell<u64>> = (0..m).map(|_| Cell::new(0)).collect();
+    let source_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
+    let sink_errs: Vec<RefCell<Option<anyhow::Error>>> =
+        (0..m).map(|_| RefCell::new(None)).collect();
+
+    {
+        let ex = LocalExecutor::new();
+        let (tx, mut rx) = channel::<Vec<Event>>(channel_capacity);
+        spawn_producer(&ex, source, tx, &gauges, &source_err);
+
+        // --------------------------------------------------- sink tasks
+        let mut sink_txs = Vec::with_capacity(m);
+        for (i, sink) in sinks.iter_mut().enumerate() {
+            let (stx, mut srx) = channel::<Vec<Event>>(channel_capacity);
+            sink_txs.push(stx);
+            let err = &sink_errs[i];
+            ex.spawn(async move {
+                while let Some(part) = srx.recv().await {
+                    if let Err(e) = sink.consume(&part) {
+                        *err.borrow_mut() = Some(e);
+                        break; // dropping `srx` fails router sends fast
+                    }
+                }
+            });
+        }
+
+        // ------------------------------------------------------- router
+        {
+            let (events_out, in_flight) = (&events_out, &gauges.in_flight);
+            let per_sink_events = &per_sink_events;
+            let per_sink_batches = &per_sink_batches;
+            let per_sink_waits = &per_sink_waits;
+            let pipeline = &mut *pipeline;
+            let route = *route;
+            ex.spawn(async move {
+                let txs = sink_txs;
+                'route: while let Some(batch) = rx.recv().await {
+                    in_flight.set(in_flight.get() - batch.len());
+                    let processed = pipeline.process(&batch);
+                    events_out.set(events_out.get() + processed.len() as u64);
+                    if processed.is_empty() {
+                        continue;
+                    }
+                    for (i, part) in
+                        partition(processed, &route, canvas, m).into_iter().enumerate()
+                    {
+                        if part.is_empty() {
+                            continue;
+                        }
+                        per_sink_events[i].set(per_sink_events[i].get() + part.len() as u64);
+                        per_sink_batches[i].set(per_sink_batches[i].get() + 1);
+                        match txs[i].try_send(part) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(part)) => {
+                                per_sink_waits[i].set(per_sink_waits[i].get() + 1);
+                                if txs[i].send(part).await.is_err() {
+                                    // Sink tasks only hang up on error:
+                                    // abort the whole topology promptly
+                                    // (parity with the single-sink path)
+                                    // instead of streaming on until every
+                                    // sink dies.
+                                    break 'route;
+                                }
+                            }
+                            Err(TrySendError::Closed(_)) => break 'route,
+                        }
+                    }
+                }
+                // Dropping `rx` stops the producer; dropping `txs` lets
+                // the surviving sink tasks drain their queues and end.
+            });
+        }
+
+        ex.run();
+    }
+
+    if let Some(e) = source_err.into_inner() {
+        return Err(e.context("stream source"));
+    }
+    for err in sink_errs {
+        if let Some(e) = err.into_inner() {
+            return Err(e.context("stream sink"));
+        }
+    }
+    Ok(DriveOutcome {
+        events_in: gauges.events_in.get(),
+        events_out: events_out.get(),
+        batches: gauges.batches.get(),
+        peak_in_flight: gauges.peak_in_flight.get(),
+        backpressure_waits: gauges.backpressure_waits.get(),
+        per_sink_events: per_sink_events.into_iter().map(Cell::into_inner).collect(),
+        per_sink_batches: per_sink_batches.into_iter().map(Cell::into_inner).collect(),
+        per_sink_waits: per_sink_waits.into_iter().map(Cell::into_inner).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::validate_stream;
+    use crate::pipeline::fusion;
+    use crate::stream::{MemorySource, NullSink};
+    use crate::testutil::synthetic_events_seeded;
+
+    fn mem(events: Vec<Event>, res: Resolution, chunk: usize) -> MemorySource {
+        MemorySource::new(events, res, chunk)
+    }
+
+    #[test]
+    fn streaming_merge_matches_batch_fusion() {
+        let res = Resolution::new(64, 48);
+        let a = synthetic_events_seeded(700, 64, 48, 11);
+        let b = synthetic_events_seeded(300, 64, 48, 22);
+        let c = synthetic_events_seeded(500, 64, 48, 33);
+        let layout = SourceLayout::side_by_side(&[res, res, res]);
+        let (expected, expected_dropped) = fusion::fuse(&[&a, &b, &c], &layout);
+
+        for chunk in [1usize, 3, 64, 4096] {
+            let sources = vec![
+                mem(a.clone(), res, chunk),
+                mem(b.clone(), res, chunk),
+                mem(c.clone(), res, chunk),
+            ];
+            let mut fused = FusedSource::new(sources, Some(layout.clone()), chunk);
+            let mut got = Vec::new();
+            while let Some(batch) = fused.next_batch().unwrap() {
+                got.extend(batch);
+            }
+            assert_eq!(got, expected, "chunk {chunk}");
+            assert_eq!(fused.dropped(), expected_dropped);
+            assert!(
+                fused.peak_buffered() <= 3 * chunk,
+                "chunk {chunk}: peak {} exceeds sources × chunk",
+                fused.peak_buffered()
+            );
+            assert_eq!(validate_stream(&got, layout.canvas), None);
+        }
+    }
+
+    #[test]
+    fn single_source_passes_through_unchanged() {
+        let res = Resolution::new(32, 32);
+        let events = synthetic_events_seeded(500, 32, 32, 7);
+        let mut fused = FusedSource::new(vec![mem(events.clone(), res, 128)], None, 128);
+        assert_eq!(fused.resolution(), res);
+        let mut got = Vec::new();
+        while let Some(batch) = fused.next_batch().unwrap() {
+            got.extend(batch);
+        }
+        assert_eq!(got, events);
+        assert_eq!(fused.peak_buffered(), 0, "pass-through must not buffer");
+        assert_eq!(fused.node_reports()[0].events, 500);
+    }
+
+    #[test]
+    fn broadcast_fan_out_reaches_every_sink() {
+        let res = Resolution::new(64, 64);
+        let a = synthetic_events_seeded(600, 64, 64, 1);
+        let b = synthetic_events_seeded(400, 64, 64, 2);
+        let sources = vec![mem(a, res, 128), mem(b, res, 128)];
+        let sinks = vec![NullSink::default(), NullSink::default(), NullSink::default()];
+        let config = TopologyConfig { chunk_size: 128, ..Default::default() };
+        let report =
+            run_topology(sources, &mut Pipeline::new(), sinks, None, &config).unwrap();
+        assert_eq!(report.events_in, 1000);
+        assert_eq!(report.events_out, 1000);
+        assert_eq!(report.resolution, Resolution::new(128, 64));
+        assert_eq!(report.sources.len(), 2);
+        assert_eq!(report.sources[0].events, 600);
+        assert_eq!(report.sources[1].events, 400);
+        assert_eq!(report.sinks.len(), 3);
+        for sink in &report.sinks {
+            assert_eq!(sink.events, 1000, "broadcast must reach {}", sink.name);
+        }
+    }
+
+    #[test]
+    fn polarity_routing_splits_exactly() {
+        let res = Resolution::new(64, 64);
+        let events = synthetic_events_seeded(2000, 64, 64, 3);
+        let on = events.iter().filter(|e| e.p.is_on()).count() as u64;
+        let config = TopologyConfig {
+            route: RoutePolicy::Polarity,
+            chunk_size: 256,
+            ..Default::default()
+        };
+        let report = run_topology(
+            vec![mem(events, res, 256)],
+            &mut Pipeline::new(),
+            vec![NullSink::default(), NullSink::default()],
+            None,
+            &config,
+        )
+        .unwrap();
+        assert_eq!(report.sinks[0].events, on);
+        assert_eq!(report.sinks[1].events, 2000 - on);
+    }
+
+    #[test]
+    fn polarity_routing_rejects_wrong_sink_count() {
+        let res = Resolution::new(8, 8);
+        let config = TopologyConfig { route: RoutePolicy::Polarity, ..Default::default() };
+        let err = run_topology(
+            vec![mem(Vec::new(), res, 16)],
+            &mut Pipeline::new(),
+            vec![NullSink::default()],
+            None,
+            &config,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("polarity"));
+    }
+
+    #[test]
+    fn stripes_cover_every_event_once() {
+        let res = Resolution::new(90, 30);
+        let events = synthetic_events_seeded(1500, 90, 30, 9);
+        let config = TopologyConfig {
+            route: RoutePolicy::Stripes,
+            chunk_size: 128,
+            ..Default::default()
+        };
+        let report = run_topology(
+            vec![mem(events, res, 128)],
+            &mut Pipeline::new(),
+            vec![NullSink::default(), NullSink::default(), NullSink::default()],
+            None,
+            &config,
+        )
+        .unwrap();
+        let routed: u64 = report.sinks.iter().map(|s| s.events).sum();
+        assert_eq!(routed, 1500, "stripes must partition, not duplicate");
+        assert!(report.sinks.iter().all(|s| s.events > 0), "90px / 3 stripes: all hit");
+    }
+
+    #[test]
+    fn per_source_threads_deliver_everything_in_order() {
+        let res = Resolution::new(64, 64);
+        let a = synthetic_events_seeded(5000, 64, 64, 4);
+        let b = synthetic_events_seeded(5000, 64, 64, 5);
+        let config = TopologyConfig {
+            chunk_size: 256,
+            threads: ThreadMode::PerSourceThread,
+            ..Default::default()
+        };
+        let report = run_topology(
+            vec![mem(a, res, 256), mem(b, res, 256)],
+            &mut Pipeline::new(),
+            vec![NullSink::default()],
+            None,
+            &config,
+        )
+        .unwrap();
+        assert_eq!(report.events_in, 10_000);
+        assert_eq!(report.events_out, 10_000);
+        assert_eq!(report.sources.len(), 2);
+        assert_eq!(report.sources[0].events + report.sources[1].events, 10_000);
+        assert!(
+            report.merge_peak_buffered <= 2 * 256,
+            "merge buffered {} exceeds sources × chunk",
+            report.merge_peak_buffered
+        );
+    }
+
+    #[test]
+    fn threaded_source_error_propagates() {
+        struct Failing(u32);
+        impl EventSource for Failing {
+            fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
+                self.0 += 1;
+                if self.0 < 3 {
+                    Ok(Some(vec![Event::on(0, 0, u64::from(self.0))]))
+                } else {
+                    anyhow::bail!("sensor unplugged")
+                }
+            }
+            fn resolution(&self) -> Resolution {
+                Resolution::new(4, 4)
+            }
+        }
+        let config =
+            TopologyConfig { threads: ThreadMode::PerSourceThread, ..Default::default() };
+        let err = run_topology(
+            vec![Failing(0)],
+            &mut Pipeline::new(),
+            vec![NullSink::default()],
+            None,
+            &config,
+        )
+        .unwrap_err();
+        assert!(format!("{err:?}").contains("sensor unplugged"));
+    }
+
+    #[test]
+    fn idle_backoff_escalates_and_resets() {
+        let mut idle = IdleBackoff::new();
+        for _ in 0..IdleBackoff::YIELDS {
+            idle.wait(); // yield region: must not panic or sleep long
+        }
+        assert_eq!(idle.streak, IdleBackoff::YIELDS);
+        idle.wait(); // first sleep step (50 µs)
+        assert!(idle.streak > IdleBackoff::YIELDS);
+        idle.reset();
+        assert_eq!(idle.streak, 0);
+    }
+}

@@ -5,7 +5,7 @@ use std::time::{Duration, Instant};
 use aestream::aer::{Polarity, Resolution};
 use aestream::camera::{CameraConfig, SyntheticCamera};
 use aestream::cli;
-use aestream::coordinator::{run_stream, run_stream_with, Sink, Source};
+use aestream::coordinator::{run_stream, Sink, Source};
 use aestream::formats::{self, Format};
 use aestream::net::{UdpEventReceiver, UdpEventSender};
 use aestream::pipeline::ops;
@@ -116,8 +116,18 @@ fn cli_parse_and_run_synthetic_to_null() {
     .map(|s| s.to_string())
     .collect();
     match cli::parse(&args).unwrap() {
-        cli::Command::Stream { source, pipeline, sink, config } => {
-            let report = run_stream_with(source, pipeline, sink, config).unwrap();
+        cli::Command::Stream { sources, pipeline, sinks, config, threads, route } => {
+            let report = aestream::coordinator::run_topology(
+                sources,
+                pipeline,
+                sinks,
+                aestream::coordinator::TopologyOptions {
+                    config,
+                    source_threads: threads > 1,
+                    route,
+                },
+            )
+            .unwrap();
             assert!(report.events_in > 0);
         }
         _ => panic!("expected stream command"),

@@ -5,8 +5,9 @@
 //! non-zero frames), not performance — the benches measure that.
 
 use aestream::camera;
-use aestream::coordinator::{run_scenario, FeedMode, ScenarioConfig};
+use aestream::coordinator::{run_scenario, run_scenario_fused, FeedMode, ScenarioConfig};
 use aestream::runtime::{default_artifacts_dir, Device, TransferMode};
+use aestream::stream::SliceSource;
 
 fn device_or_skip() -> Option<&'static Device> {
     // One PJRT client per test process, created once and never
@@ -80,6 +81,27 @@ fn coroutine_feed_works_with_infinite_time_scale() {
     };
     let r = run_scenario(&device, &recording, &cfg).unwrap();
     assert_eq!(r.events, recording.len() as u64);
+    assert!(r.frames >= 1);
+}
+
+#[test]
+fn fused_sources_conserve_events_into_the_detector() {
+    let Some(device) = device_or_skip() else { return };
+    // Two sensors on one address plane (§6 fusion): the merged stream
+    // must deliver every event of both recordings, in global timestamp
+    // order, through the ordinary coroutine scenario path.
+    let a = camera::paper_recording(30_000, 11);
+    let b = camera::paper_recording(30_000, 12);
+    let mut sa = SliceSource::new(&a, 2048);
+    let mut sb = SliceSource::new(&b, 2048);
+    let cfg = ScenarioConfig {
+        feed: FeedMode::Coroutine,
+        transfer: TransferMode::Sparse,
+        time_scale: f64::INFINITY,
+        fetch_outputs: false,
+    };
+    let r = run_scenario_fused(&device, vec![&mut sa, &mut sb], &cfg).unwrap();
+    assert_eq!(r.events, (a.len() + b.len()) as u64);
     assert!(r.frames >= 1);
 }
 

@@ -133,8 +133,18 @@ fn cli_stream_runs_end_to_end_on_both_drivers() {
         args.extend_from_slice(extra);
         let args: Vec<String> = args.iter().map(|s| s.to_string()).collect();
         match cli::parse(&args).unwrap() {
-            cli::Command::Stream { source, pipeline, sink, config } => {
-                let report = run_stream_with(source, pipeline, sink, config).unwrap();
+            cli::Command::Stream { sources, pipeline, sinks, config, threads, route } => {
+                let report = aestream::coordinator::run_topology(
+                    sources,
+                    pipeline,
+                    sinks,
+                    aestream::coordinator::TopologyOptions {
+                        config,
+                        source_threads: threads > 1,
+                        route,
+                    },
+                )
+                .unwrap();
                 assert!(report.events_in > 0, "{extra:?}");
                 assert!(report.events_out <= report.events_in, "{extra:?}");
             }
@@ -172,6 +182,58 @@ fn file_pipeline_file_streams_without_materializing() {
     let (decoded, res, _) = aestream::formats::read_events_auto(&output).unwrap();
     assert_eq!(decoded, on);
     assert_eq!(res, Resolution::DAVIS_346);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The ROADMAP live-source geometry item, end to end: a UDP-fed file
+/// sink must not stamp the geometry observed at header-write time (a
+/// 1×1 placeholder before any datagram arrives) — it spools lossless
+/// records and re-encodes at finish with the exact observed bounding
+/// box, so the recorded file reads back identical to the sent stream.
+#[test]
+fn udp_to_file_records_exact_observed_geometry() {
+    let dir = std::env::temp_dir().join(format!("aestream-udpfile-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("live.aedat");
+
+    let rx = aestream::net::UdpEventReceiver::bind("127.0.0.1:0").unwrap();
+    let addr = rx.local_addr().unwrap();
+    let mut source = UdpSource::from_receiver(rx, Duration::from_millis(250));
+
+    let events = synthetic_events(2000, 346, 260);
+    let expected_res = {
+        let mut res = Resolution::new(1, 1);
+        for ev in &events {
+            res.width = res.width.max(ev.x + 1);
+            res.height = res.height.max(ev.y + 1);
+        }
+        res
+    };
+    let sender_events = events.clone();
+    let sender = std::thread::spawn(move || {
+        let mut tx = UdpEventSender::connect(addr).unwrap();
+        tx.send(&sender_events).unwrap();
+    });
+
+    // Geometry unknown (live wire): the sink must take the spool path.
+    assert!(!aestream::stream::EventSource::geometry_known(&source));
+    let mut sink = aestream::coordinator::Sink::File(path.clone(), aestream::formats::Format::Aedat)
+        .into_sink(Resolution::new(1, 1), false)
+        .unwrap();
+    let report = stream::run(
+        &mut source,
+        &mut Pipeline::new(),
+        sink.as_mut(),
+        StreamConfig::default(),
+    )
+    .unwrap();
+    sender.join().unwrap();
+    assert_eq!(report.events_in, 2000);
+
+    let (decoded, res, _) = aestream::formats::read_events_auto(&path).unwrap();
+    assert_eq!(decoded, events, "spool re-encode must be lossless");
+    assert_eq!(res, expected_res, "header must carry the final observed geometry");
+    assert!(!path.with_extension("aedat.spool").exists(), "spool cleaned up");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,0 +1,288 @@
+//! Fan-in/fan-out topology integration: streaming-merge correctness at
+//! word-splitting chunk sizes, the O(chunk × sources) memory bound
+//! under per-source OS threads, and the CLI acceptance invocation.
+
+use anyhow::Result;
+
+use aestream::aer::{validate_stream, Event, Resolution};
+use aestream::cli;
+use aestream::coordinator::{self, TopologyOptions};
+use aestream::pipeline::fusion::{self, SourceLayout};
+use aestream::pipeline::Pipeline;
+use aestream::stream::{
+    run_topology, EventSink, EventSource, FusedSource, MemorySource, RoutePolicy, SinkSummary,
+    StreamConfig, StreamDriver, ThreadMode, TopologyConfig,
+};
+use aestream::testutil::prop::check;
+use aestream::testutil::SplitMix64;
+
+/// A sink that fails the run on any global-order or canvas violation.
+struct OrderSink {
+    canvas: Resolution,
+    last_t: u64,
+    events: u64,
+}
+
+impl OrderSink {
+    fn new(canvas: Resolution) -> Self {
+        OrderSink { canvas, last_t: 0, events: 0 }
+    }
+}
+
+impl EventSink for OrderSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        for ev in batch {
+            anyhow::ensure!(
+                ev.t >= self.last_t,
+                "timestamp regression: {} after {}",
+                ev.t,
+                self.last_t
+            );
+            anyhow::ensure!(
+                self.canvas.contains(ev),
+                "event ({},{}) outside canvas {}",
+                ev.x,
+                ev.y,
+                self.canvas
+            );
+            self.last_t = ev.t;
+            self.events += 1;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        Ok(SinkSummary::default())
+    }
+
+    fn describe(&self) -> String {
+        "order-check".into()
+    }
+}
+
+/// Random per-source event streams (individually time-ordered).
+fn gen_streams(rng: &mut SplitMix64, max_sources: usize) -> (Vec<Vec<Event>>, Resolution) {
+    let k = 1 + (rng.next_u64() as usize) % max_sources;
+    let width = 8 + (rng.next_u64() % 56) as u16;
+    let height = 8 + (rng.next_u64() % 56) as u16;
+    let streams = (0..k)
+        .map(|_| {
+            let n = (rng.next_u64() % 300) as usize;
+            let mut t = 0u64;
+            (0..n)
+                .map(|_| {
+                    t += rng.next_u64() % 5;
+                    Event {
+                        t,
+                        x: (rng.next_u64() % width as u64) as u16,
+                        y: (rng.next_u64() % height as u64) as u16,
+                        p: aestream::aer::Polarity::from_bool(rng.next_u64() & 1 == 1),
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    (streams, Resolution::new(width, height))
+}
+
+/// Property: at any chunk size (including word-splitting ones), the
+/// streaming k-way merge emits exactly the batch `fusion::fuse` result —
+/// globally timestamp-ordered, canvas-bounded, deterministic on ties —
+/// while buffering at most `sources × chunk` events.
+#[test]
+fn prop_streaming_merge_preserves_order_and_bounds() {
+    check(
+        "streaming merge ≡ batch fuse",
+        48,
+        |rng| {
+            let (streams, res) = gen_streams(rng, 4);
+            let chunk = 1 + (rng.next_u64() as usize) % 7; // tiny: forces splits
+            (streams, res, chunk)
+        },
+        |(streams, res, chunk)| {
+            let layout = SourceLayout::side_by_side(&vec![*res; streams.len()]);
+            let refs: Vec<&[Event]> = streams.iter().map(|s| s.as_slice()).collect();
+            let (expected, expected_dropped) = fusion::fuse(&refs, &layout);
+
+            let sources: Vec<MemorySource> = streams
+                .iter()
+                .map(|s| MemorySource::new(s.clone(), *res, *chunk))
+                .collect();
+            let mut fused = FusedSource::new(sources, Some(layout.clone()), *chunk);
+            let mut got = Vec::new();
+            loop {
+                match fused.next_batch().unwrap() {
+                    None => break,
+                    Some(batch) => got.extend(batch),
+                }
+            }
+            got == expected
+                && fused.dropped() == expected_dropped
+                && fused.peak_buffered() <= streams.len() * *chunk
+                && validate_stream(&got, layout.canvas).is_none()
+        },
+    );
+}
+
+/// Acceptance: a ≥2-source (one OS thread each), ≥2-sink topology
+/// streams end to end through the coroutine driver with globally
+/// timestamp-ordered delivery and O(chunk · sources) peak memory.
+#[test]
+fn threaded_topology_is_ordered_and_memory_bounded() {
+    let res = Resolution::new(128, 128);
+    let chunk = 512usize;
+    let a = aestream::testutil::synthetic_events_seeded(60_000, 128, 128, 100);
+    let b = aestream::testutil::synthetic_events_seeded(40_000, 128, 128, 200);
+    let sources =
+        vec![MemorySource::new(a, res, chunk), MemorySource::new(b, res, chunk)];
+    let canvas = Resolution::new(256, 128); // side-by-side of two 128×128
+    let sinks = vec![OrderSink::new(canvas), OrderSink::new(canvas)];
+    let config = TopologyConfig {
+        chunk_size: chunk,
+        driver: StreamDriver::Coroutine { channel_capacity: 1 },
+        threads: ThreadMode::PerSourceThread,
+        route: RoutePolicy::Broadcast,
+    };
+    let report =
+        run_topology(sources, &mut Pipeline::new(), sinks, None, &config).unwrap();
+    assert_eq!(report.events_in, 100_000);
+    assert_eq!(report.events_out, 100_000);
+    assert_eq!(report.resolution, canvas);
+    // Per-node attribution.
+    assert_eq!(report.sources.len(), 2);
+    assert_eq!(report.sources[0].events, 60_000);
+    assert_eq!(report.sources[1].events, 40_000);
+    assert_eq!(report.sinks.len(), 2);
+    assert!(report.sinks.iter().all(|s| s.events == 100_000), "broadcast delivery");
+    // O(chunk · sources): the merge's carry buffers hold at most one
+    // batch per source, and the edge channel at most capacity × chunk.
+    assert!(
+        report.merge_peak_buffered <= 2 * chunk,
+        "merge buffered {} > sources × chunk",
+        report.merge_peak_buffered
+    );
+    assert!(
+        report.peak_in_flight <= chunk,
+        "edge peak {} > capacity × chunk",
+        report.peak_in_flight
+    );
+}
+
+/// The exact acceptance-criteria CLI invocation parses and runs:
+/// `input synthetic … input synthetic … output file … output null
+/// --threads 2`.
+#[test]
+fn acceptance_cli_two_inputs_two_outputs_two_threads() {
+    let dir = std::env::temp_dir().join(format!("aestream-topo-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fused.aedat");
+
+    let args: Vec<String> = [
+        "input",
+        "synthetic",
+        "--duration",
+        "30ms",
+        "input",
+        "synthetic",
+        "--duration",
+        "30ms",
+        "output",
+        "file",
+        path.to_str().unwrap(),
+        "output",
+        "null",
+        "--threads",
+        "2",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+
+    let report = match cli::parse(&args).unwrap() {
+        cli::Command::Stream { sources, pipeline, sinks, config, threads, route } => {
+            assert_eq!(sources.len(), 2);
+            assert_eq!(sinks.len(), 2);
+            assert_eq!(threads, 2);
+            coordinator::run_topology(
+                sources,
+                pipeline,
+                sinks,
+                TopologyOptions { config, source_threads: threads > 1, route },
+            )
+            .unwrap()
+        }
+        _ => panic!("expected stream command"),
+    };
+    assert!(report.events_in > 0);
+    // Two DAVIS346 cameras side by side.
+    assert_eq!(report.resolution, Resolution::new(692, 260));
+    assert_eq!(report.sources.len(), 2);
+    assert_eq!(report.sinks.len(), 2);
+
+    // The recorded file holds the full fused stream: time-ordered, on
+    // the fused canvas, complete.
+    let (decoded, res, _) = aestream::formats::read_events_auto(&path).unwrap();
+    assert_eq!(decoded.len() as u64, report.events_in);
+    assert_eq!(res, Resolution::new(692, 260));
+    assert_eq!(validate_stream(&decoded, res), None);
+    // Both halves of the canvas received events.
+    assert!(decoded.iter().any(|e| e.x < 346));
+    assert!(decoded.iter().any(|e| e.x >= 346));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Polarity fan-out over the sync baseline driver: the two outputs
+/// exactly partition the stream.
+#[test]
+fn sync_topology_polarity_split_partitions() {
+    let events = aestream::testutil::synthetic_events(10_000, 64, 64);
+    let on = events.iter().filter(|e| e.p.is_on()).count() as u64;
+    let report = coordinator::run_topology(
+        vec![coordinator::Source::Memory(events, Resolution::new(64, 64))],
+        Pipeline::new(),
+        vec![coordinator::Sink::Null, coordinator::Sink::Null],
+        TopologyOptions {
+            config: StreamConfig::sync(),
+            source_threads: false,
+            route: RoutePolicy::Polarity,
+        },
+    )
+    .unwrap();
+    assert_eq!(report.sinks[0].events, on);
+    assert_eq!(report.sinks[1].events, 10_000 - on);
+    assert_eq!(report.sinks[0].events + report.sinks[1].events, report.events_out);
+}
+
+/// Fused file sources: two recordings written independently merge into
+/// one ordered canvas stream with per-source counters intact.
+#[test]
+fn two_file_sources_fuse_side_by_side() {
+    let dir = std::env::temp_dir().join(format!("aestream-fusefile-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let left = dir.join("left.aeraw");
+    let right = dir.join("right.aeraw");
+    let a = aestream::testutil::synthetic_events_seeded(3000, 128, 128, 7);
+    let b = aestream::testutil::synthetic_events_seeded(2000, 128, 128, 8);
+    for (path, events) in [(&left, &a), (&right, &b)] {
+        coordinator::run_stream(
+            coordinator::Source::Memory(events.clone(), Resolution::DVS_128),
+            Pipeline::new(),
+            coordinator::Sink::File(path.clone(), aestream::formats::Format::Raw),
+        )
+        .unwrap();
+    }
+
+    let report = coordinator::run_topology(
+        vec![coordinator::Source::File(left), coordinator::Source::File(right)],
+        Pipeline::new(),
+        vec![coordinator::Sink::Null],
+        TopologyOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(report.events_in, 5000);
+    assert_eq!(report.resolution, Resolution::new(256, 128));
+    assert_eq!(report.sources[0].events, 3000);
+    assert_eq!(report.sources[1].events, 2000);
+    assert_eq!(report.merge_dropped, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
