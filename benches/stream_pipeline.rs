@@ -12,6 +12,11 @@
 //! order either by the single-thread coroutine merge or with one OS
 //! thread per source feeding the executor over the lock-free ring.
 //!
+//! A sharded-stage section benchmarks the stage graph: one stateful
+//! stage chain (refractory + denoise, the heaviest per-event work in
+//! the op set) run serial vs stripe-sharded over 1/2/4 shard workers,
+//! inline coroutines vs one OS thread per shard.
+//!
 //! Emits the human table plus one JSON object per configuration (the
 //! same flat `{"name": …, "mean_s": …, …}` shape as the other benches'
 //! stats), so dashboards can scrape either.
@@ -20,10 +25,10 @@
 
 use aestream::aer::{Event, Resolution};
 use aestream::bench::{fmt_rate, measure, Table};
-use aestream::pipeline::Pipeline;
+use aestream::pipeline::{ops, Pipeline, PipelineSpec, StageSpec};
 use aestream::stream::{
-    self, run_topology, MemorySource, NullSink, RoutePolicy, StreamConfig, StreamDriver,
-    ThreadMode, TopologyConfig,
+    self, run_topology, MemorySource, NullSink, RoutePolicy, StageGraph, StageOptions,
+    StreamConfig, StreamDriver, ThreadMode, TopologyConfig,
 };
 use aestream::testutil::{synthetic_events, synthetic_events_seeded};
 
@@ -199,10 +204,85 @@ fn main() {
         }
     }
 
+    // --- sharded stages: a stateful filter chain run serial vs as
+    // stripe-sharded stage nodes (inline workers vs one OS thread per
+    // shard). Identical output is asserted against the serial run, so
+    // these rows track pure execution-strategy cost/speedup.
+    {
+        let stage_spec = || {
+            PipelineSpec::new()
+                .then(StageSpec::new(|res: Resolution| ops::RefractoryFilter::new(res, 100)))
+                .then(StageSpec::new(|res: Resolution| {
+                    ops::BackgroundActivityFilter::new(res, 1000)
+                }))
+        };
+        let serial_out = stage_spec().build_pipeline(res).process(&events).len() as u64;
+        for &shards in &[1usize, 2, 4] {
+            for &threaded in &[false, true] {
+                if shards == 1 && threaded {
+                    continue; // one worker thread is never interesting
+                }
+                let name = format!(
+                    "shard{shards}-{}",
+                    if threaded { "threads" } else { "coro" }
+                );
+                let config = TopologyConfig {
+                    chunk_size: 4096,
+                    driver: StreamDriver::Coroutine { channel_capacity: 1 },
+                    threads: ThreadMode::Inline,
+                    route: RoutePolicy::Broadcast,
+                };
+                let spec = stage_spec();
+                let mut peak = 0usize;
+                let mut waits = 0u64;
+                let stats = measure(1, samples, || {
+                    let mut graph = StageGraph::compile(
+                        &spec,
+                        res,
+                        &StageOptions { shards, shard_threads: threaded },
+                    );
+                    let mut source = MemorySource::new(events.clone(), res, config.chunk_size);
+                    let report = run_topology(
+                        vec![&mut source],
+                        &mut graph,
+                        vec![NullSink::default()],
+                        None,
+                        &config,
+                    )
+                    .unwrap();
+                    assert_eq!(report.events_in, n as u64);
+                    assert_eq!(report.events_out, serial_out, "sharded ≠ serial");
+                    peak = report.peak_in_flight;
+                    waits = report.backpressure_waits;
+                    std::hint::black_box(report.events_out);
+                });
+                table.row(&[
+                    name.clone(),
+                    config.chunk_size.to_string(),
+                    stats.display_mean(),
+                    fmt_rate(stats.throughput(n as u64), "ev/s"),
+                    peak.to_string(),
+                    waits.to_string(),
+                ]);
+                json_lines.push(format!(
+                    "{{\"name\":\"{name}\",\"chunk\":{},\"mean_s\":{:.6},\
+                     \"std_s\":{:.6},\"min_s\":{:.6},\"throughput_ev_s\":{:.0},\
+                     \"peak_in_flight\":{peak},\"backpressure_waits\":{waits}}}",
+                    config.chunk_size,
+                    stats.mean_s,
+                    stats.std_s,
+                    stats.min_s,
+                    stats.throughput(n as u64),
+                ));
+            }
+        }
+    }
+
     println!("{}", table.render());
     println!("peak in-flight is the memory bound: batch-collect holds the whole");
     println!("stream; the incremental drivers hold ≤ capacity × chunk events;");
-    println!("fan-in runs additionally hold ≤ sources × chunk in merge carries.\n");
+    println!("fan-in runs additionally hold ≤ sources × chunk in merge carries;");
+    println!("shard runs additionally hold ≤ one batch in flight per shard.\n");
     for line in &json_lines {
         println!("{line}");
     }

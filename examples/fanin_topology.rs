@@ -9,12 +9,12 @@ use aestream::camera::CameraConfig;
 use aestream::coordinator::{
     run_topology, RoutePolicy, Sink, Source, StreamConfig, TopologyOptions,
 };
-use aestream::pipeline::Pipeline;
+use aestream::pipeline::PipelineSpec;
 
 fn main() -> anyhow::Result<()> {
     let sources = vec![
-        Source::Synthetic { config: CameraConfig::default(), duration_us: 100_000 },
-        Source::Synthetic { config: CameraConfig::default(), duration_us: 100_000 },
+        Source::Synthetic { config: CameraConfig::default(), duration_us: 100_000 }.into(),
+        Source::Synthetic { config: CameraConfig::default(), duration_us: 100_000 }.into(),
     ];
     // Broadcast: every sink sees the fused stream. Try
     // `RoutePolicy::Stripes` to shard the canvas across sinks instead.
@@ -22,12 +22,13 @@ fn main() -> anyhow::Result<()> {
 
     let report = run_topology(
         sources,
-        Pipeline::new(),
+        PipelineSpec::new(),
         sinks,
         TopologyOptions {
             config: StreamConfig::default(),
             source_threads: true, // one OS thread per camera
             route: RoutePolicy::Broadcast,
+            ..Default::default()
         },
     )?;
 

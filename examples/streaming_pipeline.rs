@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     //    filtering + encode.
     let config = StreamConfig { chunk_size: 2048, ..Default::default() };
     let report = run_stream_with(
-        Source::File(recording_path),
+        Source::file(recording_path),
         Pipeline::new()
             .then(ops::BackgroundActivityFilter::new(res, 10_000))
             .then(ops::PolarityFilter::keep(aestream::aer::Polarity::On)),

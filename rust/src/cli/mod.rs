@@ -13,8 +13,17 @@
 //! `input <spec>… [filter <name> <args>…]* output <spec>…` mirrors the
 //! original AEStream CLI's free input/output pairing. Repeating
 //! `input`/`output` clauses builds a fan-in/fan-out topology: the
-//! inputs are merged in timestamp order onto a side-by-side canvas and
-//! the outputs are fed per `--route` (broadcast by default).
+//! inputs are merged in timestamp order onto a canvas (`--layout
+//! side-by-side|grid|overlay`, or explicit per-input `--offset X,Y`)
+//! and the outputs are fed per `--route` (broadcast by default).
+//!
+//! Filters parse into a deferred [`PipelineSpec`], **not** a built
+//! pipeline: geometry-keyed stages (refractory, denoise, flips) are
+//! instantiated by the coordinator from the *opened* sources' primed
+//! headers, never from parse-time assumptions. `--shards N` spreads
+//! every shardable stage over N stripe-shard workers (append `@serial`
+//! to a filter to pin it); `--shard-threads` gives each shard worker
+//! its own OS thread.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -23,20 +32,22 @@ use anyhow::{bail, Context, Result};
 
 use crate::aer::{Polarity, Resolution};
 use crate::camera::CameraConfig;
-use crate::coordinator::stream::{RoutePolicy, Sink, Source, StreamConfig, StreamDriver};
+use crate::coordinator::stream::{
+    FusionLayout, Input, RoutePolicy, Sink, Source, StreamConfig, StreamDriver,
+};
 use crate::formats::Format;
-use crate::pipeline::fusion::SourceLayout;
-use crate::pipeline::ops;
-use crate::pipeline::Pipeline;
+use crate::pipeline::{ops, PipelineSpec, StageSpec};
 
 /// A parsed CLI invocation.
 pub enum Command {
-    /// `input …+ [filter …]* output …+ [--chunk N] [--sync] [--threads N] [--route R]`
+    /// `input …+ [filter …]* output …+ [--chunk N] [--sync] [--threads N]
+    /// [--route R] [--layout L] [--shards N] [--shard-threads]`
     Stream {
-        /// One or more inputs (several fan in through the merge).
-        sources: Vec<Source>,
-        /// The shared filter pipeline.
-        pipeline: Pipeline,
+        /// One or more inputs (several fan in through the merge), each
+        /// with its optional explicit canvas offset.
+        inputs: Vec<Input>,
+        /// The shared filter chain, deferred until geometry is known.
+        spec: PipelineSpec,
         /// One or more outputs (several fan out per `route`).
         sinks: Vec<Sink>,
         /// Chunking and edge-driver configuration.
@@ -46,6 +57,12 @@ pub enum Command {
         threads: usize,
         /// How events are distributed across the outputs.
         route: RoutePolicy,
+        /// How fused inputs are arranged on the canvas.
+        layout: FusionLayout,
+        /// Shard workers per shardable filter stage.
+        shards: usize,
+        /// One OS thread per shard worker.
+        shard_threads: bool,
     },
     /// Run the four Fig. 4 scenarios.
     Scenarios {
@@ -98,31 +115,55 @@ pub fn parse(args: &[String]) -> Result<Command> {
 
 fn parse_input<'a, I: Iterator<Item = &'a str>>(
     toks: &mut std::iter::Peekable<I>,
-) -> Result<Source> {
-    Ok(match toks.next().context("input needs a kind")? {
-        "file" => Source::File(PathBuf::from(toks.next().context("input file needs a path")?)),
-        "udp" => {
-            let bind = toks.next().context("input udp needs an address")?.to_string();
-            let mut geometry = None;
-            while toks.peek() == Some(&"--geometry") {
+) -> Result<Input> {
+    let kind = toks.next().context("input needs a kind")?;
+    let mut path = None;
+    let mut bind = None;
+    match kind {
+        "file" => path = Some(PathBuf::from(toks.next().context("input file needs a path")?)),
+        "udp" => bind = Some(toks.next().context("input udp needs an address")?.to_string()),
+        "synthetic" => {}
+        other => bail!("unknown input kind {other:?} (file|udp|synthetic)"),
+    }
+    // Per-input flags, any order after the positional part.
+    let mut geometry = None;
+    let mut offset = None;
+    let mut duration_us = 1_000_000u64;
+    loop {
+        match toks.peek() {
+            Some(&"--geometry") => {
                 toks.next();
-                geometry = Some(parse_geometry(
-                    toks.next().context("--geometry needs WxH")?,
-                )?);
+                geometry =
+                    Some(parse_geometry(toks.next().context("--geometry needs WxH")?)?);
             }
-            Source::Udp { bind, idle_timeout: Duration::from_millis(500), geometry }
-        }
-        "synthetic" => {
-            let mut duration_us = 1_000_000u64;
-            while toks.peek() == Some(&"--duration") {
+            Some(&"--offset") => {
+                toks.next();
+                offset = Some(parse_offset(toks.next().context("--offset needs X,Y")?)?);
+            }
+            Some(&"--duration") if kind == "synthetic" => {
                 toks.next();
                 duration_us = parse_duration(toks.next().context("--duration needs a value")?)?
                     .as_micros() as u64;
             }
+            _ => break,
+        }
+    }
+    let source = match kind {
+        "file" => Source::File { path: path.expect("parsed above"), geometry },
+        "udp" => Source::Udp {
+            bind: bind.expect("parsed above"),
+            idle_timeout: Duration::from_millis(500),
+            geometry,
+        },
+        "synthetic" => {
+            if geometry.is_some() {
+                bail!("input synthetic has a fixed geometry; drop --geometry");
+            }
             Source::Synthetic { config: CameraConfig::default(), duration_us }
         }
-        other => bail!("unknown input kind {other:?} (file|udp|synthetic)"),
-    })
+        _ => unreachable!("kind validated above"),
+    };
+    Ok(Input { source, offset })
 }
 
 fn parse_output<'a, I: Iterator<Item = &'a str>>(
@@ -161,95 +202,96 @@ fn parse_output<'a, I: Iterator<Item = &'a str>>(
     })
 }
 
-/// The canvas geometry the parsed inputs will fuse onto, as far as the
-/// command line can know it before sources are opened: declared
-/// geometries where given, DAVIS_346 otherwise, laid out by the same
-/// [`SourceLayout::side_by_side`] the topology will use (one source of
-/// truth for the layout math).
-fn assumed_canvas(sources: &[Source]) -> Resolution {
-    let resolutions: Vec<Resolution> = sources
-        .iter()
-        .map(|source| match source {
-            Source::Udp { geometry: Some(res), .. } => *res,
-            Source::Memory(_, res) => *res,
-            _ => Resolution::DAVIS_346,
-        })
-        .collect();
-    SourceLayout::side_by_side(&resolutions).canvas
+/// Parse one `filter NAME ARGS… [@serial]` clause into a deferred
+/// stage. Geometry-keyed filters (refractory, denoise, flips) capture
+/// their arguments only; the coordinator builds them for the *opened*
+/// canvas.
+fn parse_filter<'a, I: Iterator<Item = &'a str>>(
+    toks: &mut std::iter::Peekable<I>,
+) -> Result<StageSpec> {
+    let name = toks.next().context("filter needs a name")?;
+    let stage = match name {
+        "polarity" => {
+            let which = toks.next().context("filter polarity needs on|off")?;
+            let p = match which {
+                "on" => Polarity::On,
+                "off" => Polarity::Off,
+                other => bail!("polarity must be on|off, got {other:?}"),
+            };
+            StageSpec::new(move |_| ops::PolarityFilter::keep(p))
+        }
+        "crop" => {
+            let mut dims = [0u16; 4];
+            for d in dims.iter_mut() {
+                *d = toks
+                    .next()
+                    .context("filter crop needs x0 y0 w h")?
+                    .parse()
+                    .context("bad crop dimension")?;
+            }
+            StageSpec::new(move |_| ops::RoiCrop::new(dims[0], dims[1], dims[2], dims[3]))
+        }
+        "downsample" => {
+            let f: u16 = toks
+                .next()
+                .context("filter downsample needs a factor")?
+                .parse()
+                .context("bad factor")?;
+            StageSpec::new(move |_| ops::Downsample::new(f))
+        }
+        "refractory" => {
+            let us: u64 = toks
+                .next()
+                .context("filter refractory needs µs")?
+                .parse()
+                .context("bad refractory period")?;
+            StageSpec::new(move |res: Resolution| ops::RefractoryFilter::new(res, us))
+        }
+        "denoise" => {
+            let us: u64 = toks
+                .next()
+                .context("filter denoise needs µs")?
+                .parse()
+                .context("bad denoise window")?;
+            StageSpec::new(move |res: Resolution| ops::BackgroundActivityFilter::new(res, us))
+        }
+        "flip-x" => StageSpec::new(|res: Resolution| ops::FlipX::new(res.width)),
+        "flip-y" => StageSpec::new(|res: Resolution| ops::FlipY::new(res.height)),
+        "transpose" => StageSpec::new(|_| ops::Transpose),
+        "time-shift" => {
+            let us: u64 = toks
+                .next()
+                .context("filter time-shift needs µs")?
+                .parse()
+                .context("bad time-shift offset")?;
+            StageSpec::new(move |_| ops::TimeShift::new(us))
+        }
+        other => bail!("unknown filter {other:?}"),
+    };
+    if toks.peek() == Some(&"@serial") {
+        toks.next();
+        Ok(stage.pinned())
+    } else {
+        Ok(stage)
+    }
 }
 
 fn parse_stream<'a, I: Iterator<Item = &'a str>>(
     toks: &mut std::iter::Peekable<I>,
 ) -> Result<Command> {
     // ---- inputs (one or more clauses fan in)
-    let mut sources = Vec::new();
+    let mut inputs = Vec::new();
     while toks.peek() == Some(&"input") {
         toks.next();
-        sources.push(parse_input(toks)?);
+        inputs.push(parse_input(toks)?);
     }
-    debug_assert!(!sources.is_empty(), "parse_stream is entered on `input`");
+    debug_assert!(!inputs.is_empty(), "parse_stream is entered on `input`");
 
-    // ---- filters (one shared pipeline)
-    let mut pipeline = Pipeline::new();
-    // Stateful filters need geometry before the sources are opened. Use
-    // what the command line declares: each input's explicit geometry
-    // where given, the DAVIS_346 assumption otherwise, summed side by
-    // side the way the fused canvas will be laid out. (Events beyond a
-    // filter's geometry pass through it untracked rather than
-    // panicking, so an undeclared larger sensor degrades gracefully.)
-    let res = assumed_canvas(&sources);
+    // ---- filters (one shared stage chain, geometry deferred)
+    let mut spec = PipelineSpec::new();
     while toks.peek() == Some(&"filter") {
         toks.next();
-        let name = toks.next().context("filter needs a name")?;
-        pipeline = match name {
-            "polarity" => {
-                let which = toks.next().context("filter polarity needs on|off")?;
-                let p = match which {
-                    "on" => Polarity::On,
-                    "off" => Polarity::Off,
-                    other => bail!("polarity must be on|off, got {other:?}"),
-                };
-                pipeline.then(ops::PolarityFilter::keep(p))
-            }
-            "crop" => {
-                let mut dims = [0u16; 4];
-                for d in dims.iter_mut() {
-                    *d = toks
-                        .next()
-                        .context("filter crop needs x0 y0 w h")?
-                        .parse()
-                        .context("bad crop dimension")?;
-                }
-                pipeline.then(ops::RoiCrop::new(dims[0], dims[1], dims[2], dims[3]))
-            }
-            "downsample" => {
-                let f = toks
-                    .next()
-                    .context("filter downsample needs a factor")?
-                    .parse()
-                    .context("bad factor")?;
-                pipeline.then(ops::Downsample::new(f))
-            }
-            "refractory" => {
-                let us = toks
-                    .next()
-                    .context("filter refractory needs µs")?
-                    .parse()
-                    .context("bad refractory period")?;
-                pipeline.then(ops::RefractoryFilter::new(res, us))
-            }
-            "denoise" => {
-                let us = toks
-                    .next()
-                    .context("filter denoise needs µs")?
-                    .parse()
-                    .context("bad denoise window")?;
-                pipeline.then(ops::BackgroundActivityFilter::new(res, us))
-            }
-            "flip-x" => pipeline.then(ops::FlipX::new(res.width)),
-            "flip-y" => pipeline.then(ops::FlipY::new(res.height)),
-            other => bail!("unknown filter {other:?}"),
-        };
+        spec.push(parse_filter(toks)?);
     }
 
     // ---- outputs (one or more clauses fan out)
@@ -267,6 +309,9 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
     let mut config = StreamConfig::default();
     let mut threads = 1usize;
     let mut route = RoutePolicy::Broadcast;
+    let mut layout = FusionLayout::default();
+    let mut shards = 1usize;
+    let mut shard_threads = false;
     while let Some(tok) = toks.next() {
         match tok {
             "--chunk" => {
@@ -295,10 +340,66 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
                     other => bail!("unknown route {other:?} (broadcast|polarity|stripes)"),
                 };
             }
+            "--layout" => {
+                layout = match toks.next().context("--layout needs a name")? {
+                    "side-by-side" => FusionLayout::SideBySide,
+                    "grid" => FusionLayout::Grid,
+                    "overlay" => FusionLayout::Overlay,
+                    other => bail!("unknown layout {other:?} (side-by-side|grid|overlay)"),
+                };
+            }
+            "--shards" => {
+                shards = toks
+                    .next()
+                    .context("--shards needs a count")?
+                    .parse()
+                    .context("bad --shards")?;
+                if shards == 0 {
+                    bail!("--shards must be at least 1");
+                }
+            }
+            "--shard-threads" => shard_threads = true,
             extra => bail!("unexpected trailing argument {extra:?}"),
         }
     }
-    Ok(Command::Stream { sources, pipeline, sinks, config, threads, route })
+    Ok(Command::Stream {
+        inputs,
+        spec,
+        sinks,
+        config,
+        threads,
+        route,
+        layout,
+        shards,
+        shard_threads,
+    })
+}
+
+/// Filter reference rendered from the op registry
+/// ([`crate::pipeline::registry::transform_ops`]), so the help text can
+/// never drift from what is actually registered: one line per op with
+/// its argument usage and declared parallelization class.
+pub fn filters_help() -> String {
+    use crate::pipeline::TransformClass;
+    let mut out = String::from("FILTERS (from the op registry; append @serial to pin):\n");
+    for op in crate::pipeline::registry::transform_ops() {
+        let class = match op.class {
+            TransformClass::Stateless => "stateless, shardable".to_string(),
+            TransformClass::Stateful { halo } => format!("stateful, shardable (halo {halo})"),
+            TransformClass::Barrier => "barrier, single node".to_string(),
+        };
+        out.push_str(&format!("  {:<24} {}\n", op.usage, class));
+    }
+    out
+}
+
+/// Parse `"X,Y"` into a canvas offset.
+pub fn parse_offset(s: &str) -> Result<(u16, u16)> {
+    let (x, y) = s.split_once(',').with_context(|| format!("offset {s:?} must be X,Y"))?;
+    Ok((
+        x.parse().with_context(|| format!("bad offset x {x:?}"))?,
+        y.parse().with_context(|| format!("bad offset y {y:?}"))?,
+    ))
 }
 
 /// Parse `"500ms"`, `"2s"`, `"1500us"`, or a bare number of seconds.
@@ -333,14 +434,17 @@ pub const USAGE: &str = "\
 aestream — accelerated event-based processing with coroutines (reproduction)
 
 USAGE:
-  aestream input <file PATH | udp ADDR [--geometry WxH] |
-                  synthetic [--duration D]>...
+  aestream input <file PATH [--geometry WxH] | udp ADDR [--geometry WxH] |
+                  synthetic [--duration D]> [--offset X,Y] ...
            [filter <polarity on|off | crop X Y W H | downsample F |
-                    refractory US | denoise US | flip-x | flip-y>]...
+                    refractory US | denoise US | flip-x | flip-y |
+                    transpose | time-shift US> [@serial]]...
            output <file PATH | udp ADDR | stdout | null | frames WINDOW_US |
                    view WINDOW_US>...
            [--chunk EVENTS] [--sync] [--threads N]
            [--route broadcast|polarity|stripes]
+           [--layout side-by-side|grid|overlay]
+           [--shards N] [--shard-threads]
   aestream scenarios [--duration D] [--time-scale X]
   aestream table1
   aestream help
@@ -350,17 +454,30 @@ Streams run incrementally (O(chunk) memory) on the coroutine driver;
 synchronous baseline driver instead.
 
 Repeat `input` to fan several sources in: they merge in timestamp
-order onto a side-by-side canvas (live UDP inputs must declare
---geometry). Repeat `output` to fan out; --route picks broadcast
+order onto a canvas laid out by --layout (side-by-side default, grid,
+or overlay), or at explicit per-input --offset X,Y positions. Live UDP
+inputs and headerless recordings must declare --geometry to join a
+fused topology. Repeat `output` to fan out; --route picks broadcast
 (default), polarity (ON→first, OFF→second), or vertical stripes.
 --threads 2+ pins each source to its own OS thread, feeding the
 coroutine executor through a lock-free ring.
+
+Filters build for the geometry the *opened* inputs report (fused
+canvas included). --shards N runs every shardable filter as N
+stripe-shard nodes re-merged in order (append @serial to a filter to
+pin it to one node); --shard-threads gives each shard its own OS
+thread. An idle live input stalls fusion only for a bounded grace,
+then heartbeats so its siblings keep flowing (stalls are counted in
+the report).
 
 EXAMPLES (paper Fig. 2B and §6 fusion):
   aestream input file recording.aedat output udp 10.0.0.1:3333
   aestream input synthetic --duration 2s filter polarity on output stdout
   aestream input synthetic input synthetic \\
            output file fused.aedat output view 10000 --threads 2
+  aestream input file a.raw --geometry 346x260 --offset 0,0 \\
+           input file b.raw --geometry 346x260 --offset 0,260 \\
+           filter denoise 1000 output file fused.aedat --shards 4
 ";
 
 #[cfg(test)]
@@ -376,12 +493,14 @@ mod tests {
         let cmd =
             parse(&sv(&["input", "file", "r.aedat", "output", "udp", "1.2.3.4:3333"])).unwrap();
         match cmd {
-            Command::Stream { sources, sinks, .. } => {
-                assert_eq!(sources.len(), 1);
+            Command::Stream { inputs, sinks, .. } => {
+                assert_eq!(inputs.len(), 1);
                 assert_eq!(sinks.len(), 1);
-                match (&sources[0], &sinks[0]) {
-                    (Source::File(p), Sink::Udp(a)) => {
-                        assert_eq!(*p, PathBuf::from("r.aedat"));
+                assert_eq!(inputs[0].offset, None);
+                match (&inputs[0].source, &sinks[0]) {
+                    (Source::File { path, geometry }, Sink::Udp(a)) => {
+                        assert_eq!(*path, PathBuf::from("r.aedat"));
+                        assert_eq!(*geometry, None);
                         assert_eq!(a, "1.2.3.4:3333");
                     }
                     _ => panic!("wrong parse"),
@@ -399,11 +518,74 @@ mod tests {
         ]))
         .unwrap();
         match cmd {
-            Command::Stream { pipeline, .. } => {
-                assert_eq!(pipeline.describe(), "polarity(on) | downsample(/2)");
+            Command::Stream { spec, .. } => {
+                assert_eq!(spec.describe(), "polarity(on) | downsample(/2)");
             }
             _ => panic!("wrong parse"),
         }
+    }
+
+    #[test]
+    fn filters_defer_geometry_and_accept_pinning() {
+        let cmd = parse(&sv(&[
+            "input", "synthetic", "filter", "refractory", "100", "filter", "denoise", "1000",
+            "@serial", "output", "null", "--shards", "4",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { spec, shards, shard_threads, .. } => {
+                assert_eq!(shards, 4);
+                assert!(!shard_threads);
+                assert_eq!(spec.describe(), "refractory(100µs) | denoise(1000µs)");
+                assert!(!spec.stages()[0].is_pinned());
+                assert!(spec.stages()[1].is_pinned(), "@serial must pin the stage");
+                // Geometry injection happens at build time, per canvas.
+                let res = Resolution::new(32, 32);
+                let mut a = spec.build_pipeline(res);
+                let mut b = crate::pipeline::Pipeline::new()
+                    .then(ops::RefractoryFilter::new(res, 100))
+                    .then(ops::BackgroundActivityFilter::new(res, 1000));
+                let events = crate::testutil::synthetic_events(500, 32, 32);
+                assert_eq!(a.process(&events), b.process(&events));
+            }
+            _ => panic!("wrong parse"),
+        }
+    }
+
+    #[test]
+    fn parses_layout_offset_and_file_geometry() {
+        let cmd = parse(&sv(&[
+            "input", "file", "a.raw", "--geometry", "128x128", "--offset", "0,0", "input",
+            "file", "b.raw", "--geometry", "128x128", "--offset", "0,128", "output", "null",
+            "--layout", "grid", "--shard-threads",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { inputs, layout, shards, shard_threads, .. } => {
+                assert_eq!(layout, FusionLayout::Grid);
+                assert_eq!(shards, 1);
+                assert!(shard_threads);
+                assert_eq!(inputs[0].offset, Some((0, 0)));
+                assert_eq!(inputs[1].offset, Some((0, 128)));
+                match &inputs[1].source {
+                    Source::File { geometry, .. } => {
+                        assert_eq!(*geometry, Some(Resolution::new(128, 128)));
+                    }
+                    _ => panic!("wrong parse"),
+                }
+            }
+            _ => panic!("wrong parse"),
+        }
+        assert!(parse(&sv(&[
+            "input", "synthetic", "output", "null", "--layout", "diagonal",
+        ]))
+        .is_err());
+        assert!(parse(&sv(&["input", "synthetic", "output", "null", "--shards", "0"]))
+            .is_err());
+        assert!(parse(&sv(&[
+            "input", "synthetic", "--geometry", "10x10", "output", "null",
+        ]))
+        .is_err());
     }
 
     #[test]
@@ -426,11 +608,14 @@ mod tests {
         ]))
         .unwrap();
         match cmd {
-            Command::Stream { config, threads, route, .. } => {
+            Command::Stream { config, threads, route, layout, shards, shard_threads, .. } => {
                 assert_eq!(config.chunk_size, 512);
                 assert_eq!(config.driver, StreamDriver::Sync);
                 assert_eq!(threads, 1);
                 assert_eq!(route, RoutePolicy::Broadcast);
+                assert_eq!(layout, FusionLayout::SideBySide);
+                assert_eq!(shards, 1);
+                assert!(!shard_threads);
             }
             _ => panic!("wrong parse"),
         }
@@ -454,8 +639,8 @@ mod tests {
         ]))
         .unwrap();
         match cmd {
-            Command::Stream { sources, sinks, threads, route, .. } => {
-                assert_eq!(sources.len(), 2);
+            Command::Stream { inputs, sinks, threads, route, .. } => {
+                assert_eq!(inputs.len(), 2);
                 assert_eq!(sinks.len(), 2);
                 assert_eq!(threads, 2);
                 assert_eq!(route, RoutePolicy::Broadcast);
@@ -475,9 +660,9 @@ mod tests {
         ]))
         .unwrap();
         match cmd {
-            Command::Stream { sources, route, .. } => {
+            Command::Stream { inputs, route, .. } => {
                 assert_eq!(route, RoutePolicy::Polarity);
-                match &sources[0] {
+                match &inputs[0].source {
                     Source::Udp { geometry, .. } => {
                         assert_eq!(*geometry, Some(Resolution::new(346, 260)));
                     }
@@ -507,6 +692,43 @@ mod tests {
         assert!(parse_geometry("346").is_err());
         assert!(parse_geometry("0x260").is_err());
         assert!(parse_geometry("axb").is_err());
+    }
+
+    #[test]
+    fn offset_syntax() {
+        assert_eq!(parse_offset("0,0").unwrap(), (0, 0));
+        assert_eq!(parse_offset("346,0").unwrap(), (346, 0));
+        assert!(parse_offset("346").is_err());
+        assert!(parse_offset("a,b").is_err());
+    }
+
+    /// Anti-drift: every op in the registry must parse on the CLI (so a
+    /// new registry entry without a `parse_filter` arm fails here), and
+    /// the rendered filter help covers exactly the registered set.
+    #[test]
+    fn cli_filters_cover_the_registry() {
+        let help = filters_help();
+        for op in crate::pipeline::registry::transform_ops() {
+            assert!(help.contains(op.usage), "help missing op {:?}", op.name);
+            // Canonical argument vector per op; extend when adding ops.
+            let args: Vec<&str> = match op.name {
+                "polarity" => vec!["polarity", "on"],
+                "crop" => vec!["crop", "0", "0", "8", "8"],
+                "downsample" => vec!["downsample", "2"],
+                "refractory" => vec!["refractory", "100"],
+                "denoise" => vec!["denoise", "1000"],
+                "flip-x" => vec!["flip-x"],
+                "flip-y" => vec!["flip-y"],
+                "transpose" => vec!["transpose"],
+                "time-shift" => vec!["time-shift", "50"],
+                other => panic!("registry op {other:?} has no CLI test args — add them"),
+            };
+            let mut toks = args.iter().copied().peekable();
+            let stage = parse_filter(&mut toks)
+                .unwrap_or_else(|e| panic!("op {:?} failed to parse: {e}", op.name));
+            assert_eq!(stage.class(), op.class, "op {:?}: CLI stage class drifted", op.name);
+            assert!(toks.peek().is_none(), "op {:?} left unconsumed args", op.name);
+        }
     }
 
     #[test]

@@ -17,6 +17,6 @@ pub use scenarios::{
     ScenarioReport,
 };
 pub use stream::{
-    run_stream, run_stream_with, run_topology, RoutePolicy, Sink, Source, StreamConfig,
-    StreamDriver, StreamReport, TopologyOptions,
+    run_stream, run_stream_with, run_topology, FusionLayout, Input, RoutePolicy, Sink, Source,
+    StreamConfig, StreamDriver, StreamReport, TopologyOptions,
 };

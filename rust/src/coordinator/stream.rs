@@ -2,16 +2,20 @@
 //! free composition, driven **incrementally** over
 //! [`crate::stream`]'s `EventSource`/`EventSink` traits.
 //!
-//! The [`Source`] and [`Sink`] enums are the CLI-facing configuration;
-//! [`run_topology`] converts them into trait objects and hands them to
+//! The [`Source`]/[`Input`] and [`Sink`] enums are the CLI-facing
+//! configuration; [`run_topology`] opens them, compiles the parsed
+//! [`PipelineSpec`] into a [`StageGraph`] for the *opened* canvas
+//! geometry (stateful filters are built from what the sources actually
+//! report, not from parse-time assumptions), and hands everything to
 //! [`crate::stream::run_topology`], which fans N sources in through a
 //! streaming timestamp-ordered merge (optionally one OS thread per
-//! source) and fans out to M sinks by [`RoutePolicy`]. The single-edge
-//! [`run_stream`]/[`run_stream_with`] are thin wrappers over the same
-//! path. Unlike the old batch path, the stream is never materialized:
-//! a file source decodes in chunks, a UDP source ends after a bounded
-//! idle wait, and memory stays O(chunk) for arbitrarily long (or
-//! endless) inputs.
+//! source), runs the stage nodes (sharded per
+//! [`TopologyOptions::shards`]), and fans out to M sinks by
+//! [`RoutePolicy`]. The single-edge [`run_stream`]/[`run_stream_with`]
+//! are thin wrappers over the same driver. Unlike the old batch path,
+//! the stream is never materialized: a file source decodes in chunks,
+//! a UDP source ends after a bounded idle wait, and memory stays
+//! O(chunk) for arbitrarily long (or endless) inputs.
 //!
 //! Geometry note: sinks that record geometry (file headers, frame
 //! binning) take it from the source *before* the first batch. File
@@ -20,8 +24,10 @@
 //! and file sinks spool to a temporary raw file and re-encode at the
 //! end with the exact observed bounding box (same geometry as the old
 //! batch path, still O(chunk) memory). Fused topologies need real
-//! extents up front for their canvas offsets, so a UDP source joining
-//! one must declare its geometry (`input udp ADDR --geometry WxH`).
+//! extents up front for their canvas offsets, so a live UDP source
+//! joining one must declare its geometry (`input udp ADDR --geometry
+//! WxH`) — and a *headerless recording* may do the same (`input file
+//! f.raw --geometry WxH`) instead of being rejected.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -31,10 +37,11 @@ use anyhow::{bail, Result};
 use crate::aer::{Event, Resolution};
 use crate::camera::CameraConfig;
 use crate::formats::Format;
-use crate::pipeline::Pipeline;
+use crate::pipeline::fusion::SourceLayout;
+use crate::pipeline::{Pipeline, PipelineSpec};
 use crate::stream::{
     self, CameraSource, EventSink, EventSource, FileSink, FileSource, FrameSink, MemorySource,
-    NullSink, StdoutSink, UdpSink, UdpSource, ViewSink,
+    NullSink, StageGraph, StageOptions, StdoutSink, UdpSink, UdpSource, ViewSink,
 };
 
 pub use crate::stream::{
@@ -44,7 +51,10 @@ pub use crate::stream::{
 /// Where events come from.
 pub enum Source {
     /// Stream an event file in chunks (format auto-detected).
-    File(PathBuf),
+    /// `geometry` declares the extents of a *headerless* recording up
+    /// front so it can join fused topologies (a recorded header wins
+    /// over the claim when both exist).
+    File { path: PathBuf, geometry: Option<Resolution> },
     /// Listen for SPIF datagrams until `idle_timeout` passes with no
     /// data (each poll is a cheap bounded wait, not a spin). `geometry`
     /// declares the sensor extents up front (required for fused
@@ -57,10 +67,21 @@ pub enum Source {
 }
 
 impl Source {
+    /// A file source with no declared geometry.
+    pub fn file(path: impl Into<PathBuf>) -> Source {
+        Source::File { path: path.into(), geometry: None }
+    }
+
     /// Open the source as a streaming trait object.
     pub fn into_source(self, chunk_size: usize) -> Result<Box<dyn EventSource>> {
         Ok(match self {
-            Source::File(path) => Box::new(FileSource::open(&path, chunk_size)?),
+            Source::File { path, geometry } => {
+                let source = FileSource::open(&path, chunk_size)?;
+                match geometry {
+                    Some(res) => Box::new(source.with_geometry(res)),
+                    None => Box::new(source),
+                }
+            }
             Source::Udp { bind, idle_timeout, geometry } => {
                 let source = UdpSource::bind(&bind, idle_timeout)?;
                 match geometry {
@@ -73,6 +94,23 @@ impl Source {
             }
             Source::Memory(events, res) => Box::new(MemorySource::new(events, res, chunk_size)),
         })
+    }
+}
+
+/// One topology input: a source plus its optional explicit canvas
+/// offset (`--offset X,Y`). Any input with an offset switches the whole
+/// topology to the explicit layout (offset-less inputs sit at the
+/// origin).
+pub struct Input {
+    /// The source to open.
+    pub source: Source,
+    /// Explicit placement on the fused canvas.
+    pub offset: Option<(u16, u16)>,
+}
+
+impl From<Source> for Input {
+    fn from(source: Source) -> Self {
+        Input { source, offset: None }
     }
 }
 
@@ -115,8 +153,20 @@ impl Sink {
     }
 }
 
+/// Fused-canvas arrangement for multi-input topologies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FusionLayout {
+    /// Sources in one row, left to right (the historical default).
+    #[default]
+    SideBySide,
+    /// Sources tiled in a near-square row-major grid.
+    Grid,
+    /// All sources share the origin on one address plane.
+    Overlay,
+}
+
 /// Topology-level options layered on the per-edge [`StreamConfig`].
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct TopologyOptions {
     /// Chunking and edge-driver selection.
     pub config: StreamConfig,
@@ -125,54 +175,85 @@ pub struct TopologyOptions {
     pub source_threads: bool,
     /// How processed events are distributed across the sinks.
     pub route: RoutePolicy,
+    /// How fused inputs are arranged on the canvas (ignored when any
+    /// input declares an explicit `--offset`).
+    pub layout: FusionLayout,
+    /// Shard workers per shardable pipeline stage (1 = serial).
+    pub shards: usize,
+    /// Pin each shard worker to its own OS thread.
+    pub shard_threads: bool,
 }
 
-/// Drive an N-source, M-sink topology: sources fan in through the
-/// streaming timestamp-ordered merge onto a side-by-side canvas, flow
-/// through `pipeline` once, and fan out per `opts.route`.
-pub fn run_topology(
-    sources: Vec<Source>,
-    mut pipeline: Pipeline,
-    sinks: Vec<Sink>,
-    opts: TopologyOptions,
-) -> Result<StreamReport> {
-    if sources.is_empty() {
-        bail!("topology needs at least one input");
+impl Default for TopologyOptions {
+    fn default() -> Self {
+        TopologyOptions {
+            config: StreamConfig::default(),
+            source_threads: false,
+            route: RoutePolicy::Broadcast,
+            layout: FusionLayout::default(),
+            shards: 1,
+            shard_threads: false,
+        }
     }
-    if sinks.is_empty() {
-        bail!("topology needs at least one output");
-    }
+}
+
+/// Opened sources plus everything derived from their *actual* (primed)
+/// geometries: the fused layout and the canvas.
+struct OpenedTopology {
+    sources: Vec<Box<dyn EventSource>>,
+    layout: Option<SourceLayout>,
+    canvas: Resolution,
+    geometry_known: bool,
+}
+
+/// Open every input and build the canvas layout from the opened
+/// sources' reported geometries (headers are primed at open; declared
+/// geometries claim live/headerless inputs).
+fn open_topology(inputs: Vec<Input>, opts: &TopologyOptions) -> Result<OpenedTopology> {
     let chunk = opts.config.chunk_size;
-    let opened: Vec<Box<dyn EventSource>> = sources
-        .into_iter()
-        .map(|s| s.into_source(chunk))
-        .collect::<Result<_>>()?;
-    let fused = opened.len() > 1;
+    let mut offsets: Vec<Option<(u16, u16)>> = Vec::with_capacity(inputs.len());
+    let mut opened: Vec<Box<dyn EventSource>> = Vec::with_capacity(inputs.len());
+    for input in inputs {
+        offsets.push(input.offset);
+        opened.push(input.source.into_source(chunk)?);
+    }
+    let explicit = offsets.iter().any(Option::is_some);
+    let fused = opened.len() > 1 || explicit;
     let geometry_known = opened.iter().all(|s| s.geometry_known());
     if fused && !geometry_known {
         bail!(
             "fusing requires every input's geometry up front: declare it for \
-             live inputs (input udp ADDR --geometry WxH) and use formats with \
-             a geometry header for file inputs (headerless recordings such as \
-             .txt only learn their extent by observation)"
+             live inputs (input udp ADDR --geometry WxH) and for headerless \
+             recordings (input file f.raw --geometry WxH); formats with a \
+             geometry header need no declaration"
         );
     }
     let layout = if fused {
-        // Shared with the library-level default-layout path, including
-        // its hard u16 canvas-width bound.
-        let resolutions: Vec<Resolution> =
-            opened.iter().map(|s| s.resolution()).collect();
-        Some(stream::topology::default_layout(&resolutions)?)
+        let resolutions: Vec<Resolution> = opened.iter().map(|s| s.resolution()).collect();
+        // All validated variants share the hard u16 address-space bound
+        // a silent saturating layout would otherwise hide.
+        Some(if explicit {
+            let offsets: Vec<(u16, u16)> =
+                offsets.iter().map(|o| o.unwrap_or((0, 0))).collect();
+            stream::topology::explicit_layout(&resolutions, &offsets)?
+        } else {
+            match opts.layout {
+                FusionLayout::SideBySide => stream::topology::default_layout(&resolutions)?,
+                FusionLayout::Grid => stream::topology::grid_layout(&resolutions)?,
+                FusionLayout::Overlay => SourceLayout::overlay(&resolutions),
+            }
+        })
     } else {
         None
     };
     let canvas = layout.as_ref().map_or_else(|| opened[0].resolution(), |l| l.canvas);
-    let sinks: Vec<Box<dyn EventSink>> = sinks
-        .into_iter()
-        .map(|k| k.into_sink(canvas, geometry_known))
-        .collect::<Result<_>>()?;
-    let config = TopologyConfig {
-        chunk_size: chunk,
+    Ok(OpenedTopology { sources: opened, layout, canvas, geometry_known })
+}
+
+/// The stream-layer config an options struct maps to.
+fn edge_config(opts: &TopologyOptions) -> TopologyConfig {
+    TopologyConfig {
+        chunk_size: opts.config.chunk_size,
         driver: opts.config.driver,
         threads: if opts.source_threads {
             ThreadMode::PerSourceThread
@@ -180,8 +261,36 @@ pub fn run_topology(
             ThreadMode::Inline
         },
         route: opts.route,
-    };
-    stream::run_topology(opened, &mut pipeline, sinks, layout, &config)
+    }
+}
+
+/// Drive an N-source, M-sink topology: sources fan in through the
+/// streaming timestamp-ordered merge onto the configured canvas layout,
+/// flow through the stage graph compiled from `spec` (each stage a
+/// topology node, shardable stages spread over `opts.shards` workers),
+/// and fan out per `opts.route`. Stateful filters are built from the
+/// *opened* sources' geometry, never from parse-time assumptions.
+pub fn run_topology(
+    inputs: Vec<Input>,
+    spec: PipelineSpec,
+    sinks: Vec<Sink>,
+    opts: TopologyOptions,
+) -> Result<StreamReport> {
+    if inputs.is_empty() {
+        bail!("topology needs at least one input");
+    }
+    if sinks.is_empty() {
+        bail!("topology needs at least one output");
+    }
+    let opened = open_topology(inputs, &opts)?;
+    let sinks: Vec<Box<dyn EventSink>> = sinks
+        .into_iter()
+        .map(|k| k.into_sink(opened.canvas, opened.geometry_known))
+        .collect::<Result<_>>()?;
+    let stage_opts =
+        StageOptions { shards: opts.shards.max(1), shard_threads: opts.shard_threads };
+    let mut graph = StageGraph::compile(&spec, opened.canvas, &stage_opts);
+    stream::run_topology(opened.sources, &mut graph, sinks, opened.layout, &edge_config(&opts))
 }
 
 /// Drive a source through a pipeline into a sink with the default
@@ -192,18 +301,23 @@ pub fn run_stream(source: Source, pipeline: Pipeline, sink: Sink) -> Result<Stre
 }
 
 /// [`run_stream`] with explicit chunking/driver configuration — the
-/// single-edge wrapper over [`run_topology`].
+/// single-edge serial path, sharing [`run_topology`]'s open/build
+/// machinery but running the caller's ready-made [`Pipeline`].
 pub fn run_stream_with(
     source: Source,
-    pipeline: Pipeline,
+    mut pipeline: Pipeline,
     sink: Sink,
     config: StreamConfig,
 ) -> Result<StreamReport> {
-    run_topology(
-        vec![source],
-        pipeline,
+    let opts = TopologyOptions { config, ..Default::default() };
+    let opened = open_topology(vec![source.into()], &opts)?;
+    let sink = sink.into_sink(opened.canvas, opened.geometry_known)?;
+    stream::run_topology(
+        opened.sources,
+        &mut pipeline,
         vec![sink],
-        TopologyOptions { config, ..Default::default() },
+        opened.layout,
+        &edge_config(&opts),
     )
 }
 
@@ -253,8 +367,7 @@ mod tests {
             Sink::File(path.clone(), Format::Aedat),
         )
         .unwrap();
-        let report =
-            run_stream(Source::File(path), Pipeline::new(), Sink::Null).unwrap();
+        let report = run_stream(Source::file(path), Pipeline::new(), Sink::Null).unwrap();
         assert_eq!(report.events_in, 300);
         assert_eq!(report.resolution, Resolution::DVS_128);
         std::fs::remove_dir_all(&dir).ok();
@@ -315,10 +428,10 @@ mod tests {
         let b = synthetic_events_seeded(600, 64, 64, 2);
         let report = run_topology(
             vec![
-                Source::Memory(a, Resolution::new(64, 64)),
-                Source::Memory(b, Resolution::new(64, 64)),
+                Source::Memory(a, Resolution::new(64, 64)).into(),
+                Source::Memory(b, Resolution::new(64, 64)).into(),
             ],
-            Pipeline::new(),
+            PipelineSpec::new(),
             vec![Sink::Null, Sink::Null],
             TopologyOptions::default(),
         )
@@ -340,14 +453,81 @@ mod tests {
                     bind: "127.0.0.1:0".into(),
                     idle_timeout: Duration::from_millis(10),
                     geometry: None,
-                },
-                Source::Memory(Vec::new(), Resolution::new(8, 8)),
+                }
+                .into(),
+                Source::Memory(Vec::new(), Resolution::new(8, 8)).into(),
             ],
-            Pipeline::new(),
+            PipelineSpec::new(),
             vec![Sink::Null],
             TopologyOptions::default(),
         )
         .unwrap_err();
         assert!(format!("{err}").contains("--geometry"));
+    }
+
+    #[test]
+    fn grid_and_overlay_layouts_shape_the_canvas() {
+        let events = |seed| synthetic_events_seeded(200, 64, 64, seed);
+        let res = Resolution::new(64, 64);
+        let inputs = |n: u64| -> Vec<Input> {
+            (0..n).map(|i| Source::Memory(events(i), res).into()).collect()
+        };
+        let grid = run_topology(
+            inputs(3),
+            PipelineSpec::new(),
+            vec![Sink::Null],
+            TopologyOptions { layout: FusionLayout::Grid, ..Default::default() },
+        )
+        .unwrap();
+        // 3 sources → 2×2 grid of 64×64 cells.
+        assert_eq!(grid.resolution, Resolution::new(128, 128));
+        assert_eq!(grid.events_in, 600);
+
+        let overlay = run_topology(
+            inputs(3),
+            PipelineSpec::new(),
+            vec![Sink::Null],
+            TopologyOptions { layout: FusionLayout::Overlay, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(overlay.resolution, res, "overlay shares one plane");
+        assert_eq!(overlay.events_in, 600);
+    }
+
+    #[test]
+    fn explicit_offsets_override_the_layout_choice() {
+        let res = Resolution::new(32, 32);
+        let a = synthetic_events_seeded(150, 32, 32, 5);
+        let b = synthetic_events_seeded(150, 32, 32, 6);
+        let report = run_topology(
+            vec![
+                Input { source: Source::Memory(a, res), offset: Some((0, 0)) },
+                Input { source: Source::Memory(b, res), offset: Some((100, 40)) },
+            ],
+            PipelineSpec::new(),
+            vec![Sink::Null],
+            // The layout choice is ignored once offsets are explicit.
+            TopologyOptions { layout: FusionLayout::Grid, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(report.resolution, Resolution::new(132, 72));
+        assert_eq!(report.events_in, 300);
+        assert_eq!(report.merge_dropped, 0);
+    }
+
+    #[test]
+    fn out_of_range_offset_is_a_hard_error() {
+        let res = Resolution::new(64, 64);
+        let err = run_topology(
+            vec![Input {
+                source: Source::Memory(Vec::new(), res),
+                offset: Some((u16::MAX - 10, 0)),
+            }],
+            PipelineSpec::new(),
+            vec![Sink::Null],
+            TopologyOptions::default(),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("address space"));
     }
 }

@@ -18,14 +18,22 @@
 //! * [`net`] — SPIF wire protocol over UDP;
 //! * [`camera`] — synthetic event-camera source;
 //! * [`pipeline`] — composable per-event transforms (the paper's
-//!   uniform-signature functions), frame binning, backpressure;
-//! * [`stream`] — the `EventSource` → `Pipeline` → `EventSink` trait
-//!   layer and its incremental drivers (coroutine + sync): O(chunk)
-//!   memory for endless streams;
+//!   uniform-signature functions), each declaring a
+//!   [`pipeline::TransformClass`] (stateless / geometry-keyed stateful
+//!   / barrier), frame binning, backpressure, and the deferred
+//!   [`pipeline::PipelineSpec`] the CLI parses;
+//! * [`stream`] — the `EventSource` → stages → `EventSink` trait layer
+//!   and its incremental drivers (coroutine + sync): O(chunk) memory
+//!   for endless streams;
+//! * [`stream::stage`] — pipeline stages as first-class topology
+//!   nodes: shardable stages run as N stripe-shard workers (inline or
+//!   one OS thread each) with halo ghost events and a sequence-keyed
+//!   re-merge, byte-identical to the serial pipeline;
 //! * [`stream::topology`] — fan-in/fan-out graphs over that layer:
 //!   N sources merged in timestamp order (optionally one OS thread per
-//!   source over the lock-free ring), one shared pipeline, M routed
-//!   sinks, with per-node counters in `StreamReport`;
+//!   source over the lock-free ring; idle live sources heartbeat after
+//!   a bounded grace instead of stalling the merge), one shared stage
+//!   chain, M routed sinks, with per-node counters in `StreamReport`;
 //! * [`engine`] — the Fig. 3 concurrency contenders (sync / threads /
 //!   coroutines / lock-free ring);
 //! * [`rt`] — the hand-rolled cooperative async runtime (coroutines);

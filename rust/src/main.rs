@@ -15,17 +15,36 @@ fn main() -> Result<()> {
     match cli::parse(&args)? {
         Command::Help => {
             print!("{}", cli::USAGE);
+            print!("{}", cli::filters_help());
         }
         Command::Table1 => {
             print!("{}", registry::render_table());
         }
-        Command::Stream { sources, pipeline, sinks, config, threads, route } => {
-            let multi = sources.len() > 1 || sinks.len() > 1;
+        Command::Stream {
+            inputs,
+            spec,
+            sinks,
+            config,
+            threads,
+            route,
+            layout,
+            shards,
+            shard_threads,
+        } => {
+            let multi = inputs.len() > 1 || sinks.len() > 1;
+            let staged = !spec.is_empty() && (shards > 1 || shard_threads);
             let report = run_topology(
-                sources,
-                pipeline,
+                inputs,
+                spec,
                 sinks,
-                TopologyOptions { config, source_threads: threads > 1, route },
+                TopologyOptions {
+                    config,
+                    source_threads: threads > 1,
+                    route,
+                    layout,
+                    shards,
+                    shard_threads,
+                },
             )?;
             eprintln!(
                 "processed {} events ({} out) in {:?} ({}) [{}x{}] — {} batches, \
@@ -57,9 +76,33 @@ fn main() -> Result<()> {
                     );
                 }
                 eprintln!(
-                    "  merge: peak {} events buffered, {} out-of-canvas dropped",
-                    report.merge_peak_buffered, report.merge_dropped,
+                    "  merge: peak {} events buffered, {} out-of-canvas dropped, \
+                     {} stalls broken, {} late",
+                    report.merge_peak_buffered,
+                    report.merge_dropped,
+                    report.merge_stalls_broken,
+                    report.merge_late_events,
                 );
+            }
+            if multi || staged {
+                for node in &report.stages {
+                    let shard_note = if node.shard_events.is_empty() {
+                        String::new()
+                    } else {
+                        format!(
+                            " [{} shards, skew {:.2}]",
+                            node.shard_events.len(),
+                            node.shard_skew()
+                        )
+                    };
+                    eprintln!(
+                        "  stage {}: {} in / {} dropped, {} backpressure waits{}",
+                        node.name, node.events, node.dropped, node.backpressure_waits,
+                        shard_note,
+                    );
+                }
+            }
+            if multi {
                 for node in &report.sinks {
                     eprintln!(
                         "  out {}: {} events / {} batches, {} frames, \

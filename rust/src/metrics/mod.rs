@@ -24,10 +24,33 @@ pub struct NodeReport {
     /// (source pump threads / the fan-out router).
     pub backpressure_waits: u64,
     /// Events the node itself discarded (e.g. outside a source's
-    /// claimed geometry; 0 elsewhere).
+    /// claimed geometry, or filtered by a pipeline stage; 0 elsewhere).
     pub dropped: u64,
     /// Frames produced (frame-binning sinks; 0 elsewhere).
     pub frames: u64,
+    /// Sharded stage nodes: home events routed to each shard (ghost
+    /// copies excluded). Empty for unsharded nodes. Sums to
+    /// [`events`](NodeReport::events).
+    pub shard_events: Vec<u64>,
+}
+
+impl NodeReport {
+    /// Load imbalance across shards: the busiest shard's event count
+    /// over the mean (1.0 = perfectly balanced; 0.0 when the node is
+    /// unsharded or saw no events). A skew of N on N shards means one
+    /// stripe did all the work — the signal to re-cut stripes or drop
+    /// the shard count.
+    pub fn shard_skew(&self) -> f64 {
+        if self.shard_events.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = self.shard_events.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mean = total as f64 / self.shard_events.len() as f64;
+        *self.shard_events.iter().max().expect("nonempty") as f64 / mean
+    }
 }
 
 /// Wall-clock stopwatch with µs readout.
@@ -188,6 +211,18 @@ mod tests {
         assert!((4..=8).contains(&p50), "p50 = {p50}");
         // p100 covers the max.
         assert!(h.quantile_us(1.0) >= 1_000_000);
+    }
+
+    #[test]
+    fn shard_skew_measures_imbalance() {
+        let mut node = NodeReport::default();
+        assert_eq!(node.shard_skew(), 0.0, "unsharded node has no skew");
+        node.shard_events = vec![100, 100, 100, 100];
+        assert!((node.shard_skew() - 1.0).abs() < 1e-9, "balanced = 1.0");
+        node.shard_events = vec![400, 0, 0, 0];
+        assert!((node.shard_skew() - 4.0).abs() < 1e-9, "one hot stripe = N");
+        node.shard_events = vec![0, 0];
+        assert_eq!(node.shard_skew(), 0.0, "no traffic, no skew");
     }
 
     #[test]

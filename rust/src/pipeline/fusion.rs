@@ -58,6 +58,57 @@ impl SourceLayout {
         SourceLayout { canvas: Resolution::new(x.max(1), height), placements }
     }
 
+    /// Grid layout: sources in a near-square row-major grid, every cell
+    /// sized to the largest source. Like
+    /// [`side_by_side`](Self::side_by_side), offsets saturate at the
+    /// u16 address space; callers needing a hard error validate first
+    /// ([`crate::stream::topology::grid_layout`] does).
+    pub fn grid(resolutions: &[Resolution]) -> SourceLayout {
+        let k = resolutions.len().max(1);
+        let mut cols = 1usize;
+        while cols * cols < k {
+            cols += 1;
+        }
+        let rows = k.div_ceil(cols);
+        let cell_w = resolutions.iter().map(|r| r.width).max().unwrap_or(1);
+        let cell_h = resolutions.iter().map(|r| r.height).max().unwrap_or(1);
+        let placements = resolutions
+            .iter()
+            .enumerate()
+            .map(|(i, &res)| SourcePlacement {
+                x_offset: cell_w.saturating_mul((i % cols) as u16),
+                y_offset: cell_h.saturating_mul((i / cols) as u16),
+                resolution: res,
+            })
+            .collect();
+        SourceLayout {
+            canvas: Resolution::new(
+                cell_w.saturating_mul(cols as u16).max(1),
+                cell_h.saturating_mul(rows as u16).max(1),
+            ),
+            placements,
+        }
+    }
+
+    /// Explicit layout: each source at its declared canvas offset; the
+    /// canvas is the bounding box of all placements. Saturating like
+    /// the other constructors
+    /// ([`crate::stream::topology::explicit_layout`] validates hard).
+    pub fn at_offsets(resolutions: &[Resolution], offsets: &[(u16, u16)]) -> SourceLayout {
+        assert_eq!(resolutions.len(), offsets.len(), "one offset per source");
+        let mut canvas = Resolution::new(1, 1);
+        let placements = resolutions
+            .iter()
+            .zip(offsets)
+            .map(|(&res, &(x, y))| {
+                canvas.width = canvas.width.max(x.saturating_add(res.width));
+                canvas.height = canvas.height.max(y.saturating_add(res.height));
+                SourcePlacement { x_offset: x, y_offset: y, resolution: res }
+            })
+            .collect();
+        SourceLayout { canvas, placements }
+    }
+
     /// Overlay layout: every source shares the canvas origin (no
     /// offsets) and the canvas is the union bounding box — several
     /// sensors interleaved on one address plane, the layout
@@ -211,6 +262,39 @@ mod tests {
         // Out of the source's own bounds: rejected even if canvas fits.
         assert!(layout.place(0, &Event::on(64, 0, 0)).is_none());
         assert!(layout.place(2, &Event::on(0, 0, 0)).is_none());
+    }
+
+    #[test]
+    fn grid_layout_tiles_row_major() {
+        let res = Resolution::new(64, 48);
+        let layout = SourceLayout::grid(&[res, res, res]);
+        // 3 sources → 2 columns × 2 rows.
+        assert_eq!(layout.canvas, Resolution::new(128, 96));
+        assert_eq!(
+            layout.placements.iter().map(|p| (p.x_offset, p.y_offset)).collect::<Vec<_>>(),
+            vec![(0, 0), (64, 0), (0, 48)]
+        );
+        // Mixed sizes: cells fit the largest source.
+        let mixed = SourceLayout::grid(&[Resolution::new(32, 32), Resolution::new(64, 48)]);
+        assert_eq!(mixed.canvas, Resolution::new(128, 48));
+        assert_eq!(mixed.placements[1].x_offset, 64);
+    }
+
+    #[test]
+    fn explicit_offsets_place_and_bound() {
+        let layout = SourceLayout::at_offsets(
+            &[Resolution::new(64, 48), Resolution::new(64, 48)],
+            &[(0, 0), (100, 30)],
+        );
+        assert_eq!(layout.canvas, Resolution::new(164, 78));
+        let placed = layout.place(1, &Event::on(5, 5, 0)).unwrap();
+        assert_eq!((placed.x, placed.y), (105, 35));
+        // Overlapping regions are allowed (that is what overlay is).
+        let overlapping = SourceLayout::at_offsets(
+            &[Resolution::new(64, 48), Resolution::new(64, 48)],
+            &[(0, 0), (10, 0)],
+        );
+        assert_eq!(overlapping.canvas, Resolution::new(74, 48));
     }
 
     #[test]

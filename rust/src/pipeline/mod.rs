@@ -23,7 +23,57 @@ pub mod ops;
 pub mod registry;
 pub mod viewer;
 
-use crate::aer::Event;
+use crate::aer::{Event, Resolution};
+
+/// Parallelization contract of a transform — the vector-style
+/// function/task split, refined for pixel-addressed streams.
+///
+/// The class tells the topology compiler ([`crate::stream::StageGraph`])
+/// how a stage may be spread across shard nodes without changing its
+/// output:
+///
+/// * [`Stateless`](TransformClass::Stateless) — a pure per-event
+///   function; any partition of the stream produces the same per-event
+///   results, so the stage can run as N shard nodes under any router.
+/// * [`Stateful`](TransformClass::Stateful) — state keyed by pixel
+///   geometry (refractory clocks, denoise activity maps). Shardable by
+///   pixel stripe with one *owned* state copy per shard, because a
+///   pixel's events always land in the same stripe; `halo` is the
+///   spatial support radius (in pixels) the transform reads *around* an
+///   event, which the router satisfies with ghost events from
+///   neighbouring stripes (state updates whose outputs are discarded).
+/// * [`Barrier`](TransformClass::Barrier) — order- or stream-global
+///   (frame binning, fusion): must run on a single node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransformClass {
+    /// Pure per-event function: shardable under any partition.
+    Stateless,
+    /// Geometry-keyed state: shardable by pixel stripe; `halo` is the
+    /// spatial support radius read around each event (0 = the event's
+    /// own pixel only).
+    Stateful {
+        /// Neighbourhood radius in pixels.
+        halo: u16,
+    },
+    /// Order-sensitive: runs on exactly one node.
+    Barrier,
+}
+
+impl TransformClass {
+    /// `true` if the class permits stripe-sharded execution.
+    pub fn shardable(&self) -> bool {
+        !matches!(self, TransformClass::Barrier)
+    }
+
+    /// The spatial support radius the shard router must cover with
+    /// ghost events (0 for stateless and pixel-local stages).
+    pub fn halo(&self) -> u16 {
+        match self {
+            TransformClass::Stateful { halo } => *halo,
+            _ => 0,
+        }
+    }
+}
 
 /// A per-event transform: the paper's composable function unit.
 ///
@@ -38,6 +88,13 @@ pub trait EventTransform: Send {
 
     /// Reset internal state (start of a new stream).
     fn reset(&mut self) {}
+
+    /// Parallelization class. The conservative default is
+    /// [`TransformClass::Barrier`] (single node); transforms that are
+    /// safe to shard must opt in explicitly.
+    fn class(&self) -> TransformClass {
+        TransformClass::Barrier
+    }
 }
 
 /// A chain of transforms applied in order, short-circuiting on drop.
@@ -114,6 +171,146 @@ impl Pipeline {
     }
 }
 
+// ------------------------------------------------------------------ spec
+
+/// Geometry-aware stage constructor: canvas in, fresh transform out.
+type StageBuilder = Box<dyn Fn(Resolution) -> Box<dyn EventTransform> + Send + Sync>;
+
+/// A *deferred* pipeline stage: a factory that builds a fresh
+/// [`EventTransform`] for a given canvas geometry.
+///
+/// Two things a bare [`Pipeline`] cannot express require the
+/// indirection:
+///
+/// * geometry-keyed stages (refractory, denoise) must be built from the
+///   geometry of the *opened* sources — the fused canvas — not from
+///   whatever the command line assumed before any header was read;
+/// * sharded execution needs N independent instances of a stage, one
+///   per shard node, each owning its stripe's state.
+pub struct StageSpec {
+    name: String,
+    class: TransformClass,
+    pinned: bool,
+    build: StageBuilder,
+}
+
+impl StageSpec {
+    /// Wrap a geometry-aware constructor. The stage's name and class
+    /// are sampled from a throwaway 1×1 instance (both must be
+    /// geometry-independent, which holds for every registered op).
+    pub fn new<T, F>(build: F) -> Self
+    where
+        T: EventTransform + 'static,
+        F: Fn(Resolution) -> T + Send + Sync + 'static,
+    {
+        let sample = build(Resolution::new(1, 1));
+        StageSpec {
+            name: sample.describe(),
+            class: sample.class(),
+            pinned: false,
+            build: Box::new(move |res| Box::new(build(res)) as Box<dyn EventTransform>),
+        }
+    }
+
+    /// Pin this stage to a single (barrier) node even if its class
+    /// would allow sharding — the CLI's `@serial` placement.
+    pub fn pinned(mut self) -> Self {
+        self.pinned = true;
+        self
+    }
+
+    /// Stage description (sampled from the constructor).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Declared parallelization class.
+    pub fn class(&self) -> TransformClass {
+        self.class
+    }
+
+    /// `true` if the stage was pinned to a single node.
+    pub fn is_pinned(&self) -> bool {
+        self.pinned
+    }
+
+    /// Build one instance for canvas `res`.
+    pub fn build(&self, res: Resolution) -> Box<dyn EventTransform> {
+        (self.build)(res)
+    }
+}
+
+impl std::fmt::Debug for StageSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StageSpec")
+            .field("name", &self.name)
+            .field("class", &self.class)
+            .field("pinned", &self.pinned)
+            .finish()
+    }
+}
+
+/// An ordered list of deferred stages: what the CLI parses and the
+/// topology compiler ([`crate::stream::StageGraph`]) consumes. Build a
+/// plain serial [`Pipeline`] from it with
+/// [`build_pipeline`](PipelineSpec::build_pipeline).
+#[derive(Debug, Default)]
+pub struct PipelineSpec {
+    stages: Vec<StageSpec>,
+}
+
+impl PipelineSpec {
+    /// Empty spec (identity pipeline).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a stage. Builder-style.
+    pub fn then(mut self, stage: StageSpec) -> Self {
+        self.stages.push(stage);
+        self
+    }
+
+    /// Append a stage in place.
+    pub fn push(&mut self, stage: StageSpec) {
+        self.stages.push(stage);
+    }
+
+    /// The stages, in order.
+    pub fn stages(&self) -> &[StageSpec] {
+        &self.stages
+    }
+
+    /// Number of stages.
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// `true` if the spec is the identity.
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Instantiate every stage for canvas `res` as one serial
+    /// [`Pipeline`] — the reference execution the sharded graph must
+    /// match event for event.
+    pub fn build_pipeline(&self, res: Resolution) -> Pipeline {
+        let mut p = Pipeline::new();
+        for stage in &self.stages {
+            p = p.then_boxed(stage.build(res));
+        }
+        p
+    }
+
+    /// `stage1 | stage2 | …` description string.
+    pub fn describe(&self) -> String {
+        if self.stages.is_empty() {
+            return "identity".into();
+        }
+        self.stages.iter().map(|s| s.name.clone()).collect::<Vec<_>>().join(" | ")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::ops::{PolarityFilter, TimeShift};
@@ -160,5 +357,45 @@ mod tests {
         let kept = p.process(&events).len();
         let on_events = events.iter().filter(|e| e.p.is_on()).count();
         assert_eq!(kept + on_events, events.len());
+    }
+
+    #[test]
+    fn spec_builds_the_same_pipeline_as_direct_composition() {
+        use super::ops::RefractoryFilter;
+        let res = Resolution::new(64, 48);
+        let spec = PipelineSpec::new()
+            .then(StageSpec::new(|_| PolarityFilter::keep(Polarity::On)))
+            .then(StageSpec::new(|res| RefractoryFilter::new(res, 100)));
+        assert_eq!(spec.describe(), "polarity(on) | refractory(100µs)");
+        assert_eq!(spec.len(), 2);
+        assert_eq!(spec.stages()[0].class(), TransformClass::Stateless);
+        assert_eq!(spec.stages()[1].class(), TransformClass::Stateful { halo: 0 });
+
+        let events = synthetic_events(2000, 64, 48);
+        let mut direct = Pipeline::new()
+            .then(PolarityFilter::keep(Polarity::On))
+            .then(RefractoryFilter::new(res, 100));
+        let mut built = spec.build_pipeline(res);
+        assert_eq!(built.process(&events), direct.process(&events));
+        assert_eq!(built.describe(), direct.describe());
+    }
+
+    #[test]
+    fn default_class_is_barrier_and_pinning_sticks() {
+        struct Opaque;
+        impl EventTransform for Opaque {
+            fn apply(&mut self, ev: Event) -> Option<Event> {
+                Some(ev)
+            }
+            fn describe(&self) -> String {
+                "opaque".into()
+            }
+        }
+        assert_eq!(Opaque.class(), TransformClass::Barrier);
+        assert!(!TransformClass::Barrier.shardable());
+        assert_eq!(TransformClass::Stateful { halo: 2 }.halo(), 2);
+        let spec = StageSpec::new(|_| Opaque).pinned();
+        assert!(spec.is_pinned());
+        assert_eq!(spec.class(), TransformClass::Barrier);
     }
 }

@@ -5,7 +5,7 @@
 //! freely-composable pipeline stages.
 
 use crate::aer::{Event, Polarity, Resolution};
-use crate::pipeline::EventTransform;
+use crate::pipeline::{EventTransform, TransformClass};
 
 // ---------------------------------------------------------------------
 // Polarity filter
@@ -31,6 +31,9 @@ impl EventTransform for PolarityFilter {
     }
     fn describe(&self) -> String {
         format!("polarity({})", if self.keep.is_on() { "on" } else { "off" })
+    }
+    fn class(&self) -> TransformClass {
+        TransformClass::Stateless
     }
 }
 
@@ -71,6 +74,9 @@ impl EventTransform for RoiCrop {
     fn describe(&self) -> String {
         format!("crop({},{},{}x{})", self.x0, self.y0, self.width, self.height)
     }
+    fn class(&self) -> TransformClass {
+        TransformClass::Stateless
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -98,6 +104,9 @@ impl EventTransform for Downsample {
     }
     fn describe(&self) -> String {
         format!("downsample(/{})", self.factor)
+    }
+    fn class(&self) -> TransformClass {
+        TransformClass::Stateless
     }
 }
 
@@ -146,6 +155,11 @@ impl EventTransform for RefractoryFilter {
     }
     fn reset(&mut self) {
         self.last.fill(0);
+    }
+    fn class(&self) -> TransformClass {
+        // Per-pixel clocks, no neighbourhood reads: stripes own their
+        // pixels outright, no ghosts needed.
+        TransformClass::Stateful { halo: 0 }
     }
 }
 
@@ -208,6 +222,11 @@ impl EventTransform for BackgroundActivityFilter {
     fn reset(&mut self) {
         self.last.fill(0);
     }
+    fn class(&self) -> TransformClass {
+        // Reads the 8-neighbourhood: shard routers must feed each
+        // stripe ghost copies of events within 1 px of its boundary.
+        TransformClass::Stateful { halo: 1 }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -238,6 +257,9 @@ impl EventTransform for FlipX {
     fn describe(&self) -> String {
         "flip_x".into()
     }
+    fn class(&self) -> TransformClass {
+        TransformClass::Stateless
+    }
 }
 
 /// Mirror y within a sensor of the given height.
@@ -264,6 +286,9 @@ impl EventTransform for FlipY {
     fn describe(&self) -> String {
         "flip_y".into()
     }
+    fn class(&self) -> TransformClass {
+        TransformClass::Stateless
+    }
 }
 
 /// Swap x and y (rotate+mirror; geometry must be square or tracked by
@@ -278,6 +303,9 @@ impl EventTransform for Transpose {
     }
     fn describe(&self) -> String {
         "transpose".into()
+    }
+    fn class(&self) -> TransformClass {
+        TransformClass::Stateless
     }
 }
 
@@ -306,6 +334,9 @@ impl EventTransform for TimeShift {
     }
     fn describe(&self) -> String {
         format!("time_shift(+{}µs)", self.offset_us)
+    }
+    fn class(&self) -> TransformClass {
+        TransformClass::Stateless
     }
 }
 
@@ -391,5 +422,22 @@ mod tests {
     fn transpose_swaps() {
         let mut t = Transpose;
         assert_eq!(t.apply(Event::on(3, 9, 7)), Some(Event::on(9, 3, 7)));
+    }
+
+    #[test]
+    fn classes_match_statefulness() {
+        use crate::pipeline::TransformClass as C;
+        assert_eq!(PolarityFilter::keep(Polarity::On).class(), C::Stateless);
+        assert_eq!(RoiCrop::new(0, 0, 8, 8).class(), C::Stateless);
+        assert_eq!(Downsample::new(2).class(), C::Stateless);
+        assert_eq!(FlipX::new(8).class(), C::Stateless);
+        assert_eq!(FlipY::new(8).class(), C::Stateless);
+        assert_eq!(Transpose.class(), C::Stateless);
+        assert_eq!(TimeShift::new(10).class(), C::Stateless);
+        assert_eq!(RefractoryFilter::new(RES, 100).class(), C::Stateful { halo: 0 });
+        assert_eq!(
+            BackgroundActivityFilter::new(RES, 100).class(),
+            C::Stateful { halo: 1 }
+        );
     }
 }

@@ -1,10 +1,98 @@
-//! The Table 1 feature matrix.
+//! The Table 1 feature matrix, plus the transform-op catalog.
 //!
 //! Table 1 of the paper surveys open-source AER libraries by language,
 //! Python bindings, and native input/output support. This registry holds
 //! both the paper's survey rows (verbatim from the table) and *this*
 //! library's row computed from what is actually compiled in — the
 //! `table1_matrix` example renders the comparison.
+//!
+//! [`transform_ops`] is the second registry: every standard pipeline op
+//! with its CLI name and declared [`TransformClass`], so the CLI, the
+//! topology compiler, and the sharded-vs-serial equivalence tests all
+//! enumerate the same set — an op added here is automatically covered
+//! by the stage-graph property tests.
+
+use crate::aer::{Polarity, Resolution};
+use crate::pipeline::{ops, StageSpec, TransformClass};
+
+/// One registered pipeline transform: CLI name, declared
+/// parallelization class, argument help, and a canonical example
+/// constructor (used by tests and benches to exercise every op).
+pub struct TransformOp {
+    /// CLI `filter` name.
+    pub name: &'static str,
+    /// Declared class — must match what built instances report.
+    pub class: TransformClass,
+    /// Argument usage, CLI help.
+    pub usage: &'static str,
+    /// Canonical geometry-deferred example instance.
+    pub example: fn() -> StageSpec,
+}
+
+/// Every standard transform with its declared class. The stage-graph
+/// equivalence tests iterate this list, so sharding safety is proven
+/// per registered op, not per hand-picked case.
+pub fn transform_ops() -> Vec<TransformOp> {
+    use TransformClass as C;
+    vec![
+        TransformOp {
+            name: "polarity",
+            class: C::Stateless,
+            usage: "polarity on|off",
+            example: || StageSpec::new(|_| ops::PolarityFilter::keep(Polarity::On)),
+        },
+        TransformOp {
+            name: "crop",
+            class: C::Stateless,
+            usage: "crop X0 Y0 W H",
+            example: || StageSpec::new(|_| ops::RoiCrop::new(2, 2, 24, 24)),
+        },
+        TransformOp {
+            name: "downsample",
+            class: C::Stateless,
+            usage: "downsample FACTOR",
+            example: || StageSpec::new(|_| ops::Downsample::new(2)),
+        },
+        TransformOp {
+            name: "refractory",
+            class: C::Stateful { halo: 0 },
+            usage: "refractory PERIOD_US",
+            example: || StageSpec::new(|res: Resolution| ops::RefractoryFilter::new(res, 100)),
+        },
+        TransformOp {
+            name: "denoise",
+            class: C::Stateful { halo: 1 },
+            usage: "denoise WINDOW_US",
+            example: || {
+                StageSpec::new(|res: Resolution| ops::BackgroundActivityFilter::new(res, 1000))
+            },
+        },
+        TransformOp {
+            name: "flip-x",
+            class: C::Stateless,
+            usage: "flip-x",
+            example: || StageSpec::new(|res: Resolution| ops::FlipX::new(res.width)),
+        },
+        TransformOp {
+            name: "flip-y",
+            class: C::Stateless,
+            usage: "flip-y",
+            example: || StageSpec::new(|res: Resolution| ops::FlipY::new(res.height)),
+        },
+        TransformOp {
+            name: "transpose",
+            class: C::Stateless,
+            usage: "transpose",
+            example: || StageSpec::new(|_| ops::Transpose),
+        },
+        TransformOp {
+            name: "time-shift",
+            class: C::Stateless,
+            usage: "time-shift OFFSET_US",
+            example: || StageSpec::new(|_| ops::TimeShift::new(50)),
+        },
+    ]
+}
 
 /// Kinds of I/O a library can support natively.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -169,6 +257,33 @@ mod tests {
         assert_eq!(crate::net::spif::unpack_word(word, 3).x, 1);
         // GPU(device) output ⇔ runtime module compiles (asserted by build).
         assert!(row.outputs.unwrap().contains(&IoKind::Gpu));
+    }
+
+    #[test]
+    fn declared_op_classes_match_built_instances() {
+        for op in transform_ops() {
+            let spec = (op.example)();
+            assert_eq!(
+                spec.class(),
+                op.class,
+                "op {:?}: declared class diverges from the instance's",
+                op.name
+            );
+            // Sampled at 1×1 and built at a real geometry, the class
+            // must not change (it is a static property of the op).
+            let built = spec.build(Resolution::new(64, 64));
+            assert_eq!(built.class(), op.class, "op {:?}", op.name);
+        }
+    }
+
+    #[test]
+    fn op_names_are_unique() {
+        let ops = transform_ops();
+        for (i, a) in ops.iter().enumerate() {
+            for b in &ops[i + 1..] {
+                assert_ne!(a.name, b.name);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! The k-way ordered-merge core, factored out so merge logic exists
+//! exactly once.
+//!
+//! Two consumers share it:
+//!
+//! * [`super::FusedSource`] — the streaming fan-in merge of N event
+//!   sources, keyed by timestamp (ties break to the lowest lane id,
+//!   matching [`crate::pipeline::fusion::merge_streams`]);
+//! * [`super::StageGraph`]'s sharded stage nodes — the re-merge of N
+//!   shard outputs back into serial order, keyed by the per-batch
+//!   sequence number each event carried through its shard.
+//!
+//! A [`MergeCore`] holds one carry buffer per lane. Lanes are *blocking*
+//! by default: an empty, unexhausted, blocking lane stalls the merge
+//! (emitting could violate key order because the lane's next key is
+//! unknown). Lanes whose future keys are known not to matter — an
+//! exhausted source, a heartbeating idle live source, a shard that
+//! already delivered its whole batch — are non-blocking.
+
+use std::collections::VecDeque;
+
+/// One input lane of the merge.
+struct Lane<T> {
+    carry: VecDeque<T>,
+    exhausted: bool,
+    blocking: bool,
+}
+
+/// N carry buffers plus the min-key pop logic of an ordered k-way
+/// merge. Generic over the item and the (per-pop) sort key.
+pub(crate) struct MergeCore<T> {
+    lanes: Vec<Lane<T>>,
+    peak_buffered: usize,
+}
+
+impl<T> MergeCore<T> {
+    /// A merge over `n` initially-empty, blocking lanes.
+    pub(crate) fn new(n: usize) -> Self {
+        assert!(n > 0, "merge needs at least one lane");
+        MergeCore {
+            lanes: (0..n)
+                .map(|_| Lane { carry: VecDeque::new(), exhausted: false, blocking: true })
+                .collect(),
+            peak_buffered: 0,
+        }
+    }
+
+    /// Number of lanes.
+    pub(crate) fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Append items to a lane's carry (items must be in key order and
+    /// keyed at or above everything previously pushed to that lane).
+    pub(crate) fn push(&mut self, lane: usize, items: impl IntoIterator<Item = T>) {
+        self.lanes[lane].carry.extend(items);
+    }
+
+    /// Mark a lane as ended: it can never produce again and stops
+    /// blocking the merge once drained.
+    pub(crate) fn exhaust(&mut self, lane: usize) {
+        self.lanes[lane].exhausted = true;
+    }
+
+    /// `true` once `lane` was exhausted.
+    pub(crate) fn is_exhausted(&self, lane: usize) -> bool {
+        self.lanes[lane].exhausted
+    }
+
+    /// Set whether an *unexhausted* empty `lane` stalls the merge.
+    /// Heartbeating live sources flip this off so one quiet sensor
+    /// cannot freeze its siblings.
+    pub(crate) fn set_blocking(&mut self, lane: usize, blocking: bool) {
+        self.lanes[lane].blocking = blocking;
+    }
+
+    /// Events currently buffered in `lane`.
+    pub(crate) fn lane_len(&self, lane: usize) -> usize {
+        self.lanes[lane].carry.len()
+    }
+
+    /// Every lane exhausted and drained: the merge is complete.
+    pub(crate) fn all_done(&self) -> bool {
+        self.lanes.iter().all(|l| l.exhausted && l.carry.is_empty())
+    }
+
+    /// Some blocking, unexhausted lane is empty: emitting now could
+    /// violate key order.
+    pub(crate) fn stalled(&self) -> bool {
+        self.lanes.iter().any(|l| !l.exhausted && l.blocking && l.carry.is_empty())
+    }
+
+    /// Record the current total occupancy into the peak gauge.
+    pub(crate) fn note_peak(&mut self) {
+        let buffered: usize = self.lanes.iter().map(|l| l.carry.len()).sum();
+        self.peak_buffered = self.peak_buffered.max(buffered);
+    }
+
+    /// Peak events resident across all carries (the reorder depth).
+    pub(crate) fn peak_buffered(&self) -> usize {
+        self.peak_buffered
+    }
+
+    /// Pop the item with the minimal key across lane heads; ties break
+    /// to the lowest lane id (full determinism). `None` when every
+    /// carry is empty.
+    pub(crate) fn pop_min<K: Ord>(&mut self, key: impl Fn(&T) -> K) -> Option<(usize, T)> {
+        let mut best: Option<(K, usize)> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if let Some(head) = lane.carry.front() {
+                let k = key(head);
+                let better = match &best {
+                    None => true,
+                    Some((bk, _)) => k < *bk,
+                };
+                if better {
+                    best = Some((k, i));
+                }
+            }
+        }
+        let (_, i) = best?;
+        let item = self.lanes[i].carry.pop_front().expect("nonempty carry");
+        Some((i, item))
+    }
+}
+
+/// One-shot merge of fully-materialized, individually key-ordered lanes
+/// — the shard re-merge path (each shard's batch output is complete
+/// before reassembly, so no lane ever blocks).
+pub(crate) fn merge_ordered<T, K: Ord>(
+    parts: Vec<Vec<T>>,
+    key: impl Fn(&T) -> K,
+) -> Vec<T> {
+    let total: usize = parts.iter().map(Vec::len).sum();
+    let mut core = MergeCore::new(parts.len().max(1));
+    for (i, part) in parts.into_iter().enumerate() {
+        core.push(i, part);
+        core.exhaust(i);
+    }
+    let mut out = Vec::with_capacity(total);
+    while let Some((_, item)) = core.pop_min(&key) {
+        out.push(item);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pop_min_is_ordered_and_tie_breaks_to_lowest_lane() {
+        let mut core: MergeCore<(u64, char)> = MergeCore::new(3);
+        core.push(0, [(5, 'a'), (9, 'b')]);
+        core.push(1, [(5, 'c')]);
+        core.push(2, [(1, 'd')]);
+        (0..3).for_each(|i| core.exhaust(i));
+        let mut got = Vec::new();
+        while let Some((lane, item)) = core.pop_min(|it| it.0) {
+            got.push((lane, item.1));
+        }
+        assert_eq!(got, vec![(2, 'd'), (0, 'a'), (1, 'c'), (0, 'b')]);
+        assert!(core.all_done());
+    }
+
+    #[test]
+    fn blocking_semantics_gate_stalls() {
+        let mut core: MergeCore<u64> = MergeCore::new(2);
+        core.push(0, [1, 2]);
+        assert!(core.stalled(), "live empty lane 1 must stall");
+        core.set_blocking(1, false);
+        assert!(!core.stalled(), "non-blocking empty lane must not stall");
+        core.set_blocking(1, true);
+        core.exhaust(1);
+        assert!(!core.stalled(), "exhausted lane must not stall");
+        assert!(!core.all_done(), "lane 0 still has items");
+    }
+
+    #[test]
+    fn peak_tracks_total_occupancy() {
+        let mut core: MergeCore<u64> = MergeCore::new(2);
+        core.push(0, [1, 2, 3]);
+        core.push(1, [4]);
+        core.note_peak();
+        assert_eq!(core.peak_buffered(), 4);
+        core.pop_min(|&v| v);
+        core.note_peak();
+        assert_eq!(core.peak_buffered(), 4, "peak is a high-water mark");
+        assert_eq!(core.lane_len(0), 2);
+    }
+
+    #[test]
+    fn merge_ordered_restores_sequence() {
+        let parts = vec![vec![(0u32, 'a'), (3, 'b')], vec![(1u32, 'c')], vec![(2u32, 'd')]];
+        let merged = merge_ordered(parts, |it| it.0);
+        assert_eq!(merged, vec![(0, 'a'), (1, 'c'), (2, 'd'), (3, 'b')]);
+        assert!(merge_ordered(Vec::<Vec<u32>>::new(), |&v| v).is_empty());
+    }
+}

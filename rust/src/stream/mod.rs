@@ -16,17 +16,28 @@
 //! Graphs wider than one edge live in [`topology`]: N sources fan in
 //! through a streaming timestamp-ordered merge (optionally one OS
 //! thread per source, fed through the lock-free
-//! [`crate::rt::sync_channel`] ring), share one pipeline, and fan out
-//! to M sinks by [`RoutePolicy`]. [`run`] itself is a thin single-edge
-//! wrapper over [`topology::run_topology`].
+//! [`crate::rt::sync_channel`] ring), share one stage chain, and fan
+//! out to M sinks by [`RoutePolicy`]. [`run`] itself is a thin
+//! single-edge wrapper over [`topology::run_topology`].
+//!
+//! The stage chain between fan-in and fan-out is any
+//! [`BatchProcessor`]: the serial [`Pipeline`], or a [`StageGraph`]
+//! ([`stage`]) that compiles each stage into its own topology node —
+//! stateless/stateful stages stripe-sharded across N workers (inline
+//! coroutines or one OS thread each) with a sequence-keyed re-merge,
+//! barrier stages pinned to single nodes. The k-way merge logic itself
+//! lives once, in the internal `merge` module, shared by the fan-in
+//! merge and the shard re-merge.
 //!
 //! The split mirrors vector's `FunctionTransform`/`TaskTransform`
-//! idiom: per-event functions stay in [`crate::pipeline`], while
-//! sources and sinks are scheduled by whatever driver fits the
-//! deployment.
+//! idiom: per-event functions stay in [`crate::pipeline`] and declare a
+//! [`crate::pipeline::TransformClass`], while the topology layer
+//! decides where each one runs.
 
+pub(crate) mod merge;
 pub mod sinks;
 pub mod sources;
+pub mod stage;
 pub mod topology;
 
 use std::time::Duration;
@@ -39,6 +50,7 @@ use crate::pipeline::Pipeline;
 
 pub use sinks::{FileSink, FrameSink, NullSink, SinkSummary, StdoutSink, UdpSink, ViewSink};
 pub use sources::{CameraSource, FileSource, MemorySource, SliceSource, UdpSource};
+pub use stage::{BatchProcessor, StageGraph, StageOptions};
 pub use topology::{run_topology, FusedSource, RoutePolicy, ThreadMode, TopologyConfig};
 
 /// A pull-based, bounded-batch event producer.
@@ -67,6 +79,15 @@ pub trait EventSource: Send {
         true
     }
 
+    /// `true` for sources fed by the outside world (UDP), whose empty
+    /// batches mean "quiet right now" rather than "momentarily starved".
+    /// Only live sources may heartbeat in a fan-in merge: a finite
+    /// source's empty batch is always transient, so stalling on it
+    /// keeps global timestamp order exact. Default `false`.
+    fn is_live(&self) -> bool {
+        false
+    }
+
     /// Events this source discarded before emission (e.g. outside a
     /// claimed geometry). Surfaced per node in reports. Default 0.
     fn dropped(&self) -> u64 {
@@ -89,6 +110,9 @@ impl<S: EventSource + ?Sized> EventSource for &mut S {
     fn geometry_known(&self) -> bool {
         (**self).geometry_known()
     }
+    fn is_live(&self) -> bool {
+        (**self).is_live()
+    }
     fn dropped(&self) -> u64 {
         (**self).dropped()
     }
@@ -106,6 +130,9 @@ impl<S: EventSource + ?Sized> EventSource for Box<S> {
     }
     fn geometry_known(&self) -> bool {
         (**self).geometry_known()
+    }
+    fn is_live(&self) -> bool {
+        (**self).is_live()
     }
     fn dropped(&self) -> u64 {
         (**self).dropped()
@@ -239,6 +266,13 @@ pub struct StreamReport {
     /// (threaded topologies) full-ring suspensions of its pump thread.
     /// Single-edge runs have exactly one entry.
     pub sources: Vec<NodeReport>,
+    /// Per-stage-node counters when the edge ran a [`StageGraph`]: for
+    /// each stage, events in, events it dropped, shard traffic (skew),
+    /// and scatter backpressure. Empty for plain [`Pipeline`] edges.
+    /// Counters chain: stage n+1's `events` equals stage n's
+    /// `events - dropped`, and stage 0's `events` equals
+    /// [`events_in`](StreamReport::events_in).
+    pub stages: Vec<NodeReport>,
     /// Per-sink counters: events/batches routed to each sink, frames it
     /// produced, and times the router found its queue full.
     pub sinks: Vec<NodeReport>,
@@ -248,6 +282,14 @@ pub struct StreamReport {
     /// Events dropped by the fan-in layout for violating their source's
     /// geometry (0 without fusion).
     pub merge_dropped: u64,
+    /// Times an idle live source exhausted its bounded grace and its
+    /// lane stopped blocking the fan-in merge (stalls broken by the
+    /// heartbeat watermark; 0 without fusion or for finite sources).
+    pub merge_stalls_broken: u64,
+    /// Events a heartbeat-overridden source delivered behind the merge
+    /// frontier (emitted with timestamps clamped to the frontier, so
+    /// the merged stream stays globally time-ordered).
+    pub merge_late_events: u64,
 }
 
 impl StreamReport {

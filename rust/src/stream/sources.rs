@@ -126,6 +126,12 @@ pub struct FileSource {
     eof: bool,
     /// Bounding-box fallback for formats without recorded geometry.
     observed_res: Resolution,
+    /// Operator-declared geometry (headerless recordings joining fused
+    /// topologies). Authoritative when set: out-of-claim events are
+    /// dropped and counted, exactly like [`UdpSource::with_geometry`].
+    claimed: Option<Resolution>,
+    /// Events dropped for falling outside the claimed geometry.
+    out_of_claim: u64,
 }
 
 impl FileSource {
@@ -157,9 +163,26 @@ impl FileSource {
             read_buf: vec![0u8; Self::READ_SIZE],
             eof: false,
             observed_res: Resolution::new(1, 1),
+            claimed: None,
+            out_of_claim: 0,
         };
         source.prime()?;
         Ok(source)
+    }
+
+    /// Declare the recording's geometry up front. Headerless formats
+    /// (`.txt`, spooled raw captures) only learn their extent by
+    /// observation, which bars them from fused topologies (canvas
+    /// offsets need real sizes before the first batch); a declared
+    /// geometry makes them exact. The claim is authoritative: events
+    /// outside it are dropped and counted ([`EventSource::dropped`]),
+    /// the same contract as [`UdpSource::with_geometry`]. A recorded
+    /// header, when present, still wins over the claim.
+    pub fn with_geometry(mut self, res: Resolution) -> Self {
+        self.claimed = Some(res);
+        // Claims don't rewind: anything primed before the declaration
+        // is filtered on the way out in next_batch.
+        self
     }
 
     /// The detected format.
@@ -204,24 +227,52 @@ impl FileSource {
 
 impl EventSource for FileSource {
     fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
-        while self.ready.len() < self.chunk && !self.eof {
-            self.fill_once()?;
+        // Loop past fully-filtered chunks: a file always makes
+        // progress, and returning an empty batch would read as "live
+        // source idle" upstream, costing escalating driver sleeps (and
+        // stalling sibling merge lanes) per filtered chunk.
+        loop {
+            while self.ready.len() < self.chunk && !self.eof {
+                self.fill_once()?;
+            }
+            if self.ready.is_empty() {
+                return Ok(None);
+            }
+            let take = self.chunk.min(self.ready.len());
+            let mut batch: Vec<Event> = self.ready.drain(..take).collect();
+            if self.decoder.resolution().is_none() {
+                if let Some(claim) = self.claimed {
+                    // The declared geometry is authoritative for
+                    // headerless recordings (layouts were cut from
+                    // it): out-of-claim events are dropped and
+                    // counted, never smuggled onto a fused canvas.
+                    let before = batch.len();
+                    batch.retain(|ev| claim.contains(ev));
+                    self.out_of_claim += (before - batch.len()) as u64;
+                }
+            }
+            if !batch.is_empty() {
+                return Ok(Some(batch));
+            }
         }
-        if self.ready.is_empty() {
-            return Ok(None);
-        }
-        let take = self.chunk.min(self.ready.len());
-        Ok(Some(self.ready.drain(..take).collect()))
     }
 
     fn resolution(&self) -> Resolution {
-        self.decoder.resolution().unwrap_or(self.observed_res)
+        // Recorded header first, operator claim second, observation last.
+        self.decoder
+            .resolution()
+            .or(self.claimed)
+            .unwrap_or(self.observed_res)
     }
 
     fn geometry_known(&self) -> bool {
-        // Exact iff the header recorded it; otherwise only the events
-        // seen so far bound it.
-        self.decoder.resolution().is_some()
+        // Exact iff the header recorded it or the operator declared it;
+        // otherwise only the events seen so far bound it.
+        self.decoder.resolution().is_some() || self.claimed.is_some()
+    }
+
+    fn dropped(&self) -> u64 {
+        self.out_of_claim
     }
 
     fn describe(&self) -> String {
@@ -335,6 +386,12 @@ impl EventSource for UdpSource {
         // Live wire: geometry is only ever observed unless the operator
         // claimed it explicitly.
         self.claimed
+    }
+
+    fn is_live(&self) -> bool {
+        // Empty batches mean "the wire is quiet", not "starved": this
+        // source may heartbeat in a fan-in merge.
+        true
     }
 
     fn dropped(&self) -> u64 {

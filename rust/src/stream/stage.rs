@@ -1,0 +1,616 @@
+//! Stages as topology nodes: the sharded stage-graph executor.
+//!
+//! PR 2 left every event of a topology funnelling through one serial
+//! [`Pipeline`] between fan-in and fan-out. This module turns each
+//! pipeline stage into a first-class node, compiled from its declared
+//! [`TransformClass`]:
+//!
+//! * **Stateless / Stateful** stages run as N *shard* workers. Events
+//!   are routed by pixel stripe (the same vertical-stripe cut as
+//!   [`super::RoutePolicy::Stripes`]); a stateful stage's per-pixel
+//!   state is safe because a pixel's events always land in the same
+//!   stripe, and neighbourhood reads (`halo > 0`, e.g. the denoise
+//!   filter's 8-neighbourhood) are satisfied by **ghost events** —
+//!   copies of boundary events delivered to the adjacent shard to
+//!   update its state, with their outputs discarded.
+//! * **Barrier** stages (and `@serial`-pinned ones) run on a single
+//!   node.
+//!
+//! Each event entering a sharded node carries its batch sequence
+//! number; the shard outputs are re-merged by that key (via the shared
+//! [`super::merge`] core), so the graph's output is **byte-identical**
+//! to the serial pipeline — same events, same order, same payloads —
+//! which the `stage_graph` property tests assert for every registered
+//! op at shard counts 1–4.
+//!
+//! Shard workers either run inline on the driving thread (the
+//! deterministic, zero-thread debug shape) or one OS thread each,
+//! fed through the lock-free [`crate::rt::sync_channel`] ring in
+//! batch-sized scatter/gather rounds — no per-event locks, and
+//! bounded memory (≤ one batch in flight per shard).
+
+use anyhow::{bail, Result};
+
+use crate::aer::{Event, Resolution};
+use crate::metrics::NodeReport;
+use crate::pipeline::{EventTransform, Pipeline, PipelineSpec};
+use crate::rt::{block_on, sync_channel, SyncReceiver, SyncSender};
+
+use super::merge::merge_ordered;
+
+/// An event travelling through a sharded node: batch sequence number
+/// (the re-merge key), payload, and whether it is a ghost copy (state
+/// update only — output discarded).
+type ShardItem = (u64, Event, bool);
+/// A shard's processed sub-batch, still sequence-tagged.
+type ShardOut = Vec<(u64, Event)>;
+
+/// Batches in flight per shard worker ring (scatter/gather keeps at
+/// most one round outstanding; 2 decouples the hand-off edges).
+const SHARD_QUEUE_BATCHES: usize = 2;
+
+/// Stripe width for cutting a `width`-pixel canvas into `m` shards —
+/// shared with the fan-out stripes router so "stripe i" means the same
+/// pixels on every layer.
+pub(crate) fn stripe_cut(width: u16, m: usize) -> usize {
+    (width as usize).div_ceil(m.max(1)).max(1)
+}
+
+/// Which stripe pixel column `x` belongs to (the last stripe absorbs
+/// any overhang, exactly like the stripes route policy).
+pub(crate) fn stripe_index(x: u16, stripe: usize, m: usize) -> usize {
+    (x as usize / stripe).min(m - 1)
+}
+
+// ----------------------------------------------------------- processor
+
+/// Anything that can stand between a topology's fan-in and fan-out and
+/// process event batches: the serial [`Pipeline`] or a compiled
+/// [`StageGraph`]. The topology driver is generic over this, so the
+/// serial and sharded paths share every driver line.
+pub trait BatchProcessor: Send {
+    /// Process one batch, returning the surviving events in order.
+    fn process_batch(&mut self, batch: &[Event]) -> Result<Vec<Event>>;
+
+    /// Tear down any execution resources (join shard worker threads).
+    /// Called once, after the last batch.
+    fn finish_stages(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Per-stage-node counters for [`super::StreamReport::stages`].
+    fn stage_reports(&self) -> Vec<NodeReport> {
+        Vec::new()
+    }
+
+    /// Human-readable description.
+    fn describe(&self) -> String;
+}
+
+impl BatchProcessor for Pipeline {
+    fn process_batch(&mut self, batch: &[Event]) -> Result<Vec<Event>> {
+        Ok(self.process(batch))
+    }
+
+    fn describe(&self) -> String {
+        Pipeline::describe(self)
+    }
+}
+
+// --------------------------------------------------------------- graph
+
+/// How [`StageGraph::compile`] spreads shardable stages.
+#[derive(Debug, Clone, Copy)]
+pub struct StageOptions {
+    /// Shard workers per shardable stage (1 = everything serial).
+    pub shards: usize,
+    /// Pin each shard worker to its own OS thread (fed through the
+    /// lock-free ring) instead of running them inline.
+    pub shard_threads: bool,
+}
+
+impl Default for StageOptions {
+    fn default() -> Self {
+        StageOptions { shards: 1, shard_threads: false }
+    }
+}
+
+/// One shard worker pinned to an OS thread.
+struct ShardWorker {
+    tx: SyncSender<Vec<ShardItem>>,
+    rx: SyncReceiver<ShardOut>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+/// Execution mode of a sharded node's workers.
+enum ShardMode {
+    /// Worker state lives on the driving thread; shards run one after
+    /// another (deterministic, thread-free — the cooperative shape).
+    Inline(Vec<Box<dyn EventTransform>>),
+    /// One OS thread per shard, scatter/gather per batch.
+    Threads(Vec<ShardWorker>),
+}
+
+/// Per-node execution strategy.
+enum NodeExec {
+    /// Single node (barrier class, pinned stage, or shards = 1).
+    Serial(Box<dyn EventTransform>),
+    /// N stripe-sharded workers with ghost-event halo exchange and a
+    /// sequence-keyed re-merge.
+    Sharded { stripe: usize, halo: u16, mode: ShardMode, shard_events: Vec<u64> },
+}
+
+/// One stage node plus its counters.
+struct StageNode {
+    name: String,
+    events_in: u64,
+    events_out: u64,
+    batches: u64,
+    backpressure_waits: u64,
+    exec: NodeExec,
+}
+
+/// A compiled chain of stage nodes — the sharded generalization of the
+/// "one shared pipeline" edge. Build one with [`StageGraph::compile`]
+/// and hand it to [`super::run_topology`] in place of a [`Pipeline`].
+pub struct StageGraph {
+    nodes: Vec<StageNode>,
+    /// Set by [`BatchProcessor::finish_stages`]: threaded shard workers
+    /// are gone, so further batches must fail loudly, not drop events.
+    finished: bool,
+}
+
+impl StageGraph {
+    /// Compile `spec` for a canvas of `res` under `opts`.
+    ///
+    /// The shard count is clamped per stage so a stripe is always wider
+    /// than the stage's halo (ghosts only ever cross into the adjacent
+    /// stripe); stages that cannot satisfy that (or are barriers or
+    /// pinned) fall back to a single serial node.
+    pub fn compile(spec: &PipelineSpec, res: Resolution, opts: &StageOptions) -> StageGraph {
+        let nodes = spec
+            .stages()
+            .iter()
+            .map(|stage| {
+                let class = stage.class();
+                let mut shards = opts.shards.max(1);
+                if !class.shardable() || stage.is_pinned() {
+                    shards = 1;
+                }
+                let halo = class.halo();
+                while shards > 1 && stripe_cut(res.width, shards) <= halo as usize {
+                    shards -= 1;
+                }
+                let exec = if shards == 1 {
+                    NodeExec::Serial(stage.build(res))
+                } else {
+                    let stripe = stripe_cut(res.width, shards);
+                    let workers: Vec<Box<dyn EventTransform>> =
+                        (0..shards).map(|_| stage.build(res)).collect();
+                    let mode = if opts.shard_threads {
+                        ShardMode::Threads(spawn_workers(workers))
+                    } else {
+                        ShardMode::Inline(workers)
+                    };
+                    NodeExec::Sharded { stripe, halo, mode, shard_events: vec![0; shards] }
+                };
+                StageNode {
+                    name: stage.name().to_string(),
+                    events_in: 0,
+                    events_out: 0,
+                    batches: 0,
+                    backpressure_waits: 0,
+                    exec,
+                }
+            })
+            .collect();
+        StageGraph { nodes, finished: false }
+    }
+
+    /// Number of stage nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// `true` for the identity graph.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Shard worker count of node `i` (1 for serial nodes).
+    pub fn node_shards(&self, i: usize) -> usize {
+        match &self.nodes[i].exec {
+            NodeExec::Serial(_) => 1,
+            NodeExec::Sharded { shard_events, .. } => shard_events.len(),
+        }
+    }
+}
+
+/// Spawn one OS thread per shard worker. Each worker loops
+/// recv-apply-send until its input ring closes; a dead main side
+/// (receiver dropped) ends it via the failed send.
+fn spawn_workers(stages: Vec<Box<dyn EventTransform>>) -> Vec<ShardWorker> {
+    stages
+        .into_iter()
+        .map(|mut stage| {
+            let (tx, mut worker_rx) = sync_channel::<Vec<ShardItem>>(SHARD_QUEUE_BATCHES);
+            let (mut worker_tx, rx) = sync_channel::<ShardOut>(SHARD_QUEUE_BATCHES);
+            let handle = std::thread::spawn(move || {
+                while let Some(batch) = block_on(worker_rx.recv()) {
+                    let out = apply_shard(stage.as_mut(), batch);
+                    if block_on(worker_tx.send(out)).is_err() {
+                        break;
+                    }
+                }
+            });
+            ShardWorker { tx, rx, handle }
+        })
+        .collect()
+}
+
+/// Run one shard's sub-batch through its stage instance: ghosts update
+/// state but never emit; home events that survive keep their sequence
+/// tag for the re-merge.
+fn apply_shard(stage: &mut dyn EventTransform, batch: Vec<ShardItem>) -> ShardOut {
+    let mut out = Vec::with_capacity(batch.len());
+    for (seq, ev, ghost) in batch {
+        match stage.apply(ev) {
+            Some(next) if !ghost => out.push((seq, next)),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Route one batch across `m` stripes: every event goes to its home
+/// stripe; events within `halo` pixels of a stripe boundary are
+/// additionally ghosted to the adjacent stripe. Returns per-shard
+/// inputs plus per-shard home-event counts.
+fn route_stripes(
+    batch: &[Event],
+    stripe: usize,
+    m: usize,
+    halo: u16,
+) -> (Vec<Vec<ShardItem>>, Vec<u64>) {
+    let mut parts: Vec<Vec<ShardItem>> = (0..m).map(|_| Vec::new()).collect();
+    let mut homes = vec![0u64; m];
+    let halo = halo as usize;
+    for (seq, &ev) in batch.iter().enumerate() {
+        let s = stripe_index(ev.x, stripe, m);
+        parts[s].push((seq as u64, ev, false));
+        homes[s] += 1;
+        if halo > 0 {
+            let x = ev.x as usize;
+            if s > 0 && x < s * stripe + halo {
+                parts[s - 1].push((seq as u64, ev, true));
+            }
+            if s + 1 < m && x + halo >= (s + 1) * stripe {
+                parts[s + 1].push((seq as u64, ev, true));
+            }
+        }
+    }
+    (parts, homes)
+}
+
+impl StageNode {
+    fn process(&mut self, batch: &[Event]) -> Result<Vec<Event>> {
+        self.events_in += batch.len() as u64;
+        self.batches += 1;
+        let out = match &mut self.exec {
+            NodeExec::Serial(stage) => {
+                let mut out = Vec::with_capacity(batch.len());
+                for &ev in batch {
+                    if let Some(next) = stage.apply(ev) {
+                        out.push(next);
+                    }
+                }
+                out
+            }
+            NodeExec::Sharded { stripe, halo, mode, shard_events } => {
+                let m = shard_events.len();
+                let (parts, homes) = route_stripes(batch, *stripe, m, *halo);
+                for (count, home) in shard_events.iter_mut().zip(&homes) {
+                    *count += home;
+                }
+                let outs: Vec<ShardOut> = match mode {
+                    ShardMode::Inline(stages) => stages
+                        .iter_mut()
+                        .zip(parts)
+                        .map(|(stage, part)| apply_shard(stage.as_mut(), part))
+                        .collect(),
+                    ShardMode::Threads(workers) => {
+                        // Scatter to every worker (even empty parts keep
+                        // the gather in lockstep), then gather exactly
+                        // one output per worker.
+                        for (worker, part) in workers.iter_mut().zip(parts) {
+                            match worker.tx.try_send(part) {
+                                Ok(()) => {}
+                                Err(part) => {
+                                    self.backpressure_waits += 1;
+                                    if block_on(worker.tx.send(part)).is_err() {
+                                        bail!("shard worker for {:?} terminated", self.name);
+                                    }
+                                }
+                            }
+                        }
+                        let mut outs = Vec::with_capacity(m);
+                        for worker in workers.iter_mut() {
+                            match block_on(worker.rx.recv()) {
+                                Some(out) => outs.push(out),
+                                None => {
+                                    bail!("shard worker for {:?} terminated", self.name)
+                                }
+                            }
+                        }
+                        outs
+                    }
+                };
+                merge_ordered(outs, |item| item.0).into_iter().map(|(_, ev)| ev).collect()
+            }
+        };
+        self.events_out += out.len() as u64;
+        Ok(out)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        if let NodeExec::Sharded { mode: ShardMode::Threads(workers), .. } = &mut self.exec {
+            for worker in workers.drain(..) {
+                // Dropping both ring ends unblocks a worker parked on
+                // either edge before the join.
+                let ShardWorker { tx, rx, handle } = worker;
+                drop(tx);
+                drop(rx);
+                if handle.join().is_err() {
+                    bail!("shard worker for {:?} panicked", self.name);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl BatchProcessor for StageGraph {
+    fn process_batch(&mut self, batch: &[Event]) -> Result<Vec<Event>> {
+        if self.finished {
+            // Threaded shard workers were joined; running on would
+            // silently emit nothing. Make the misuse loud instead.
+            bail!("stage graph already finished; compile a fresh one per run");
+        }
+        // The first node consumes the borrowed batch directly; each
+        // node materializes one output Vec (the per-node counters and
+        // shard hand-offs need owned batches — the cost of stages
+        // being individually observable nodes).
+        let mut nodes = self.nodes.iter_mut();
+        let Some(first) = nodes.next() else {
+            return Ok(batch.to_vec()); // identity graph
+        };
+        let mut current = first.process(batch)?;
+        for node in nodes {
+            if current.is_empty() {
+                // No events ⇒ no state updates anywhere downstream.
+                break;
+            }
+            current = node.process(&current)?;
+        }
+        Ok(current)
+    }
+
+    fn finish_stages(&mut self) -> Result<()> {
+        self.finished = true;
+        for node in &mut self.nodes {
+            node.shutdown()?;
+        }
+        Ok(())
+    }
+
+    fn stage_reports(&self) -> Vec<NodeReport> {
+        self.nodes
+            .iter()
+            .map(|node| NodeReport {
+                name: node.name.clone(),
+                events: node.events_in,
+                batches: node.batches,
+                backpressure_waits: node.backpressure_waits,
+                dropped: node.events_in - node.events_out,
+                frames: 0,
+                shard_events: match &node.exec {
+                    NodeExec::Serial(_) => Vec::new(),
+                    NodeExec::Sharded { shard_events, .. } => shard_events.clone(),
+                },
+            })
+            .collect()
+    }
+
+    fn describe(&self) -> String {
+        if self.nodes.is_empty() {
+            return "identity".into();
+        }
+        self.nodes
+            .iter()
+            .map(|node| match &node.exec {
+                NodeExec::Serial(_) => node.name.clone(),
+                NodeExec::Sharded { mode, shard_events, .. } => {
+                    let threads = matches!(mode, ShardMode::Threads(_));
+                    format!(
+                        "{}[×{}{}]",
+                        node.name,
+                        shard_events.len(),
+                        if threads { " threads" } else { "" }
+                    )
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+}
+
+impl Drop for StageGraph {
+    fn drop(&mut self) {
+        // Best effort: an explicit finish_stages already drained these.
+        for node in &mut self.nodes {
+            let _ = node.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::Polarity;
+    use crate::pipeline::ops::{BackgroundActivityFilter, PolarityFilter, RefractoryFilter};
+    use crate::pipeline::StageSpec;
+    use crate::testutil::synthetic_events_seeded;
+
+    fn spec_polarity_denoise() -> PipelineSpec {
+        PipelineSpec::new()
+            .then(StageSpec::new(|_| PolarityFilter::keep(Polarity::On)))
+            .then(StageSpec::new(|res: Resolution| BackgroundActivityFilter::new(res, 1000)))
+    }
+
+    #[test]
+    fn stripe_cut_matches_route_policy_math() {
+        assert_eq!(stripe_cut(90, 3), 30);
+        assert_eq!(stripe_cut(91, 3), 31);
+        assert_eq!(stripe_cut(1, 4), 1);
+        assert_eq!(stripe_index(89, 30, 3), 2);
+        assert_eq!(stripe_index(95, 30, 3), 2, "overhang clamps to last stripe");
+    }
+
+    #[test]
+    fn ghost_routing_covers_boundaries_both_ways() {
+        let events = vec![Event::on(31, 0, 1), Event::on(32, 0, 2), Event::on(5, 0, 3)];
+        let (parts, homes) = route_stripes(&events, 32, 2, 1);
+        // x=31: home shard 0, ghost to shard 1 (within halo of boundary).
+        // x=32: home shard 1, ghost to shard 0.
+        // x=5: home shard 0 only.
+        assert_eq!(homes, vec![2, 1]);
+        assert_eq!(parts[0].len(), 3);
+        assert_eq!(parts[1].len(), 2);
+        assert!(parts[1].iter().any(|&(seq, _, ghost)| seq == 0 && ghost));
+        assert!(parts[0].iter().any(|&(seq, _, ghost)| seq == 1 && ghost));
+        assert!(parts[0].iter().all(|&(seq, _, ghost)| !(seq == 2 && ghost)));
+    }
+
+    #[test]
+    fn sharded_graph_matches_serial_pipeline_exactly() {
+        let res = Resolution::new(64, 48);
+        let events = synthetic_events_seeded(4000, 64, 48, 9);
+        let spec = spec_polarity_denoise();
+        let expected = spec.build_pipeline(res).process(&events);
+        for shards in [1usize, 2, 3, 4] {
+            for threads in [false, true] {
+                let opts = StageOptions { shards, shard_threads: threads };
+                let mut graph = StageGraph::compile(&spec, res, &opts);
+                let mut got = Vec::new();
+                for chunk in events.chunks(257) {
+                    got.extend(graph.process_batch(chunk).unwrap());
+                }
+                graph.finish_stages().unwrap();
+                assert_eq!(
+                    got, expected,
+                    "shards={shards} threads={threads}: sharded ≠ serial"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_and_pinned_stages_stay_serial() {
+        struct Opaque;
+        impl EventTransform for Opaque {
+            fn apply(&mut self, ev: Event) -> Option<Event> {
+                Some(ev)
+            }
+            fn describe(&self) -> String {
+                "opaque".into()
+            }
+        }
+        let spec = PipelineSpec::new()
+            .then(StageSpec::new(|_| Opaque))
+            .then(StageSpec::new(|res: Resolution| RefractoryFilter::new(res, 100)).pinned())
+            .then(StageSpec::new(|res: Resolution| RefractoryFilter::new(res, 100)));
+        let graph = StageGraph::compile(
+            &spec,
+            Resolution::new(64, 64),
+            &StageOptions { shards: 4, shard_threads: false },
+        );
+        assert_eq!(graph.node_shards(0), 1, "barrier class");
+        assert_eq!(graph.node_shards(1), 1, "pinned stage");
+        assert_eq!(graph.node_shards(2), 4, "shardable stage");
+        assert!(graph.describe().contains("refractory(100µs)[×4]"));
+    }
+
+    #[test]
+    fn narrow_canvas_clamps_shards_below_halo() {
+        let spec = PipelineSpec::new()
+            .then(StageSpec::new(|res: Resolution| BackgroundActivityFilter::new(res, 500)));
+        // 4-wide canvas, halo 1: 4 shards would give 1-px stripes ≤ halo;
+        // 3 shards cut 2-px stripes, the widest count that clears it.
+        let graph = StageGraph::compile(
+            &spec,
+            Resolution::new(4, 4),
+            &StageOptions { shards: 4, shard_threads: false },
+        );
+        assert_eq!(graph.node_shards(0), 3, "stripes must stay wider than the halo");
+        // A 1-px canvas can never satisfy halo 1: fully serial.
+        let serial = StageGraph::compile(
+            &spec,
+            Resolution::new(1, 1),
+            &StageOptions { shards: 4, shard_threads: false },
+        );
+        assert_eq!(serial.node_shards(0), 1);
+    }
+
+    #[test]
+    fn stage_reports_chain_and_sum() {
+        let res = Resolution::new(64, 48);
+        let events = synthetic_events_seeded(3000, 64, 48, 11);
+        let spec = spec_polarity_denoise();
+        let mut graph =
+            StageGraph::compile(&spec, res, &StageOptions { shards: 3, shard_threads: false });
+        let mut out_total = 0u64;
+        for chunk in events.chunks(500) {
+            out_total += graph.process_batch(chunk).unwrap().len() as u64;
+        }
+        let reports = graph.stage_reports();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].events, 3000, "first stage sees every event");
+        assert_eq!(
+            reports[1].events,
+            reports[0].events - reports[0].dropped,
+            "stage n+1 input = stage n output"
+        );
+        assert_eq!(reports[1].events - reports[1].dropped, out_total);
+        let sharded: u64 = reports[1].shard_events.iter().sum();
+        assert_eq!(sharded, reports[1].events, "home events sum to node input");
+        assert!(reports[1].shard_skew() >= 1.0);
+    }
+
+    #[test]
+    fn finished_graph_rejects_further_batches() {
+        let spec = PipelineSpec::new()
+            .then(StageSpec::new(|res: Resolution| RefractoryFilter::new(res, 50)));
+        let mut graph = StageGraph::compile(
+            &spec,
+            Resolution::new(64, 64),
+            &StageOptions { shards: 2, shard_threads: true },
+        );
+        let events = synthetic_events_seeded(50, 64, 64, 3);
+        graph.process_batch(&events).unwrap();
+        graph.finish_stages().unwrap();
+        let err = graph.process_batch(&events).unwrap_err();
+        assert!(format!("{err}").contains("finished"), "must fail loudly, not drop");
+    }
+
+    #[test]
+    fn worker_threads_join_cleanly_even_without_finish() {
+        let res = Resolution::new(64, 64);
+        let spec = PipelineSpec::new()
+            .then(StageSpec::new(|res: Resolution| RefractoryFilter::new(res, 50)));
+        let mut graph =
+            StageGraph::compile(&spec, res, &StageOptions { shards: 2, shard_threads: true });
+        let events = synthetic_events_seeded(100, 64, 64, 1);
+        graph.process_batch(&events).unwrap();
+        drop(graph); // Drop must join workers without deadlock.
+    }
+}

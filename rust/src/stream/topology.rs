@@ -17,7 +17,7 @@
 //!   [`crate::sync::spsc`]); the merge and the pipeline stay on the
 //!   executor thread, so there is still no per-event lock anywhere.
 //! * **Fan-out** — M sinks each run as their own coroutine behind a
-//!   bounded channel; a router task applies the shared [`Pipeline`] once
+//!   bounded channel; a router task applies the shared stage chain once
 //!   and distributes batches by [`RoutePolicy`] (broadcast, polarity
 //!   split, or vertical region stripes).
 //!
@@ -26,12 +26,27 @@
 //! inline threading). Merge correctness requires each individual source
 //! to be time-ordered (the same precondition as
 //! [`crate::pipeline::fusion::merge_streams`]); the streaming merge
-//! only emits an event once every live source has data buffered, so an
-//! idle live source stalls the merge until its idle timeout — fuse live
-//! sources with explicit geometry and sensible timeouts.
+//! only emits an event once every live source has data buffered. An
+//! idle live source therefore stalls the merge — but only for a
+//! *bounded* time: once its [`IdleBackoff`] escalation runs out the
+//! source is treated as heartbeating (its lane stops blocking the
+//! merge) until data returns, so one quiet UDP sensor cannot freeze
+//! its siblings. Events that arrive behind the merge frontier after a
+//! heartbeat are still delivered — with their timestamps clamped up to
+//! the frontier (watermark semantics), so the merge's output stays
+//! globally monotonic for frame binners — and counted in
+//! [`StreamReport::merge_late_events`]. Inline live sources poll with
+//! *blocking* slices, so even after a heartbeat each merge round can
+//! spend one poll slice on the quiet lane — fuse live sources with
+//! [`ThreadMode::PerSourceThread`] to keep their polls off the merge
+//! thread entirely.
+//!
+//! Between fan-in and fan-out the edge runs any
+//! [`super::BatchProcessor`]: the serial [`crate::pipeline::Pipeline`], or a compiled
+//! [`super::StageGraph`] whose stages execute as sharded topology
+//! nodes.
 
 use std::cell::{Cell, RefCell};
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -41,13 +56,14 @@ use anyhow::{bail, Context as _, Result};
 use crate::aer::{Event, Resolution};
 use crate::metrics::NodeReport;
 use crate::pipeline::fusion::SourceLayout;
-use crate::pipeline::Pipeline;
 use crate::rt::channel::TrySendError;
 use crate::rt::{
     block_on, channel, sync_channel, yield_now, LocalExecutor, Sender, SyncReceiver, SyncSender,
 };
 
+use super::merge::MergeCore;
 use super::sources::grow_resolution;
+use super::stage::{stripe_cut, stripe_index, BatchProcessor};
 use super::{EventSink, EventSource, StreamConfig, StreamDriver, StreamReport};
 
 /// Batches buffered per source-thread channel (in addition to the batch
@@ -153,57 +169,75 @@ impl IdleBackoff {
 
 // ---------------------------------------------------------------- fan-in
 
+/// Empty refills a live source may report before the merge declares it
+/// heartbeating (non-blocking). Matched to the [`IdleBackoff`]
+/// escalation: by this many idle polls the driver's waits have reached
+/// the backoff's sleep cap, i.e. the source had its full bounded grace.
+/// Non-blocking lanes (pump-thread rings) hit this in a few ms.
+pub(crate) const HEARTBEAT_POLLS: u32 = IdleBackoff::YIELDS + 6;
+
+/// Wall-clock grace for lanes whose polls *block* (an inline
+/// [`UdpSource`](super::UdpSource) waits its poll slice — up to tens of
+/// ms — per empty refill, so it would exhaust via its idle timeout
+/// before ever accumulating [`HEARTBEAT_POLLS`]). Whichever bound trips
+/// first breaks the stall.
+pub(crate) const HEARTBEAT_GRACE: Duration = Duration::from_millis(10);
+
+/// Per-source bookkeeping beside the merge lane.
 struct FusedInput<S: EventSource> {
     source: S,
-    /// Decoded-but-unmerged events (at most one batch).
-    carry: VecDeque<Event>,
-    exhausted: bool,
     events: u64,
     batches: u64,
+    /// Consecutive empty refills (live source with nothing pending).
+    idle_polls: u32,
+    /// When the current idle streak started (live sources only).
+    idle_since: Option<Instant>,
+    /// `true` once the source's idle grace ran out: its empty lane no
+    /// longer blocks the merge.
+    heartbeat: bool,
 }
 
-impl<S: EventSource> FusedInput<S> {
-    /// Pull one batch into the carry. `Ok(true)` iff new events arrived;
-    /// `Ok(false)` means end of stream (`exhausted` set) or a live
-    /// source with nothing pending right now.
-    fn refill(&mut self) -> Result<bool> {
-        debug_assert!(self.carry.is_empty());
-        match self.source.next_batch()? {
-            None => {
-                self.exhausted = true;
-                Ok(false)
-            }
-            Some(batch) if batch.is_empty() => Ok(false),
-            Some(batch) => {
-                self.events += batch.len() as u64;
-                self.batches += 1;
-                self.carry.extend(batch);
-                Ok(true)
-            }
-        }
-    }
+/// Outcome of one bounded pull on an input.
+enum Poll {
+    /// New events landed in the lane.
+    Data,
+    /// The source ended (lane exhausted).
+    End,
+    /// Live source, nothing pending right now.
+    Idle,
 }
 
 /// Streaming, timestamp-ordered k-way merge of N [`EventSource`]s — the
 /// incremental lift of [`crate::pipeline::fusion::merge_streams`] /
-/// [`fuse`](crate::pipeline::fusion::fuse).
+/// [`fuse`](crate::pipeline::fusion::fuse), built on the shared
+/// [`MergeCore`].
 ///
 /// Each input keeps a carry buffer of at most one batch; an event is
-/// emitted only when every live input has data buffered, so the output
-/// is globally time-ordered whenever each input is. With a
-/// [`SourceLayout`], events are offset onto the shared canvas as they
-/// are merged (out-of-bounds events are counted, not emitted). A single
-/// input with no layout passes batches through untouched, which is what
-/// makes the single-edge [`super::run`] a zero-cost wrapper.
+/// emitted only when every live *blocking* input has data buffered, so
+/// the output is globally time-ordered whenever each input is. A live
+/// input that stays idle past its bounded grace starts heartbeating:
+/// its empty lane stops blocking (the stall is counted), and any events
+/// it later delivers behind the merge frontier are still emitted —
+/// timestamps clamped to the frontier so the output stays monotonic —
+/// and counted late. With a [`SourceLayout`], events are offset onto the
+/// shared canvas as they are merged (out-of-bounds events are counted,
+/// not emitted). A single input with no layout passes batches through
+/// untouched, which is what makes the single-edge [`super::run`] a
+/// zero-cost wrapper.
 pub struct FusedSource<S: EventSource> {
     inputs: Vec<FusedInput<S>>,
+    core: MergeCore<Event>,
     layout: Option<SourceLayout>,
     chunk: usize,
-    /// Peak events resident across all carry buffers — the merge's
-    /// reorder depth, bounded by `sources × chunk`.
-    peak_buffered: usize,
     /// Events rejected by the layout (outside their source's geometry).
     dropped: u64,
+    /// Highest timestamp emitted so far (the merge frontier).
+    frontier: u64,
+    /// Times an idle live source's lane stopped blocking the merge.
+    stalls_broken: u64,
+    /// Events that arrived behind the frontier after a heartbeat
+    /// override (emitted with clamped timestamps).
+    late_events: u64,
 }
 
 impl<S: EventSource> FusedSource<S> {
@@ -220,28 +254,33 @@ impl<S: EventSource> FusedSource<S> {
                 "layout placements must match source count"
             );
         }
+        let n = sources.len();
         FusedSource {
             inputs: sources
                 .into_iter()
                 .map(|source| FusedInput {
                     source,
-                    carry: VecDeque::new(),
-                    exhausted: false,
                     events: 0,
                     batches: 0,
+                    idle_polls: 0,
+                    idle_since: None,
+                    heartbeat: false,
                 })
                 .collect(),
+            core: MergeCore::new(n),
             layout,
             chunk: chunk.max(1),
-            peak_buffered: 0,
             dropped: 0,
+            frontier: 0,
+            stalls_broken: 0,
+            late_events: 0,
         }
     }
 
     /// Peak events buffered across carry buffers (the merge's memory
     /// high-water mark; 0 for pass-through single-source use).
     pub fn peak_buffered(&self) -> usize {
-        self.peak_buffered
+        self.core.peak_buffered()
     }
 
     /// Events dropped for violating their source's layout geometry
@@ -249,6 +288,19 @@ impl<S: EventSource> FusedSource<S> {
     /// sums what the inputs discarded themselves).
     pub fn layout_dropped(&self) -> u64 {
         self.dropped
+    }
+
+    /// Times an idle live source's bounded grace expired and its lane
+    /// stopped blocking the merge (fan-in stalls broken).
+    pub fn stalls_broken(&self) -> u64 {
+        self.stalls_broken
+    }
+
+    /// Events that arrived behind the merge frontier after a heartbeat
+    /// override and were clamped to it (the order cost of not
+    /// stalling).
+    pub fn late_events(&self) -> u64 {
+        self.late_events
     }
 
     /// Per-source counters for [`StreamReport::sources`].
@@ -262,13 +314,9 @@ impl<S: EventSource> FusedSource<S> {
                 backpressure_waits: 0,
                 dropped: input.source.dropped(),
                 frames: 0,
+                shard_events: Vec::new(),
             })
             .collect()
-    }
-
-    fn note_buffered(&mut self) {
-        let buffered: usize = self.inputs.iter().map(|i| i.carry.len()).sum();
-        self.peak_buffered = self.peak_buffered.max(buffered);
     }
 
     /// Single input, no layout: forward batches untouched.
@@ -286,38 +334,90 @@ impl<S: EventSource> FusedSource<S> {
         }
     }
 
-    fn next_merged(&mut self) -> Result<Option<Vec<Event>>> {
-        // Refill every empty carry — one pull per input per call, so
-        // each call does bounded work even over slow live sources.
-        for input in &mut self.inputs {
-            if !input.exhausted && input.carry.is_empty() {
-                input.refill()?;
+    /// One bounded pull on input `i`, with all heartbeat bookkeeping.
+    fn poll_input(&mut self, i: usize) -> Result<Poll> {
+        debug_assert_eq!(self.core.lane_len(i), 0);
+        let input = &mut self.inputs[i];
+        match input.source.next_batch()? {
+            None => {
+                self.core.exhaust(i);
+                Ok(Poll::End)
             }
-        }
-        if self.inputs.iter().all(|i| i.exhausted && i.carry.is_empty()) {
-            return Ok(None);
-        }
-        if self.inputs.iter().any(|i| !i.exhausted && i.carry.is_empty()) {
-            // A live input has nothing buffered: emitting now could
-            // violate global timestamp order (its next event may be
-            // earlier than every buffered one). Report idle upward.
-            return Ok(Some(Vec::new()));
-        }
-        self.note_buffered();
-        let mut out = Vec::with_capacity(self.chunk);
-        while out.len() < self.chunk {
-            // Min-head scan (k is small); ties break to the lowest
-            // source id, matching `fusion::merge_streams` determinism.
-            let mut best: Option<(u64, usize)> = None;
-            for (i, input) in self.inputs.iter().enumerate() {
-                if let Some(head) = input.carry.front() {
-                    if best.map_or(true, |(t, _)| head.t < t) {
-                        best = Some((head.t, i));
+            Some(batch) if batch.is_empty() => {
+                // Only *live* sources may heartbeat: a finite source's
+                // empty batch is momentary starvation (e.g. a slow pump
+                // thread), and breaking its stall would trade exact
+                // order for nothing.
+                if input.source.is_live() {
+                    input.idle_polls = input.idle_polls.saturating_add(1);
+                    let since = *input.idle_since.get_or_insert_with(Instant::now);
+                    if !input.heartbeat
+                        && (input.idle_polls >= HEARTBEAT_POLLS
+                            || since.elapsed() >= HEARTBEAT_GRACE)
+                    {
+                        // Grace expired (poll-count bound for cheap
+                        // non-blocking lanes, wall-clock bound for
+                        // lanes with blocking polls): stop letting
+                        // this quiet source stall its siblings.
+                        input.heartbeat = true;
+                        self.core.set_blocking(i, false);
+                        self.stalls_broken += 1;
                     }
                 }
+                Ok(Poll::Idle)
             }
-            let Some((_, i)) = best else { break };
-            let ev = self.inputs[i].carry.pop_front().expect("nonempty carry");
+            Some(batch) => {
+                input.events += batch.len() as u64;
+                input.batches += 1;
+                input.idle_polls = 0;
+                input.idle_since = None;
+                if input.heartbeat {
+                    input.heartbeat = false;
+                    self.core.set_blocking(i, true);
+                }
+                self.core.push(i, batch);
+                Ok(Poll::Data)
+            }
+        }
+    }
+
+    fn next_merged(&mut self) -> Result<Option<Vec<Event>>> {
+        // Refill every empty lane — one pull per input per call, so
+        // each call does bounded work even over slow live sources.
+        for i in 0..self.inputs.len() {
+            if !self.core.is_exhausted(i) && self.core.lane_len(i) == 0 {
+                self.poll_input(i)?;
+            }
+        }
+        if self.core.all_done() {
+            return Ok(None);
+        }
+        if self.core.stalled() {
+            // A live, still-blocking input has nothing buffered:
+            // emitting now could violate global timestamp order (its
+            // next event may be earlier than every buffered one).
+            // Report idle upward; the driver waits a bounded amount.
+            return Ok(Some(Vec::new()));
+        }
+        self.core.note_peak();
+        let mut out = Vec::with_capacity(self.chunk);
+        while out.len() < self.chunk {
+            // Ties break to the lowest source id inside the core,
+            // matching `fusion::merge_streams` determinism.
+            let Some((i, mut ev)) = self.core.pop_min(|ev| ev.t) else { break };
+            if ev.t < self.frontier {
+                // Possible only after a heartbeat override let the
+                // merge run ahead of this source. Clamp the straggler
+                // to the frontier (watermark semantics): downstream
+                // consumers — frame binners above all — rely on the
+                // merge's globally monotonic timestamps, so late data
+                // joins the *current* window instead of reopening an
+                // already-emitted one. Counted per event.
+                self.late_events += 1;
+                ev.t = self.frontier;
+            } else {
+                self.frontier = ev.t;
+            }
             match &self.layout {
                 Some(layout) => match layout.place(i, &ev) {
                     Some(placed) => out.push(placed),
@@ -325,14 +425,18 @@ impl<S: EventSource> FusedSource<S> {
                 },
                 None => out.push(ev),
             }
-            let input = &mut self.inputs[i];
-            if input.carry.is_empty() && !input.exhausted {
-                if input.refill()? {
-                    self.note_buffered();
-                } else if !self.inputs[i].exhausted {
-                    // Live source momentarily dry: its future timestamps
-                    // are unknown, so this merge round must stop here.
-                    break;
+            if self.core.lane_len(i) == 0 && !self.core.is_exhausted(i) {
+                match self.poll_input(i)? {
+                    Poll::Data => self.core.note_peak(),
+                    Poll::End => {}
+                    Poll::Idle => {
+                        if !self.inputs[i].heartbeat {
+                            // Live source momentarily dry within its
+                            // grace: its future timestamps are unknown,
+                            // so this merge round must stop here.
+                            break;
+                        }
+                    }
                 }
             }
         }
@@ -396,6 +500,9 @@ struct ChannelSource<'e> {
     err: &'e Mutex<Option<anyhow::Error>>,
     res: Resolution,
     known: bool,
+    /// Liveness of the pumped source: only live lanes may heartbeat
+    /// (an empty ring for a finite source is starvation, not quiet).
+    live: bool,
     name: String,
 }
 
@@ -427,6 +534,10 @@ impl EventSource for ChannelSource<'_> {
 
     fn geometry_known(&self) -> bool {
         self.known
+    }
+
+    fn is_live(&self) -> bool {
+        self.live
     }
 
     fn describe(&self) -> String {
@@ -505,10 +616,12 @@ fn partition(
             vec![on, off]
         }
         RoutePolicy::Stripes => {
-            let stripe = (canvas.width as usize).div_ceil(m).max(1);
+            // Same cut as the sharded stage nodes, so "stripe i" means
+            // the same pixel columns at every layer.
+            let stripe = stripe_cut(canvas.width, m);
             let mut parts = vec![Vec::new(); m];
             for ev in processed {
-                parts[(ev.x as usize / stripe).min(m - 1)].push(ev);
+                parts[stripe_index(ev.x, stripe, m)].push(ev);
             }
             parts
         }
@@ -522,14 +635,56 @@ fn partition(
 /// Shared by the library driver and the coordinator (which needs the
 /// canvas before the run to size its sinks).
 pub fn default_layout(resolutions: &[Resolution]) -> Result<SourceLayout> {
-    let total_width: u32 = resolutions.iter().map(|r| u32::from(r.width)).sum();
-    if total_width > u32::from(u16::MAX) {
-        bail!(
-            "fused side-by-side canvas width {total_width} exceeds the \
-             u16 address space"
-        );
+    let layout = SourceLayout::side_by_side(resolutions);
+    validate_layout(&layout)?;
+    Ok(layout)
+}
+
+/// Hard-error check for a saturating layout: every placement must fit
+/// its canvas in true (u32) arithmetic. The `SourceLayout` constructors
+/// saturate at the u16 address space, so any clamped offset or canvas
+/// shows up here as a placement spilling past the canvas — the check is
+/// against the layout the merge will actually use, so validator and
+/// layout math can never drift apart.
+fn validate_layout(layout: &SourceLayout) -> Result<()> {
+    for (i, p) in layout.placements.iter().enumerate() {
+        if u32::from(p.x_offset) + u32::from(p.resolution.width)
+            > u32::from(layout.canvas.width)
+            || u32::from(p.y_offset) + u32::from(p.resolution.height)
+                > u32::from(layout.canvas.height)
+        {
+            bail!(
+                "source {i} at offset {},{} with geometry {}x{} exceeds the \
+                 u16 address space (canvas {}x{})",
+                p.x_offset,
+                p.y_offset,
+                p.resolution.width,
+                p.resolution.height,
+                layout.canvas.width,
+                layout.canvas.height
+            );
+        }
     }
-    Ok(SourceLayout::side_by_side(resolutions))
+    Ok(())
+}
+
+/// Build a validated near-square grid layout (row-major cells sized to
+/// the largest source).
+pub fn grid_layout(resolutions: &[Resolution]) -> Result<SourceLayout> {
+    let layout = SourceLayout::grid(resolutions);
+    validate_layout(&layout)?;
+    Ok(layout)
+}
+
+/// Build a validated layout from explicit per-source canvas offsets
+/// (sources without a declared offset sit at the origin).
+pub fn explicit_layout(
+    resolutions: &[Resolution],
+    offsets: &[(u16, u16)],
+) -> Result<SourceLayout> {
+    let layout = SourceLayout::at_offsets(resolutions, offsets);
+    validate_layout(&layout)?;
+    Ok(layout)
 }
 
 /// Counters produced by one edge drive, merged into [`StreamReport`].
@@ -548,11 +703,13 @@ struct DriveOutcome {
 ///
 /// Sources fan in through the streaming timestamp-ordered merge
 /// (`layout` defaults to [`SourceLayout::side_by_side`] when several
-/// sources are given), flow through the shared `pipeline` once, and fan
-/// out per `config.route`. Memory stays O(chunk × (sources + sinks)).
-pub fn run_topology<S: EventSource, K: EventSink>(
+/// sources are given), flow through the shared stage processor once —
+/// a serial [`crate::pipeline::Pipeline`] or a sharded
+/// [`super::StageGraph`] — and fan out per `config.route`. Memory
+/// stays O(chunk × (sources + shards + sinks)).
+pub fn run_topology<S: EventSource, P: BatchProcessor, K: EventSink>(
     sources: Vec<S>,
-    pipeline: &mut Pipeline,
+    pipeline: &mut P,
     mut sinks: Vec<K>,
     layout: Option<SourceLayout>,
     config: &TopologyConfig,
@@ -614,9 +771,9 @@ pub fn run_topology<S: EventSource, K: EventSink>(
 
 /// Per-source-thread variant: pin each source to its own OS thread and
 /// merge their rings on the executor thread.
-fn run_threaded<S: EventSource, K: EventSink>(
+fn run_threaded<S: EventSource, P: BatchProcessor, K: EventSink>(
     sources: Vec<S>,
-    pipeline: &mut Pipeline,
+    pipeline: &mut P,
     sinks: &mut Vec<K>,
     layout: Option<SourceLayout>,
     config: &TopologyConfig,
@@ -631,11 +788,12 @@ fn run_threaded<S: EventSource, K: EventSink>(
         for (i, source) in sources.into_iter().enumerate() {
             let res = source.resolution();
             let known = source.geometry_known();
+            let live = source.is_live();
             let name = source.describe();
             let (tx, rx) = sync_channel::<Vec<Event>>(PUMP_QUEUE_BATCHES);
             let (err, waits, drops) = (&pump_errs[i], &pump_waits[i], &pump_drops[i]);
             scope.spawn(move || pump(source, tx, err, waits, drops));
-            taps.push(ChannelSource { rx, err, res, known, name });
+            taps.push(ChannelSource { rx, err, res, known, live, name });
         }
         let mut merged = FusedSource::new(taps, layout, config.chunk_size);
         drive_and_report(&mut merged, pipeline, sinks, config, t0)
@@ -660,9 +818,9 @@ fn run_threaded<S: EventSource, K: EventSink>(
 
 /// Drive the merged edge with the configured driver, then flush sinks
 /// and assemble the report.
-fn drive_and_report<S: EventSource, K: EventSink>(
+fn drive_and_report<S: EventSource, P: BatchProcessor, K: EventSink>(
     merged: &mut FusedSource<S>,
-    pipeline: &mut Pipeline,
+    pipeline: &mut P,
     sinks: &mut [K],
     config: &TopologyConfig,
     t0: Instant,
@@ -679,6 +837,8 @@ fn drive_and_report<S: EventSource, K: EventSink>(
             }
         }
     };
+    // Join any shard workers before reading their counters.
+    pipeline.finish_stages().context("stage shutdown")?;
     let final_res = merged.resolution();
     for sink in sinks.iter_mut() {
         sink.observe_geometry(final_res);
@@ -695,6 +855,7 @@ fn drive_and_report<S: EventSource, K: EventSink>(
             backpressure_waits: outcome.per_sink_waits[i],
             dropped: 0,
             frames: summary.frames,
+            shard_events: Vec::new(),
         });
     }
     Ok(StreamReport {
@@ -707,16 +868,19 @@ fn drive_and_report<S: EventSource, K: EventSink>(
         wall: t0.elapsed(),
         resolution: final_res,
         sources: merged.node_reports(),
+        stages: pipeline.stage_reports(),
         sinks: sink_reports,
         merge_peak_buffered: merged.peak_buffered(),
         merge_dropped: merged.layout_dropped(),
+        merge_stalls_broken: merged.stalls_broken(),
+        merge_late_events: merged.late_events(),
     })
 }
 
 /// Baseline driver: one loop, no overlap, any fan-out width.
-fn drive_sync<S: EventSource, K: EventSink>(
+fn drive_sync<S: EventSource, P: BatchProcessor, K: EventSink>(
     source: &mut FusedSource<S>,
-    pipeline: &mut Pipeline,
+    pipeline: &mut P,
     sinks: &mut [K],
     route: &RoutePolicy,
     canvas: Resolution,
@@ -742,7 +906,7 @@ fn drive_sync<S: EventSource, K: EventSink>(
         outcome.events_in += batch.len() as u64;
         outcome.batches += 1;
         outcome.peak_in_flight = outcome.peak_in_flight.max(batch.len());
-        let processed = pipeline.process(&batch);
+        let processed = pipeline.process_batch(&batch).context("pipeline stage")?;
         outcome.events_out += processed.len() as u64;
         if m == 1 {
             if !processed.is_empty() {
@@ -845,9 +1009,9 @@ fn spawn_producer<'a, S: EventSource>(
 /// cooperative executor, batches handed through a bounded channel. The
 /// producer suspends the moment the consumer is behind, which is the
 /// backpressure that keeps memory O(chunk) for endless sources.
-fn drive_coro_single<S: EventSource, K: EventSink>(
+fn drive_coro_single<S: EventSource, P: BatchProcessor, K: EventSink>(
     source: &mut FusedSource<S>,
-    pipeline: &mut Pipeline,
+    pipeline: &mut P,
     sink: &mut K,
     channel_capacity: usize,
 ) -> Result<DriveOutcome> {
@@ -855,6 +1019,7 @@ fn drive_coro_single<S: EventSource, K: EventSink>(
     let events_out = Cell::new(0u64);
     let delivered = Cell::new(0u64);
     let source_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
+    let stage_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
     let sink_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
 
     {
@@ -866,13 +1031,19 @@ fn drive_coro_single<S: EventSource, K: EventSink>(
         {
             let (events_out, delivered) = (&events_out, &delivered);
             let in_flight = &gauges.in_flight;
-            let sink_err = &sink_err;
+            let (stage_err, sink_err) = (&stage_err, &sink_err);
             let pipeline = &mut *pipeline;
             let sink = &mut *sink;
             ex.spawn(async move {
                 while let Some(batch) = rx.recv().await {
                     in_flight.set(in_flight.get() - batch.len());
-                    let processed = pipeline.process(&batch);
+                    let processed = match pipeline.process_batch(&batch) {
+                        Ok(processed) => processed,
+                        Err(e) => {
+                            *stage_err.borrow_mut() = Some(e);
+                            break; // dropping `rx` fails producer sends fast
+                        }
+                    };
                     events_out.set(events_out.get() + processed.len() as u64);
                     if !processed.is_empty() {
                         delivered.set(delivered.get() + 1);
@@ -890,6 +1061,9 @@ fn drive_coro_single<S: EventSource, K: EventSink>(
 
     if let Some(e) = source_err.into_inner() {
         return Err(e.context("stream source"));
+    }
+    if let Some(e) = stage_err.into_inner() {
+        return Err(e.context("pipeline stage"));
     }
     if let Some(e) = sink_err.into_inner() {
         return Err(e.context("stream sink"));
@@ -911,9 +1085,9 @@ fn drive_coro_single<S: EventSource, K: EventSink>(
 /// once and distributes per [`RoutePolicy`]; each sink sits behind its
 /// own bounded channel, so a slow sink backpressures the router (and
 /// transitively the producer) without blocking its siblings' queues.
-fn drive_coro_fan<S: EventSource, K: EventSink>(
+fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
     source: &mut FusedSource<S>,
-    pipeline: &mut Pipeline,
+    pipeline: &mut P,
     sinks: &mut [K],
     route: &RoutePolicy,
     canvas: Resolution,
@@ -926,6 +1100,7 @@ fn drive_coro_fan<S: EventSource, K: EventSink>(
     let per_sink_batches: Vec<Cell<u64>> = (0..m).map(|_| Cell::new(0)).collect();
     let per_sink_waits: Vec<Cell<u64>> = (0..m).map(|_| Cell::new(0)).collect();
     let source_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
+    let stage_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
     let sink_errs: Vec<RefCell<Option<anyhow::Error>>> =
         (0..m).map(|_| RefCell::new(None)).collect();
 
@@ -956,13 +1131,20 @@ fn drive_coro_fan<S: EventSource, K: EventSink>(
             let per_sink_events = &per_sink_events;
             let per_sink_batches = &per_sink_batches;
             let per_sink_waits = &per_sink_waits;
+            let stage_err = &stage_err;
             let pipeline = &mut *pipeline;
             let route = *route;
             ex.spawn(async move {
                 let txs = sink_txs;
                 'route: while let Some(batch) = rx.recv().await {
                     in_flight.set(in_flight.get() - batch.len());
-                    let processed = pipeline.process(&batch);
+                    let processed = match pipeline.process_batch(&batch) {
+                        Ok(processed) => processed,
+                        Err(e) => {
+                            *stage_err.borrow_mut() = Some(e);
+                            break 'route; // dropping `rx` stops the producer
+                        }
+                    };
                     events_out.set(events_out.get() + processed.len() as u64);
                     if processed.is_empty() {
                         continue;
@@ -1003,6 +1185,9 @@ fn drive_coro_fan<S: EventSource, K: EventSink>(
     if let Some(e) = source_err.into_inner() {
         return Err(e.context("stream source"));
     }
+    if let Some(e) = stage_err.into_inner() {
+        return Err(e.context("pipeline stage"));
+    }
     for err in sink_errs {
         if let Some(e) = err.into_inner() {
             return Err(e.context("stream sink"));
@@ -1024,7 +1209,7 @@ fn drive_coro_fan<S: EventSource, K: EventSink>(
 mod tests {
     use super::*;
     use crate::aer::validate_stream;
-    use crate::pipeline::fusion;
+    use crate::pipeline::{fusion, Pipeline};
     use crate::stream::{MemorySource, NullSink};
     use crate::testutil::synthetic_events_seeded;
 
@@ -1215,6 +1400,173 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err:?}").contains("sensor unplugged"));
+    }
+
+    /// A live source: a few events, then a stretch of "nothing pending"
+    /// empty batches, then (optionally) more events, then EOF.
+    struct Intermittent {
+        phases: Vec<IntermittentPhase>,
+        at: usize,
+    }
+    enum IntermittentPhase {
+        Events(Vec<Event>),
+        IdlePolls(u32),
+    }
+    impl Intermittent {
+        fn new(phases: Vec<IntermittentPhase>) -> Self {
+            Intermittent { phases, at: 0 }
+        }
+    }
+    impl EventSource for Intermittent {
+        fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
+            loop {
+                match self.phases.first_mut() {
+                    None => return Ok(None),
+                    Some(IntermittentPhase::Events(events)) => {
+                        if self.at >= events.len() {
+                            self.phases.remove(0);
+                            self.at = 0;
+                            continue;
+                        }
+                        let batch = events[self.at..].to_vec();
+                        self.at = events.len();
+                        return Ok(Some(batch));
+                    }
+                    Some(IntermittentPhase::IdlePolls(left)) => {
+                        if *left == 0 {
+                            self.phases.remove(0);
+                            continue;
+                        }
+                        *left -= 1;
+                        return Ok(Some(Vec::new()));
+                    }
+                }
+            }
+        }
+        fn resolution(&self) -> Resolution {
+            Resolution::new(64, 64)
+        }
+        fn geometry_known(&self) -> bool {
+            true
+        }
+        fn is_live(&self) -> bool {
+            true // empty batches mean "quiet wire", so heartbeats apply
+        }
+        fn describe(&self) -> String {
+            "intermittent".into()
+        }
+    }
+
+    /// One fused lane for the heartbeat tests: a finite in-memory
+    /// source or a quiet-then-bursty live one.
+    enum Lane {
+        Mem(MemorySource),
+        Quiet(Intermittent),
+    }
+    impl EventSource for Lane {
+        fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
+            match self {
+                Lane::Mem(s) => s.next_batch(),
+                Lane::Quiet(s) => s.next_batch(),
+            }
+        }
+        fn resolution(&self) -> Resolution {
+            match self {
+                Lane::Mem(s) => s.resolution(),
+                Lane::Quiet(s) => s.resolution(),
+            }
+        }
+        fn is_live(&self) -> bool {
+            matches!(self, Lane::Quiet(_))
+        }
+    }
+
+    #[test]
+    fn heartbeat_breaks_fan_in_stall_of_idle_live_source() {
+        // Source A delivers everything immediately; source B goes quiet
+        // long past the heartbeat grace before EOF. Without heartbeats
+        // the merge would emit nothing until B ends; with them, A's
+        // events flow while B idles, and the stall is counted.
+        let a = synthetic_events_seeded(500, 64, 64, 41);
+        let quiet = Intermittent::new(vec![
+            IntermittentPhase::Events(vec![Event::on(1, 1, 5)]),
+            IntermittentPhase::IdlePolls(HEARTBEAT_POLLS * 3),
+        ]);
+        let res = Resolution::new(64, 64);
+        let layout = SourceLayout::side_by_side(&[res, res]);
+
+        let sources = vec![Lane::Mem(MemorySource::new(a, res, 64)), Lane::Quiet(quiet)];
+        let mut fused = FusedSource::new(sources, Some(layout), 64);
+        let mut got = Vec::new();
+        let mut polls = 0u32;
+        loop {
+            match fused.next_batch().unwrap() {
+                None => break,
+                Some(batch) => got.extend(batch),
+            }
+            polls += 1;
+            assert!(polls < 10_000, "merge failed to progress past the idle source");
+        }
+        assert_eq!(got.len(), 501, "both sources' events must arrive");
+        assert!(fused.stalls_broken() >= 1, "the broken stall must be counted");
+        // B's lone event (t=5) lands before the heartbeat kicks in, so
+        // nothing is late here.
+        assert_eq!(fused.late_events(), 0);
+    }
+
+    #[test]
+    fn late_events_after_heartbeat_are_delivered_and_counted() {
+        // B idles past the grace (frontier advances over A), then wakes
+        // with old timestamps: they must still be delivered, counted.
+        let a: Vec<Event> = (0..200u64).map(|t| Event::on(2, 2, t * 10)).collect();
+        let b_late = vec![Event::on(3, 3, 50), Event::on(3, 3, 60)];
+        let quiet = Intermittent::new(vec![
+            IntermittentPhase::IdlePolls(HEARTBEAT_POLLS * 2),
+            IntermittentPhase::Events(b_late),
+        ]);
+        let res = Resolution::new(64, 64);
+
+        let layout = SourceLayout::overlay(&[res, res]);
+        let sources = vec![Lane::Mem(MemorySource::new(a, res, 16)), Lane::Quiet(quiet)];
+        let mut fused = FusedSource::new(sources, Some(layout), 16);
+        let mut got = Vec::new();
+        let mut polls = 0u32;
+        loop {
+            match fused.next_batch().unwrap() {
+                None => break,
+                Some(batch) => got.extend(batch),
+            }
+            polls += 1;
+            assert!(polls < 10_000, "merge failed to progress");
+        }
+        assert_eq!(got.len(), 202, "late events must not be dropped");
+        assert!(fused.stalls_broken() >= 1);
+        assert!(
+            fused.late_events() >= 1,
+            "events behind the frontier must be counted late"
+        );
+        // Late stragglers are clamped, so the merged stream is still
+        // globally monotonic — the contract frame binners rely on.
+        assert!(
+            got.windows(2).all(|w| w[0].t <= w[1].t),
+            "clamped output must stay time-ordered"
+        );
+    }
+
+    #[test]
+    fn exhausted_sources_never_heartbeat() {
+        let res = Resolution::new(32, 32);
+        let a = synthetic_events_seeded(300, 32, 32, 1);
+        let b = synthetic_events_seeded(300, 32, 32, 2);
+        let layout = SourceLayout::side_by_side(&[res, res]);
+        let mut fused = FusedSource::new(
+            vec![MemorySource::new(a, res, 32), MemorySource::new(b, res, 32)],
+            Some(layout),
+            32,
+        );
+        while let Some(_batch) = fused.next_batch().unwrap() {}
+        assert_eq!(fused.stalls_broken(), 0, "finite sources need no heartbeats");
+        assert_eq!(fused.late_events(), 0);
     }
 
     #[test]

@@ -51,7 +51,7 @@ fn camera_to_file_to_filtered_file() {
 
     // Re-read, keep ON polarity, write CSV.
     let filtered = run_stream(
-        Source::File(raw_path),
+        Source::file(raw_path),
         Pipeline::new().then(ops::PolarityFilter::keep(Polarity::On)),
         Sink::File(on_path.clone(), Format::Text),
     )
@@ -116,15 +116,16 @@ fn cli_parse_and_run_synthetic_to_null() {
     .map(|s| s.to_string())
     .collect();
     match cli::parse(&args).unwrap() {
-        cli::Command::Stream { sources, pipeline, sinks, config, threads, route } => {
+        cli::Command::Stream { inputs, spec, sinks, config, threads, route, .. } => {
             let report = aestream::coordinator::run_topology(
-                sources,
-                pipeline,
+                inputs,
+                spec,
                 sinks,
                 aestream::coordinator::TopologyOptions {
                     config,
                     source_threads: threads > 1,
                     route,
+                    ..Default::default()
                 },
             )
             .unwrap();

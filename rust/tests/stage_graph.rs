@@ -1,0 +1,268 @@
+//! Sharded stage-graph acceptance: for **every registered op**, the
+//! stripes-shard → stage → re-merge path is event-for-event identical
+//! (order, payload, counters) to the serial `Pipeline` across chunk
+//! sizes 1–7 and shard counts 1–4, and per-stage `NodeReport` counters
+//! sum to the edge totals.
+
+use anyhow::Result;
+
+use aestream::aer::{Event, Resolution};
+use aestream::pipeline::{registry, PipelineSpec, StageSpec, TransformClass};
+use aestream::stream::{
+    run_topology, BatchProcessor, EventSink, MemorySource, SinkSummary, StageGraph,
+    StageOptions, StreamDriver, TopologyConfig,
+};
+use aestream::testutil::prop::check;
+use aestream::testutil::{synthetic_events_seeded, SplitMix64};
+
+/// Sink that records every delivered event, in order.
+#[derive(Default)]
+struct CollectSink {
+    events: Vec<Event>,
+}
+
+impl EventSink for CollectSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        self.events.extend_from_slice(batch);
+        Ok(())
+    }
+    fn finish(&mut self) -> Result<SinkSummary> {
+        Ok(SinkSummary::default())
+    }
+    fn describe(&self) -> String {
+        "collect".into()
+    }
+}
+
+/// Random individually-time-ordered stream on a random small geometry.
+fn gen_stream(rng: &mut SplitMix64) -> (Vec<Event>, Resolution) {
+    let width = 8 + (rng.next_u64() % 56) as u16;
+    let height = 8 + (rng.next_u64() % 56) as u16;
+    let n = (rng.next_u64() % 400) as usize;
+    let mut t = 0u64;
+    let events = (0..n)
+        .map(|_| {
+            t += rng.next_u64() % 5;
+            Event {
+                t,
+                x: (rng.next_u64() % width as u64) as u16,
+                y: (rng.next_u64() % height as u64) as u16,
+                p: aestream::aer::Polarity::from_bool(rng.next_u64() & 1 == 1),
+            }
+        })
+        .collect();
+    (events, Resolution::new(width, height))
+}
+
+/// Drive `spec` over `events` through a compiled graph, chunked.
+fn run_graph(
+    spec: &PipelineSpec,
+    events: &[Event],
+    res: Resolution,
+    chunk: usize,
+    opts: &StageOptions,
+) -> (Vec<Event>, Vec<aestream::metrics::NodeReport>) {
+    let mut graph = StageGraph::compile(spec, res, opts);
+    let mut out = Vec::new();
+    for batch in events.chunks(chunk) {
+        out.extend(graph.process_batch(batch).unwrap());
+    }
+    graph.finish_stages().unwrap();
+    let reports = graph.stage_reports();
+    (out, reports)
+}
+
+/// The tentpole acceptance property: every registered op, chunk sizes
+/// 1–7, shard counts 1–4, inline shard workers — sharded ≡ serial.
+#[test]
+fn prop_every_registered_op_shards_identically() {
+    let ops = registry::transform_ops();
+    for op in &ops {
+        check(
+            &format!("sharded ≡ serial for op {}", op.name),
+            24,
+            |rng| {
+                let (events, res) = gen_stream(rng);
+                let chunk = 1 + (rng.next_u64() as usize) % 7;
+                let shards = 1 + (rng.next_u64() as usize) % 4;
+                (events, res, chunk, shards)
+            },
+            |(events, res, chunk, shards)| {
+                let spec = PipelineSpec::new().then((op.example)());
+                let expected = spec.build_pipeline(*res).process(events);
+                let opts = StageOptions { shards: *shards, shard_threads: false };
+                let (got, reports) = run_graph(&spec, events, *res, *chunk, &opts);
+                // Counters: stage input = every event fed; output chain.
+                let counters_ok = reports.len() == 1
+                    && reports[0].events == events.len() as u64
+                    && reports[0].events - reports[0].dropped == got.len() as u64
+                    && (reports[0].shard_events.is_empty()
+                        || reports[0].shard_events.iter().sum::<u64>() == reports[0].events);
+                got == expected && counters_ok
+            },
+        );
+    }
+}
+
+/// Same property through OS-thread shard workers (fewer cases — thread
+/// spawn per case), including the class that needs halo ghosts.
+#[test]
+fn prop_threaded_shards_match_serial() {
+    for name in ["denoise", "refractory", "flip-x"] {
+        let op = registry::transform_ops()
+            .into_iter()
+            .find(|op| op.name == name)
+            .expect("registered op");
+        check(
+            &format!("threaded sharded ≡ serial for op {name}"),
+            6,
+            |rng| {
+                let (events, res) = gen_stream(rng);
+                let chunk = 1 + (rng.next_u64() as usize) % 7;
+                let shards = 2 + (rng.next_u64() as usize) % 3;
+                (events, res, chunk, shards)
+            },
+            |(events, res, chunk, shards)| {
+                let spec = PipelineSpec::new().then((op.example)());
+                let expected = spec.build_pipeline(*res).process(events);
+                let opts = StageOptions { shards: *shards, shard_threads: true };
+                let (got, _) = run_graph(&spec, events, *res, *chunk, &opts);
+                got == expected
+            },
+        );
+    }
+}
+
+/// Multi-stage chains: stages re-route on their *own* input
+/// coordinates, so coordinate-moving stages (flip, downsample,
+/// transpose) compose safely with geometry-keyed state downstream.
+#[test]
+fn prop_full_registered_chain_shards_identically() {
+    check(
+        "sharded ≡ serial for the full registered op chain",
+        24,
+        |rng| {
+            let (events, res) = gen_stream(rng);
+            let chunk = 1 + (rng.next_u64() as usize) % 7;
+            let shards = 1 + (rng.next_u64() as usize) % 4;
+            (events, res, chunk, shards)
+        },
+        |(events, res, chunk, shards)| {
+            let mut spec = PipelineSpec::new();
+            for op in registry::transform_ops() {
+                if op.name == "polarity" || op.name == "crop" {
+                    // Keep enough traffic flowing to exercise state.
+                    continue;
+                }
+                spec.push((op.example)());
+            }
+            let expected = spec.build_pipeline(*res).process(events);
+            let opts = StageOptions { shards: *shards, shard_threads: false };
+            let (got, reports) = run_graph(&spec, events, *res, *chunk, &opts);
+            // The chaining invariant: stage n+1 input = stage n output.
+            let chain_ok = reports.windows(2).all(|w| w[1].events == w[0].events - w[0].dropped)
+                && reports.first().map(|r| r.events) == Some(events.len() as u64);
+            got == expected && chain_ok
+        },
+    );
+}
+
+/// Full-topology acceptance: 2 fused sources → sharded stateful stage →
+/// collect sink, per-stage NodeReports summing to the edge totals, for
+/// both drivers.
+#[test]
+fn topology_stage_reports_sum_to_edge_totals() {
+    let res = Resolution::new(64, 64);
+    let a = synthetic_events_seeded(5000, 64, 64, 31);
+    let b = synthetic_events_seeded(5000, 64, 64, 32);
+    let canvas = Resolution::new(128, 64);
+
+    for driver in [StreamDriver::Coroutine { channel_capacity: 1 }, StreamDriver::Sync] {
+        let spec = PipelineSpec::new()
+            .then(StageSpec::new(|res: Resolution| {
+                aestream::pipeline::ops::RefractoryFilter::new(res, 50)
+            }))
+            .then(StageSpec::new(|res: Resolution| {
+                aestream::pipeline::ops::BackgroundActivityFilter::new(res, 1000)
+            }));
+        assert_eq!(spec.stages()[1].class(), TransformClass::Stateful { halo: 1 });
+        let mut graph =
+            StageGraph::compile(&spec, canvas, &StageOptions { shards: 4, shard_threads: false });
+        let sources =
+            vec![MemorySource::new(a.clone(), res, 256), MemorySource::new(b.clone(), res, 256)];
+        let config = TopologyConfig { chunk_size: 256, driver, ..Default::default() };
+        let report = run_topology(
+            sources,
+            &mut graph,
+            vec![CollectSink::default()],
+            None,
+            &config,
+        )
+        .unwrap();
+
+        assert_eq!(report.events_in, 10_000);
+        assert_eq!(report.stages.len(), 2, "{driver:?}");
+        // Edge total in = first stage in.
+        assert_eq!(report.stages[0].events, report.events_in, "{driver:?}");
+        // Chain: stage n+1 in = stage n out.
+        assert_eq!(
+            report.stages[1].events,
+            report.stages[0].events - report.stages[0].dropped,
+            "{driver:?}"
+        );
+        // Last stage out = edge total out.
+        assert_eq!(
+            report.stages[1].events - report.stages[1].dropped,
+            report.events_out,
+            "{driver:?}"
+        );
+        // Shard traffic sums to stage traffic.
+        for stage in &report.stages {
+            if !stage.shard_events.is_empty() {
+                assert_eq!(
+                    stage.shard_events.iter().sum::<u64>(),
+                    stage.events,
+                    "{driver:?}"
+                );
+            }
+        }
+
+        // And the whole sharded edge matches the serial reference:
+        // batch-fuse the sources, then run the serial pipeline.
+        let layout = aestream::pipeline::fusion::SourceLayout::side_by_side(&[res, res]);
+        let (fused, _) = aestream::pipeline::fusion::fuse(&[&a, &b], &layout);
+        let expected = spec.build_pipeline(canvas).process(&fused);
+        assert_eq!(report.events_out, expected.len() as u64, "{driver:?}");
+    }
+}
+
+/// Sharding a stage through the whole topology driver returns the exact
+/// serial event stream (payloads included), threaded shards included.
+#[test]
+fn topology_sharded_output_is_byte_identical() {
+    let res = Resolution::new(90, 60);
+    let events = synthetic_events_seeded(20_000, 90, 60, 77);
+    let spec = PipelineSpec::new().then(StageSpec::new(|res: Resolution| {
+        aestream::pipeline::ops::BackgroundActivityFilter::new(res, 500)
+    }));
+    let expected = spec.build_pipeline(res).process(&events);
+
+    for shard_threads in [false, true] {
+        let mut graph = StageGraph::compile(
+            &spec,
+            res,
+            &StageOptions { shards: 3, shard_threads },
+        );
+        let config = TopologyConfig { chunk_size: 512, ..Default::default() };
+        let mut sink = CollectSink::default();
+        run_topology(
+            vec![MemorySource::new(events.clone(), res, 512)],
+            &mut graph,
+            vec![&mut sink],
+            None,
+            &config,
+        )
+        .unwrap();
+        assert_eq!(sink.events, expected, "shard_threads={shard_threads}");
+    }
+}

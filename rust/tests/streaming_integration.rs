@@ -133,15 +133,16 @@ fn cli_stream_runs_end_to_end_on_both_drivers() {
         args.extend_from_slice(extra);
         let args: Vec<String> = args.iter().map(|s| s.to_string()).collect();
         match cli::parse(&args).unwrap() {
-            cli::Command::Stream { sources, pipeline, sinks, config, threads, route } => {
+            cli::Command::Stream { inputs, spec, sinks, config, threads, route, .. } => {
                 let report = aestream::coordinator::run_topology(
-                    sources,
-                    pipeline,
+                    inputs,
+                    spec,
                     sinks,
                     aestream::coordinator::TopologyOptions {
                         config,
                         source_threads: threads > 1,
                         route,
+                        ..Default::default()
                     },
                 )
                 .unwrap();
@@ -170,7 +171,7 @@ fn file_pipeline_file_streams_without_materializing() {
     .unwrap();
 
     let report = run_stream_with(
-        Source::File(input),
+        Source::file(input),
         Pipeline::new().then(ops::PolarityFilter::keep(Polarity::On)),
         Sink::File(output.clone(), aestream::formats::Format::Text),
         StreamConfig { chunk_size: 512, ..Default::default() },

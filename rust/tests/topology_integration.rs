@@ -8,7 +8,7 @@ use aestream::aer::{validate_stream, Event, Resolution};
 use aestream::cli;
 use aestream::coordinator::{self, TopologyOptions};
 use aestream::pipeline::fusion::{self, SourceLayout};
-use aestream::pipeline::Pipeline;
+use aestream::pipeline::{Pipeline, PipelineSpec};
 use aestream::stream::{
     run_topology, EventSink, EventSource, FusedSource, MemorySource, RoutePolicy, SinkSummary,
     StreamConfig, StreamDriver, ThreadMode, TopologyConfig,
@@ -199,15 +199,20 @@ fn acceptance_cli_two_inputs_two_outputs_two_threads() {
     .collect();
 
     let report = match cli::parse(&args).unwrap() {
-        cli::Command::Stream { sources, pipeline, sinks, config, threads, route } => {
-            assert_eq!(sources.len(), 2);
+        cli::Command::Stream { inputs, spec, sinks, config, threads, route, .. } => {
+            assert_eq!(inputs.len(), 2);
             assert_eq!(sinks.len(), 2);
             assert_eq!(threads, 2);
             coordinator::run_topology(
-                sources,
-                pipeline,
+                inputs,
+                spec,
                 sinks,
-                TopologyOptions { config, source_threads: threads > 1, route },
+                TopologyOptions {
+                    config,
+                    source_threads: threads > 1,
+                    route,
+                    ..Default::default()
+                },
             )
             .unwrap()
         }
@@ -238,13 +243,13 @@ fn sync_topology_polarity_split_partitions() {
     let events = aestream::testutil::synthetic_events(10_000, 64, 64);
     let on = events.iter().filter(|e| e.p.is_on()).count() as u64;
     let report = coordinator::run_topology(
-        vec![coordinator::Source::Memory(events, Resolution::new(64, 64))],
-        Pipeline::new(),
+        vec![coordinator::Source::Memory(events, Resolution::new(64, 64)).into()],
+        PipelineSpec::new(),
         vec![coordinator::Sink::Null, coordinator::Sink::Null],
         TopologyOptions {
             config: StreamConfig::sync(),
-            source_threads: false,
             route: RoutePolicy::Polarity,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -273,8 +278,8 @@ fn two_file_sources_fuse_side_by_side() {
     }
 
     let report = coordinator::run_topology(
-        vec![coordinator::Source::File(left), coordinator::Source::File(right)],
-        Pipeline::new(),
+        vec![coordinator::Source::file(left).into(), coordinator::Source::file(right).into()],
+        PipelineSpec::new(),
         vec![coordinator::Sink::Null],
         TopologyOptions::default(),
     )
@@ -284,5 +289,58 @@ fn two_file_sources_fuse_side_by_side() {
     assert_eq!(report.sources[0].events, 3000);
     assert_eq!(report.sources[1].events, 2000);
     assert_eq!(report.merge_dropped, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Headerless recordings (text format records no geometry) are barred
+/// from fusion *unless* the operator declares their geometry — and the
+/// declaration claims exact extents, so the fused canvas is exact.
+#[test]
+fn headerless_recordings_fuse_with_declared_geometry() {
+    let dir = std::env::temp_dir().join(format!("aestream-headerless-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let left = dir.join("left.csv");
+    let right = dir.join("right.csv");
+    let a = aestream::testutil::synthetic_events_seeded(1500, 64, 64, 21);
+    let b = aestream::testutil::synthetic_events_seeded(1500, 64, 64, 22);
+    for (path, events) in [(&left, &a), (&right, &b)] {
+        coordinator::run_stream(
+            coordinator::Source::Memory(events.clone(), Resolution::new(64, 64)),
+            Pipeline::new(),
+            coordinator::Sink::File(path.clone(), aestream::formats::Format::Text),
+        )
+        .unwrap();
+    }
+
+    // Undeclared: rejected with the actionable hint.
+    let err = coordinator::run_topology(
+        vec![
+            coordinator::Source::file(left.clone()).into(),
+            coordinator::Source::file(right.clone()).into(),
+        ],
+        PipelineSpec::new(),
+        vec![coordinator::Sink::Null],
+        TopologyOptions::default(),
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("--geometry"));
+
+    // Declared: fuses side by side on the exact declared canvas.
+    let geom = Some(Resolution::new(64, 64));
+    let report = coordinator::run_topology(
+        vec![
+            coordinator::Source::File { path: left, geometry: geom }.into(),
+            coordinator::Source::File { path: right, geometry: geom }.into(),
+        ],
+        PipelineSpec::new(),
+        vec![coordinator::Sink::Null],
+        TopologyOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(report.events_in, 3000);
+    assert_eq!(report.resolution, Resolution::new(128, 64));
+    assert_eq!(report.merge_dropped, 0);
+    let dropped: u64 = report.sources.iter().map(|s| s.dropped).sum();
+    assert_eq!(dropped, 0, "everything fits the declared claim");
     std::fs::remove_dir_all(&dir).ok();
 }
