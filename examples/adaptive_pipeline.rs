@@ -1,0 +1,68 @@
+//! Adaptive runtime on a skewed workload: a synthetic hotspot stream
+//! (90% of events in the left eighth of the canvas) flows through a
+//! refractory stage sharded over four stripe workers. The `skew`
+//! controller samples the live per-shard histograms every 32 batches
+//! and re-cuts the stripe boundaries toward balance; the `chunk`
+//! controller AIMD-tunes the batch size against edge backpressure.
+//! Output is byte-identical to the serial pipeline throughout — only
+//! the work placement changes.
+//!
+//! Run: `cargo run --release --example adaptive_pipeline`
+
+use aestream::aer::Resolution;
+use aestream::coordinator::{
+    run_topology, AdaptiveConfig, ControllerKind, Sink, Source, StreamConfig, TopologyOptions,
+};
+use aestream::pipeline::{ops, PipelineSpec, StageSpec};
+use aestream::testutil::hotspot_events_seeded;
+
+fn main() -> anyhow::Result<()> {
+    let res = Resolution::new(346, 260);
+    let events = hotspot_events_seeded(2_000_000, res.width, res.height, 0xADA);
+
+    let spec = PipelineSpec::new()
+        .then(StageSpec::new(|res: Resolution| ops::RefractoryFilter::new(res, 3)));
+
+    let report = run_topology(
+        vec![Source::Memory(events, res).into()],
+        spec,
+        vec![Sink::Null],
+        TopologyOptions {
+            config: StreamConfig { chunk_size: 4096, ..Default::default() },
+            shards: 4,
+            adaptive: Some(
+                AdaptiveConfig::new(vec![ControllerKind::Skew, ControllerKind::Chunk])
+                    .with_epoch(32),
+            ),
+            ..Default::default()
+        },
+    )?;
+
+    let stage = &report.stages[0];
+    println!(
+        "processed {} events in {:?} — final shard skew {:.2} over {} shards \
+         (1.0 = balanced; the static uniform cut sits near 3.6 on this stream)",
+        report.events_in,
+        report.wall,
+        stage.shard_skew(),
+        stage.shard_events.len(),
+    );
+    let adaptive = report.adaptive.expect("adaptive history");
+    println!(
+        "adaptive: {} epochs, {} re-cuts, {} chunk changes, final chunk {}",
+        adaptive.epochs,
+        adaptive.recuts.len(),
+        adaptive.chunk_changes.len(),
+        adaptive.final_chunk,
+    );
+    for recut in &adaptive.recuts {
+        println!(
+            "  epoch {:>3}: stage {} skew {:.2} → {:.2}, stripes end at {:?}",
+            recut.epoch, recut.stage, recut.skew_before, recut.skew_after, recut.bounds,
+        );
+    }
+    for change in &adaptive.chunk_changes {
+        println!("  epoch {:>3}: chunk {} → {}", change.epoch, change.from, change.to);
+    }
+    Ok(())
+}

@@ -33,10 +33,11 @@ use anyhow::{bail, Context, Result};
 use crate::aer::{Polarity, Resolution};
 use crate::camera::CameraConfig;
 use crate::coordinator::stream::{
-    FusionLayout, Input, RoutePolicy, Sink, Source, StreamConfig, StreamDriver,
+    AdaptiveConfig, FusionLayout, Input, RoutePolicy, Sink, Source, StreamConfig, StreamDriver,
 };
 use crate::formats::Format;
 use crate::pipeline::{ops, PipelineSpec, StageSpec};
+use crate::stream::adapt::parse_controllers;
 
 /// A parsed CLI invocation.
 pub enum Command {
@@ -63,6 +64,10 @@ pub enum Command {
         shards: usize,
         /// One OS thread per shard worker.
         shard_threads: bool,
+        /// One OS-thread pump per sink (`--sink-threads`).
+        sink_threads: bool,
+        /// Adaptive controllers (`--adaptive skew,chunk --epoch N`).
+        adaptive: Option<AdaptiveConfig>,
     },
     /// Run the four Fig. 4 scenarios.
     Scenarios {
@@ -312,6 +317,9 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
     let mut layout = FusionLayout::default();
     let mut shards = 1usize;
     let mut shard_threads = false;
+    let mut sink_threads = false;
+    let mut controllers = None;
+    let mut epoch_batches: Option<u64> = None;
     while let Some(tok) = toks.next() {
         match tok {
             "--chunk" => {
@@ -359,9 +367,37 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
                 }
             }
             "--shard-threads" => shard_threads = true,
+            "--sink-threads" => sink_threads = true,
+            "--adaptive" => {
+                controllers = Some(parse_controllers(
+                    toks.next().context("--adaptive needs a controller list")?,
+                )?);
+            }
+            "--epoch" => {
+                let n: u64 = toks
+                    .next()
+                    .context("--epoch needs a batch count")?
+                    .parse()
+                    .context("bad --epoch")?;
+                if n == 0 {
+                    bail!("--epoch must be at least 1 batch");
+                }
+                epoch_batches = Some(n);
+            }
             extra => bail!("unexpected trailing argument {extra:?}"),
         }
     }
+    let adaptive = match (controllers, epoch_batches) {
+        (Some(kinds), epoch) => {
+            let mut cfg = AdaptiveConfig::new(kinds);
+            if let Some(epoch) = epoch {
+                cfg = cfg.with_epoch(epoch);
+            }
+            Some(cfg)
+        }
+        (None, Some(_)) => bail!("--epoch needs --adaptive to act on"),
+        (None, None) => None,
+    };
     Ok(Command::Stream {
         inputs,
         spec,
@@ -372,6 +408,8 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
         layout,
         shards,
         shard_threads,
+        sink_threads,
+        adaptive,
     })
 }
 
@@ -444,7 +482,8 @@ USAGE:
            [--chunk EVENTS] [--sync] [--threads N]
            [--route broadcast|polarity|stripes]
            [--layout side-by-side|grid|overlay]
-           [--shards N] [--shard-threads]
+           [--shards N] [--shard-threads] [--sink-threads]
+           [--adaptive skew,chunk] [--epoch BATCHES]
   aestream scenarios [--duration D] [--time-scale X]
   aestream table1
   aestream help
@@ -466,9 +505,19 @@ Filters build for the geometry the *opened* inputs report (fused
 canvas included). --shards N runs every shardable filter as N
 stripe-shard nodes re-merged in order (append @serial to a filter to
 pin it to one node); --shard-threads gives each shard its own OS
-thread. An idle live input stalls fusion only for a bounded grace,
-then heartbeats so its siblings keep flowing (stalls are counted in
-the report).
+thread, and --sink-threads gives each output its own pump thread so a
+slow file/UDP sink backpressures through a bounded queue instead of
+stalling the router. An idle live input stalls fusion only for a
+bounded grace, then heartbeats so its siblings keep flowing (stalls
+are counted in the report).
+
+--adaptive turns on the epoch-based adaptive runtime: every --epoch
+batches (default 32) the driver samples live per-node counters and the
+named controllers act — `skew` re-cuts shard stripe boundaries from
+the observed per-shard load (stateful filters hand per-column state to
+the new owners, so output stays byte-identical to serial), `chunk`
+AIMD-tunes the batch size against edge backpressure. The report lists
+every epoch, re-cut (skew before/after), and chunk change.
 
 EXAMPLES (paper Fig. 2B and §6 fusion):
   aestream input file recording.aedat output udp 10.0.0.1:3333
@@ -478,6 +527,9 @@ EXAMPLES (paper Fig. 2B and §6 fusion):
   aestream input file a.raw --geometry 346x260 --offset 0,0 \\
            input file b.raw --geometry 346x260 --offset 0,260 \\
            filter denoise 1000 output file fused.aedat --shards 4
+  aestream input udp 0.0.0.0:3333 --geometry 346x260 \\
+           filter denoise 1000 output file out.aedat \\
+           --shards 4 --adaptive skew,chunk --epoch 64 --sink-threads
 ";
 
 #[cfg(test)]
@@ -599,6 +651,60 @@ mod tests {
             }
             _ => panic!("wrong parse"),
         }
+    }
+
+    #[test]
+    fn parses_adaptive_flags() {
+        use crate::stream::ControllerKind;
+        let cmd = parse(&sv(&[
+            "input", "synthetic", "filter", "denoise", "1000", "output", "null", "--shards",
+            "4", "--adaptive", "skew,chunk", "--epoch", "16", "--sink-threads",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { adaptive, sink_threads, shards, .. } => {
+                assert!(sink_threads);
+                assert_eq!(shards, 4);
+                let adaptive = adaptive.expect("--adaptive parsed");
+                assert_eq!(
+                    adaptive.controllers,
+                    vec![ControllerKind::Skew, ControllerKind::Chunk]
+                );
+                assert_eq!(adaptive.epoch_batches, 16);
+            }
+            _ => panic!("wrong parse"),
+        }
+        // Default epoch when only --adaptive is given.
+        match parse(&sv(&["input", "synthetic", "output", "null", "--adaptive", "skew"]))
+            .unwrap()
+        {
+            Command::Stream { adaptive, sink_threads, .. } => {
+                assert!(!sink_threads);
+                let adaptive = adaptive.expect("--adaptive parsed");
+                assert_eq!(adaptive.controllers, vec![ControllerKind::Skew]);
+                assert_eq!(
+                    adaptive.epoch_batches,
+                    crate::stream::adapt::DEFAULT_EPOCH_BATCHES
+                );
+            }
+            _ => panic!("wrong parse"),
+        }
+        // No controllers at all ⇒ no adaptive runtime.
+        match parse(&sv(&["input", "synthetic", "output", "null"])).unwrap() {
+            Command::Stream { adaptive, .. } => assert!(adaptive.is_none()),
+            _ => panic!("wrong parse"),
+        }
+        // Rejections: bad controller, zero epoch, orphan --epoch.
+        assert!(parse(&sv(&[
+            "input", "synthetic", "output", "null", "--adaptive", "psychic",
+        ]))
+        .is_err());
+        assert!(parse(&sv(&[
+            "input", "synthetic", "output", "null", "--adaptive", "skew", "--epoch", "0",
+        ]))
+        .is_err());
+        assert!(parse(&sv(&["input", "synthetic", "output", "null", "--epoch", "8"]))
+            .is_err());
     }
 
     #[test]

@@ -17,6 +17,7 @@ pub use scenarios::{
     ScenarioReport,
 };
 pub use stream::{
-    run_stream, run_stream_with, run_topology, FusionLayout, Input, RoutePolicy, Sink, Source,
-    StreamConfig, StreamDriver, StreamReport, TopologyOptions,
+    run_stream, run_stream_with, run_topology, AdaptiveConfig, AdaptiveReport, ControllerKind,
+    FusionLayout, Input, RoutePolicy, Sink, Source, StreamConfig, StreamDriver, StreamReport,
+    TopologyOptions,
 };

@@ -41,11 +41,12 @@ use crate::pipeline::fusion::SourceLayout;
 use crate::pipeline::{Pipeline, PipelineSpec};
 use crate::stream::{
     self, CameraSource, EventSink, EventSource, FileSink, FileSource, FrameSink, MemorySource,
-    NullSink, StageGraph, StageOptions, StdoutSink, UdpSink, UdpSource, ViewSink,
+    NullSink, StageGraph, StageOptions, StdoutSink, ThreadedSink, UdpSink, UdpSource, ViewSink,
 };
 
 pub use crate::stream::{
-    RoutePolicy, StreamConfig, StreamDriver, StreamReport, ThreadMode, TopologyConfig,
+    AdaptiveConfig, AdaptiveReport, ControllerKind, RoutePolicy, StreamConfig, StreamDriver,
+    StreamReport, ThreadMode, TopologyConfig,
 };
 
 /// Where events come from.
@@ -182,6 +183,13 @@ pub struct TopologyOptions {
     pub shards: usize,
     /// Pin each shard worker to its own OS thread.
     pub shard_threads: bool,
+    /// Pin each sink behind its own OS-thread pump (`--sink-threads`):
+    /// a blocking sink backpressures through its bounded ring instead
+    /// of stalling the fan-out router inline.
+    pub sink_threads: bool,
+    /// Adaptive controllers (`--adaptive skew,chunk --epoch N`); `None`
+    /// keeps the static runtime.
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 impl Default for TopologyOptions {
@@ -193,6 +201,8 @@ impl Default for TopologyOptions {
             layout: FusionLayout::default(),
             shards: 1,
             shard_threads: false,
+            sink_threads: false,
+            adaptive: None,
         }
     }
 }
@@ -261,6 +271,7 @@ fn edge_config(opts: &TopologyOptions) -> TopologyConfig {
             ThreadMode::Inline
         },
         route: opts.route,
+        adaptive: opts.adaptive.clone(),
     }
 }
 
@@ -283,10 +294,18 @@ pub fn run_topology(
         bail!("topology needs at least one output");
     }
     let opened = open_topology(inputs, &opts)?;
-    let sinks: Vec<Box<dyn EventSink>> = sinks
+    let mut sinks: Vec<Box<dyn EventSink>> = sinks
         .into_iter()
         .map(|k| k.into_sink(opened.canvas, opened.geometry_known))
         .collect::<Result<_>>()?;
+    if opts.sink_threads {
+        // Mirror of per-source threads: each sink's blocking I/O moves
+        // onto its own pump, fed through a bounded ring.
+        sinks = sinks
+            .into_iter()
+            .map(|sink| Box::new(ThreadedSink::spawn(sink)) as Box<dyn EventSink>)
+            .collect();
+    }
     let stage_opts =
         StageOptions { shards: opts.shards.max(1), shard_threads: opts.shard_threads };
     let mut graph = StageGraph::compile(&spec, opened.canvas, &stage_opts);
@@ -513,6 +532,62 @@ mod tests {
         assert_eq!(report.resolution, Resolution::new(132, 72));
         assert_eq!(report.events_in, 300);
         assert_eq!(report.merge_dropped, 0);
+    }
+
+    #[test]
+    fn sink_threads_deliver_identically_to_inline_sinks() {
+        let events = synthetic_events(2000, 64, 64);
+        let report = run_topology(
+            vec![Source::Memory(events, Resolution::new(64, 64)).into()],
+            PipelineSpec::new(),
+            vec![Sink::Null, Sink::Null],
+            TopologyOptions { sink_threads: true, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(report.events_in, 2000);
+        assert_eq!(report.sinks.len(), 2);
+        for sink in &report.sinks {
+            assert_eq!(sink.events, 2000, "broadcast through the pump");
+            assert!(sink.name.starts_with("thread("), "got {:?}", sink.name);
+        }
+    }
+
+    #[test]
+    fn adaptive_options_flow_through_and_report_history() {
+        let events = synthetic_events(20_000, 64, 64);
+        let report = run_topology(
+            vec![Source::Memory(events, Resolution::new(64, 64)).into()],
+            PipelineSpec::new(),
+            vec![Sink::Null],
+            TopologyOptions {
+                config: StreamConfig { chunk_size: 512, ..Default::default() },
+                adaptive: Some(
+                    AdaptiveConfig::new(vec![ControllerKind::Chunk]).with_epoch(4),
+                ),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.events_in, 20_000);
+        let adaptive = report.adaptive.expect("adaptive runs must report history");
+        assert!(adaptive.epochs >= 1, "~39 batches over epochs of 4");
+        assert!(
+            !adaptive.chunk_changes.is_empty(),
+            "the AIMD tuner always moves off an unclamped start"
+        );
+        assert_eq!(
+            adaptive.final_chunk,
+            adaptive.chunk_changes.last().unwrap().to,
+            "history and final state agree"
+        );
+        // Static runs keep reporting no history.
+        let untouched = run_stream(
+            Source::Memory(synthetic_events(100, 8, 8), Resolution::new(8, 8)),
+            Pipeline::new(),
+            Sink::Null,
+        )
+        .unwrap();
+        assert!(untouched.adaptive.is_none());
     }
 
     #[test]

@@ -33,7 +33,12 @@
 //!   N sources merged in timestamp order (optionally one OS thread per
 //!   source over the lock-free ring; idle live sources heartbeat after
 //!   a bounded grace instead of stalling the merge), one shared stage
-//!   chain, M routed sinks, with per-node counters in `StreamReport`;
+//!   chain, M routed sinks (optionally one pump thread per sink), with
+//!   per-node counters in `StreamReport`;
+//! * [`stream::adapt`] — the adaptive runtime: controllers sample the
+//!   live telemetry plane ([`metrics::LiveNode`]) every N batches and
+//!   re-cut shard stripe boundaries / re-tune the chunk size at epoch
+//!   barriers, output byte-identical to serial across re-cuts;
 //! * [`engine`] — the Fig. 3 concurrency contenders (sync / threads /
 //!   coroutines / lock-free ring);
 //! * [`rt`] — the hand-rolled cooperative async runtime (coroutines);
@@ -43,7 +48,8 @@
 //! * [`snn`] — pure-Rust LIF + convolution reference edge detector;
 //! * [`coordinator`] — the four-scenario Fig. 4 use-case runner and the
 //!   CLI's free `input → filters → output` composition over [`stream`];
-//! * [`metrics`] — counters, rate meters, timing histograms;
+//! * [`metrics`] — counters, rate meters, timing histograms, and the
+//!   live telemetry plane (`LiveNode`);
 //! * [`bench`] — statistics harness used by `benches/` (no criterion
 //!   offline);
 //! * [`testutil`] — deterministic RNG, generators, mini property harness.

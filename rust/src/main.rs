@@ -30,6 +30,8 @@ fn main() -> Result<()> {
             layout,
             shards,
             shard_threads,
+            sink_threads,
+            adaptive,
         } => {
             let multi = inputs.len() > 1 || sinks.len() > 1;
             let staged = !spec.is_empty() && (shards > 1 || shard_threads);
@@ -44,6 +46,8 @@ fn main() -> Result<()> {
                     layout,
                     shards,
                     shard_threads,
+                    sink_threads,
+                    adaptive,
                 },
             )?;
             eprintln!(
@@ -109,6 +113,29 @@ fn main() -> Result<()> {
                          {} backpressure waits",
                         node.name, node.events, node.batches, node.frames,
                         node.backpressure_waits,
+                    );
+                }
+            }
+            if let Some(adaptive) = &report.adaptive {
+                eprintln!(
+                    "  adaptive: {} epochs, {} re-cuts, {} chunk changes \
+                     (final chunk {})",
+                    adaptive.epochs,
+                    adaptive.recuts.len(),
+                    adaptive.chunk_changes.len(),
+                    adaptive.final_chunk,
+                );
+                for recut in &adaptive.recuts {
+                    eprintln!(
+                        "    epoch {}: re-cut stage {} (skew {:.2} → {:.2}) at {:?}",
+                        recut.epoch, recut.stage, recut.skew_before, recut.skew_after,
+                        recut.bounds,
+                    );
+                }
+                for change in &adaptive.chunk_changes {
+                    eprintln!(
+                        "    epoch {}: chunk {} → {}",
+                        change.epoch, change.from, change.to
                     );
                 }
             }

@@ -1,9 +1,20 @@
-//! Lightweight metrics: counters, rate meters, and timing histograms.
+//! Lightweight metrics: counters, rate meters, timing histograms, and
+//! the live telemetry plane.
 //!
 //! The coordinator and benches report throughput (events/s, frames/s)
 //! and latency distributions; everything here is allocation-free on the
 //! hot path and has no dependencies.
+//!
+//! [`LiveNode`] is the live half: per-node counters as shared atomic
+//! cells that the owning node increments on its hot path while the
+//! topology driver samples them **mid-run** (the adaptive controllers
+//! in [`crate::stream`] re-cut stripes and re-tune chunk sizes from
+//! these samples). The end-of-run [`NodeReport`] is reconstructed from
+//! a final [`LiveNode::sample`], so every counter keeps its historical
+//! meaning.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Per-node counters for one source or sink of a stream topology.
@@ -36,20 +47,158 @@ pub struct NodeReport {
 
 impl NodeReport {
     /// Load imbalance across shards: the busiest shard's event count
-    /// over the mean (1.0 = perfectly balanced; 0.0 when the node is
-    /// unsharded or saw no events). A skew of N on N shards means one
-    /// stripe did all the work — the signal to re-cut stripes or drop
-    /// the shard count.
+    /// over the mean across **all** shards, zero-traffic shards
+    /// included (an idle stripe *is* imbalance). A skew of N on N
+    /// shards means one stripe did all the work — the signal to re-cut
+    /// stripes or drop the shard count.
+    ///
+    /// The value has a **1.0 floor** for every sharded node: the max is
+    /// never below the mean, and a sharded node that saw no events at
+    /// all (e.g. a filter-heavy chain upstream dropped everything)
+    /// reports exactly 1.0 — trivially balanced — instead of a 0/0
+    /// artifact. `0.0` is reserved for unsharded nodes, so the two
+    /// cases stay distinguishable.
     pub fn shard_skew(&self) -> f64 {
         if self.shard_events.is_empty() {
             return 0.0;
         }
-        let total: u64 = self.shard_events.iter().sum();
-        if total == 0 {
-            return 0.0;
+        shard_skew_of(&self.shard_events)
+    }
+}
+
+/// Skew of a per-shard event histogram: max over mean, with the
+/// degenerate all-zero histogram pinned to the 1.0 floor (no traffic is
+/// trivially balanced, not 0/0). Shared by [`NodeReport::shard_skew`]
+/// and the adaptive controllers, which compute skew over per-epoch
+/// histograms before deciding to re-cut.
+pub fn shard_skew_of(shard_events: &[u64]) -> f64 {
+    if shard_events.is_empty() {
+        return 0.0;
+    }
+    let total: u64 = shard_events.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / shard_events.len() as f64;
+    *shard_events.iter().max().expect("nonempty") as f64 / mean
+}
+
+// ------------------------------------------------------ telemetry plane
+
+/// Live per-node counters: the mid-run form of [`NodeReport`].
+///
+/// Scalar counters are atomics — the owning node increments them with
+/// relaxed ordering on its hot path (no allocation, no locks) while the
+/// topology driver samples the plane between batches. The per-shard
+/// histogram sits behind a mutex touched once per *batch* (never per
+/// event): it must be resizable when an epoch re-cut changes the stripe
+/// layout, and it carries a second, per-epoch lane the controllers
+/// drain ([`take_epoch_shards`](LiveNode::take_epoch_shards)) so skew
+/// decisions see recent traffic, not the whole run's average.
+#[derive(Debug)]
+pub struct LiveNode {
+    name: String,
+    events: AtomicU64,
+    batches: AtomicU64,
+    backpressure_waits: AtomicU64,
+    dropped: AtomicU64,
+    shards: Mutex<ShardCells>,
+}
+
+/// Per-shard home-event counts: cumulative since the last re-cut (the
+/// report lane) and since the last controller sample (the epoch lane).
+#[derive(Debug, Default)]
+struct ShardCells {
+    cut: Vec<u64>,
+    epoch: Vec<u64>,
+}
+
+impl LiveNode {
+    /// Fresh plane cell for a node (unsharded until
+    /// [`reset_shards`](LiveNode::reset_shards)).
+    pub fn new(name: impl Into<String>) -> Self {
+        LiveNode {
+            name: name.into(),
+            events: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            backpressure_waits: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            shards: Mutex::new(ShardCells::default()),
         }
-        let mean = total as f64 / self.shard_events.len() as f64;
-        *self.shard_events.iter().max().expect("nonempty") as f64 / mean
+    }
+
+    /// The node's description.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Count `n` events through the node.
+    pub fn add_events(&self, n: u64) {
+        self.events.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count one non-empty batch.
+    pub fn add_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one full-queue suspension writing to this node.
+    pub fn add_backpressure_wait(&self) {
+        self.backpressure_waits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` events the node itself discarded.
+    pub fn add_dropped(&self, n: u64) {
+        self.dropped.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one batch's per-shard home-event counts (both lanes).
+    pub fn record_shards(&self, homes: &[u64]) {
+        let mut cells = self.shards.lock().unwrap();
+        if cells.cut.len() != homes.len() {
+            cells.cut = vec![0; homes.len()];
+            cells.epoch = vec![0; homes.len()];
+        }
+        for (slot, h) in cells.cut.iter_mut().zip(homes) {
+            *slot += h;
+        }
+        for (slot, h) in cells.epoch.iter_mut().zip(homes) {
+            *slot += h;
+        }
+    }
+
+    /// Re-cut: both shard lanes restart at zero over `n` shards, so the
+    /// histogram (and [`NodeReport::shard_events`]) describes traffic
+    /// under the *current* stripe cut only.
+    pub fn reset_shards(&self, n: usize) {
+        let mut cells = self.shards.lock().unwrap();
+        cells.cut = vec![0; n];
+        cells.epoch = vec![0; n];
+    }
+
+    /// Drain the per-epoch shard histogram (controller sampling): the
+    /// counts since the previous drain, under the current cut.
+    pub fn take_epoch_shards(&self) -> Vec<u64> {
+        let mut cells = self.shards.lock().unwrap();
+        let out = cells.epoch.clone();
+        cells.epoch.iter_mut().for_each(|c| *c = 0);
+        out
+    }
+
+    /// Snapshot the cumulative counters as a [`NodeReport`]. Idempotent
+    /// — safe mid-run and for the final report (shard counts cover the
+    /// span since the last re-cut; see
+    /// [`reset_shards`](LiveNode::reset_shards)).
+    pub fn sample(&self) -> NodeReport {
+        NodeReport {
+            name: self.name.clone(),
+            events: self.events.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            backpressure_waits: self.backpressure_waits.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            frames: 0,
+            shard_events: self.shards.lock().unwrap().cut.clone(),
+        }
     }
 }
 
@@ -221,8 +370,53 @@ mod tests {
         assert!((node.shard_skew() - 1.0).abs() < 1e-9, "balanced = 1.0");
         node.shard_events = vec![400, 0, 0, 0];
         assert!((node.shard_skew() - 4.0).abs() < 1e-9, "one hot stripe = N");
-        node.shard_events = vec![0, 0];
-        assert_eq!(node.shard_skew(), 0.0, "no traffic, no skew");
+    }
+
+    /// Regression: a sharded node whose shards all saw zero events
+    /// (a filter-heavy chain upstream dropped everything) must report
+    /// the documented 1.0 floor — trivially balanced — and never a 0/0
+    /// artifact or the unsharded 0.0 sentinel.
+    #[test]
+    fn shard_skew_all_zero_shards_is_the_floor() {
+        let mut node = NodeReport::default();
+        node.shard_events = vec![0, 0, 0];
+        assert_eq!(node.shard_skew(), 1.0, "no traffic is trivially balanced");
+        assert!(node.shard_skew().is_finite());
+        // The free function agrees, and keeps 0.0 for "not sharded".
+        assert_eq!(shard_skew_of(&[0, 0]), 1.0);
+        assert_eq!(shard_skew_of(&[]), 0.0);
+        // The floor holds for every non-degenerate histogram too.
+        for hist in [&[1u64, 0][..], &[3, 3, 3], &[0, 0, 9, 1]] {
+            assert!(shard_skew_of(hist) >= 1.0, "{hist:?}");
+        }
+    }
+
+    #[test]
+    fn live_node_samples_and_epoch_drains() {
+        let node = LiveNode::new("stage");
+        node.add_events(100);
+        node.add_batch();
+        node.add_dropped(25);
+        node.add_backpressure_wait();
+        node.record_shards(&[60, 40]);
+        let report = node.sample();
+        assert_eq!(report.name, "stage");
+        assert_eq!(report.events, 100);
+        assert_eq!(report.batches, 1);
+        assert_eq!(report.dropped, 25);
+        assert_eq!(report.backpressure_waits, 1);
+        assert_eq!(report.shard_events, vec![60, 40]);
+        // The epoch lane drains independently of the cumulative lane.
+        assert_eq!(node.take_epoch_shards(), vec![60, 40]);
+        assert_eq!(node.take_epoch_shards(), vec![0, 0], "drained");
+        node.record_shards(&[1, 2]);
+        assert_eq!(node.sample().shard_events, vec![61, 42], "cumulative survives");
+        assert_eq!(node.take_epoch_shards(), vec![1, 2]);
+        // A re-cut restarts both lanes under the new shard count.
+        node.reset_shards(3);
+        node.record_shards(&[5, 6, 7]);
+        assert_eq!(node.sample().shard_events, vec![5, 6, 7]);
+        assert_eq!(node.take_epoch_shards(), vec![5, 6, 7]);
     }
 
     #[test]

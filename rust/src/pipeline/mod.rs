@@ -42,6 +42,10 @@ use crate::aer::{Event, Resolution};
 ///   spatial support radius (in pixels) the transform reads *around* an
 ///   event, which the router satisfies with ghost events from
 ///   neighbouring stripes (state updates whose outputs are discarded).
+///   Stateful transforms must also implement
+///   [`EventTransform::export_rows`]/[`EventTransform::import_rows`] so
+///   an adaptive re-cut can hand per-column state to the new owner
+///   shard.
 /// * [`Barrier`](TransformClass::Barrier) — order- or stream-global
 ///   (frame binning, fusion): must run on a single node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,6 +99,28 @@ pub trait EventTransform: Send {
     fn class(&self) -> TransformClass {
         TransformClass::Barrier
     }
+
+    /// Export the per-pixel state rows for canvas columns `x0..x1`
+    /// (column-major: for each column, `height` words top to bottom) —
+    /// the hand-off half of an adaptive stripe **re-cut**. When the
+    /// topology re-cuts stripe boundaries mid-run, each column's state
+    /// is exported from its old owner shard and
+    /// [`import_rows`](EventTransform::import_rows)ed into the new one,
+    /// so geometry-keyed state survives the move and the output stays
+    /// byte-identical to the serial pipeline.
+    ///
+    /// Transforms declaring [`TransformClass::Stateful`] **must**
+    /// implement both halves (the registered refractory and denoise
+    /// filters do); stateless transforms are free — the defaults export
+    /// nothing and ignore imports.
+    fn export_rows(&self, _x0: u16, _x1: u16) -> Vec<u64> {
+        Vec::new()
+    }
+
+    /// Import state rows previously produced by
+    /// [`export_rows`](EventTransform::export_rows) for the same column
+    /// span (see there for layout and contract).
+    fn import_rows(&mut self, _x0: u16, _x1: u16, _rows: &[u64]) {}
 }
 
 /// A chain of transforms applied in order, short-circuiting on drop.

@@ -8,6 +8,45 @@ use crate::aer::{Event, Polarity, Resolution};
 use crate::pipeline::{EventTransform, TransformClass};
 
 // ---------------------------------------------------------------------
+// Per-pixel state hand-off (adaptive re-cuts)
+// ---------------------------------------------------------------------
+
+/// Export columns `x0..x1` of a row-major per-pixel state plane as the
+/// column-major rows [`EventTransform::export_rows`] specifies. Columns
+/// past the plane's width are clamped off (events outside the
+/// configured geometry are untracked, so there is nothing to move).
+fn export_state_cols(state: &[u64], res: Resolution, x0: u16, x1: u16) -> Vec<u64> {
+    let (w, h) = (res.width as usize, res.height as usize);
+    let x1 = (x1 as usize).min(w);
+    let x0 = (x0 as usize).min(x1);
+    let mut out = Vec::with_capacity((x1 - x0) * h);
+    for x in x0..x1 {
+        for y in 0..h {
+            out.push(state[y * w + x]);
+        }
+    }
+    out
+}
+
+/// Inverse of [`export_state_cols`]: write rows back into the plane.
+/// Ignores a row count that does not match the clamped span (a foreign
+/// or stale export must never scribble over unrelated pixels).
+fn import_state_cols(state: &mut [u64], res: Resolution, x0: u16, x1: u16, rows: &[u64]) {
+    let (w, h) = (res.width as usize, res.height as usize);
+    let x1 = (x1 as usize).min(w);
+    let x0 = (x0 as usize).min(x1);
+    if rows.len() != (x1 - x0) * h {
+        return;
+    }
+    let mut it = rows.iter();
+    for x in x0..x1 {
+        for y in 0..h {
+            state[y * w + x] = *it.next().expect("length checked");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Polarity filter
 // ---------------------------------------------------------------------
 
@@ -161,6 +200,12 @@ impl EventTransform for RefractoryFilter {
         // pixels outright, no ghosts needed.
         TransformClass::Stateful { halo: 0 }
     }
+    fn export_rows(&self, x0: u16, x1: u16) -> Vec<u64> {
+        export_state_cols(&self.last, self.resolution, x0, x1)
+    }
+    fn import_rows(&mut self, x0: u16, x1: u16, rows: &[u64]) {
+        import_state_cols(&mut self.last, self.resolution, x0, x1, rows);
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -226,6 +271,12 @@ impl EventTransform for BackgroundActivityFilter {
         // Reads the 8-neighbourhood: shard routers must feed each
         // stripe ghost copies of events within 1 px of its boundary.
         TransformClass::Stateful { halo: 1 }
+    }
+    fn export_rows(&self, x0: u16, x1: u16) -> Vec<u64> {
+        export_state_cols(&self.last, self.resolution, x0, x1)
+    }
+    fn import_rows(&mut self, x0: u16, x1: u16, rows: &[u64]) {
+        import_state_cols(&mut self.last, self.resolution, x0, x1, rows);
     }
 }
 
@@ -422,6 +473,50 @@ mod tests {
     fn transpose_swaps() {
         let mut t = Transpose;
         assert_eq!(t.apply(Event::on(3, 9, 7)), Some(Event::on(9, 3, 7)));
+    }
+
+    /// Moving a column's state between instances via export/import must
+    /// reproduce the donor's behaviour exactly — the invariant adaptive
+    /// re-cuts rely on.
+    #[test]
+    fn exported_rows_transplant_refractory_state() {
+        let mut donor = RefractoryFilter::new(RES, 100);
+        assert!(donor.apply(Event::on(5, 5, 1000)).is_some());
+        assert!(donor.apply(Event::on(6, 7, 1010)).is_some());
+        let mut fresh = RefractoryFilter::new(RES, 100);
+        // Without the hand-off, the fresh instance re-admits the repeat.
+        assert!(fresh.apply(Event::on(5, 5, 1050)).is_some());
+        let mut heir = RefractoryFilter::new(RES, 100);
+        heir.import_rows(4, 8, &donor.export_rows(4, 8));
+        assert!(heir.apply(Event::on(5, 5, 1050)).is_none(), "state must move");
+        assert!(heir.apply(Event::on(6, 7, 1050)).is_none(), "all columns in span");
+        assert!(heir.apply(Event::on(5, 5, 1100)).is_some(), "period still elapses");
+    }
+
+    #[test]
+    fn exported_rows_transplant_denoise_state() {
+        let mut donor = BackgroundActivityFilter::new(RES, 1000);
+        assert!(donor.apply(Event::on(10, 10, 100)).is_none()); // seeds support
+        let mut heir = BackgroundActivityFilter::new(RES, 1000);
+        heir.import_rows(10, 11, &donor.export_rows(10, 11));
+        assert!(heir.apply(Event::on(11, 10, 200)).is_some(), "support must move");
+    }
+
+    #[test]
+    fn row_handoff_clamps_and_rejects_mismatches() {
+        let mut f = RefractoryFilter::new(RES, 100);
+        assert!(f.apply(Event::on(63, 0, 50)).is_some());
+        // Span clamped to the canvas: only the last column exports.
+        let rows = f.export_rows(63, 200);
+        assert_eq!(rows.len(), RES.height as usize);
+        // A stateless op exports nothing and ignores imports.
+        let mut p = PolarityFilter::keep(Polarity::On);
+        assert!(p.export_rows(0, 10).is_empty());
+        p.import_rows(0, 10, &rows);
+        // A mismatched row count must not scribble over state.
+        let mut heir = RefractoryFilter::new(RES, 100);
+        heir.import_rows(0, 2, &rows);
+        assert!(heir.apply(Event::on(63, 0, 60)).is_some(), "bad import ignored");
     }
 
     #[test]

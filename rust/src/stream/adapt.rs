@@ -1,0 +1,736 @@
+//! Epoch-based adaptive reconfiguration: controllers over the live
+//! telemetry plane.
+//!
+//! A fixed stripe cut and a fixed chunk size are chosen before the
+//! first event flows — but real event streams are spatially and
+//! temporally bursty, so a hotspot saturates one shard while its
+//! siblings idle (`shard_skew` measures exactly this; until now nothing
+//! acted on it). This module closes the loop:
+//!
+//! * every *epoch* (a configurable number of processed batches) the
+//!   topology driver samples the [`crate::metrics::LiveNode`] plane
+//!   into an [`EpochSample`];
+//! * each configured [`Controller`] inspects the sample and may issue
+//!   [`Reconfigure`] actions — re-cut a sharded stage's stripe
+//!   boundaries, or re-tune the edge chunk size;
+//! * the driver applies them at the epoch barrier (between batches, so
+//!   nothing is in flight), with
+//!   [`StageGraph`](super::StageGraph) handing per-column state to the
+//!   new owner shards via
+//!   [`EventTransform::export_rows`](crate::pipeline::EventTransform::export_rows)
+//!   / `import_rows` — output stays byte-identical to the serial
+//!   pipeline across arbitrarily many re-cuts (property-tested per
+//!   registered op).
+//!
+//! Two built-in controllers ship: [`SkewController`] re-cuts stripes
+//! from the observed per-shard event histogram of the last epoch
+//! (piecewise-uniform density model), and [`ChunkController`] runs AIMD
+//! on the chunk size targeting a backpressure/throughput balance. Both
+//! are deterministic functions of the samples. The applied history
+//! (epochs, re-cuts with skew before/after, chunk changes) is surfaced
+//! in [`StreamReport::adaptive`](super::StreamReport::adaptive).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::metrics::{shard_skew_of, LiveNode};
+
+use super::stage::BatchProcessor;
+
+/// One reconfiguration action a [`Controller`] may request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Reconfigure {
+    /// Replace sharded stage `stage`'s stripe boundaries. `bounds` are
+    /// ascending stripe *end* columns (exclusive), one per shard, the
+    /// last equal to the canvas width; every stripe must stay at least
+    /// `max(halo, 1)` pixels wide so adjacent-stripe ghosting still
+    /// covers every neighbourhood.
+    RecutStripes {
+        /// Stage index (position in the compiled graph).
+        stage: usize,
+        /// New stripe end columns.
+        bounds: Vec<u16>,
+    },
+    /// Retarget the edge chunk size (events per batch). Applied to the
+    /// fan-in merge and forwarded to sources that honour
+    /// [`EventSource::set_chunk_hint`](super::EventSource::set_chunk_hint).
+    ChunkSize(usize),
+}
+
+/// A sharded (or serial) stage node's live handle, surfaced by
+/// [`BatchProcessor::telemetry`] for the driver to sample.
+pub struct StageTelemetry {
+    /// The stage's live counter cell.
+    pub node: Arc<LiveNode>,
+    /// Current stripe end columns (empty for serial nodes).
+    pub bounds: Vec<u16>,
+    /// The stage's declared halo (ghost radius).
+    pub halo: u16,
+}
+
+/// Per-stage slice of an [`EpochSample`].
+#[derive(Debug, Clone)]
+pub struct StageSample {
+    /// Stage index in the compiled graph.
+    pub stage: usize,
+    /// Stage description.
+    pub name: String,
+    /// Home events per shard **during this epoch** (drained from the
+    /// live plane; empty for serial nodes).
+    pub epoch_shard_events: Vec<u64>,
+    /// Stripe end columns in force during the epoch (empty for serial
+    /// nodes).
+    pub bounds: Vec<u16>,
+    /// Declared halo.
+    pub halo: u16,
+}
+
+/// What a [`Controller`] sees at each epoch barrier.
+#[derive(Debug, Clone)]
+pub struct EpochSample {
+    /// Epoch index (0-based).
+    pub epoch: u64,
+    /// Batches processed during this epoch.
+    pub batches: u64,
+    /// Events that entered the edge during this epoch.
+    pub events_in: u64,
+    /// Producer full-queue suspensions during this epoch (the edge
+    /// backpressure gauge).
+    pub backpressure_waits: u64,
+    /// `true` when the driver actually exposes a backpressure gauge
+    /// (the coroutine drivers' bounded edge channel). The sync driver
+    /// has no queue, so its waits are structurally zero — controllers
+    /// keying off backpressure must treat that as "no signal", not
+    /// "no congestion".
+    pub backpressure_gauged: bool,
+    /// Chunk size currently in force.
+    pub chunk_size: usize,
+    /// Per-stage telemetry.
+    pub stages: Vec<StageSample>,
+}
+
+/// An adaptive policy: observes one [`EpochSample`] per epoch and may
+/// request reconfigurations. Controllers run in configuration order;
+/// their actions apply at the same epoch barrier.
+pub trait Controller: Send {
+    /// Inspect the epoch's telemetry; return any reconfigurations.
+    fn observe(&mut self, sample: &EpochSample) -> Vec<Reconfigure>;
+
+    /// Human-readable description (reports, logs).
+    fn describe(&self) -> String;
+}
+
+// ------------------------------------------------------------ controllers
+
+/// Re-cuts a sharded stage's stripes whenever the epoch's shard-event
+/// histogram is skewed past a threshold. The new boundaries equalize
+/// load under a piecewise-uniform density model (events spread evenly
+/// within each old stripe), which converges on stable hotspots in a
+/// few epochs. A cut is only issued when the model predicts an actual
+/// improvement — integer column rounding on very narrow stripes can
+/// otherwise produce a nominally rebalanced cut that the model itself
+/// scores worse, and re-issuing it every epoch would churn workers for
+/// nothing.
+pub struct SkewController {
+    /// Minimum observed epoch skew (max/mean) that triggers a re-cut.
+    threshold: f64,
+}
+
+impl Default for SkewController {
+    fn default() -> Self {
+        SkewController { threshold: 1.25 }
+    }
+}
+
+impl SkewController {
+    /// Controller with an explicit skew threshold (≥ 1).
+    pub fn with_threshold(threshold: f64) -> Self {
+        SkewController { threshold: threshold.max(1.0) }
+    }
+}
+
+impl Controller for SkewController {
+    fn observe(&mut self, sample: &EpochSample) -> Vec<Reconfigure> {
+        let mut out = Vec::new();
+        for stage in &sample.stages {
+            if stage.bounds.len() < 2 {
+                continue;
+            }
+            let skew = shard_skew_of(&stage.epoch_shard_events);
+            if skew < self.threshold {
+                continue;
+            }
+            let min_width = stage.halo.max(1);
+            let bounds =
+                rebalance_bounds(&stage.bounds, &stage.epoch_shard_events, min_width);
+            let predicted = rebin_skew(&stage.bounds, &stage.epoch_shard_events, &bounds);
+            if bounds != stage.bounds && predicted < skew {
+                out.push(Reconfigure::RecutStripes { stage: stage.stage, bounds });
+            }
+        }
+        out
+    }
+
+    fn describe(&self) -> String {
+        format!("skew(threshold {:.2})", self.threshold)
+    }
+}
+
+/// AIMD chunk-size tuner. Backpressure waits on the edge channel mean
+/// the producer keeps suspending on a full queue — the consumer is the
+/// bottleneck and bigger batches only add latency and resident memory,
+/// so the chunk halves (multiplicative decrease). A quiet epoch means
+/// the edge has headroom, so the chunk grows by a fixed step (additive
+/// increase) to amortize per-batch overhead. Clamped to `[min, max]`.
+/// Inert under drivers with no backpressure gauge (the sync loop):
+/// zero waits there mean "no signal", and acting on them would march
+/// the chunk unconditionally to the ceiling.
+pub struct ChunkController {
+    min: usize,
+    max: usize,
+    step: usize,
+    /// Waits-per-batch above which the epoch counts as congested.
+    pressure: f64,
+}
+
+impl Default for ChunkController {
+    fn default() -> Self {
+        ChunkController { min: 256, max: 65_536, step: 512, pressure: 0.5 }
+    }
+}
+
+impl ChunkController {
+    /// Tuner with explicit clamp bounds.
+    pub fn with_bounds(min: usize, max: usize) -> Self {
+        let min = min.max(1);
+        ChunkController { min, max: max.max(min), ..Default::default() }
+    }
+}
+
+impl Controller for ChunkController {
+    fn observe(&mut self, sample: &EpochSample) -> Vec<Reconfigure> {
+        if !sample.backpressure_gauged {
+            return Vec::new();
+        }
+        let waits_per_batch =
+            sample.backpressure_waits as f64 / sample.batches.max(1) as f64;
+        let next = if waits_per_batch > self.pressure {
+            (sample.chunk_size / 2).max(self.min)
+        } else {
+            (sample.chunk_size + self.step).min(self.max)
+        };
+        let next = next.clamp(self.min, self.max);
+        if next == sample.chunk_size {
+            Vec::new()
+        } else {
+            vec![Reconfigure::ChunkSize(next)]
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("chunk(AIMD {}..{})", self.min, self.max)
+    }
+}
+
+// ---------------------------------------------------------- configuration
+
+/// A built-in controller, nameable from the CLI (`--adaptive skew,chunk`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControllerKind {
+    /// [`SkewController`] with defaults.
+    Skew,
+    /// [`ChunkController`] with defaults.
+    Chunk,
+}
+
+impl ControllerKind {
+    /// Instantiate the controller with its default tuning.
+    pub fn build(self) -> Box<dyn Controller> {
+        match self {
+            ControllerKind::Skew => Box::new(SkewController::default()),
+            ControllerKind::Chunk => Box::new(ChunkController::default()),
+        }
+    }
+}
+
+/// Parse a CLI controller list: `"skew"`, `"chunk"`, or `"skew,chunk"`.
+pub fn parse_controllers(s: &str) -> Result<Vec<ControllerKind>> {
+    let mut kinds = Vec::new();
+    for name in s.split(',') {
+        let kind = match name.trim() {
+            "skew" => ControllerKind::Skew,
+            "chunk" => ControllerKind::Chunk,
+            other => bail!("unknown controller {other:?} (skew|chunk)"),
+        };
+        if !kinds.contains(&kind) {
+            kinds.push(kind);
+        }
+    }
+    if kinds.is_empty() {
+        bail!("--adaptive needs at least one controller (skew|chunk)");
+    }
+    Ok(kinds)
+}
+
+/// Declarative adaptive configuration (clonable: lives inside
+/// [`TopologyConfig`](super::TopologyConfig)).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdaptiveConfig {
+    /// Controllers to run, in order.
+    pub controllers: Vec<ControllerKind>,
+    /// Batches per epoch (sampling period).
+    pub epoch_batches: u64,
+}
+
+/// Default batches per epoch for `--adaptive` without `--epoch`.
+pub const DEFAULT_EPOCH_BATCHES: u64 = 32;
+
+impl AdaptiveConfig {
+    /// Config running `controllers` at the default epoch length.
+    pub fn new(controllers: Vec<ControllerKind>) -> Self {
+        AdaptiveConfig { controllers, epoch_batches: DEFAULT_EPOCH_BATCHES }
+    }
+
+    /// Builder-style epoch override.
+    pub fn with_epoch(mut self, epoch_batches: u64) -> Self {
+        self.epoch_batches = epoch_batches.max(1);
+        self
+    }
+
+    /// Instantiate the configured controllers.
+    pub fn build(&self) -> AdaptiveRuntime {
+        AdaptiveRuntime {
+            epoch_batches: self.epoch_batches.max(1),
+            controllers: self.controllers.iter().map(|k| k.build()).collect(),
+        }
+    }
+}
+
+/// Instantiated controllers plus their sampling period — what
+/// [`run_topology_with_adaptive`](super::run_topology_with_adaptive)
+/// consumes. Build one from an [`AdaptiveConfig`], or assemble custom
+/// [`Controller`]s directly (tests force re-cuts this way).
+pub struct AdaptiveRuntime {
+    /// Batches per epoch.
+    pub epoch_batches: u64,
+    /// Controllers, run in order at every epoch barrier.
+    pub controllers: Vec<Box<dyn Controller>>,
+}
+
+// -------------------------------------------------------------- history
+
+/// One applied stripe re-cut.
+#[derive(Debug, Clone)]
+pub struct RecutRecord {
+    /// Epoch at whose barrier the re-cut applied.
+    pub epoch: u64,
+    /// Stage index.
+    pub stage: usize,
+    /// Observed skew of the epoch's shard histogram under the old cut.
+    pub skew_before: f64,
+    /// Predicted skew of the same histogram re-binned under the new cut
+    /// (piecewise-uniform density; the next epoch measures the real
+    /// value).
+    pub skew_after: f64,
+    /// The new stripe end columns.
+    pub bounds: Vec<u16>,
+}
+
+/// One applied chunk-size change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkChange {
+    /// Epoch at whose barrier the change applied.
+    pub epoch: u64,
+    /// Chunk size before.
+    pub from: usize,
+    /// Chunk size after.
+    pub to: usize,
+}
+
+/// Reconfiguration history of one adaptive run, surfaced in
+/// [`StreamReport::adaptive`](super::StreamReport::adaptive).
+#[derive(Debug, Clone, Default)]
+pub struct AdaptiveReport {
+    /// Completed epochs (controller sampling rounds).
+    pub epochs: u64,
+    /// Applied stripe re-cuts, in order.
+    pub recuts: Vec<RecutRecord>,
+    /// Applied chunk-size changes, in order.
+    pub chunk_changes: Vec<ChunkChange>,
+    /// Chunk size in force when the stream ended.
+    pub final_chunk: usize,
+}
+
+// -------------------------------------------------------------- adaptor
+
+/// Driver-side epoch loop: counts batches, samples the plane at every
+/// epoch barrier, runs the controllers, applies their actions, and
+/// keeps the history. One per adaptive run, owned by whichever driver
+/// loop processes batches (sync loop, coroutine consumer, or fan-out
+/// router — all single-threaded with respect to the processor).
+pub(crate) struct Adaptor {
+    controllers: Vec<Box<dyn Controller>>,
+    epoch_batches: u64,
+    batches_in_epoch: u64,
+    last_events_in: u64,
+    last_waits: u64,
+    chunk: usize,
+    /// Whether the driving loop's backpressure totals are a real gauge
+    /// (coroutine edge channel) or structurally zero (sync loop).
+    backpressure_gauged: bool,
+    report: AdaptiveReport,
+}
+
+impl Adaptor {
+    pub(crate) fn new(
+        runtime: AdaptiveRuntime,
+        initial_chunk: usize,
+        backpressure_gauged: bool,
+    ) -> Self {
+        Adaptor {
+            controllers: runtime.controllers,
+            epoch_batches: runtime.epoch_batches.max(1),
+            batches_in_epoch: 0,
+            last_events_in: 0,
+            last_waits: 0,
+            chunk: initial_chunk.max(1),
+            backpressure_gauged,
+            report: AdaptiveReport::default(),
+        }
+    }
+
+    /// Account one processed batch; at an epoch barrier, sample, run
+    /// the controllers, and apply their actions to `processor`.
+    /// `events_in`/`backpressure_waits` are the edge's running totals.
+    /// Returns the new chunk size when a controller changed it (the
+    /// caller forwards it to the source side).
+    pub(crate) fn after_batch<P: BatchProcessor + ?Sized>(
+        &mut self,
+        processor: &mut P,
+        events_in: u64,
+        backpressure_waits: u64,
+    ) -> Result<Option<usize>> {
+        self.batches_in_epoch += 1;
+        if self.batches_in_epoch < self.epoch_batches {
+            return Ok(None);
+        }
+        let epoch = self.report.epochs;
+        let stages: Vec<StageSample> = processor
+            .telemetry()
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| StageSample {
+                stage: i,
+                name: t.node.name().to_string(),
+                epoch_shard_events: t.node.take_epoch_shards(),
+                bounds: t.bounds,
+                halo: t.halo,
+            })
+            .collect();
+        let sample = EpochSample {
+            epoch,
+            batches: self.batches_in_epoch,
+            events_in: events_in.saturating_sub(self.last_events_in),
+            backpressure_waits: backpressure_waits.saturating_sub(self.last_waits),
+            backpressure_gauged: self.backpressure_gauged,
+            chunk_size: self.chunk,
+            stages,
+        };
+        let mut new_chunk = None;
+        for controller in &mut self.controllers {
+            for change in controller.observe(&sample) {
+                match &change {
+                    Reconfigure::RecutStripes { stage, bounds } => {
+                        let observed = sample
+                            .stages
+                            .iter()
+                            .find(|s| s.stage == *stage)
+                            .with_context(|| {
+                                format!(
+                                    "controller {} re-cut unknown stage {stage}",
+                                    controller.describe()
+                                )
+                            })?;
+                        let skew_before = shard_skew_of(&observed.epoch_shard_events);
+                        let skew_after = rebin_skew(
+                            &observed.bounds,
+                            &observed.epoch_shard_events,
+                            bounds,
+                        );
+                        processor.reconfigure(&change).with_context(|| {
+                            format!("applying re-cut from {}", controller.describe())
+                        })?;
+                        self.report.recuts.push(RecutRecord {
+                            epoch,
+                            stage: *stage,
+                            skew_before,
+                            skew_after,
+                            bounds: bounds.clone(),
+                        });
+                    }
+                    Reconfigure::ChunkSize(n) => {
+                        let n = (*n).max(1);
+                        if n != self.chunk {
+                            processor.reconfigure(&change).with_context(|| {
+                                format!("applying chunk from {}", controller.describe())
+                            })?;
+                            self.report.chunk_changes.push(ChunkChange {
+                                epoch,
+                                from: self.chunk,
+                                to: n,
+                            });
+                            self.chunk = n;
+                            new_chunk = Some(n);
+                        }
+                    }
+                }
+            }
+        }
+        self.report.epochs += 1;
+        self.batches_in_epoch = 0;
+        self.last_events_in = events_in;
+        self.last_waits = backpressure_waits;
+        Ok(new_chunk)
+    }
+
+    /// Close out the run and return the history.
+    pub(crate) fn finish(mut self) -> AdaptiveReport {
+        self.report.final_chunk = self.chunk;
+        self.report
+    }
+}
+
+// ---------------------------------------------------------- cut algebra
+
+/// Piecewise-linear cumulative mass of `counts` over the stripes ending
+/// at `bounds`, evaluated at column `x` (events spread uniformly within
+/// each stripe).
+fn cumulative_at(bounds: &[u16], counts: &[u64], x: u16) -> f64 {
+    let mut acc = 0.0;
+    let mut lo = 0u16;
+    for (&hi, &c) in bounds.iter().zip(counts) {
+        if x >= hi {
+            acc += c as f64;
+        } else {
+            if x > lo && hi > lo {
+                acc += c as f64 * f64::from(x - lo) / f64::from(hi - lo);
+            }
+            break;
+        }
+        lo = hi;
+    }
+    acc
+}
+
+/// Equal-load stripe boundaries from an observed per-stripe histogram,
+/// under a piecewise-uniform density model. Keeps the shard count and
+/// total width; every stripe stays at least `min_width` wide. Returns
+/// the old bounds unchanged when the histogram is empty or the canvas
+/// cannot fit `m` stripes of `min_width`.
+pub(crate) fn rebalance_bounds(bounds: &[u16], counts: &[u64], min_width: u16) -> Vec<u16> {
+    let m = bounds.len();
+    let width = match bounds.last() {
+        Some(&w) => w,
+        None => return Vec::new(),
+    };
+    let total: u64 = counts.iter().sum();
+    let min_width = min_width.max(1);
+    if m <= 1
+        || counts.len() != m
+        || total == 0
+        || (width as usize) < m * min_width as usize
+    {
+        return bounds.to_vec();
+    }
+    // Cut at the histogram's m-quantiles.
+    let mut out = Vec::with_capacity(m);
+    let mut prefix = 0.0f64;
+    let mut lo = 0u16;
+    let mut stripe = 0usize;
+    for k in 1..m {
+        let target = total as f64 * k as f64 / m as f64;
+        while stripe < m - 1 && prefix + counts[stripe] as f64 < target {
+            prefix += counts[stripe] as f64;
+            lo = bounds[stripe];
+            stripe += 1;
+        }
+        let hi = bounds[stripe];
+        let c = counts[stripe] as f64;
+        let frac = if c > 0.0 { ((target - prefix) / c).clamp(0.0, 1.0) } else { 1.0 };
+        let x = f64::from(lo) + frac * f64::from(hi - lo);
+        out.push(x.round() as u16);
+    }
+    out.push(width);
+    // Enforce the minimum stripe width: cap from the right so the tail
+    // stripes fit, then floor from the left so widths stay positive.
+    for k in (0..m - 1).rev() {
+        let cap = width - (m - 1 - k) as u16 * min_width;
+        if out[k] > cap {
+            out[k] = cap;
+        }
+    }
+    let mut prev = 0u16;
+    for b in out.iter_mut().take(m - 1) {
+        if *b < prev + min_width {
+            *b = prev + min_width;
+        }
+        prev = *b;
+    }
+    // A clamp conflict (cannot happen when width ≥ m·min_width, checked
+    // above) would surface as a non-ascending cut: refuse rather than
+    // emit an invalid one.
+    let ascending = out.windows(2).all(|w| w[0] < w[1]) && out[0] >= min_width;
+    if ascending {
+        out
+    } else {
+        bounds.to_vec()
+    }
+}
+
+/// Predicted skew of an observed histogram re-binned under new stripe
+/// boundaries (piecewise-uniform density within each old stripe).
+pub(crate) fn rebin_skew(old_bounds: &[u16], counts: &[u64], new_bounds: &[u16]) -> f64 {
+    if new_bounds.is_empty() {
+        return 0.0;
+    }
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let mut masses = Vec::with_capacity(new_bounds.len());
+    let mut lo = 0u16;
+    for &hi in new_bounds {
+        let mass = cumulative_at(old_bounds, counts, hi) - cumulative_at(old_bounds, counts, lo);
+        masses.push(mass.max(0.0));
+        lo = hi;
+    }
+    let mean = total as f64 / masses.len() as f64;
+    let max = masses.iter().cloned().fold(0.0f64, f64::max);
+    max / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage_sample(bounds: Vec<u16>, hist: Vec<u64>, halo: u16) -> EpochSample {
+        EpochSample {
+            epoch: 0,
+            batches: 10,
+            events_in: hist.iter().sum(),
+            backpressure_waits: 0,
+            backpressure_gauged: true,
+            chunk_size: 4096,
+            stages: vec![StageSample {
+                stage: 0,
+                name: "stage".into(),
+                epoch_shard_events: hist,
+                bounds,
+                halo,
+            }],
+        }
+    }
+
+    #[test]
+    fn rebalance_moves_boundaries_toward_the_hotspot() {
+        // 90% of traffic in the left stripe: the boundary must move
+        // left so the right stripe absorbs part of the hot region.
+        let new = rebalance_bounds(&[32, 64], &[90, 10], 1);
+        assert_eq!(new.len(), 2);
+        assert_eq!(*new.last().unwrap(), 64, "total width preserved");
+        assert!(new[0] < 32, "boundary must move into the hot stripe, got {new:?}");
+        // The predicted skew under the new cut improves on the observed.
+        let before = shard_skew_of(&[90, 10]);
+        let after = rebin_skew(&[32, 64], &[90, 10], &new);
+        assert!(after < before, "predicted {after} must beat observed {before}");
+        assert!(after < 1.1, "piecewise model should nearly equalize, got {after}");
+    }
+
+    #[test]
+    fn rebalance_keeps_min_width_and_degenerate_inputs() {
+        // All-zero histogram: no information, no re-cut.
+        assert_eq!(rebalance_bounds(&[16, 32], &[0, 0], 1), vec![16, 32]);
+        // Extreme histogram with a wide min width: stripes stay legal.
+        let new = rebalance_bounds(&[8, 16, 24, 32], &[1000, 0, 0, 0], 4);
+        let mut lo = 0u16;
+        for &hi in &new {
+            assert!(hi - lo >= 4, "stripe [{lo},{hi}) below min width in {new:?}");
+            lo = hi;
+        }
+        assert_eq!(lo, 32);
+        // A canvas too narrow for m stripes of min width: unchanged.
+        assert_eq!(rebalance_bounds(&[2, 4, 5], &[9, 9, 9], 2), vec![2, 4, 5]);
+    }
+
+    #[test]
+    fn skew_controller_recuts_only_past_threshold() {
+        let mut ctl = SkewController::with_threshold(1.5);
+        // Balanced: no action.
+        assert!(ctl.observe(&stage_sample(vec![32, 64], vec![50, 50], 1)).is_empty());
+        // Serial stage: never acted on.
+        assert!(ctl.observe(&stage_sample(Vec::new(), Vec::new(), 0)).is_empty());
+        // Skewed: one re-cut for the right stage.
+        let actions = ctl.observe(&stage_sample(vec![32, 64], vec![95, 5], 1));
+        assert_eq!(actions.len(), 1);
+        match &actions[0] {
+            Reconfigure::RecutStripes { stage, bounds } => {
+                assert_eq!(*stage, 0);
+                assert!(bounds[0] < 32);
+                assert_eq!(bounds[1], 64);
+            }
+            other => panic!("expected a re-cut, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunk_controller_runs_aimd() {
+        let mut ctl = ChunkController::with_bounds(256, 8192);
+        // Quiet epoch: additive increase.
+        let mut sample = stage_sample(Vec::new(), Vec::new(), 0);
+        sample.chunk_size = 1024;
+        assert_eq!(ctl.observe(&sample), vec![Reconfigure::ChunkSize(1024 + 512)]);
+        // Congested epoch: multiplicative decrease.
+        sample.backpressure_waits = sample.batches; // 1 wait per batch
+        assert_eq!(ctl.observe(&sample), vec![Reconfigure::ChunkSize(512)]);
+        // Clamps hold at both ends.
+        sample.chunk_size = 300;
+        assert_eq!(ctl.observe(&sample), vec![Reconfigure::ChunkSize(256)]);
+        sample.chunk_size = 256;
+        assert!(ctl.observe(&sample).is_empty(), "already at the floor");
+        sample.backpressure_waits = 0;
+        sample.chunk_size = 8192;
+        assert!(ctl.observe(&sample).is_empty(), "already at the ceiling");
+        // No gauge (sync driver): zero waits mean "no signal", so the
+        // tuner must sit still instead of marching to the ceiling.
+        sample.chunk_size = 1024;
+        sample.backpressure_gauged = false;
+        assert!(ctl.observe(&sample).is_empty(), "ungauged drivers get no tuning");
+    }
+
+    #[test]
+    fn controller_lists_parse() {
+        assert_eq!(parse_controllers("skew").unwrap(), vec![ControllerKind::Skew]);
+        assert_eq!(
+            parse_controllers("skew,chunk").unwrap(),
+            vec![ControllerKind::Skew, ControllerKind::Chunk]
+        );
+        assert_eq!(
+            parse_controllers("chunk, skew, chunk").unwrap(),
+            vec![ControllerKind::Chunk, ControllerKind::Skew],
+            "duplicates collapse, order of first mention wins"
+        );
+        assert!(parse_controllers("vibes").is_err());
+        assert!(parse_controllers("").is_err());
+    }
+
+    #[test]
+    fn adaptive_config_builds_runtime() {
+        let cfg = AdaptiveConfig::new(parse_controllers("skew,chunk").unwrap()).with_epoch(4);
+        let rt = cfg.build();
+        assert_eq!(rt.epoch_batches, 4);
+        assert_eq!(rt.controllers.len(), 2);
+        assert!(rt.controllers[0].describe().starts_with("skew"));
+        assert!(rt.controllers[1].describe().starts_with("chunk"));
+    }
+}

@@ -33,7 +33,17 @@
 //! idiom: per-event functions stay in [`crate::pipeline`] and declare a
 //! [`crate::pipeline::TransformClass`], while the topology layer
 //! decides where each one runs.
+//!
+//! The runtime is **adaptive** ([`adapt`]): per-node counters live in
+//! the shared-atomic telemetry plane ([`crate::metrics::LiveNode`]),
+//! which the driver samples every N batches; configured controllers
+//! (`skew` re-cuts stripe boundaries from the observed per-shard
+//! histogram, `chunk` runs AIMD on the batch size) issue
+//! [`Reconfigure`] actions applied at epoch barriers — with stateful
+//! stages handing per-column state to their new owner shards, so output
+//! stays byte-identical to serial across arbitrarily many re-cuts.
 
+pub mod adapt;
 pub(crate) mod merge;
 pub mod sinks;
 pub mod sources;
@@ -48,10 +58,19 @@ use crate::aer::{Event, Resolution};
 use crate::metrics::NodeReport;
 use crate::pipeline::Pipeline;
 
-pub use sinks::{FileSink, FrameSink, NullSink, SinkSummary, StdoutSink, UdpSink, ViewSink};
+pub use adapt::{
+    AdaptiveConfig, AdaptiveReport, AdaptiveRuntime, ChunkController, Controller,
+    ControllerKind, EpochSample, Reconfigure, SkewController, StageSample, StageTelemetry,
+};
+pub use sinks::{
+    FileSink, FrameSink, NullSink, SinkSummary, StdoutSink, ThreadedSink, UdpSink, ViewSink,
+};
 pub use sources::{CameraSource, FileSource, MemorySource, SliceSource, UdpSource};
-pub use stage::{BatchProcessor, StageGraph, StageOptions};
-pub use topology::{run_topology, FusedSource, RoutePolicy, ThreadMode, TopologyConfig};
+pub use stage::{BatchProcessor, StageGraph, StageOptions, StripeCut};
+pub use topology::{
+    run_topology, run_topology_with_adaptive, FusedSource, RoutePolicy, ThreadMode,
+    TopologyConfig,
+};
 
 /// A pull-based, bounded-batch event producer.
 ///
@@ -94,6 +113,14 @@ pub trait EventSource: Send {
         0
     }
 
+    /// Advisory retarget of the batch size (the adaptive chunk
+    /// controller re-tunes it at epoch barriers). Sources that chunk a
+    /// backing store honour it; sources whose batch size is dictated by
+    /// the outside world (datagrams, pump rings) may ignore it — the
+    /// fan-in merge re-chunks merged output regardless. Default:
+    /// ignored.
+    fn set_chunk_hint(&mut self, _chunk: usize) {}
+
     /// Human-readable description (logs, reports).
     fn describe(&self) -> String {
         "source".into()
@@ -116,6 +143,9 @@ impl<S: EventSource + ?Sized> EventSource for &mut S {
     fn dropped(&self) -> u64 {
         (**self).dropped()
     }
+    fn set_chunk_hint(&mut self, chunk: usize) {
+        (**self).set_chunk_hint(chunk)
+    }
     fn describe(&self) -> String {
         (**self).describe()
     }
@@ -136,6 +166,9 @@ impl<S: EventSource + ?Sized> EventSource for Box<S> {
     }
     fn dropped(&self) -> u64 {
         (**self).dropped()
+    }
+    fn set_chunk_hint(&mut self, chunk: usize) {
+        (**self).set_chunk_hint(chunk)
     }
     fn describe(&self) -> String {
         (**self).describe()
@@ -290,6 +323,10 @@ pub struct StreamReport {
     /// frontier (emitted with timestamps clamped to the frontier, so
     /// the merged stream stays globally time-ordered).
     pub merge_late_events: u64,
+    /// Reconfiguration history of an adaptive run (epochs sampled,
+    /// stripe re-cuts with skew before/after, chunk-size changes).
+    /// `None` when no controllers were configured.
+    pub adaptive: Option<AdaptiveReport>,
 }
 
 impl StreamReport {

@@ -20,6 +20,11 @@ use super::EventSink;
 pub struct SinkSummary {
     /// Frames produced (frame-binning sinks; 0 elsewhere).
     pub frames: u64,
+    /// Times a feeder found a [`ThreadedSink`]'s pump ring full and had
+    /// to suspend (the wrapped sink is the bottleneck; 0 for inline
+    /// sinks). Counted on the feeding side — the pump thread cannot see
+    /// these — and folded into the sink's node report at finish.
+    pub backpressure_waits: u64,
 }
 
 /// Count-only sink (benchmarks, dry runs).
@@ -359,7 +364,7 @@ impl EventSink for FrameSink {
 
     fn finish(&mut self) -> Result<SinkSummary> {
         self.frames += u64::from(self.framer.finish().is_some());
-        Ok(SinkSummary { frames: self.frames })
+        Ok(SinkSummary { frames: self.frames, ..Default::default() })
     }
 
     fn describe(&self) -> String {
@@ -428,11 +433,141 @@ impl EventSink for ViewSink {
             self.frames += 1;
             self.show(&frame);
         }
-        Ok(SinkSummary { frames: self.frames })
+        Ok(SinkSummary { frames: self.frames, ..Default::default() })
     }
 
     fn describe(&self) -> String {
         format!("view({} µs, ≤{} frames)", self.window_us, self.max_frames)
+    }
+}
+
+// ------------------------------------------------------------ threaded
+
+/// What flows through a sink pump's ring: batches plus the one
+/// out-of-band geometry notification the driver sends before finish.
+enum SinkMsg {
+    Batch(Vec<Event>),
+    Geometry(Resolution),
+}
+
+/// Batches buffered in a sink pump's ring (mirrors the source pumps'
+/// `PUMP_QUEUE_BATCHES`): enough to decouple the router from a
+/// momentarily slow sink, small enough to keep memory O(chunk).
+const SINK_QUEUE_BATCHES: usize = 2;
+
+/// A sink pinned behind its own OS thread (`--sink-threads`), the
+/// fan-out mirror of [`ThreadMode::PerSourceThread`](super::ThreadMode):
+/// the wrapped sink's blocking I/O (file writes, UDP sends) runs on the
+/// pump thread, and the router only ever touches the bounded
+/// [`crate::rt::sync_channel`] ring. A slow sink therefore
+/// backpressures through its queue — counted in
+/// [`SinkSummary::backpressure_waits`] — instead of stalling the
+/// fan-out router (and transitively every sibling sink) inline.
+pub struct ThreadedSink {
+    /// `None` once finished (the close signal is dropping the sender).
+    tx: Option<crate::rt::SyncSender<SinkMsg>>,
+    /// The pump's final word: the inner sink's summary or its error.
+    done: crate::rt::SyncReceiver<Result<SinkSummary>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    name: String,
+    /// Full-ring suspensions of the router side (our half of the
+    /// backpressure ledger; the pump cannot see them).
+    waits: u64,
+}
+
+impl ThreadedSink {
+    /// Move `sink` onto its own pump thread. The wrapper is itself an
+    /// [`EventSink`], so it slots into any topology unchanged.
+    pub fn spawn(mut sink: Box<dyn EventSink>) -> ThreadedSink {
+        use crate::rt::{block_on, sync_channel};
+        let name = sink.describe();
+        let (tx, mut rx) = sync_channel::<SinkMsg>(SINK_QUEUE_BATCHES);
+        let (mut done_tx, done) = sync_channel::<Result<SinkSummary>>(1);
+        let handle = std::thread::spawn(move || {
+            let result = (|| -> Result<SinkSummary> {
+                while let Some(msg) = block_on(rx.recv()) {
+                    match msg {
+                        SinkMsg::Batch(batch) => sink.consume(&batch)?,
+                        SinkMsg::Geometry(res) => sink.observe_geometry(res),
+                    }
+                }
+                sink.finish()
+            })();
+            // The router learns of a sink error at its next send (ring
+            // closed); the error itself surfaces from `finish`.
+            let _ = block_on(done_tx.send(result));
+        });
+        ThreadedSink { tx: Some(tx), done, handle: Some(handle), name, waits: 0 }
+    }
+
+    /// Drain the pump: close the ring, collect the inner sink's result,
+    /// join the thread. Idempotent via `tx`/`handle` being `Option`s.
+    fn join(&mut self) -> Result<SinkSummary> {
+        use crate::rt::block_on;
+        drop(self.tx.take()); // close: the pump finishes its sink and exits
+        let result = block_on(self.done.recv());
+        if let Some(handle) = self.handle.take() {
+            if handle.join().is_err() {
+                anyhow::bail!("sink pump for {:?} panicked", self.name);
+            }
+        }
+        let mut summary = result
+            .with_context(|| format!("sink pump for {:?} vanished", self.name))??;
+        summary.backpressure_waits += self.waits;
+        Ok(summary)
+    }
+}
+
+impl EventSink for ThreadedSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        let Some(tx) = self.tx.as_mut() else {
+            anyhow::bail!("sink {:?} already finished", self.name);
+        };
+        match tx.try_send(SinkMsg::Batch(batch.to_vec())) {
+            Ok(()) => Ok(()),
+            Err(msg) => {
+                // Ring full (backpressure) or pump gone: the blocking
+                // send distinguishes them.
+                self.waits += 1;
+                if crate::rt::block_on(tx.send(msg)).is_ok() {
+                    return Ok(());
+                }
+                // Pump exited early — only happens on a sink error:
+                // surface it now rather than at finish.
+                match self.join() {
+                    Ok(_) => anyhow::bail!("sink pump for {:?} exited early", self.name),
+                    Err(e) => Err(e),
+                }
+            }
+        }
+    }
+
+    fn observe_geometry(&mut self, res: Resolution) {
+        if let Some(tx) = self.tx.as_mut() {
+            // Best-effort: a dead pump's error surfaces at finish.
+            if tx.try_send(SinkMsg::Geometry(res)).is_err() {
+                let _ = crate::rt::block_on(tx.send(SinkMsg::Geometry(res)));
+            }
+        }
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        self.join()
+    }
+
+    fn describe(&self) -> String {
+        format!("thread({})", self.name)
+    }
+}
+
+impl Drop for ThreadedSink {
+    fn drop(&mut self) {
+        // Error paths skip finish(): close the ring and join so the
+        // pump never outlives the topology (best effort).
+        drop(self.tx.take());
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
     }
 }
 
@@ -505,6 +640,78 @@ mod tests {
         // The spool file is cleaned up.
         assert!(!dir.join("observed.aedat.spool").exists());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A slow sink behind its own pump thread: every event arrives, the
+    /// summary flows back, and the router-side waits surface in it.
+    #[test]
+    fn threaded_sink_delivers_everything_and_counts_waits() {
+        struct Slow {
+            events: u64,
+            geometry: Option<Resolution>,
+        }
+        impl EventSink for Slow {
+            fn consume(&mut self, batch: &[Event]) -> Result<()> {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                self.events += batch.len() as u64;
+                Ok(())
+            }
+            fn observe_geometry(&mut self, res: Resolution) {
+                self.geometry = Some(res);
+            }
+            fn finish(&mut self) -> Result<SinkSummary> {
+                assert_eq!(self.geometry, Some(Resolution::new(32, 32)));
+                Ok(SinkSummary { frames: self.events, ..Default::default() })
+            }
+            fn describe(&self) -> String {
+                "slow".into()
+            }
+        }
+        let mut sink =
+            ThreadedSink::spawn(Box::new(Slow { events: 0, geometry: None }));
+        assert_eq!(sink.describe(), "thread(slow)");
+        let events = synthetic_events(50, 32, 32);
+        for batch in events.chunks(5) {
+            sink.consume(batch).unwrap(); // outruns the 200 µs sink: ring fills
+        }
+        sink.observe_geometry(Resolution::new(32, 32));
+        let summary = sink.finish().unwrap();
+        // Smuggled the count through `frames`: all 50 events arrived,
+        // in order, after the geometry notification.
+        assert_eq!(summary.frames, 50);
+        assert!(summary.backpressure_waits > 0, "a 200µs/batch sink must backpressure");
+        assert!(sink.consume(&events).is_err(), "finished sink fails loudly");
+    }
+
+    #[test]
+    fn threaded_sink_surfaces_inner_errors() {
+        struct Failing(u32);
+        impl EventSink for Failing {
+            fn consume(&mut self, _batch: &[Event]) -> Result<()> {
+                self.0 += 1;
+                if self.0 >= 2 {
+                    anyhow::bail!("disk full");
+                }
+                Ok(())
+            }
+            fn finish(&mut self) -> Result<SinkSummary> {
+                Ok(SinkSummary::default())
+            }
+        }
+        let mut sink = ThreadedSink::spawn(Box::new(Failing(0)));
+        let events = synthetic_events(10, 8, 8);
+        // The pump fails on its second batch; the error must reach the
+        // caller on a subsequent consume or at finish (never silently).
+        let mut failed = false;
+        for batch in events.chunks(2) {
+            if sink.consume(batch).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        if !failed {
+            assert!(sink.finish().is_err(), "the sink error must surface somewhere");
+        }
     }
 
     #[test]

@@ -59,6 +59,10 @@ impl EventSource for MemorySource {
         self.res
     }
 
+    fn set_chunk_hint(&mut self, chunk: usize) {
+        self.chunk = chunk.max(1);
+    }
+
     fn describe(&self) -> String {
         format!("memory({} events)", self.events.len())
     }
@@ -103,6 +107,10 @@ impl EventSource for SliceSource<'_> {
                 res
             }
         }
+    }
+
+    fn set_chunk_hint(&mut self, chunk: usize) {
+        self.chunk = chunk.max(1);
     }
 
     fn describe(&self) -> String {
@@ -273,6 +281,10 @@ impl EventSource for FileSource {
 
     fn dropped(&self) -> u64 {
         self.out_of_claim
+    }
+
+    fn set_chunk_hint(&mut self, chunk: usize) {
+        self.chunk = chunk.max(1);
     }
 
     fn describe(&self) -> String {

@@ -29,13 +29,16 @@
 //! batch-sized scatter/gather rounds — no per-event locks, and
 //! bounded memory (≤ one batch in flight per shard).
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
+
+use anyhow::{bail, Context as _, Result};
 
 use crate::aer::{Event, Resolution};
-use crate::metrics::NodeReport;
+use crate::metrics::{LiveNode, NodeReport};
 use crate::pipeline::{EventTransform, Pipeline, PipelineSpec};
 use crate::rt::{block_on, sync_channel, SyncReceiver, SyncSender};
 
+use super::adapt::{Reconfigure, StageTelemetry};
 use super::merge::merge_ordered;
 
 /// An event travelling through a sharded node: batch sequence number
@@ -62,6 +65,96 @@ pub(crate) fn stripe_index(x: u16, stripe: usize, m: usize) -> usize {
     (x as usize / stripe).min(m - 1)
 }
 
+/// A stripe partition of the canvas width: ascending stripe *end*
+/// columns (exclusive), one per shard, the last equal to the canvas
+/// width. [`uniform`](StripeCut::uniform) reproduces the classic
+/// even cut; adaptive re-cuts install arbitrary boundaries via
+/// [`from_bounds`](StripeCut::from_bounds) (validated so ghost routing
+/// to adjacent stripes still covers every halo neighbourhood).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StripeCut {
+    bounds: Vec<u16>,
+}
+
+impl StripeCut {
+    /// The even cut: `m` stripes of `ceil(width / m)` columns, the last
+    /// absorbing the remainder (identical pixel assignment to the
+    /// historical `stripe_index` math, trailing stripes may be empty on
+    /// narrow canvases).
+    pub fn uniform(width: u16, m: usize) -> StripeCut {
+        let m = m.max(1);
+        let stripe = stripe_cut(width, m);
+        StripeCut {
+            bounds: (1..=m).map(|i| (i * stripe).min(width as usize) as u16).collect(),
+        }
+    }
+
+    /// Validate explicit boundaries for a `width`-column canvas and a
+    /// stage of the given `halo`: ascending, ending at `width`, every
+    /// stripe at least `max(halo, 1)` columns wide (adjacent-stripe
+    /// ghosts can then never fall short of a neighbourhood).
+    pub fn from_bounds(bounds: Vec<u16>, width: u16, halo: u16) -> Result<StripeCut> {
+        if bounds.is_empty() {
+            bail!("stripe cut needs at least one stripe");
+        }
+        if *bounds.last().expect("nonempty") != width {
+            bail!(
+                "stripe cut must end at the canvas width {width}, got {:?}",
+                bounds
+            );
+        }
+        let min_width = halo.max(1);
+        let mut lo = 0u16;
+        for &hi in &bounds {
+            if hi <= lo || hi - lo < min_width {
+                bail!(
+                    "stripe [{lo},{hi}) narrower than the minimum width \
+                     {min_width} (halo {halo}) in {bounds:?}"
+                );
+            }
+            lo = hi;
+        }
+        Ok(StripeCut { bounds })
+    }
+
+    /// Number of stripes.
+    pub fn shards(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// The stripe end columns.
+    pub fn bounds(&self) -> &[u16] {
+        &self.bounds
+    }
+
+    /// Canvas width (the last boundary).
+    pub fn width(&self) -> u16 {
+        *self.bounds.last().expect("cut is never empty")
+    }
+
+    /// First column of stripe `s`.
+    pub fn lo(&self, s: usize) -> u16 {
+        if s == 0 {
+            0
+        } else {
+            self.bounds[s - 1]
+        }
+    }
+
+    /// One past the last column of stripe `s`.
+    pub fn hi(&self, s: usize) -> u16 {
+        self.bounds[s]
+    }
+
+    /// Home stripe of column `x` (columns past the canvas clamp to the
+    /// last stripe, like the uniform cut always did).
+    pub fn index(&self, x: u16) -> usize {
+        self.bounds
+            .partition_point(|&b| b <= x)
+            .min(self.bounds.len() - 1)
+    }
+}
+
 // ----------------------------------------------------------- processor
 
 /// Anything that can stand between a topology's fan-in and fan-out and
@@ -81,6 +174,26 @@ pub trait BatchProcessor: Send {
     /// Per-stage-node counters for [`super::StreamReport::stages`].
     fn stage_reports(&self) -> Vec<NodeReport> {
         Vec::new()
+    }
+
+    /// Live telemetry handles, one per stage node, for the adaptive
+    /// epoch sampler (empty when the processor exposes no plane — the
+    /// serial [`Pipeline`]).
+    fn telemetry(&self) -> Vec<StageTelemetry> {
+        Vec::new()
+    }
+
+    /// Apply one epoch-barrier reconfiguration. The driver guarantees
+    /// no batch is in flight. Chunk-size changes are edge-level and
+    /// accepted by default; stripe re-cuts must be implemented by the
+    /// processor (the [`StageGraph`] does) and fail loudly elsewhere.
+    fn reconfigure(&mut self, change: &Reconfigure) -> Result<()> {
+        match change {
+            Reconfigure::ChunkSize(_) => Ok(()),
+            Reconfigure::RecutStripes { .. } => {
+                bail!("{} does not support stripe re-cuts", self.describe())
+            }
+        }
     }
 
     /// Human-readable description.
@@ -115,10 +228,14 @@ impl Default for StageOptions {
     }
 }
 
-/// One shard worker pinned to an OS thread.
+/// One shard worker pinned to an OS thread. `reclaim` hands the worker's
+/// stage instance (with its state) back to the driving thread when the
+/// input ring closes — how a re-cut recovers per-shard state from live
+/// threads.
 struct ShardWorker {
     tx: SyncSender<Vec<ShardItem>>,
     rx: SyncReceiver<ShardOut>,
+    reclaim: SyncReceiver<Box<dyn EventTransform>>,
     handle: std::thread::JoinHandle<()>,
 }
 
@@ -136,17 +253,15 @@ enum NodeExec {
     /// Single node (barrier class, pinned stage, or shards = 1).
     Serial(Box<dyn EventTransform>),
     /// N stripe-sharded workers with ghost-event halo exchange and a
-    /// sequence-keyed re-merge.
-    Sharded { stripe: usize, halo: u16, mode: ShardMode, shard_events: Vec<u64> },
+    /// sequence-keyed re-merge. The cut is replaceable at an epoch
+    /// barrier ([`StageGraph::reconfigure`]).
+    Sharded { cut: StripeCut, halo: u16, mode: ShardMode },
 }
 
-/// One stage node plus its counters.
+/// One stage node plus its live counter cell (shared with the adaptive
+/// sampler through [`BatchProcessor::telemetry`]).
 struct StageNode {
-    name: String,
-    events_in: u64,
-    events_out: u64,
-    batches: u64,
-    backpressure_waits: u64,
+    node: Arc<LiveNode>,
     exec: NodeExec,
 }
 
@@ -181,10 +296,11 @@ impl StageGraph {
                 while shards > 1 && stripe_cut(res.width, shards) <= halo as usize {
                     shards -= 1;
                 }
+                let node = Arc::new(LiveNode::new(stage.name()));
                 let exec = if shards == 1 {
                     NodeExec::Serial(stage.build(res))
                 } else {
-                    let stripe = stripe_cut(res.width, shards);
+                    let cut = StripeCut::uniform(res.width, shards);
                     let workers: Vec<Box<dyn EventTransform>> =
                         (0..shards).map(|_| stage.build(res)).collect();
                     let mode = if opts.shard_threads {
@@ -192,16 +308,10 @@ impl StageGraph {
                     } else {
                         ShardMode::Inline(workers)
                     };
-                    NodeExec::Sharded { stripe, halo, mode, shard_events: vec![0; shards] }
+                    node.reset_shards(shards);
+                    NodeExec::Sharded { cut, halo, mode }
                 };
-                StageNode {
-                    name: stage.name().to_string(),
-                    events_in: 0,
-                    events_out: 0,
-                    batches: 0,
-                    backpressure_waits: 0,
-                    exec,
-                }
+                StageNode { node, exec }
             })
             .collect();
         StageGraph { nodes, finished: false }
@@ -221,20 +331,31 @@ impl StageGraph {
     pub fn node_shards(&self, i: usize) -> usize {
         match &self.nodes[i].exec {
             NodeExec::Serial(_) => 1,
-            NodeExec::Sharded { shard_events, .. } => shard_events.len(),
+            NodeExec::Sharded { cut, .. } => cut.shards(),
+        }
+    }
+
+    /// Current stripe end columns of node `i` (empty for serial nodes).
+    pub fn node_bounds(&self, i: usize) -> Vec<u16> {
+        match &self.nodes[i].exec {
+            NodeExec::Serial(_) => Vec::new(),
+            NodeExec::Sharded { cut, .. } => cut.bounds().to_vec(),
         }
     }
 }
 
 /// Spawn one OS thread per shard worker. Each worker loops
 /// recv-apply-send until its input ring closes; a dead main side
-/// (receiver dropped) ends it via the failed send.
+/// (receiver dropped) ends it via the failed send. On exit the worker
+/// offers its stage instance back through the reclaim ring so an epoch
+/// re-cut can move its state (plain shutdown just drops the offer).
 fn spawn_workers(stages: Vec<Box<dyn EventTransform>>) -> Vec<ShardWorker> {
     stages
         .into_iter()
         .map(|mut stage| {
             let (tx, mut worker_rx) = sync_channel::<Vec<ShardItem>>(SHARD_QUEUE_BATCHES);
             let (mut worker_tx, rx) = sync_channel::<ShardOut>(SHARD_QUEUE_BATCHES);
+            let (mut reclaim_tx, reclaim) = sync_channel::<Box<dyn EventTransform>>(1);
             let handle = std::thread::spawn(move || {
                 while let Some(batch) = block_on(worker_rx.recv()) {
                     let out = apply_shard(stage.as_mut(), batch);
@@ -242,8 +363,9 @@ fn spawn_workers(stages: Vec<Box<dyn EventTransform>>) -> Vec<ShardWorker> {
                         break;
                     }
                 }
+                let _ = block_on(reclaim_tx.send(stage));
             });
-            ShardWorker { tx, rx, handle }
+            ShardWorker { tx, rx, reclaim, handle }
         })
         .collect()
 }
@@ -262,29 +384,29 @@ fn apply_shard(stage: &mut dyn EventTransform, batch: Vec<ShardItem>) -> ShardOu
     out
 }
 
-/// Route one batch across `m` stripes: every event goes to its home
-/// stripe; events within `halo` pixels of a stripe boundary are
+/// Route one batch across the cut's stripes: every event goes to its
+/// home stripe; events within `halo` pixels of a stripe boundary are
 /// additionally ghosted to the adjacent stripe. Returns per-shard
 /// inputs plus per-shard home-event counts.
 fn route_stripes(
     batch: &[Event],
-    stripe: usize,
-    m: usize,
+    cut: &StripeCut,
     halo: u16,
 ) -> (Vec<Vec<ShardItem>>, Vec<u64>) {
+    let m = cut.shards();
     let mut parts: Vec<Vec<ShardItem>> = (0..m).map(|_| Vec::new()).collect();
     let mut homes = vec![0u64; m];
     let halo = halo as usize;
     for (seq, &ev) in batch.iter().enumerate() {
-        let s = stripe_index(ev.x, stripe, m);
+        let s = cut.index(ev.x);
         parts[s].push((seq as u64, ev, false));
         homes[s] += 1;
         if halo > 0 {
             let x = ev.x as usize;
-            if s > 0 && x < s * stripe + halo {
+            if s > 0 && x < cut.lo(s) as usize + halo {
                 parts[s - 1].push((seq as u64, ev, true));
             }
-            if s + 1 < m && x + halo >= (s + 1) * stripe {
+            if s + 1 < m && x + halo >= cut.hi(s) as usize {
                 parts[s + 1].push((seq as u64, ev, true));
             }
         }
@@ -294,8 +416,9 @@ fn route_stripes(
 
 impl StageNode {
     fn process(&mut self, batch: &[Event]) -> Result<Vec<Event>> {
-        self.events_in += batch.len() as u64;
-        self.batches += 1;
+        self.node.add_events(batch.len() as u64);
+        self.node.add_batch();
+        let name = self.node.name();
         let out = match &mut self.exec {
             NodeExec::Serial(stage) => {
                 let mut out = Vec::with_capacity(batch.len());
@@ -306,12 +429,10 @@ impl StageNode {
                 }
                 out
             }
-            NodeExec::Sharded { stripe, halo, mode, shard_events } => {
-                let m = shard_events.len();
-                let (parts, homes) = route_stripes(batch, *stripe, m, *halo);
-                for (count, home) in shard_events.iter_mut().zip(&homes) {
-                    *count += home;
-                }
+            NodeExec::Sharded { cut, halo, mode } => {
+                let m = cut.shards();
+                let (parts, homes) = route_stripes(batch, cut, *halo);
+                self.node.record_shards(&homes);
                 let outs: Vec<ShardOut> = match mode {
                     ShardMode::Inline(stages) => stages
                         .iter_mut()
@@ -326,9 +447,9 @@ impl StageNode {
                             match worker.tx.try_send(part) {
                                 Ok(()) => {}
                                 Err(part) => {
-                                    self.backpressure_waits += 1;
+                                    self.node.add_backpressure_wait();
                                     if block_on(worker.tx.send(part)).is_err() {
-                                        bail!("shard worker for {:?} terminated", self.name);
+                                        bail!("shard worker for {name:?} terminated");
                                     }
                                 }
                             }
@@ -338,7 +459,7 @@ impl StageNode {
                             match block_on(worker.rx.recv()) {
                                 Some(out) => outs.push(out),
                                 None => {
-                                    bail!("shard worker for {:?} terminated", self.name)
+                                    bail!("shard worker for {name:?} terminated")
                                 }
                             }
                         }
@@ -348,23 +469,109 @@ impl StageNode {
                 merge_ordered(outs, |item| item.0).into_iter().map(|(_, ev)| ev).collect()
             }
         };
-        self.events_out += out.len() as u64;
+        self.node.add_dropped(batch.len() as u64 - out.len() as u64);
         Ok(out)
     }
 
     fn shutdown(&mut self) -> Result<()> {
         if let NodeExec::Sharded { mode: ShardMode::Threads(workers), .. } = &mut self.exec {
             for worker in workers.drain(..) {
-                // Dropping both ring ends unblocks a worker parked on
-                // either edge before the join.
-                let ShardWorker { tx, rx, handle } = worker;
+                // Dropping all ring ends unblocks a worker parked on
+                // any edge before the join (the unread reclaim offer
+                // fails fast and is discarded).
+                let ShardWorker { tx, rx, reclaim, handle } = worker;
                 drop(tx);
                 drop(rx);
+                drop(reclaim);
                 if handle.join().is_err() {
-                    bail!("shard worker for {:?} panicked", self.name);
+                    bail!("shard worker for {:?} panicked", self.node.name());
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Apply a validated stripe re-cut at an epoch barrier: drain the
+    /// workers (threaded shards are already in per-batch lockstep, so
+    /// closing their input ring drains them), reclaim the stage
+    /// instances, hand per-column state from each column's old owner to
+    /// its new one (plus the halo fringe each new stripe reads), then
+    /// resume under the new cut. Output stays byte-identical to serial
+    /// because every column's state is exact in its home shard and
+    /// moves with it.
+    fn recut(&mut self, new_cut: StripeCut) -> Result<()> {
+        let name = self.node.name().to_string();
+        let NodeExec::Sharded { cut, halo, mode } = &mut self.exec else {
+            bail!("stage {name:?} is not sharded; nothing to re-cut");
+        };
+        if new_cut.shards() != cut.shards() {
+            bail!(
+                "re-cut of {name:?} must keep the shard count {} (got {})",
+                cut.shards(),
+                new_cut.shards()
+            );
+        }
+        if new_cut.width() != cut.width() {
+            bail!(
+                "re-cut of {name:?} must keep the canvas width {} (got {})",
+                cut.width(),
+                new_cut.width()
+            );
+        }
+        // Reclaim every stage instance (and its state).
+        let mut stages: Vec<Box<dyn EventTransform>> = match mode {
+            ShardMode::Inline(stages) => std::mem::take(stages),
+            ShardMode::Threads(workers) => {
+                let mut out = Vec::with_capacity(workers.len());
+                for worker in workers.drain(..) {
+                    let ShardWorker { tx, rx, mut reclaim, handle } = worker;
+                    drop(tx); // closes the input ring: the worker exits its loop
+                    let stage = block_on(reclaim.recv());
+                    drop(rx);
+                    if handle.join().is_err() || stage.is_none() {
+                        bail!("shard worker for {name:?} died before the re-cut");
+                    }
+                    out.push(stage.expect("checked above"));
+                }
+                out
+            }
+        };
+        // Phase 1 — export: for each new stripe, the columns it will
+        // read (its stripe plus the halo fringe), segmented by which
+        // old shard owns them exactly (the home owner's state for its
+        // own columns is always exact).
+        let m = new_cut.shards();
+        let width = cut.width();
+        let fringe = *halo;
+        let mut imports: Vec<Vec<(u16, u16, Vec<u64>)>> = Vec::with_capacity(m);
+        for j in 0..m {
+            let lo = new_cut.lo(j).saturating_sub(fringe);
+            let hi = new_cut.hi(j).saturating_add(fringe).min(width);
+            let mut segs = Vec::new();
+            let mut c = lo;
+            while c < hi {
+                let owner = cut.index(c);
+                let end = cut.hi(owner).min(hi);
+                segs.push((c, end, stages[owner].export_rows(c, end)));
+                c = end;
+            }
+            imports.push(segs);
+        }
+        // Phase 2 — import into the new owners (only after every export
+        // is taken, so no instance reads post-import state).
+        for (j, segs) in imports.into_iter().enumerate() {
+            for (x0, x1, rows) in segs {
+                stages[j].import_rows(x0, x1, &rows);
+            }
+        }
+        *cut = new_cut;
+        match mode {
+            ShardMode::Inline(slot) => *slot = stages,
+            ShardMode::Threads(workers) => *workers = spawn_workers(stages),
+        }
+        // The histogram restarts under the new cut so skew (and the
+        // next epoch's sample) describes current boundaries only.
+        self.node.reset_shards(m);
         Ok(())
     }
 }
@@ -404,21 +611,49 @@ impl BatchProcessor for StageGraph {
     }
 
     fn stage_reports(&self) -> Vec<NodeReport> {
+        // Reconstructed from a final sample of the live plane: the same
+        // cells the adaptive sampler reads mid-run, so end-of-run and
+        // mid-run views can never disagree about what a counter means.
+        self.nodes.iter().map(|node| node.node.sample()).collect()
+    }
+
+    fn telemetry(&self) -> Vec<StageTelemetry> {
         self.nodes
             .iter()
-            .map(|node| NodeReport {
-                name: node.name.clone(),
-                events: node.events_in,
-                batches: node.batches,
-                backpressure_waits: node.backpressure_waits,
-                dropped: node.events_in - node.events_out,
-                frames: 0,
-                shard_events: match &node.exec {
+            .map(|node| StageTelemetry {
+                node: node.node.clone(),
+                bounds: match &node.exec {
                     NodeExec::Serial(_) => Vec::new(),
-                    NodeExec::Sharded { shard_events, .. } => shard_events.clone(),
+                    NodeExec::Sharded { cut, .. } => cut.bounds().to_vec(),
+                },
+                halo: match &node.exec {
+                    NodeExec::Serial(_) => 0,
+                    NodeExec::Sharded { halo, .. } => *halo,
                 },
             })
             .collect()
+    }
+
+    fn reconfigure(&mut self, change: &Reconfigure) -> Result<()> {
+        match change {
+            // Chunking is decided upstream of the graph; nothing to do.
+            Reconfigure::ChunkSize(_) => Ok(()),
+            Reconfigure::RecutStripes { stage, bounds } => {
+                if self.finished {
+                    bail!("stage graph already finished; cannot re-cut");
+                }
+                let Some(node) = self.nodes.get_mut(*stage) else {
+                    bail!("re-cut targets stage {stage}, graph has {}", self.nodes.len())
+                };
+                let NodeExec::Sharded { cut, halo, .. } = &node.exec else {
+                    bail!("re-cut targets serial stage {:?}", node.node.name())
+                };
+                let new_cut =
+                    StripeCut::from_bounds(bounds.clone(), cut.width(), *halo)
+                        .context("invalid re-cut bounds")?;
+                node.recut(new_cut)
+            }
+        }
     }
 
     fn describe(&self) -> String {
@@ -428,13 +663,13 @@ impl BatchProcessor for StageGraph {
         self.nodes
             .iter()
             .map(|node| match &node.exec {
-                NodeExec::Serial(_) => node.name.clone(),
-                NodeExec::Sharded { mode, shard_events, .. } => {
+                NodeExec::Serial(_) => node.node.name().to_string(),
+                NodeExec::Sharded { mode, cut, .. } => {
                     let threads = matches!(mode, ShardMode::Threads(_));
                     format!(
                         "{}[×{}{}]",
-                        node.name,
-                        shard_events.len(),
+                        node.node.name(),
+                        cut.shards(),
                         if threads { " threads" } else { "" }
                     )
                 }
@@ -477,9 +712,34 @@ mod tests {
     }
 
     #[test]
+    fn stripe_cut_indexing_and_validation() {
+        let cut = StripeCut::uniform(90, 3);
+        assert_eq!(cut.bounds(), &[30, 60, 90]);
+        assert_eq!(cut.index(29), 0);
+        assert_eq!(cut.index(30), 1);
+        assert_eq!(cut.index(95), 2, "overhang clamps to the last stripe");
+        // Uniform agrees with the historical stripe math everywhere.
+        for x in 0..128u16 {
+            assert_eq!(cut.index(x), stripe_index(x, 30, 3), "x={x}");
+        }
+        let uneven = StripeCut::from_bounds(vec![10, 15, 90], 90, 1).unwrap();
+        assert_eq!(uneven.lo(1), 10);
+        assert_eq!(uneven.hi(1), 15);
+        assert_eq!(uneven.index(9), 0);
+        assert_eq!(uneven.index(10), 1);
+        assert_eq!(uneven.index(14), 1);
+        assert_eq!(uneven.index(89), 2);
+        // Rejections: wrong terminal width, non-ascending, sub-halo.
+        assert!(StripeCut::from_bounds(vec![10, 80], 90, 0).is_err());
+        assert!(StripeCut::from_bounds(vec![40, 30, 90], 90, 0).is_err());
+        assert!(StripeCut::from_bounds(vec![1, 90], 90, 2).is_err(), "1px < halo 2");
+        assert!(StripeCut::from_bounds(Vec::new(), 90, 0).is_err());
+    }
+
+    #[test]
     fn ghost_routing_covers_boundaries_both_ways() {
         let events = vec![Event::on(31, 0, 1), Event::on(32, 0, 2), Event::on(5, 0, 3)];
-        let (parts, homes) = route_stripes(&events, 32, 2, 1);
+        let (parts, homes) = route_stripes(&events, &StripeCut::uniform(64, 2), 1);
         // x=31: home shard 0, ghost to shard 1 (within halo of boundary).
         // x=32: home shard 1, ghost to shard 0.
         // x=5: home shard 0 only.
@@ -612,5 +872,103 @@ mod tests {
         let events = synthetic_events_seeded(100, 64, 64, 1);
         graph.process_batch(&events).unwrap();
         drop(graph); // Drop must join workers without deadlock.
+    }
+
+    /// A mid-stream re-cut (state handed across the new boundaries via
+    /// export_rows/import_rows) must leave the output byte-identical to
+    /// the serial pipeline — for the halo-free stateful op, the
+    /// halo-carrying one, and threaded workers.
+    #[test]
+    fn recut_mid_stream_stays_byte_identical_to_serial() {
+        let res = Resolution::new(64, 48);
+        let events = synthetic_events_seeded(6000, 64, 48, 21);
+        let spec = spec_polarity_denoise();
+        let expected = spec.build_pipeline(res).process(&events);
+        for threads in [false, true] {
+            let opts = StageOptions { shards: 2, shard_threads: threads };
+            let mut graph = StageGraph::compile(&spec, res, &opts);
+            let mut got = Vec::new();
+            for (i, chunk) in events.chunks(251).enumerate() {
+                got.extend(graph.process_batch(chunk).unwrap());
+                // Re-cut the sharded denoise stage (index 1) to a new
+                // boundary after every few batches, ping-ponging so
+                // columns change owner repeatedly.
+                if i % 3 == 2 {
+                    let bound = if (i / 3) % 2 == 0 { 20 } else { 44 };
+                    graph
+                        .reconfigure(&Reconfigure::RecutStripes {
+                            stage: 1,
+                            bounds: vec![bound, 64],
+                        })
+                        .unwrap();
+                }
+            }
+            graph.finish_stages().unwrap();
+            assert_eq!(got, expected, "threads={threads}: re-cut output diverged");
+        }
+    }
+
+    #[test]
+    fn recut_resets_the_shard_histogram_to_the_new_cut() {
+        let res = Resolution::new(64, 64);
+        let spec = PipelineSpec::new()
+            .then(StageSpec::new(|res: Resolution| RefractoryFilter::new(res, 1)));
+        let mut graph =
+            StageGraph::compile(&spec, res, &StageOptions { shards: 2, shard_threads: false });
+        let events = synthetic_events_seeded(1000, 64, 64, 8);
+        graph.process_batch(&events).unwrap();
+        assert_eq!(graph.stage_reports()[0].shard_events.iter().sum::<u64>(), 1000);
+        graph
+            .reconfigure(&Reconfigure::RecutStripes { stage: 0, bounds: vec![10, 64] })
+            .unwrap();
+        let after_recut = graph.stage_reports()[0].clone();
+        assert_eq!(after_recut.shard_events, vec![0, 0], "histogram restarts");
+        assert_eq!(after_recut.events, 1000, "cumulative totals survive");
+        assert_eq!(after_recut.shard_skew(), 1.0, "all-zero histogram sits on the floor");
+        graph.process_batch(&events).unwrap();
+        let report = graph.stage_reports()[0].clone();
+        assert_eq!(
+            report.shard_events.iter().sum::<u64>(),
+            1000,
+            "histogram counts only traffic under the current cut"
+        );
+        // The telemetry plane exposes the new boundaries.
+        assert_eq!(graph.node_bounds(0), vec![10, 64]);
+        assert_eq!(graph.telemetry()[0].bounds, vec![10, 64]);
+    }
+
+    #[test]
+    fn recut_rejects_invalid_targets() {
+        let res = Resolution::new(64, 64);
+        let spec = PipelineSpec::new()
+            .then(StageSpec::new(|_| PolarityFilter::keep(Polarity::On)).pinned())
+            .then(StageSpec::new(|res: Resolution| BackgroundActivityFilter::new(res, 500)));
+        let mut graph =
+            StageGraph::compile(&spec, res, &StageOptions { shards: 3, shard_threads: false });
+        let recut = |stage, bounds: Vec<u16>| Reconfigure::RecutStripes { stage, bounds };
+        // Serial (pinned) stage, unknown stage, wrong shard count,
+        // wrong terminal width, sub-halo stripe: all loud errors.
+        assert!(graph.reconfigure(&recut(0, vec![32, 64])).is_err());
+        assert!(graph.reconfigure(&recut(9, vec![32, 64])).is_err());
+        assert!(graph.reconfigure(&recut(1, vec![32, 64])).is_err(), "3 shards, 2 bounds");
+        assert!(graph.reconfigure(&recut(1, vec![10, 20, 60])).is_err(), "width 64");
+        assert!(graph.reconfigure(&recut(1, vec![10, 10, 64])).is_err(), "empty stripe");
+        // A valid re-cut still applies, and chunk changes are accepted
+        // as a no-op at this layer.
+        assert!(graph.reconfigure(&recut(1, vec![10, 20, 64])).is_ok());
+        assert!(graph.reconfigure(&Reconfigure::ChunkSize(512)).is_ok());
+        graph.finish_stages().unwrap();
+        assert!(graph.reconfigure(&recut(1, vec![12, 24, 64])).is_err(), "finished");
+    }
+
+    /// The serial [`Pipeline`] processor accepts chunk changes (edge
+    /// concern) but fails loudly on re-cuts it cannot honour.
+    #[test]
+    fn plain_pipeline_rejects_recuts() {
+        let mut p = Pipeline::new();
+        assert!(BatchProcessor::reconfigure(&mut p, &Reconfigure::ChunkSize(64)).is_ok());
+        let recut = Reconfigure::RecutStripes { stage: 0, bounds: vec![32, 64] };
+        assert!(BatchProcessor::reconfigure(&mut p, &recut).is_err());
+        assert!(BatchProcessor::telemetry(&p).is_empty());
     }
 }

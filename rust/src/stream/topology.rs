@@ -48,19 +48,20 @@
 
 use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
 use crate::aer::{Event, Resolution};
-use crate::metrics::NodeReport;
+use crate::metrics::{LiveNode, NodeReport};
 use crate::pipeline::fusion::SourceLayout;
 use crate::rt::channel::TrySendError;
 use crate::rt::{
     block_on, channel, sync_channel, yield_now, LocalExecutor, Sender, SyncReceiver, SyncSender,
 };
 
+use super::adapt::{Adaptor, AdaptiveConfig, AdaptiveRuntime};
 use super::merge::MergeCore;
 use super::sources::grow_resolution;
 use super::stage::{stripe_cut, stripe_index, BatchProcessor};
@@ -102,7 +103,8 @@ pub enum ThreadMode {
 /// Parameters for [`run_topology`].
 #[derive(Debug, Clone)]
 pub struct TopologyConfig {
-    /// Target events per batch (and the per-hop memory unit).
+    /// Target events per batch (and the per-hop memory unit). An
+    /// adaptive `chunk` controller may re-tune this mid-run.
     pub chunk_size: usize,
     /// Edge scheduling strategy (shared with the single-edge driver).
     pub driver: StreamDriver,
@@ -110,6 +112,9 @@ pub struct TopologyConfig {
     pub threads: ThreadMode,
     /// Sink routing.
     pub route: RoutePolicy,
+    /// Adaptive controllers to run at epoch barriers (`None` = the
+    /// static runtime). See [`super::adapt`].
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 impl From<StreamConfig> for TopologyConfig {
@@ -119,6 +124,7 @@ impl From<StreamConfig> for TopologyConfig {
             driver: config.driver,
             threads: ThreadMode::Inline,
             route: RoutePolicy::Broadcast,
+            adaptive: None,
         }
     }
 }
@@ -186,8 +192,9 @@ pub(crate) const HEARTBEAT_GRACE: Duration = Duration::from_millis(10);
 /// Per-source bookkeeping beside the merge lane.
 struct FusedInput<S: EventSource> {
     source: S,
-    events: u64,
-    batches: u64,
+    /// Live counter cell (events/batches pulled), shared with the
+    /// telemetry plane.
+    node: Arc<LiveNode>,
     /// Consecutive empty refills (live source with nothing pending).
     idle_polls: u32,
     /// When the current idle streak started (live sources only).
@@ -258,13 +265,15 @@ impl<S: EventSource> FusedSource<S> {
         FusedSource {
             inputs: sources
                 .into_iter()
-                .map(|source| FusedInput {
-                    source,
-                    events: 0,
-                    batches: 0,
-                    idle_polls: 0,
-                    idle_since: None,
-                    heartbeat: false,
+                .map(|source| {
+                    let node = Arc::new(LiveNode::new(source.describe()));
+                    FusedInput {
+                        source,
+                        node,
+                        idle_polls: 0,
+                        idle_since: None,
+                        heartbeat: false,
+                    }
                 })
                 .collect(),
             core: MergeCore::new(n),
@@ -303,20 +312,29 @@ impl<S: EventSource> FusedSource<S> {
         self.late_events
     }
 
-    /// Per-source counters for [`StreamReport::sources`].
+    /// Per-source counters for [`StreamReport::sources`]: a final
+    /// sample of each input's live cell, plus the source's own discard
+    /// count.
     pub fn node_reports(&self) -> Vec<NodeReport> {
         self.inputs
             .iter()
-            .map(|input| NodeReport {
-                name: input.source.describe(),
-                events: input.events,
-                batches: input.batches,
-                backpressure_waits: 0,
-                dropped: input.source.dropped(),
-                frames: 0,
-                shard_events: Vec::new(),
+            .map(|input| {
+                let mut report = input.node.sample();
+                report.dropped = input.source.dropped();
+                report
             })
             .collect()
+    }
+
+    /// Retarget the merged batch size (adaptive chunk controller): the
+    /// merge emits at most `chunk` events per batch from now on, and
+    /// every input receives the advisory
+    /// [`EventSource::set_chunk_hint`].
+    pub fn set_chunk(&mut self, chunk: usize) {
+        self.chunk = chunk.max(1);
+        for input in &mut self.inputs {
+            input.source.set_chunk_hint(self.chunk);
+        }
     }
 
     /// Single input, no layout: forward batches untouched.
@@ -326,8 +344,8 @@ impl<S: EventSource> FusedSource<S> {
             None => Ok(None),
             Some(batch) => {
                 if !batch.is_empty() {
-                    input.events += batch.len() as u64;
-                    input.batches += 1;
+                    input.node.add_events(batch.len() as u64);
+                    input.node.add_batch();
                 }
                 Ok(Some(batch))
             }
@@ -367,8 +385,8 @@ impl<S: EventSource> FusedSource<S> {
                 Ok(Poll::Idle)
             }
             Some(batch) => {
-                input.events += batch.len() as u64;
-                input.batches += 1;
+                input.node.add_events(batch.len() as u64);
+                input.node.add_batch();
                 input.idle_polls = 0;
                 input.idle_since = None;
                 if input.heartbeat {
@@ -476,6 +494,10 @@ impl<S: EventSource> EventSource for FusedSource<S> {
         // Layout rejections plus whatever the inputs discarded
         // themselves ([`Self::layout_dropped`] reports layout-only).
         self.dropped + self.inputs.iter().map(|i| i.source.dropped()).sum::<u64>()
+    }
+
+    fn set_chunk_hint(&mut self, chunk: usize) {
+        self.set_chunk(chunk);
     }
 
     fn describe(&self) -> String {
@@ -688,15 +710,14 @@ pub fn explicit_layout(
 }
 
 /// Counters produced by one edge drive, merged into [`StreamReport`].
+/// Per-sink counters live on the telemetry plane (one
+/// [`LiveNode`] per sink), not here.
 struct DriveOutcome {
     events_in: u64,
     events_out: u64,
     batches: u64,
     peak_in_flight: usize,
     backpressure_waits: u64,
-    per_sink_events: Vec<u64>,
-    per_sink_batches: Vec<u64>,
-    per_sink_waits: Vec<u64>,
 }
 
 /// Drive an N-source, M-sink topology to completion.
@@ -710,9 +731,26 @@ struct DriveOutcome {
 pub fn run_topology<S: EventSource, P: BatchProcessor, K: EventSink>(
     sources: Vec<S>,
     pipeline: &mut P,
+    sinks: Vec<K>,
+    layout: Option<SourceLayout>,
+    config: &TopologyConfig,
+) -> Result<StreamReport> {
+    let adaptive = config.adaptive.as_ref().map(AdaptiveConfig::build);
+    run_topology_with_adaptive(sources, pipeline, sinks, layout, config, adaptive)
+}
+
+/// [`run_topology`] with explicitly assembled adaptive controllers —
+/// the hook for custom [`Controller`](super::Controller)
+/// implementations (tests force re-cuts this way); [`run_topology`]
+/// itself builds the runtime from
+/// [`TopologyConfig::adaptive`].
+pub fn run_topology_with_adaptive<S: EventSource, P: BatchProcessor, K: EventSink>(
+    sources: Vec<S>,
+    pipeline: &mut P,
     mut sinks: Vec<K>,
     layout: Option<SourceLayout>,
     config: &TopologyConfig,
+    adaptive: Option<AdaptiveRuntime>,
 ) -> Result<StreamReport> {
     if sources.is_empty() {
         bail!("topology needs at least one source");
@@ -761,10 +799,10 @@ pub fn run_topology<S: EventSource, P: BatchProcessor, K: EventSink>(
     match config.threads {
         ThreadMode::Inline => {
             let mut merged = FusedSource::new(sources, layout, config.chunk_size);
-            drive_and_report(&mut merged, pipeline, &mut sinks, config, t0)
+            drive_and_report(&mut merged, pipeline, &mut sinks, config, adaptive, t0)
         }
         ThreadMode::PerSourceThread => {
-            run_threaded(sources, pipeline, &mut sinks, layout, config, t0)
+            run_threaded(sources, pipeline, &mut sinks, layout, config, adaptive, t0)
         }
     }
 }
@@ -777,6 +815,7 @@ fn run_threaded<S: EventSource, P: BatchProcessor, K: EventSink>(
     sinks: &mut Vec<K>,
     layout: Option<SourceLayout>,
     config: &TopologyConfig,
+    adaptive: Option<AdaptiveRuntime>,
     t0: Instant,
 ) -> Result<StreamReport> {
     let n = sources.len();
@@ -796,7 +835,7 @@ fn run_threaded<S: EventSource, P: BatchProcessor, K: EventSink>(
             taps.push(ChannelSource { rx, err, res, known, live, name });
         }
         let mut merged = FusedSource::new(taps, layout, config.chunk_size);
-        drive_and_report(&mut merged, pipeline, sinks, config, t0)
+        drive_and_report(&mut merged, pipeline, sinks, config, adaptive, t0)
         // `merged` (and with it every ring receiver) drops here, so any
         // pump still parked in a full-ring send unblocks before the
         // scope joins the threads.
@@ -817,23 +856,44 @@ fn run_threaded<S: EventSource, P: BatchProcessor, K: EventSink>(
 }
 
 /// Drive the merged edge with the configured driver, then flush sinks
-/// and assemble the report.
+/// and assemble the report — every per-node section reconstructed from
+/// a final sample of the telemetry plane.
 fn drive_and_report<S: EventSource, P: BatchProcessor, K: EventSink>(
     merged: &mut FusedSource<S>,
     pipeline: &mut P,
     sinks: &mut [K],
     config: &TopologyConfig,
+    adaptive: Option<AdaptiveRuntime>,
     t0: Instant,
 ) -> Result<StreamReport> {
     let canvas = merged.resolution();
+    let sink_nodes: Vec<Arc<LiveNode>> =
+        sinks.iter().map(|sink| Arc::new(LiveNode::new(sink.describe()))).collect();
+    // Only the coroutine drivers have a bounded edge channel whose
+    // full-queue suspensions mean anything; the sync loop's zero is
+    // "no gauge", and backpressure-keyed controllers must know that.
+    let gauged = matches!(config.driver, StreamDriver::Coroutine { .. });
+    let mut adaptor = adaptive.map(|rt| Adaptor::new(rt, config.chunk_size, gauged));
     let outcome = match config.driver {
-        StreamDriver::Sync => drive_sync(merged, pipeline, sinks, &config.route, canvas)?,
+        StreamDriver::Sync => {
+            drive_sync(merged, pipeline, sinks, &config.route, canvas, &sink_nodes, &mut adaptor)?
+        }
         StreamDriver::Coroutine { channel_capacity } => {
             let cap = channel_capacity.max(1);
             if sinks.len() == 1 {
-                drive_coro_single(merged, pipeline, &mut sinks[0], cap)?
+                let node = &sink_nodes[0];
+                drive_coro_single(merged, pipeline, &mut sinks[0], cap, node, &mut adaptor)?
             } else {
-                drive_coro_fan(merged, pipeline, sinks, &config.route, canvas, cap)?
+                drive_coro_fan(
+                    merged,
+                    pipeline,
+                    sinks,
+                    &config.route,
+                    canvas,
+                    cap,
+                    &sink_nodes,
+                    &mut adaptor,
+                )?
             }
         }
     };
@@ -848,15 +908,13 @@ fn drive_and_report<S: EventSource, P: BatchProcessor, K: EventSink>(
     for (i, sink) in sinks.iter_mut().enumerate() {
         let summary = sink.finish().context("stream sink finish")?;
         frames += summary.frames;
-        sink_reports.push(NodeReport {
-            name: sink.describe(),
-            events: outcome.per_sink_events[i],
-            batches: outcome.per_sink_batches[i],
-            backpressure_waits: outcome.per_sink_waits[i],
-            dropped: 0,
-            frames: summary.frames,
-            shard_events: Vec::new(),
-        });
+        let mut report = sink_nodes[i].sample();
+        report.frames = summary.frames;
+        // A ThreadedSink wrapper counts the full-ring suspensions its
+        // feeder hit on the pump ring (invisible to this driver's own
+        // queue accounting); fold them into the node view.
+        report.backpressure_waits += summary.backpressure_waits;
+        sink_reports.push(report);
     }
     Ok(StreamReport {
         events_in: outcome.events_in,
@@ -874,16 +932,20 @@ fn drive_and_report<S: EventSource, P: BatchProcessor, K: EventSink>(
         merge_dropped: merged.layout_dropped(),
         merge_stalls_broken: merged.stalls_broken(),
         merge_late_events: merged.late_events(),
+        adaptive: adaptor.map(Adaptor::finish),
     })
 }
 
 /// Baseline driver: one loop, no overlap, any fan-out width.
+#[allow(clippy::too_many_arguments)]
 fn drive_sync<S: EventSource, P: BatchProcessor, K: EventSink>(
     source: &mut FusedSource<S>,
     pipeline: &mut P,
     sinks: &mut [K],
     route: &RoutePolicy,
     canvas: Resolution,
+    sink_nodes: &[Arc<LiveNode>],
+    adaptor: &mut Option<Adaptor>,
 ) -> Result<DriveOutcome> {
     let m = sinks.len();
     let mut outcome = DriveOutcome {
@@ -892,9 +954,6 @@ fn drive_sync<S: EventSource, P: BatchProcessor, K: EventSink>(
         batches: 0,
         peak_in_flight: 0,
         backpressure_waits: 0,
-        per_sink_events: vec![0; m],
-        per_sink_batches: vec![0; m],
-        per_sink_waits: vec![0; m],
     };
     let mut idle = IdleBackoff::new();
     while let Some(batch) = source.next_batch().context("stream source")? {
@@ -910,32 +969,39 @@ fn drive_sync<S: EventSource, P: BatchProcessor, K: EventSink>(
         outcome.events_out += processed.len() as u64;
         if m == 1 {
             if !processed.is_empty() {
-                outcome.per_sink_events[0] += processed.len() as u64;
-                outcome.per_sink_batches[0] += 1;
+                sink_nodes[0].add_events(processed.len() as u64);
+                sink_nodes[0].add_batch();
             }
             sinks[0].consume(&processed).context("stream sink")?;
-            continue;
-        }
-        if processed.is_empty() {
-            continue;
-        }
-        if *route == RoutePolicy::Broadcast {
-            // Sinks borrow the batch; the sync path needs no owned
-            // copies (the coroutine path does, for its channels).
-            for (i, sink) in sinks.iter_mut().enumerate() {
-                outcome.per_sink_events[i] += processed.len() as u64;
-                outcome.per_sink_batches[i] += 1;
-                sink.consume(&processed).context("stream sink")?;
+        } else if !processed.is_empty() {
+            if *route == RoutePolicy::Broadcast {
+                // Sinks borrow the batch; the sync path needs no owned
+                // copies (the coroutine path does, for its channels).
+                for (i, sink) in sinks.iter_mut().enumerate() {
+                    sink_nodes[i].add_events(processed.len() as u64);
+                    sink_nodes[i].add_batch();
+                    sink.consume(&processed).context("stream sink")?;
+                }
+            } else {
+                for (i, part) in
+                    partition(processed, route, canvas, m).into_iter().enumerate()
+                {
+                    if part.is_empty() {
+                        continue;
+                    }
+                    sink_nodes[i].add_events(part.len() as u64);
+                    sink_nodes[i].add_batch();
+                    sinks[i].consume(&part).context("stream sink")?;
+                }
             }
-            continue;
         }
-        for (i, part) in partition(processed, route, canvas, m).into_iter().enumerate() {
-            if part.is_empty() {
-                continue;
+        if let Some(adaptor) = adaptor.as_mut() {
+            if let Some(chunk) = adaptor
+                .after_batch(&mut *pipeline, outcome.events_in, outcome.backpressure_waits)
+                .context("adaptive reconfiguration")?
+            {
+                source.set_chunk(chunk);
             }
-            outcome.per_sink_events[i] += part.len() as u64;
-            outcome.per_sink_batches[i] += 1;
-            sinks[i].consume(&part).context("stream sink")?;
         }
     }
     Ok(outcome)
@@ -956,16 +1022,23 @@ struct ProducerGauges {
 /// source, count them, and push them into the edge channel with
 /// try-then-suspend backpressure accounting. Used by both coroutine
 /// drivers so the pull/backoff/error logic cannot diverge.
+/// `chunk_request` is the consumer side's mailbox for adaptive chunk
+/// changes (same executor thread, so a plain `Cell` suffices): the
+/// producer applies a pending request before its next pull.
 fn spawn_producer<'a, S: EventSource>(
     ex: &LocalExecutor<'a>,
     source: &'a mut FusedSource<S>,
     tx: Sender<Vec<Event>>,
     gauges: &'a ProducerGauges,
     source_err: &'a RefCell<Option<anyhow::Error>>,
+    chunk_request: &'a Cell<Option<usize>>,
 ) {
     ex.spawn(async move {
         let mut idle = IdleBackoff::new();
         loop {
+            if let Some(chunk) = chunk_request.take() {
+                source.set_chunk(chunk);
+            }
             let batch = match source.next_batch() {
                 Ok(Some(batch)) => batch,
                 Ok(None) => break,
@@ -1014,10 +1087,12 @@ fn drive_coro_single<S: EventSource, P: BatchProcessor, K: EventSink>(
     pipeline: &mut P,
     sink: &mut K,
     channel_capacity: usize,
+    sink_node: &Arc<LiveNode>,
+    adaptor: &mut Option<Adaptor>,
 ) -> Result<DriveOutcome> {
     let gauges = ProducerGauges::default();
     let events_out = Cell::new(0u64);
-    let delivered = Cell::new(0u64);
+    let chunk_request: Cell<Option<usize>> = Cell::new(None);
     let source_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
     let stage_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
     let sink_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
@@ -1025,18 +1100,21 @@ fn drive_coro_single<S: EventSource, P: BatchProcessor, K: EventSink>(
     {
         let ex = LocalExecutor::new();
         let (tx, mut rx) = channel::<Vec<Event>>(channel_capacity);
-        spawn_producer(&ex, source, tx, &gauges, &source_err);
+        spawn_producer(&ex, source, tx, &gauges, &source_err, &chunk_request);
 
         // ---------------------------------------------------- consumer
         {
-            let (events_out, delivered) = (&events_out, &delivered);
-            let in_flight = &gauges.in_flight;
+            let events_out = &events_out;
+            let gauges = &gauges;
+            let chunk_request = &chunk_request;
             let (stage_err, sink_err) = (&stage_err, &sink_err);
             let pipeline = &mut *pipeline;
             let sink = &mut *sink;
+            let adaptor = &mut *adaptor;
+            let sink_node = sink_node.clone();
             ex.spawn(async move {
                 while let Some(batch) = rx.recv().await {
-                    in_flight.set(in_flight.get() - batch.len());
+                    gauges.in_flight.set(gauges.in_flight.get() - batch.len());
                     let processed = match pipeline.process_batch(&batch) {
                         Ok(processed) => processed,
                         Err(e) => {
@@ -1046,11 +1124,27 @@ fn drive_coro_single<S: EventSource, P: BatchProcessor, K: EventSink>(
                     };
                     events_out.set(events_out.get() + processed.len() as u64);
                     if !processed.is_empty() {
-                        delivered.set(delivered.get() + 1);
+                        sink_node.add_events(processed.len() as u64);
+                        sink_node.add_batch();
                     }
                     if let Err(e) = sink.consume(&processed) {
                         *sink_err.borrow_mut() = Some(e);
                         break; // dropping `rx` fails producer sends fast
+                    }
+                    if let Some(adaptor) = adaptor.as_mut() {
+                        match adaptor.after_batch(
+                            &mut *pipeline,
+                            gauges.events_in.get(),
+                            gauges.backpressure_waits.get(),
+                        ) {
+                            Ok(Some(chunk)) => chunk_request.set(Some(chunk)),
+                            Ok(None) => {}
+                            Err(e) => {
+                                *stage_err.borrow_mut() =
+                                    Some(e.context("adaptive reconfiguration"));
+                                break;
+                            }
+                        }
                     }
                 }
             });
@@ -1074,9 +1168,6 @@ fn drive_coro_single<S: EventSource, P: BatchProcessor, K: EventSink>(
         batches: gauges.batches.get(),
         peak_in_flight: gauges.peak_in_flight.get(),
         backpressure_waits: gauges.backpressure_waits.get(),
-        per_sink_events: vec![events_out.get()],
-        per_sink_batches: vec![delivered.get()],
-        per_sink_waits: vec![0],
     })
 }
 
@@ -1085,6 +1176,7 @@ fn drive_coro_single<S: EventSource, P: BatchProcessor, K: EventSink>(
 /// once and distributes per [`RoutePolicy`]; each sink sits behind its
 /// own bounded channel, so a slow sink backpressures the router (and
 /// transitively the producer) without blocking its siblings' queues.
+#[allow(clippy::too_many_arguments)]
 fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
     source: &mut FusedSource<S>,
     pipeline: &mut P,
@@ -1092,13 +1184,13 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
     route: &RoutePolicy,
     canvas: Resolution,
     channel_capacity: usize,
+    sink_nodes: &[Arc<LiveNode>],
+    adaptor: &mut Option<Adaptor>,
 ) -> Result<DriveOutcome> {
     let m = sinks.len();
     let gauges = ProducerGauges::default();
     let events_out = Cell::new(0u64);
-    let per_sink_events: Vec<Cell<u64>> = (0..m).map(|_| Cell::new(0)).collect();
-    let per_sink_batches: Vec<Cell<u64>> = (0..m).map(|_| Cell::new(0)).collect();
-    let per_sink_waits: Vec<Cell<u64>> = (0..m).map(|_| Cell::new(0)).collect();
+    let chunk_request: Cell<Option<usize>> = Cell::new(None);
     let source_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
     let stage_err: RefCell<Option<anyhow::Error>> = RefCell::new(None);
     let sink_errs: Vec<RefCell<Option<anyhow::Error>>> =
@@ -1107,7 +1199,7 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
     {
         let ex = LocalExecutor::new();
         let (tx, mut rx) = channel::<Vec<Event>>(channel_capacity);
-        spawn_producer(&ex, source, tx, &gauges, &source_err);
+        spawn_producer(&ex, source, tx, &gauges, &source_err, &chunk_request);
 
         // --------------------------------------------------- sink tasks
         let mut sink_txs = Vec::with_capacity(m);
@@ -1127,17 +1219,18 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
 
         // ------------------------------------------------------- router
         {
-            let (events_out, in_flight) = (&events_out, &gauges.in_flight);
-            let per_sink_events = &per_sink_events;
-            let per_sink_batches = &per_sink_batches;
-            let per_sink_waits = &per_sink_waits;
+            let events_out = &events_out;
+            let gauges = &gauges;
+            let chunk_request = &chunk_request;
             let stage_err = &stage_err;
             let pipeline = &mut *pipeline;
+            let adaptor = &mut *adaptor;
+            let sink_nodes = sink_nodes.to_vec();
             let route = *route;
             ex.spawn(async move {
                 let txs = sink_txs;
                 'route: while let Some(batch) = rx.recv().await {
-                    in_flight.set(in_flight.get() - batch.len());
+                    gauges.in_flight.set(gauges.in_flight.get() - batch.len());
                     let processed = match pipeline.process_batch(&batch) {
                         Ok(processed) => processed,
                         Err(e) => {
@@ -1146,31 +1239,45 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
                         }
                     };
                     events_out.set(events_out.get() + processed.len() as u64);
-                    if processed.is_empty() {
-                        continue;
-                    }
-                    for (i, part) in
-                        partition(processed, &route, canvas, m).into_iter().enumerate()
-                    {
-                        if part.is_empty() {
-                            continue;
-                        }
-                        per_sink_events[i].set(per_sink_events[i].get() + part.len() as u64);
-                        per_sink_batches[i].set(per_sink_batches[i].get() + 1);
-                        match txs[i].try_send(part) {
-                            Ok(()) => {}
-                            Err(TrySendError::Full(part)) => {
-                                per_sink_waits[i].set(per_sink_waits[i].get() + 1);
-                                if txs[i].send(part).await.is_err() {
-                                    // Sink tasks only hang up on error:
-                                    // abort the whole topology promptly
-                                    // (parity with the single-sink path)
-                                    // instead of streaming on until every
-                                    // sink dies.
-                                    break 'route;
-                                }
+                    if !processed.is_empty() {
+                        for (i, part) in
+                            partition(processed, &route, canvas, m).into_iter().enumerate()
+                        {
+                            if part.is_empty() {
+                                continue;
                             }
-                            Err(TrySendError::Closed(_)) => break 'route,
+                            sink_nodes[i].add_events(part.len() as u64);
+                            sink_nodes[i].add_batch();
+                            match txs[i].try_send(part) {
+                                Ok(()) => {}
+                                Err(TrySendError::Full(part)) => {
+                                    sink_nodes[i].add_backpressure_wait();
+                                    if txs[i].send(part).await.is_err() {
+                                        // Sink tasks only hang up on error:
+                                        // abort the whole topology promptly
+                                        // (parity with the single-sink path)
+                                        // instead of streaming on until every
+                                        // sink dies.
+                                        break 'route;
+                                    }
+                                }
+                                Err(TrySendError::Closed(_)) => break 'route,
+                            }
+                        }
+                    }
+                    if let Some(adaptor) = adaptor.as_mut() {
+                        match adaptor.after_batch(
+                            &mut *pipeline,
+                            gauges.events_in.get(),
+                            gauges.backpressure_waits.get(),
+                        ) {
+                            Ok(Some(chunk)) => chunk_request.set(Some(chunk)),
+                            Ok(None) => {}
+                            Err(e) => {
+                                *stage_err.borrow_mut() =
+                                    Some(e.context("adaptive reconfiguration"));
+                                break 'route;
+                            }
                         }
                     }
                 }
@@ -1199,9 +1306,6 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
         batches: gauges.batches.get(),
         peak_in_flight: gauges.peak_in_flight.get(),
         backpressure_waits: gauges.backpressure_waits.get(),
-        per_sink_events: per_sink_events.into_iter().map(Cell::into_inner).collect(),
-        per_sink_batches: per_sink_batches.into_iter().map(Cell::into_inner).collect(),
-        per_sink_waits: per_sink_waits.into_iter().map(Cell::into_inner).collect(),
     })
 }
 

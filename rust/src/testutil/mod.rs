@@ -35,6 +35,32 @@ pub fn synthetic_events_seeded(n: usize, width: u16, height: u16, seed: u64) -> 
         .collect()
 }
 
+/// A spatially skewed stream for adaptive-runtime tests and benches:
+/// 90% of events land in the hot left band `[0, width/8)`, the rest
+/// spread across the full canvas; timestamps ascend by 1 µs per event
+/// (each pixel's stream is time-ordered — the fan-in precondition).
+/// The uniform stripe cut is maximally wrong for this shape, which is
+/// what the `skew` controller exists to fix.
+pub fn hotspot_events_seeded(n: usize, width: u16, height: u16, seed: u64) -> Vec<Event> {
+    let mut rng = SplitMix64::new(seed);
+    let hot = (width / 8).max(1);
+    (0..n)
+        .map(|i| {
+            let x = if rng.next_u64() % 10 < 9 {
+                (rng.next_u64() % u64::from(hot)) as u16
+            } else {
+                (rng.next_u64() % u64::from(width)) as u16
+            };
+            Event {
+                t: i as u64,
+                x,
+                y: (rng.next_u64() % u64::from(height)) as u16,
+                p: Polarity::from_bool(rng.next_u64() & 1 == 1),
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -53,5 +79,17 @@ mod tests {
         let a = synthetic_events_seeded(100, 64, 64, 1);
         let b = synthetic_events_seeded(100, 64, 64, 2);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn hotspot_events_skew_left_and_stay_ordered() {
+        let events = hotspot_events_seeded(10_000, 128, 64, 3);
+        assert_eq!(validate_stream(&events, Resolution::new(128, 64)), None);
+        assert!(events.windows(2).all(|w| w[0].t <= w[1].t));
+        let hot = events.iter().filter(|e| e.x < 16).count();
+        // 90% targeted + ~12.5% of the uniform remainder ≈ 91%.
+        assert!(hot as f64 > 0.85 * events.len() as f64, "hot band holds {hot}");
+        // 1-wide canvases must not divide by zero.
+        assert_eq!(hotspot_events_seeded(10, 1, 1, 1).len(), 10);
     }
 }

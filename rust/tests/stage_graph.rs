@@ -9,8 +9,8 @@ use anyhow::Result;
 use aestream::aer::{Event, Resolution};
 use aestream::pipeline::{registry, PipelineSpec, StageSpec, TransformClass};
 use aestream::stream::{
-    run_topology, BatchProcessor, EventSink, MemorySource, SinkSummary, StageGraph,
-    StageOptions, StreamDriver, TopologyConfig,
+    run_topology, BatchProcessor, EventSink, MemorySource, Reconfigure, SinkSummary,
+    StageGraph, StageOptions, StreamDriver, TopologyConfig,
 };
 use aestream::testutil::prop::check;
 use aestream::testutil::{synthetic_events_seeded, SplitMix64};
@@ -99,6 +99,77 @@ fn prop_every_registered_op_shards_identically() {
                     && (reports[0].shard_events.is_empty()
                         || reports[0].shard_events.iter().sum::<u64>() == reports[0].events);
                 got == expected && counters_ok
+            },
+        );
+    }
+}
+
+/// A random valid stripe cut: `m` ascending bounds ending at `width`,
+/// every stripe at least `min_w` wide. `None` when the canvas cannot
+/// fit one.
+fn random_bounds(rng: &mut SplitMix64, width: u16, m: usize, min_w: u16) -> Option<Vec<u16>> {
+    let need = m * min_w as usize;
+    if (width as usize) < need || m < 2 {
+        return None;
+    }
+    let slack = width as usize - need;
+    let mut cuts: Vec<usize> =
+        (0..m - 1).map(|_| (rng.next_u64() as usize) % (slack + 1)).collect();
+    cuts.sort_unstable();
+    let mut bounds: Vec<u16> = cuts
+        .iter()
+        .enumerate()
+        .map(|(k, &c)| ((k + 1) * min_w as usize + c) as u16)
+        .collect();
+    bounds.push(width);
+    Some(bounds)
+}
+
+/// Adaptive-runtime acceptance: for **every registered op**, forcing a
+/// stripe re-cut after every epoch (epochs of 1–3 batches, shards 1–4,
+/// chunks 1–7) leaves the sharded output byte-identical to the serial
+/// pipeline — per-column state demonstrably survives arbitrary
+/// ownership moves via export_rows/import_rows.
+#[test]
+fn prop_every_registered_op_survives_forced_recuts() {
+    let ops = registry::transform_ops();
+    for op in &ops {
+        check(
+            &format!("re-cut sharded ≡ serial for op {}", op.name),
+            16,
+            |rng| {
+                let (events, res) = gen_stream(rng);
+                let chunk = 1 + (rng.next_u64() as usize) % 7;
+                let shards = 1 + (rng.next_u64() as usize) % 4;
+                let epoch = 1 + (rng.next_u64() as usize) % 3;
+                let seed = rng.next_u64();
+                (events, res, chunk, shards, epoch, seed)
+            },
+            |(events, res, chunk, shards, epoch, seed)| {
+                let spec = PipelineSpec::new().then((op.example)());
+                let expected = spec.build_pipeline(*res).process(events);
+                let opts = StageOptions { shards: *shards, shard_threads: false };
+                let mut graph = StageGraph::compile(&spec, *res, &opts);
+                let m = graph.node_shards(0);
+                let min_w = op.class.halo().max(1);
+                let mut rng = SplitMix64::new(*seed);
+                let mut got = Vec::new();
+                for (i, batch) in events.chunks(*chunk).enumerate() {
+                    got.extend(graph.process_batch(batch).unwrap());
+                    if m > 1 && (i + 1) % epoch == 0 {
+                        if let Some(bounds) = random_bounds(&mut rng, res.width, m, min_w)
+                        {
+                            graph
+                                .reconfigure(&Reconfigure::RecutStripes {
+                                    stage: 0,
+                                    bounds,
+                                })
+                                .unwrap();
+                        }
+                    }
+                }
+                graph.finish_stages().unwrap();
+                got == expected
             },
         );
     }

@@ -142,6 +142,7 @@ fn threaded_topology_is_ordered_and_memory_bounded() {
         driver: StreamDriver::Coroutine { channel_capacity: 1 },
         threads: ThreadMode::PerSourceThread,
         route: RoutePolicy::Broadcast,
+        adaptive: None,
     };
     let report =
         run_topology(sources, &mut Pipeline::new(), sinks, None, &config).unwrap();
