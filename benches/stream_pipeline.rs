@@ -12,6 +12,12 @@
 //! order either by the single-thread coroutine merge or with one OS
 //! thread per source feeding the executor over the lock-free ring.
 //!
+//! A graph section runs the same fan-in shape twice — through the
+//! legacy `stream::run_topology` entry and described as a `GraphSpec`
+//! (built + validated + compiled per iteration) — and asserts the
+//! graph-compiled path does not regress: the graph layer is a
+//! description, the engine underneath is shared.
+//!
 //! A sharded-stage section benchmarks the stage graph: one stateful
 //! stage chain (refractory + denoise, the heaviest per-event work in
 //! the op set) run serial vs stripe-sharded over 1/2/4 shard workers,
@@ -203,6 +209,101 @@ fn main() {
                 stats.throughput((per * k) as u64),
             ));
         }
+    }
+
+    // --- graph-compiled topology vs the legacy engine entry: the same
+    // 2-source fan-in broadcast shape, once through stream::run_topology
+    // (the fixed pre-redesign path) and once described as a GraphSpec
+    // and compiled (builder + validate + compile every iteration, so
+    // the rows include the full lowering cost). Event counts are
+    // asserted equal, and the graph path must not regress.
+    {
+        use aestream::stream::{GraphConfig, SourceOptions, Topology};
+        let k = 2usize;
+        let per = n / k;
+        let streams: Vec<Vec<Event>> = (0..k)
+            .map(|i| synthetic_events_seeded(per, res.width, res.height, 0x6AF + i as u64))
+            .collect();
+        let config = TopologyConfig {
+            chunk_size: 4096,
+            driver: StreamDriver::Coroutine { channel_capacity: 1 },
+            threads: ThreadMode::Inline,
+            route: RoutePolicy::Broadcast,
+            adaptive: None,
+        };
+        let mut means = std::collections::HashMap::new();
+        for &graphed in &[false, true] {
+            let name = if graphed { "graph-fanin2" } else { "legacy-fanin2" };
+            let mut peak = 0usize;
+            let mut waits = 0u64;
+            let stats = measure(1, samples, || {
+                let report = if graphed {
+                    let mut builder = Topology::builder();
+                    for (i, s) in streams.iter().enumerate() {
+                        builder = builder.source_with(
+                            &format!("in{i}"),
+                            MemorySource::new(s.clone(), res, config.chunk_size),
+                            SourceOptions::default(),
+                        );
+                    }
+                    builder
+                        .merge("fuse", &["in0", "in1"])
+                        .sink("out", NullSink::default())
+                        .build()
+                        .run(GraphConfig {
+                            chunk_size: config.chunk_size,
+                            driver: config.driver,
+                            adaptive: None,
+                        })
+                        .unwrap()
+                } else {
+                    let sources: Vec<MemorySource> = streams
+                        .iter()
+                        .map(|s| MemorySource::new(s.clone(), res, config.chunk_size))
+                        .collect();
+                    run_topology(
+                        sources,
+                        &mut Pipeline::new(),
+                        vec![NullSink::default()],
+                        None,
+                        &config,
+                    )
+                    .unwrap()
+                };
+                assert_eq!(report.events_in, (per * k) as u64, "{name}");
+                peak = report.peak_in_flight;
+                waits = report.backpressure_waits;
+                std::hint::black_box(report.events_out);
+            });
+            means.insert(name, stats.mean_s);
+            table.row(&[
+                name.into(),
+                config.chunk_size.to_string(),
+                stats.display_mean(),
+                fmt_rate(stats.throughput((per * k) as u64), "ev/s"),
+                peak.to_string(),
+                waits.to_string(),
+            ]);
+            json_lines.push(format!(
+                "{{\"name\":\"{name}\",\"chunk\":{},\"mean_s\":{:.6},\
+                 \"std_s\":{:.6},\"min_s\":{:.6},\"throughput_ev_s\":{:.0},\
+                 \"peak_in_flight\":{peak},\"backpressure_waits\":{waits}}}",
+                config.chunk_size,
+                stats.mean_s,
+                stats.std_s,
+                stats.min_s,
+                stats.throughput((per * k) as u64),
+            ));
+        }
+        // The graph layer is a description, not a new engine: compile
+        // overhead is per-run, not per-event, so anything past noise is
+        // a regression. 1.5× bounds CI jitter on shared runners.
+        assert!(
+            means["graph-fanin2"] <= means["legacy-fanin2"] * 1.5,
+            "graph-compiled path regressed vs legacy ({:.6}s vs {:.6}s)",
+            means["graph-fanin2"],
+            means["legacy-fanin2"]
+        );
     }
 
     // --- sharded stages: a stateful filter chain run serial vs as

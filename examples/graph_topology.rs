@@ -1,0 +1,99 @@
+//! Declarative topology graphs: the ROADMAP's **multi-device fan-out**.
+//!
+//! Two synthetic cameras fuse into one timestamp-ordered stream, share
+//! a denoise chain, then *split into two independent branches* — each
+//! with its own filter chain and its own sink. With built device
+//! artifacts (`make artifacts`), the branches terminate in two separate
+//! `DetectorSession`s (ON events to one detector, OFF to the other);
+//! without them, the example falls back to two frame binners so it
+//! always runs.
+//!
+//! Run: `cargo run --release --example graph_topology`
+
+use aestream::aer::Resolution;
+use aestream::camera::CameraConfig;
+use aestream::coordinator::SessionSink;
+use aestream::pipeline::{ops, PipelineSpec, StageSpec};
+use aestream::runtime::Device;
+use aestream::stream::{
+    CameraSource, FrameSink, FusionLayout, GraphConfig, RoutePolicy, StreamReport, Topology,
+    TopologyBuilder,
+};
+
+/// The shared part of the graph: two cameras → merge → denoise chain →
+/// polarity router. Each caller attaches its own pair of branches.
+fn trunk<'a>() -> TopologyBuilder<'a> {
+    Topology::builder()
+        .source("cam0", CameraSource::new(CameraConfig::default(), 200_000))
+        .source("cam1", CameraSource::new(CameraConfig::default(), 200_000))
+        .merge_with_layout("fuse", &["cam0", "cam1"], FusionLayout::Overlay)
+        .stages(
+            "denoise",
+            PipelineSpec::new()
+                .then(StageSpec::new(|res: Resolution| {
+                    ops::BackgroundActivityFilter::new(res, 2000)
+                })),
+        )
+        .route("split", RoutePolicy::Polarity)
+}
+
+fn branch_chain(period_us: u64) -> PipelineSpec {
+    PipelineSpec::new()
+        .then(StageSpec::new(move |res: Resolution| ops::RefractoryFilter::new(res, period_us)))
+}
+
+fn print_report(report: &StreamReport) {
+    println!(
+        "fused {} events ({} out) on {}x{} in {:?} — {} frames",
+        report.events_in,
+        report.events_out,
+        report.resolution.width,
+        report.resolution.height,
+        report.wall,
+        report.frames,
+    );
+    for node in &report.sources {
+        println!("  in  {}: {} events / {} batches", node.name, node.events, node.batches);
+    }
+    for node in &report.stages {
+        println!("  stage {}: {} in / {} dropped", node.name, node.events, node.dropped);
+    }
+    for node in &report.sinks {
+        println!(
+            "  out {}: {} events / {} batches, {} frames",
+            node.name, node.events, node.batches, node.frames
+        );
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let config = GraphConfig::default();
+    match Device::open_default() {
+        Ok(device) => {
+            // ON events feed one detector session, OFF events the
+            // other — two devices consuming one fused sensor stream.
+            let report = trunk()
+                .stages("on-chain", branch_chain(100))
+                .sink("det-on", SessionSink::sparse(&device)?)
+                .after("split")
+                .stages("off-chain", branch_chain(200))
+                .sink("det-off", SessionSink::sparse(&device)?)
+                .build()
+                .run(config)?;
+            print_report(&report);
+        }
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); using frame binners instead");
+            let report = trunk()
+                .stages("on-chain", branch_chain(100))
+                .sink("frames-on", FrameSink::new(Resolution::DAVIS_346, 10_000))
+                .after("split")
+                .stages("off-chain", branch_chain(200))
+                .sink("frames-off", FrameSink::new(Resolution::DAVIS_346, 10_000))
+                .build()
+                .run(config)?;
+            print_report(&report);
+        }
+    }
+    Ok(())
+}

@@ -14,8 +14,14 @@
 //! original AEStream CLI's free input/output pairing. Repeating
 //! `input`/`output` clauses builds a fan-in/fan-out topology: the
 //! inputs are merged in timestamp order onto a canvas (`--layout
-//! side-by-side|grid|overlay`, or explicit per-input `--offset X,Y`)
-//! and the outputs are fed per `--route` (broadcast by default).
+//! side-by-side|grid|overlay`, or explicit per-input `--offset X,Y` —
+//! declaring both is an error) and the outputs are fed per `--route`
+//! (broadcast by default). `branch [filter …]* output …` clauses give
+//! each output its *own* filter chain — the multi-branch graph shape.
+//! The whole clause syntax is sugar: everything lowers onto a
+//! [`crate::stream::GraphSpec`] through
+//! [`crate::coordinator::stream::lower_to_graph`], and a golden test
+//! asserts the lowering matches the hand-built builder graph.
 //!
 //! Filters parse into a deferred [`PipelineSpec`], **not** a built
 //! pipeline: geometry-keyed stages (refractory, denoise, flips) are
@@ -33,7 +39,8 @@ use anyhow::{bail, Context, Result};
 use crate::aer::{Polarity, Resolution};
 use crate::camera::CameraConfig;
 use crate::coordinator::stream::{
-    AdaptiveConfig, FusionLayout, Input, RoutePolicy, Sink, Source, StreamConfig, StreamDriver,
+    AdaptiveConfig, BranchSpec, FusionLayout, Input, RoutePolicy, Sink, Source, StreamConfig,
+    StreamDriver,
 };
 use crate::formats::Format;
 use crate::pipeline::{ops, PipelineSpec, StageSpec};
@@ -41,16 +48,20 @@ use crate::stream::adapt::parse_controllers;
 
 /// A parsed CLI invocation.
 pub enum Command {
-    /// `input …+ [filter …]* output …+ [--chunk N] [--sync] [--threads N]
-    /// [--route R] [--layout L] [--shards N] [--shard-threads]`
+    /// `input …+ [filter …]* ( output …+ | branch [filter …]* output … )
+    /// [--chunk N] [--sync] [--threads N] [--route R] [--layout L]
+    /// [--shards N] [--shard-threads]`
     Stream {
         /// One or more inputs (several fan in through the merge), each
         /// with its optional explicit canvas offset.
         inputs: Vec<Input>,
         /// The shared filter chain, deferred until geometry is known.
         spec: PipelineSpec,
-        /// One or more outputs (several fan out per `route`).
-        sinks: Vec<Sink>,
+        /// One or more fan-out branches. Legacy `output` clauses parse
+        /// as chain-free branches; `branch [filter …]* output …`
+        /// clauses carry their own filter chain — the declarative
+        /// topology graph's multi-branch shape.
+        branches: Vec<BranchSpec>,
         /// Chunking and edge-driver configuration.
         config: StreamConfig,
         /// `--threads N`: 0/1 keeps every source on the executor
@@ -299,15 +310,42 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
         spec.push(parse_filter(toks)?);
     }
 
-    // ---- outputs (one or more clauses fan out)
-    let mut sinks = Vec::new();
-    match toks.next() {
-        Some("output") => sinks.push(parse_output(toks)?),
-        other => bail!("expected `output`, got {other:?}"),
-    }
-    while toks.peek() == Some(&"output") {
-        toks.next();
-        sinks.push(parse_output(toks)?);
+    // ---- outputs: plain `output` clauses (chain-free fan-out), or
+    // `branch [filter …]* output …` clauses, each carrying its own
+    // filter chain (the multi-branch graph shape). The two forms don't
+    // mix — a branch *is* an output with a chain.
+    let mut branches: Vec<BranchSpec> = Vec::new();
+    match toks.peek() {
+        Some(&"output") => {
+            while toks.peek() == Some(&"output") {
+                toks.next();
+                branches.push(parse_output(toks)?.into());
+            }
+            if toks.peek() == Some(&"branch") {
+                bail!("mixing bare `output` clauses with `branch` clauses is ambiguous; \
+                       wrap every output in a branch");
+            }
+        }
+        Some(&"branch") => {
+            while toks.peek() == Some(&"branch") {
+                toks.next();
+                let mut branch_spec = PipelineSpec::new();
+                while toks.peek() == Some(&"filter") {
+                    toks.next();
+                    branch_spec.push(parse_filter(toks)?);
+                }
+                match toks.next() {
+                    Some("output") => branches
+                        .push(BranchSpec { spec: branch_spec, sink: parse_output(toks)? }),
+                    other => bail!("branch needs an `output` clause, got {other:?}"),
+                }
+            }
+            if toks.peek() == Some(&"output") {
+                bail!("mixing bare `output` clauses with `branch` clauses is ambiguous; \
+                       wrap every output in a branch");
+            }
+        }
+        other => bail!("expected `output` or `branch`, got {other:?}"),
     }
 
     // ---- streaming options
@@ -315,6 +353,7 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
     let mut threads = 1usize;
     let mut route = RoutePolicy::Broadcast;
     let mut layout = FusionLayout::default();
+    let mut layout_set = false;
     let mut shards = 1usize;
     let mut shard_threads = false;
     let mut sink_threads = false;
@@ -355,6 +394,7 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
                     "overlay" => FusionLayout::Overlay,
                     other => bail!("unknown layout {other:?} (side-by-side|grid|overlay)"),
                 };
+                layout_set = true;
             }
             "--shards" => {
                 shards = toks
@@ -387,6 +427,16 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
             extra => bail!("unexpected trailing argument {extra:?}"),
         }
     }
+    // `--layout` and per-input `--offset` both claim the canvas. The
+    // old behavior — offsets silently winning, documented but invisible
+    // at runtime — is now a parse error (and `GraphSpec::validate()`
+    // rejects the same conflict for library users).
+    if layout_set && inputs.iter().any(|input| input.offset.is_some()) {
+        bail!(
+            "--layout conflicts with explicit --offset placements: offsets define \
+             the canvas themselves — drop one of the two"
+        );
+    }
     let adaptive = match (controllers, epoch_batches) {
         (Some(kinds), epoch) => {
             let mut cfg = AdaptiveConfig::new(kinds);
@@ -401,7 +451,7 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
     Ok(Command::Stream {
         inputs,
         spec,
-        sinks,
+        branches,
         config,
         threads,
         route,
@@ -477,8 +527,9 @@ USAGE:
            [filter <polarity on|off | crop X Y W H | downsample F |
                     refractory US | denoise US | flip-x | flip-y |
                     transpose | time-shift US> [@serial]]...
-           output <file PATH | udp ADDR | stdout | null | frames WINDOW_US |
-                   view WINDOW_US>...
+           ( output <file PATH | udp ADDR | stdout | null | frames WINDOW_US |
+                     view WINDOW_US>...
+           | branch [filter <...> [@serial]]... output <...> ... )
            [--chunk EVENTS] [--sync] [--threads N]
            [--route broadcast|polarity|stripes]
            [--layout side-by-side|grid|overlay]
@@ -501,6 +552,13 @@ fused topology. Repeat `output` to fan out; --route picks broadcast
 --threads 2+ pins each source to its own OS thread, feeding the
 coroutine executor through a lock-free ring.
 
+Repeat `branch [filter …]* output …` instead of bare outputs to give
+every output its own filter chain: the merged stream splits per
+--route and each branch runs its private filters before its sink (one
+merge, several independent stage chains — the multi-device fan-out
+shape). --layout and per-input --offset both claim the canvas, so
+combining them is an error (offsets alone define explicit placements).
+
 Filters build for the geometry the *opened* inputs report (fused
 canvas included). --shards N runs every shardable filter as N
 stripe-shard nodes re-merged in order (append @serial to a filter to
@@ -516,8 +574,10 @@ batches (default 32) the driver samples live per-node counters and the
 named controllers act — `skew` re-cuts shard stripe boundaries from
 the observed per-shard load (stateful filters hand per-column state to
 the new owners, so output stays byte-identical to serial), `chunk`
-AIMD-tunes the batch size against edge backpressure. The report lists
-every epoch, re-cut (skew before/after), and chunk change.
+AIMD-tunes the batch size against edge backpressure. Third-party
+controllers registered via stream::register_controller(name, factory)
+resolve by name here too. The report lists every epoch, re-cut (skew
+before/after), and chunk change.
 
 EXAMPLES (paper Fig. 2B and §6 fusion):
   aestream input file recording.aedat output udp 10.0.0.1:3333
@@ -530,6 +590,10 @@ EXAMPLES (paper Fig. 2B and §6 fusion):
   aestream input udp 0.0.0.0:3333 --geometry 346x260 \\
            filter denoise 1000 output file out.aedat \\
            --shards 4 --adaptive skew,chunk --epoch 64 --sink-threads
+  aestream input synthetic input synthetic \\
+           filter denoise 1000 \\
+           branch filter polarity on output file on.aedat \\
+           branch filter refractory 100 output frames 10000
 ";
 
 #[cfg(test)]
@@ -545,11 +609,12 @@ mod tests {
         let cmd =
             parse(&sv(&["input", "file", "r.aedat", "output", "udp", "1.2.3.4:3333"])).unwrap();
         match cmd {
-            Command::Stream { inputs, sinks, .. } => {
+            Command::Stream { inputs, branches, .. } => {
                 assert_eq!(inputs.len(), 1);
-                assert_eq!(sinks.len(), 1);
+                assert_eq!(branches.len(), 1);
                 assert_eq!(inputs[0].offset, None);
-                match (&inputs[0].source, &sinks[0]) {
+                assert!(branches[0].spec.is_empty(), "bare outputs carry no chain");
+                match (&inputs[0].source, &branches[0].sink) {
                     (Source::File { path, geometry }, Sink::Udp(a)) => {
                         assert_eq!(*path, PathBuf::from("r.aedat"));
                         assert_eq!(*geometry, None);
@@ -560,6 +625,65 @@ mod tests {
             }
             _ => panic!("wrong parse"),
         }
+    }
+
+    #[test]
+    fn parses_branch_clauses_with_private_chains() {
+        let cmd = parse(&sv(&[
+            "input", "synthetic", "filter", "denoise", "1000", "branch", "filter", "polarity",
+            "on", "output", "null", "branch", "output", "frames", "5000",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { spec, branches, .. } => {
+                assert_eq!(spec.describe(), "denoise(1000µs)", "shared chain");
+                assert_eq!(branches.len(), 2);
+                assert_eq!(branches[0].spec.describe(), "polarity(on)");
+                assert!(matches!(branches[0].sink, Sink::Null));
+                assert!(branches[1].spec.is_empty());
+                assert!(matches!(branches[1].sink, Sink::Frames { window_us: 5000 }));
+            }
+            _ => panic!("wrong parse"),
+        }
+        // A branch without an output is malformed.
+        assert!(parse(&sv(&[
+            "input", "synthetic", "branch", "filter", "polarity", "on",
+        ]))
+        .is_err());
+        // Mixing bare outputs with branches is rejected, in either order.
+        for args in [
+            &["input", "synthetic", "branch", "output", "null", "output", "null"][..],
+            &["input", "synthetic", "output", "null", "branch", "output", "null"][..],
+        ] {
+            let err = format!("{}", parse(&sv(args)).unwrap_err());
+            assert!(err.contains("branch"), "got {err}");
+        }
+    }
+
+    /// The `--layout`-vs-`--offset` bugfix: the old parser accepted
+    /// both and silently ignored the layout at runtime; now the
+    /// conflict is a parse error (and `GraphSpec::validate()` rejects
+    /// the same combination for library users).
+    #[test]
+    fn layout_with_explicit_offsets_is_rejected() {
+        let err = parse(&sv(&[
+            "input", "file", "a.raw", "--geometry", "128x128", "--offset", "0,0", "input",
+            "file", "b.raw", "--geometry", "128x128", "--offset", "0,128", "output", "null",
+            "--layout", "grid",
+        ]))
+        .unwrap_err();
+        assert!(format!("{err}").contains("--offset"), "got {err}");
+        // Offsets alone stay fine (they define the canvas themselves)…
+        parse(&sv(&[
+            "input", "file", "a.raw", "--geometry", "128x128", "--offset", "0,0", "input",
+            "file", "b.raw", "--geometry", "128x128", "--offset", "0,128", "output", "null",
+        ]))
+        .unwrap();
+        // …and so does an explicit layout without offsets.
+        parse(&sv(&[
+            "input", "synthetic", "input", "synthetic", "output", "null", "--layout", "grid",
+        ]))
+        .unwrap();
     }
 
     #[test]
@@ -609,12 +733,12 @@ mod tests {
         let cmd = parse(&sv(&[
             "input", "file", "a.raw", "--geometry", "128x128", "--offset", "0,0", "input",
             "file", "b.raw", "--geometry", "128x128", "--offset", "0,128", "output", "null",
-            "--layout", "grid", "--shard-threads",
+            "--shard-threads",
         ]))
         .unwrap();
         match cmd {
             Command::Stream { inputs, layout, shards, shard_threads, .. } => {
-                assert_eq!(layout, FusionLayout::Grid);
+                assert_eq!(layout, FusionLayout::SideBySide, "offsets leave the default");
                 assert_eq!(shards, 1);
                 assert!(shard_threads);
                 assert_eq!(inputs[0].offset, Some((0, 0)));
@@ -626,6 +750,14 @@ mod tests {
                     _ => panic!("wrong parse"),
                 }
             }
+            _ => panic!("wrong parse"),
+        }
+        match parse(&sv(&[
+            "input", "synthetic", "input", "synthetic", "output", "null", "--layout", "grid",
+        ]))
+        .unwrap()
+        {
+            Command::Stream { layout, .. } => assert_eq!(layout, FusionLayout::Grid),
             _ => panic!("wrong parse"),
         }
         assert!(parse(&sv(&[
@@ -745,13 +877,50 @@ mod tests {
         ]))
         .unwrap();
         match cmd {
-            Command::Stream { inputs, sinks, threads, route, .. } => {
+            Command::Stream { inputs, branches, threads, route, .. } => {
                 assert_eq!(inputs.len(), 2);
-                assert_eq!(sinks.len(), 2);
+                assert_eq!(branches.len(), 2);
                 assert_eq!(threads, 2);
                 assert_eq!(route, RoutePolicy::Broadcast);
-                assert!(matches!(sinks[0], Sink::File(..)));
-                assert!(matches!(sinks[1], Sink::Null));
+                assert!(matches!(branches[0].sink, Sink::File(..)));
+                assert!(matches!(branches[1].sink, Sink::Null));
+            }
+            _ => panic!("wrong parse"),
+        }
+    }
+
+    /// `--adaptive` resolves third-party controller names through the
+    /// registry, end to end from the CLI string.
+    #[test]
+    fn adaptive_resolves_registered_controllers() {
+        use crate::stream::adapt::registry;
+        use crate::stream::{Controller, EpochSample, Reconfigure};
+        struct Noop;
+        impl Controller for Noop {
+            fn observe(&mut self, _s: &EpochSample) -> Vec<Reconfigure> {
+                Vec::new()
+            }
+            fn describe(&self) -> String {
+                "noop".into()
+            }
+        }
+        registry::register_controller("cli-noop", || Box::new(Noop)).unwrap();
+        match parse(&sv(&[
+            "input", "synthetic", "output", "null", "--adaptive", "cli-noop,skew",
+        ]))
+        .unwrap()
+        {
+            Command::Stream { adaptive, .. } => {
+                let adaptive = adaptive.expect("--adaptive parsed");
+                assert_eq!(
+                    adaptive.controllers,
+                    vec![
+                        crate::stream::ControllerKind::Custom("cli-noop".into()),
+                        crate::stream::ControllerKind::Skew,
+                    ]
+                );
+                // The config builds into a live runtime through the registry.
+                assert_eq!(adaptive.build().unwrap().controllers.len(), 2);
             }
             _ => panic!("wrong parse"),
         }

@@ -14,10 +14,10 @@ pub mod stream;
 
 pub use scenarios::{
     run_scenario, run_scenario_fused, run_scenario_source, FeedMode, ScenarioConfig,
-    ScenarioReport,
+    ScenarioReport, SessionSink,
 };
 pub use stream::{
-    run_stream, run_stream_with, run_topology, AdaptiveConfig, AdaptiveReport, ControllerKind,
-    FusionLayout, Input, RoutePolicy, Sink, Source, StreamConfig, StreamDriver, StreamReport,
-    TopologyOptions,
+    lower_to_graph, run_graph, run_stream, run_stream_with, run_topology, AdaptiveConfig,
+    AdaptiveReport, BranchSpec, ControllerKind, FusionLayout, Input, RoutePolicy, Sink, Source,
+    StreamConfig, StreamDriver, StreamReport, TopologyOptions,
 };

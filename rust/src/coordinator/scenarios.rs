@@ -155,6 +155,106 @@ impl ScenarioReport {
     }
 }
 
+/// An [`EventSink`](crate::stream::EventSink) over a
+/// [`DetectorSession`] — the ROADMAP's multi-device fan-out: in a
+/// topology graph, each branch can terminate in its *own* device
+/// session, so one merged sensor stream feeds several detectors at once
+/// (see `examples/graph_topology.rs`). Sparse sessions chunk each batch
+/// to the device's event capacity; dense sessions bin the batch into a
+/// host frame first. Events outside the detector's fixed plane are
+/// dropped and counted, never shipped.
+pub struct SessionSink<'d> {
+    session: DetectorSession<'d>,
+    frames: u64,
+    events: u64,
+    dropped: u64,
+}
+
+impl<'d> SessionSink<'d> {
+    /// Wrap an open session.
+    pub fn new(session: DetectorSession<'d>) -> Self {
+        SessionSink { session, frames: 0, events: 0, dropped: 0 }
+    }
+
+    /// Open a free-running sparse session on `device` (the full
+    /// AEStream configuration) and wrap it.
+    pub fn sparse(device: &'d Device) -> Result<Self> {
+        Ok(Self::new(DetectorSession::with_outputs(device, TransferMode::Sparse, false)?))
+    }
+
+    /// Events that reached the device path.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Events dropped (outside the detector plane, or over sparse
+    /// capacity on-device).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Recover the session (its [`TransferStats`] above all). Only
+    /// reachable when the caller still owns the sink — i.e. when
+    /// driving it by hand; a sink moved into a topology graph reports
+    /// through its `NodeReport` instead (frames, dropped).
+    pub fn into_session(self) -> DetectorSession<'d> {
+        self.session
+    }
+}
+
+impl crate::stream::EventSink for SessionSink<'_> {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let (h, w) = self.session.geometry();
+        let in_plane: Vec<Event> = batch
+            .iter()
+            .copied()
+            .filter(|ev| (ev.x as usize) < w && (ev.y as usize) < h)
+            .collect();
+        self.dropped += (batch.len() - in_plane.len()) as u64;
+        if in_plane.is_empty() {
+            return Ok(());
+        }
+        match self.session.mode() {
+            TransferMode::Sparse => {
+                for chunk in in_plane.chunks(self.session.max_events().max(1)) {
+                    let out = self.session.step_sparse(chunk)?;
+                    self.frames += 1;
+                    self.events += chunk.len() as u64;
+                    self.dropped += out.dropped_events as u64;
+                }
+            }
+            TransferMode::Dense => {
+                let mut frame = vec![0f32; h * w];
+                for ev in &in_plane {
+                    frame[ev.pixel_index(w as u16)] += ev.p.signum();
+                }
+                self.session.step_dense(&frame)?;
+                self.frames += 1;
+                self.events += in_plane.len() as u64;
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<crate::stream::SinkSummary> {
+        Ok(crate::stream::SinkSummary {
+            frames: self.frames,
+            dropped: self.dropped,
+            ..Default::default()
+        })
+    }
+
+    fn describe(&self) -> String {
+        match self.session.mode() {
+            TransferMode::Sparse => "session(sparse)".into(),
+            TransferMode::Dense => "session(dense)".into(),
+        }
+    }
+}
+
 /// Pace helper: sleep until event `t_us` (scaled) has elapsed since
 /// `start`. Infinite scale skips pacing entirely.
 #[inline]

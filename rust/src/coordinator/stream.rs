@@ -3,19 +3,21 @@
 //! [`crate::stream`]'s `EventSource`/`EventSink` traits.
 //!
 //! The [`Source`]/[`Input`] and [`Sink`] enums are the CLI-facing
-//! configuration; [`run_topology`] opens them, compiles the parsed
-//! [`PipelineSpec`] into a [`StageGraph`] for the *opened* canvas
-//! geometry (stateful filters are built from what the sources actually
-//! report, not from parse-time assumptions), and hands everything to
-//! [`crate::stream::run_topology`], which fans N sources in through a
-//! streaming timestamp-ordered merge (optionally one OS thread per
-//! source), runs the stage nodes (sharded per
-//! [`TopologyOptions::shards`]), and fans out to M sinks by
-//! [`RoutePolicy`]. The single-edge [`run_stream`]/[`run_stream_with`]
-//! are thin wrappers over the same driver. Unlike the old batch path,
-//! the stream is never materialized: a file source decodes in chunks,
-//! a UDP source ends after a bounded idle wait, and memory stays
-//! O(chunk) for arbitrarily long (or endless) inputs.
+//! configuration. [`lower_to_graph`] is the one lowering: it opens the
+//! inputs, builds a [`crate::stream::GraphSpec`] (sources → merge →
+//! shared `filters` chain → `split` router → per-branch chains →
+//! sinks) whose stage nodes compile for the *opened* canvas geometry
+//! (stateful filters are built from what the sources actually report,
+//! not from parse-time assumptions), and the graph's `compile()` runs
+//! it on the streaming driver. [`run_graph`] executes multi-branch
+//! topologies ([`BranchSpec`] per output, the CLI's `branch` clauses);
+//! the historical [`run_topology`] stays as a shim that lowers each
+//! sink to a chain-free branch. The single-edge
+//! [`run_stream`]/[`run_stream_with`] are thin wrappers over the same
+//! driver. Unlike the old batch path, the stream is never
+//! materialized: a file source decodes in chunks, a UDP source ends
+//! after a bounded idle wait, and memory stays O(chunk) for
+//! arbitrarily long (or endless) inputs.
 //!
 //! Geometry note: sinks that record geometry (file headers, frame
 //! binning) take it from the source *before* the first batch. File
@@ -40,13 +42,14 @@ use crate::formats::Format;
 use crate::pipeline::fusion::SourceLayout;
 use crate::pipeline::{Pipeline, PipelineSpec};
 use crate::stream::{
-    self, CameraSource, EventSink, EventSource, FileSink, FileSource, FrameSink, MemorySource,
-    NullSink, StageGraph, StageOptions, StdoutSink, ThreadedSink, UdpSink, UdpSource, ViewSink,
+    self, CameraSource, EventSink, EventSource, FileSink, FileSource, FrameSink, GraphConfig,
+    GraphSpec, MemorySource, NullSink, SourceOptions, StageOptions, StdoutSink, Topology,
+    UdpSink, UdpSource, ViewSink,
 };
 
 pub use crate::stream::{
-    AdaptiveConfig, AdaptiveReport, ControllerKind, RoutePolicy, StreamConfig, StreamDriver,
-    StreamReport, ThreadMode, TopologyConfig,
+    AdaptiveConfig, AdaptiveReport, ControllerKind, FusionLayout, RoutePolicy, StreamConfig,
+    StreamDriver, StreamReport, ThreadMode, TopologyConfig,
 };
 
 /// Where events come from.
@@ -154,16 +157,20 @@ impl Sink {
     }
 }
 
-/// Fused-canvas arrangement for multi-input topologies.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum FusionLayout {
-    /// Sources in one row, left to right (the historical default).
-    #[default]
-    SideBySide,
-    /// Sources tiled in a near-square row-major grid.
-    Grid,
-    /// All sources share the origin on one address plane.
-    Overlay,
+/// One fan-out branch of a CLI/coordinator topology: its own filter
+/// chain (often empty — the legacy shape) ending in one sink. The CLI's
+/// `branch filter … output …` clauses parse into these.
+pub struct BranchSpec {
+    /// The branch's private stage chain (geometry-deferred).
+    pub spec: PipelineSpec,
+    /// The sink terminating the branch.
+    pub sink: Sink,
+}
+
+impl From<Sink> for BranchSpec {
+    fn from(sink: Sink) -> Self {
+        BranchSpec { spec: PipelineSpec::new(), sink }
+    }
 }
 
 /// Topology-level options layered on the per-edge [`StreamConfig`].
@@ -176,8 +183,13 @@ pub struct TopologyOptions {
     pub source_threads: bool,
     /// How processed events are distributed across the sinks.
     pub route: RoutePolicy,
-    /// How fused inputs are arranged on the canvas (ignored when any
-    /// input declares an explicit `--offset`).
+    /// How fused inputs are arranged on the canvas. This field is a
+    /// *default preference*: when any input declares an explicit
+    /// `--offset`, the offsets define the canvas and this field is not
+    /// consulted (the lowering passes no layout to the merge node).
+    /// Only the CLI — where `--layout` is an explicit request — and
+    /// `GraphSpec::validate()` for builder users treat the combination
+    /// as a hard error.
     pub layout: FusionLayout,
     /// Shard workers per shardable pipeline stage (1 = serial).
     pub shards: usize,
@@ -281,35 +293,122 @@ fn edge_config(opts: &TopologyOptions) -> TopologyConfig {
 /// topology node, shardable stages spread over `opts.shards` workers),
 /// and fan out per `opts.route`. Stateful filters are built from the
 /// *opened* sources' geometry, never from parse-time assumptions.
+///
+/// **Legacy shim**: this is now sugar over the graph layer — each sink
+/// becomes a chain-free [`BranchSpec`] and the whole call lowers
+/// through [`lower_to_graph`]. Prefer [`run_graph`] (or
+/// [`Topology::builder`] directly) for new code; per-branch filter
+/// chains are only expressible there.
 pub fn run_topology(
     inputs: Vec<Input>,
     spec: PipelineSpec,
     sinks: Vec<Sink>,
     opts: TopologyOptions,
 ) -> Result<StreamReport> {
+    run_graph(inputs, spec, sinks.into_iter().map(Into::into).collect(), opts)
+}
+
+/// Drive a declarative multi-branch topology: inputs fan in through the
+/// merge, flow through the shared `spec` chain, and split per
+/// `opts.route` into branches that each run their *own* filter chain
+/// into their own sink — the CLI's `branch` clauses, or any
+/// [`BranchSpec`] list assembled in code.
+pub fn run_graph(
+    inputs: Vec<Input>,
+    spec: PipelineSpec,
+    branches: Vec<BranchSpec>,
+    opts: TopologyOptions,
+) -> Result<StreamReport> {
+    let config = GraphConfig {
+        chunk_size: opts.config.chunk_size,
+        driver: opts.config.driver,
+        adaptive: opts.adaptive.clone(),
+    };
+    lower_to_graph(inputs, spec, branches, &opts)?.run(config)
+}
+
+/// Lower CLI-shaped configuration onto a [`GraphSpec`]: one source node
+/// per input (`in0`, `in1`, …, pump-threaded per
+/// [`TopologyOptions::source_threads`]), a `fuse` merge when fusing, a
+/// `filters` node for the shared chain, a `split` router whenever the
+/// fan-out needs one, then per-branch `branch{j}` chains into `out{j}`
+/// sinks (pump-threaded per [`TopologyOptions::sink_threads`]). The
+/// clause syntax is sugar; the graph is the real program — the golden
+/// test asserts the CLI and hand-built builder summaries agree.
+pub fn lower_to_graph(
+    inputs: Vec<Input>,
+    spec: PipelineSpec,
+    branches: Vec<BranchSpec>,
+    opts: &TopologyOptions,
+) -> Result<GraphSpec<'static>> {
     if inputs.is_empty() {
         bail!("topology needs at least one input");
     }
-    if sinks.is_empty() {
+    if branches.is_empty() {
         bail!("topology needs at least one output");
     }
-    let opened = open_topology(inputs, &opts)?;
-    let mut sinks: Vec<Box<dyn EventSink>> = sinks
-        .into_iter()
-        .map(|k| k.into_sink(opened.canvas, opened.geometry_known))
-        .collect::<Result<_>>()?;
-    if opts.sink_threads {
-        // Mirror of per-source threads: each sink's blocking I/O moves
-        // onto its own pump, fed through a bounded ring.
-        sinks = sinks
-            .into_iter()
-            .map(|sink| Box::new(ThreadedSink::spawn(sink)) as Box<dyn EventSink>)
-            .collect();
-    }
+    let chunk = opts.config.chunk_size;
     let stage_opts =
         StageOptions { shards: opts.shards.max(1), shard_threads: opts.shard_threads };
-    let mut graph = StageGraph::compile(&spec, opened.canvas, &stage_opts);
-    stream::run_topology(opened.sources, &mut graph, sinks, opened.layout, &edge_config(&opts))
+    let any_offset = inputs.iter().any(|input| input.offset.is_some());
+    let fused = inputs.len() > 1 || any_offset;
+
+    let mut builder = Topology::builder();
+    let mut source_names = Vec::with_capacity(inputs.len());
+    for (i, input) in inputs.into_iter().enumerate() {
+        let name = format!("in{i}");
+        let source = input.source.into_source(chunk)?;
+        builder = builder.source_with(
+            &name,
+            source,
+            SourceOptions { offset: input.offset, threaded: opts.source_threads },
+        );
+        source_names.push(name);
+    }
+    if fused {
+        let refs: Vec<&str> = source_names.iter().map(String::as_str).collect();
+        // Explicit offsets define the canvas themselves; only pass the
+        // layout policy when it actually applies (a declared policy
+        // *plus* offsets is the conflict `validate()` rejects).
+        builder = if any_offset {
+            builder.merge("fuse", &refs)
+        } else {
+            builder.merge_with_layout("fuse", &refs, opts.layout)
+        };
+    }
+    if !spec.is_empty() {
+        builder = builder.stages_with("filters", spec, stage_opts);
+    }
+    // A router is also inserted for a *single* branch with its own
+    // chain, so the chain compiles as a branch node (prefixed
+    // `branch0/…` reports) instead of silently folding into the trunk
+    // (where the adaptive epoch loop would re-cut it).
+    let fan = branches.len() > 1
+        || opts.route != RoutePolicy::Broadcast
+        || branches.iter().any(|b| !b.spec.is_empty());
+    if fan {
+        builder = builder.route("split", opts.route);
+    }
+    // Geometry-recording sinks need the fused canvas before they open.
+    let (canvas, geometry_known) = builder.planned_geometry()?;
+    for (j, branch) in branches.into_iter().enumerate() {
+        if fan {
+            builder = builder.after("split");
+        }
+        if !branch.spec.is_empty() {
+            builder = builder.stages_with(&format!("branch{j}"), branch.spec, stage_opts);
+        }
+        let sink = branch.sink.into_sink(canvas, geometry_known)?;
+        let name = format!("out{j}");
+        builder = if opts.sink_threads {
+            // Mirror of per-source threads: each sink's blocking I/O
+            // moves onto its own pump, fed through a bounded ring.
+            builder.sink_threaded(&name, sink)
+        } else {
+            builder.sink(&name, sink)
+        };
+    }
+    Ok(builder.build())
 }
 
 /// Drive a source through a pipeline into a sink with the default

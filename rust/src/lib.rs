@@ -35,10 +35,19 @@
 //!   a bounded grace instead of stalling the merge), one shared stage
 //!   chain, M routed sinks (optionally one pump thread per sink), with
 //!   per-node counters in `StreamReport`;
+//! * [`stream::graph`] — declarative topology graphs: a
+//!   [`stream::GraphSpec`] of named source/merge/stage/router/sink
+//!   nodes with explicit edges, built via [`stream::Topology`]'s
+//!   fluent builder, validated (acyclicity, geometry propagation,
+//!   readable errors) and compiled onto the same driver — per-branch
+//!   stage chains into independent sinks, per-node thread placement;
+//!   the legacy fixed shape and the CLI clause syntax are lowerings;
 //! * [`stream::adapt`] — the adaptive runtime: controllers sample the
 //!   live telemetry plane ([`metrics::LiveNode`]) every N batches and
 //!   re-cut shard stripe boundaries / re-tune the chunk size at epoch
-//!   barriers, output byte-identical to serial across re-cuts;
+//!   barriers, output byte-identical to serial across re-cuts; custom
+//!   controllers register by name ([`stream::adapt::registry`]) and
+//!   resolve from `--adaptive` lists end to end;
 //! * [`engine`] — the Fig. 3 concurrency contenders (sync / threads /
 //!   coroutines / lock-free ring);
 //! * [`rt`] — the hand-rolled cooperative async runtime (coroutines);

@@ -6,7 +6,7 @@ use anyhow::Result;
 use aestream::bench::{fmt_rate, Table};
 use aestream::camera;
 use aestream::cli::{self, Command};
-use aestream::coordinator::{run_scenario, run_topology, ScenarioConfig, TopologyOptions};
+use aestream::coordinator::{run_graph, run_scenario, ScenarioConfig, TopologyOptions};
 use aestream::pipeline::registry;
 use aestream::runtime::Device;
 
@@ -23,7 +23,7 @@ fn main() -> Result<()> {
         Command::Stream {
             inputs,
             spec,
-            sinks,
+            branches,
             config,
             threads,
             route,
@@ -33,12 +33,13 @@ fn main() -> Result<()> {
             sink_threads,
             adaptive,
         } => {
-            let multi = inputs.len() > 1 || sinks.len() > 1;
-            let staged = !spec.is_empty() && (shards > 1 || shard_threads);
-            let report = run_topology(
+            let multi = inputs.len() > 1 || branches.len() > 1;
+            let branched = branches.iter().any(|b| !b.spec.is_empty());
+            let staged = (!spec.is_empty() || branched) && (shards > 1 || shard_threads);
+            let report = run_graph(
                 inputs,
                 spec,
-                sinks,
+                branches,
                 TopologyOptions {
                     config,
                     source_threads: threads > 1,
@@ -88,7 +89,7 @@ fn main() -> Result<()> {
                     report.merge_late_events,
                 );
             }
-            if multi || staged {
+            if multi || staged || branched {
                 for node in &report.stages {
                     let shard_note = if node.shard_events.is_empty() {
                         String::new()

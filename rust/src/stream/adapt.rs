@@ -235,33 +235,50 @@ impl Controller for ChunkController {
 
 // ---------------------------------------------------------- configuration
 
-/// A built-in controller, nameable from the CLI (`--adaptive skew,chunk`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// A controller nameable from the CLI (`--adaptive skew,chunk,…`): the
+/// two built-ins, or any third-party controller registered through
+/// [`registry::register_controller`].
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ControllerKind {
     /// [`SkewController`] with defaults.
     Skew,
     /// [`ChunkController`] with defaults.
     Chunk,
+    /// A controller resolved by name through [`registry`] at build time
+    /// (so a config stays a plain cloneable value while the factory
+    /// lives in the registry).
+    Custom(String),
 }
 
 impl ControllerKind {
-    /// Instantiate the controller with its default tuning.
-    pub fn build(self) -> Box<dyn Controller> {
+    /// Instantiate the controller. Built-ins never fail; a
+    /// [`Custom`](ControllerKind::Custom) name fails if it was
+    /// unregistered between parse and build.
+    pub fn build(&self) -> Result<Box<dyn Controller>> {
         match self {
-            ControllerKind::Skew => Box::new(SkewController::default()),
-            ControllerKind::Chunk => Box::new(ChunkController::default()),
+            ControllerKind::Skew => Ok(Box::new(SkewController::default())),
+            ControllerKind::Chunk => Ok(Box::new(ChunkController::default())),
+            ControllerKind::Custom(name) => registry::build(name),
         }
     }
 }
 
-/// Parse a CLI controller list: `"skew"`, `"chunk"`, or `"skew,chunk"`.
+/// Parse a CLI controller list: `"skew"`, `"chunk"`, `"skew,chunk"`, or
+/// any name registered through [`registry::register_controller`] —
+/// third-party controllers resolve end to end from `--adaptive`.
 pub fn parse_controllers(s: &str) -> Result<Vec<ControllerKind>> {
     let mut kinds = Vec::new();
     for name in s.split(',') {
         let kind = match name.trim() {
             "skew" => ControllerKind::Skew,
             "chunk" => ControllerKind::Chunk,
-            other => bail!("unknown controller {other:?} (skew|chunk)"),
+            other if registry::is_registered(other) => {
+                ControllerKind::Custom(other.to_string())
+            }
+            other => bail!(
+                "unknown controller {other:?} (known: {})",
+                registry::registered_names().join("|")
+            ),
         };
         if !kinds.contains(&kind) {
             kinds.push(kind);
@@ -271,6 +288,87 @@ pub fn parse_controllers(s: &str) -> Result<Vec<ControllerKind>> {
         bail!("--adaptive needs at least one controller (skew|chunk)");
     }
     Ok(kinds)
+}
+
+/// The pluggable controller registry: a public registration path for
+/// third-party [`Controller`] implementations, so custom policies work
+/// end to end — `register_controller("mine", …)` once at startup, then
+/// `--adaptive mine` on the CLI or
+/// [`ControllerKind::Custom`]`("mine")` in an [`AdaptiveConfig`].
+/// Before this, custom controllers could only ride
+/// [`run_topology_with_adaptive`](super::run_topology_with_adaptive)
+/// by hand.
+pub mod registry {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+
+    use anyhow::{bail, Result};
+
+    use super::Controller;
+
+    type Factory = Arc<dyn Fn() -> Box<dyn Controller> + Send + Sync>;
+
+    fn table() -> &'static Mutex<HashMap<String, Factory>> {
+        static TABLE: OnceLock<Mutex<HashMap<String, Factory>>> = OnceLock::new();
+        TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    /// Register a controller factory under `name`. The name becomes
+    /// valid in `--adaptive` lists and
+    /// [`parse_controllers`](super::parse_controllers). Built-in names
+    /// (`skew`, `chunk`) are reserved and duplicates are rejected —
+    /// registration is global and process-wide, so collisions should be
+    /// loud, not last-write-wins.
+    pub fn register_controller<F>(name: &str, factory: F) -> Result<()>
+    where
+        F: Fn() -> Box<dyn Controller> + Send + Sync + 'static,
+    {
+        let name = name.trim();
+        if name.is_empty() {
+            bail!("controller name cannot be empty");
+        }
+        if matches!(name, "skew" | "chunk") {
+            bail!("controller name {name:?} is reserved for a built-in");
+        }
+        let mut table = table().lock().unwrap();
+        if table.contains_key(name) {
+            bail!("controller {name:?} is already registered");
+        }
+        table.insert(name.to_string(), Arc::new(factory));
+        Ok(())
+    }
+
+    /// `true` when `name` resolves — a built-in or a registered custom.
+    pub fn is_registered(name: &str) -> bool {
+        matches!(name, "skew" | "chunk") || table().lock().unwrap().contains_key(name)
+    }
+
+    /// Every resolvable name, built-ins first, customs sorted.
+    pub fn registered_names() -> Vec<String> {
+        let mut names = vec!["skew".to_string(), "chunk".to_string()];
+        let mut custom: Vec<String> = table().lock().unwrap().keys().cloned().collect();
+        custom.sort();
+        names.extend(custom);
+        names
+    }
+
+    /// Instantiate a controller by name (built-in or registered).
+    pub fn build(name: &str) -> Result<Box<dyn Controller>> {
+        match name {
+            "skew" => Ok(Box::new(super::SkewController::default())),
+            "chunk" => Ok(Box::new(super::ChunkController::default())),
+            other => {
+                let factory = table().lock().unwrap().get(other).cloned();
+                match factory {
+                    Some(factory) => Ok(factory()),
+                    None => bail!(
+                        "controller {other:?} is not registered (known: {})",
+                        registered_names().join(", ")
+                    ),
+                }
+            }
+        }
+    }
 }
 
 /// Declarative adaptive configuration (clonable: lives inside
@@ -298,12 +396,17 @@ impl AdaptiveConfig {
         self
     }
 
-    /// Instantiate the configured controllers.
-    pub fn build(&self) -> AdaptiveRuntime {
-        AdaptiveRuntime {
+    /// Instantiate the configured controllers (fails when a
+    /// [`ControllerKind::Custom`] name is no longer registered).
+    pub fn build(&self) -> Result<AdaptiveRuntime> {
+        Ok(AdaptiveRuntime {
             epoch_batches: self.epoch_batches.max(1),
-            controllers: self.controllers.iter().map(|k| k.build()).collect(),
-        }
+            controllers: self
+                .controllers
+                .iter()
+                .map(ControllerKind::build)
+                .collect::<Result<_>>()?,
+        })
     }
 }
 
@@ -727,10 +830,46 @@ mod tests {
     #[test]
     fn adaptive_config_builds_runtime() {
         let cfg = AdaptiveConfig::new(parse_controllers("skew,chunk").unwrap()).with_epoch(4);
-        let rt = cfg.build();
+        let rt = cfg.build().unwrap();
         assert_eq!(rt.epoch_batches, 4);
         assert_eq!(rt.controllers.len(), 2);
         assert!(rt.controllers[0].describe().starts_with("skew"));
         assert!(rt.controllers[1].describe().starts_with("chunk"));
+    }
+
+    /// The registry closes the pluggable-controller loop: a registered
+    /// name parses from a CLI-style list, builds through
+    /// [`ControllerKind::Custom`], and bad names stay loud.
+    #[test]
+    fn registry_round_trips_custom_controllers() {
+        struct Fixed;
+        impl Controller for Fixed {
+            fn observe(&mut self, _sample: &EpochSample) -> Vec<Reconfigure> {
+                vec![Reconfigure::ChunkSize(512)]
+            }
+            fn describe(&self) -> String {
+                "fixed(512)".into()
+            }
+        }
+        registry::register_controller("fixed-512", || Box::new(Fixed)).unwrap();
+        // Reserved and duplicate names are rejected.
+        assert!(registry::register_controller("skew", || Box::new(Fixed)).is_err());
+        assert!(registry::register_controller("fixed-512", || Box::new(Fixed)).is_err());
+        assert!(registry::register_controller("", || Box::new(Fixed)).is_err());
+        assert!(registry::is_registered("fixed-512"));
+        assert!(registry::registered_names().contains(&"fixed-512".to_string()));
+        // CLI-style parse resolves the custom name.
+        let kinds = parse_controllers("fixed-512,chunk").unwrap();
+        assert_eq!(kinds[0], ControllerKind::Custom("fixed-512".into()));
+        assert_eq!(kinds[1], ControllerKind::Chunk);
+        // And builds into a working runtime.
+        let rt = AdaptiveConfig::new(kinds).with_epoch(2).build().unwrap();
+        assert_eq!(rt.controllers.len(), 2);
+        assert_eq!(rt.controllers[0].describe(), "fixed(512)");
+        // Unknown names fail at parse with the known set listed.
+        let err = format!("{}", parse_controllers("psychic").unwrap_err());
+        assert!(err.contains("skew") && err.contains("fixed-512"), "got {err}");
+        // An unregistered custom kind fails at build, not silently.
+        assert!(ControllerKind::Custom("never-registered".into()).build().is_err());
     }
 }

@@ -1,0 +1,1131 @@
+//! Declarative topology graphs: describe *any* source→…→sink shape as
+//! a value, validate it, and compile it onto the streaming machinery.
+//!
+//! The paper's claim is that coroutine streaming composes freely "from
+//! inputs to outputs" — yet until this layer the public API ran exactly
+//! one hard-coded shape: N sources → one fused merge → one shared stage
+//! chain → M routed sinks. A [`GraphSpec`] makes the graph itself a
+//! first-class, user-composable value (the same move vector makes with
+//! its source→transform→sink config graph):
+//!
+//! * **Nodes** — `Source`, `Merge`, `Stages` (a [`PipelineSpec`] with
+//!   its own shard placement), `Router` (a [`RoutePolicy`]), `Sink` —
+//!   each **named**, with per-node placement (a source on its own pump
+//!   thread, a stage chain sharded ×4, a sink behind its own pump)
+//!   instead of today's global flags.
+//! * **Edges** — explicit, by node name.
+//! * [`GraphSpec::validate`] — acyclicity, per-kind degree rules,
+//!   dangling-node detection, geometry propagation (layout/offset
+//!   conflicts are hard errors), route arity — all with readable
+//!   errors, before anything runs.
+//! * [`GraphSpec::compile`] — lowers the validated graph onto the
+//!   existing execution machinery: the fan-in [`FusedSource`] merge
+//!   (per-lane pump threads), a shared [`StageGraph`] chain, the
+//!   fan-out router, per-branch [`StageGraph`]s running inside their
+//!   branch tasks, [`ThreadedSink`] pumps, per-node
+//!   [`LiveNode`](crate::metrics::LiveNode) telemetry and the
+//!   [`adapt`](super::adapt) epoch loop. Everything expressible before
+//!   lowers to the *same* driver code, so legacy output is
+//!   byte-identical (property-tested in `rust/tests/graph_topology.rs`).
+//!
+//! Build graphs fluently with [`Topology::builder`]:
+//!
+//! ```no_run
+//! use aestream::stream::{Topology, GraphConfig, RoutePolicy, MemorySource, NullSink};
+//! use aestream::aer::Resolution;
+//! use aestream::pipeline::PipelineSpec;
+//!
+//! let res = Resolution::new(64, 64);
+//! let _report = Topology::builder()
+//!     .source("cam", MemorySource::new(Vec::new(), res, 1024))
+//!     .source("file", MemorySource::new(Vec::new(), res, 1024))
+//!     .merge("fuse", &["cam", "file"])
+//!     .stages("denoise", PipelineSpec::new())
+//!     .route("split", RoutePolicy::Broadcast)
+//!     .stages("left", PipelineSpec::new())
+//!     .sink("a", NullSink::default())
+//!     .after("split")
+//!     .stages("right", PipelineSpec::new())
+//!     .sink("b", NullSink::default())
+//!     .build()
+//!     .run(GraphConfig::default())?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The first genuinely new shape this unlocks is the ROADMAP's
+//! multi-device fan-out: one merged stream splitting into two
+//! independent stage chains feeding two detector sessions — see
+//! `examples/graph_topology.rs`.
+//!
+//! Current compile support is one merge trunk with one fan-out point
+//! (an explicit router, or implicitly the node whose output several
+//! branches consume); nested routers and per-stripe merges are future
+//! work and rejected with readable errors.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::aer::Resolution;
+use crate::pipeline::fusion::SourceLayout;
+use crate::pipeline::PipelineSpec;
+
+use super::adapt::AdaptiveConfig;
+use super::stage::{StageGraph, StageOptions};
+use super::topology::{
+    default_layout, explicit_layout, grid_layout, run_nodes, BranchRun, RoutePolicy,
+};
+use super::{EventSink, EventSource, StreamConfig, StreamDriver, StreamReport, ThreadedSink};
+
+/// Fused-canvas arrangement policy for a merge node (the CLI's
+/// `--layout`). Explicit per-source offsets
+/// ([`SourceOptions::offset`]) replace the policy entirely — declaring
+/// both is a validation error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FusionLayout {
+    /// Sources in one row, left to right (the historical default).
+    #[default]
+    SideBySide,
+    /// Sources tiled in a near-square row-major grid.
+    Grid,
+    /// All sources share the origin on one address plane.
+    Overlay,
+}
+
+impl FusionLayout {
+    fn label(&self) -> &'static str {
+        match self {
+            FusionLayout::SideBySide => "side-by-side",
+            FusionLayout::Grid => "grid",
+            FusionLayout::Overlay => "overlay",
+        }
+    }
+}
+
+/// Per-source-node placement options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SourceOptions {
+    /// Explicit placement on the fused canvas (the CLI's `--offset`).
+    /// Any offset switches the merge to the explicit layout; combining
+    /// offsets with a declared [`FusionLayout`] is a validation error.
+    pub offset: Option<(u16, u16)>,
+    /// Pin this source to its own OS pump thread, feeding the merge
+    /// through the lock-free ring (per-node form of the legacy
+    /// all-or-nothing `--threads`).
+    pub threaded: bool,
+}
+
+/// Execution parameters for a compiled graph. Threading and routing are
+/// *per-node* properties of the graph itself; only the edge-level knobs
+/// remain global.
+#[derive(Debug, Clone)]
+pub struct GraphConfig {
+    /// Target events per batch (and the per-hop memory unit).
+    pub chunk_size: usize,
+    /// Edge scheduling strategy.
+    pub driver: StreamDriver,
+    /// Adaptive controllers run at epoch barriers against the shared
+    /// trunk chain (`None` = static runtime).
+    pub adaptive: Option<AdaptiveConfig>,
+}
+
+impl From<StreamConfig> for GraphConfig {
+    fn from(config: StreamConfig) -> Self {
+        GraphConfig { chunk_size: config.chunk_size, driver: config.driver, adaptive: None }
+    }
+}
+
+impl Default for GraphConfig {
+    fn default() -> Self {
+        StreamConfig::default().into()
+    }
+}
+
+/// A sink slot: inline, or deferred-wrapped behind its own pump thread
+/// (the wrap happens at compile so the pump only spawns for graphs that
+/// actually run).
+enum SinkSlot<'a> {
+    Inline(Box<dyn EventSink + 'a>),
+    Threaded { describe: String, spawn: Box<dyn FnOnce() -> ThreadedSink + Send + 'a> },
+}
+
+impl SinkSlot<'_> {
+    fn describe(&self) -> String {
+        match self {
+            SinkSlot::Inline(sink) => sink.describe(),
+            SinkSlot::Threaded { describe, .. } => format!("thread({describe})"),
+        }
+    }
+}
+
+/// What a named node *is*.
+enum NodeKind<'a> {
+    Source { source: Box<dyn EventSource + 'a>, offset: Option<(u16, u16)>, threaded: bool },
+    Merge { layout: Option<FusionLayout> },
+    Stages { spec: PipelineSpec, opts: StageOptions },
+    Router { policy: RoutePolicy },
+    Sink { slot: SinkSlot<'a> },
+}
+
+impl NodeKind<'_> {
+    fn word(&self) -> &'static str {
+        match self {
+            NodeKind::Source { .. } => "source",
+            NodeKind::Merge { .. } => "merge",
+            NodeKind::Stages { .. } => "stages",
+            NodeKind::Router { .. } => "route",
+            NodeKind::Sink { .. } => "sink",
+        }
+    }
+}
+
+struct GraphNode<'a> {
+    name: String,
+    kind: NodeKind<'a>,
+}
+
+/// A declarative topology: named nodes plus explicit edges. Build one
+/// with [`Topology::builder`], check it with
+/// [`validate`](GraphSpec::validate), execute it with
+/// [`compile`](GraphSpec::compile)/[`run`](GraphSpec::run).
+///
+/// The lifetime `'a` bounds the sources and sinks; `'static` for the
+/// common case, shorter when a sink borrows (e.g. a detector session
+/// borrowing its device).
+pub struct GraphSpec<'a> {
+    nodes: Vec<GraphNode<'a>>,
+    edges: Vec<(String, String)>,
+}
+
+/// Namespace for [`Topology::builder`].
+pub struct Topology;
+
+impl Topology {
+    /// Start a fluent graph description.
+    pub fn builder<'a>() -> TopologyBuilder<'a> {
+        TopologyBuilder {
+            spec: GraphSpec { nodes: Vec::new(), edges: Vec::new() },
+            cursor: None,
+        }
+    }
+}
+
+/// Fluent [`GraphSpec`] construction. Every node-adding call connects
+/// the new node after the *cursor* (the most recently added node) and
+/// moves the cursor onto it; [`after`](TopologyBuilder::after) repoints
+/// the cursor at any existing node, which is how sibling branches fork
+/// from a router. Nothing is checked until
+/// [`GraphSpec::validate`]/[`compile`](GraphSpec::compile) — the
+/// builder itself never fails, so chains stay fluent.
+pub struct TopologyBuilder<'a> {
+    spec: GraphSpec<'a>,
+    cursor: Option<String>,
+}
+
+impl<'a> TopologyBuilder<'a> {
+    fn push(&mut self, name: &str, kind: NodeKind<'a>, link_from_cursor: bool) {
+        if link_from_cursor {
+            if let Some(cursor) = &self.cursor {
+                self.spec.edges.push((cursor.clone(), name.to_string()));
+            }
+        }
+        self.spec.nodes.push(GraphNode { name: name.to_string(), kind });
+        self.cursor = Some(name.to_string());
+    }
+
+    /// Add a source node (a graph root: no inbound edge).
+    pub fn source(self, name: &str, source: impl EventSource + 'a) -> Self {
+        self.source_with(name, source, SourceOptions::default())
+    }
+
+    /// [`source`](Self::source) with placement options.
+    pub fn source_with(
+        mut self,
+        name: &str,
+        source: impl EventSource + 'a,
+        opts: SourceOptions,
+    ) -> Self {
+        self.push(
+            name,
+            NodeKind::Source {
+                source: Box::new(source),
+                offset: opts.offset,
+                threaded: opts.threaded,
+            },
+            false,
+        );
+        self
+    }
+
+    /// Add the timestamp-ordered fan-in merge of the named sources.
+    /// With no declared layout, explicit source offsets win; otherwise
+    /// the sources sit side by side.
+    pub fn merge(mut self, name: &str, inputs: &[&str]) -> Self {
+        for input in inputs {
+            self.spec.edges.push((input.to_string(), name.to_string()));
+        }
+        self.push(name, NodeKind::Merge { layout: None }, false);
+        self
+    }
+
+    /// [`merge`](Self::merge) with an explicit canvas arrangement.
+    /// Combining this with per-source offsets is a validation error.
+    pub fn merge_with_layout(mut self, name: &str, inputs: &[&str], layout: FusionLayout) -> Self {
+        for input in inputs {
+            self.spec.edges.push((input.to_string(), name.to_string()));
+        }
+        self.push(name, NodeKind::Merge { layout: Some(layout) }, false);
+        self
+    }
+
+    /// Add a stage-chain node after the cursor (serial placement).
+    pub fn stages(self, name: &str, spec: PipelineSpec) -> Self {
+        self.stages_with(name, spec, StageOptions::default())
+    }
+
+    /// [`stages`](Self::stages) with shard placement: the chain's
+    /// shardable stages run as `opts.shards` stripe-shard workers,
+    /// inline or one OS thread each.
+    pub fn stages_with(mut self, name: &str, spec: PipelineSpec, opts: StageOptions) -> Self {
+        self.push(name, NodeKind::Stages { spec, opts }, true);
+        self
+    }
+
+    /// Add a fan-out router after the cursor. Each node subsequently
+    /// attached `.after()` this router starts its own branch.
+    pub fn route(mut self, name: &str, policy: RoutePolicy) -> Self {
+        self.push(name, NodeKind::Router { policy }, true);
+        self
+    }
+
+    /// Add a sink node after the cursor (terminates a branch).
+    pub fn sink(mut self, name: &str, sink: impl EventSink + 'a) -> Self {
+        self.push(name, NodeKind::Sink { slot: SinkSlot::Inline(Box::new(sink)) }, true);
+        self
+    }
+
+    /// [`sink`](Self::sink) pinned behind its own OS pump thread (the
+    /// per-node form of `--sink-threads`); requires a `'static` sink
+    /// because the pump outlives the builder's borrows.
+    pub fn sink_threaded(mut self, name: &str, sink: impl EventSink + 'static) -> Self {
+        let sink: Box<dyn EventSink> = Box::new(sink);
+        let describe = sink.describe();
+        self.push(
+            name,
+            NodeKind::Sink {
+                slot: SinkSlot::Threaded {
+                    describe,
+                    spawn: Box::new(move || ThreadedSink::spawn(sink)),
+                },
+            },
+            true,
+        );
+        self
+    }
+
+    /// Repoint the cursor at an existing node, so the next added node
+    /// chains after *it* — how sibling branches fork from one router.
+    pub fn after(mut self, node: &str) -> Self {
+        self.cursor = Some(node.to_string());
+        self
+    }
+
+    /// Add an explicit extra edge by name (power users; most chains
+    /// never need it).
+    pub fn edge(mut self, from: &str, to: &str) -> Self {
+        self.spec.edges.push((from.to_string(), to.to_string()));
+        self
+    }
+
+    /// Geometry the graph-so-far propagates: the fused canvas and
+    /// whether every source's extent is declared (vs observed-only).
+    /// Useful for opening geometry-recording sinks before adding their
+    /// nodes — the coordinator's lowering does exactly that.
+    pub fn planned_geometry(&self) -> Result<(Resolution, bool)> {
+        let (_, canvas, known) = planned_layout(&self.spec.nodes)?;
+        Ok((canvas, known))
+    }
+
+    /// Finish the description. Nothing has been checked yet — call
+    /// [`GraphSpec::validate`] (or let [`compile`](GraphSpec::compile)
+    /// do it) for the full pass.
+    pub fn build(self) -> GraphSpec<'a> {
+        self.spec
+    }
+}
+
+// ------------------------------------------------------------ validation
+
+/// The validated execution plan: node indices arranged into the
+/// supported trunk-and-branches family.
+struct Plan {
+    sources: Vec<usize>,
+    trunk: Vec<usize>,
+    route: RoutePolicy,
+    /// Per branch: its stage-chain nodes (possibly empty) and its sink.
+    branches: Vec<(Vec<usize>, usize)>,
+    layout: Option<SourceLayout>,
+    canvas: Resolution,
+}
+
+/// Geometry propagation over the node list alone (no edges needed):
+/// the merge layout — from explicit offsets or the declared policy —
+/// plus the resulting canvas and whether every source declares its
+/// extent. Shared by [`GraphSpec::plan`] and
+/// [`TopologyBuilder::planned_geometry`].
+fn planned_layout(nodes: &[GraphNode<'_>]) -> Result<(Option<SourceLayout>, Resolution, bool)> {
+    let mut resolutions = Vec::new();
+    let mut offsets: Vec<Option<(u16, u16)>> = Vec::new();
+    let mut known = true;
+    let mut first_offset: Option<&str> = None;
+    let mut merge: Option<(&str, Option<FusionLayout>)> = None;
+    for node in nodes {
+        match &node.kind {
+            NodeKind::Source { source, offset, .. } => {
+                resolutions.push(source.resolution());
+                offsets.push(*offset);
+                known &= source.geometry_known();
+                if offset.is_some() && first_offset.is_none() {
+                    first_offset = Some(&node.name);
+                }
+            }
+            NodeKind::Merge { layout } => {
+                if merge.is_some() {
+                    bail!(
+                        "graph has more than one merge node ({:?} and an earlier one); \
+                         per-stripe merges are not supported yet",
+                        node.name
+                    );
+                }
+                merge = Some((&node.name, *layout));
+            }
+            _ => {}
+        }
+    }
+    if resolutions.is_empty() {
+        bail!("graph has no source nodes");
+    }
+    let any_offset = first_offset.is_some();
+    let Some((merge_name, layout_choice)) = merge else {
+        if resolutions.len() > 1 {
+            bail!(
+                "{} sources but no merge node; add .merge(name, inputs) to fan them in",
+                resolutions.len()
+            );
+        }
+        if let Some(source) = first_offset {
+            bail!(
+                "source {source:?} declares an offset but the graph has no merge node \
+                 to place it on a canvas"
+            );
+        }
+        return Ok((None, resolutions[0], known));
+    };
+    if let (Some(layout), Some(source)) = (layout_choice, first_offset) {
+        // The documented-but-invisible legacy behavior (offsets
+        // silently overriding --layout) is now a hard error.
+        bail!(
+            "merge {merge_name:?} declares layout {:?} but source {source:?} also \
+             declares an explicit --offset; offsets define the canvas — drop \
+             one of the two",
+            layout.label(),
+        );
+    }
+    if !known {
+        bail!(
+            "fusing a source with unknown geometry needs a declared extent \
+             (the CLI's --geometry WxH): a live or headerless source only \
+             observes its bounds"
+        );
+    }
+    let layout = if any_offset {
+        let offsets: Vec<(u16, u16)> = offsets.iter().map(|o| o.unwrap_or((0, 0))).collect();
+        explicit_layout(&resolutions, &offsets)?
+    } else {
+        match layout_choice.unwrap_or_default() {
+            FusionLayout::SideBySide => default_layout(&resolutions)?,
+            FusionLayout::Grid => grid_layout(&resolutions)?,
+            FusionLayout::Overlay => SourceLayout::overlay(&resolutions),
+        }
+    };
+    let canvas = layout.canvas;
+    Ok((Some(layout), canvas, known))
+}
+
+impl<'a> GraphSpec<'a> {
+    /// One line per node: kind, name, inputs, payload description. The
+    /// canonical comparison form — the CLI-lowering golden test asserts
+    /// clause syntax and builder calls produce identical summaries.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for node in &self.nodes {
+            let inputs: Vec<&str> = self
+                .edges
+                .iter()
+                .filter(|(_, to)| *to == node.name)
+                .map(|(from, _)| from.as_str())
+                .collect();
+            let arrow = if inputs.is_empty() {
+                String::new()
+            } else {
+                format!(" <- {}", inputs.join(", "))
+            };
+            let detail = match &node.kind {
+                NodeKind::Source { source, offset, threaded } => {
+                    let mut d = format!(": {}", source.describe());
+                    if let Some((x, y)) = offset {
+                        d.push_str(&format!(" [offset {x},{y}]"));
+                    }
+                    if *threaded {
+                        d.push_str(" [thread]");
+                    }
+                    d
+                }
+                NodeKind::Merge { layout } => {
+                    let label = match layout {
+                        Some(l) => l.label(),
+                        None => "by-offsets-or-default",
+                    };
+                    format!(" [{label}]")
+                }
+                NodeKind::Stages { spec, opts } => {
+                    let mut d = format!(": {}", spec.describe());
+                    if opts.shards > 1 || opts.shard_threads {
+                        d.push_str(&format!(
+                            " [shards {}{}]",
+                            opts.shards.max(1),
+                            if opts.shard_threads { ", threads" } else { "" }
+                        ));
+                    }
+                    d
+                }
+                NodeKind::Router { policy } => format!(" [{policy:?}]"),
+                NodeKind::Sink { slot } => format!(": {}", slot.describe()),
+            };
+            out.push_str(&format!("{} {}{arrow}{detail}\n", node.kind.word(), node.name));
+        }
+        out
+    }
+
+    /// Full validation pass: unique names, resolvable edges, per-kind
+    /// degree rules, acyclicity, dangling-node detection, geometry
+    /// propagation (with layout/offset conflict rejection), and route
+    /// arity — every failure a readable error naming the node.
+    pub fn validate(&self) -> Result<()> {
+        self.plan().map(|_| ())
+    }
+
+    fn plan(&self) -> Result<Plan> {
+        // ---- names and edges resolve.
+        let mut index: HashMap<&str, usize> = HashMap::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            if index.insert(node.name.as_str(), i).is_some() {
+                bail!("duplicate node name {:?}", node.name);
+            }
+        }
+        let mut edges: Vec<(usize, usize)> = Vec::with_capacity(self.edges.len());
+        for (from, to) in &self.edges {
+            let f = *index.get(from.as_str()).with_context(|| {
+                format!("edge {from:?} -> {to:?} references unknown node {from:?}")
+            })?;
+            let t = *index.get(to.as_str()).with_context(|| {
+                format!("edge {from:?} -> {to:?} references unknown node {to:?}")
+            })?;
+            if edges.contains(&(f, t)) {
+                bail!("duplicate edge {from:?} -> {to:?}");
+            }
+            edges.push((f, t));
+        }
+        let n = self.nodes.len();
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        for &(f, t) in &edges {
+            out[f].push(t);
+            indeg[t] += 1;
+        }
+        let name = |i: usize| self.nodes[i].name.as_str();
+
+        // ---- per-kind degree rules.
+        for (i, node) in self.nodes.iter().enumerate() {
+            match &node.kind {
+                NodeKind::Source { .. } => {
+                    if indeg[i] != 0 {
+                        bail!("source {:?} cannot receive an edge", node.name);
+                    }
+                }
+                NodeKind::Merge { .. } => {
+                    if indeg[i] == 0 {
+                        bail!("merge {:?} has no inputs", node.name);
+                    }
+                    for &(f, t) in &edges {
+                        if t == i && !matches!(self.nodes[f].kind, NodeKind::Source { .. }) {
+                            bail!(
+                                "merge {:?} input {:?} is not a source; only sources \
+                                 fan into the merge",
+                                node.name,
+                                name(f)
+                            );
+                        }
+                    }
+                }
+                NodeKind::Stages { .. } => {
+                    if indeg[i] == 0 {
+                        bail!(
+                            "stage node {:?} has no input; chain it after another \
+                             node (or point the cursor with .after())",
+                            node.name
+                        );
+                    }
+                    if indeg[i] > 1 {
+                        bail!(
+                            "stage node {:?} has {} inputs; expected exactly 1",
+                            node.name,
+                            indeg[i]
+                        );
+                    }
+                }
+                NodeKind::Router { policy } => {
+                    if indeg[i] != 1 {
+                        bail!("router {:?} needs exactly 1 input, has {}", node.name, indeg[i]);
+                    }
+                    if out[i].is_empty() {
+                        bail!("router {:?} has no outputs", node.name);
+                    }
+                    if *policy == RoutePolicy::Polarity && out[i].len() != 2 {
+                        bail!(
+                            "polarity routing requires exactly 2 sinks, got {} \
+                             (router {:?})",
+                            out[i].len(),
+                            node.name
+                        );
+                    }
+                }
+                NodeKind::Sink { .. } => {
+                    if indeg[i] == 0 {
+                        bail!(
+                            "sink {:?} has no input; chain it after another node \
+                             (or point the cursor with .after())",
+                            node.name
+                        );
+                    }
+                    if indeg[i] > 1 {
+                        bail!("sink {:?} has {} inputs; expected exactly 1", node.name, indeg[i]);
+                    }
+                    if !out[i].is_empty() {
+                        bail!("sink {:?} cannot feed {:?}", node.name, name(out[i][0]));
+                    }
+                }
+            }
+        }
+
+        // ---- acyclicity (Kahn), so the walks below always terminate.
+        {
+            let mut indeg = indeg.clone();
+            let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+            let mut seen = 0usize;
+            while let Some(i) = queue.pop() {
+                seen += 1;
+                for &t in &out[i] {
+                    indeg[t] -= 1;
+                    if indeg[t] == 0 {
+                        queue.push(t);
+                    }
+                }
+            }
+            if seen < n {
+                let cyclic: Vec<&str> =
+                    (0..n).filter(|&i| indeg[i] > 0).map(name).collect();
+                bail!("graph has a cycle through {:?}", cyclic);
+            }
+        }
+
+        // ---- geometry propagation (layout, canvas, conflicts).
+        let (layout, canvas, geometry_known) = planned_layout(&self.nodes)?;
+
+        // ---- trunk extraction.
+        let sources: Vec<usize> = (0..n)
+            .filter(|&i| matches!(self.nodes[i].kind, NodeKind::Source { .. }))
+            .collect();
+        let merge = (0..n).find(|&i| matches!(self.nodes[i].kind, NodeKind::Merge { .. }));
+        let head = match merge {
+            Some(m) => {
+                for &s in &sources {
+                    if out[s].len() != 1 || out[s][0] != m {
+                        bail!(
+                            "source {:?} must feed the merge {:?} and nothing else \
+                             (per-stripe merges are not supported yet)",
+                            name(s),
+                            name(m)
+                        );
+                    }
+                }
+                m
+            }
+            None => sources[0], // planned_layout guarantees exactly one
+        };
+        let mut visited = vec![false; n];
+        for &s in &sources {
+            visited[s] = true;
+        }
+        visited[head] = true;
+        let mut trunk = Vec::new();
+        let mut at = head;
+        let (route, branch_heads): (RoutePolicy, Vec<usize>) = loop {
+            let children = &out[at];
+            match children.len() {
+                0 => bail!("node {:?} dangles: no path to a sink", name(at)),
+                1 => {
+                    let c = children[0];
+                    match &self.nodes[c].kind {
+                        NodeKind::Stages { .. } => {
+                            visited[c] = true;
+                            trunk.push(c);
+                            at = c;
+                        }
+                        NodeKind::Router { policy } => {
+                            visited[c] = true;
+                            break (*policy, out[c].clone());
+                        }
+                        NodeKind::Sink { .. } => break (RoutePolicy::Broadcast, vec![c]),
+                        NodeKind::Source { .. } | NodeKind::Merge { .. } => {
+                            // Degree rules above already rejected these.
+                            bail!("node {:?} cannot follow {:?}", name(c), name(at));
+                        }
+                    }
+                }
+                // Several children of a non-router node: an implicit
+                // broadcast fork (the builder's natural shape for
+                // "every branch sees everything").
+                _ => break (RoutePolicy::Broadcast, children.clone()),
+            }
+        };
+
+        // ---- branches: stage chains ending in exactly one sink.
+        let mut branches = Vec::with_capacity(branch_heads.len());
+        for head in branch_heads {
+            let mut stages = Vec::new();
+            let mut at = head;
+            let sink = loop {
+                visited[at] = true;
+                match &self.nodes[at].kind {
+                    NodeKind::Sink { .. } => break at,
+                    NodeKind::Stages { .. } => {
+                        stages.push(at);
+                        if out[at].len() > 1 {
+                            bail!(
+                                "branch node {:?} fans out; only one fan-out point \
+                                 per graph is supported",
+                                name(at)
+                            );
+                        }
+                        let Some(&c) = out[at].first() else {
+                            bail!("node {:?} dangles: no path to a sink", name(at))
+                        };
+                        at = c;
+                    }
+                    NodeKind::Router { .. } => bail!(
+                        "nested router {:?} is not supported yet (one fan-out \
+                         point per graph)",
+                        name(at)
+                    ),
+                    NodeKind::Source { .. } | NodeKind::Merge { .. } => {
+                        bail!("node {:?} cannot sit on a branch", name(at));
+                    }
+                }
+            };
+            branches.push((stages, sink));
+        }
+        if route == RoutePolicy::Polarity && branches.len() != 2 {
+            bail!("polarity routing requires exactly 2 sinks, got {}", branches.len());
+        }
+        if route == RoutePolicy::Stripes && !geometry_known {
+            bail!("stripes routing requires known source geometry (declare --geometry)");
+        }
+
+        // ---- nothing may float outside the trunk-and-branches family.
+        let orphans: Vec<&str> = (0..n).filter(|&i| !visited[i]).map(name).collect();
+        if !orphans.is_empty() {
+            bail!(
+                "dangling node(s) {:?}: not connected between a source and a sink",
+                orphans
+            );
+        }
+
+        Ok(Plan { sources, trunk, route, branches, layout, canvas })
+    }
+
+    /// Validate, then lower onto the execution machinery: the fan-in
+    /// merge (per-lane pump threads), the shared trunk [`StageGraph`],
+    /// the router, per-branch [`StageGraph`]s (report names prefixed
+    /// `branch/`), and the sinks (pump threads spawning now for
+    /// [`TopologyBuilder::sink_threaded`] nodes).
+    pub fn compile(self, config: GraphConfig) -> Result<CompiledTopology<'a>> {
+        let plan = self.plan()?;
+        let names: Vec<String> = self.nodes.iter().map(|n| n.name.clone()).collect();
+        let mut slots: Vec<Option<NodeKind<'a>>> =
+            self.nodes.into_iter().map(|n| Some(n.kind)).collect();
+
+        let mut sources = Vec::with_capacity(plan.sources.len());
+        for &i in &plan.sources {
+            let Some(NodeKind::Source { source, threaded, .. }) = slots[i].take() else {
+                unreachable!("plan.sources holds source nodes");
+            };
+            sources.push((source, threaded));
+        }
+
+        let mut shared = StageGraph::empty();
+        for &i in &plan.trunk {
+            let Some(NodeKind::Stages { spec, opts }) = slots[i].take() else {
+                unreachable!("plan.trunk holds stage nodes");
+            };
+            shared.append(StageGraph::compile(&spec, plan.canvas, &opts));
+        }
+
+        let mut branches = Vec::with_capacity(plan.branches.len());
+        for (stage_idxs, sink_idx) in &plan.branches {
+            let mut graph: Option<StageGraph> = None;
+            for &i in stage_idxs {
+                let Some(NodeKind::Stages { spec, opts }) = slots[i].take() else {
+                    unreachable!("plan branch stages hold stage nodes");
+                };
+                let prefix = format!("{}/", names[i]);
+                let compiled =
+                    StageGraph::compile_prefixed(&spec, plan.canvas, &opts, &prefix);
+                match &mut graph {
+                    None => graph = Some(compiled),
+                    Some(acc) => acc.append(compiled),
+                }
+            }
+            let Some(NodeKind::Sink { slot }) = slots[*sink_idx].take() else {
+                unreachable!("plan branch sinks hold sink nodes");
+            };
+            let sink: Box<dyn EventSink + 'a> = match slot {
+                SinkSlot::Inline(sink) => sink,
+                SinkSlot::Threaded { spawn, .. } => Box::new(spawn()),
+            };
+            branches.push(BranchRun { graph, sink, label: names[*sink_idx].clone() });
+        }
+
+        Ok(CompiledTopology {
+            sources,
+            shared,
+            branches,
+            layout: plan.layout,
+            route: plan.route,
+            config,
+        })
+    }
+
+    /// [`compile`](GraphSpec::compile) and drive to completion.
+    pub fn run(self, config: GraphConfig) -> Result<StreamReport> {
+        self.compile(config)?.run()
+    }
+}
+
+/// A validated graph lowered onto concrete execution structures, ready
+/// to [`run`](CompiledTopology::run) once.
+pub struct CompiledTopology<'a> {
+    sources: Vec<(Box<dyn EventSource + 'a>, bool)>,
+    shared: StageGraph,
+    branches: Vec<BranchRun<Box<dyn EventSink + 'a>>>,
+    layout: Option<SourceLayout>,
+    route: RoutePolicy,
+    config: GraphConfig,
+}
+
+impl CompiledTopology<'_> {
+    /// Drive the compiled graph to completion. Per-branch stage nodes
+    /// report after the trunk's in
+    /// [`StreamReport::stages`](super::StreamReport::stages), named
+    /// `branchnode/stagename`.
+    pub fn run(mut self) -> Result<StreamReport> {
+        let adaptive = match &self.config.adaptive {
+            Some(cfg) => Some(cfg.build().context("assembling adaptive controllers")?),
+            None => None,
+        };
+        run_nodes(
+            self.sources,
+            &mut self.shared,
+            self.branches,
+            self.layout,
+            self.route,
+            self.config.chunk_size,
+            self.config.driver,
+            adaptive,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::{Event, Resolution};
+    use crate::pipeline::{ops, StageSpec};
+    use crate::stream::{CaptureSink, MemorySource, NullSink};
+    use crate::testutil::synthetic_events_seeded;
+
+    fn mem(seed: u64, n: usize, res: Resolution) -> MemorySource {
+        MemorySource::new(synthetic_events_seeded(n, res.width, res.height, seed), res, 256)
+    }
+
+    #[test]
+    fn builder_chain_runs_the_legacy_shape() {
+        let res = Resolution::new(64, 64);
+        let report = Topology::builder()
+            .source("a", mem(1, 600, res))
+            .source("b", mem(2, 400, res))
+            .merge("fuse", &["a", "b"])
+            .route("split", RoutePolicy::Broadcast)
+            .sink("x", NullSink::default())
+            .after("split")
+            .sink("y", NullSink::default())
+            .build()
+            .run(GraphConfig { chunk_size: 128, ..Default::default() })
+            .unwrap();
+        assert_eq!(report.events_in, 1000);
+        assert_eq!(report.resolution, Resolution::new(128, 64));
+        assert_eq!(report.sources.len(), 2);
+        assert_eq!(report.sinks.len(), 2);
+        for sink in &report.sinks {
+            assert_eq!(sink.events, 1000, "broadcast must reach {}", sink.name);
+        }
+    }
+
+    #[test]
+    fn multi_branch_chains_run_independently_and_report_per_branch() {
+        let res = Resolution::new(64, 48);
+        let a = synthetic_events_seeded(2000, 64, 48, 7);
+        let b = synthetic_events_seeded(1500, 64, 48, 8);
+        let layout = SourceLayout::side_by_side(&[res, res]);
+        let (fused, _) = crate::pipeline::fusion::fuse(&[&a, &b], &layout);
+        let canvas = layout.canvas;
+
+        // Serial references: each branch chain applied to the whole
+        // merged stream (broadcast).
+        let on_spec = || {
+            PipelineSpec::new()
+                .then(StageSpec::new(|_| ops::PolarityFilter::keep(crate::aer::Polarity::On)))
+        };
+        let refr_spec = || {
+            PipelineSpec::new()
+                .then(StageSpec::new(|res: Resolution| ops::RefractoryFilter::new(res, 100)))
+        };
+        let expect_on = on_spec().build_pipeline(canvas).process(&fused);
+        let expect_refr = refr_spec().build_pipeline(canvas).process(&fused);
+
+        let (sink_on, got_on) = CaptureSink::new();
+        let (sink_refr, got_refr) = CaptureSink::new();
+        let report = Topology::builder()
+            .source("a", MemorySource::new(a, res, 256))
+            .source("b", MemorySource::new(b, res, 256))
+            .merge("fuse", &["a", "b"])
+            .route("split", RoutePolicy::Broadcast)
+            .stages("keep-on", on_spec())
+            .sink("on", sink_on)
+            .after("split")
+            .stages_with(
+                "cooldown",
+                refr_spec(),
+                StageOptions { shards: 2, shard_threads: false },
+            )
+            .sink("refr", sink_refr)
+            .build()
+            .run(GraphConfig { chunk_size: 256, ..Default::default() })
+            .unwrap();
+
+        assert_eq!(*got_on.lock().unwrap(), expect_on, "branch chain ≠ serial");
+        assert_eq!(*got_refr.lock().unwrap(), expect_refr, "sharded branch chain ≠ serial");
+        // Per-branch stage nodes land in the report, prefixed.
+        let names: Vec<&str> = report.stages.iter().map(|s| s.name.as_str()).collect();
+        assert!(
+            names.iter().any(|n| n.starts_with("keep-on/")),
+            "missing keep-on branch report in {names:?}"
+        );
+        assert!(
+            names.iter().any(|n| n.starts_with("cooldown/")),
+            "missing cooldown branch report in {names:?}"
+        );
+        assert_eq!(report.sinks[0].events, expect_on.len() as u64);
+        assert_eq!(report.sinks[1].events, expect_refr.len() as u64);
+    }
+
+    #[test]
+    fn validate_rejects_malformed_graphs() {
+        let res = Resolution::new(32, 32);
+        // Duplicate name.
+        let g = Topology::builder()
+            .source("a", mem(1, 10, res))
+            .sink("a", NullSink::default())
+            .build();
+        assert!(format!("{}", g.validate().unwrap_err()).contains("duplicate node name"));
+        // Unknown edge target.
+        let g = Topology::builder()
+            .source("a", mem(1, 10, res))
+            .sink("out", NullSink::default())
+            .edge("a", "ghost")
+            .build();
+        assert!(format!("{}", g.validate().unwrap_err()).contains("unknown node"));
+        // Cycle: s1 ↔ s2 feed each other (each with exactly one input,
+        // so the cycle — not a degree rule — is what must fire).
+        let g = Topology::builder()
+            .source("a", mem(1, 10, res))
+            .after("s2")
+            .stages("s1", PipelineSpec::new())
+            .stages("s2", PipelineSpec::new())
+            .after("a")
+            .sink("out", NullSink::default())
+            .build();
+        assert!(format!("{}", g.validate().unwrap_err()).contains("cycle"));
+        // Dangling node.
+        let g = Topology::builder()
+            .source("a", mem(1, 10, res))
+            .sink("out", NullSink::default())
+            .source("floating", mem(2, 10, res))
+            .build();
+        let err = format!("{}", g.validate().unwrap_err());
+        assert!(err.contains("no merge node"), "got {err}");
+        // Sink with no input.
+        let g = Topology::builder().source("a", mem(1, 10, res)).build();
+        assert!(format!("{}", g.validate().unwrap_err()).contains("dangles"));
+        // Polarity arity through a router.
+        let g = Topology::builder()
+            .source("a", mem(1, 10, res))
+            .route("split", RoutePolicy::Polarity)
+            .sink("only", NullSink::default())
+            .build();
+        assert!(format!("{}", g.validate().unwrap_err()).contains("polarity"));
+        // Two merges.
+        let g = Topology::builder()
+            .source("a", mem(1, 10, res))
+            .source("b", mem(2, 10, res))
+            .merge("m1", &["a"])
+            .merge("m2", &["b"])
+            .sink("out", NullSink::default())
+            .build();
+        assert!(format!("{}", g.validate().unwrap_err()).contains("more than one merge"));
+    }
+
+    #[test]
+    fn layout_and_offset_conflict_is_a_hard_error() {
+        let res = Resolution::new(32, 32);
+        let g = Topology::builder()
+            .source_with(
+                "a",
+                mem(1, 10, res),
+                SourceOptions { offset: Some((0, 0)), threaded: false },
+            )
+            .source("b", mem(2, 10, res))
+            .merge_with_layout("fuse", &["a", "b"], FusionLayout::Grid)
+            .sink("out", NullSink::default())
+            .build();
+        let err = format!("{}", g.validate().unwrap_err());
+        assert!(err.contains("--offset"), "got {err}");
+        // Offsets alone are fine.
+        let g = Topology::builder()
+            .source_with(
+                "a",
+                mem(1, 10, res),
+                SourceOptions { offset: Some((0, 0)), threaded: false },
+            )
+            .source_with(
+                "b",
+                mem(2, 10, res),
+                SourceOptions { offset: Some((0, 40)), threaded: false },
+            )
+            .merge("fuse", &["a", "b"])
+            .sink("out", NullSink::default())
+            .build();
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn implicit_broadcast_fork_without_a_router() {
+        let res = Resolution::new(32, 32);
+        let events = synthetic_events_seeded(500, 32, 32, 3);
+        let (s1, got1) = CaptureSink::new();
+        let (s2, got2) = CaptureSink::new();
+        let report = Topology::builder()
+            .source("a", MemorySource::new(events.clone(), res, 64))
+            .sink("x", s1)
+            .after("a")
+            .sink("y", s2)
+            .build()
+            .run(GraphConfig { chunk_size: 64, ..Default::default() })
+            .unwrap();
+        assert_eq!(report.sinks.len(), 2);
+        assert_eq!(*got1.lock().unwrap(), events);
+        assert_eq!(*got2.lock().unwrap(), events);
+    }
+
+    #[test]
+    fn threaded_source_and_sink_placement_flow_through() {
+        let res = Resolution::new(64, 64);
+        let report = Topology::builder()
+            .source_with(
+                "a",
+                mem(4, 3000, res),
+                SourceOptions { offset: None, threaded: true },
+            )
+            .source("b", mem(5, 2000, res))
+            .merge("fuse", &["a", "b"])
+            .sink_threaded("out", NullSink::default())
+            .build()
+            .run(GraphConfig { chunk_size: 256, ..Default::default() })
+            .unwrap();
+        assert_eq!(report.events_in, 5000);
+        assert_eq!(report.sources[0].name, "thread(memory(3000 events))");
+        assert_eq!(report.sources[1].name, "memory(2000 events)");
+        assert!(report.sinks[0].name.starts_with("thread("), "{:?}", report.sinks[0].name);
+    }
+
+    #[test]
+    fn summary_is_deterministic_and_names_every_node() {
+        let res = Resolution::new(32, 32);
+        let g = Topology::builder()
+            .source("cam", mem(1, 10, res))
+            .source("file", mem(2, 10, res))
+            .merge_with_layout("fuse", &["cam", "file"], FusionLayout::Overlay)
+            .stages_with(
+                "filters",
+                PipelineSpec::new()
+                    .then(StageSpec::new(|res: Resolution| ops::RefractoryFilter::new(res, 50))),
+                StageOptions { shards: 2, shard_threads: true },
+            )
+            .route("split", RoutePolicy::Stripes)
+            .sink("left", NullSink::default())
+            .after("split")
+            .sink("right", NullSink::default())
+            .build();
+        let summary = g.summary();
+        assert!(summary.contains("merge fuse <- cam, file [overlay]"), "{summary}");
+        assert!(summary.contains("[shards 2, threads]"), "{summary}");
+        assert!(summary.contains("route split <- filters [Stripes]"), "{summary}");
+        assert!(summary.contains("sink right <- split: null"), "{summary}");
+        assert_eq!(summary, g.summary(), "summary must be stable");
+    }
+
+    #[test]
+    fn compile_rejects_stripes_over_observed_geometry() {
+        struct Observed;
+        impl EventSource for Observed {
+            fn next_batch(&mut self) -> anyhow::Result<Option<Vec<Event>>> {
+                Ok(None)
+            }
+            fn resolution(&self) -> Resolution {
+                Resolution::new(1, 1)
+            }
+            fn geometry_known(&self) -> bool {
+                false
+            }
+        }
+        let g = Topology::builder()
+            .source("live", Observed)
+            .route("split", RoutePolicy::Stripes)
+            .sink("x", NullSink::default())
+            .after("split")
+            .sink("y", NullSink::default())
+            .build();
+        let err = format!("{}", g.validate().unwrap_err());
+        assert!(err.contains("stripes"), "got {err}");
+    }
+}

@@ -20,6 +20,15 @@
 //! out to M sinks by [`RoutePolicy`]. [`run`] itself is a thin
 //! single-edge wrapper over [`topology::run_topology`].
 //!
+//! The graph *shape* is itself a first-class value ([`graph`]): a
+//! [`GraphSpec`] of named source/merge/stage/router/sink nodes with
+//! explicit edges, built fluently with [`Topology::builder`], checked
+//! by `validate()` (acyclicity, geometry propagation, readable errors)
+//! and lowered by `compile()` onto the same driver —
+//! [`topology::run_topology`] is the one fixed shape, the graph layer
+//! composes every other one (per-branch stage chains into independent
+//! sinks, per-node thread placement).
+//!
 //! The stage chain between fan-in and fan-out is any
 //! [`BatchProcessor`]: the serial [`Pipeline`], or a [`StageGraph`]
 //! ([`stage`]) that compiles each stage into its own topology node —
@@ -44,6 +53,7 @@
 //! stays byte-identical to serial across arbitrarily many re-cuts.
 
 pub mod adapt;
+pub mod graph;
 pub(crate) mod merge;
 pub mod sinks;
 pub mod sources;
@@ -59,11 +69,17 @@ use crate::metrics::NodeReport;
 use crate::pipeline::Pipeline;
 
 pub use adapt::{
-    AdaptiveConfig, AdaptiveReport, AdaptiveRuntime, ChunkController, Controller,
-    ControllerKind, EpochSample, Reconfigure, SkewController, StageSample, StageTelemetry,
+    registry::register_controller, AdaptiveConfig, AdaptiveReport, AdaptiveRuntime,
+    ChunkController, Controller, ControllerKind, EpochSample, Reconfigure, SkewController,
+    StageSample, StageTelemetry,
+};
+pub use graph::{
+    CompiledTopology, FusionLayout, GraphConfig, GraphSpec, SourceOptions, Topology,
+    TopologyBuilder,
 };
 pub use sinks::{
-    FileSink, FrameSink, NullSink, SinkSummary, StdoutSink, ThreadedSink, UdpSink, ViewSink,
+    CaptureSink, FileSink, FrameSink, NullSink, SinkSummary, StdoutSink, ThreadedSink, UdpSink,
+    ViewSink,
 };
 pub use sources::{CameraSource, FileSource, MemorySource, SliceSource, UdpSource};
 pub use stage::{BatchProcessor, StageGraph, StageOptions, StripeCut};
@@ -304,7 +320,9 @@ pub struct StreamReport {
     /// and scatter backpressure. Empty for plain [`Pipeline`] edges.
     /// Counters chain: stage n+1's `events` equals stage n's
     /// `events - dropped`, and stage 0's `events` equals
-    /// [`events_in`](StreamReport::events_in).
+    /// [`events_in`](StreamReport::events_in). Compiled graphs with
+    /// per-branch chains append each branch's stage nodes after the
+    /// shared chain's, named `branchnode/stagename`.
     pub stages: Vec<NodeReport>,
     /// Per-sink counters: events/batches routed to each sink, frames it
     /// produced, and times the router found its queue full.

@@ -25,6 +25,10 @@ pub struct SinkSummary {
     /// sinks). Counted on the feeding side — the pump thread cannot see
     /// these — and folded into the sink's node report at finish.
     pub backpressure_waits: u64,
+    /// Events the sink itself discarded (out-of-plane events at a
+    /// device session, capacity overflows). Folded into the sink's
+    /// [`NodeReport::dropped`](crate::metrics::NodeReport::dropped).
+    pub dropped: u64,
 }
 
 /// Count-only sink (benchmarks, dry runs).
@@ -46,6 +50,39 @@ impl EventSink for NullSink {
 
     fn describe(&self) -> String {
         "null".into()
+    }
+}
+
+/// Sink that records every delivered event, in order, into a shared
+/// buffer readable after the run — the byte-identity witness for the
+/// graph-equivalence tests and the capture half of
+/// `examples/graph_topology.rs`. Memory is O(stream): testing only,
+/// never production topologies.
+pub struct CaptureSink {
+    events: std::sync::Arc<std::sync::Mutex<Vec<Event>>>,
+}
+
+impl CaptureSink {
+    /// The sink plus the shared handle its events land in.
+    #[allow(clippy::type_complexity)]
+    pub fn new() -> (CaptureSink, std::sync::Arc<std::sync::Mutex<Vec<Event>>>) {
+        let events = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        (CaptureSink { events: events.clone() }, events)
+    }
+}
+
+impl EventSink for CaptureSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        self.events.lock().unwrap().extend_from_slice(batch);
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        Ok(SinkSummary::default())
+    }
+
+    fn describe(&self) -> String {
+        "capture".into()
     }
 }
 

@@ -283,6 +283,19 @@ impl StageGraph {
     /// stripe); stages that cannot satisfy that (or are barriers or
     /// pinned) fall back to a single serial node.
     pub fn compile(spec: &PipelineSpec, res: Resolution, opts: &StageOptions) -> StageGraph {
+        Self::compile_prefixed(spec, res, opts, "")
+    }
+
+    /// [`compile`](Self::compile) with every stage node's report name
+    /// prefixed — how [`super::graph`] keeps per-branch stage reports
+    /// attributable ("branchname/stagename") when several compiled
+    /// chains land in one [`StreamReport`](super::StreamReport).
+    pub(crate) fn compile_prefixed(
+        spec: &PipelineSpec,
+        res: Resolution,
+        opts: &StageOptions,
+        prefix: &str,
+    ) -> StageGraph {
         let nodes = spec
             .stages()
             .iter()
@@ -296,7 +309,12 @@ impl StageGraph {
                 while shards > 1 && stripe_cut(res.width, shards) <= halo as usize {
                     shards -= 1;
                 }
-                let node = Arc::new(LiveNode::new(stage.name()));
+                let name = if prefix.is_empty() {
+                    stage.name().to_string()
+                } else {
+                    format!("{prefix}{}", stage.name())
+                };
+                let node = Arc::new(LiveNode::new(name));
                 let exec = if shards == 1 {
                     NodeExec::Serial(stage.build(res))
                 } else {
@@ -315,6 +333,19 @@ impl StageGraph {
             })
             .collect();
         StageGraph { nodes, finished: false }
+    }
+
+    /// The identity graph (no stage nodes) — the seed for
+    /// [`append`](Self::append)-built chains.
+    pub(crate) fn empty() -> StageGraph {
+        StageGraph { nodes: Vec::new(), finished: false }
+    }
+
+    /// Move `other`'s stage nodes onto the end of this chain. The graph
+    /// compiler concatenates separately-compiled trunk segments this
+    /// way, so each segment keeps its own shard options.
+    pub(crate) fn append(&mut self, mut other: StageGraph) {
+        self.nodes.append(&mut other.nodes);
     }
 
     /// Number of stage nodes.

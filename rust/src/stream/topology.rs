@@ -64,7 +64,7 @@ use crate::rt::{
 use super::adapt::{Adaptor, AdaptiveConfig, AdaptiveRuntime};
 use super::merge::MergeCore;
 use super::sources::grow_resolution;
-use super::stage::{stripe_cut, stripe_index, BatchProcessor};
+use super::stage::{stripe_cut, stripe_index, BatchProcessor, StageGraph};
 use super::{EventSink, EventSource, StreamConfig, StreamDriver, StreamReport};
 
 /// Batches buffered per source-thread channel (in addition to the batch
@@ -720,6 +720,171 @@ struct DriveOutcome {
     backpressure_waits: u64,
 }
 
+/// One fan-out branch of a topology: an optional per-branch stage
+/// chain (compiled with prefixed report names by [`super::graph`]) and
+/// the sink that terminates it. Legacy shapes use `graph: None` — the
+/// router's partition goes straight to the sink, exactly as before the
+/// graph layer existed.
+pub(crate) struct BranchRun<K> {
+    pub(crate) graph: Option<StageGraph>,
+    pub(crate) sink: K,
+    /// Branch name for error contexts (defaults to the sink description).
+    pub(crate) label: String,
+}
+
+impl<K: EventSink> BranchRun<K> {
+    /// Run one routed part through the branch chain (if any) and into
+    /// the sink, counting delivered events on the branch's sink node.
+    /// `consume_empty` preserves the single-sink drivers' historical
+    /// behavior of consuming empty batches; the fan drivers skip them.
+    fn deliver(&mut self, part: Vec<Event>, node: &LiveNode, consume_empty: bool) -> Result<()> {
+        let out = match &mut self.graph {
+            Some(graph) if !part.is_empty() => graph
+                .process_batch(&part)
+                .with_context(|| format!("branch {:?} stage", self.label))?,
+            _ => part,
+        };
+        if !out.is_empty() {
+            node.add_events(out.len() as u64);
+            node.add_batch();
+        } else if !consume_empty {
+            return Ok(());
+        }
+        self.sink.consume(&out).context("stream sink")
+    }
+}
+
+/// One fan-in lane of [`run_nodes`]: a source pulled inline on the
+/// driving thread, or the executor-side tap of a source pinned to its
+/// own pump thread. Threading is a per-lane decision (the graph layer
+/// places it per source node); the legacy [`ThreadMode`] flag maps to
+/// all-or-nothing.
+enum Lane<'e, S: EventSource> {
+    Direct(S),
+    Pumped(ChannelSource<'e>),
+}
+
+impl<S: EventSource> EventSource for Lane<'_, S> {
+    fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
+        match self {
+            Lane::Direct(s) => s.next_batch(),
+            Lane::Pumped(s) => s.next_batch(),
+        }
+    }
+    fn resolution(&self) -> Resolution {
+        match self {
+            Lane::Direct(s) => s.resolution(),
+            Lane::Pumped(s) => s.resolution(),
+        }
+    }
+    fn geometry_known(&self) -> bool {
+        match self {
+            Lane::Direct(s) => s.geometry_known(),
+            Lane::Pumped(s) => s.geometry_known(),
+        }
+    }
+    fn is_live(&self) -> bool {
+        match self {
+            Lane::Direct(s) => s.is_live(),
+            Lane::Pumped(s) => s.is_live(),
+        }
+    }
+    fn dropped(&self) -> u64 {
+        match self {
+            Lane::Direct(s) => s.dropped(),
+            Lane::Pumped(s) => s.dropped(),
+        }
+    }
+    fn set_chunk_hint(&mut self, chunk: usize) {
+        match self {
+            Lane::Direct(s) => s.set_chunk_hint(chunk),
+            Lane::Pumped(s) => s.set_chunk_hint(chunk),
+        }
+    }
+    fn describe(&self) -> String {
+        match self {
+            Lane::Direct(s) => s.describe(),
+            Lane::Pumped(s) => s.describe(),
+        }
+    }
+}
+
+/// The generalized driver under both [`run_topology`] (the legacy
+/// fixed shape) and [`super::graph`] (compiled graphs): N sources —
+/// each optionally pinned to its own pump thread — fan in through the
+/// timestamp-ordered merge, flow through the shared processor, and fan
+/// out per `route` into branches, each optionally running its own stage
+/// chain before its sink.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_nodes<S, P, K>(
+    sources: Vec<(S, bool)>,
+    shared: &mut P,
+    branches: Vec<BranchRun<K>>,
+    layout: Option<SourceLayout>,
+    route: RoutePolicy,
+    chunk_size: usize,
+    driver: StreamDriver,
+    adaptive: Option<AdaptiveRuntime>,
+) -> Result<StreamReport>
+where
+    S: EventSource,
+    P: BatchProcessor + ?Sized,
+    K: EventSink,
+{
+    if sources.is_empty() {
+        bail!("topology needs at least one source");
+    }
+    if branches.is_empty() {
+        bail!("topology needs at least one sink");
+    }
+    if route == RoutePolicy::Polarity && branches.len() != 2 {
+        bail!("polarity routing requires exactly 2 sinks, got {}", branches.len());
+    }
+    let t0 = Instant::now();
+    let n = sources.len();
+    let pump_errs: Vec<Mutex<Option<anyhow::Error>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let pump_waits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let pump_drops: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let mut pumped = vec![false; n];
+    let result = std::thread::scope(|scope| {
+        let pumped = &mut pumped;
+        let mut lanes: Vec<Lane<S>> = Vec::with_capacity(n);
+        for (i, (source, threaded)) in sources.into_iter().enumerate() {
+            if threaded {
+                pumped[i] = true;
+                let res = source.resolution();
+                let known = source.geometry_known();
+                let live = source.is_live();
+                let name = source.describe();
+                let (tx, rx) = sync_channel::<Vec<Event>>(PUMP_QUEUE_BATCHES);
+                let (err, waits, drops) = (&pump_errs[i], &pump_waits[i], &pump_drops[i]);
+                scope.spawn(move || pump(source, tx, err, waits, drops));
+                lanes.push(Lane::Pumped(ChannelSource { rx, err, res, known, live, name }));
+            } else {
+                lanes.push(Lane::Direct(source));
+            }
+        }
+        let mut merged = FusedSource::new(lanes, layout, chunk_size);
+        drive_and_report(&mut merged, shared, branches, route, driver, chunk_size, adaptive, t0)
+        // `merged` (and with it every ring receiver) drops here, so any
+        // pump still parked in a full-ring send unblocks before the
+        // scope joins the threads.
+    });
+    let mut report = result?;
+    for (i, err) in pump_errs.into_iter().enumerate() {
+        if let Some(e) = err.into_inner().unwrap() {
+            return Err(e.context(format!("stream source {i} (thread)")));
+        }
+    }
+    for (i, node) in report.sources.iter_mut().enumerate() {
+        if pumped[i] {
+            node.backpressure_waits = pump_waits[i].load(Ordering::Relaxed);
+            node.dropped = pump_drops[i].load(Ordering::Relaxed);
+        }
+    }
+    Ok(report)
+}
+
 /// Drive an N-source, M-sink topology to completion.
 ///
 /// Sources fan in through the streaming timestamp-ordered merge
@@ -728,6 +893,12 @@ struct DriveOutcome {
 /// a serial [`crate::pipeline::Pipeline`] or a sharded
 /// [`super::StageGraph`] — and fan out per `config.route`. Memory
 /// stays O(chunk × (sources + shards + sinks)).
+///
+/// This is the engine entry for the one fixed shape
+/// `fan-in → shared chain → fan-out`; richer graphs (per-branch stage
+/// chains, per-node thread placement) are described with
+/// [`super::graph::Topology::builder`] and compiled onto the same
+/// driver.
 pub fn run_topology<S: EventSource, P: BatchProcessor, K: EventSink>(
     sources: Vec<S>,
     pipeline: &mut P,
@@ -735,7 +906,10 @@ pub fn run_topology<S: EventSource, P: BatchProcessor, K: EventSink>(
     layout: Option<SourceLayout>,
     config: &TopologyConfig,
 ) -> Result<StreamReport> {
-    let adaptive = config.adaptive.as_ref().map(AdaptiveConfig::build);
+    let adaptive = match &config.adaptive {
+        Some(cfg) => Some(cfg.build().context("assembling adaptive controllers")?),
+        None => None,
+    };
     run_topology_with_adaptive(sources, pipeline, sinks, layout, config, adaptive)
 }
 
@@ -747,7 +921,7 @@ pub fn run_topology<S: EventSource, P: BatchProcessor, K: EventSink>(
 pub fn run_topology_with_adaptive<S: EventSource, P: BatchProcessor, K: EventSink>(
     sources: Vec<S>,
     pipeline: &mut P,
-    mut sinks: Vec<K>,
+    sinks: Vec<K>,
     layout: Option<SourceLayout>,
     config: &TopologyConfig,
     adaptive: Option<AdaptiveRuntime>,
@@ -795,100 +969,71 @@ pub fn run_topology_with_adaptive<S: EventSource, P: BatchProcessor, K: EventSin
         }
         None => None,
     };
-    let t0 = Instant::now();
-    match config.threads {
-        ThreadMode::Inline => {
-            let mut merged = FusedSource::new(sources, layout, config.chunk_size);
-            drive_and_report(&mut merged, pipeline, &mut sinks, config, adaptive, t0)
-        }
-        ThreadMode::PerSourceThread => {
-            run_threaded(sources, pipeline, &mut sinks, layout, config, adaptive, t0)
-        }
-    }
+    let threaded = config.threads == ThreadMode::PerSourceThread;
+    let sources: Vec<(S, bool)> = sources.into_iter().map(|s| (s, threaded)).collect();
+    let branches: Vec<BranchRun<K>> = sinks
+        .into_iter()
+        .map(|sink| {
+            let label = sink.describe();
+            BranchRun { graph: None, sink, label }
+        })
+        .collect();
+    run_nodes(
+        sources,
+        pipeline,
+        branches,
+        layout,
+        config.route,
+        config.chunk_size,
+        config.driver,
+        adaptive,
+    )
 }
 
-/// Per-source-thread variant: pin each source to its own OS thread and
-/// merge their rings on the executor thread.
-fn run_threaded<S: EventSource, P: BatchProcessor, K: EventSink>(
-    sources: Vec<S>,
-    pipeline: &mut P,
-    sinks: &mut Vec<K>,
-    layout: Option<SourceLayout>,
-    config: &TopologyConfig,
-    adaptive: Option<AdaptiveRuntime>,
-    t0: Instant,
-) -> Result<StreamReport> {
-    let n = sources.len();
-    let pump_errs: Vec<Mutex<Option<anyhow::Error>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    let pump_waits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-    let pump_drops: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-    let result = std::thread::scope(|scope| {
-        let mut taps = Vec::with_capacity(n);
-        for (i, source) in sources.into_iter().enumerate() {
-            let res = source.resolution();
-            let known = source.geometry_known();
-            let live = source.is_live();
-            let name = source.describe();
-            let (tx, rx) = sync_channel::<Vec<Event>>(PUMP_QUEUE_BATCHES);
-            let (err, waits, drops) = (&pump_errs[i], &pump_waits[i], &pump_drops[i]);
-            scope.spawn(move || pump(source, tx, err, waits, drops));
-            taps.push(ChannelSource { rx, err, res, known, live, name });
-        }
-        let mut merged = FusedSource::new(taps, layout, config.chunk_size);
-        drive_and_report(&mut merged, pipeline, sinks, config, adaptive, t0)
-        // `merged` (and with it every ring receiver) drops here, so any
-        // pump still parked in a full-ring send unblocks before the
-        // scope joins the threads.
-    });
-    let mut report = result?;
-    for (i, err) in pump_errs.into_iter().enumerate() {
-        if let Some(e) = err.into_inner().unwrap() {
-            return Err(e.context(format!("stream source {i} (thread)")));
-        }
-    }
-    for ((node, waits), drops) in
-        report.sources.iter_mut().zip(&pump_waits).zip(&pump_drops)
-    {
-        node.backpressure_waits = waits.load(Ordering::Relaxed);
-        node.dropped = drops.load(Ordering::Relaxed);
-    }
-    Ok(report)
-}
-
-/// Drive the merged edge with the configured driver, then flush sinks
-/// and assemble the report — every per-node section reconstructed from
-/// a final sample of the telemetry plane.
-fn drive_and_report<S: EventSource, P: BatchProcessor, K: EventSink>(
+/// Drive the merged edge with the configured driver, then flush
+/// branches and assemble the report — every per-node section
+/// reconstructed from a final sample of the telemetry plane. Branch
+/// stage chains contribute their (prefix-named) node reports after the
+/// shared chain's.
+#[allow(clippy::too_many_arguments)]
+fn drive_and_report<S, P, K>(
     merged: &mut FusedSource<S>,
-    pipeline: &mut P,
-    sinks: &mut [K],
-    config: &TopologyConfig,
+    shared: &mut P,
+    mut branches: Vec<BranchRun<K>>,
+    route: RoutePolicy,
+    driver: StreamDriver,
+    chunk_size: usize,
     adaptive: Option<AdaptiveRuntime>,
     t0: Instant,
-) -> Result<StreamReport> {
+) -> Result<StreamReport>
+where
+    S: EventSource,
+    P: BatchProcessor + ?Sized,
+    K: EventSink,
+{
     let canvas = merged.resolution();
     let sink_nodes: Vec<Arc<LiveNode>> =
-        sinks.iter().map(|sink| Arc::new(LiveNode::new(sink.describe()))).collect();
+        branches.iter().map(|b| Arc::new(LiveNode::new(b.sink.describe()))).collect();
     // Only the coroutine drivers have a bounded edge channel whose
     // full-queue suspensions mean anything; the sync loop's zero is
     // "no gauge", and backpressure-keyed controllers must know that.
-    let gauged = matches!(config.driver, StreamDriver::Coroutine { .. });
-    let mut adaptor = adaptive.map(|rt| Adaptor::new(rt, config.chunk_size, gauged));
-    let outcome = match config.driver {
+    let gauged = matches!(driver, StreamDriver::Coroutine { .. });
+    let mut adaptor = adaptive.map(|rt| Adaptor::new(rt, chunk_size, gauged));
+    let outcome = match driver {
         StreamDriver::Sync => {
-            drive_sync(merged, pipeline, sinks, &config.route, canvas, &sink_nodes, &mut adaptor)?
+            drive_sync(merged, shared, &mut branches, &route, canvas, &sink_nodes, &mut adaptor)?
         }
         StreamDriver::Coroutine { channel_capacity } => {
             let cap = channel_capacity.max(1);
-            if sinks.len() == 1 {
+            if branches.len() == 1 {
                 let node = &sink_nodes[0];
-                drive_coro_single(merged, pipeline, &mut sinks[0], cap, node, &mut adaptor)?
+                drive_coro_single(merged, shared, &mut branches[0], cap, node, &mut adaptor)?
             } else {
                 drive_coro_fan(
                     merged,
-                    pipeline,
-                    sinks,
-                    &config.route,
+                    shared,
+                    &mut branches,
+                    &route,
                     canvas,
                     cap,
                     &sink_nodes,
@@ -897,23 +1042,36 @@ fn drive_and_report<S: EventSource, P: BatchProcessor, K: EventSink>(
             }
         }
     };
-    // Join any shard workers before reading their counters.
-    pipeline.finish_stages().context("stage shutdown")?;
+    // Join any shard workers before reading their counters — the shared
+    // chain's first, then every branch chain's.
+    shared.finish_stages().context("stage shutdown")?;
+    let mut stages = shared.stage_reports();
+    for branch in &mut branches {
+        if let Some(graph) = &mut branch.graph {
+            graph
+                .finish_stages()
+                .with_context(|| format!("branch {:?} stage shutdown", branch.label))?;
+            stages.extend(graph.stage_reports());
+        }
+    }
     let final_res = merged.resolution();
-    for sink in sinks.iter_mut() {
-        sink.observe_geometry(final_res);
+    for branch in branches.iter_mut() {
+        branch.sink.observe_geometry(final_res);
     }
     let mut frames = 0u64;
-    let mut sink_reports = Vec::with_capacity(sinks.len());
-    for (i, sink) in sinks.iter_mut().enumerate() {
-        let summary = sink.finish().context("stream sink finish")?;
+    let mut sink_reports = Vec::with_capacity(branches.len());
+    for (i, branch) in branches.iter_mut().enumerate() {
+        let summary = branch.sink.finish().context("stream sink finish")?;
         frames += summary.frames;
         let mut report = sink_nodes[i].sample();
         report.frames = summary.frames;
         // A ThreadedSink wrapper counts the full-ring suspensions its
         // feeder hit on the pump ring (invisible to this driver's own
-        // queue accounting); fold them into the node view.
+        // queue accounting); fold them into the node view, along with
+        // whatever the sink itself discarded (device sessions drop
+        // out-of-plane events).
         report.backpressure_waits += summary.backpressure_waits;
+        report.dropped += summary.dropped;
         sink_reports.push(report);
     }
     Ok(StreamReport {
@@ -926,7 +1084,7 @@ fn drive_and_report<S: EventSource, P: BatchProcessor, K: EventSink>(
         wall: t0.elapsed(),
         resolution: final_res,
         sources: merged.node_reports(),
-        stages: pipeline.stage_reports(),
+        stages,
         sinks: sink_reports,
         merge_peak_buffered: merged.peak_buffered(),
         merge_dropped: merged.layout_dropped(),
@@ -938,16 +1096,21 @@ fn drive_and_report<S: EventSource, P: BatchProcessor, K: EventSink>(
 
 /// Baseline driver: one loop, no overlap, any fan-out width.
 #[allow(clippy::too_many_arguments)]
-fn drive_sync<S: EventSource, P: BatchProcessor, K: EventSink>(
+fn drive_sync<S, P, K>(
     source: &mut FusedSource<S>,
-    pipeline: &mut P,
-    sinks: &mut [K],
+    shared: &mut P,
+    branches: &mut [BranchRun<K>],
     route: &RoutePolicy,
     canvas: Resolution,
     sink_nodes: &[Arc<LiveNode>],
     adaptor: &mut Option<Adaptor>,
-) -> Result<DriveOutcome> {
-    let m = sinks.len();
+) -> Result<DriveOutcome>
+where
+    S: EventSource,
+    P: BatchProcessor + ?Sized,
+    K: EventSink,
+{
+    let m = branches.len();
     let mut outcome = DriveOutcome {
         events_in: 0,
         events_out: 0,
@@ -965,22 +1128,19 @@ fn drive_sync<S: EventSource, P: BatchProcessor, K: EventSink>(
         outcome.events_in += batch.len() as u64;
         outcome.batches += 1;
         outcome.peak_in_flight = outcome.peak_in_flight.max(batch.len());
-        let processed = pipeline.process_batch(&batch).context("pipeline stage")?;
+        let processed = shared.process_batch(&batch).context("pipeline stage")?;
         outcome.events_out += processed.len() as u64;
         if m == 1 {
-            if !processed.is_empty() {
-                sink_nodes[0].add_events(processed.len() as u64);
-                sink_nodes[0].add_batch();
-            }
-            sinks[0].consume(&processed).context("stream sink")?;
+            branches[0].deliver(processed, &sink_nodes[0], true)?;
         } else if !processed.is_empty() {
-            if *route == RoutePolicy::Broadcast {
-                // Sinks borrow the batch; the sync path needs no owned
-                // copies (the coroutine path does, for its channels).
-                for (i, sink) in sinks.iter_mut().enumerate() {
+            if *route == RoutePolicy::Broadcast && branches.iter().all(|b| b.graph.is_none()) {
+                // Sinks borrow the batch; the chain-free sync path needs
+                // no owned copies (the coroutine path does, for its
+                // channels, and branch chains need owned inputs).
+                for (i, branch) in branches.iter_mut().enumerate() {
                     sink_nodes[i].add_events(processed.len() as u64);
                     sink_nodes[i].add_batch();
-                    sink.consume(&processed).context("stream sink")?;
+                    branch.sink.consume(&processed).context("stream sink")?;
                 }
             } else {
                 for (i, part) in
@@ -989,15 +1149,13 @@ fn drive_sync<S: EventSource, P: BatchProcessor, K: EventSink>(
                     if part.is_empty() {
                         continue;
                     }
-                    sink_nodes[i].add_events(part.len() as u64);
-                    sink_nodes[i].add_batch();
-                    sinks[i].consume(&part).context("stream sink")?;
+                    branches[i].deliver(part, &sink_nodes[i], false)?;
                 }
             }
         }
         if let Some(adaptor) = adaptor.as_mut() {
             if let Some(chunk) = adaptor
-                .after_batch(&mut *pipeline, outcome.events_in, outcome.backpressure_waits)
+                .after_batch(&mut *shared, outcome.events_in, outcome.backpressure_waits)
                 .context("adaptive reconfiguration")?
             {
                 source.set_chunk(chunk);
@@ -1078,18 +1236,23 @@ fn spawn_producer<'a, S: EventSource>(
     });
 }
 
-/// Coroutine driver, single sink: producer and consumer tasks on one
+/// Coroutine driver, single branch: producer and consumer tasks on one
 /// cooperative executor, batches handed through a bounded channel. The
 /// producer suspends the moment the consumer is behind, which is the
 /// backpressure that keeps memory O(chunk) for endless sources.
-fn drive_coro_single<S: EventSource, P: BatchProcessor, K: EventSink>(
+fn drive_coro_single<S, P, K>(
     source: &mut FusedSource<S>,
-    pipeline: &mut P,
-    sink: &mut K,
+    shared: &mut P,
+    branch: &mut BranchRun<K>,
     channel_capacity: usize,
     sink_node: &Arc<LiveNode>,
     adaptor: &mut Option<Adaptor>,
-) -> Result<DriveOutcome> {
+) -> Result<DriveOutcome>
+where
+    S: EventSource,
+    P: BatchProcessor + ?Sized,
+    K: EventSink,
+{
     let gauges = ProducerGauges::default();
     let events_out = Cell::new(0u64);
     let chunk_request: Cell<Option<usize>> = Cell::new(None);
@@ -1108,14 +1271,14 @@ fn drive_coro_single<S: EventSource, P: BatchProcessor, K: EventSink>(
             let gauges = &gauges;
             let chunk_request = &chunk_request;
             let (stage_err, sink_err) = (&stage_err, &sink_err);
-            let pipeline = &mut *pipeline;
-            let sink = &mut *sink;
+            let shared = &mut *shared;
+            let branch = &mut *branch;
             let adaptor = &mut *adaptor;
             let sink_node = sink_node.clone();
             ex.spawn(async move {
                 while let Some(batch) = rx.recv().await {
                     gauges.in_flight.set(gauges.in_flight.get() - batch.len());
-                    let processed = match pipeline.process_batch(&batch) {
+                    let processed = match shared.process_batch(&batch) {
                         Ok(processed) => processed,
                         Err(e) => {
                             *stage_err.borrow_mut() = Some(e);
@@ -1123,17 +1286,13 @@ fn drive_coro_single<S: EventSource, P: BatchProcessor, K: EventSink>(
                         }
                     };
                     events_out.set(events_out.get() + processed.len() as u64);
-                    if !processed.is_empty() {
-                        sink_node.add_events(processed.len() as u64);
-                        sink_node.add_batch();
-                    }
-                    if let Err(e) = sink.consume(&processed) {
+                    if let Err(e) = branch.deliver(processed, &sink_node, true) {
                         *sink_err.borrow_mut() = Some(e);
                         break; // dropping `rx` fails producer sends fast
                     }
                     if let Some(adaptor) = adaptor.as_mut() {
                         match adaptor.after_batch(
-                            &mut *pipeline,
+                            &mut *shared,
                             gauges.events_in.get(),
                             gauges.backpressure_waits.get(),
                         ) {
@@ -1160,7 +1319,8 @@ fn drive_coro_single<S: EventSource, P: BatchProcessor, K: EventSink>(
         return Err(e.context("pipeline stage"));
     }
     if let Some(e) = sink_err.into_inner() {
-        return Err(e.context("stream sink"));
+        // `deliver` already attached the branch/sink context.
+        return Err(e);
     }
     Ok(DriveOutcome {
         events_in: gauges.events_in.get(),
@@ -1171,23 +1331,29 @@ fn drive_coro_single<S: EventSource, P: BatchProcessor, K: EventSink>(
     })
 }
 
-/// Coroutine driver, M ≥ 2 sinks: producer → router → per-sink tasks,
-/// all cooperative on one executor. The router applies the pipeline
-/// once and distributes per [`RoutePolicy`]; each sink sits behind its
-/// own bounded channel, so a slow sink backpressures the router (and
+/// Coroutine driver, M ≥ 2 branches: producer → router → per-branch
+/// tasks, all cooperative on one executor. The router applies the
+/// shared chain once and distributes per [`RoutePolicy`]; each branch
+/// sits behind its own bounded channel and runs its own stage chain (if
+/// any) inside its task, so a slow branch backpressures the router (and
 /// transitively the producer) without blocking its siblings' queues.
 #[allow(clippy::too_many_arguments)]
-fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
+fn drive_coro_fan<S, P, K>(
     source: &mut FusedSource<S>,
-    pipeline: &mut P,
-    sinks: &mut [K],
+    shared: &mut P,
+    branches: &mut [BranchRun<K>],
     route: &RoutePolicy,
     canvas: Resolution,
     channel_capacity: usize,
     sink_nodes: &[Arc<LiveNode>],
     adaptor: &mut Option<Adaptor>,
-) -> Result<DriveOutcome> {
-    let m = sinks.len();
+) -> Result<DriveOutcome>
+where
+    S: EventSource,
+    P: BatchProcessor + ?Sized,
+    K: EventSink,
+{
+    let m = branches.len();
     let gauges = ProducerGauges::default();
     let events_out = Cell::new(0u64);
     let chunk_request: Cell<Option<usize>> = Cell::new(None);
@@ -1201,15 +1367,16 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
         let (tx, mut rx) = channel::<Vec<Event>>(channel_capacity);
         spawn_producer(&ex, source, tx, &gauges, &source_err, &chunk_request);
 
-        // --------------------------------------------------- sink tasks
+        // ------------------------------------------------- branch tasks
         let mut sink_txs = Vec::with_capacity(m);
-        for (i, sink) in sinks.iter_mut().enumerate() {
+        for (i, branch) in branches.iter_mut().enumerate() {
             let (stx, mut srx) = channel::<Vec<Event>>(channel_capacity);
             sink_txs.push(stx);
             let err = &sink_errs[i];
+            let node = sink_nodes[i].clone();
             ex.spawn(async move {
                 while let Some(part) = srx.recv().await {
-                    if let Err(e) = sink.consume(&part) {
+                    if let Err(e) = branch.deliver(part, &node, false) {
                         *err.borrow_mut() = Some(e);
                         break; // dropping `srx` fails router sends fast
                     }
@@ -1223,7 +1390,7 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
             let gauges = &gauges;
             let chunk_request = &chunk_request;
             let stage_err = &stage_err;
-            let pipeline = &mut *pipeline;
+            let shared = &mut *shared;
             let adaptor = &mut *adaptor;
             let sink_nodes = sink_nodes.to_vec();
             let route = *route;
@@ -1231,7 +1398,7 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
                 let txs = sink_txs;
                 'route: while let Some(batch) = rx.recv().await {
                     gauges.in_flight.set(gauges.in_flight.get() - batch.len());
-                    let processed = match pipeline.process_batch(&batch) {
+                    let processed = match shared.process_batch(&batch) {
                         Ok(processed) => processed,
                         Err(e) => {
                             *stage_err.borrow_mut() = Some(e);
@@ -1246,18 +1413,16 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
                             if part.is_empty() {
                                 continue;
                             }
-                            sink_nodes[i].add_events(part.len() as u64);
-                            sink_nodes[i].add_batch();
                             match txs[i].try_send(part) {
                                 Ok(()) => {}
                                 Err(TrySendError::Full(part)) => {
                                     sink_nodes[i].add_backpressure_wait();
                                     if txs[i].send(part).await.is_err() {
-                                        // Sink tasks only hang up on error:
+                                        // Branch tasks only hang up on error:
                                         // abort the whole topology promptly
                                         // (parity with the single-sink path)
                                         // instead of streaming on until every
-                                        // sink dies.
+                                        // branch dies.
                                         break 'route;
                                     }
                                 }
@@ -1267,7 +1432,7 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
                     }
                     if let Some(adaptor) = adaptor.as_mut() {
                         match adaptor.after_batch(
-                            &mut *pipeline,
+                            &mut *shared,
                             gauges.events_in.get(),
                             gauges.backpressure_waits.get(),
                         ) {
@@ -1282,7 +1447,7 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
                     }
                 }
                 // Dropping `rx` stops the producer; dropping `txs` lets
-                // the surviving sink tasks drain their queues and end.
+                // the surviving branch tasks drain their queues and end.
             });
         }
 
@@ -1297,7 +1462,8 @@ fn drive_coro_fan<S: EventSource, P: BatchProcessor, K: EventSink>(
     }
     for err in sink_errs {
         if let Some(e) = err.into_inner() {
-            return Err(e.context("stream sink"));
+            // `deliver` already attached the branch/sink context.
+            return Err(e);
         }
     }
     Ok(DriveOutcome {

@@ -169,6 +169,75 @@ fn forced_recuts_through_the_driver_stay_byte_identical() {
     }
 }
 
+/// Registration round-trip for the pluggable controller registry: a
+/// third-party `Controller` registered by name resolves through the
+/// CLI's `--adaptive` parser into a config, builds at topology start,
+/// and actually acts on the run — end to end, no
+/// `run_topology_with_adaptive` plumbing required.
+#[test]
+fn registered_controller_works_end_to_end_from_a_name() {
+    use aestream::stream::adapt::{parse_controllers, registry};
+
+    /// Clamp the chunk to 64 at the first epoch (easy to observe).
+    struct Clamp;
+    impl Controller for Clamp {
+        fn observe(&mut self, sample: &EpochSample) -> Vec<Reconfigure> {
+            if sample.chunk_size != 64 {
+                vec![Reconfigure::ChunkSize(64)]
+            } else {
+                Vec::new()
+            }
+        }
+        fn describe(&self) -> String {
+            "clamp(64)".into()
+        }
+    }
+    registry::register_controller("clamp64", || Box::new(Clamp)).unwrap();
+
+    // The CLI-facing name list resolves the custom controller…
+    let kinds = parse_controllers("clamp64").unwrap();
+    assert_eq!(kinds, vec![ControllerKind::Custom("clamp64".into())]);
+    // …and the resulting config drives a real topology.
+    let res = Resolution::new(64, 64);
+    let events = hotspot_events_seeded(8000, 64, 64, 0x77);
+    let mut graph = StageGraph::compile(
+        &refractory_spec(),
+        res,
+        &StageOptions { shards: 2, shard_threads: false },
+    );
+    let config = TopologyConfig {
+        chunk_size: 512,
+        adaptive: Some(AdaptiveConfig::new(kinds).with_epoch(2)),
+        ..Default::default()
+    };
+    let report = run_topology(
+        vec![MemorySource::new(events, res, 512)],
+        &mut graph,
+        vec![aestream::stream::NullSink::default()],
+        None,
+        &config,
+    )
+    .unwrap();
+    let history = report.adaptive.expect("adaptive history");
+    assert_eq!(history.final_chunk, 64, "the registered controller must act");
+    assert_eq!(history.chunk_changes[0].from, 512);
+    assert_eq!(history.chunk_changes[0].to, 64);
+    // Unknown names fail loudly when the config builds.
+    let missing = AdaptiveConfig::new(vec![ControllerKind::Custom("no-such".into())]);
+    let err = format!(
+        "{:?}",
+        run_topology(
+            vec![MemorySource::new(Vec::new(), res, 64)],
+            &mut aestream::pipeline::Pipeline::new(),
+            vec![aestream::stream::NullSink::default()],
+            None,
+            &TopologyConfig { adaptive: Some(missing), ..Default::default() },
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("not registered"), "got {err}");
+}
+
 /// The per-epoch histogram lane: controllers see each epoch's traffic
 /// in isolation (not the cumulative run), which is what makes skew
 /// decisions converge instead of being dominated by stale history.

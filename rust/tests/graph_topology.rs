@@ -1,0 +1,440 @@
+//! Graph-layer acceptance.
+//!
+//! * **Equivalence property**: every legacy topology shape (1–4
+//!   sources × broadcast/polarity/stripes × shards 1–4, inline +
+//!   threaded shard workers, plus per-source pump threads) lowered
+//!   through `GraphSpec` produces **byte-identical** per-sink output
+//!   and matching `StreamReport` node counters versus the pre-redesign
+//!   engine entry (`stream::run_topology` with an explicit
+//!   `StageGraph`).
+//! * **Golden lowering**: CLI clause parsing and the hand-built
+//!   `Topology::builder()` chain yield the same `GraphSpec` (compared
+//!   by canonical summary).
+//! * **Multi-branch**: the CLI's `branch` clauses run one merge into
+//!   two independent stage chains and two sinks, with per-branch
+//!   `NodeReport`s; with built artifacts, the same shape feeds two
+//!   `DetectorSession`s (the ROADMAP's multi-device fan-out).
+
+use aestream::aer::{Event, Resolution};
+use aestream::cli::{self, Command};
+use aestream::coordinator::{
+    lower_to_graph, run_graph, BranchSpec, SessionSink, TopologyOptions,
+};
+use aestream::pipeline::fusion::SourceLayout;
+use aestream::pipeline::{ops, PipelineSpec, StageSpec};
+use aestream::runtime::{default_artifacts_dir, Device};
+use aestream::stream::{
+    run_topology, CaptureSink, FusionLayout, GraphConfig, MemorySource, NullSink, RoutePolicy,
+    SourceOptions, StageGraph, StageOptions, StreamConfig, StreamDriver, ThreadMode, Topology,
+    TopologyConfig,
+};
+use aestream::testutil::synthetic_events_seeded;
+
+const RES: Resolution = Resolution { width: 96, height: 48 };
+
+fn stage_spec() -> PipelineSpec {
+    PipelineSpec::new()
+        .then(StageSpec::new(|res: Resolution| ops::RefractoryFilter::new(res, 100)))
+        .then(StageSpec::new(|res: Resolution| ops::BackgroundActivityFilter::new(res, 1000)))
+}
+
+fn streams(n: usize) -> Vec<Vec<Event>> {
+    (0..n)
+        .map(|i| synthetic_events_seeded(2400, RES.width, RES.height, 0x9A0 + i as u64))
+        .collect()
+}
+
+/// Run the pre-redesign engine path: explicit `StageGraph` +
+/// `stream::run_topology`, capture sinks.
+#[allow(clippy::type_complexity)]
+fn run_legacy(
+    events: &[Vec<Event>],
+    route: RoutePolicy,
+    m: usize,
+    shards: usize,
+    shard_threads: bool,
+    source_threads: bool,
+) -> (aestream::stream::StreamReport, Vec<Vec<Event>>) {
+    let n = events.len();
+    let layout =
+        (n > 1).then(|| SourceLayout::side_by_side(&vec![RES; n]));
+    let canvas = layout.as_ref().map_or(RES, |l| l.canvas);
+    let mut graph =
+        StageGraph::compile(&stage_spec(), canvas, &StageOptions { shards, shard_threads });
+    let sources: Vec<MemorySource> =
+        events.iter().map(|e| MemorySource::new(e.clone(), RES, 173)).collect();
+    let mut sinks = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..m {
+        let (sink, handle) = CaptureSink::new();
+        sinks.push(sink);
+        handles.push(handle);
+    }
+    let config = TopologyConfig {
+        chunk_size: 173,
+        driver: StreamDriver::Coroutine { channel_capacity: 1 },
+        threads: if source_threads { ThreadMode::PerSourceThread } else { ThreadMode::Inline },
+        route,
+        adaptive: None,
+    };
+    let report = run_topology(sources, &mut graph, sinks, layout, &config).unwrap();
+    let got = handles.iter().map(|h| h.lock().unwrap().clone()).collect();
+    (report, got)
+}
+
+/// Run the same shape lowered through the graph layer.
+#[allow(clippy::type_complexity)]
+fn run_graph_shape(
+    events: &[Vec<Event>],
+    route: RoutePolicy,
+    m: usize,
+    shards: usize,
+    shard_threads: bool,
+    source_threads: bool,
+) -> (aestream::stream::StreamReport, Vec<Vec<Event>>) {
+    let n = events.len();
+    let mut builder = Topology::builder();
+    let mut names = Vec::new();
+    for (i, stream) in events.iter().enumerate() {
+        let name = format!("in{i}");
+        builder = builder.source_with(
+            &name,
+            MemorySource::new(stream.clone(), RES, 173),
+            SourceOptions { offset: None, threaded: source_threads },
+        );
+        names.push(name);
+    }
+    if n > 1 {
+        let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        builder = builder.merge_with_layout("fuse", &refs, FusionLayout::SideBySide);
+    }
+    builder = builder.stages_with("filters", stage_spec(), StageOptions { shards, shard_threads });
+    builder = builder.route("split", route);
+    let mut handles = Vec::new();
+    for j in 0..m {
+        let (sink, handle) = CaptureSink::new();
+        builder = builder.after("split").sink(&format!("out{j}"), sink);
+        handles.push(handle);
+    }
+    let config = GraphConfig {
+        chunk_size: 173,
+        driver: StreamDriver::Coroutine { channel_capacity: 1 },
+        adaptive: None,
+    };
+    let report = builder.build().run(config).unwrap();
+    let got = handles.iter().map(|h| h.lock().unwrap().clone()).collect();
+    (report, got)
+}
+
+/// The equivalence property: legacy shapes lowered through `GraphSpec`
+/// are byte-identical, sink for sink, with matching node counters.
+#[test]
+fn every_legacy_shape_lowers_byte_identically() {
+    for n in 1..=4usize {
+        let events = streams(n);
+        for &(route, m) in
+            &[(RoutePolicy::Broadcast, 2), (RoutePolicy::Polarity, 2), (RoutePolicy::Stripes, 3)]
+        {
+            for shards in 1..=4usize {
+                for shard_threads in [false, true] {
+                    let tag = format!(
+                        "n={n} route={route:?} m={m} shards={shards} threads={shard_threads}"
+                    );
+                    let (legacy, legacy_out) =
+                        run_legacy(&events, route, m, shards, shard_threads, false);
+                    let (graph, graph_out) =
+                        run_graph_shape(&events, route, m, shards, shard_threads, false);
+                    assert_eq!(graph_out, legacy_out, "{tag}: sink bytes diverged");
+                    assert_eq!(graph.events_in, legacy.events_in, "{tag}");
+                    assert_eq!(graph.events_out, legacy.events_out, "{tag}");
+                    assert_eq!(graph.resolution, legacy.resolution, "{tag}");
+                    assert_eq!(graph.sources.len(), legacy.sources.len(), "{tag}");
+                    for (g, l) in graph.sources.iter().zip(&legacy.sources) {
+                        assert_eq!(g.events, l.events, "{tag}: source counters");
+                        assert_eq!(g.dropped, l.dropped, "{tag}: source drops");
+                    }
+                    assert_eq!(graph.stages.len(), legacy.stages.len(), "{tag}");
+                    for (g, l) in graph.stages.iter().zip(&legacy.stages) {
+                        assert_eq!(g.name, l.name, "{tag}: trunk stage names");
+                        assert_eq!(g.events, l.events, "{tag}: stage events");
+                        assert_eq!(g.dropped, l.dropped, "{tag}: stage drops");
+                        assert_eq!(g.shard_events, l.shard_events, "{tag}: shard histogram");
+                    }
+                    for (g, l) in graph.sinks.iter().zip(&legacy.sinks) {
+                        assert_eq!(g.events, l.events, "{tag}: sink counters");
+                    }
+                    assert_eq!(
+                        graph.merge_dropped, legacy.merge_dropped,
+                        "{tag}: merge drops"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Per-source pump threads through both paths (smaller sweep: thread
+/// startup dominates, the equivalence is what matters).
+#[test]
+fn per_source_threads_lower_byte_identically() {
+    let events = streams(3);
+    let (legacy, legacy_out) = run_legacy(&events, RoutePolicy::Broadcast, 2, 2, false, true);
+    let (graph, graph_out) = run_graph_shape(&events, RoutePolicy::Broadcast, 2, 2, false, true);
+    assert_eq!(graph_out, legacy_out, "threaded sources: sink bytes diverged");
+    assert_eq!(graph.events_in, legacy.events_in);
+    assert_eq!(graph.events_out, legacy.events_out);
+    for (g, l) in graph.sources.iter().zip(&legacy.sources) {
+        assert_eq!(g.events, l.events);
+        assert!(g.name.starts_with("thread("), "graph lane must be pumped: {:?}", g.name);
+        assert!(l.name.starts_with("thread("), "legacy lane must be pumped: {:?}", l.name);
+    }
+}
+
+/// Golden lowering: parsing CLI clauses and hand-building the same
+/// topology with the fluent builder yield the same `GraphSpec`.
+#[test]
+fn cli_clauses_and_builder_yield_the_same_graph() {
+    let args: Vec<String> = [
+        "input", "synthetic", "--duration", "50ms", "input", "synthetic", "--duration", "50ms",
+        "filter", "denoise", "1000", "branch", "filter", "refractory", "100", "output", "null",
+        "branch", "output", "null", "--shards", "2",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let Command::Stream {
+        inputs,
+        spec,
+        branches,
+        config,
+        threads,
+        route,
+        layout,
+        shards,
+        shard_threads,
+        sink_threads,
+        adaptive,
+    } = cli::parse(&args).unwrap()
+    else {
+        panic!("wrong parse");
+    };
+    let opts = TopologyOptions {
+        config,
+        source_threads: threads > 1,
+        route,
+        layout,
+        shards,
+        shard_threads,
+        sink_threads,
+        adaptive,
+    };
+    let from_cli = lower_to_graph(inputs, spec, branches, &opts).unwrap();
+
+    let sharded = StageOptions { shards: 2, shard_threads: false };
+    let hand = Topology::builder()
+        .source(
+            "in0",
+            aestream::stream::CameraSource::new(aestream::camera::CameraConfig::default(), 50_000),
+        )
+        .source(
+            "in1",
+            aestream::stream::CameraSource::new(aestream::camera::CameraConfig::default(), 50_000),
+        )
+        .merge_with_layout("fuse", &["in0", "in1"], FusionLayout::SideBySide)
+        .stages_with(
+            "filters",
+            PipelineSpec::new().then(StageSpec::new(|res: Resolution| {
+                ops::BackgroundActivityFilter::new(res, 1000)
+            })),
+            sharded,
+        )
+        .route("split", RoutePolicy::Broadcast)
+        .stages_with(
+            "branch0",
+            PipelineSpec::new()
+                .then(StageSpec::new(|res: Resolution| ops::RefractoryFilter::new(res, 100))),
+            sharded,
+        )
+        .sink("out0", NullSink::default())
+        .after("split")
+        .sink("out1", NullSink::default())
+        .build();
+
+    assert_eq!(from_cli.summary(), hand.summary(), "CLI lowering drifted from the builder");
+    from_cli.validate().unwrap();
+}
+
+/// The acceptance shape end to end through the CLI grammar: one merge,
+/// two independent branch chains, two sinks, per-branch `NodeReport`s.
+#[test]
+fn cli_branch_clauses_run_a_multi_branch_graph() {
+    let args: Vec<String> = [
+        "input", "synthetic", "--duration", "40ms", "input", "synthetic", "--duration", "40ms",
+        "filter", "denoise", "2000", "branch", "filter", "polarity", "on", "output", "null",
+        "branch", "filter", "refractory", "100", "output", "frames", "5000", "--chunk", "512",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let Command::Stream { inputs, spec, branches, config, route, layout, .. } =
+        cli::parse(&args).unwrap()
+    else {
+        panic!("wrong parse");
+    };
+    assert_eq!(branches.len(), 2);
+    let report = run_graph(
+        inputs,
+        spec,
+        branches,
+        TopologyOptions { config, route, layout, ..Default::default() },
+    )
+    .unwrap();
+    assert!(report.events_in > 0);
+    assert_eq!(report.sinks.len(), 2);
+    let names: Vec<&str> = report.stages.iter().map(|s| s.name.as_str()).collect();
+    assert!(
+        names.iter().any(|n| *n == "denoise(2000µs)"),
+        "shared chain report missing in {names:?}"
+    );
+    assert!(
+        names.iter().any(|n| n.starts_with("branch0/")),
+        "branch0 chain report missing in {names:?}"
+    );
+    assert!(
+        names.iter().any(|n| n.starts_with("branch1/")),
+        "branch1 chain report missing in {names:?}"
+    );
+    assert!(report.frames > 0, "the frames branch must bin frames");
+}
+
+/// Multi-branch byte-identity against the serial model through the
+/// coordinator API (`BranchSpec`s assembled in code).
+#[test]
+fn branch_chains_match_their_serial_references() {
+    use aestream::coordinator::{Input, Sink, Source};
+    let a = synthetic_events_seeded(3000, RES.width, RES.height, 0xB1);
+    let b = synthetic_events_seeded(2000, RES.width, RES.height, 0xB2);
+    let layout = SourceLayout::side_by_side(&[RES, RES]);
+    let (fused, _) = aestream::pipeline::fusion::fuse(&[&a, &b], &layout);
+    let shared = || {
+        PipelineSpec::new()
+            .then(StageSpec::new(|res: Resolution| ops::BackgroundActivityFilter::new(res, 1500)))
+    };
+    let on_chain = || {
+        PipelineSpec::new()
+            .then(StageSpec::new(|_| ops::PolarityFilter::keep(aestream::aer::Polarity::On)))
+    };
+    let refr_chain = || {
+        PipelineSpec::new()
+            .then(StageSpec::new(|res: Resolution| ops::RefractoryFilter::new(res, 50)))
+    };
+    let after_shared = shared().build_pipeline(layout.canvas).process(&fused);
+    let expect_on = on_chain().build_pipeline(layout.canvas).process(&after_shared);
+    let expect_refr = refr_chain().build_pipeline(layout.canvas).process(&after_shared);
+
+    // Coordinator branches only offer the built-in sinks; use the
+    // stream-level builder with capture sinks for byte identity, and
+    // the coordinator path for counter plumbing.
+    let (sink_on, got_on) = CaptureSink::new();
+    let (sink_refr, got_refr) = CaptureSink::new();
+    let report = Topology::builder()
+        .source("a", MemorySource::new(a.clone(), RES, 256))
+        .source("b", MemorySource::new(b.clone(), RES, 256))
+        .merge("fuse", &["a", "b"])
+        .stages("shared", shared())
+        .route("split", RoutePolicy::Broadcast)
+        .stages("keep-on", on_chain())
+        .sink("on", sink_on)
+        .after("split")
+        .stages("cooldown", refr_chain())
+        .sink("refr", sink_refr)
+        .build()
+        .run(GraphConfig { chunk_size: 256, ..Default::default() })
+        .unwrap();
+    assert_eq!(*got_on.lock().unwrap(), expect_on, "polarity branch ≠ serial");
+    assert_eq!(*got_refr.lock().unwrap(), expect_refr, "refractory branch ≠ serial");
+    assert_eq!(report.sinks[0].events, expect_on.len() as u64);
+    assert_eq!(report.sinks[1].events, expect_refr.len() as u64);
+
+    // Same shape through the coordinator's BranchSpec path: counters
+    // must line up with the serial model too.
+    let report = run_graph(
+        vec![
+            Input::from(Source::Memory(a, RES)),
+            Input::from(Source::Memory(b, RES)),
+        ],
+        shared(),
+        vec![
+            BranchSpec { spec: on_chain(), sink: Sink::Null },
+            BranchSpec { spec: refr_chain(), sink: Sink::Null },
+        ],
+        TopologyOptions {
+            config: StreamConfig { chunk_size: 256, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(report.sinks[0].events, expect_on.len() as u64);
+    assert_eq!(report.sinks[1].events, expect_refr.len() as u64);
+}
+
+// ---------------------------------------------------------------- device
+
+fn device_or_skip() -> Option<&'static Device> {
+    // One PJRT client per test process (see scenario_integration.rs for
+    // why create/destroy cycles are unsafe).
+    struct Shared(Option<Device>);
+    // SAFETY: the PJRT CPU client is internally synchronized; the
+    // static is never dropped.
+    unsafe impl Send for Shared {}
+    unsafe impl Sync for Shared {}
+    static DEVICE: std::sync::OnceLock<Shared> = std::sync::OnceLock::new();
+    DEVICE
+        .get_or_init(|| {
+            let dir = default_artifacts_dir();
+            if !dir.join("manifest.json").exists() {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return Shared(None);
+            }
+            Shared(Some(Device::open(&dir).expect("device open")))
+        })
+        .0
+        .as_ref()
+}
+
+/// The ROADMAP's multi-device fan-out: one merged stream, two branch
+/// chains, two `DetectorSession` sinks (needs artifacts; skips
+/// otherwise).
+#[test]
+fn fused_stream_fans_out_into_two_detector_sessions() {
+    let Some(device) = device_or_skip() else { return };
+    let m = device.manifest();
+    let plane = Resolution::new(m.width as u16, m.height as u16);
+    let a = synthetic_events_seeded(4000, plane.width, plane.height, 0xD1);
+    let b = synthetic_events_seeded(4000, plane.width, plane.height, 0xD2);
+    let report = Topology::builder()
+        .source("a", MemorySource::new(a, plane, 1024))
+        .source("b", MemorySource::new(b, plane, 1024))
+        .merge_with_layout("fuse", &["a", "b"], FusionLayout::Overlay)
+        .route("split", RoutePolicy::Polarity)
+        .stages(
+            "on-cooldown",
+            PipelineSpec::new()
+                .then(StageSpec::new(|res: Resolution| ops::RefractoryFilter::new(res, 50))),
+        )
+        .sink("det-on", SessionSink::sparse(device).unwrap())
+        .after("split")
+        .sink("det-off", SessionSink::sparse(device).unwrap())
+        .build()
+        .run(GraphConfig { chunk_size: 1024, ..Default::default() })
+        .unwrap();
+    assert_eq!(report.events_in, 8000);
+    assert_eq!(report.sinks.len(), 2);
+    for sink in &report.sinks {
+        assert!(sink.events > 0, "{}: no events reached the session", sink.name);
+        assert!(sink.frames > 0, "{}: the session processed no frames", sink.name);
+        assert!(sink.name.starts_with("session("), "{:?}", sink.name);
+    }
+    let names: Vec<&str> = report.stages.iter().map(|s| s.name.as_str()).collect();
+    assert!(names.iter().any(|n| n.starts_with("on-cooldown/")), "{names:?}");
+}

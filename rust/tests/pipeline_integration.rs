@@ -116,11 +116,11 @@ fn cli_parse_and_run_synthetic_to_null() {
     .map(|s| s.to_string())
     .collect();
     match cli::parse(&args).unwrap() {
-        cli::Command::Stream { inputs, spec, sinks, config, threads, route, .. } => {
-            let report = aestream::coordinator::run_topology(
+        cli::Command::Stream { inputs, spec, branches, config, threads, route, .. } => {
+            let report = aestream::coordinator::run_graph(
                 inputs,
                 spec,
-                sinks,
+                branches,
                 aestream::coordinator::TopologyOptions {
                     config,
                     source_threads: threads > 1,

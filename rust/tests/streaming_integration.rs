@@ -133,11 +133,11 @@ fn cli_stream_runs_end_to_end_on_both_drivers() {
         args.extend_from_slice(extra);
         let args: Vec<String> = args.iter().map(|s| s.to_string()).collect();
         match cli::parse(&args).unwrap() {
-            cli::Command::Stream { inputs, spec, sinks, config, threads, route, .. } => {
-                let report = aestream::coordinator::run_topology(
+            cli::Command::Stream { inputs, spec, branches, config, threads, route, .. } => {
+                let report = aestream::coordinator::run_graph(
                     inputs,
                     spec,
-                    sinks,
+                    branches,
                     aestream::coordinator::TopologyOptions {
                         config,
                         source_threads: threads > 1,

@@ -200,14 +200,14 @@ fn acceptance_cli_two_inputs_two_outputs_two_threads() {
     .collect();
 
     let report = match cli::parse(&args).unwrap() {
-        cli::Command::Stream { inputs, spec, sinks, config, threads, route, .. } => {
+        cli::Command::Stream { inputs, spec, branches, config, threads, route, .. } => {
             assert_eq!(inputs.len(), 2);
-            assert_eq!(sinks.len(), 2);
+            assert_eq!(branches.len(), 2);
             assert_eq!(threads, 2);
-            coordinator::run_topology(
+            coordinator::run_graph(
                 inputs,
                 spec,
-                sinks,
+                branches,
                 TopologyOptions {
                     config,
                     source_threads: threads > 1,
