@@ -23,6 +23,12 @@
 //! the op set) run serial vs stripe-sharded over 1/2/4 shard workers,
 //! inline coroutines vs one OS thread per shard.
 //!
+//! A serving section benchmarks the network plane: a `tcp-listen`
+//! topology fed by 1/16/128 simulated loopback clients, reporting
+//! end-to-end events/s, the merge's peak buffered events, and a peak
+//! RSS proxy (`VmHWM` from /proc/self/status) as the memory-bound
+//! check.
+//!
 //! Emits the human table plus one JSON object per configuration (the
 //! same flat `{"name": …, "mean_s": …, …}` shape as the other benches'
 //! stats), so dashboards can scrape either.
@@ -254,6 +260,7 @@ fn main() {
                             chunk_size: config.chunk_size,
                             driver: config.driver,
                             adaptive: None,
+                            report_json: None,
                         })
                         .unwrap()
                 } else {
@@ -478,6 +485,109 @@ fn main() {
         );
     }
 
+    // --- serving plane: a tcp-listen topology fed over loopback by
+    // 1/16/128 concurrent clients, each pushing its share of the stream
+    // as raw SPIF words. Rows report end-to-end throughput (connect →
+    // last event through the sink), the merge's peak buffered events,
+    // and VmHWM as a peak-RSS proxy — the `clients × window` memory
+    // bound made observable.
+    {
+        use aestream::net::spif;
+        use aestream::serve::{ListenerConfig, ListenerSource};
+        use aestream::stream::{GraphConfig, Topology};
+        use std::io::Write;
+        use std::net::TcpStream;
+
+        let serve_n: usize = if fast { 96_000 } else { 1_920_000 };
+        let serve_samples = if fast { 2 } else { 4 };
+        for &k in &[1usize, 16, 128] {
+            let per = serve_n / k;
+            let name = format!("serve{k}");
+            // Per-client wire payloads, encoded once outside the timer.
+            let payloads: Vec<Vec<u8>> = (0..k)
+                .map(|i| {
+                    let events =
+                        synthetic_events_seeded(per, res.width, res.height, 0x5E47 + i as u64);
+                    let mut bytes = Vec::with_capacity(events.len() * 4);
+                    for ev in &events {
+                        bytes.extend_from_slice(&spif::pack_word(ev).to_le_bytes());
+                    }
+                    bytes
+                })
+                .collect();
+            let mut peak = 0usize;
+            let mut waits = 0u64;
+            let stats = measure(1, serve_samples, || {
+                let listener = ListenerSource::bind_tcp(
+                    "127.0.0.1:0",
+                    ListenerConfig::new(res)
+                        .max_clients(k.max(2))
+                        .idle_timeout(std::time::Duration::from_secs(10)),
+                )
+                .unwrap();
+                let addr = listener.local_addr();
+                let hub = listener.hub();
+                let senders: Vec<_> = payloads
+                    .iter()
+                    .map(|payload| {
+                        let payload = payload.clone();
+                        std::thread::spawn(move || {
+                            let mut conn = TcpStream::connect(addr).unwrap();
+                            for chunk in payload.chunks(16 * 1024) {
+                                conn.write_all(chunk).unwrap();
+                            }
+                        })
+                    })
+                    .collect();
+                // Close the plane once every client connected and left;
+                // queued batches still drain before the merge ends.
+                let supervisor = {
+                    let hub = hub.clone();
+                    let k = k as u64;
+                    std::thread::spawn(move || {
+                        while hub.admitted() < k || hub.active_clients() > 0 {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        hub.shutdown();
+                    })
+                };
+                let report = Topology::builder()
+                    .listen("net", listener)
+                    .sink("out", NullSink::default())
+                    .build()
+                    .run(GraphConfig { chunk_size: 4096, ..Default::default() })
+                    .unwrap();
+                for sender in senders {
+                    sender.join().unwrap();
+                }
+                supervisor.join().unwrap();
+                assert_eq!(report.events_in, (per * k) as u64, "{name}: lost events");
+                peak = report.merge_peak_buffered;
+                waits = report.backpressure_waits;
+                std::hint::black_box(report.events_out);
+            });
+            let rss_kb = peak_rss_kb();
+            table.row(&[
+                name.clone(),
+                "4096".into(),
+                stats.display_mean(),
+                fmt_rate(stats.throughput((per * k) as u64), "ev/s"),
+                peak.to_string(),
+                waits.to_string(),
+            ]);
+            json_lines.push(format!(
+                "{{\"name\":\"{name}\",\"chunk\":4096,\"mean_s\":{:.6},\
+                 \"std_s\":{:.6},\"min_s\":{:.6},\"throughput_ev_s\":{:.0},\
+                 \"peak_in_flight\":{peak},\"backpressure_waits\":{waits},\
+                 \"peak_rss_kb\":{rss_kb}}}",
+                stats.mean_s,
+                stats.std_s,
+                stats.min_s,
+                stats.throughput((per * k) as u64),
+            ));
+        }
+    }
+
     println!("{}", table.render());
     println!("peak in-flight is the memory bound: batch-collect holds the whole");
     println!("stream; the incremental drivers hold ≤ capacity × chunk events;");
@@ -485,8 +595,25 @@ fn main() {
     println!("shard runs additionally hold ≤ one batch in flight per shard.");
     println!("adaptive-* rows stream a hotspot (90% of events in one eighth of");
     println!("the canvas); their 5th column is the final shard skew under the");
-    println!("run's last stripe cut (1.0 = perfectly balanced).\n");
+    println!("run's last stripe cut (1.0 = perfectly balanced).");
+    println!("serve* rows push the stream over loopback TCP from 1/16/128");
+    println!("concurrent clients; their 5th column is the merge's peak buffered");
+    println!("events and the JSON adds peak_rss_kb (VmHWM) as the memory check.\n");
     for line in &json_lines {
         println!("{line}");
     }
+}
+
+/// Peak resident set (`VmHWM`, kB) from /proc/self/status — 0 where
+/// unavailable (non-Linux), keeping the JSON schema stable.
+fn peak_rss_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|status| {
+            status.lines().find_map(|line| {
+                let rest = line.strip_prefix("VmHWM:")?;
+                rest.trim().trim_end_matches("kB").trim().parse().ok()
+            })
+        })
+        .unwrap_or(0)
 }

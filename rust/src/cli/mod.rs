@@ -39,11 +39,12 @@ use anyhow::{bail, Context, Result};
 use crate::aer::{Polarity, Resolution};
 use crate::camera::CameraConfig;
 use crate::coordinator::stream::{
-    AdaptiveConfig, BranchSpec, FusionLayout, Input, RoutePolicy, Sink, Source, StreamConfig,
-    StreamDriver,
+    AdaptiveConfig, BranchSpec, FusionLayout, Input, ReportTarget, RoutePolicy, Sink, Source,
+    StreamConfig, StreamDriver,
 };
 use crate::formats::Format;
 use crate::pipeline::{ops, PipelineSpec, StageSpec};
+use crate::serve::ListenerConfig;
 use crate::stream::adapt::parse_controllers;
 
 /// A parsed CLI invocation.
@@ -79,6 +80,9 @@ pub enum Command {
         sink_threads: bool,
         /// Adaptive controllers (`--adaptive skew,chunk --epoch N`).
         adaptive: Option<AdaptiveConfig>,
+        /// Stream one JSON line per telemetry epoch, plus a final
+        /// report line, to a file or `-` for stdout (`--report-json`).
+        report_json: Option<ReportTarget>,
     },
     /// Run the four Fig. 4 scenarios.
     Scenarios {
@@ -138,13 +142,23 @@ fn parse_input<'a, I: Iterator<Item = &'a str>>(
     match kind {
         "file" => path = Some(PathBuf::from(toks.next().context("input file needs a path")?)),
         "udp" => bind = Some(toks.next().context("input udp needs an address")?.to_string()),
+        "tcp-listen" | "http-listen" => {
+            bind = Some(
+                toks.next()
+                    .with_context(|| format!("input {kind} needs a bind address"))?
+                    .to_string(),
+            )
+        }
         "synthetic" => {}
-        other => bail!("unknown input kind {other:?} (file|udp|synthetic)"),
+        other => bail!("unknown input kind {other:?} (file|udp|tcp-listen|http-listen|synthetic)"),
     }
+    let listener = matches!(kind, "tcp-listen" | "http-listen");
     // Per-input flags, any order after the positional part.
     let mut geometry = None;
     let mut offset = None;
     let mut duration_us = 1_000_000u64;
+    let mut window = None;
+    let mut max_clients = None;
     loop {
         match toks.peek() {
             Some(&"--geometry") => {
@@ -161,6 +175,30 @@ fn parse_input<'a, I: Iterator<Item = &'a str>>(
                 duration_us = parse_duration(toks.next().context("--duration needs a value")?)?
                     .as_micros() as u64;
             }
+            Some(&"--window") if listener => {
+                toks.next();
+                let n: usize = toks
+                    .next()
+                    .context("--window needs an event count")?
+                    .parse()
+                    .context("bad --window")?;
+                if n == 0 {
+                    bail!("--window must be at least 1 event");
+                }
+                window = Some(n);
+            }
+            Some(&"--max-clients") if listener => {
+                toks.next();
+                let n: usize = toks
+                    .next()
+                    .context("--max-clients needs a count")?
+                    .parse()
+                    .context("bad --max-clients")?;
+                if n == 0 {
+                    bail!("--max-clients must be at least 1");
+                }
+                max_clients = Some(n);
+            }
             _ => break,
         }
     }
@@ -171,6 +209,26 @@ fn parse_input<'a, I: Iterator<Item = &'a str>>(
             idle_timeout: Duration::from_millis(500),
             geometry,
         },
+        "tcp-listen" | "http-listen" => {
+            // Clients attach to a fixed canvas at runtime; there is
+            // nothing to observe before they do.
+            let geometry = geometry.with_context(|| {
+                format!("input {kind} needs --geometry WxH (the canvas clients send into)")
+            })?;
+            let mut config = ListenerConfig::new(geometry);
+            if let Some(window) = window {
+                config = config.window(window);
+            }
+            if let Some(max) = max_clients {
+                config = config.max_clients(max);
+            }
+            let bind = bind.expect("parsed above");
+            if kind == "tcp-listen" {
+                Source::TcpListen { bind, config }
+            } else {
+                Source::HttpListen { bind, config }
+            }
+        }
         "synthetic" => {
             if geometry.is_some() {
                 bail!("input synthetic has a fixed geometry; drop --geometry");
@@ -179,6 +237,9 @@ fn parse_input<'a, I: Iterator<Item = &'a str>>(
         }
         _ => unreachable!("kind validated above"),
     };
+    if listener && offset.is_some() {
+        bail!("listener inputs cannot take --offset: the declared canvas joins the layout whole");
+    }
     Ok(Input { source, offset })
 }
 
@@ -214,7 +275,12 @@ fn parse_output<'a, I: Iterator<Item = &'a str>>(
                 .context("bad window")?;
             Sink::View { window_us, max_frames: 8 }
         }
-        other => bail!("unknown output kind {other:?} (file|udp|stdout|null|frames|view)"),
+        "subscribe" => Sink::Subscribe {
+            bind: toks.next().context("output subscribe needs a bind address")?.to_string(),
+        },
+        other => {
+            bail!("unknown output kind {other:?} (file|udp|stdout|null|frames|view|subscribe)")
+        }
     })
 }
 
@@ -359,6 +425,7 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
     let mut sink_threads = false;
     let mut controllers = None;
     let mut epoch_batches: Option<u64> = None;
+    let mut report_json = None;
     while let Some(tok) = toks.next() {
         match tok {
             "--chunk" => {
@@ -424,6 +491,11 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
                 }
                 epoch_batches = Some(n);
             }
+            "--report-json" => {
+                report_json = Some(ReportTarget::parse(
+                    toks.next().context("--report-json needs a path (or - for stdout)")?,
+                ));
+            }
             extra => bail!("unexpected trailing argument {extra:?}"),
         }
     }
@@ -460,6 +532,7 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
         shard_threads,
         sink_threads,
         adaptive,
+        report_json,
     })
 }
 
@@ -523,18 +596,21 @@ aestream — accelerated event-based processing with coroutines (reproduction)
 
 USAGE:
   aestream input <file PATH [--geometry WxH] | udp ADDR [--geometry WxH] |
+                  tcp-listen ADDR --geometry WxH [--window N] [--max-clients N] |
+                  http-listen ADDR --geometry WxH [--window N] [--max-clients N] |
                   synthetic [--duration D]> [--offset X,Y] ...
            [filter <polarity on|off | crop X Y W H | downsample F |
                     refractory US | denoise US | flip-x | flip-y |
                     transpose | time-shift US> [@serial]]...
            ( output <file PATH | udp ADDR | stdout | null | frames WINDOW_US |
-                     view WINDOW_US>...
+                     view WINDOW_US | subscribe ADDR>...
            | branch [filter <...> [@serial]]... output <...> ... )
            [--chunk EVENTS] [--sync] [--threads N]
            [--route broadcast|polarity|stripes]
            [--layout side-by-side|grid|overlay]
            [--shards N] [--shard-threads] [--sink-threads]
-           [--adaptive skew,chunk] [--epoch BATCHES]
+           [--adaptive skew,chunk,client-window] [--epoch BATCHES]
+           [--report-json PATH|-]
   aestream scenarios [--duration D] [--time-scale X]
   aestream table1
   aestream help
@@ -579,6 +655,20 @@ controllers registered via stream::register_controller(name, factory)
 resolve by name here too. The report lists every epoch, re-cut (skew
 before/after), and chunk change.
 
+`input tcp-listen ADDR --geometry WxH` serves the topology over the
+network: any number of clients connect while it runs, each sending raw
+little-endian SPIF words over TCP (http-listen accepts the same words
+as HTTP POST bodies). Every client becomes its own merge lane behind a
+credit window (--window, default 8192 events in flight), so memory
+stays bounded by clients × window; --max-clients caps admission. The
+`client-window` adaptive controller AIMD-tunes each client's window
+from observed credit stalls. `output subscribe ADDR` is the mirror:
+TCP consumers attach at runtime and receive every processed batch as
+SPIF words; a slow consumer drops deliveries and is eventually
+evicted, never stalling the pipeline. --report-json streams one JSON
+line per telemetry epoch (and a final full report) to a file or `-`
+for stdout — per-client windows, stalls, and admissions included.
+
 EXAMPLES (paper Fig. 2B and §6 fusion):
   aestream input file recording.aedat output udp 10.0.0.1:3333
   aestream input synthetic --duration 2s filter polarity on output stdout
@@ -594,6 +684,9 @@ EXAMPLES (paper Fig. 2B and §6 fusion):
            filter denoise 1000 \\
            branch filter polarity on output file on.aedat \\
            branch filter refractory 100 output frames 10000
+  aestream input tcp-listen 0.0.0.0:7777 --geometry 346x260 \\
+           filter denoise 1000 output subscribe 0.0.0.0:7778 \\
+           --adaptive client-window --report-json -
 ";
 
 #[cfg(test)]
@@ -948,6 +1041,91 @@ mod tests {
         }
         assert!(parse(&sv(&[
             "input", "synthetic", "output", "null", "--route", "zigzag",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn parses_serving_clauses() {
+        let cmd = parse(&sv(&[
+            "input",
+            "tcp-listen",
+            "0.0.0.0:7777",
+            "--geometry",
+            "346x260",
+            "--window",
+            "4096",
+            "--max-clients",
+            "64",
+            "output",
+            "subscribe",
+            "0.0.0.0:7778",
+            "--adaptive",
+            "client-window",
+            "--report-json",
+            "-",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { inputs, branches, adaptive, report_json, .. } => {
+                match &inputs[0].source {
+                    Source::TcpListen { bind, config } => {
+                        assert_eq!(bind, "0.0.0.0:7777");
+                        assert_eq!(config.geometry, Resolution::new(346, 260));
+                        assert_eq!(config.window, 4096);
+                        assert_eq!(config.max_clients, 64);
+                    }
+                    _ => panic!("wrong parse"),
+                }
+                assert!(
+                    matches!(&branches[0].sink, Sink::Subscribe { bind } if bind == "0.0.0.0:7778")
+                );
+                assert_eq!(
+                    adaptive.expect("--adaptive parsed").controllers,
+                    vec![crate::stream::ControllerKind::ClientWindow]
+                );
+                assert_eq!(report_json, Some(ReportTarget::Stdout));
+            }
+            _ => panic!("wrong parse"),
+        }
+        // http-listen parses the same shape.
+        match parse(&sv(&[
+            "input", "http-listen", "0.0.0.0:8080", "--geometry", "128x128", "output", "null",
+            "--report-json", "epochs.jsonl",
+        ]))
+        .unwrap()
+        {
+            Command::Stream { inputs, report_json, .. } => {
+                assert!(matches!(&inputs[0].source, Source::HttpListen { .. }));
+                assert_eq!(
+                    report_json,
+                    Some(ReportTarget::File(PathBuf::from("epochs.jsonl")))
+                );
+            }
+            _ => panic!("wrong parse"),
+        }
+        // Listeners cannot observe geometry: declaring it is mandatory.
+        let err = format!(
+            "{}",
+            parse(&sv(&["input", "tcp-listen", "0.0.0.0:7777", "output", "null"]))
+                .unwrap_err()
+        );
+        assert!(err.contains("--geometry"), "got {err}");
+        // A listener's canvas joins the layout whole: no --offset.
+        assert!(parse(&sv(&[
+            "input", "tcp-listen", ":7777", "--geometry", "8x8", "--offset", "0,0", "output",
+            "null",
+        ]))
+        .is_err());
+        // Zero-sized windows and client caps are rejected.
+        assert!(parse(&sv(&[
+            "input", "tcp-listen", ":7777", "--geometry", "8x8", "--window", "0", "output",
+            "null",
+        ]))
+        .is_err());
+        assert!(parse(&sv(&[
+            "input", "tcp-listen", ":7777", "--geometry", "8x8", "--max-clients", "0",
+            "output", "null",
         ]))
         .is_err());
     }

@@ -18,6 +18,6 @@ pub use scenarios::{
 };
 pub use stream::{
     lower_to_graph, run_graph, run_stream, run_stream_with, run_topology, AdaptiveConfig,
-    AdaptiveReport, BranchSpec, ControllerKind, FusionLayout, Input, RoutePolicy, Sink, Source,
-    StreamConfig, StreamDriver, StreamReport, TopologyOptions,
+    AdaptiveReport, BranchSpec, ControllerKind, FusionLayout, Input, ReportTarget, RoutePolicy,
+    Sink, Source, StreamConfig, StreamDriver, StreamReport, TopologyOptions,
 };

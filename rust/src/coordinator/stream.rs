@@ -41,6 +41,7 @@ use crate::camera::CameraConfig;
 use crate::formats::Format;
 use crate::pipeline::fusion::SourceLayout;
 use crate::pipeline::{Pipeline, PipelineSpec};
+use crate::serve::{ListenerConfig, ListenerSource, SubscribeSink};
 use crate::stream::{
     self, CameraSource, EventSink, EventSource, FileSink, FileSource, FrameSink, GraphConfig,
     GraphSpec, MemorySource, NullSink, SourceOptions, StageOptions, StdoutSink, Topology,
@@ -48,8 +49,8 @@ use crate::stream::{
 };
 
 pub use crate::stream::{
-    AdaptiveConfig, AdaptiveReport, ControllerKind, FusionLayout, RoutePolicy, StreamConfig,
-    StreamDriver, StreamReport, ThreadMode, TopologyConfig,
+    AdaptiveConfig, AdaptiveReport, ControllerKind, FusionLayout, ReportTarget, RoutePolicy,
+    StreamConfig, StreamDriver, StreamReport, ThreadMode, TopologyConfig,
 };
 
 /// Where events come from.
@@ -68,6 +69,14 @@ pub enum Source {
     Synthetic { config: CameraConfig, duration_us: u64 },
     /// In-memory events (tests, benches).
     Memory(Vec<Event>, Resolution),
+    /// Serve SPIF words over TCP: many concurrent clients attach and
+    /// detach while the topology runs, each a dynamic merge lane behind
+    /// an AIMD-tuned credit window (`input tcp-listen ADDR --geometry
+    /// WxH`). Lowers to a `Listener` graph node.
+    TcpListen { bind: String, config: ListenerConfig },
+    /// Serve HTTP `POST` ingest of the same words (`input http-listen
+    /// ADDR --geometry WxH`).
+    HttpListen { bind: String, config: ListenerConfig },
 }
 
 impl Source {
@@ -97,7 +106,20 @@ impl Source {
                 Box::new(CameraSource::new(config, duration_us))
             }
             Source::Memory(events, res) => Box::new(MemorySource::new(events, res, chunk_size)),
+            Source::TcpListen { bind, config } => {
+                Box::new(ListenerSource::bind_tcp(bind.as_str(), config)?)
+            }
+            Source::HttpListen { bind, config } => {
+                Box::new(ListenerSource::bind_http(bind.as_str(), config)?)
+            }
         })
+    }
+
+    /// `true` for serving-plane listeners, which lower to `Listener`
+    /// graph nodes (polled inline, never pumped) instead of plain
+    /// source nodes.
+    fn is_listener(&self) -> bool {
+        matches!(self, Source::TcpListen { .. } | Source::HttpListen { .. })
     }
 }
 
@@ -133,6 +155,12 @@ pub enum Sink {
     Frames { window_us: u64 },
     /// Render frames as terminal density art (visual inspection).
     View { window_us: u64, max_frames: usize },
+    /// Serve processed events to dynamically attached TCP subscribers
+    /// (`output subscribe ADDR`): each consumer gets every batch as
+    /// contiguous SPIF words behind its own bounded queue; slow
+    /// consumers are dropped-then-evicted, never backpressuring the
+    /// trunk.
+    Subscribe { bind: String },
 }
 
 impl Sink {
@@ -153,6 +181,7 @@ impl Sink {
             Sink::View { window_us, max_frames } => {
                 Box::new(ViewSink::new(res, window_us, max_frames))
             }
+            Sink::Subscribe { bind } => Box::new(SubscribeSink::bind(bind.as_str())?),
         })
     }
 }
@@ -202,6 +231,10 @@ pub struct TopologyOptions {
     /// Adaptive controllers (`--adaptive skew,chunk --epoch N`); `None`
     /// keeps the static runtime.
     pub adaptive: Option<AdaptiveConfig>,
+    /// Stream one JSON line per telemetry epoch — plus a final report
+    /// line on shutdown — to a file or stdout (`--report-json
+    /// <path|->`). `None` keeps reporting end-of-run only.
+    pub report_json: Option<ReportTarget>,
 }
 
 impl Default for TopologyOptions {
@@ -215,6 +248,7 @@ impl Default for TopologyOptions {
             shard_threads: false,
             sink_threads: false,
             adaptive: None,
+            report_json: None,
         }
     }
 }
@@ -323,6 +357,7 @@ pub fn run_graph(
         chunk_size: opts.config.chunk_size,
         driver: opts.config.driver,
         adaptive: opts.adaptive.clone(),
+        report_json: opts.report_json.clone(),
     };
     lower_to_graph(inputs, spec, branches, &opts)?.run(config)
 }
@@ -357,12 +392,26 @@ pub fn lower_to_graph(
     let mut source_names = Vec::with_capacity(inputs.len());
     for (i, input) in inputs.into_iter().enumerate() {
         let name = format!("in{i}");
+        let listener = input.source.is_listener();
+        if listener && input.offset.is_some() {
+            bail!(
+                "listener inputs cannot take --offset: clients land on the \
+                 listener's declared canvas, which joins the fused layout whole"
+            );
+        }
         let source = input.source.into_source(chunk)?;
-        builder = builder.source_with(
-            &name,
-            source,
-            SourceOptions { offset: input.offset, threaded: opts.source_threads },
-        );
+        builder = if listener {
+            // Listeners are graph roots polled inline (never pumped):
+            // their client plane must reach the merge driver so clients
+            // admitted at runtime become dynamic lanes.
+            builder.listen(&name, source)
+        } else {
+            builder.source_with(
+                &name,
+                source,
+                SourceOptions { offset: input.offset, threaded: opts.source_threads },
+            )
+        };
         source_names.push(name);
     }
     if fused {

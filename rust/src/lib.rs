@@ -48,6 +48,12 @@
 //!   barriers, output byte-identical to serial across re-cuts; custom
 //!   controllers register by name ([`stream::adapt::registry`]) and
 //!   resolve from `--adaptive` lists end to end;
+//! * [`serve`] — the network serving plane: `tcp-listen` / `http-listen`
+//!   sources that admit many concurrent clients at runtime (each a
+//!   dynamically attached merge lane behind an AIMD-tuned credit
+//!   window, so memory stays bounded by `clients × window`), and the
+//!   `subscribe` sink fanning deliveries out to N TCP consumers with
+//!   slow-consumer eviction;
 //! * [`engine`] — the Fig. 3 concurrency contenders (sync / threads /
 //!   coroutines / lock-free ring);
 //! * [`rt`] — the hand-rolled cooperative async runtime (coroutines);
@@ -76,6 +82,7 @@ pub mod net;
 pub mod pipeline;
 pub mod rt;
 pub mod runtime;
+pub mod serve;
 pub mod snn;
 pub mod stream;
 pub mod sync;

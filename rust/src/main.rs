@@ -32,6 +32,7 @@ fn main() -> Result<()> {
             shard_threads,
             sink_threads,
             adaptive,
+            report_json,
         } => {
             let multi = inputs.len() > 1 || branches.len() > 1;
             let branched = branches.iter().any(|b| !b.spec.is_empty());
@@ -49,6 +50,7 @@ fn main() -> Result<()> {
                     shard_threads,
                     sink_threads,
                     adaptive,
+                    report_json,
                 },
             )?;
             eprintln!(
@@ -137,6 +139,12 @@ fn main() -> Result<()> {
                     eprintln!(
                         "    epoch {}: chunk {} → {}",
                         change.epoch, change.from, change.to
+                    );
+                }
+                for change in &adaptive.window_changes {
+                    eprintln!(
+                        "    epoch {}: client {} window {} → {}",
+                        change.epoch, change.client, change.from, change.to
                     );
                 }
             }

@@ -1,0 +1,471 @@
+//! Socket listeners: the [`EventSource`] face of a [`ClientHub`].
+//!
+//! [`ListenerSource::bind_tcp`] serves raw SPIF-framed words over a TCP
+//! byte stream (the UDP datagram format of [`crate::net::spif`], minus
+//! the 350-word datagram ceiling — words are simply contiguous);
+//! [`ListenerSource::bind_http`] serves a minimal `POST` endpoint whose
+//! request bodies carry the same little-endian words. Both spawn one
+//! accept thread plus one named reader thread per admitted client; the
+//! listener itself compiles into a topology as a `Listener` graph node
+//! that is polled inline by the fan-in merge (never pumped), acting as
+//! a heartbeat while its hub's clients carry the actual data lanes.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::aer::{Event, Resolution};
+use crate::net::spif;
+use crate::stream::{ClientPlane, EventSource};
+
+use super::hub::{ClientHub, ClientIngest};
+use super::thread_label;
+
+/// Read buffer per client connection.
+const READ_BUF: usize = 16 * 1024;
+/// Poll cadence of the non-blocking accept loop.
+const ACCEPT_IDLE: Duration = Duration::from_millis(2);
+/// Per-client socket read timeout, so readers notice shutdown.
+const READ_TIMEOUT: Duration = Duration::from_millis(100);
+/// HTTP requests: header and body ceilings for the minimal parser.
+const MAX_HEADER: usize = 64 * 1024;
+const MAX_BODY: usize = 4 * 1024 * 1024;
+
+/// How a listener interprets client bytes.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Protocol {
+    /// Contiguous little-endian SPIF words on a raw TCP stream.
+    Tcp,
+    /// `POST` requests whose bodies are the same words.
+    Http,
+}
+
+/// Tunables for one listener, applied to every admitted client.
+#[derive(Clone, Copy, Debug)]
+pub struct ListenerConfig {
+    /// Canvas events are filtered to; listeners cannot infer geometry
+    /// from the wire, so it must be declared.
+    pub geometry: Resolution,
+    /// Initial per-client credit window (events in flight), retuned
+    /// live by the `client-window` AIMD controller.
+    pub window: usize,
+    /// Admission ceiling on concurrent clients.
+    pub max_clients: usize,
+    /// End the source once no client has been connected for this long
+    /// (`None` serves forever).
+    pub idle_timeout: Option<Duration>,
+}
+
+impl ListenerConfig {
+    /// Defaults: 8192-event windows, 1024 clients, serve forever.
+    pub fn new(geometry: Resolution) -> Self {
+        ListenerConfig { geometry, window: 8192, max_clients: 1024, idle_timeout: None }
+    }
+
+    /// Set the initial per-client credit window.
+    pub fn window(mut self, window: usize) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Set the admission ceiling.
+    pub fn max_clients(mut self, max: usize) -> Self {
+        self.max_clients = max;
+        self
+    }
+
+    /// End the stream after this long with zero connected clients.
+    pub fn idle_timeout(mut self, timeout: Duration) -> Self {
+        self.idle_timeout = Some(timeout);
+        self
+    }
+}
+
+/// A bound listener: [`EventSource`] heartbeat + [`ClientHub`] plane.
+pub struct ListenerSource {
+    hub: Arc<ClientHub>,
+    local_addr: SocketAddr,
+    kind: &'static str,
+    accept: Option<JoinHandle<()>>,
+    idle_timeout: Option<Duration>,
+    idle_since: Option<Instant>,
+}
+
+impl ListenerSource {
+    /// Bind a raw SPIF-over-TCP listener.
+    pub fn bind_tcp<A: ToSocketAddrs>(addr: A, config: ListenerConfig) -> Result<Self> {
+        Self::bind(addr, config, Protocol::Tcp)
+    }
+
+    /// Bind an HTTP `POST` ingest listener.
+    pub fn bind_http<A: ToSocketAddrs>(addr: A, config: ListenerConfig) -> Result<Self> {
+        Self::bind(addr, config, Protocol::Http)
+    }
+
+    fn bind<A: ToSocketAddrs>(
+        addr: A,
+        config: ListenerConfig,
+        protocol: Protocol,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("serve: bind listener")?;
+        listener
+            .set_nonblocking(true)
+            .context("serve: set listener non-blocking")?;
+        let local_addr = listener.local_addr().context("serve: listener local addr")?;
+        let hub = ClientHub::new(config.geometry, config.window, config.max_clients);
+        let accept_hub = hub.clone();
+        let accept = std::thread::Builder::new()
+            .name("serve:accept".into())
+            .spawn(move || accept_loop(listener, accept_hub, protocol))
+            .context("serve: spawn accept thread")?;
+        Ok(ListenerSource {
+            hub,
+            local_addr,
+            kind: match protocol {
+                Protocol::Tcp => "tcp-listen",
+                Protocol::Http => "http-listen",
+            },
+            accept: Some(accept),
+            idle_timeout: config.idle_timeout,
+            idle_since: None,
+        })
+    }
+
+    /// The bound address (with the OS-chosen port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The client registry behind this listener.
+    pub fn hub(&self) -> Arc<ClientHub> {
+        self.hub.clone()
+    }
+}
+
+impl EventSource for ListenerSource {
+    /// The listener itself never yields events — clients do, through
+    /// their own merge lanes. It heartbeats while serving and ends the
+    /// stream on shutdown or idle timeout.
+    fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
+        if self.hub.is_closed() {
+            return Ok(None);
+        }
+        if let Some(timeout) = self.idle_timeout {
+            if self.hub.active_clients() == 0 {
+                let since = *self.idle_since.get_or_insert_with(Instant::now);
+                if since.elapsed() >= timeout {
+                    self.hub.shutdown();
+                    return Ok(None);
+                }
+            } else {
+                self.idle_since = None;
+            }
+        }
+        Ok(Some(Vec::new()))
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.hub.geometry()
+    }
+
+    fn is_live(&self) -> bool {
+        true
+    }
+
+    fn describe(&self) -> String {
+        format!("{}({})", self.kind, self.local_addr)
+    }
+
+    fn client_plane(&self) -> Option<Arc<dyn ClientPlane>> {
+        Some(self.hub.clone())
+    }
+}
+
+impl Drop for ListenerSource {
+    fn drop(&mut self) {
+        self.hub.shutdown();
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, hub: Arc<ClientHub>, protocol: Protocol) {
+    while !hub.is_closed() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+                let prefix = match protocol {
+                    Protocol::Tcp => "client",
+                    Protocol::Http => "http",
+                };
+                match hub.admit(prefix) {
+                    Some(ingest) => spawn_reader(stream, ingest, protocol),
+                    None => refuse(stream, protocol),
+                }
+            }
+            Err(err) if err.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_IDLE);
+            }
+            Err(err) if err.kind() == ErrorKind::Interrupted => {}
+            // Accept errors (e.g. fd pressure) are transient: back off.
+            Err(_) => std::thread::sleep(ACCEPT_IDLE),
+        }
+    }
+}
+
+fn spawn_reader(stream: TcpStream, ingest: ClientIngest, protocol: Protocol) {
+    let name = thread_label(ingest.name());
+    let run = move || match protocol {
+        Protocol::Tcp => read_spif_stream(stream, &ingest),
+        Protocol::Http => serve_http(stream, &ingest),
+    };
+    if let Err(err) = std::thread::Builder::new().name(name).spawn(run) {
+        // Thread exhaustion: the dropped ingest counts the disconnect.
+        debug_assert!(false, "serve: spawn client reader: {err}");
+    }
+}
+
+/// Tell a refused connection why, as well as the protocol allows.
+fn refuse(mut stream: TcpStream, protocol: Protocol) {
+    if protocol == Protocol::Http {
+        let _ = respond(&mut stream, "503 Service Unavailable", b"{\"accepted\":0}\n");
+    }
+    // Raw TCP has no side-channel: dropping the socket is the refusal.
+}
+
+/// Decode contiguous little-endian SPIF words off a byte stream,
+/// carrying partial words across reads. Events are stamped with their
+/// arrival time and filtered to the declared geometry. Any disconnect
+/// — polite or abrupt, even mid-word — is a clean end of lane.
+fn read_spif_stream(mut stream: TcpStream, ingest: &ClientIngest) {
+    let geometry = ingest.geometry();
+    let mut buf = [0u8; READ_BUF];
+    let mut carry: Vec<u8> = Vec::with_capacity(4);
+    loop {
+        let read = match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(err)
+                if err.kind() == ErrorKind::WouldBlock
+                    || err.kind() == ErrorKind::TimedOut =>
+            {
+                if !ingest.open() {
+                    break;
+                }
+                continue;
+            }
+            Err(err) if err.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        };
+        let t = ingest.now_us();
+        carry.extend_from_slice(&buf[..read]);
+        let whole = carry.len() - carry.len() % 4;
+        let mut batch = Vec::with_capacity(whole / 4);
+        let mut rejected = 0u64;
+        for word in carry[..whole].chunks_exact(4) {
+            let ev = spif::unpack_word(u32::from_le_bytes(word.try_into().unwrap()), t);
+            if geometry.contains(&ev) {
+                batch.push(ev);
+            } else {
+                rejected += 1;
+            }
+        }
+        carry.drain(..whole);
+        if rejected > 0 {
+            ingest.count_dropped(rejected);
+        }
+        if !ingest.push(batch) {
+            break;
+        }
+    }
+}
+
+/// Serve keep-alive HTTP on one connection: `POST` bodies of SPIF
+/// words are decoded, filtered, and pushed as one batch each.
+fn serve_http(mut stream: TcpStream, ingest: &ClientIngest) {
+    let geometry = ingest.geometry();
+    let mut pending: Vec<u8> = Vec::new();
+    'requests: loop {
+        // Accumulate until the blank line ending the request head.
+        let head_end = loop {
+            if let Some(pos) = find_subslice(&pending, b"\r\n\r\n") {
+                break pos + 4;
+            }
+            if pending.len() > MAX_HEADER {
+                let _ = respond(
+                    &mut stream,
+                    "431 Request Header Fields Too Large",
+                    b"header too large\n",
+                );
+                break 'requests;
+            }
+            if !read_more(&mut stream, &mut pending, ingest) {
+                break 'requests;
+            }
+        };
+        let head = String::from_utf8_lossy(&pending[..head_end]).into_owned();
+        let method = head.split_whitespace().next().unwrap_or("").to_string();
+        let content_length = head
+            .lines()
+            .find_map(|line| {
+                let (name, value) = line.split_once(':')?;
+                name.eq_ignore_ascii_case("content-length")
+                    .then(|| value.trim().parse::<usize>().ok())?
+            })
+            .unwrap_or(0);
+        if content_length > MAX_BODY {
+            let _ = respond(&mut stream, "413 Payload Too Large", b"body too large\n");
+            break;
+        }
+        while pending.len() < head_end + content_length {
+            if !read_more(&mut stream, &mut pending, ingest) {
+                break 'requests;
+            }
+        }
+        let body: Vec<u8> = pending[head_end..head_end + content_length].to_vec();
+        pending.drain(..head_end + content_length);
+        if method != "POST" {
+            if respond(&mut stream, "405 Method Not Allowed", b"POST events here\n")
+                .is_err()
+            {
+                break;
+            }
+            continue;
+        }
+        match spif::decode_datagram(&body, ingest.now_us()) {
+            Ok(events) => {
+                let total = events.len();
+                let batch: Vec<Event> =
+                    events.into_iter().filter(|ev| geometry.contains(ev)).collect();
+                let rejected = (total - batch.len()) as u64;
+                if rejected > 0 {
+                    ingest.count_dropped(rejected);
+                }
+                let accepted = batch.len();
+                if !ingest.push(batch) {
+                    break;
+                }
+                let reply = format!("{{\"accepted\":{accepted}}}\n");
+                if respond(&mut stream, "200 OK", reply.as_bytes()).is_err() {
+                    break;
+                }
+            }
+            Err(_) => {
+                if respond(&mut stream, "400 Bad Request", b"body must be u32 words\n")
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One socket read into `pending`; `false` ends the connection.
+fn read_more(stream: &mut TcpStream, pending: &mut Vec<u8>, ingest: &ClientIngest) -> bool {
+    let mut buf = [0u8; READ_BUF];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => return false,
+            Ok(n) => {
+                pending.extend_from_slice(&buf[..n]);
+                return true;
+            }
+            Err(err)
+                if err.kind() == ErrorKind::WouldBlock
+                    || err.kind() == ErrorKind::TimedOut =>
+            {
+                if !ingest.open() {
+                    return false;
+                }
+            }
+            Err(err) if err.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Write a minimal `HTTP/1.1` response.
+fn respond(stream: &mut TcpStream, status: &str, body: &[u8]) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Length: {}\r\nContent-Type: application/json\r\n\
+         Connection: keep-alive\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// First offset of `needle` in `haystack`.
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|window| window == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subslice_search_finds_header_terminator() {
+        assert_eq!(find_subslice(b"ab\r\n\r\ncd", b"\r\n\r\n"), Some(2));
+        assert_eq!(find_subslice(b"ab\r\ncd", b"\r\n\r\n"), None);
+    }
+
+    #[test]
+    fn listener_heartbeats_then_times_out_idle() {
+        let config = ListenerConfig::new(Resolution::new(8, 8))
+            .idle_timeout(Duration::from_millis(20));
+        let mut listener = ListenerSource::bind_tcp("127.0.0.1:0", config).unwrap();
+        assert!(listener.local_addr().port() != 0);
+        // Live idle: heartbeats are empty batches, not end of stream.
+        assert!(listener.next_batch().unwrap().unwrap().is_empty());
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(listener.next_batch().unwrap().is_none(), "idle timeout fired");
+        assert!(listener.hub().is_closed());
+    }
+
+    #[test]
+    fn tcp_client_words_arrive_filtered_and_stamped() {
+        let config = ListenerConfig::new(Resolution::new(16, 16));
+        let mut listener = ListenerSource::bind_tcp("127.0.0.1:0", config).unwrap();
+        let hub = listener.hub();
+        let mut client = TcpStream::connect(listener.local_addr()).unwrap();
+        let inside = spif::pack_word(&Event::on(3, 4, 0)).to_le_bytes();
+        let outside = spif::pack_word(&Event::on(300, 4, 0)).to_le_bytes();
+        client.write_all(&inside).unwrap();
+        client.write_all(&outside).unwrap();
+        client.flush().unwrap();
+        // Adopt the lane and poll until the reader thread delivers.
+        let mut lanes = hub.take_lanes();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while lanes.is_empty() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+            lanes = hub.take_lanes();
+        }
+        let lane = &mut lanes.pop().expect("client lane admitted");
+        let mut got = Vec::new();
+        while got.is_empty() && Instant::now() < deadline {
+            match lane.source.next_batch().unwrap() {
+                Some(batch) => got.extend(batch),
+                None => break,
+            }
+        }
+        assert_eq!(got.len(), 1, "out-of-geometry word filtered");
+        assert_eq!((got[0].x, got[0].y), (3, 4));
+        drop(client);
+        let mut dropped = lane.source.dropped();
+        while dropped == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+            dropped = lane.source.dropped();
+        }
+        assert_eq!(dropped, 1, "rejected word counted");
+        assert!(listener.next_batch().unwrap().is_some());
+    }
+}

@@ -1,0 +1,75 @@
+//! Network serving plane: multi-client ingest/egress for running
+//! topologies.
+//!
+//! The paper's closing discussion (§6) points at exactly this shape:
+//! "sending multiple inputs to a single neuromorphic compute platform"
+//! over commodity transport. The streaming layer already fans N
+//! *declared* sources into one timestamp-ordered merge; this module
+//! makes the fan-in **dynamic** — a topology keeps serving while TCP
+//! and HTTP clients attach and detach at runtime:
+//!
+//! * [`ClientHub`] ([`hub`]) — the dynamic-client registry behind a
+//!   listener. The accept loop admits connections; each admitted client
+//!   becomes a [`ClientLane`](crate::stream::ClientLane) the fan-in
+//!   merge adopts at its next safe point. Per-client flow control is a
+//!   **credit window**: the reader thread may keep at most `window`
+//!   events in flight toward the merge, so total serving-plane memory
+//!   is bounded by `clients × window` no matter how fast clients push.
+//!   The adaptive `client-window` controller
+//!   ([`crate::stream::ClientWindowController`]) retunes each window by
+//!   AIMD from observed credit stalls.
+//! * [`ListenerSource`] ([`listen`]) — the
+//!   [`EventSource`](crate::stream::EventSource) face of a hub: a
+//!   `tcp-listen` socket speaking raw SPIF-framed words
+//!   ([`crate::net::spif`]) over a byte stream, or an `http-listen`
+//!   socket accepting `POST` bodies of the same words. It compiles into
+//!   a graph as a `Listener` node
+//!   ([`crate::stream::GraphSpec`]); the merge discovers its hub
+//!   through [`EventSource::client_plane`](crate::stream::EventSource::client_plane).
+//! * [`SubscribeSink`] ([`subscribe`]) — the egress mirror: an
+//!   [`EventSink`](crate::stream::EventSink) that fans every processed
+//!   batch out to N dynamically attached TCP subscribers, each behind
+//!   its own bounded queue and writer thread. A slow subscriber is
+//!   never allowed to backpressure the trunk: its deliveries are
+//!   dropped (counted per subscriber) and a persistently stalled one is
+//!   evicted.
+//!
+//! Every client and subscriber publishes a
+//! [`LiveNode`](crate::metrics::LiveNode) into the telemetry plane, so
+//! admissions, credit stalls, evictions, and window history all land in
+//! [`StreamReport`](crate::stream::StreamReport) — and stream out live
+//! through `--report-json`.
+
+pub mod hub;
+pub mod listen;
+pub mod subscribe;
+
+pub use hub::{ClientHub, ClientIngest};
+pub use listen::{ListenerConfig, ListenerSource};
+pub use subscribe::SubscribeSink;
+
+/// OS thread label clipped to the 15-byte Linux thread-name limit at a
+/// char boundary (`pthread_setname_np` silently rejects longer names).
+pub(crate) fn thread_label(name: &str) -> String {
+    let mut label = name.to_string();
+    let mut end = label.len().min(15);
+    while !label.is_char_boundary(end) {
+        end -= 1;
+    }
+    label.truncate(end);
+    label
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_labels_fit_the_linux_limit() {
+        assert_eq!(thread_label("client:7"), "client:7");
+        assert_eq!(thread_label("sub:123456789012345"), "sub:12345678901");
+        assert!(thread_label("shard:refractory(100µs):0").len() <= 15);
+        // Multi-byte chars never split: truncation lands on a boundary.
+        assert_eq!(thread_label("sink:µµµµµµµµµµ"), "sink:µµµµµ");
+    }
+}

@@ -1,0 +1,317 @@
+//! Subscription egress: fan processed batches out to TCP consumers.
+//!
+//! [`SubscribeSink`] is the serving plane's egress mirror of
+//! [`super::ListenerSource`]: a sink that accepts TCP subscribers at
+//! runtime and forwards every consumed batch — encoded once as
+//! contiguous little-endian SPIF words — to each of them. Every
+//! subscriber sits behind its own bounded queue and writer thread, so
+//! a slow or stuck consumer can never backpressure the trunk: its
+//! deliveries are dropped (counted on its [`LiveNode`]) and after
+//! enough consecutive stalls the subscriber is evicted outright.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::aer::Event;
+use crate::metrics::LiveNode;
+use crate::net::spif;
+use crate::stream::{EventSink, SinkSummary};
+
+use super::thread_label;
+
+/// Encoded batches a subscriber may queue before deliveries drop.
+const SUB_QUEUE_BATCHES: usize = 8;
+/// Consecutive full-queue stalls before a subscriber is evicted.
+const EVICT_STALLS: u32 = 64;
+/// Poll cadence of the non-blocking accept loop.
+const ACCEPT_IDLE: Duration = Duration::from_millis(2);
+/// Writer-side socket timeout, so writers notice dead peers.
+const WRITE_TIMEOUT: Duration = Duration::from_millis(500);
+
+struct Subscriber {
+    tx: SyncSender<Arc<[u8]>>,
+    node: Arc<LiveNode>,
+    /// Consecutive full-queue stalls (reset by any delivery).
+    stalls: u32,
+    /// Set by the writer thread when the socket dies.
+    dead: Arc<AtomicBool>,
+    writer: Option<JoinHandle<()>>,
+}
+
+struct SubShared {
+    closed: AtomicBool,
+    subscribers: Mutex<Vec<Subscriber>>,
+}
+
+/// Fan-out sink serving dynamically attached TCP subscribers.
+pub struct SubscribeSink {
+    local_addr: SocketAddr,
+    shared: Arc<SubShared>,
+    accept: Option<JoinHandle<()>>,
+    /// Writer handles of departed subscribers, joined at finish.
+    retired: Vec<JoinHandle<()>>,
+    evicted: u64,
+    /// Counters carried over from departed subscribers.
+    waits: u64,
+    dropped: u64,
+}
+
+impl SubscribeSink {
+    /// Bind the subscription port and start accepting consumers.
+    pub fn bind<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("subscribe: bind listener")?;
+        listener
+            .set_nonblocking(true)
+            .context("subscribe: set listener non-blocking")?;
+        let local_addr = listener.local_addr().context("subscribe: local addr")?;
+        let shared = Arc::new(SubShared {
+            closed: AtomicBool::new(false),
+            subscribers: Mutex::new(Vec::new()),
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("sub:accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .context("subscribe: spawn accept thread")?;
+        Ok(SubscribeSink {
+            local_addr,
+            shared,
+            accept: Some(accept),
+            retired: Vec::new(),
+            evicted: 0,
+            waits: 0,
+            dropped: 0,
+        })
+    }
+
+    /// The bound address (with the OS-chosen port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Consumers currently attached.
+    pub fn subscriber_count(&self) -> usize {
+        self.shared.subscribers.lock().unwrap().len()
+    }
+
+    /// Subscribers evicted for persistent stalling.
+    pub fn evictions(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Fold a departing subscriber's counters into the sink totals and
+    /// keep its writer handle for the final join.
+    fn retire(&mut self, sub: Subscriber) {
+        let report = sub.node.sample();
+        self.waits += report.backpressure_waits;
+        self.dropped += report.dropped;
+        // Severing `tx` ends the writer's loop.
+        drop(sub.tx);
+        if let Some(handle) = sub.writer {
+            self.retired.push(handle);
+        }
+    }
+
+    fn close(&mut self) -> (u64, u64) {
+        self.shared.closed.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        let departing = std::mem::take(&mut *self.shared.subscribers.lock().unwrap());
+        for sub in departing {
+            self.retire(sub);
+        }
+        for handle in self.retired.drain(..) {
+            let _ = handle.join();
+        }
+        (self.waits, self.dropped)
+    }
+}
+
+impl EventSink for SubscribeSink {
+    /// Deliver one batch to every live subscriber. Never blocks on a
+    /// slow consumer: full queues drop the delivery, and persistent
+    /// stalling evicts.
+    fn consume(&mut self, events: &[Event]) -> Result<()> {
+        if events.is_empty() {
+            return Ok(());
+        }
+        // Encode once, share the bytes across all subscriber queues.
+        let mut payload = Vec::with_capacity(events.len() * 4);
+        for ev in events {
+            payload.extend_from_slice(&spif::pack_word(ev).to_le_bytes());
+        }
+        let payload: Arc<[u8]> = payload.into();
+        let mut departing: Vec<Subscriber> = Vec::new();
+        {
+            let mut subs = self.shared.subscribers.lock().unwrap();
+            let mut i = 0;
+            while i < subs.len() {
+                let sub = &mut subs[i];
+                if sub.dead.load(Ordering::Relaxed) {
+                    departing.push(subs.swap_remove(i));
+                    continue;
+                }
+                match sub.tx.try_send(payload.clone()) {
+                    Ok(()) => {
+                        sub.node.add_events(events.len() as u64);
+                        sub.node.add_batch();
+                        sub.stalls = 0;
+                        i += 1;
+                    }
+                    Err(TrySendError::Full(_)) => {
+                        sub.node.add_backpressure_wait();
+                        sub.node.add_dropped(events.len() as u64);
+                        sub.stalls += 1;
+                        if sub.stalls >= EVICT_STALLS {
+                            self.evicted += 1;
+                            departing.push(subs.swap_remove(i));
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        departing.push(subs.swap_remove(i));
+                    }
+                }
+            }
+        }
+        for sub in departing {
+            self.retire(sub);
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        let (waits, dropped) = self.close();
+        Ok(SinkSummary { frames: 0, backpressure_waits: waits, dropped })
+    }
+
+    fn describe(&self) -> String {
+        format!("subscribe({})", self.local_addr)
+    }
+}
+
+impl Drop for SubscribeSink {
+    fn drop(&mut self) {
+        // Best-effort teardown when `finish` never ran.
+        self.close();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<SubShared>) {
+    let mut next_id = 0u64;
+    while !shared.closed.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+                let name = format!("sub:{next_id}");
+                next_id += 1;
+                let (tx, rx) = std::sync::mpsc::sync_channel::<Arc<[u8]>>(SUB_QUEUE_BATCHES);
+                let dead = Arc::new(AtomicBool::new(false));
+                let writer_dead = dead.clone();
+                let writer = std::thread::Builder::new()
+                    .name(thread_label(&name))
+                    .spawn(move || write_loop(stream, rx, writer_dead))
+                    .ok();
+                if writer.is_none() {
+                    continue;
+                }
+                shared.subscribers.lock().unwrap().push(Subscriber {
+                    node: Arc::new(LiveNode::new(name)),
+                    tx,
+                    stalls: 0,
+                    dead,
+                    writer,
+                });
+            }
+            Err(err) if err.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_IDLE);
+            }
+            Err(err) if err.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(ACCEPT_IDLE),
+        }
+    }
+}
+
+fn write_loop(
+    mut stream: TcpStream,
+    rx: std::sync::mpsc::Receiver<Arc<[u8]>>,
+    dead: Arc<AtomicBool>,
+) {
+    for payload in rx {
+        if stream.write_all(&payload).is_err() || stream.flush().is_err() {
+            dead.store(true, Ordering::Relaxed);
+            return;
+        }
+    }
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::time::Instant;
+
+    fn wait_for<F: FnMut() -> bool>(mut ready: F) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !ready() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn subscribers_receive_every_word() {
+        let mut sink = SubscribeSink::bind("127.0.0.1:0").unwrap();
+        let mut consumer = TcpStream::connect(sink.local_addr()).unwrap();
+        consumer
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        wait_for(|| sink.subscriber_count() == 1);
+        let events = [Event::on(1, 2, 10), Event::off(3, 4, 20)];
+        sink.consume(&events).unwrap();
+        let mut wire = [0u8; 8];
+        consumer.read_exact(&mut wire).unwrap();
+        for (ev, chunk) in events.iter().zip(wire.chunks_exact(4)) {
+            let word = u32::from_le_bytes(chunk.try_into().unwrap());
+            let back = spif::unpack_word(word, ev.t);
+            assert_eq!((back.x, back.y, back.p), (ev.x, ev.y, ev.p));
+        }
+        let summary = sink.finish().unwrap();
+        assert_eq!(summary.dropped, 0);
+    }
+
+    #[test]
+    fn dead_consumers_are_pruned_not_blocking() {
+        let mut sink = SubscribeSink::bind("127.0.0.1:0").unwrap();
+        let consumer = TcpStream::connect(sink.local_addr()).unwrap();
+        wait_for(|| sink.subscriber_count() == 1);
+        drop(consumer);
+        // Deliveries keep flowing; the dead peer is detected by its
+        // writer and pruned on a later consume.
+        let batch = [Event::on(0, 0, 1)];
+        wait_for(|| {
+            sink.consume(&batch).unwrap();
+            sink.subscriber_count() == 0
+        });
+        assert_eq!(sink.subscriber_count(), 0, "dead subscriber pruned");
+        sink.finish().unwrap();
+    }
+
+    #[test]
+    fn no_subscribers_is_not_an_error() {
+        let mut sink = SubscribeSink::bind("127.0.0.1:0").unwrap();
+        sink.consume(&[Event::on(1, 1, 1)]).unwrap();
+        let summary = sink.finish().unwrap();
+        assert_eq!((summary.frames, summary.dropped), (0, 0));
+    }
+}

@@ -22,21 +22,27 @@
 //!   pipeline across arbitrarily many re-cuts (property-tested per
 //!   registered op).
 //!
-//! Two built-in controllers ship: [`SkewController`] re-cuts stripes
+//! Three built-in controllers ship: [`SkewController`] re-cuts stripes
 //! from the observed per-shard event histogram of the last epoch
-//! (piecewise-uniform density model), and [`ChunkController`] runs AIMD
-//! on the chunk size targeting a backpressure/throughput balance. Both
-//! are deterministic functions of the samples. The applied history
-//! (epochs, re-cuts with skew before/after, chunk changes) is surfaced
-//! in [`StreamReport::adaptive`](super::StreamReport::adaptive).
+//! (piecewise-uniform density model), [`ChunkController`] runs AIMD on
+//! the chunk size targeting a backpressure/throughput balance, and
+//! [`ClientWindowController`] runs the same AIMD core (shared in
+//! [`aimd`]) on each serving-plane client's in-flight credit window.
+//! All are deterministic functions of the samples. The applied history
+//! (epochs, re-cuts with skew before/after, chunk changes, per-client
+//! window changes) is surfaced in
+//! [`StreamReport::adaptive`](super::StreamReport::adaptive).
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Context as _, Result};
 
 use crate::metrics::{shard_skew_of, LiveNode};
 
+use super::report::ReportEmitter;
 use super::stage::BatchProcessor;
+use super::ClientPlane;
 
 /// One reconfiguration action a [`Controller`] may request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -56,6 +62,16 @@ pub enum Reconfigure {
     /// fan-in merge and forwarded to sources that honour
     /// [`EventSource::set_chunk_hint`](super::EventSource::set_chunk_hint).
     ChunkSize(usize),
+    /// Retarget a serving-plane client's in-flight credit window
+    /// (events). Applied through the topology's attached
+    /// [`ClientPlane`]s rather than the batch processor — windows live
+    /// on the ingest edge, not in a stage.
+    ClientWindow {
+        /// Client node name (as published by its `LiveNode`).
+        client: String,
+        /// New window in events.
+        window: usize,
+    },
 }
 
 /// A sharded (or serial) stage node's live handle, surfaced by
@@ -86,6 +102,24 @@ pub struct StageSample {
     pub halo: u16,
 }
 
+/// Per-client slice of an [`EpochSample`] (serving plane). Counters are
+/// **epoch deltas**, computed by the driver from each client's
+/// cumulative [`LiveNode`] totals.
+#[derive(Debug, Clone)]
+pub struct ClientSample {
+    /// Client node name (`client:3`, `http:7`, …).
+    pub name: String,
+    /// Events accepted from this client during the epoch.
+    pub events: u64,
+    /// Ingest batches accepted during the epoch.
+    pub batches: u64,
+    /// Credit stalls (the client's reader blocked on a full window)
+    /// during the epoch.
+    pub backpressure_waits: u64,
+    /// In-flight credit window in force at the sample point.
+    pub window: usize,
+}
+
 /// What a [`Controller`] sees at each epoch barrier.
 #[derive(Debug, Clone)]
 pub struct EpochSample {
@@ -108,6 +142,9 @@ pub struct EpochSample {
     pub chunk_size: usize,
     /// Per-stage telemetry.
     pub stages: Vec<StageSample>,
+    /// Per-client telemetry from attached serving planes (empty when no
+    /// listener node is running).
+    pub clients: Vec<ClientSample>,
 }
 
 /// An adaptive policy: observes one [`EpochSample`] per epoch and may
@@ -120,6 +157,55 @@ pub trait Controller: Send {
     /// Human-readable description (reports, logs).
     fn describe(&self) -> String;
 }
+
+// ----------------------------------------------------------------- aimd
+
+/// The additive-increase / multiplicative-decrease core shared by every
+/// backpressure-keyed tuner ([`ChunkController`] for the edge chunk,
+/// [`ClientWindowController`] for serving-plane credit windows).
+pub mod aimd {
+    /// AIMD policy parameters plus the decision function: an epoch
+    /// whose waits-per-batch rate exceeds `pressure` is congested and
+    /// halves the controlled value (floored at `min`); a quiet epoch
+    /// grows it by `step` (capped at `max`).
+    #[derive(Debug, Clone, Copy, PartialEq)]
+    pub struct Aimd {
+        /// Floor for the controlled value.
+        pub min: usize,
+        /// Ceiling for the controlled value.
+        pub max: usize,
+        /// Additive-increase step per quiet epoch.
+        pub step: usize,
+        /// Waits-per-batch above which an epoch counts as congested.
+        pub pressure: f64,
+    }
+
+    impl Aimd {
+        /// Policy with repaired-sane bounds (`min ≥ 1`, `max ≥ min`,
+        /// `step ≥ 1`).
+        pub fn new(min: usize, max: usize, step: usize, pressure: f64) -> Self {
+            let min = min.max(1);
+            Aimd { min, max: max.max(min), step: step.max(1), pressure }
+        }
+
+        /// `true` when the epoch's wait rate crosses the pressure bar.
+        pub fn congested(&self, waits: u64, batches: u64) -> bool {
+            waits as f64 / batches.max(1) as f64 > self.pressure
+        }
+
+        /// Next value for `current` given the epoch's wait/batch counts.
+        pub fn next(&self, current: usize, waits: u64, batches: u64) -> usize {
+            let next = if self.congested(waits, batches) {
+                (current / 2).max(self.min)
+            } else {
+                (current + self.step).min(self.max)
+            };
+            next.clamp(self.min, self.max)
+        }
+    }
+}
+
+pub use aimd::Aimd;
 
 // ------------------------------------------------------------ controllers
 
@@ -182,29 +268,26 @@ impl Controller for SkewController {
 /// bottleneck and bigger batches only add latency and resident memory,
 /// so the chunk halves (multiplicative decrease). A quiet epoch means
 /// the edge has headroom, so the chunk grows by a fixed step (additive
-/// increase) to amortize per-batch overhead. Clamped to `[min, max]`.
-/// Inert under drivers with no backpressure gauge (the sync loop):
-/// zero waits there mean "no signal", and acting on them would march
-/// the chunk unconditionally to the ceiling.
+/// increase) to amortize per-batch overhead. Clamped to `[min, max]`
+/// by the shared [`Aimd`] core. Inert under drivers with no
+/// backpressure gauge (the sync loop): zero waits there mean "no
+/// signal", and acting on them would march the chunk unconditionally
+/// to the ceiling.
 pub struct ChunkController {
-    min: usize,
-    max: usize,
-    step: usize,
-    /// Waits-per-batch above which the epoch counts as congested.
-    pressure: f64,
+    aimd: Aimd,
 }
 
 impl Default for ChunkController {
     fn default() -> Self {
-        ChunkController { min: 256, max: 65_536, step: 512, pressure: 0.5 }
+        ChunkController { aimd: Aimd::new(256, 65_536, 512, 0.5) }
     }
 }
 
 impl ChunkController {
     /// Tuner with explicit clamp bounds.
     pub fn with_bounds(min: usize, max: usize) -> Self {
-        let min = min.max(1);
-        ChunkController { min, max: max.max(min), ..Default::default() }
+        let d = Self::default();
+        ChunkController { aimd: Aimd::new(min, max, d.aimd.step, d.aimd.pressure) }
     }
 }
 
@@ -213,14 +296,8 @@ impl Controller for ChunkController {
         if !sample.backpressure_gauged {
             return Vec::new();
         }
-        let waits_per_batch =
-            sample.backpressure_waits as f64 / sample.batches.max(1) as f64;
-        let next = if waits_per_batch > self.pressure {
-            (sample.chunk_size / 2).max(self.min)
-        } else {
-            (sample.chunk_size + self.step).min(self.max)
-        };
-        let next = next.clamp(self.min, self.max);
+        let next =
+            self.aimd.next(sample.chunk_size, sample.backpressure_waits, sample.batches);
         if next == sample.chunk_size {
             Vec::new()
         } else {
@@ -229,7 +306,60 @@ impl Controller for ChunkController {
     }
 
     fn describe(&self) -> String {
-        format!("chunk(AIMD {}..{})", self.min, self.max)
+        format!("chunk(AIMD {}..{})", self.aimd.min, self.aimd.max)
+    }
+}
+
+/// Per-client AIMD window tuner for the serving plane. Each attached
+/// client owns a credit window bounding its events in flight between
+/// reader thread and merge. Credit stalls mean the trunk isn't
+/// draining that client fast enough — halve its window so one firehose
+/// cannot monopolize merge buffering; a quiet active client grows
+/// additively back toward the ceiling; idle clients (no batches, no
+/// stalls) are left alone. Windows apply through the topology's
+/// attached [`ClientPlane`]s, and every change lands in
+/// [`AdaptiveReport::window_changes`]. Unlike [`ChunkController`] this
+/// needs no coroutine backpressure gauge: credit stalls are counted by
+/// the client readers themselves, under any driver.
+pub struct ClientWindowController {
+    aimd: Aimd,
+}
+
+impl Default for ClientWindowController {
+    fn default() -> Self {
+        ClientWindowController { aimd: Aimd::new(64, 65_536, 256, 0.5) }
+    }
+}
+
+impl ClientWindowController {
+    /// Tuner with explicit window bounds.
+    pub fn with_bounds(min: usize, max: usize) -> Self {
+        let d = Self::default();
+        ClientWindowController { aimd: Aimd::new(min, max, d.aimd.step, d.aimd.pressure) }
+    }
+}
+
+impl Controller for ClientWindowController {
+    fn observe(&mut self, sample: &EpochSample) -> Vec<Reconfigure> {
+        let mut out = Vec::new();
+        for client in &sample.clients {
+            if client.batches == 0 && client.backpressure_waits == 0 {
+                continue;
+            }
+            let next =
+                self.aimd.next(client.window, client.backpressure_waits, client.batches);
+            if next != client.window {
+                out.push(Reconfigure::ClientWindow {
+                    client: client.name.clone(),
+                    window: next,
+                });
+            }
+        }
+        out
+    }
+
+    fn describe(&self) -> String {
+        format!("client-window(AIMD {}..{})", self.aimd.min, self.aimd.max)
     }
 }
 
@@ -244,6 +374,8 @@ pub enum ControllerKind {
     Skew,
     /// [`ChunkController`] with defaults.
     Chunk,
+    /// [`ClientWindowController`] with defaults.
+    ClientWindow,
     /// A controller resolved by name through [`registry`] at build time
     /// (so a config stays a plain cloneable value while the factory
     /// lives in the registry).
@@ -258,6 +390,7 @@ impl ControllerKind {
         match self {
             ControllerKind::Skew => Ok(Box::new(SkewController::default())),
             ControllerKind::Chunk => Ok(Box::new(ChunkController::default())),
+            ControllerKind::ClientWindow => Ok(Box::new(ClientWindowController::default())),
             ControllerKind::Custom(name) => registry::build(name),
         }
     }
@@ -272,6 +405,7 @@ pub fn parse_controllers(s: &str) -> Result<Vec<ControllerKind>> {
         let kind = match name.trim() {
             "skew" => ControllerKind::Skew,
             "chunk" => ControllerKind::Chunk,
+            "client-window" => ControllerKind::ClientWindow,
             other if registry::is_registered(other) => {
                 ControllerKind::Custom(other.to_string())
             }
@@ -285,7 +419,7 @@ pub fn parse_controllers(s: &str) -> Result<Vec<ControllerKind>> {
         }
     }
     if kinds.is_empty() {
-        bail!("--adaptive needs at least one controller (skew|chunk)");
+        bail!("--adaptive needs at least one controller (skew|chunk|client-window)");
     }
     Ok(kinds)
 }
@@ -316,7 +450,8 @@ pub mod registry {
     /// Register a controller factory under `name`. The name becomes
     /// valid in `--adaptive` lists and
     /// [`parse_controllers`](super::parse_controllers). Built-in names
-    /// (`skew`, `chunk`) are reserved and duplicates are rejected —
+    /// (`skew`, `chunk`, `client-window`) are reserved and duplicates
+    /// are rejected —
     /// registration is global and process-wide, so collisions should be
     /// loud, not last-write-wins.
     pub fn register_controller<F>(name: &str, factory: F) -> Result<()>
@@ -327,7 +462,7 @@ pub mod registry {
         if name.is_empty() {
             bail!("controller name cannot be empty");
         }
-        if matches!(name, "skew" | "chunk") {
+        if matches!(name, "skew" | "chunk" | "client-window") {
             bail!("controller name {name:?} is reserved for a built-in");
         }
         let mut table = table().lock().unwrap();
@@ -340,12 +475,14 @@ pub mod registry {
 
     /// `true` when `name` resolves — a built-in or a registered custom.
     pub fn is_registered(name: &str) -> bool {
-        matches!(name, "skew" | "chunk") || table().lock().unwrap().contains_key(name)
+        matches!(name, "skew" | "chunk" | "client-window")
+            || table().lock().unwrap().contains_key(name)
     }
 
     /// Every resolvable name, built-ins first, customs sorted.
     pub fn registered_names() -> Vec<String> {
-        let mut names = vec!["skew".to_string(), "chunk".to_string()];
+        let mut names =
+            vec!["skew".to_string(), "chunk".to_string(), "client-window".to_string()];
         let mut custom: Vec<String> = table().lock().unwrap().keys().cloned().collect();
         custom.sort();
         names.extend(custom);
@@ -357,6 +494,7 @@ pub mod registry {
         match name {
             "skew" => Ok(Box::new(super::SkewController::default())),
             "chunk" => Ok(Box::new(super::ChunkController::default())),
+            "client-window" => Ok(Box::new(super::ClientWindowController::default())),
             other => {
                 let factory = table().lock().unwrap().get(other).cloned();
                 match factory {
@@ -451,6 +589,19 @@ pub struct ChunkChange {
     pub to: usize,
 }
 
+/// One applied per-client window change (serving plane).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WindowChange {
+    /// Epoch at whose barrier the change applied.
+    pub epoch: u64,
+    /// Client node name.
+    pub client: String,
+    /// Window before (events).
+    pub from: usize,
+    /// Window after (events).
+    pub to: usize,
+}
+
 /// Reconfiguration history of one adaptive run, surfaced in
 /// [`StreamReport::adaptive`](super::StreamReport::adaptive).
 #[derive(Debug, Clone, Default)]
@@ -461,6 +612,8 @@ pub struct AdaptiveReport {
     pub recuts: Vec<RecutRecord>,
     /// Applied chunk-size changes, in order.
     pub chunk_changes: Vec<ChunkChange>,
+    /// Applied per-client window changes, in order.
+    pub window_changes: Vec<WindowChange>,
     /// Chunk size in force when the stream ended.
     pub final_chunk: usize,
 }
@@ -482,6 +635,13 @@ pub(crate) struct Adaptor {
     /// Whether the driving loop's backpressure totals are a real gauge
     /// (coroutine edge channel) or structurally zero (sync loop).
     backpressure_gauged: bool,
+    /// Serving planes whose clients are sampled and window-tuned.
+    planes: Vec<Arc<dyn ClientPlane>>,
+    /// Cumulative (events, batches, waits) per client at the last
+    /// epoch, for delta computation.
+    last_clients: HashMap<String, (u64, u64, u64)>,
+    /// Per-epoch JSON line sink (`--report-json`).
+    emitter: Option<Arc<ReportEmitter>>,
     report: AdaptiveReport,
 }
 
@@ -499,8 +659,22 @@ impl Adaptor {
             last_waits: 0,
             chunk: initial_chunk.max(1),
             backpressure_gauged,
+            planes: Vec::new(),
+            last_clients: HashMap::new(),
+            emitter: None,
             report: AdaptiveReport::default(),
         }
+    }
+
+    /// Attach the serving planes discovered on the merged source, so
+    /// epochs sample their clients and window changes reach them.
+    pub(crate) fn set_planes(&mut self, planes: Vec<Arc<dyn ClientPlane>>) {
+        self.planes = planes;
+    }
+
+    /// Stream one JSON line per epoch through `emitter`.
+    pub(crate) fn set_emitter(&mut self, emitter: Arc<ReportEmitter>) {
+        self.emitter = Some(emitter);
     }
 
     /// Account one processed batch; at an epoch barrier, sample, run
@@ -531,6 +705,20 @@ impl Adaptor {
                 halo: t.halo,
             })
             .collect();
+        let mut clients = Vec::new();
+        for plane in &self.planes {
+            for c in plane.client_samples() {
+                let last = self.last_clients.get(&c.name).copied().unwrap_or((0, 0, 0));
+                self.last_clients
+                    .insert(c.name.clone(), (c.events, c.batches, c.backpressure_waits));
+                clients.push(ClientSample {
+                    events: c.events.saturating_sub(last.0),
+                    batches: c.batches.saturating_sub(last.1),
+                    backpressure_waits: c.backpressure_waits.saturating_sub(last.2),
+                    ..c
+                });
+            }
+        }
         let sample = EpochSample {
             epoch,
             batches: self.batches_in_epoch,
@@ -539,6 +727,7 @@ impl Adaptor {
             backpressure_gauged: self.backpressure_gauged,
             chunk_size: self.chunk,
             stages,
+            clients,
         };
         let mut new_chunk = None;
         for controller in &mut self.controllers {
@@ -587,8 +776,33 @@ impl Adaptor {
                             new_chunk = Some(n);
                         }
                     }
+                    Reconfigure::ClientWindow { client, window } => {
+                        let window = (*window).max(1);
+                        let from = sample
+                            .clients
+                            .iter()
+                            .find(|c| &c.name == client)
+                            .map(|c| c.window);
+                        // A client may detach between sample and apply;
+                        // unknown names are skipped, not errors.
+                        let applied =
+                            self.planes.iter().any(|p| p.set_window(client, window));
+                        if let Some(from) = from {
+                            if applied && from != window {
+                                self.report.window_changes.push(WindowChange {
+                                    epoch,
+                                    client: client.clone(),
+                                    from,
+                                    to: window,
+                                });
+                            }
+                        }
+                    }
                 }
             }
+        }
+        if let Some(emitter) = &self.emitter {
+            emitter.emit_epoch(&sample)?;
         }
         self.report.epochs += 1;
         self.batches_in_epoch = 0;
@@ -732,6 +946,7 @@ mod tests {
                 bounds,
                 halo,
             }],
+            clients: Vec::new(),
         }
     }
 
@@ -809,6 +1024,77 @@ mod tests {
         sample.chunk_size = 1024;
         sample.backpressure_gauged = false;
         assert!(ctl.observe(&sample).is_empty(), "ungauged drivers get no tuning");
+    }
+
+    #[test]
+    fn aimd_core_is_shared_and_clamped() {
+        let a = Aimd::new(64, 1024, 128, 0.5);
+        assert_eq!(a.next(512, 0, 10), 640, "quiet: additive increase");
+        assert_eq!(a.next(512, 10, 10), 256, "congested: halve");
+        assert_eq!(a.next(100, 10, 10), 64, "floor holds");
+        assert_eq!(a.next(1000, 0, 10), 1024, "ceiling holds");
+        assert!(!a.congested(5, 10), "exactly at pressure is not congested");
+        assert!(a.congested(6, 10));
+        // Degenerate bounds are repaired, not trusted.
+        let b = Aimd::new(0, 0, 0, 0.5);
+        assert_eq!((b.min, b.max, b.step), (1, 1, 1));
+    }
+
+    #[test]
+    fn client_window_controller_tunes_per_client() {
+        let mut ctl = ClientWindowController::with_bounds(64, 8192);
+        let mut sample = stage_sample(Vec::new(), Vec::new(), 0);
+        sample.clients = vec![
+            ClientSample {
+                name: "client:0".into(),
+                events: 10_000,
+                batches: 10,
+                backpressure_waits: 9,
+                window: 4096,
+            },
+            ClientSample {
+                name: "client:1".into(),
+                events: 500,
+                batches: 10,
+                backpressure_waits: 0,
+                window: 1024,
+            },
+            ClientSample {
+                name: "client:2".into(),
+                events: 0,
+                batches: 0,
+                backpressure_waits: 0,
+                window: 1024,
+            },
+        ];
+        let actions = ctl.observe(&sample);
+        assert_eq!(
+            actions,
+            vec![
+                Reconfigure::ClientWindow { client: "client:0".into(), window: 2048 },
+                Reconfigure::ClientWindow { client: "client:1".into(), window: 1280 },
+            ],
+            "stalled client halves, quiet client grows, idle client is untouched"
+        );
+        // No clients, no actions — the controller is inert off the
+        // serving plane (and safe to leave in a default list).
+        sample.clients.clear();
+        assert!(ctl.observe(&sample).is_empty());
+    }
+
+    #[test]
+    fn client_window_is_a_reserved_built_in() {
+        assert_eq!(
+            parse_controllers("client-window").unwrap(),
+            vec![ControllerKind::ClientWindow]
+        );
+        assert!(registry::is_registered("client-window"));
+        assert!(registry::register_controller("client-window", || {
+            Box::new(ClientWindowController::default())
+        })
+        .is_err());
+        let rt = AdaptiveConfig::new(vec![ControllerKind::ClientWindow]).build().unwrap();
+        assert!(rt.controllers[0].describe().starts_with("client-window"));
     }
 
     #[test]

@@ -71,6 +71,7 @@ use crate::pipeline::fusion::SourceLayout;
 use crate::pipeline::PipelineSpec;
 
 use super::adapt::AdaptiveConfig;
+use super::report::ReportTarget;
 use super::stage::{StageGraph, StageOptions};
 use super::topology::{
     default_layout, explicit_layout, grid_layout, run_nodes, BranchRun, RoutePolicy,
@@ -127,11 +128,21 @@ pub struct GraphConfig {
     /// Adaptive controllers run at epoch barriers against the shared
     /// trunk chain (`None` = static runtime).
     pub adaptive: Option<AdaptiveConfig>,
+    /// Stream one JSON line per telemetry epoch (plus a final report
+    /// line) to a file or stdout — the CLI's `--report-json`. With no
+    /// adaptive config an empty epoch loop is synthesized so the
+    /// emitter still ticks.
+    pub report_json: Option<ReportTarget>,
 }
 
 impl From<StreamConfig> for GraphConfig {
     fn from(config: StreamConfig) -> Self {
-        GraphConfig { chunk_size: config.chunk_size, driver: config.driver, adaptive: None }
+        GraphConfig {
+            chunk_size: config.chunk_size,
+            driver: config.driver,
+            adaptive: None,
+            report_json: None,
+        }
     }
 }
 
@@ -161,6 +172,13 @@ impl SinkSlot<'_> {
 /// What a named node *is*.
 enum NodeKind<'a> {
     Source { source: Box<dyn EventSource + 'a>, offset: Option<(u16, u16)>, threaded: bool },
+    /// A serving-plane listener (e.g. [`crate::serve::ListenerSource`]):
+    /// a graph root like a source, but one whose
+    /// [`client_plane`](EventSource::client_plane) attaches dynamic
+    /// per-client lanes to the merge while the graph runs. Never
+    /// pumped — its control lane must stay in-process so the plane
+    /// reaches the merge driver.
+    Listener { source: Box<dyn EventSource + 'a> },
     Merge { layout: Option<FusionLayout> },
     Stages { spec: PipelineSpec, opts: StageOptions },
     Router { policy: RoutePolicy },
@@ -171,6 +189,7 @@ impl NodeKind<'_> {
     fn word(&self) -> &'static str {
         match self {
             NodeKind::Source { .. } => "source",
+            NodeKind::Listener { .. } => "listen",
             NodeKind::Merge { .. } => "merge",
             NodeKind::Stages { .. } => "stages",
             NodeKind::Router { .. } => "route",
@@ -254,6 +273,17 @@ impl<'a> TopologyBuilder<'a> {
             },
             false,
         );
+        self
+    }
+
+    /// Add a serving-plane listener node (a graph root, like
+    /// [`source`](Self::source)). The listener's declared geometry
+    /// joins the merge canvas once; every client admitted while the
+    /// graph runs becomes a dynamic merge lane with its own
+    /// [`LiveNode`](crate::metrics::LiveNode), attached at the next
+    /// safe merge point.
+    pub fn listen(mut self, name: &str, source: impl EventSource + 'a) -> Self {
+        self.push(name, NodeKind::Listener { source: Box::new(source) }, false);
         self
     }
 
@@ -389,6 +419,17 @@ fn planned_layout(nodes: &[GraphNode<'_>]) -> Result<(Option<SourceLayout>, Reso
                     first_offset = Some(&node.name);
                 }
             }
+            NodeKind::Listener { source } => {
+                if !source.geometry_known() {
+                    bail!(
+                        "listener {:?} needs a declared geometry (clients attach to a \
+                         fixed canvas; there is nothing to observe before they do)",
+                        node.name
+                    );
+                }
+                resolutions.push(source.resolution());
+                offsets.push(None);
+            }
             NodeKind::Merge { layout } => {
                 if merge.is_some() {
                     bail!(
@@ -481,6 +522,7 @@ impl<'a> GraphSpec<'a> {
                     }
                     d
                 }
+                NodeKind::Listener { source } => format!(": {}", source.describe()),
                 NodeKind::Merge { layout } => {
                     let label = match layout {
                         Some(l) => l.label(),
@@ -548,9 +590,9 @@ impl<'a> GraphSpec<'a> {
         // ---- per-kind degree rules.
         for (i, node) in self.nodes.iter().enumerate() {
             match &node.kind {
-                NodeKind::Source { .. } => {
+                NodeKind::Source { .. } | NodeKind::Listener { .. } => {
                     if indeg[i] != 0 {
-                        bail!("source {:?} cannot receive an edge", node.name);
+                        bail!("{} {:?} cannot receive an edge", node.kind.word(), node.name);
                     }
                 }
                 NodeKind::Merge { .. } => {
@@ -558,7 +600,12 @@ impl<'a> GraphSpec<'a> {
                         bail!("merge {:?} has no inputs", node.name);
                     }
                     for &(f, t) in &edges {
-                        if t == i && !matches!(self.nodes[f].kind, NodeKind::Source { .. }) {
+                        if t == i
+                            && !matches!(
+                                self.nodes[f].kind,
+                                NodeKind::Source { .. } | NodeKind::Listener { .. }
+                            )
+                        {
                             bail!(
                                 "merge {:?} input {:?} is not a source; only sources \
                                  fan into the merge",
@@ -644,7 +691,12 @@ impl<'a> GraphSpec<'a> {
 
         // ---- trunk extraction.
         let sources: Vec<usize> = (0..n)
-            .filter(|&i| matches!(self.nodes[i].kind, NodeKind::Source { .. }))
+            .filter(|&i| {
+                matches!(
+                    self.nodes[i].kind,
+                    NodeKind::Source { .. } | NodeKind::Listener { .. }
+                )
+            })
             .collect();
         let merge = (0..n).find(|&i| matches!(self.nodes[i].kind, NodeKind::Merge { .. }));
         let head = match merge {
@@ -687,7 +739,9 @@ impl<'a> GraphSpec<'a> {
                             break (*policy, out[c].clone());
                         }
                         NodeKind::Sink { .. } => break (RoutePolicy::Broadcast, vec![c]),
-                        NodeKind::Source { .. } | NodeKind::Merge { .. } => {
+                        NodeKind::Source { .. }
+                        | NodeKind::Listener { .. }
+                        | NodeKind::Merge { .. } => {
                             // Degree rules above already rejected these.
                             bail!("node {:?} cannot follow {:?}", name(c), name(at));
                         }
@@ -728,7 +782,9 @@ impl<'a> GraphSpec<'a> {
                          point per graph)",
                         name(at)
                     ),
-                    NodeKind::Source { .. } | NodeKind::Merge { .. } => {
+                    NodeKind::Source { .. }
+                    | NodeKind::Listener { .. }
+                    | NodeKind::Merge { .. } => {
                         bail!("node {:?} cannot sit on a branch", name(at));
                     }
                 }
@@ -767,10 +823,15 @@ impl<'a> GraphSpec<'a> {
 
         let mut sources = Vec::with_capacity(plan.sources.len());
         for &i in &plan.sources {
-            let Some(NodeKind::Source { source, threaded, .. }) = slots[i].take() else {
-                unreachable!("plan.sources holds source nodes");
-            };
-            sources.push((source, threaded));
+            match slots[i].take() {
+                Some(NodeKind::Source { source, threaded, .. }) => {
+                    sources.push((source, threaded));
+                }
+                // Listeners are never pumped: their client plane must
+                // stay visible to the in-process merge driver.
+                Some(NodeKind::Listener { source }) => sources.push((source, false)),
+                _ => unreachable!("plan.sources holds source/listener nodes"),
+            }
         }
 
         let mut shared = StageGraph::empty();
@@ -852,6 +913,7 @@ impl CompiledTopology<'_> {
             self.config.chunk_size,
             self.config.driver,
             adaptive,
+            self.config.report_json.take(),
         )
     }
 }
@@ -1102,6 +1164,59 @@ mod tests {
         assert!(summary.contains("route split <- filters [Stripes]"), "{summary}");
         assert!(summary.contains("sink right <- split: null"), "{summary}");
         assert_eq!(summary, g.summary(), "summary must be stable");
+    }
+
+    #[test]
+    fn listener_nodes_join_the_merge_like_sources() {
+        let res = Resolution::new(32, 32);
+        // Any EventSource works as a listener payload at the graph
+        // layer; the serving plane plugs in a real ListenerSource.
+        let g = Topology::builder()
+            .source("file", mem(1, 300, res))
+            .listen("net", mem(2, 200, res))
+            .merge("fuse", &["file", "net"])
+            .sink("out", NullSink::default())
+            .build();
+        let summary = g.summary();
+        assert!(summary.contains("listen net"), "{summary}");
+        let report = g.run(GraphConfig { chunk_size: 64, ..Default::default() }).unwrap();
+        assert_eq!(report.events_in, 500);
+        assert_eq!(report.sources.len(), 2);
+        assert_eq!(report.resolution, Resolution::new(64, 32));
+    }
+
+    #[test]
+    fn listener_validation_rules() {
+        struct NoGeom;
+        impl EventSource for NoGeom {
+            fn next_batch(&mut self) -> anyhow::Result<Option<Vec<Event>>> {
+                Ok(None)
+            }
+            fn resolution(&self) -> Resolution {
+                Resolution::new(1, 1)
+            }
+            fn geometry_known(&self) -> bool {
+                false
+            }
+        }
+        // Listeners must declare their canvas up front.
+        let g = Topology::builder()
+            .listen("net", NoGeom)
+            .sink("out", NullSink::default())
+            .build();
+        let err = format!("{}", g.validate().unwrap_err());
+        assert!(err.contains("declared geometry"), "got {err}");
+        // Listeners are graph roots: no inbound edges.
+        let res = Resolution::new(32, 32);
+        let g = Topology::builder()
+            .source("a", mem(1, 10, res))
+            .listen("net", mem(2, 10, res))
+            .edge("a", "net")
+            .merge("fuse", &["a", "net"])
+            .sink("out", NullSink::default())
+            .build();
+        let err = format!("{}", g.validate().unwrap_err());
+        assert!(err.contains("cannot receive an edge"), "got {err}");
     }
 
     #[test]

@@ -50,6 +50,27 @@ impl<T> MergeCore<T> {
         self.lanes.len()
     }
 
+    /// Add a lane while the merge runs (a serving-plane client
+    /// attaching mid-stream); returns its id. Call only at a safe
+    /// point — between pops, with nothing half-emitted. A new client
+    /// joins *non-blocking* (`blocking: false`) so an admitted-but-
+    /// quiet connection cannot stall the frontier; the owner flips it
+    /// blocking once the lane first delivers data, exactly like a
+    /// heartbeat recovery.
+    pub(crate) fn add_lane(&mut self, blocking: bool) -> usize {
+        self.lanes.push(Lane { carry: VecDeque::new(), exhausted: false, blocking });
+        self.lanes.len() - 1
+    }
+
+    /// Retire a lane: the disconnect path of a dynamic client. The
+    /// lane's remaining carry still drains in key order (this is
+    /// [`exhaust`](Self::exhaust) by another name, kept separate so the
+    /// serving-plane call sites read as what they mean) — a client
+    /// hang-up is a clean end of its lane, never an error.
+    pub(crate) fn retire_lane(&mut self, lane: usize) {
+        self.exhaust(lane);
+    }
+
     /// Append items to a lane's carry (items must be in key order and
     /// keyed at or above everything previously pushed to that lane).
     pub(crate) fn push(&mut self, lane: usize, items: impl IntoIterator<Item = T>) {
@@ -187,6 +208,32 @@ mod tests {
         core.note_peak();
         assert_eq!(core.peak_buffered(), 4, "peak is a high-water mark");
         assert_eq!(core.lane_len(0), 2);
+    }
+
+    #[test]
+    fn lanes_attach_and_retire_mid_merge() {
+        let mut core: MergeCore<u64> = MergeCore::new(1);
+        core.push(0, [1, 5]);
+        // A client attaches mid-stream: non-blocking until it delivers,
+        // so the merge keeps moving.
+        let lane = core.add_lane(false);
+        assert_eq!(lane, 1);
+        assert_eq!(core.lanes(), 2);
+        assert!(!core.stalled(), "fresh empty client lane must not stall the frontier");
+        assert_eq!(core.pop_min(|&v| v), Some((0, 1)));
+        // First data arrives: the lane becomes an ordinary blocking one.
+        core.push(lane, [3, 7]);
+        core.set_blocking(lane, true);
+        assert_eq!(core.pop_min(|&v| v), Some((1, 3)));
+        // Disconnect: the retired lane drains in order, then stops
+        // counting — never an error, never a stall.
+        core.retire_lane(lane);
+        assert!(core.is_exhausted(lane));
+        assert_eq!(core.pop_min(|&v| v), Some((0, 5)));
+        assert_eq!(core.pop_min(|&v| v), Some((1, 7)));
+        core.exhaust(0);
+        assert!(core.all_done());
+        assert!(!core.stalled());
     }
 
     #[test]

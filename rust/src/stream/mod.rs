@@ -55,28 +55,31 @@
 pub mod adapt;
 pub mod graph;
 pub(crate) mod merge;
+pub mod report;
 pub mod sinks;
 pub mod sources;
 pub mod stage;
 pub mod topology;
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::aer::{Event, Resolution};
-use crate::metrics::NodeReport;
+use crate::metrics::{LiveNode, NodeReport};
 use crate::pipeline::Pipeline;
 
 pub use adapt::{
-    registry::register_controller, AdaptiveConfig, AdaptiveReport, AdaptiveRuntime,
-    ChunkController, Controller, ControllerKind, EpochSample, Reconfigure, SkewController,
-    StageSample, StageTelemetry,
+    registry::register_controller, AdaptiveConfig, AdaptiveReport, AdaptiveRuntime, Aimd,
+    ChunkController, ClientSample, ClientWindowController, Controller, ControllerKind,
+    EpochSample, Reconfigure, SkewController, StageSample, StageTelemetry, WindowChange,
 };
 pub use graph::{
     CompiledTopology, FusionLayout, GraphConfig, GraphSpec, SourceOptions, Topology,
     TopologyBuilder,
 };
+pub use report::{ReportEmitter, ReportTarget};
 pub use sinks::{
     CaptureSink, FileSink, FrameSink, NullSink, SinkSummary, StdoutSink, ThreadedSink, UdpSink,
     ViewSink,
@@ -141,6 +144,16 @@ pub trait EventSource: Send {
     fn describe(&self) -> String {
         "source".into()
     }
+
+    /// The dynamic-client plane behind this source, if it is a
+    /// serving-plane listener. The fan-in merge collects these at
+    /// construction and adopts each plane's newly admitted clients as
+    /// dynamic lanes at safe merge points; the adaptive epoch loop
+    /// samples them and retargets per-client windows. Default: `None`
+    /// (ordinary sources have no clients).
+    fn client_plane(&self) -> Option<Arc<dyn ClientPlane>> {
+        None
+    }
 }
 
 impl<S: EventSource + ?Sized> EventSource for &mut S {
@@ -164,6 +177,9 @@ impl<S: EventSource + ?Sized> EventSource for &mut S {
     }
     fn describe(&self) -> String {
         (**self).describe()
+    }
+    fn client_plane(&self) -> Option<Arc<dyn ClientPlane>> {
+        (**self).client_plane()
     }
 }
 
@@ -189,6 +205,41 @@ impl<S: EventSource + ?Sized> EventSource for Box<S> {
     fn describe(&self) -> String {
         (**self).describe()
     }
+    fn client_plane(&self) -> Option<Arc<dyn ClientPlane>> {
+        (**self).client_plane()
+    }
+}
+
+/// One dynamic client lane handed from a [`ClientPlane`] to the fan-in
+/// merge: the client's batch source plus its live counter node (already
+/// registered with the plane, so admission shows up in telemetry even
+/// before the merge adopts the lane).
+pub struct ClientLane {
+    /// The client's pull side (decoded, timestamped batches).
+    pub source: Box<dyn EventSource>,
+    /// The client's live counters (events/batches/credit stalls).
+    pub node: Arc<LiveNode>,
+}
+
+/// A dynamic-client registry exposed by a serving-plane listener
+/// through [`EventSource::client_plane`]. Implementations (e.g.
+/// [`crate::serve::ClientHub`]) are shared between the accept loop
+/// (producing lanes), the merge driver (adopting them), and the
+/// adaptive epoch loop (sampling and retargeting windows) — hence
+/// `Send + Sync` behind an [`Arc`].
+pub trait ClientPlane: Send + Sync {
+    /// Drain the lanes of clients admitted since the last call. The
+    /// merge adopts each as a dynamic lane at its next safe point.
+    fn take_lanes(&self) -> Vec<ClientLane>;
+
+    /// Cumulative per-client counters (the epoch sampler computes
+    /// deltas). Includes disconnected clients — their history stays in
+    /// the final report.
+    fn client_samples(&self) -> Vec<ClientSample>;
+
+    /// Retarget one client's in-flight credit window. Returns `false`
+    /// when the client is unknown to this plane.
+    fn set_window(&self, client: &str, window: usize) -> bool;
 }
 
 /// A batch consumer with an explicit end-of-stream flush.

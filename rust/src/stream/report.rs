@@ -1,0 +1,304 @@
+//! `--report-json`: a line-oriented JSON view of the telemetry plane.
+//!
+//! A serving topology runs indefinitely, so a single report printed at
+//! exit is useless for operating it — the observability slice of the
+//! ROADMAP's telemetry item wants the stream graphable *in flight*.
+//! This module emits one self-contained JSON object per line:
+//!
+//! * `{"type":"epoch", …}` — per adaptive epoch, from the epoch loop's
+//!   [`EpochSample`]: edge counters, per-stage shard histograms, and
+//!   per-client serving-plane counters (window, credit stalls);
+//! * `{"type":"final", …}` — once at shutdown, the whole
+//!   [`StreamReport`] including per-node counters and the adaptive
+//!   history (chunk and per-client window changes).
+//!
+//! The writer is hand-rolled (no serde in the dependency budget) and
+//! flushes per line, so `tail -f report.jsonl | jq` works while the
+//! stream serves. With `--report-json` but no `--adaptive`, the driver
+//! synthesizes an empty controller list so epochs still tick.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{self, Write};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{Context as _, Result};
+
+use super::adapt::EpochSample;
+use super::StreamReport;
+
+/// Where `--report-json` lines go.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReportTarget {
+    /// One JSON line per epoch on stdout (`--report-json -`).
+    Stdout,
+    /// Create/truncate this file and stream lines into it.
+    File(PathBuf),
+}
+
+impl ReportTarget {
+    /// Parse the CLI operand: `-` is stdout, anything else a path.
+    pub fn parse(s: &str) -> ReportTarget {
+        if s == "-" {
+            ReportTarget::Stdout
+        } else {
+            ReportTarget::File(PathBuf::from(s))
+        }
+    }
+}
+
+/// Line-oriented JSON emitter shared by the adaptive epoch loop (one
+/// `"epoch"` line per telemetry epoch) and the topology driver (one
+/// `"final"` line as the stream shuts down).
+pub struct ReportEmitter {
+    out: Mutex<Box<dyn Write + Send>>,
+}
+
+impl ReportEmitter {
+    /// Open the emitter (creates/truncates a file target).
+    pub fn open(target: &ReportTarget) -> Result<ReportEmitter> {
+        let out: Box<dyn Write + Send> = match target {
+            ReportTarget::Stdout => Box::new(io::stdout()),
+            ReportTarget::File(path) => Box::new(File::create(path).with_context(|| {
+                format!("creating --report-json file {}", path.display())
+            })?),
+        };
+        Ok(ReportEmitter { out: Mutex::new(out) })
+    }
+
+    fn emit_line(&self, line: &str) -> Result<()> {
+        let mut out = self.out.lock().unwrap();
+        writeln!(out, "{line}").context("writing --report-json line")?;
+        out.flush().context("flushing --report-json line")
+    }
+
+    /// One `"epoch"` line from the adaptive epoch loop. Counters are
+    /// epoch deltas, matching what controllers saw.
+    pub fn emit_epoch(&self, sample: &EpochSample) -> Result<()> {
+        let mut line = String::new();
+        let _ = write!(
+            line,
+            "{{\"type\":\"epoch\",\"epoch\":{},\"batches\":{},\"events_in\":{},\
+             \"backpressure_waits\":{},\"chunk\":{},\"stages\":[",
+            sample.epoch,
+            sample.batches,
+            sample.events_in,
+            sample.backpressure_waits,
+            sample.chunk_size,
+        );
+        for (i, stage) in sample.stages.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            let events: u64 = stage.epoch_shard_events.iter().sum();
+            let _ = write!(
+                line,
+                "{{\"name\":{},\"events\":{events},\"shards\":[",
+                json_str(&stage.name)
+            );
+            for (j, n) in stage.epoch_shard_events.iter().enumerate() {
+                if j > 0 {
+                    line.push(',');
+                }
+                let _ = write!(line, "{n}");
+            }
+            line.push_str("]}");
+        }
+        line.push_str("],\"clients\":[");
+        for (i, client) in sample.clients.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            let _ = write!(
+                line,
+                "{{\"name\":{},\"events\":{},\"batches\":{},\"backpressure_waits\":{},\
+                 \"window\":{}}}",
+                json_str(&client.name),
+                client.events,
+                client.batches,
+                client.backpressure_waits,
+                client.window,
+            );
+        }
+        line.push_str("]}");
+        self.emit_line(&line)
+    }
+
+    /// The `"final"` line: the complete [`StreamReport`] at shutdown.
+    pub fn emit_final(&self, report: &StreamReport) -> Result<()> {
+        let mut line = String::new();
+        let _ = write!(
+            line,
+            "{{\"type\":\"final\",\"events_in\":{},\"events_out\":{},\"frames\":{},\
+             \"batches\":{},\"peak_in_flight\":{},\"backpressure_waits\":{},\
+             \"wall_s\":{:.6},\"resolution\":[{},{}],\"merge\":{{\
+             \"peak_buffered\":{},\"dropped\":{},\"stalls_broken\":{},\"late_events\":{}}}",
+            report.events_in,
+            report.events_out,
+            report.frames,
+            report.batches,
+            report.peak_in_flight,
+            report.backpressure_waits,
+            report.wall.as_secs_f64(),
+            report.resolution.width,
+            report.resolution.height,
+            report.merge_peak_buffered,
+            report.merge_dropped,
+            report.merge_stalls_broken,
+            report.merge_late_events,
+        );
+        for (key, nodes) in
+            [("sources", &report.sources), ("stages", &report.stages), ("sinks", &report.sinks)]
+        {
+            let _ = write!(line, ",\"{key}\":[");
+            for (i, node) in nodes.iter().enumerate() {
+                if i > 0 {
+                    line.push(',');
+                }
+                let _ = write!(
+                    line,
+                    "{{\"name\":{},\"events\":{},\"batches\":{},\
+                     \"backpressure_waits\":{},\"dropped\":{},\"frames\":{}}}",
+                    json_str(&node.name),
+                    node.events,
+                    node.batches,
+                    node.backpressure_waits,
+                    node.dropped,
+                    node.frames,
+                );
+            }
+            line.push(']');
+        }
+        match &report.adaptive {
+            None => line.push_str(",\"adaptive\":null}"),
+            Some(adaptive) => {
+                let _ = write!(
+                    line,
+                    ",\"adaptive\":{{\"epochs\":{},\"recuts\":{},\"final_chunk\":{},\
+                     \"chunk_changes\":[",
+                    adaptive.epochs,
+                    adaptive.recuts.len(),
+                    adaptive.final_chunk,
+                );
+                for (i, change) in adaptive.chunk_changes.iter().enumerate() {
+                    if i > 0 {
+                        line.push(',');
+                    }
+                    let _ = write!(
+                        line,
+                        "{{\"epoch\":{},\"from\":{},\"to\":{}}}",
+                        change.epoch, change.from, change.to
+                    );
+                }
+                line.push_str("],\"window_changes\":[");
+                for (i, change) in adaptive.window_changes.iter().enumerate() {
+                    if i > 0 {
+                        line.push(',');
+                    }
+                    let _ = write!(
+                        line,
+                        "{{\"epoch\":{},\"client\":{},\"from\":{},\"to\":{}}}",
+                        change.epoch,
+                        json_str(&change.client),
+                        change.from,
+                        change.to
+                    );
+                }
+                line.push_str("]}}");
+            }
+        }
+        self.emit_line(&line)
+    }
+}
+
+/// Escape `s` as a JSON string literal, quotes included.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::adapt::{ClientSample, StageSample};
+
+    #[test]
+    fn targets_parse() {
+        assert_eq!(ReportTarget::parse("-"), ReportTarget::Stdout);
+        assert_eq!(
+            ReportTarget::parse("out.jsonl"),
+            ReportTarget::File(PathBuf::from("out.jsonl"))
+        );
+    }
+
+    #[test]
+    fn json_strings_escape() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("x\ny\u{1}"), "\"x\\ny\\u0001\"");
+    }
+
+    #[test]
+    fn epoch_lines_are_valid_shape() {
+        let dir = std::env::temp_dir().join(format!(
+            "aestream-report-{}-{}",
+            std::process::id(),
+            line!()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("epochs.jsonl");
+        let emitter = ReportEmitter::open(&ReportTarget::File(path.clone())).unwrap();
+        let sample = EpochSample {
+            epoch: 3,
+            batches: 32,
+            events_in: 4096,
+            backpressure_waits: 5,
+            backpressure_gauged: true,
+            chunk_size: 1024,
+            stages: vec![StageSample {
+                stage: 0,
+                name: "refractory".into(),
+                epoch_shard_events: vec![10, 20],
+                bounds: vec![16, 32],
+                halo: 1,
+            }],
+            clients: vec![ClientSample {
+                name: "client:0".into(),
+                events: 100,
+                batches: 4,
+                backpressure_waits: 1,
+                window: 512,
+            }],
+        };
+        emitter.emit_epoch(&sample).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        let line = text.lines().next().unwrap();
+        assert!(line.starts_with("{\"type\":\"epoch\",\"epoch\":3,"), "{line}");
+        assert!(line.contains("\"name\":\"refractory\",\"events\":30,\"shards\":[10,20]"));
+        assert!(line.contains("\"name\":\"client:0\""));
+        assert!(line.contains("\"window\":512"));
+        assert!(line.ends_with('}'), "one complete object per line: {line}");
+        assert_eq!(
+            line.matches('{').count(),
+            line.matches('}').count(),
+            "balanced braces: {line}"
+        );
+    }
+}

@@ -518,9 +518,18 @@ impl ThreadedSink {
     pub fn spawn(mut sink: Box<dyn EventSink>) -> ThreadedSink {
         use crate::rt::{block_on, sync_channel};
         let name = sink.describe();
+        // OS thread name: `sink:<describe>`, clipped to the 15-byte
+        // Linux limit at a char boundary (longer names silently fail).
+        let mut thread_name = format!("sink:{name}");
+        let mut end = thread_name.len().min(15);
+        while !thread_name.is_char_boundary(end) {
+            end -= 1;
+        }
+        thread_name.truncate(end);
         let (tx, mut rx) = sync_channel::<SinkMsg>(SINK_QUEUE_BATCHES);
         let (mut done_tx, done) = sync_channel::<Result<SinkSummary>>(1);
-        let handle = std::thread::spawn(move || {
+        let builder = std::thread::Builder::new().name(thread_name);
+        let handle = builder.spawn(move || {
             let result = (|| -> Result<SinkSummary> {
                 while let Some(msg) = block_on(rx.recv()) {
                     match msg {
@@ -534,6 +543,7 @@ impl ThreadedSink {
             // closed); the error itself surfaces from `finish`.
             let _ = block_on(done_tx.send(result));
         });
+        let handle = handle.expect("spawn sink pump thread");
         ThreadedSink { tx: Some(tx), done, handle: Some(handle), name, waits: 0 }
     }
 

@@ -190,6 +190,9 @@ pub trait BatchProcessor: Send {
     fn reconfigure(&mut self, change: &Reconfigure) -> Result<()> {
         match change {
             Reconfigure::ChunkSize(_) => Ok(()),
+            // Per-client windows are applied on the serving plane by the
+            // adaptive loop itself; stages have nothing to do.
+            Reconfigure::ClientWindow { .. } => Ok(()),
             Reconfigure::RecutStripes { .. } => {
                 bail!("{} does not support stripe re-cuts", self.describe())
             }
@@ -322,7 +325,7 @@ impl StageGraph {
                     let workers: Vec<Box<dyn EventTransform>> =
                         (0..shards).map(|_| stage.build(res)).collect();
                     let mode = if opts.shard_threads {
-                        ShardMode::Threads(spawn_workers(workers))
+                        ShardMode::Threads(spawn_workers(node.name(), workers))
                     } else {
                         ShardMode::Inline(workers)
                     };
@@ -375,27 +378,45 @@ impl StageGraph {
     }
 }
 
-/// Spawn one OS thread per shard worker. Each worker loops
-/// recv-apply-send until its input ring closes; a dead main side
+/// OS thread name for shard `i` of `stage`: `shard:<stage>:<i>`,
+/// clipped to the 15-byte Linux thread-name limit (longer names fail
+/// to apply silently) at a char boundary.
+fn shard_thread_name(stage: &str, i: usize) -> String {
+    let mut name = format!("shard:{stage}:{i}");
+    let mut end = name.len().min(15);
+    while !name.is_char_boundary(end) {
+        end -= 1;
+    }
+    name.truncate(end);
+    name
+}
+
+/// Spawn one OS thread per shard worker (named `shard:<stage>:<i>` so
+/// `top -H` / debuggers attribute load to the right node). Each worker
+/// loops recv-apply-send until its input ring closes; a dead main side
 /// (receiver dropped) ends it via the failed send. On exit the worker
 /// offers its stage instance back through the reclaim ring so an epoch
 /// re-cut can move its state (plain shutdown just drops the offer).
-fn spawn_workers(stages: Vec<Box<dyn EventTransform>>) -> Vec<ShardWorker> {
+fn spawn_workers(label: &str, stages: Vec<Box<dyn EventTransform>>) -> Vec<ShardWorker> {
     stages
         .into_iter()
-        .map(|mut stage| {
+        .enumerate()
+        .map(|(i, mut stage)| {
             let (tx, mut worker_rx) = sync_channel::<Vec<ShardItem>>(SHARD_QUEUE_BATCHES);
             let (mut worker_tx, rx) = sync_channel::<ShardOut>(SHARD_QUEUE_BATCHES);
             let (mut reclaim_tx, reclaim) = sync_channel::<Box<dyn EventTransform>>(1);
-            let handle = std::thread::spawn(move || {
-                while let Some(batch) = block_on(worker_rx.recv()) {
-                    let out = apply_shard(stage.as_mut(), batch);
-                    if block_on(worker_tx.send(out)).is_err() {
-                        break;
+            let handle = std::thread::Builder::new()
+                .name(shard_thread_name(label, i))
+                .spawn(move || {
+                    while let Some(batch) = block_on(worker_rx.recv()) {
+                        let out = apply_shard(stage.as_mut(), batch);
+                        if block_on(worker_tx.send(out)).is_err() {
+                            break;
+                        }
                     }
-                }
-                let _ = block_on(reclaim_tx.send(stage));
-            });
+                    let _ = block_on(reclaim_tx.send(stage));
+                })
+                .expect("spawn shard worker thread");
             ShardWorker { tx, rx, reclaim, handle }
         })
         .collect()
@@ -598,7 +619,7 @@ impl StageNode {
         *cut = new_cut;
         match mode {
             ShardMode::Inline(slot) => *slot = stages,
-            ShardMode::Threads(workers) => *workers = spawn_workers(stages),
+            ShardMode::Threads(workers) => *workers = spawn_workers(&name, stages),
         }
         // The histogram restarts under the new cut so skew (and the
         // next epoch's sample) describes current boundaries only.
@@ -669,6 +690,8 @@ impl BatchProcessor for StageGraph {
         match change {
             // Chunking is decided upstream of the graph; nothing to do.
             Reconfigure::ChunkSize(_) => Ok(()),
+            // Per-client windows live on the serving plane, not here.
+            Reconfigure::ClientWindow { .. } => Ok(()),
             Reconfigure::RecutStripes { stage, bounds } => {
                 if self.finished {
                     bail!("stage graph already finished; cannot re-cut");

@@ -61,11 +61,12 @@ use crate::rt::{
     block_on, channel, sync_channel, yield_now, LocalExecutor, Sender, SyncReceiver, SyncSender,
 };
 
-use super::adapt::{Adaptor, AdaptiveConfig, AdaptiveRuntime};
+use super::adapt::{Adaptor, AdaptiveConfig, AdaptiveRuntime, DEFAULT_EPOCH_BATCHES};
 use super::merge::MergeCore;
+use super::report::{ReportEmitter, ReportTarget};
 use super::sources::grow_resolution;
 use super::stage::{stripe_cut, stripe_index, BatchProcessor, StageGraph};
-use super::{EventSink, EventSource, StreamConfig, StreamDriver, StreamReport};
+use super::{ClientPlane, EventSink, EventSource, StreamConfig, StreamDriver, StreamReport};
 
 /// Batches buffered per source-thread channel (in addition to the batch
 /// being assembled on either side): small, so per-source memory stays
@@ -214,6 +215,60 @@ enum Poll {
     Idle,
 }
 
+/// One bounded pull on a merge input, with all heartbeat bookkeeping —
+/// a free function (not a `FusedSource` method) so static inputs
+/// (`FusedInput<S>`) and dynamic client lanes
+/// (`FusedInput<Box<dyn EventSource>>`) share it without forcing the
+/// whole merge behind a trait object.
+fn poll_one<T: EventSource>(
+    input: &mut FusedInput<T>,
+    core: &mut MergeCore<Event>,
+    lane: usize,
+    stalls_broken: &mut u64,
+) -> Result<Poll> {
+    debug_assert_eq!(core.lane_len(lane), 0);
+    match input.source.next_batch()? {
+        None => {
+            core.exhaust(lane);
+            Ok(Poll::End)
+        }
+        Some(batch) if batch.is_empty() => {
+            // Only *live* sources may heartbeat: a finite source's
+            // empty batch is momentary starvation (e.g. a slow pump
+            // thread), and breaking its stall would trade exact
+            // order for nothing.
+            if input.source.is_live() {
+                input.idle_polls = input.idle_polls.saturating_add(1);
+                let since = *input.idle_since.get_or_insert_with(Instant::now);
+                if !input.heartbeat
+                    && (input.idle_polls >= HEARTBEAT_POLLS || since.elapsed() >= HEARTBEAT_GRACE)
+                {
+                    // Grace expired (poll-count bound for cheap
+                    // non-blocking lanes, wall-clock bound for
+                    // lanes with blocking polls): stop letting
+                    // this quiet source stall its siblings.
+                    input.heartbeat = true;
+                    core.set_blocking(lane, false);
+                    *stalls_broken += 1;
+                }
+            }
+            Ok(Poll::Idle)
+        }
+        Some(batch) => {
+            input.node.add_events(batch.len() as u64);
+            input.node.add_batch();
+            input.idle_polls = 0;
+            input.idle_since = None;
+            if input.heartbeat {
+                input.heartbeat = false;
+                core.set_blocking(lane, true);
+            }
+            core.push(lane, batch);
+            Ok(Poll::Data)
+        }
+    }
+}
+
 /// Streaming, timestamp-ordered k-way merge of N [`EventSource`]s — the
 /// incremental lift of [`crate::pipeline::fusion::merge_streams`] /
 /// [`fuse`](crate::pipeline::fusion::fuse), built on the shared
@@ -233,6 +288,13 @@ enum Poll {
 /// zero-cost wrapper.
 pub struct FusedSource<S: EventSource> {
     inputs: Vec<FusedInput<S>>,
+    /// Dynamic lanes adopted from serving planes while the merge runs
+    /// (network clients attaching mid-stream). They occupy core lanes
+    /// `inputs.len()..` and live until their client disconnects.
+    clients: Vec<FusedInput<Box<dyn EventSource>>>,
+    /// Serving planes discovered on the inputs ([`EventSource::client_plane`]):
+    /// polled for freshly admitted clients at every merge round.
+    planes: Vec<Arc<dyn ClientPlane>>,
     core: MergeCore<Event>,
     layout: Option<SourceLayout>,
     chunk: usize,
@@ -262,20 +324,24 @@ impl<S: EventSource> FusedSource<S> {
             );
         }
         let n = sources.len();
+        let inputs: Vec<FusedInput<S>> = sources
+            .into_iter()
+            .map(|source| {
+                let node = Arc::new(LiveNode::new(source.describe()));
+                FusedInput {
+                    source,
+                    node,
+                    idle_polls: 0,
+                    idle_since: None,
+                    heartbeat: false,
+                }
+            })
+            .collect();
+        let planes = inputs.iter().filter_map(|input| input.source.client_plane()).collect();
         FusedSource {
-            inputs: sources
-                .into_iter()
-                .map(|source| {
-                    let node = Arc::new(LiveNode::new(source.describe()));
-                    FusedInput {
-                        source,
-                        node,
-                        idle_polls: 0,
-                        idle_since: None,
-                        heartbeat: false,
-                    }
-                })
-                .collect(),
+            inputs,
+            clients: Vec::new(),
+            planes,
             core: MergeCore::new(n),
             layout,
             chunk: chunk.max(1),
@@ -314,16 +380,29 @@ impl<S: EventSource> FusedSource<S> {
 
     /// Per-source counters for [`StreamReport::sources`]: a final
     /// sample of each input's live cell, plus the source's own discard
-    /// count.
+    /// count. Static inputs first (in declaration order), then every
+    /// dynamic client lane adopted during the run.
     pub fn node_reports(&self) -> Vec<NodeReport> {
         self.inputs
             .iter()
-            .map(|input| {
-                let mut report = input.node.sample();
-                report.dropped = input.source.dropped();
+            .map(|input| (input.node.sample(), input.source.dropped()))
+            .chain(
+                self.clients
+                    .iter()
+                    .map(|client| (client.node.sample(), client.source.dropped())),
+            )
+            .map(|(mut report, dropped)| {
+                report.dropped = dropped;
                 report
             })
             .collect()
+    }
+
+    /// The serving planes discovered on the inputs (empty for ordinary
+    /// topologies) — handed to the adaptive runtime so per-client
+    /// windows can be sampled and retargeted.
+    pub(crate) fn client_planes(&self) -> Vec<Arc<dyn ClientPlane>> {
+        self.planes.clone()
     }
 
     /// Retarget the merged batch size (adaptive chunk controller): the
@@ -334,6 +413,9 @@ impl<S: EventSource> FusedSource<S> {
         self.chunk = chunk.max(1);
         for input in &mut self.inputs {
             input.source.set_chunk_hint(self.chunk);
+        }
+        for client in &mut self.clients {
+            client.source.set_chunk_hint(self.chunk);
         }
     }
 
@@ -352,59 +434,64 @@ impl<S: EventSource> FusedSource<S> {
         }
     }
 
-    /// One bounded pull on input `i`, with all heartbeat bookkeeping.
-    fn poll_input(&mut self, i: usize) -> Result<Poll> {
-        debug_assert_eq!(self.core.lane_len(i), 0);
-        let input = &mut self.inputs[i];
-        match input.source.next_batch()? {
-            None => {
-                self.core.exhaust(i);
-                Ok(Poll::End)
-            }
-            Some(batch) if batch.is_empty() => {
-                // Only *live* sources may heartbeat: a finite source's
-                // empty batch is momentary starvation (e.g. a slow pump
-                // thread), and breaking its stall would trade exact
-                // order for nothing.
-                if input.source.is_live() {
-                    input.idle_polls = input.idle_polls.saturating_add(1);
-                    let since = *input.idle_since.get_or_insert_with(Instant::now);
-                    if !input.heartbeat
-                        && (input.idle_polls >= HEARTBEAT_POLLS
-                            || since.elapsed() >= HEARTBEAT_GRACE)
-                    {
-                        // Grace expired (poll-count bound for cheap
-                        // non-blocking lanes, wall-clock bound for
-                        // lanes with blocking polls): stop letting
-                        // this quiet source stall its siblings.
-                        input.heartbeat = true;
-                        self.core.set_blocking(i, false);
-                        self.stalls_broken += 1;
-                    }
-                }
-                Ok(Poll::Idle)
-            }
-            Some(batch) => {
-                input.node.add_events(batch.len() as u64);
-                input.node.add_batch();
-                input.idle_polls = 0;
-                input.idle_since = None;
-                if input.heartbeat {
-                    input.heartbeat = false;
-                    self.core.set_blocking(i, true);
-                }
-                self.core.push(i, batch);
-                Ok(Poll::Data)
+    /// One bounded pull on the lane `lane` (static input or dynamic
+    /// client), with all heartbeat bookkeeping.
+    fn poll_lane(&mut self, lane: usize) -> Result<Poll> {
+        let n = self.inputs.len();
+        if lane < n {
+            poll_one(&mut self.inputs[lane], &mut self.core, lane, &mut self.stalls_broken)
+        } else {
+            poll_one(
+                &mut self.clients[lane - n],
+                &mut self.core,
+                lane,
+                &mut self.stalls_broken,
+            )
+        }
+    }
+
+    /// Whether `lane` is currently heartbeating (its emptiness does not
+    /// block the merge).
+    fn lane_heartbeat(&self, lane: usize) -> bool {
+        let n = self.inputs.len();
+        if lane < n {
+            self.inputs[lane].heartbeat
+        } else {
+            self.clients[lane - n].heartbeat
+        }
+    }
+
+    /// Adopt every client admitted on a serving plane since the last
+    /// merge round. This is the safe point dynamic attach happens at:
+    /// between pops, with nothing half-emitted. A fresh client joins
+    /// with `heartbeat: true` over a non-blocking core lane, so an
+    /// admitted-but-quiet connection can never stall the frontier; the
+    /// first delivered batch flips it to an ordinary blocking lane.
+    fn attach_clients(&mut self) {
+        for p in 0..self.planes.len() {
+            for client in self.planes[p].take_lanes() {
+                let lane = self.core.add_lane(false);
+                debug_assert_eq!(lane, self.inputs.len() + self.clients.len());
+                let mut source = client.source;
+                source.set_chunk_hint(self.chunk);
+                self.clients.push(FusedInput {
+                    source,
+                    node: client.node,
+                    idle_polls: 0,
+                    idle_since: None,
+                    heartbeat: true,
+                });
             }
         }
     }
 
     fn next_merged(&mut self) -> Result<Option<Vec<Event>>> {
+        self.attach_clients();
         // Refill every empty lane — one pull per input per call, so
         // each call does bounded work even over slow live sources.
-        for i in 0..self.inputs.len() {
-            if !self.core.is_exhausted(i) && self.core.lane_len(i) == 0 {
-                self.poll_input(i)?;
+        for lane in 0..self.core.lanes() {
+            if !self.core.is_exhausted(lane) && self.core.lane_len(lane) == 0 {
+                self.poll_lane(lane)?;
             }
         }
         if self.core.all_done() {
@@ -437,18 +524,23 @@ impl<S: EventSource> FusedSource<S> {
                 self.frontier = ev.t;
             }
             match &self.layout {
-                Some(layout) => match layout.place(i, &ev) {
+                // Layout placements cover the static inputs only; a
+                // dynamic client lane already conforms to the serving
+                // plane's declared geometry (the hub filters and counts
+                // out-of-bounds events at ingest), so its events pass
+                // through unplaced.
+                Some(layout) if i < self.inputs.len() => match layout.place(i, &ev) {
                     Some(placed) => out.push(placed),
                     None => self.dropped += 1,
                 },
-                None => out.push(ev),
+                _ => out.push(ev),
             }
             if self.core.lane_len(i) == 0 && !self.core.is_exhausted(i) {
-                match self.poll_input(i)? {
+                match self.poll_lane(i)? {
                     Poll::Data => self.core.note_peak(),
                     Poll::End => {}
                     Poll::Idle => {
-                        if !self.inputs[i].heartbeat {
+                        if !self.lane_heartbeat(i) {
                             // Live source momentarily dry within its
                             // grace: its future timestamps are unknown,
                             // so this merge round must stop here.
@@ -464,7 +556,9 @@ impl<S: EventSource> FusedSource<S> {
 
 impl<S: EventSource> EventSource for FusedSource<S> {
     fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
-        if self.inputs.len() == 1 && self.layout.is_none() {
+        // The pass-through fast path is only sound when no serving
+        // plane can attach dynamic lanes behind the single input.
+        if self.inputs.len() == 1 && self.layout.is_none() && self.planes.is_empty() {
             self.next_single()
         } else {
             self.next_merged()
@@ -493,7 +587,9 @@ impl<S: EventSource> EventSource for FusedSource<S> {
     fn dropped(&self) -> u64 {
         // Layout rejections plus whatever the inputs discarded
         // themselves ([`Self::layout_dropped`] reports layout-only).
-        self.dropped + self.inputs.iter().map(|i| i.source.dropped()).sum::<u64>()
+        self.dropped
+            + self.inputs.iter().map(|i| i.source.dropped()).sum::<u64>()
+            + self.clients.iter().map(|c| c.source.dropped()).sum::<u64>()
     }
 
     fn set_chunk_hint(&mut self, chunk: usize) {
@@ -807,6 +903,14 @@ impl<S: EventSource> EventSource for Lane<'_, S> {
             Lane::Pumped(s) => s.describe(),
         }
     }
+    fn client_plane(&self) -> Option<Arc<dyn ClientPlane>> {
+        match self {
+            Lane::Direct(s) => s.client_plane(),
+            // A pumped lane only sees the ring; listener nodes always
+            // compile inline, so their plane is never behind a pump.
+            Lane::Pumped(_) => None,
+        }
+    }
 }
 
 /// The generalized driver under both [`run_topology`] (the legacy
@@ -825,6 +929,7 @@ pub(crate) fn run_nodes<S, P, K>(
     chunk_size: usize,
     driver: StreamDriver,
     adaptive: Option<AdaptiveRuntime>,
+    report_json: Option<ReportTarget>,
 ) -> Result<StreamReport>
 where
     S: EventSource,
@@ -840,6 +945,20 @@ where
     if route == RoutePolicy::Polarity && branches.len() != 2 {
         bail!("polarity routing requires exactly 2 sinks, got {}", branches.len());
     }
+    let emitter = match &report_json {
+        Some(target) => Some(Arc::new(ReportEmitter::open(target)?)),
+        None => None,
+    };
+    // `--report-json` without `--adaptive`: synthesize an empty
+    // controller list so the epoch clock still ticks and per-epoch
+    // lines flow (nothing is retuned).
+    let adaptive = match (adaptive, emitter.is_some()) {
+        (None, true) => Some(AdaptiveRuntime {
+            epoch_batches: DEFAULT_EPOCH_BATCHES,
+            controllers: Vec::new(),
+        }),
+        (adaptive, _) => adaptive,
+    };
     let t0 = Instant::now();
     let n = sources.len();
     let pump_errs: Vec<Mutex<Option<anyhow::Error>>> = (0..n).map(|_| Mutex::new(None)).collect();
@@ -858,14 +977,27 @@ where
                 let name = source.describe();
                 let (tx, rx) = sync_channel::<Vec<Event>>(PUMP_QUEUE_BATCHES);
                 let (err, waits, drops) = (&pump_errs[i], &pump_waits[i], &pump_drops[i]);
-                scope.spawn(move || pump(source, tx, err, waits, drops));
+                std::thread::Builder::new()
+                    .name(format!("src:{i}"))
+                    .spawn_scoped(scope, move || pump(source, tx, err, waits, drops))
+                    .expect("spawn source pump thread");
                 lanes.push(Lane::Pumped(ChannelSource { rx, err, res, known, live, name }));
             } else {
                 lanes.push(Lane::Direct(source));
             }
         }
         let mut merged = FusedSource::new(lanes, layout, chunk_size);
-        drive_and_report(&mut merged, shared, branches, route, driver, chunk_size, adaptive, t0)
+        drive_and_report(
+            &mut merged,
+            shared,
+            branches,
+            route,
+            driver,
+            chunk_size,
+            adaptive,
+            emitter,
+            t0,
+        )
         // `merged` (and with it every ring receiver) drops here, so any
         // pump still parked in a full-ring send unblocks before the
         // scope joins the threads.
@@ -876,7 +1008,9 @@ where
             return Err(e.context(format!("stream source {i} (thread)")));
         }
     }
-    for (i, node) in report.sources.iter_mut().enumerate() {
+    // Only the first `n` source reports are static lanes (dynamic
+    // client lanes append theirs after, and are never pumped).
+    for (i, node) in report.sources.iter_mut().enumerate().take(n) {
         if pumped[i] {
             node.backpressure_waits = pump_waits[i].load(Ordering::Relaxed);
             node.dropped = pump_drops[i].load(Ordering::Relaxed);
@@ -987,6 +1121,7 @@ pub fn run_topology_with_adaptive<S: EventSource, P: BatchProcessor, K: EventSin
         config.chunk_size,
         config.driver,
         adaptive,
+        None,
     )
 }
 
@@ -1004,6 +1139,7 @@ fn drive_and_report<S, P, K>(
     driver: StreamDriver,
     chunk_size: usize,
     adaptive: Option<AdaptiveRuntime>,
+    emitter: Option<Arc<ReportEmitter>>,
     t0: Instant,
 ) -> Result<StreamReport>
 where
@@ -1019,6 +1155,12 @@ where
     // "no gauge", and backpressure-keyed controllers must know that.
     let gauged = matches!(driver, StreamDriver::Coroutine { .. });
     let mut adaptor = adaptive.map(|rt| Adaptor::new(rt, chunk_size, gauged));
+    if let Some(adaptor) = adaptor.as_mut() {
+        adaptor.set_planes(merged.client_planes());
+        if let Some(emitter) = &emitter {
+            adaptor.set_emitter(emitter.clone());
+        }
+    }
     let outcome = match driver {
         StreamDriver::Sync => {
             drive_sync(merged, shared, &mut branches, &route, canvas, &sink_nodes, &mut adaptor)?
@@ -1074,7 +1216,7 @@ where
         report.dropped += summary.dropped;
         sink_reports.push(report);
     }
-    Ok(StreamReport {
+    let report = StreamReport {
         events_in: outcome.events_in,
         events_out: outcome.events_out,
         frames,
@@ -1091,7 +1233,11 @@ where
         merge_stalls_broken: merged.stalls_broken(),
         merge_late_events: merged.late_events(),
         adaptive: adaptor.map(Adaptor::finish),
-    })
+    };
+    if let Some(emitter) = &emitter {
+        emitter.emit_final(&report)?;
+    }
+    Ok(report)
 }
 
 /// Baseline driver: one loop, no overlap, any fan-out width.

@@ -120,6 +120,7 @@ fn run_graph_shape(
         chunk_size: 173,
         driver: StreamDriver::Coroutine { channel_capacity: 1 },
         adaptive: None,
+        report_json: None,
     };
     let report = builder.build().run(config).unwrap();
     let got = handles.iter().map(|h| h.lock().unwrap().clone()).collect();
@@ -214,6 +215,7 @@ fn cli_clauses_and_builder_yield_the_same_graph() {
         shard_threads,
         sink_threads,
         adaptive,
+        report_json,
     } = cli::parse(&args).unwrap()
     else {
         panic!("wrong parse");
@@ -227,6 +229,7 @@ fn cli_clauses_and_builder_yield_the_same_graph() {
         shard_threads,
         sink_threads,
         adaptive,
+        report_json,
     };
     let from_cli = lower_to_graph(inputs, spec, branches, &opts).unwrap();
 

@@ -1,0 +1,490 @@
+//! Serving-plane integration: the PR-6 acceptance criteria.
+//!
+//! * a `tcp-listen` topology serves 100+ concurrent loopback clients
+//!   with exactly-once delivery, per-client `NodeReport`s that sum to
+//!   the merge input, and merge memory bounded by `clients × window`;
+//! * clients attach mid-stream and abrupt disconnects (including a
+//!   torn word) end their lanes cleanly;
+//! * the AIMD client-window controller demonstrably shrinks windows
+//!   under a throttled sink, the history lands in
+//!   `StreamReport::adaptive` and in `--report-json` output, and
+//!   delivery stays fair (max/min accepted ratio ≤ 2);
+//! * the `subscribe` sink fans every delivery out to all consumers and
+//!   evicts a slow one instead of blocking the trunk;
+//! * HTTP `POST` ingest feeds the same plane.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use aestream::aer::{Event, Resolution};
+use aestream::coordinator::{run_graph, Sink, Source, TopologyOptions};
+use aestream::net::spif;
+use aestream::pipeline::PipelineSpec;
+use aestream::serve::{ClientHub, ListenerConfig, ListenerSource, SubscribeSink};
+use aestream::stream::{
+    AdaptiveConfig, ControllerKind, EventSink, GraphConfig, MemorySource, ReportTarget,
+    SinkSummary, StreamReport, Topology,
+};
+
+// ------------------------------------------------------------- helpers
+
+/// SPIF-over-TCP wire bytes for `events` (little-endian words).
+fn wire_bytes(events: &[Event]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(events.len() * 4);
+    for ev in events {
+        bytes.extend_from_slice(&spif::pack_word(ev).to_le_bytes());
+    }
+    bytes
+}
+
+/// `count` events all at column `x` (so the sink can attribute each
+/// delivered event to the client that sent it).
+fn column_events(x: u16, count: usize, height: u16) -> Vec<Event> {
+    (0..count).map(|j| Event::on(x, (j % height as usize) as u16, j as u64)).collect()
+}
+
+/// Spin until `cond` holds (serving-plane state is asynchronous).
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Close the hub once every expected client was admitted and has
+/// disconnected — the test-side stand-in for an operator's shutdown.
+fn shutdown_when_drained(hub: &Arc<ClientHub>, expected: u64) -> thread::JoinHandle<()> {
+    let hub = hub.clone();
+    thread::spawn(move || {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while (hub.admitted() < expected || hub.active_clients() > 0) && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(1));
+        }
+        hub.shutdown();
+    })
+}
+
+/// Per-column event counter, optionally throttled to simulate a slow
+/// downstream consumer (which is what makes the AIMD controller act).
+struct ColumnCountSink {
+    counts: Arc<Mutex<Vec<u64>>>,
+    delay: Duration,
+}
+
+impl ColumnCountSink {
+    fn new(columns: usize, delay: Duration) -> (Self, Arc<Mutex<Vec<u64>>>) {
+        let counts = Arc::new(Mutex::new(vec![0u64; columns]));
+        (ColumnCountSink { counts: counts.clone(), delay }, counts)
+    }
+}
+
+impl EventSink for ColumnCountSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        {
+            let mut counts = self.counts.lock().unwrap();
+            for ev in batch {
+                counts[ev.x as usize] += 1;
+            }
+        }
+        if !self.delay.is_zero() {
+            thread::sleep(self.delay);
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        Ok(SinkSummary::default())
+    }
+}
+
+fn client_reports(report: &StreamReport) -> Vec<&aestream::metrics::NodeReport> {
+    report.sources.iter().filter(|n| n.name.starts_with("client:")).collect()
+}
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("aestream-serve-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("report.jsonl")
+}
+
+// --------------------------------------------------------------- tests
+
+/// The headline acceptance test: 100 concurrent loopback clients, each
+/// its own merge lane, with exactly-once delivery and bounded memory.
+#[test]
+fn hundred_clients_stream_exactly_once_with_bounded_memory() {
+    const CLIENTS: usize = 100;
+    const PER_CLIENT: usize = 8_000;
+    // The reader's 16 KiB buffer caps wire batches at 4096 events, so
+    // a window of 4096 makes `clients × window` the true high-water
+    // mark for both the credit ledgers and the merge carries.
+    const WINDOW: usize = 4096;
+
+    let res = Resolution::new(128, 128);
+    let listener = ListenerSource::bind_tcp(
+        "127.0.0.1:0",
+        ListenerConfig::new(res).window(WINDOW).max_clients(CLIENTS + 8),
+    )
+    .unwrap();
+    let addr = listener.local_addr();
+    let hub = listener.hub();
+
+    let senders: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            thread::spawn(move || {
+                let bytes = wire_bytes(&column_events(i as u16, PER_CLIENT, res.height));
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.write_all(&bytes).unwrap();
+            })
+        })
+        .collect();
+    let supervisor = shutdown_when_drained(&hub, CLIENTS as u64);
+
+    let (sink, counts) = ColumnCountSink::new(res.width as usize, Duration::ZERO);
+    let report = Topology::builder()
+        .listen("net", listener)
+        .sink("out", sink)
+        .build()
+        .run(GraphConfig { chunk_size: 1024, ..Default::default() })
+        .unwrap();
+    for sender in senders {
+        sender.join().unwrap();
+    }
+    supervisor.join().unwrap();
+
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(report.events_in, total, "merge lost or duplicated events");
+    assert_eq!(report.merge_dropped, 0);
+    let counts = counts.lock().unwrap();
+    for (x, &n) in counts.iter().enumerate().take(CLIENTS) {
+        assert_eq!(n, PER_CLIENT as u64, "client {x} was not delivered exactly once");
+    }
+    assert_eq!(counts.iter().sum::<u64>(), total);
+
+    let clients = client_reports(&report);
+    assert_eq!(clients.len(), CLIENTS, "every client publishes a NodeReport");
+    for node in &clients {
+        assert_eq!(node.events, PER_CLIENT as u64, "{} is off", node.name);
+    }
+    assert_eq!(clients.iter().map(|n| n.events).sum::<u64>(), report.events_in);
+
+    // Bounded memory: the whole 800k-event stream never piles up — the
+    // merge's reorder depth stays under clients × window.
+    assert!(
+        report.merge_peak_buffered <= CLIENTS * WINDOW,
+        "merge buffered {} events, over the {} bound",
+        report.merge_peak_buffered,
+        CLIENTS * WINDOW,
+    );
+    assert_eq!(hub.admitted(), CLIENTS as u64);
+    assert_eq!(hub.refused(), 0);
+}
+
+/// Clients may attach while the merge is already running, and an
+/// abrupt disconnect — even mid-word — ends the lane cleanly.
+#[test]
+fn clients_attach_mid_stream_and_abrupt_disconnects_are_clean() {
+    let res = Resolution::new(64, 64);
+    let listener =
+        ListenerSource::bind_tcp("127.0.0.1:0", ListenerConfig::new(res).max_clients(8)).unwrap();
+    let addr = listener.local_addr();
+    let hub = listener.hub();
+
+    let control = {
+        let hub = hub.clone();
+        thread::spawn(move || {
+            // First client connects and stays attached...
+            let mut first = TcpStream::connect(addr).unwrap();
+            first.write_all(&wire_bytes(&column_events(1, 100, res.height))).unwrap();
+            wait_until("first client admitted", || hub.admitted() >= 1);
+            // ...while a second attaches mid-stream and leaves.
+            let mut second = TcpStream::connect(addr).unwrap();
+            second.write_all(&wire_bytes(&column_events(2, 100, res.height))).unwrap();
+            drop(second);
+            // A third sends one complete word plus half of another and
+            // vanishes: the torn tail must be discarded, not crash.
+            let mut torn = TcpStream::connect(addr).unwrap();
+            let mut bytes = wire_bytes(&column_events(3, 1, res.height));
+            bytes.extend_from_slice(&[0xAA, 0xBB]);
+            torn.write_all(&bytes).unwrap();
+            drop(torn);
+            wait_until("all three admitted", || hub.admitted() >= 3);
+            drop(first);
+        })
+    };
+    let supervisor = shutdown_when_drained(&hub, 3);
+
+    let (sink, counts) = ColumnCountSink::new(res.width as usize, Duration::ZERO);
+    let report = Topology::builder()
+        .listen("net", listener)
+        .sink("out", sink)
+        .build()
+        .run(GraphConfig { chunk_size: 256, ..Default::default() })
+        .unwrap();
+    control.join().unwrap();
+    supervisor.join().unwrap();
+
+    assert_eq!(report.events_in, 201, "100 + 100 + the torn client's one whole word");
+    let counts = counts.lock().unwrap();
+    assert_eq!((counts[1], counts[2], counts[3]), (100, 100, 1));
+    assert_eq!(client_reports(&report).len(), 3);
+    assert_eq!(hub.disconnected(), 3);
+}
+
+/// Under a throttled sink the AIMD controller shrinks per-client
+/// windows; the change history reaches both `StreamReport::adaptive`
+/// and the `--report-json` stream, and delivery stays fair.
+#[test]
+fn aimd_shrinks_windows_under_a_throttled_sink_and_reports_history() {
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 40_960;
+
+    let res = Resolution::new(64, 64);
+    let listener = ListenerSource::bind_tcp(
+        "127.0.0.1:0",
+        ListenerConfig::new(res).window(256).max_clients(CLIENTS),
+    )
+    .unwrap();
+    let addr = listener.local_addr();
+    let hub = listener.hub();
+
+    let senders: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            thread::spawn(move || {
+                let bytes = wire_bytes(&column_events(i as u16, PER_CLIENT, res.height));
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.write_all(&bytes).unwrap();
+            })
+        })
+        .collect();
+    let supervisor = shutdown_when_drained(&hub, CLIENTS as u64);
+
+    let path = temp_path("aimd");
+    let (sink, _counts) = ColumnCountSink::new(res.width as usize, Duration::from_millis(2));
+    let report = Topology::builder()
+        .listen("net", listener)
+        .sink("out", sink)
+        .build()
+        .run(GraphConfig {
+            chunk_size: 4096,
+            adaptive: Some(AdaptiveConfig::new(vec![ControllerKind::ClientWindow]).with_epoch(8)),
+            report_json: Some(ReportTarget::File(path.clone())),
+            ..Default::default()
+        })
+        .unwrap();
+    for sender in senders {
+        sender.join().unwrap();
+    }
+    supervisor.join().unwrap();
+
+    assert_eq!(report.events_in, (CLIENTS * PER_CLIENT) as u64);
+    let adaptive = report.adaptive.as_ref().expect("adaptive history");
+    assert!(adaptive.epochs > 0);
+    assert!(
+        adaptive.window_changes.iter().any(|c| c.to < c.from),
+        "AIMD never shrank a window despite a throttled sink: {:?}",
+        adaptive.window_changes,
+    );
+    for change in &adaptive.window_changes {
+        assert!(change.client.starts_with("client:"), "change on {:?}", change.client);
+    }
+
+    // Fairness: equal-rate clients end within 2× of each other.
+    let clients = client_reports(&report);
+    assert_eq!(clients.len(), CLIENTS);
+    let max = clients.iter().map(|n| n.events).max().unwrap();
+    let min = clients.iter().map(|n| n.events).min().unwrap();
+    assert!(min > 0 && max <= 2 * min, "unfair delivery: max {max} vs min {min}");
+
+    // The same history streamed as JSON lines while the run was live.
+    let json = std::fs::read_to_string(&path).unwrap();
+    assert!(json.lines().any(|l| l.starts_with("{\"type\":\"epoch\"")), "no epoch lines");
+    assert!(json.contains("\"window\":"), "epoch lines carry client windows");
+    let last = json.lines().last().unwrap();
+    assert!(last.starts_with("{\"type\":\"final\""), "final report line missing");
+    assert!(last.contains("\"window_changes\":[{\"epoch\":"), "history absent from final line");
+}
+
+/// The subscribe sink fans every delivery to all consumers, and a
+/// consumer that stops reading is evicted instead of stalling the rest.
+#[test]
+fn subscribers_fan_out_and_slow_consumers_are_evicted() {
+    // Fan-out: two consumers each receive the full byte-exact stream.
+    let res = Resolution::new(64, 64);
+    let events: Vec<Event> =
+        (0..5_000u16).map(|j| Event::on(j % 64, (j / 64) % 64, u64::from(j))).collect();
+    let sink = SubscribeSink::bind("127.0.0.1:0").unwrap();
+    let addr = sink.local_addr();
+    let mut consumers = [TcpStream::connect(addr).unwrap(), TcpStream::connect(addr).unwrap()];
+    wait_until("both subscribers attached", || sink.subscriber_count() == 2);
+
+    let report = Topology::builder()
+        .source("mem", MemorySource::new(events.clone(), res, 512))
+        .sink("out", sink)
+        .build()
+        .run(GraphConfig { chunk_size: 512, ..Default::default() })
+        .unwrap();
+    assert_eq!(report.events_out, events.len() as u64);
+
+    let expected = wire_bytes(&events);
+    for consumer in &mut consumers {
+        let mut got = Vec::new();
+        consumer.read_to_end(&mut got).unwrap();
+        assert_eq!(got, expected, "subscriber missed or reordered deliveries");
+    }
+
+    // Eviction: one consumer never reads; a healthy one keeps going.
+    let mut sink = SubscribeSink::bind("127.0.0.1:0").unwrap();
+    let addr = sink.local_addr();
+    let stuck = TcpStream::connect(addr).unwrap();
+    let healthy = TcpStream::connect(addr).unwrap();
+    wait_until("both subscribers attached", || sink.subscriber_count() == 2);
+    let drainer = thread::spawn(move || {
+        let mut healthy = healthy;
+        let mut total = 0usize;
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match healthy.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => total += n,
+            }
+        }
+        total
+    });
+
+    let batch = column_events(5, 4096, res.height);
+    let payload = batch.len() * 4;
+    for _ in 0..5_000 {
+        sink.consume(&batch).unwrap();
+        if sink.evictions() == 1 {
+            break;
+        }
+        // Pace the trunk so the healthy drainer keeps up: eviction must
+        // single out the consumer that actually stopped reading.
+        thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(sink.evictions(), 1, "the stuck consumer was never evicted");
+    assert_eq!(sink.subscriber_count(), 1, "the healthy consumer must survive");
+    let summary = sink.finish().unwrap();
+    assert!(summary.dropped > 0, "evicted consumer's missed deliveries are counted");
+    drop(sink);
+
+    let drained = drainer.join().unwrap();
+    assert!(drained > 0 && drained % payload == 0, "healthy consumer saw torn frames");
+    drop(stuck);
+}
+
+/// HTTP `POST` ingest rides the same hub: framed words in, a JSON
+/// accept count out, out-of-canvas events filtered at the door.
+#[test]
+fn http_post_ingest_feeds_the_graph() {
+    let res = Resolution::new(64, 64);
+    let listener =
+        ListenerSource::bind_http("127.0.0.1:0", ListenerConfig::new(res).max_clients(4)).unwrap();
+    let addr = listener.local_addr();
+    let hub = listener.hub();
+
+    let poster = thread::spawn(move || {
+        let mut body = wire_bytes(&column_events(7, 10, res.height));
+        // Two events off the 64×64 canvas: filtered, not accepted.
+        body.extend_from_slice(&wire_bytes(&[Event::on(200, 1, 0), Event::on(201, 1, 0)]));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let head = format!(
+            "POST /events HTTP/1.1\r\nHost: t\r\ncontent-length: {}\r\n\r\n",
+            body.len()
+        );
+        stream.write_all(head.as_bytes()).unwrap();
+        stream.write_all(&body).unwrap();
+        let mut response = Vec::new();
+        let mut buf = [0u8; 1024];
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !response.ends_with(b"}\n") && Instant::now() < deadline {
+            match stream.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => response.extend_from_slice(&buf[..n]),
+            }
+        }
+        String::from_utf8_lossy(&response).into_owned()
+    });
+    let supervisor = shutdown_when_drained(&hub, 1);
+
+    let (sink, counts) = ColumnCountSink::new(res.width as usize, Duration::ZERO);
+    let report = Topology::builder()
+        .listen("net", listener)
+        .sink("out", sink)
+        .build()
+        .run(GraphConfig { chunk_size: 64, ..Default::default() })
+        .unwrap();
+    let response = poster.join().unwrap();
+    supervisor.join().unwrap();
+
+    assert!(response.starts_with("HTTP/1.1 200 OK"), "bad response: {response:?}");
+    assert!(response.contains("{\"accepted\":10}"), "bad response: {response:?}");
+    assert_eq!(report.events_in, 10);
+    assert_eq!(counts.lock().unwrap()[7], 10);
+    let clients = client_reports(&report);
+    assert_eq!(clients.len(), 1);
+    assert!(clients[0].name.starts_with("http:"), "HTTP lanes are named http:N");
+}
+
+/// The coordinator lowers `input tcp-listen` clauses to listener graph
+/// nodes end to end (bind, serve, idle-timeout shutdown, report).
+#[test]
+fn coordinator_lowers_tcp_listen_clauses_end_to_end() {
+    // Probe a free port: the listener binds inside `run_graph`, so the
+    // address must be known to the client beforehand.
+    let port = std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port();
+    let bind = format!("127.0.0.1:{port}");
+    let res = Resolution::new(64, 64);
+    let config = ListenerConfig::new(res).idle_timeout(Duration::from_millis(800));
+
+    let runner = thread::spawn(move || {
+        run_graph(
+            vec![Source::TcpListen { bind, config }.into()],
+            PipelineSpec::new(),
+            vec![Sink::Null.into()],
+            TopologyOptions::default(),
+        )
+        .unwrap()
+    });
+
+    // The listener may not be up yet: retry the connect briefly.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut stream = loop {
+        match TcpStream::connect((std::net::Ipv4Addr::LOCALHOST, port)) {
+            Ok(stream) => break stream,
+            Err(err) => {
+                assert!(Instant::now() < deadline, "listener never came up: {err}");
+                thread::sleep(Duration::from_millis(5));
+            }
+        }
+    };
+    stream.write_all(&wire_bytes(&column_events(9, 100, res.height))).unwrap();
+    drop(stream);
+
+    let report = runner.join().unwrap();
+    assert_eq!(report.events_in, 100);
+    assert_eq!(report.sinks.len(), 1);
+    assert_eq!(report.sinks[0].events, 100);
+    assert_eq!(client_reports(&report).len(), 1);
+}
+
+/// Keep the helper honest: a `SocketAddr` round-trips through the
+/// senders unchanged (guards against accidental v6/v4 mixups when the
+/// tests are edited).
+#[test]
+fn loopback_binds_resolve_to_ipv4() {
+    let listener =
+        ListenerSource::bind_tcp("127.0.0.1:0", ListenerConfig::new(Resolution::new(8, 8)))
+            .unwrap();
+    let addr: SocketAddr = listener.local_addr();
+    assert!(addr.ip().is_loopback());
+    listener.hub().shutdown();
+}
