@@ -6,6 +6,14 @@
 //! reading from disk. The packed `raw` format is the one the Fig. 3
 //! benchmark caches in RAM.
 //!
+//! Besides the human table, emits one JSON object per (format, op) in
+//! the same line-oriented schema as `stream_pipeline` — `events_per_sec`
+//! plus `bytes_moved_per_event` (wire bytes read or written per event,
+//! which is what the decode loop physically moves) — so the two benches'
+//! outputs concatenate into one scrapeable artifact. Built with
+//! `--features simd`, the decode rows exercise the SSE2 word kernels in
+//! `formats::simd`; the default build measures the scalar loops.
+//!
 //! Run: `cargo bench --bench codec_throughput`
 
 use aestream::aer::Resolution;
@@ -24,10 +32,12 @@ fn main() {
     let mut table = Table::new(&[
         "format", "encode", "decode", "bytes/event", "encode ev/s", "decode ev/s",
     ]);
+    let mut json_lines = Vec::new();
     for format in Format::ALL {
         let codec = format.codec();
         let mut encoded = Vec::new();
         codec.encode(&events, res, &mut encoded).unwrap();
+        let wire_bpe = encoded.len() as f64 / n as f64;
 
         let enc = measure(1, samples, || {
             let mut buf = Vec::with_capacity(encoded.len());
@@ -42,12 +52,27 @@ fn main() {
             format.to_string(),
             format!("{:.1}ms", enc.mean_s * 1e3),
             format!("{:.1}ms", dec.mean_s * 1e3),
-            format!("{:.2}", encoded.len() as f64 / n as f64),
+            format!("{wire_bpe:.2}"),
             fmt_rate(enc.throughput(n as u64), "ev/s"),
             fmt_rate(dec.throughput(n as u64), "ev/s"),
         ]);
+        for (op, stats) in [("encode", &enc), ("decode", &dec)] {
+            json_lines.push(format!(
+                "{{\"name\":\"{format}-{op}\",\"chunk\":{n},\"mean_s\":{:.6},\
+                 \"std_s\":{:.6},\"min_s\":{:.6},\"throughput_ev_s\":{:.0},\
+                 \"events_per_sec\":{:.0},\"bytes_moved_per_event\":{wire_bpe:.3}}}",
+                stats.mean_s,
+                stats.std_s,
+                stats.min_s,
+                stats.throughput(n as u64),
+                stats.throughput(n as u64),
+            ));
+        }
     }
     println!("{}", table.render());
     println!("raw (packed u64) is the RAM-cache format of the Fig. 3 bench;");
-    println!("EVT3 trades decode state for the smallest structured-scene wire size.");
+    println!("EVT3 trades decode state for the smallest structured-scene wire size.\n");
+    for line in &json_lines {
+        println!("{line}");
+    }
 }

@@ -12,14 +12,15 @@
 //! A CD word's full timestamp is `(time_high << 6) | t_low` microseconds;
 //! the decoder is a small state machine over `time_high`, which is what
 //! makes EVT2 interesting for the codec-throughput ablation (state
-//! dependence defeats naive vectorization; the hot decode loop is still
-//! branch-light).
+//! dependence defeats naive vectorization; the hot decode loop lives in
+//! [`super::simd`], where the `simd` feature adds a block kernel over
+//! runs of CD words between state words).
 
 use std::io::{Read, Write};
 
 use anyhow::{bail, Result};
 
-use crate::aer::{Event, Polarity, Resolution};
+use crate::aer::{Event, Resolution};
 
 use super::EventCodec;
 
@@ -79,25 +80,7 @@ impl EventCodec for Evt2 {
         }
         let mut events = Vec::with_capacity(body.len() / 4);
         let mut time_high: Option<u64> = None;
-        for word in body.chunks_exact(4) {
-            let w = u32::from_le_bytes(word.try_into().unwrap());
-            match w >> 28 {
-                TYPE_TIME_HIGH => time_high = Some((w & 0x0FFF_FFFF) as u64),
-                ty @ (TYPE_CD_OFF | TYPE_CD_ON) => {
-                    let Some(th) = time_high else {
-                        bail!("evt2: CD word before any TIME_HIGH");
-                    };
-                    events.push(Event {
-                        t: (th << 6) | ((w >> 22) & 0x3F) as u64,
-                        x: ((w >> 11) & 0x7FF) as u16,
-                        y: (w & 0x7FF) as u16,
-                        p: Polarity::from_bool(ty == TYPE_CD_ON),
-                    });
-                }
-                TYPE_EXT_TRIGGER => {} // triggers carry no CD payload
-                _ => {}                // forward-compatible: ignore unknown types
-            }
-        }
+        super::simd::decode_evt2_words(body, &mut time_high, &mut events)?;
         let res = res.unwrap_or_else(|| super::bounding_resolution(&events));
         Ok((events, res))
     }

@@ -20,7 +20,10 @@
 //! magic bytes, and [`read_events_auto`] is the "open anything" helper
 //! the CLI uses. For O(chunk)-memory streaming I/O, [`streaming`]
 //! wraps every codec in an incremental decoder/encoder pair used by
-//! the [`crate::stream`] sources and sinks.
+//! the [`crate::stream`] sources and sinks. The per-word decode loops
+//! for the packed binary formats live in [`simd`], shared by the batch
+//! and streaming decoders, with explicit SSE2 fast paths behind the
+//! `simd` cargo feature.
 
 pub mod aedat;
 pub mod aedat2;
@@ -28,6 +31,7 @@ pub mod dat;
 pub mod evt2;
 pub mod evt3;
 pub mod raw;
+pub mod simd;
 pub mod streaming;
 pub mod text;
 

@@ -3,7 +3,8 @@
 //!
 //! This is the format the benchmarks cache in RAM — zero parsing state,
 //! one `u64` load + bit masks per event, and the decoder is a straight
-//! `memcpy`-shaped loop the compiler vectorizes.
+//! `memcpy`-shaped loop ([`super::simd::decode_raw_words`], unrolled so
+//! the compiler vectorizes it).
 //!
 //! Layout:
 //! ```text
@@ -66,10 +67,7 @@ impl EventCodec for RawPacked {
             bail!("raw: body length {} not a multiple of 8", body.len());
         }
         let mut events = Vec::with_capacity(body.len() / 8);
-        for word in body.chunks_exact(8) {
-            let w = u64::from_le_bytes(word.try_into().unwrap());
-            events.push(packed::unpack(w));
-        }
+        super::simd::decode_raw_words(&body, &mut events);
         Ok((events, Resolution::new(width, height)))
     }
 }

@@ -1,0 +1,419 @@
+//! Shared word-level decoders for the packed binary formats, with
+//! optional explicit-SIMD fast paths.
+//!
+//! The batch codecs ([`super::raw`], [`super::evt2`], [`super::evt3`])
+//! and the incremental [`super::streaming`] decoder used to each carry
+//! their own copy of the per-word decode loop. This module is the single
+//! home for those loops, so the hot path is written (and vectorized)
+//! once:
+//!
+//! * **Raw** is stateless — one `u64` load plus a shift/mask ladder per
+//!   event. The loop is four-way unrolled straight-line code the
+//!   compiler auto-vectorizes; no explicit intrinsics are needed.
+//! * **EVT2** and **EVT3** are state machines, which defeats naive
+//!   vectorization — but real streams are dominated by long runs of
+//!   *event* words (CD words in EVT2, `ADDR_X` words in EVT3) between
+//!   sparse state words. The `simd` feature adds SSE2 kernels that
+//!   classify a whole block of words at once: if every word in the
+//!   block is an event word, its fields are extracted lane-parallel
+//!   with the current state applied uniformly; otherwise the block
+//!   falls back to the scalar machine one word at a time, preserving
+//!   exact state and error semantics.
+//!
+//! The scalar decoders are always compiled (and are the only path on
+//! non-x86_64 targets or without the `simd` feature); the equivalence
+//! tests here and in `rust/tests/streaming_formats.rs` fuzz-compare the
+//! two word-for-word, including at word-splitting chunk boundaries.
+
+use anyhow::{bail, Result};
+
+use crate::aer::{packed, Event, Polarity};
+
+use super::{evt2, evt3};
+
+/// The EVT3 decoder state machine (the batch decoder's local variables,
+/// lifted into a struct so it survives chunk breaks in the streaming
+/// decoder).
+#[derive(Debug, Clone)]
+pub struct Evt3State {
+    y: u16,
+    time_low: u64,
+    time_high: u64,
+    time_epoch: u64,
+    have_time: bool,
+    vect_base_x: u16,
+    vect_pol: Polarity,
+}
+
+impl Default for Evt3State {
+    fn default() -> Self {
+        Evt3State {
+            y: 0,
+            time_low: 0,
+            time_high: 0,
+            time_epoch: 0,
+            have_time: false,
+            vect_base_x: 0,
+            vect_pol: Polarity::Off,
+        }
+    }
+}
+
+impl Evt3State {
+    /// The full 64-bit timestamp of the current time state.
+    #[inline]
+    fn t(&self) -> u64 {
+        self.time_epoch | (self.time_high << 12) | self.time_low
+    }
+}
+
+// ---------------------------------------------------------------- raw
+
+/// Decode complete packed-raw words (`bytes.len()` must be a multiple
+/// of 8) into events. Stateless and infallible: every 64-bit pattern is
+/// a valid packed event.
+pub fn decode_raw_words(bytes: &[u8], out: &mut Vec<Event>) {
+    debug_assert_eq!(bytes.len() % 8, 0);
+    out.reserve(bytes.len() / 8);
+    // Four independent unpacks per iteration: no cross-word state, so
+    // the shift/mask ladder is straight-line code the compiler turns
+    // into vector loads and shuffles.
+    let mut blocks = bytes.chunks_exact(32);
+    for block in &mut blocks {
+        let w0 = u64::from_le_bytes(block[0..8].try_into().unwrap());
+        let w1 = u64::from_le_bytes(block[8..16].try_into().unwrap());
+        let w2 = u64::from_le_bytes(block[16..24].try_into().unwrap());
+        let w3 = u64::from_le_bytes(block[24..32].try_into().unwrap());
+        out.push(packed::unpack(w0));
+        out.push(packed::unpack(w1));
+        out.push(packed::unpack(w2));
+        out.push(packed::unpack(w3));
+    }
+    decode_raw_words_scalar(blocks.remainder(), out);
+}
+
+/// Plain one-word-at-a-time reference decoder for packed raw.
+pub fn decode_raw_words_scalar(bytes: &[u8], out: &mut Vec<Event>) {
+    debug_assert_eq!(bytes.len() % 8, 0);
+    for word in bytes.chunks_exact(8) {
+        out.push(packed::unpack(u64::from_le_bytes(word.try_into().unwrap())));
+    }
+}
+
+// --------------------------------------------------------------- evt2
+
+/// Decode complete EVT2 words (`bytes.len()` must be a multiple of 4),
+/// carrying the `TIME_HIGH` state across calls.
+pub fn decode_evt2_words(
+    bytes: &[u8],
+    time_high: &mut Option<u64>,
+    out: &mut Vec<Event>,
+) -> Result<()> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        let mut off = 0;
+        while off + 16 <= bytes.len() {
+            if x86::evt2_block4(&bytes[off..off + 16], *time_high, out) {
+                off += 16;
+            } else {
+                // The block holds a state word (TIME_HIGH, trigger, or
+                // an unknown type) or no TIME_HIGH has been seen yet:
+                // run the scalar machine for one word — which may
+                // update the state or bail — then retry SIMD.
+                decode_evt2_words_scalar(&bytes[off..off + 4], time_high, out)?;
+                off += 4;
+            }
+        }
+        return decode_evt2_words_scalar(&bytes[off..], time_high, out);
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    decode_evt2_words_scalar(bytes, time_high, out)
+}
+
+/// Scalar reference EVT2 word decoder (always compiled; the SIMD path
+/// is fuzz-compared against it word-for-word).
+pub fn decode_evt2_words_scalar(
+    bytes: &[u8],
+    time_high: &mut Option<u64>,
+    out: &mut Vec<Event>,
+) -> Result<()> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    for word in bytes.chunks_exact(4) {
+        let w = u32::from_le_bytes(word.try_into().unwrap());
+        match w >> 28 {
+            evt2::TYPE_TIME_HIGH => *time_high = Some((w & 0x0FFF_FFFF) as u64),
+            ty @ (evt2::TYPE_CD_OFF | evt2::TYPE_CD_ON) => {
+                let Some(th) = *time_high else {
+                    bail!("evt2: CD word before any TIME_HIGH");
+                };
+                out.push(Event {
+                    t: (th << 6) | ((w >> 22) & 0x3F) as u64,
+                    x: ((w >> 11) & 0x7FF) as u16,
+                    y: (w & 0x7FF) as u16,
+                    p: Polarity::from_bool(ty == evt2::TYPE_CD_ON),
+                });
+            }
+            evt2::TYPE_EXT_TRIGGER => {} // triggers carry no CD payload
+            _ => {}                      // forward-compatible: ignore unknown types
+        }
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- evt3
+
+/// Decode complete EVT3 words (`bytes.len()` must be a multiple of 2),
+/// advancing the state machine across calls.
+pub fn decode_evt3_words(bytes: &[u8], st: &mut Evt3State, out: &mut Vec<Event>) -> Result<()> {
+    debug_assert_eq!(bytes.len() % 2, 0);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        let mut off = 0;
+        while off + 16 <= bytes.len() {
+            // ADDR_X words read the (y, time) state but never modify
+            // it, so a block of eight decodes with one shared (t, y).
+            let consumed =
+                st.have_time && x86::evt3_block8(&bytes[off..off + 16], st.t(), st.y, out);
+            if consumed {
+                off += 16;
+            } else {
+                decode_evt3_words_scalar(&bytes[off..off + 2], st, out)?;
+                off += 2;
+            }
+        }
+        return decode_evt3_words_scalar(&bytes[off..], st, out);
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    decode_evt3_words_scalar(bytes, st, out)
+}
+
+/// Scalar reference EVT3 word decoder (always compiled; the SIMD path
+/// is fuzz-compared against it word-for-word).
+pub fn decode_evt3_words_scalar(
+    bytes: &[u8],
+    st: &mut Evt3State,
+    out: &mut Vec<Event>,
+) -> Result<()> {
+    debug_assert_eq!(bytes.len() % 2, 0);
+    for wbytes in bytes.chunks_exact(2) {
+        let w = u16::from_le_bytes(wbytes.try_into().unwrap());
+        let payload = w & 0x0FFF;
+        match w >> 12 {
+            evt3::TY_ADDR_Y => st.y = payload & 0x7FF,
+            evt3::TY_TIME_HIGH => {
+                let new_high = payload as u64;
+                if st.have_time && new_high < st.time_high {
+                    st.time_epoch += 1 << 24; // 24-bit rollover
+                }
+                st.time_high = new_high;
+                st.time_low = 0;
+                st.have_time = true;
+            }
+            evt3::TY_TIME_LOW => {
+                st.time_low = payload as u64;
+                st.have_time = true;
+            }
+            evt3::TY_ADDR_X => {
+                if !st.have_time {
+                    bail!("evt3: CD word before any time word");
+                }
+                out.push(Event {
+                    t: st.t(),
+                    x: payload & 0x7FF,
+                    y: st.y,
+                    p: Polarity::from_bool(payload & 0x800 != 0),
+                });
+            }
+            evt3::TY_VECT_BASE_X => {
+                st.vect_base_x = payload & 0x7FF;
+                st.vect_pol = Polarity::from_bool(payload & 0x800 != 0);
+            }
+            evt3::TY_VECT_12 | evt3::TY_VECT_8 => {
+                if !st.have_time {
+                    bail!("evt3: vector word before any time word");
+                }
+                let width = if w >> 12 == evt3::TY_VECT_12 { 12 } else { 8 };
+                let t = st.t();
+                let mut mask = payload & ((1u16 << width) - 1);
+                while mask != 0 {
+                    let bit = mask.trailing_zeros() as u16;
+                    out.push(Event { t, x: st.vect_base_x + bit, y: st.y, p: st.vect_pol });
+                    mask &= mask - 1;
+                }
+                // Per spec the base advances past the vector window.
+                st.vect_base_x += width;
+            }
+            _ => {} // EXT_TRIGGER, OTHERS, CONTINUED: skipped
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------- SSE2 kernels
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    //! SSE2 block kernels. SSE2 is baseline on x86_64, so there is no
+    //! runtime feature detection: the kernels compile whenever the
+    //! `simd` feature targets x86_64.
+
+    use core::arch::x86_64::*;
+
+    use crate::aer::{Event, Polarity};
+    use crate::formats::evt3;
+
+    /// Decode a 16-byte block of four EVT2 words iff all four are CD
+    /// events. Returns `true` when the block was consumed.
+    #[inline]
+    pub(super) fn evt2_block4(block: &[u8], time_high: Option<u64>, out: &mut Vec<Event>) -> bool {
+        debug_assert_eq!(block.len(), 16);
+        let Some(th) = time_high else {
+            return false; // a CD word here must error: scalar handles it
+        };
+        unsafe {
+            let v = _mm_loadu_si128(block.as_ptr() as *const __m128i);
+            // CD words are exactly the types 0x0/0x1, i.e. the whole
+            // word is < 0x2000_0000 *unsigned*. SSE2 only compares
+            // signed, so bias both sides by 2^31 (XOR with `i32::MIN`
+            // turns an unsigned order into a signed one).
+            let bias = _mm_set1_epi32(i32::MIN);
+            let lim = _mm_set1_epi32(0x2000_0000u32 as i32 ^ i32::MIN);
+            let cd = _mm_cmplt_epi32(_mm_xor_si128(v, bias), lim);
+            if _mm_movemask_epi8(cd) != 0xFFFF {
+                return false;
+            }
+            // All four lanes are CD: extract every field lane-parallel.
+            let t6 = _mm_and_si128(_mm_srli_epi32::<22>(v), _mm_set1_epi32(0x3F));
+            let xs = _mm_and_si128(_mm_srli_epi32::<11>(v), _mm_set1_epi32(0x7FF));
+            let ys = _mm_and_si128(v, _mm_set1_epi32(0x7FF));
+            let ps = _mm_srli_epi32::<28>(v); // 0x0 = OFF, 0x1 = ON
+            let mut t6a = [0u32; 4];
+            let mut xsa = [0u32; 4];
+            let mut ysa = [0u32; 4];
+            let mut psa = [0u32; 4];
+            _mm_storeu_si128(t6a.as_mut_ptr() as *mut __m128i, t6);
+            _mm_storeu_si128(xsa.as_mut_ptr() as *mut __m128i, xs);
+            _mm_storeu_si128(ysa.as_mut_ptr() as *mut __m128i, ys);
+            _mm_storeu_si128(psa.as_mut_ptr() as *mut __m128i, ps);
+            for i in 0..4 {
+                out.push(Event {
+                    t: (th << 6) | t6a[i] as u64,
+                    x: xsa[i] as u16,
+                    y: ysa[i] as u16,
+                    p: Polarity::from_bool(psa[i] == 1),
+                });
+            }
+        }
+        true
+    }
+
+    /// Decode a 16-byte block of eight EVT3 words iff all eight are
+    /// `ADDR_X` events (which read but never modify the decoder state,
+    /// so the shared `(t, y)` applies to the whole block). The caller
+    /// guarantees `have_time`. Returns `true` when consumed.
+    #[inline]
+    pub(super) fn evt3_block8(block: &[u8], t: u64, y: u16, out: &mut Vec<Event>) -> bool {
+        debug_assert_eq!(block.len(), 16);
+        unsafe {
+            let v = _mm_loadu_si128(block.as_ptr() as *const __m128i);
+            let ty = _mm_srli_epi16::<12>(v);
+            let addr_x = _mm_cmpeq_epi16(ty, _mm_set1_epi16(evt3::TY_ADDR_X as i16));
+            if _mm_movemask_epi8(addr_x) != 0xFFFF {
+                return false;
+            }
+            let xs = _mm_and_si128(v, _mm_set1_epi16(0x7FF));
+            let ps = _mm_and_si128(_mm_srli_epi16::<11>(v), _mm_set1_epi16(1));
+            let mut xsa = [0u16; 8];
+            let mut psa = [0u16; 8];
+            _mm_storeu_si128(xsa.as_mut_ptr() as *mut __m128i, xs);
+            _mm_storeu_si128(psa.as_mut_ptr() as *mut __m128i, ps);
+            for i in 0..8 {
+                out.push(Event {
+                    t,
+                    x: xsa[i],
+                    y,
+                    p: Polarity::from_bool(psa[i] == 1),
+                });
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aer::Resolution;
+    use crate::formats::{EventCodec, Format};
+    use crate::testutil::synthetic_events_seeded;
+
+    /// Encode events in `format`, strip the header, return body bytes.
+    fn body_bytes(format: Format, events: &[Event]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        format.codec().encode(events, Resolution::new(640, 480), &mut buf).unwrap();
+        let (_, body) = crate::formats::evt2::split_percent_header(&buf);
+        match format {
+            Format::Raw => buf[16..].to_vec(),
+            _ => body.to_vec(),
+        }
+    }
+
+    #[test]
+    fn evt2_dispatch_matches_scalar() {
+        let events = synthetic_events_seeded(4000, 640, 480, 0x51D);
+        let body = body_bytes(Format::Evt2, &events);
+        let (mut fast, mut slow) = (Vec::new(), Vec::new());
+        let (mut th_f, mut th_s) = (None, None);
+        decode_evt2_words(&body, &mut th_f, &mut fast).unwrap();
+        decode_evt2_words_scalar(&body, &mut th_s, &mut slow).unwrap();
+        assert_eq!(fast, slow);
+        assert_eq!(th_f, th_s);
+        assert_eq!(fast, events);
+    }
+
+    #[test]
+    fn evt3_dispatch_matches_scalar() {
+        let events = synthetic_events_seeded(4000, 640, 480, 0xE3);
+        let body = body_bytes(Format::Evt3, &events);
+        let (mut fast, mut slow) = (Vec::new(), Vec::new());
+        let (mut st_f, mut st_s) = (Evt3State::default(), Evt3State::default());
+        decode_evt3_words(&body, &mut st_f, &mut fast).unwrap();
+        decode_evt3_words_scalar(&body, &mut st_s, &mut slow).unwrap();
+        assert_eq!(fast, slow);
+        assert_eq!(fast, events);
+    }
+
+    #[test]
+    fn raw_unrolled_matches_scalar() {
+        let events = synthetic_events_seeded(1003, 640, 480, 0xAE);
+        let body = body_bytes(Format::Raw, &events);
+        let (mut fast, mut slow) = (Vec::new(), Vec::new());
+        decode_raw_words(&body, &mut fast);
+        decode_raw_words_scalar(&body, &mut slow);
+        assert_eq!(fast, slow);
+        assert_eq!(fast, events);
+    }
+
+    #[test]
+    fn evt2_cd_before_time_high_errors_in_both_paths() {
+        let cd = ((evt2::TYPE_CD_ON << 28) | (5 << 22) | (3 << 11) | 4u32).to_le_bytes();
+        // Four CD words: enough to make a full SIMD block.
+        let body: Vec<u8> = cd.iter().copied().cycle().take(16).collect();
+        for decode in [decode_evt2_words, decode_evt2_words_scalar] {
+            let err = decode(&body, &mut None, &mut Vec::new()).unwrap_err();
+            assert!(format!("{err}").contains("before any TIME_HIGH"), "{err}");
+        }
+    }
+
+    #[test]
+    fn evt3_addr_x_before_time_errors_in_both_paths() {
+        let w = ((evt3::TY_ADDR_X << 12) | 5u16).to_le_bytes();
+        // Eight ADDR_X words: a full SIMD block with no time state.
+        let body: Vec<u8> = w.iter().copied().cycle().take(16).collect();
+        for decode in [decode_evt3_words, decode_evt3_words_scalar] {
+            let err = decode(&body, &mut Evt3State::default(), &mut Vec::new()).unwrap_err();
+            assert!(format!("{err}").contains("before any time word"), "{err}");
+        }
+    }
+}

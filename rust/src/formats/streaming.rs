@@ -21,9 +21,10 @@ use std::io::Write;
 
 use anyhow::{bail, Context, Result};
 
-use crate::aer::{packed, Event, Polarity, Resolution};
+use crate::aer::{Event, Polarity, Resolution};
 
-use super::{aedat, aedat2, dat, evt2, evt3, text, Format};
+use super::simd::{self, Evt3State};
+use super::{aedat, aedat2, dat, evt2, text, Format};
 
 /// Upper bound on the bytes a header may occupy before the decoder
 /// gives up (prevents unbounded buffering on garbage input).
@@ -49,33 +50,6 @@ enum Body {
     Evt2 { time_high: Option<u64> },
     Evt3(Evt3State),
     Aedat31,
-}
-
-/// The EVT3 decoder state machine (identical to the batch decoder's
-/// local variables, lifted into a struct so it survives chunk breaks).
-#[derive(Debug)]
-struct Evt3State {
-    y: u16,
-    time_low: u64,
-    time_high: u64,
-    time_epoch: u64,
-    have_time: bool,
-    vect_base_x: u16,
-    vect_pol: Polarity,
-}
-
-impl Default for Evt3State {
-    fn default() -> Self {
-        Evt3State {
-            y: 0,
-            time_low: 0,
-            time_high: 0,
-            time_epoch: 0,
-            have_time: false,
-            vect_base_x: 0,
-            vect_pol: Polarity::Off,
-        }
-    }
 }
 
 /// Incremental decoder: feed byte chunks, receive events.
@@ -356,9 +330,7 @@ impl StreamingDecoder {
         match &mut self.body {
             Body::Raw => {
                 let n = self.pending.len() / 8 * 8;
-                for word in self.pending[..n].chunks_exact(8) {
-                    out.push(packed::unpack(u64::from_le_bytes(word.try_into().unwrap())));
-                }
+                simd::decode_raw_words(&self.pending[..n], out);
                 self.pending.drain(..n);
                 Ok(())
             }
@@ -394,85 +366,13 @@ impl StreamingDecoder {
             }
             Body::Evt2 { time_high } => {
                 let n = self.pending.len() / 4 * 4;
-                for word in self.pending[..n].chunks_exact(4) {
-                    let w = u32::from_le_bytes(word.try_into().unwrap());
-                    match w >> 28 {
-                        evt2::TYPE_TIME_HIGH => *time_high = Some((w & 0x0FFF_FFFF) as u64),
-                        ty @ (evt2::TYPE_CD_OFF | evt2::TYPE_CD_ON) => {
-                            let Some(th) = *time_high else {
-                                bail!("evt2: CD word before any TIME_HIGH");
-                            };
-                            out.push(Event {
-                                t: (th << 6) | ((w >> 22) & 0x3F) as u64,
-                                x: ((w >> 11) & 0x7FF) as u16,
-                                y: (w & 0x7FF) as u16,
-                                p: Polarity::from_bool(ty == evt2::TYPE_CD_ON),
-                            });
-                        }
-                        evt2::TYPE_EXT_TRIGGER => {}
-                        _ => {} // forward-compatible: ignore unknown types
-                    }
-                }
+                simd::decode_evt2_words(&self.pending[..n], time_high, out)?;
                 self.pending.drain(..n);
                 Ok(())
             }
             Body::Evt3(st) => {
                 let n = self.pending.len() / 2 * 2;
-                for wbytes in self.pending[..n].chunks_exact(2) {
-                    let w = u16::from_le_bytes(wbytes.try_into().unwrap());
-                    let payload = w & 0x0FFF;
-                    match w >> 12 {
-                        evt3::TY_ADDR_Y => st.y = payload & 0x7FF,
-                        evt3::TY_TIME_HIGH => {
-                            let new_high = payload as u64;
-                            if st.have_time && new_high < st.time_high {
-                                st.time_epoch += 1 << 24; // 24-bit rollover
-                            }
-                            st.time_high = new_high;
-                            st.time_low = 0;
-                            st.have_time = true;
-                        }
-                        evt3::TY_TIME_LOW => {
-                            st.time_low = payload as u64;
-                            st.have_time = true;
-                        }
-                        evt3::TY_ADDR_X => {
-                            if !st.have_time {
-                                bail!("evt3: CD word before any time word");
-                            }
-                            out.push(Event {
-                                t: st.time_epoch | (st.time_high << 12) | st.time_low,
-                                x: payload & 0x7FF,
-                                y: st.y,
-                                p: Polarity::from_bool(payload & 0x800 != 0),
-                            });
-                        }
-                        evt3::TY_VECT_BASE_X => {
-                            st.vect_base_x = payload & 0x7FF;
-                            st.vect_pol = Polarity::from_bool(payload & 0x800 != 0);
-                        }
-                        evt3::TY_VECT_12 | evt3::TY_VECT_8 => {
-                            if !st.have_time {
-                                bail!("evt3: vector word before any time word");
-                            }
-                            let width = if w >> 12 == evt3::TY_VECT_12 { 12 } else { 8 };
-                            let t = st.time_epoch | (st.time_high << 12) | st.time_low;
-                            let mut mask = payload & ((1u16 << width) - 1);
-                            while mask != 0 {
-                                let bit = mask.trailing_zeros() as u16;
-                                out.push(Event {
-                                    t,
-                                    x: st.vect_base_x + bit,
-                                    y: st.y,
-                                    p: st.vect_pol,
-                                });
-                                mask &= mask - 1;
-                            }
-                            st.vect_base_x += width;
-                        }
-                        _ => {} // EXT_TRIGGER, OTHERS, CONTINUED: skipped
-                    }
-                }
+                simd::decode_evt3_words(&self.pending[..n], st, out)?;
                 self.pending.drain(..n);
                 Ok(())
             }

@@ -14,7 +14,10 @@
 //! * [`aer`] — event types, packed encodings, the checksum workload;
 //! * [`formats`] — file codecs (AEDAT 3.1, Prophesee EVT2/EVT3/DAT,
 //!   raw, text), each with batch ([`formats::EventCodec`]) and
-//!   incremental ([`formats::streaming`]) decode/encode;
+//!   incremental ([`formats::streaming`]) decode/encode; the packed
+//!   formats' per-word decode loops live in one kernel layer
+//!   ([`formats::simd`]) with explicit SSE2 fast paths behind the
+//!   `simd` cargo feature and a property-tested scalar reference;
 //! * [`net`] — SPIF wire protocol over UDP;
 //! * [`camera`] — synthetic event-camera source;
 //! * [`pipeline`] — composable per-event transforms (the paper's
@@ -24,7 +27,11 @@
 //!   [`pipeline::PipelineSpec`] the CLI parses;
 //! * [`stream`] — the `EventSource` → stages → `EventSink` trait layer
 //!   and its incremental drivers (coroutine + sync): O(chunk) memory
-//!   for endless streams;
+//!   for endless streams; batches travel as refcounted immutable
+//!   [`stream::EventChunk`] range views, so broadcast/stripe routing
+//!   and delivery are refcount bumps, with per-node
+//!   `bytes_moved`/`chunks_cloned` copy-traffic counters surfaced in
+//!   `StreamReport` and `--report-json`;
 //! * [`stream::stage`] — pipeline stages as first-class topology
 //!   nodes: shardable stages run as N stripe-shard workers (inline or
 //!   one OS thread each) with halo ghost events and a sequence-keyed

@@ -39,6 +39,16 @@ pub struct NodeReport {
     pub dropped: u64,
     /// Frames produced (frame-binning sinks; 0 elsewhere).
     pub frames: u64,
+    /// Event bytes physically copied into (or by) this node: selection
+    /// scatters writing the node's partition, stage chains
+    /// materializing their output buffer. Refcounted chunk handoff
+    /// contributes nothing — this is the per-node copy-traffic gauge
+    /// behind `bytes_moved_per_event`.
+    pub bytes_moved: u64,
+    /// Whole-batch deep copies made for this node. Zero on the
+    /// stateless zero-copy delivery paths (broadcast and stripe/polarity
+    /// routing) — asserted by the chunk-semantics tests.
+    pub chunks_cloned: u64,
     /// Sharded stage nodes: home events routed to each shard (ghost
     /// copies excluded). Empty for unsharded nodes. Sums to
     /// [`events`](NodeReport::events).
@@ -102,6 +112,8 @@ pub struct LiveNode {
     batches: AtomicU64,
     backpressure_waits: AtomicU64,
     dropped: AtomicU64,
+    bytes_moved: AtomicU64,
+    chunks_cloned: AtomicU64,
     shards: Mutex<ShardCells>,
 }
 
@@ -123,6 +135,8 @@ impl LiveNode {
             batches: AtomicU64::new(0),
             backpressure_waits: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
+            bytes_moved: AtomicU64::new(0),
+            chunks_cloned: AtomicU64::new(0),
             shards: Mutex::new(ShardCells::default()),
         }
     }
@@ -150,6 +164,16 @@ impl LiveNode {
     /// Count `n` events the node itself discarded.
     pub fn add_dropped(&self, n: u64) {
         self.dropped.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count `n` event bytes physically copied into/by this node.
+    pub fn add_bytes_moved(&self, n: u64) {
+        self.bytes_moved.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count one whole-batch deep copy made for this node.
+    pub fn add_chunk_cloned(&self) {
+        self.chunks_cloned.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one batch's per-shard home-event counts (both lanes).
@@ -197,6 +221,8 @@ impl LiveNode {
             backpressure_waits: self.backpressure_waits.load(Ordering::Relaxed),
             dropped: self.dropped.load(Ordering::Relaxed),
             frames: 0,
+            bytes_moved: self.bytes_moved.load(Ordering::Relaxed),
+            chunks_cloned: self.chunks_cloned.load(Ordering::Relaxed),
             shard_events: self.shards.lock().unwrap().cut.clone(),
         }
     }
@@ -398,6 +424,8 @@ mod tests {
         node.add_batch();
         node.add_dropped(25);
         node.add_backpressure_wait();
+        node.add_bytes_moved(1600);
+        node.add_chunk_cloned();
         node.record_shards(&[60, 40]);
         let report = node.sample();
         assert_eq!(report.name, "stage");
@@ -405,6 +433,8 @@ mod tests {
         assert_eq!(report.batches, 1);
         assert_eq!(report.dropped, 25);
         assert_eq!(report.backpressure_waits, 1);
+        assert_eq!(report.bytes_moved, 1600);
+        assert_eq!(report.chunks_cloned, 1);
         assert_eq!(report.shard_events, vec![60, 40]);
         // The epoch lane drains independently of the cumulative lane.
         assert_eq!(node.take_epoch_shards(), vec![60, 40]);

@@ -36,7 +36,7 @@ const ACCEPT_IDLE: Duration = Duration::from_millis(2);
 const WRITE_TIMEOUT: Duration = Duration::from_millis(500);
 
 struct Subscriber {
-    tx: SyncSender<Arc<[u8]>>,
+    tx: SyncSender<Arc<Vec<u8>>>,
     node: Arc<LiveNode>,
     /// Consecutive full-queue stalls (reset by any delivery).
     stalls: u32,
@@ -148,7 +148,10 @@ impl EventSink for SubscribeSink {
         for ev in events {
             payload.extend_from_slice(&spif::pack_word(ev).to_le_bytes());
         }
-        let payload: Arc<[u8]> = payload.into();
+        // `Arc<Vec<u8>>`, not `Arc<[u8]>`: `Vec → Arc<[u8]>` re-copies
+        // every byte into a fresh allocation (the refcount header must
+        // precede the data); wrapping the Vec is a pointer move.
+        let payload = Arc::new(payload);
         let mut departing: Vec<Subscriber> = Vec::new();
         {
             let mut subs = self.shared.subscribers.lock().unwrap();
@@ -215,7 +218,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<SubShared>) {
                 let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
                 let name = format!("sub:{next_id}");
                 next_id += 1;
-                let (tx, rx) = std::sync::mpsc::sync_channel::<Arc<[u8]>>(SUB_QUEUE_BATCHES);
+                let (tx, rx) = std::sync::mpsc::sync_channel::<Arc<Vec<u8>>>(SUB_QUEUE_BATCHES);
                 let dead = Arc::new(AtomicBool::new(false));
                 let writer_dead = dead.clone();
                 let writer = std::thread::Builder::new()
@@ -244,7 +247,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<SubShared>) {
 
 fn write_loop(
     mut stream: TcpStream,
-    rx: std::sync::mpsc::Receiver<Arc<[u8]>>,
+    rx: std::sync::mpsc::Receiver<Arc<Vec<u8>>>,
     dead: Arc<AtomicBool>,
 ) {
     for payload in rx {

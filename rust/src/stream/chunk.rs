@@ -1,0 +1,298 @@
+//! The zero-copy batch currency: refcounted immutable event chunks.
+//!
+//! The paper's throughput argument is about *memory operations per
+//! event*: coroutine handoff beats thread handoff because nothing is
+//! copied between stages. Our topology layer used to undermine that by
+//! cloning `Vec<Event>` at every broadcast branch, stripe scatter, and
+//! client lane. [`EventChunk`] replaces the owned `Vec<Event>` as the
+//! unit that moves between topology nodes:
+//!
+//! * a chunk wraps its buffer in an [`Arc`], so **broadcast is a
+//!   refcount bump** — N sinks read the same allocation;
+//! * [`EventChunk::slice`] is a range view (offset + length into the
+//!   shared buffer) — **re-slicing is free**;
+//! * stateless consumers borrow [`EventChunk::as_slice`]; stateful
+//!   consumers that genuinely need ownership go through the
+//!   copy-on-write [`EventChunk::into_vec`], which reuses the buffer
+//!   when the chunk is the sole owner and only then falls back to a
+//!   counted copy.
+//!
+//! The buffer is `Arc<Vec<Event>>` rather than `Arc<[Event]>`: a
+//! `Vec<T>` converts to `Arc<[T]>` only by copying every element into a
+//! fresh allocation (the refcount header must precede the data), which
+//! would reintroduce exactly the per-batch copy this type exists to
+//! remove. Wrapping the `Vec` keeps `from_vec` a pointer move at the
+//! cost of one extra indirection on access.
+//!
+//! ## Copy accounting
+//!
+//! Every deep copy is counted, so "zero-copy" is an asserted property
+//! rather than a hope:
+//!
+//! * process-wide counters ([`copy_counters`]/[`CopyCounters::delta`])
+//!   feed the bench suite's `bytes_moved_per_event` column — benches run
+//!   sequentially, so global deltas are exact there;
+//! * per-node counters live on [`crate::metrics::LiveNode`]
+//!   (`bytes_moved`/`chunks_cloned`) and surface in
+//!   [`crate::stream::StreamReport`] — per-run objects, so parallel
+//!   `cargo test` runs cannot pollute each other's assertions.
+//!
+//! `chunks_cloned` counts whole-batch deep copies (a [`to_vec`] or a
+//! counted [`into_vec`]); `bytes_moved` additionally counts selection
+//! copies (polarity/stripe scatter writes each surviving event once into
+//! its destination part). A broadcast therefore moves zero bytes, and a
+//! stripe scatter moves each event once *total* — not once per sink.
+//!
+//! [`to_vec`]: EventChunk::to_vec
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::aer::Event;
+
+/// Size of one event in the in-memory representation (16 bytes: packed
+/// `(t: u64, x: u16, y: u16, p)` plus padding). Copy counters measure
+/// bytes as `events × EVENT_BYTES`.
+pub const EVENT_BYTES: usize = std::mem::size_of::<Event>();
+
+/// Process-wide count of whole-chunk deep copies.
+static CHUNKS_CLONED: AtomicU64 = AtomicU64::new(0);
+/// Process-wide count of event bytes physically copied between buffers.
+static BYTES_MOVED: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide copy counters (see [`copy_counters`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CopyCounters {
+    /// Whole-chunk deep copies since process start.
+    pub chunks_cloned: u64,
+    /// Event bytes physically copied since process start.
+    pub bytes_moved: u64,
+}
+
+impl CopyCounters {
+    /// Counters accumulated since an earlier snapshot.
+    pub fn delta(&self, since: &CopyCounters) -> CopyCounters {
+        CopyCounters {
+            chunks_cloned: self.chunks_cloned - since.chunks_cloned,
+            bytes_moved: self.bytes_moved - since.bytes_moved,
+        }
+    }
+}
+
+/// Read the process-wide copy counters. Exact only when nothing else is
+/// streaming concurrently (the bench suite's situation); tests that run
+/// in parallel must assert on the per-node counters in
+/// [`crate::stream::StreamReport`] instead.
+pub fn copy_counters() -> CopyCounters {
+    CopyCounters {
+        chunks_cloned: CHUNKS_CLONED.load(Ordering::Relaxed),
+        bytes_moved: BYTES_MOVED.load(Ordering::Relaxed),
+    }
+}
+
+/// Record a whole-chunk deep copy of `events` events.
+pub(crate) fn note_chunk_cloned(events: usize) {
+    CHUNKS_CLONED.fetch_add(1, Ordering::Relaxed);
+    note_events_moved(events);
+}
+
+/// Record `events` events copied between buffers (selection copies:
+/// polarity split, stripe scatter, stage output materialization).
+pub(crate) fn note_events_moved(events: usize) {
+    BYTES_MOVED.fetch_add((events * EVENT_BYTES) as u64, Ordering::Relaxed);
+}
+
+/// A refcounted, immutable view of a batch of events.
+///
+/// `Clone` is a refcount bump (never counted as a copy). The underlying
+/// buffer is immutable for the chunk's whole life, so views handed to
+/// concurrent sinks can never observe torn writes.
+#[derive(Clone)]
+pub struct EventChunk {
+    buf: Arc<Vec<Event>>,
+    start: usize,
+    len: usize,
+}
+
+impl EventChunk {
+    /// Wrap an owned buffer without copying (the zero-cost entry point
+    /// used by sources and stage outputs).
+    pub fn from_vec(events: Vec<Event>) -> EventChunk {
+        let len = events.len();
+        EventChunk { buf: Arc::new(events), start: 0, len }
+    }
+
+    /// Build a chunk by **copying** a slice (counted). Legacy bridge for
+    /// callers that only hold a borrow.
+    pub fn from_slice(events: &[Event]) -> EventChunk {
+        note_chunk_cloned(events.len());
+        EventChunk::from_vec(events.to_vec())
+    }
+
+    /// The empty chunk.
+    pub fn empty() -> EventChunk {
+        EventChunk { buf: Arc::new(Vec::new()), start: 0, len: 0 }
+    }
+
+    /// Number of events in this view.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// `true` if the view contains no events.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Borrow the events. Free; this is how stateless consumers read.
+    pub fn as_slice(&self) -> &[Event] {
+        &self.buf[self.start..self.start + self.len]
+    }
+
+    /// A sub-view of this chunk (relative to this view). Free: shares
+    /// the buffer, bumps the refcount.
+    ///
+    /// # Panics
+    /// If the range exceeds the view.
+    pub fn slice(&self, range: Range<usize>) -> EventChunk {
+        assert!(range.start <= range.end && range.end <= self.len, "slice {range:?} out of bounds for chunk of {}", self.len);
+        EventChunk {
+            buf: Arc::clone(&self.buf),
+            start: self.start + range.start,
+            len: range.end - range.start,
+        }
+    }
+
+    /// How many chunks currently share this buffer (diagnostics/tests).
+    pub fn refcount(&self) -> usize {
+        Arc::strong_count(&self.buf)
+    }
+
+    /// Deep-copy the view into an owned `Vec` (counted).
+    pub fn to_vec(&self) -> Vec<Event> {
+        note_chunk_cloned(self.len);
+        self.as_slice().to_vec()
+    }
+
+    /// Copy-on-write extraction: when this chunk is the **sole** owner
+    /// of its buffer and views it whole, the buffer is returned without
+    /// copying (and without counting); otherwise falls back to a counted
+    /// [`to_vec`](EventChunk::to_vec). This is the escape hatch for
+    /// stateful consumers that need an owned buffer.
+    pub fn into_vec(self) -> Vec<Event> {
+        if self.start == 0 && self.len == self.buf.len() {
+            match Arc::try_unwrap(self.buf) {
+                Ok(vec) => return vec,
+                Err(shared) => {
+                    note_chunk_cloned(shared.len());
+                    return shared[..].to_vec();
+                }
+            }
+        }
+        self.to_vec()
+    }
+}
+
+impl std::fmt::Debug for EventChunk {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventChunk")
+            .field("len", &self.len)
+            .field("start", &self.start)
+            .field("refcount", &self.refcount())
+            .finish()
+    }
+}
+
+impl From<Vec<Event>> for EventChunk {
+    fn from(events: Vec<Event>) -> EventChunk {
+        EventChunk::from_vec(events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn from_vec_is_uncounted_and_clone_is_refcount_only() {
+        let events = synthetic_events(100, 64, 64);
+        let before = copy_counters();
+        let chunk = EventChunk::from_vec(events.clone());
+        let copy = chunk.clone();
+        let d = copy_counters().delta(&before);
+        assert_eq!(d.chunks_cloned, 0);
+        assert_eq!(d.bytes_moved, 0);
+        assert_eq!(chunk.refcount(), 2);
+        assert_eq!(copy.as_slice(), &events[..]);
+    }
+
+    #[test]
+    fn slices_share_the_buffer_and_compose() {
+        let events = synthetic_events(50, 64, 64);
+        let chunk = EventChunk::from_vec(events.clone());
+        let mid = chunk.slice(10..40);
+        let inner = mid.slice(5..10);
+        assert_eq!(mid.as_slice(), &events[10..40]);
+        assert_eq!(inner.as_slice(), &events[15..20]);
+        assert_eq!(chunk.refcount(), 3);
+        let empty = chunk.slice(7..7);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_range_slice_panics() {
+        EventChunk::from_vec(synthetic_events(5, 8, 8)).slice(0..6);
+    }
+
+    #[test]
+    fn to_vec_counts_one_clone() {
+        let chunk = EventChunk::from_vec(synthetic_events(32, 64, 64));
+        let before = copy_counters();
+        let owned = chunk.to_vec();
+        let d = copy_counters().delta(&before);
+        assert_eq!(owned, chunk.as_slice());
+        assert_eq!(d.chunks_cloned, 1);
+        assert_eq!(d.bytes_moved, (32 * EVENT_BYTES) as u64);
+    }
+
+    #[test]
+    fn into_vec_is_free_for_a_unique_full_chunk() {
+        let events = synthetic_events(64, 64, 64);
+        let chunk = EventChunk::from_vec(events.clone());
+        let before = copy_counters();
+        let owned = chunk.into_vec();
+        let d = copy_counters().delta(&before);
+        assert_eq!(owned, events);
+        assert_eq!(d.chunks_cloned, 0, "unique full-range into_vec must not copy");
+        assert_eq!(d.bytes_moved, 0);
+    }
+
+    #[test]
+    fn into_vec_copies_when_shared_or_partial() {
+        let events = synthetic_events(64, 64, 64);
+        let chunk = EventChunk::from_vec(events.clone());
+        let keep = chunk.clone();
+        let before = copy_counters();
+        let owned = chunk.into_vec(); // shared: must copy
+        assert_eq!(owned, events);
+        assert_eq!(copy_counters().delta(&before).chunks_cloned, 1);
+
+        let part = keep.slice(8..24);
+        let before = copy_counters();
+        let owned = part.into_vec(); // partial view: must copy
+        assert_eq!(owned, &events[8..24]);
+        assert_eq!(copy_counters().delta(&before).chunks_cloned, 1);
+    }
+
+    #[test]
+    fn from_slice_counts() {
+        let events = synthetic_events(16, 64, 64);
+        let before = copy_counters();
+        let chunk = EventChunk::from_slice(&events);
+        assert_eq!(chunk.as_slice(), &events[..]);
+        assert_eq!(copy_counters().delta(&before).chunks_cloned, 1);
+    }
+}

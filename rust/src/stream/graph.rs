@@ -59,8 +59,14 @@
 //!
 //! Current compile support is one merge trunk with one fan-out point
 //! (an explicit router, or implicitly the node whose output several
-//! branches consume); nested routers and per-stripe merges are future
-//! work and rejected with readable errors.
+//! branches consume), **or** the sharded fan-in: several merge nodes,
+//! each fed by *every* source, where merge *i* owns stripe *i* of the
+//! fused canvas (in declaration order) and runs its own stage chain and
+//! sink. Per-stripe merges lower to the single physical fan-in plus a
+//! [`RoutePolicy::Stripes`] router — byte-identical to writing the
+//! router explicitly, and copy-free now that stripe scatter builds
+//! refcounted chunk views. Nested routers remain future work and are
+//! rejected with readable errors.
 
 use std::collections::HashMap;
 
@@ -408,7 +414,7 @@ fn planned_layout(nodes: &[GraphNode<'_>]) -> Result<(Option<SourceLayout>, Reso
     let mut offsets: Vec<Option<(u16, u16)>> = Vec::new();
     let mut known = true;
     let mut first_offset: Option<&str> = None;
-    let mut merge: Option<(&str, Option<FusionLayout>)> = None;
+    let mut merges: Vec<(&str, Option<FusionLayout>)> = Vec::new();
     for node in nodes {
         match &node.kind {
             NodeKind::Source { source, offset, .. } => {
@@ -430,24 +436,30 @@ fn planned_layout(nodes: &[GraphNode<'_>]) -> Result<(Option<SourceLayout>, Reso
                 resolutions.push(source.resolution());
                 offsets.push(None);
             }
-            NodeKind::Merge { layout } => {
-                if merge.is_some() {
-                    bail!(
-                        "graph has more than one merge node ({:?} and an earlier one); \
-                         per-stripe merges are not supported yet",
-                        node.name
-                    );
-                }
-                merge = Some((&node.name, *layout));
-            }
+            NodeKind::Merge { layout } => merges.push((&node.name, *layout)),
             _ => {}
         }
     }
     if resolutions.is_empty() {
         bail!("graph has no source nodes");
     }
+    // Several merge nodes = the sharded fan-in (merge i owns stripe i of
+    // the fused canvas). They all see the same canvas, so their layout
+    // declarations must agree.
+    if let Some(&(first_name, first_layout)) = merges.first() {
+        for &(other_name, other_layout) in &merges[1..] {
+            if other_layout != first_layout {
+                bail!(
+                    "per-stripe merges must agree on the canvas layout: {first_name:?} \
+                     declares {:?}, {other_name:?} declares {:?}",
+                    first_layout.map(|l| l.label()),
+                    other_layout.map(|l| l.label()),
+                );
+            }
+        }
+    }
     let any_offset = first_offset.is_some();
-    let Some((merge_name, layout_choice)) = merge else {
+    let Some(&(merge_name, layout_choice)) = merges.first() else {
         if resolutions.len() > 1 {
             bail!(
                 "{} sources but no merge node; add .merge(name, inputs) to fan them in",
@@ -698,59 +710,102 @@ impl<'a> GraphSpec<'a> {
                 )
             })
             .collect();
-        let merge = (0..n).find(|&i| matches!(self.nodes[i].kind, NodeKind::Merge { .. }));
-        let head = match merge {
-            Some(m) => {
-                for &s in &sources {
-                    if out[s].len() != 1 || out[s][0] != m {
-                        bail!(
-                            "source {:?} must feed the merge {:?} and nothing else \
-                             (per-stripe merges are not supported yet)",
-                            name(s),
-                            name(m)
-                        );
-                    }
-                }
-                m
-            }
-            None => sources[0], // planned_layout guarantees exactly one
-        };
+        let merges: Vec<usize> =
+            (0..n).filter(|&i| matches!(self.nodes[i].kind, NodeKind::Merge { .. })).collect();
         let mut visited = vec![false; n];
         for &s in &sources {
             visited[s] = true;
         }
-        visited[head] = true;
         let mut trunk = Vec::new();
-        let mut at = head;
-        let (route, branch_heads): (RoutePolicy, Vec<usize>) = loop {
-            let children = &out[at];
-            match children.len() {
-                0 => bail!("node {:?} dangles: no path to a sink", name(at)),
-                1 => {
-                    let c = children[0];
-                    match &self.nodes[c].kind {
-                        NodeKind::Stages { .. } => {
-                            visited[c] = true;
-                            trunk.push(c);
-                            at = c;
-                        }
-                        NodeKind::Router { policy } => {
-                            visited[c] = true;
-                            break (*policy, out[c].clone());
-                        }
-                        NodeKind::Sink { .. } => break (RoutePolicy::Broadcast, vec![c]),
-                        NodeKind::Source { .. }
-                        | NodeKind::Listener { .. }
-                        | NodeKind::Merge { .. } => {
-                            // Degree rules above already rejected these.
-                            bail!("node {:?} cannot follow {:?}", name(c), name(at));
+        let (route, branch_heads): (RoutePolicy, Vec<usize>) = if merges.len() >= 2 {
+            // The sharded fan-in: merge i owns stripe i of the fused
+            // canvas (declaration order), and its chain becomes branch i
+            // behind a stripes router over the one physical fan-in —
+            // byte-identical to declaring the router explicitly, and
+            // copy-free since stripe scatter builds chunk views.
+            for &s in &sources {
+                let feeds_all = out[s].len() == merges.len()
+                    && merges.iter().all(|m| out[s].contains(m));
+                if !feeds_all {
+                    bail!(
+                        "per-stripe merges need every source to feed every merge; \
+                         source {:?} feeds {:?}",
+                        name(s),
+                        out[s].iter().map(|&t| name(t)).collect::<Vec<_>>(),
+                    );
+                }
+            }
+            if !geometry_known {
+                bail!(
+                    "per-stripe merges cut the canvas by pixel column and so require \
+                     known source geometry (declare --geometry)"
+                );
+            }
+            let mut heads = Vec::with_capacity(merges.len());
+            for &m in &merges {
+                visited[m] = true;
+                if out[m].len() > 1 {
+                    bail!(
+                        "merge {:?} fans out; a per-stripe merge owns exactly one \
+                         stripe chain (stages, then one sink)",
+                        name(m)
+                    );
+                }
+                let Some(&c) = out[m].first() else {
+                    bail!("node {:?} dangles: no path to a sink", name(m))
+                };
+                heads.push(c);
+            }
+            (RoutePolicy::Stripes, heads)
+        } else {
+            let head = match merges.first().copied() {
+                Some(m) => {
+                    for &s in &sources {
+                        if out[s].len() != 1 || out[s][0] != m {
+                            bail!(
+                                "source {:?} must feed the merge {:?} and nothing else \
+                                 (or feed every merge, for the per-stripe shape)",
+                                name(s),
+                                name(m)
+                            );
                         }
                     }
+                    m
                 }
-                // Several children of a non-router node: an implicit
-                // broadcast fork (the builder's natural shape for
-                // "every branch sees everything").
-                _ => break (RoutePolicy::Broadcast, children.clone()),
+                None => sources[0], // planned_layout guarantees exactly one
+            };
+            visited[head] = true;
+            let mut at = head;
+            loop {
+                let children = &out[at];
+                match children.len() {
+                    0 => bail!("node {:?} dangles: no path to a sink", name(at)),
+                    1 => {
+                        let c = children[0];
+                        match &self.nodes[c].kind {
+                            NodeKind::Stages { .. } => {
+                                visited[c] = true;
+                                trunk.push(c);
+                                at = c;
+                            }
+                            NodeKind::Router { policy } => {
+                                visited[c] = true;
+                                break (*policy, out[c].clone());
+                            }
+                            NodeKind::Sink { .. } => break (RoutePolicy::Broadcast, vec![c]),
+                            NodeKind::Source { .. }
+                            | NodeKind::Listener { .. }
+                            | NodeKind::Merge { .. } => {
+                                // Degree rules above already rejected these.
+                                bail!("node {:?} cannot follow {:?}", name(c), name(at));
+                            }
+                        }
+                    }
+                    // Several children of a non-router node: an implicit
+                    // broadcast fork (the builder's natural shape for
+                    // "every branch sees everything").
+                    _ => break (RoutePolicy::Broadcast, children.clone()),
+                }
             }
         };
 
@@ -1056,7 +1111,8 @@ mod tests {
             .sink("only", NullSink::default())
             .build();
         assert!(format!("{}", g.validate().unwrap_err()).contains("polarity"));
-        // Two merges.
+        // Two merges with disjoint sources: the per-stripe shape needs
+        // every source feeding every merge.
         let g = Topology::builder()
             .source("a", mem(1, 10, res))
             .source("b", mem(2, 10, res))
@@ -1064,7 +1120,127 @@ mod tests {
             .merge("m2", &["b"])
             .sink("out", NullSink::default())
             .build();
-        assert!(format!("{}", g.validate().unwrap_err()).contains("more than one merge"));
+        let err = format!("{}", g.validate().unwrap_err());
+        assert!(err.contains("every source to feed every merge"), "got {err}");
+        // Per-stripe merges must agree on the canvas layout.
+        let g = Topology::builder()
+            .source("a", mem(1, 10, res))
+            .merge_with_layout("m1", &["a"], FusionLayout::Grid)
+            .sink("x", NullSink::default())
+            .merge_with_layout("m2", &["a"], FusionLayout::Overlay)
+            .sink("y", NullSink::default())
+            .build();
+        let err = format!("{}", g.validate().unwrap_err());
+        assert!(err.contains("agree on the canvas layout"), "got {err}");
+        // A per-stripe merge owns exactly one chain: fanning out of one
+        // is a nested fan-out, still unsupported.
+        let g = Topology::builder()
+            .source("a", mem(1, 10, res))
+            .merge("m1", &["a"])
+            .sink("x", NullSink::default())
+            .merge("m2", &["a"])
+            .sink("y", NullSink::default())
+            .after("m2")
+            .sink("z", NullSink::default())
+            .build();
+        let err = format!("{}", g.validate().unwrap_err());
+        assert!(err.contains("fans out"), "got {err}");
+    }
+
+    /// The sharded fan-in: N merges, each fed by every source, each
+    /// owning one stripe of the fused canvas — must produce exactly what
+    /// the explicit stripes router produces, branch for branch, with
+    /// zero whole-batch copies on the way.
+    #[test]
+    fn per_stripe_merges_match_the_stripes_router() {
+        let res = Resolution::new(48, 32);
+        let a = synthetic_events_seeded(1200, 48, 32, 13);
+        let b = synthetic_events_seeded(800, 48, 32, 14);
+
+        // Reference: one merge + an explicit stripes router.
+        let (r0, ref0) = CaptureSink::new();
+        let (r1, ref1) = CaptureSink::new();
+        let (r2, ref2) = CaptureSink::new();
+        Topology::builder()
+            .source("a", MemorySource::new(a.clone(), res, 128))
+            .source("b", MemorySource::new(b.clone(), res, 128))
+            .merge("fuse", &["a", "b"])
+            .route("split", RoutePolicy::Stripes)
+            .sink("x", r0)
+            .after("split")
+            .sink("y", r1)
+            .after("split")
+            .sink("z", r2)
+            .build()
+            .run(GraphConfig { chunk_size: 128, ..Default::default() })
+            .unwrap();
+
+        // Same topology written as three per-stripe merges.
+        let (s0, got0) = CaptureSink::new();
+        let (s1, got1) = CaptureSink::new();
+        let (s2, got2) = CaptureSink::new();
+        let report = Topology::builder()
+            .source("a", MemorySource::new(a, res, 128))
+            .source("b", MemorySource::new(b, res, 128))
+            .merge("m0", &["a", "b"])
+            .sink("x", s0)
+            .merge("m1", &["a", "b"])
+            .sink("y", s1)
+            .merge("m2", &["a", "b"])
+            .sink("z", s2)
+            .build()
+            .run(GraphConfig { chunk_size: 128, ..Default::default() })
+            .unwrap();
+
+        assert_eq!(*got0.lock().unwrap(), *ref0.lock().unwrap(), "stripe 0 diverged");
+        assert_eq!(*got1.lock().unwrap(), *ref1.lock().unwrap(), "stripe 1 diverged");
+        assert_eq!(*got2.lock().unwrap(), *ref2.lock().unwrap(), "stripe 2 diverged");
+        assert_eq!(report.sinks.len(), 3);
+        let routed: u64 = report.sinks.iter().map(|s| s.events).sum();
+        assert_eq!(routed, 2000, "stripes partition, never duplicate");
+        // Stripe scatter is a selection copy into chunk views — no node
+        // on the path may perform a whole-batch deep copy.
+        assert_eq!(report.chunks_cloned, 0, "per-stripe fan-in must be clone-free");
+    }
+
+    /// A per-stripe merge chain may run its own stages before the sink.
+    #[test]
+    fn per_stripe_merge_chains_run_their_stages() {
+        let res = Resolution::new(64, 32);
+        let events = synthetic_events_seeded(1500, 64, 32, 23);
+        let canvas = res; // single source: canvas = source extent
+        let on_spec = || {
+            PipelineSpec::new()
+                .then(StageSpec::new(|_| ops::PolarityFilter::keep(crate::aer::Polarity::On)))
+        };
+        // Serial reference: stripe the stream by hand, filter stripe 0.
+        let stripe_w = 32usize; // 64px / 2 merges
+        let stripe0: Vec<Event> =
+            events.iter().copied().filter(|e| (e.x as usize) < stripe_w).collect();
+        let stripe1: Vec<Event> =
+            events.iter().copied().filter(|e| (e.x as usize) >= stripe_w).collect();
+        let expect0 = on_spec().build_pipeline(canvas).process(&stripe0);
+
+        let (s0, got0) = CaptureSink::new();
+        let (s1, got1) = CaptureSink::new();
+        let report = Topology::builder()
+            .source("cam", MemorySource::new(events, res, 173))
+            .merge("m0", &["cam"])
+            .stages("keep-on", on_spec())
+            .sink("x", s0)
+            .merge("m1", &["cam"])
+            .sink("y", s1)
+            .build()
+            .run(GraphConfig { chunk_size: 173, ..Default::default() })
+            .unwrap();
+
+        assert_eq!(*got0.lock().unwrap(), expect0, "filtered stripe 0 diverged");
+        assert_eq!(*got1.lock().unwrap(), stripe1, "raw stripe 1 diverged");
+        // The branch chain's report lands prefixed, like router branches.
+        assert!(
+            report.stages.iter().any(|s| s.name.starts_with("keep-on/")),
+            "missing per-stripe branch stage report"
+        );
     }
 
     #[test]

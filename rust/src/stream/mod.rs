@@ -53,6 +53,7 @@
 //! stays byte-identical to serial across arbitrarily many re-cuts.
 
 pub mod adapt;
+pub mod chunk;
 pub mod graph;
 pub(crate) mod merge;
 pub mod report;
@@ -75,6 +76,7 @@ pub use adapt::{
     ChunkController, ClientSample, ClientWindowController, Controller, ControllerKind,
     EpochSample, Reconfigure, SkewController, StageSample, StageTelemetry, WindowChange,
 };
+pub use chunk::{copy_counters, CopyCounters, EventChunk, EVENT_BYTES};
 pub use graph::{
     CompiledTopology, FusionLayout, GraphConfig, GraphSpec, SourceOptions, Topology,
     TopologyBuilder,
@@ -247,6 +249,16 @@ pub trait EventSink: Send {
     /// Consume one batch (already pipeline-processed).
     fn consume(&mut self, batch: &[Event]) -> Result<()>;
 
+    /// Consume one refcounted chunk — the zero-copy delivery path the
+    /// topology drivers use. The default borrows the chunk's slice into
+    /// [`consume`](EventSink::consume), which is already copy-free for
+    /// sinks that read in place; sinks that *retain* the batch
+    /// (queue-handoff, capture buffers) override this and keep a
+    /// refcount clone instead of a deep copy.
+    fn consume_chunk(&mut self, chunk: &EventChunk) -> Result<()> {
+        self.consume(chunk.as_slice())
+    }
+
     /// The driver's report of the *source* geometry, delivered once
     /// just before [`finish`](EventSink::finish). Geometry-recording
     /// sinks fed through a thinning pipeline use it so the recorded
@@ -268,6 +280,9 @@ impl<K: EventSink + ?Sized> EventSink for &mut K {
     fn consume(&mut self, batch: &[Event]) -> Result<()> {
         (**self).consume(batch)
     }
+    fn consume_chunk(&mut self, chunk: &EventChunk) -> Result<()> {
+        (**self).consume_chunk(chunk)
+    }
     fn observe_geometry(&mut self, res: Resolution) {
         (**self).observe_geometry(res)
     }
@@ -282,6 +297,9 @@ impl<K: EventSink + ?Sized> EventSink for &mut K {
 impl<K: EventSink + ?Sized> EventSink for Box<K> {
     fn consume(&mut self, batch: &[Event]) -> Result<()> {
         (**self).consume(batch)
+    }
+    fn consume_chunk(&mut self, chunk: &EventChunk) -> Result<()> {
+        (**self).consume_chunk(chunk)
     }
     fn observe_geometry(&mut self, res: Resolution) {
         (**self).observe_geometry(res)
@@ -396,6 +414,15 @@ pub struct StreamReport {
     /// stripe re-cuts with skew before/after, chunk-size changes).
     /// `None` when no controllers were configured.
     pub adaptive: Option<AdaptiveReport>,
+    /// Event bytes physically copied between buffers during the run,
+    /// summed over every node report (selection scatters, stage output
+    /// materialization, whole-chunk clones). Broadcast fan-out is
+    /// refcount-only and contributes nothing.
+    pub bytes_moved: u64,
+    /// Whole-batch deep copies during the run, summed over every node
+    /// report. Zero on the stateless zero-copy paths — asserted by the
+    /// chunk-semantics tests.
+    pub chunks_cloned: u64,
 }
 
 impl StreamReport {

@@ -132,7 +132,8 @@ impl ReportEmitter {
             line,
             "{{\"type\":\"final\",\"events_in\":{},\"events_out\":{},\"frames\":{},\
              \"batches\":{},\"peak_in_flight\":{},\"backpressure_waits\":{},\
-             \"wall_s\":{:.6},\"resolution\":[{},{}],\"merge\":{{\
+             \"wall_s\":{:.6},\"resolution\":[{},{}],\
+             \"bytes_moved\":{},\"chunks_cloned\":{},\"merge\":{{\
              \"peak_buffered\":{},\"dropped\":{},\"stalls_broken\":{},\"late_events\":{}}}",
             report.events_in,
             report.events_out,
@@ -143,6 +144,8 @@ impl ReportEmitter {
             report.wall.as_secs_f64(),
             report.resolution.width,
             report.resolution.height,
+            report.bytes_moved,
+            report.chunks_cloned,
             report.merge_peak_buffered,
             report.merge_dropped,
             report.merge_stalls_broken,
@@ -159,13 +162,16 @@ impl ReportEmitter {
                 let _ = write!(
                     line,
                     "{{\"name\":{},\"events\":{},\"batches\":{},\
-                     \"backpressure_waits\":{},\"dropped\":{},\"frames\":{}}}",
+                     \"backpressure_waits\":{},\"dropped\":{},\"frames\":{},\
+                     \"bytes_moved\":{},\"chunks_cloned\":{}}}",
                     json_str(&node.name),
                     node.events,
                     node.batches,
                     node.backpressure_waits,
                     node.dropped,
                     node.frames,
+                    node.bytes_moved,
+                    node.chunks_cloned,
                 );
             }
             line.push(']');

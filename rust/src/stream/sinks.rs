@@ -13,7 +13,7 @@ use crate::net::UdpEventSender;
 use crate::pipeline::framer::Framer;
 use crate::pipeline::viewer;
 
-use super::EventSink;
+use super::{EventChunk, EventSink};
 
 /// Sink-side totals reported by [`EventSink::finish`].
 #[derive(Debug, Clone, Copy, Default)]
@@ -58,8 +58,16 @@ impl EventSink for NullSink {
 /// graph-equivalence tests and the capture half of
 /// `examples/graph_topology.rs`. Memory is O(stream): testing only,
 /// never production topologies.
+///
+/// Batches are retained as refcounted [`EventChunk`]s on the hot path —
+/// no lock and no copy per batch (a zero-copy broadcast delivery is a
+/// refcount bump here too, so the sink cannot mask copy-path
+/// regressions it exists to witness). The shared `Mutex` buffer is
+/// only locked once, when the run flushes at [`finish`](EventSink::finish)
+/// (or at drop, for error paths that skip finish).
 pub struct CaptureSink {
     events: std::sync::Arc<std::sync::Mutex<Vec<Event>>>,
+    chunks: Vec<EventChunk>,
 }
 
 impl CaptureSink {
@@ -67,22 +75,49 @@ impl CaptureSink {
     #[allow(clippy::type_complexity)]
     pub fn new() -> (CaptureSink, std::sync::Arc<std::sync::Mutex<Vec<Event>>>) {
         let events = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
-        (CaptureSink { events: events.clone() }, events)
+        (CaptureSink { events: events.clone(), chunks: Vec::new() }, events)
+    }
+
+    /// Move everything captured so far into the shared buffer. Draining
+    /// makes repeated flushes (finish then drop) naturally idempotent.
+    fn flush(&mut self) {
+        if self.chunks.is_empty() {
+            return;
+        }
+        let mut out = self.events.lock().unwrap();
+        for chunk in self.chunks.drain(..) {
+            out.extend_from_slice(chunk.as_slice());
+        }
     }
 }
 
 impl EventSink for CaptureSink {
     fn consume(&mut self, batch: &[Event]) -> Result<()> {
-        self.events.lock().unwrap().extend_from_slice(batch);
+        // Borrowed-slice entry point: a copy is unavoidable (and
+        // counted, via `from_slice`). Chunk deliveries take the free
+        // path below.
+        self.chunks.push(EventChunk::from_slice(batch));
+        Ok(())
+    }
+
+    fn consume_chunk(&mut self, chunk: &EventChunk) -> Result<()> {
+        self.chunks.push(chunk.clone()); // refcount bump only
         Ok(())
     }
 
     fn finish(&mut self) -> Result<SinkSummary> {
+        self.flush();
         Ok(SinkSummary::default())
     }
 
     fn describe(&self) -> String {
         "capture".into()
+    }
+}
+
+impl Drop for CaptureSink {
+    fn drop(&mut self) {
+        self.flush(); // error paths skip finish(); don't lose the witness
     }
 }
 
@@ -482,8 +517,10 @@ impl EventSink for ViewSink {
 
 /// What flows through a sink pump's ring: batches plus the one
 /// out-of-band geometry notification the driver sends before finish.
+/// Batches cross the thread boundary as refcounted chunks, so handing
+/// one to the pump is a pointer move, not a copy.
 enum SinkMsg {
-    Batch(Vec<Event>),
+    Batch(EventChunk),
     Geometry(Resolution),
 }
 
@@ -533,7 +570,7 @@ impl ThreadedSink {
             let result = (|| -> Result<SinkSummary> {
                 while let Some(msg) = block_on(rx.recv()) {
                     match msg {
-                        SinkMsg::Batch(batch) => sink.consume(&batch)?,
+                        SinkMsg::Batch(batch) => sink.consume_chunk(&batch)?,
                         SinkMsg::Geometry(res) => sink.observe_geometry(res),
                     }
                 }
@@ -565,12 +602,14 @@ impl ThreadedSink {
     }
 }
 
-impl EventSink for ThreadedSink {
-    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+impl ThreadedSink {
+    /// Push one message into the pump ring, suspending on a full ring
+    /// and surfacing a dead pump's error immediately.
+    fn send_to_pump(&mut self, msg: SinkMsg) -> Result<()> {
         let Some(tx) = self.tx.as_mut() else {
             anyhow::bail!("sink {:?} already finished", self.name);
         };
-        match tx.try_send(SinkMsg::Batch(batch.to_vec())) {
+        match tx.try_send(msg) {
             Ok(()) => Ok(()),
             Err(msg) => {
                 // Ring full (backpressure) or pump gone: the blocking
@@ -587,6 +626,17 @@ impl EventSink for ThreadedSink {
                 }
             }
         }
+    }
+}
+
+impl EventSink for ThreadedSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        // Borrowed-slice entry point: the copy is unavoidable (counted).
+        self.send_to_pump(SinkMsg::Batch(EventChunk::from_slice(batch)))
+    }
+
+    fn consume_chunk(&mut self, chunk: &EventChunk) -> Result<()> {
+        self.send_to_pump(SinkMsg::Batch(chunk.clone())) // refcount bump
     }
 
     fn observe_geometry(&mut self, res: Resolution) {

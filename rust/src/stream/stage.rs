@@ -165,6 +165,14 @@ pub trait BatchProcessor: Send {
     /// Process one batch, returning the surviving events in order.
     fn process_batch(&mut self, batch: &[Event]) -> Result<Vec<Event>>;
 
+    /// `true` when the processor is the identity (no stages): the
+    /// driver then routes the incoming chunk through untouched instead
+    /// of materializing an output buffer per batch. Conservative
+    /// default: a processor that does not say is assumed to transform.
+    fn is_identity(&self) -> bool {
+        false
+    }
+
     /// Tear down any execution resources (join shard worker threads).
     /// Called once, after the last batch.
     fn finish_stages(&mut self) -> Result<()> {
@@ -206,6 +214,10 @@ pub trait BatchProcessor: Send {
 impl BatchProcessor for Pipeline {
     fn process_batch(&mut self, batch: &[Event]) -> Result<Vec<Event>> {
         Ok(self.process(batch))
+    }
+
+    fn is_identity(&self) -> bool {
+        self.is_empty()
     }
 
     fn describe(&self) -> String {
@@ -440,19 +452,41 @@ fn apply_shard(stage: &mut dyn EventTransform, batch: Vec<ShardItem>) -> ShardOu
 /// home stripe; events within `halo` pixels of a stripe boundary are
 /// additionally ghosted to the adjacent stripe. Returns per-shard
 /// inputs plus per-shard home-event counts.
+///
+/// Single-pass partition in the counting sense: one scan sizes every
+/// shard exactly (home + ghost), so the fill scan appends into
+/// right-sized buffers — no push-growth reallocations mid-batch, which
+/// on the hot path showed up as the dominant allocator traffic.
 fn route_stripes(
     batch: &[Event],
     cut: &StripeCut,
     halo: u16,
 ) -> (Vec<Vec<ShardItem>>, Vec<u64>) {
     let m = cut.shards();
-    let mut parts: Vec<Vec<ShardItem>> = (0..m).map(|_| Vec::new()).collect();
-    let mut homes = vec![0u64; m];
     let halo = halo as usize;
+    // Pass 1: exact per-shard counts (home and ghost together).
+    let mut counts = vec![0usize; m];
+    let mut homes = vec![0u64; m];
+    for &ev in batch {
+        let s = cut.index(ev.x);
+        counts[s] += 1;
+        homes[s] += 1;
+        if halo > 0 {
+            let x = ev.x as usize;
+            if s > 0 && x < cut.lo(s) as usize + halo {
+                counts[s - 1] += 1;
+            }
+            if s + 1 < m && x + halo >= cut.hi(s) as usize {
+                counts[s + 1] += 1;
+            }
+        }
+    }
+    // Pass 2: fill the exactly-sized shard inputs.
+    let mut parts: Vec<Vec<ShardItem>> =
+        counts.into_iter().map(Vec::with_capacity).collect();
     for (seq, &ev) in batch.iter().enumerate() {
         let s = cut.index(ev.x);
         parts[s].push((seq as u64, ev, false));
-        homes[s] += 1;
         if halo > 0 {
             let x = ev.x as usize;
             if s > 0 && x < cut.lo(s) as usize + halo {
@@ -652,6 +686,10 @@ impl BatchProcessor for StageGraph {
             current = node.process(&current)?;
         }
         Ok(current)
+    }
+
+    fn is_identity(&self) -> bool {
+        self.nodes.is_empty()
     }
 
     fn finish_stages(&mut self) -> Result<()> {

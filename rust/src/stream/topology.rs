@@ -62,6 +62,7 @@ use crate::rt::{
 };
 
 use super::adapt::{Adaptor, AdaptiveConfig, AdaptiveRuntime, DEFAULT_EPOCH_BATCHES};
+use super::chunk::{self, EventChunk, EVENT_BYTES};
 use super::merge::MergeCore;
 use super::report::{ReportEmitter, ReportTarget};
 use super::sources::grow_resolution;
@@ -706,42 +707,66 @@ fn pump<S: EventSource>(
 
 // --------------------------------------------------------------- fan-out
 
-/// Split one processed batch into per-sink batches.
+/// Split one processed chunk into per-sink chunks.
+///
+/// Broadcast is **copy-free**: every sink receives a refcount clone of
+/// the same chunk. The selection policies (polarity, stripes) are
+/// single-pass-counted: one scan over the chunk computes every part's
+/// size, then exact-capacity parts are filled — each surviving event is
+/// written once *total* (counted as `bytes_moved`), never once per
+/// sink, and no part ever reallocates.
 fn partition(
-    processed: Vec<Event>,
+    processed: EventChunk,
     route: &RoutePolicy,
     canvas: Resolution,
     m: usize,
-) -> Vec<Vec<Event>> {
+) -> Vec<EventChunk> {
     match route {
-        RoutePolicy::Broadcast => {
-            let mut parts = Vec::with_capacity(m);
-            for _ in 0..m - 1 {
-                parts.push(processed.clone());
-            }
-            parts.push(processed);
-            parts
-        }
+        RoutePolicy::Broadcast => vec![processed; m],
         RoutePolicy::Polarity => {
-            let (mut on, mut off) = (Vec::new(), Vec::new());
-            for ev in processed {
+            let events = processed.as_slice();
+            let on_n = events.iter().filter(|ev| ev.p.is_on()).count();
+            let mut on = Vec::with_capacity(on_n);
+            let mut off = Vec::with_capacity(events.len() - on_n);
+            for &ev in events {
                 if ev.p.is_on() {
                     on.push(ev);
                 } else {
                     off.push(ev);
                 }
             }
-            vec![on, off]
+            chunk::note_events_moved(events.len());
+            vec![EventChunk::from_vec(on), EventChunk::from_vec(off)]
         }
         RoutePolicy::Stripes => {
             // Same cut as the sharded stage nodes, so "stripe i" means
             // the same pixel columns at every layer.
+            let events = processed.as_slice();
             let stripe = stripe_cut(canvas.width, m);
-            let mut parts = vec![Vec::new(); m];
-            for ev in processed {
+            let mut counts = vec![0usize; m];
+            for ev in events {
+                counts[stripe_index(ev.x, stripe, m)] += 1;
+            }
+            let mut parts: Vec<Vec<Event>> =
+                counts.into_iter().map(Vec::with_capacity).collect();
+            for &ev in events {
                 parts[stripe_index(ev.x, stripe, m)].push(ev);
             }
-            parts
+            chunk::note_events_moved(events.len());
+            parts.into_iter().map(EventChunk::from_vec).collect()
+        }
+    }
+}
+
+/// Attribute one partition's selection-copy traffic to the destination
+/// sink nodes (broadcast moves nothing — the parts are refcount views).
+fn note_partition_traffic(route: &RoutePolicy, parts: &[EventChunk], nodes: &[Arc<LiveNode>]) {
+    if matches!(route, RoutePolicy::Broadcast) {
+        return;
+    }
+    for (part, node) in parts.iter().zip(nodes) {
+        if !part.is_empty() {
+            node.add_bytes_moved((part.len() * EVENT_BYTES) as u64);
         }
     }
 }
@@ -833,11 +858,21 @@ impl<K: EventSink> BranchRun<K> {
     /// the sink, counting delivered events on the branch's sink node.
     /// `consume_empty` preserves the single-sink drivers' historical
     /// behavior of consuming empty batches; the fan drivers skip them.
-    fn deliver(&mut self, part: Vec<Event>, node: &LiveNode, consume_empty: bool) -> Result<()> {
+    ///
+    /// Chain-free (and identity-chain) branches hand the routed chunk to
+    /// the sink as-is — a borrow or refcount bump, never a copy. A real
+    /// branch chain materializes its output once (counted as the node's
+    /// `bytes_moved`), which is the transform's own buffer, not a
+    /// routing copy.
+    fn deliver(&mut self, part: EventChunk, node: &LiveNode, consume_empty: bool) -> Result<()> {
         let out = match &mut self.graph {
-            Some(graph) if !part.is_empty() => graph
-                .process_batch(&part)
-                .with_context(|| format!("branch {:?} stage", self.label))?,
+            Some(graph) if !graph.is_identity() && !part.is_empty() => {
+                let processed = graph
+                    .process_batch(part.as_slice())
+                    .with_context(|| format!("branch {:?} stage", self.label))?;
+                node.add_bytes_moved((processed.len() * EVENT_BYTES) as u64);
+                EventChunk::from_vec(processed)
+            }
             _ => part,
         };
         if !out.is_empty() {
@@ -846,7 +881,22 @@ impl<K: EventSink> BranchRun<K> {
         } else if !consume_empty {
             return Ok(());
         }
-        self.sink.consume(&out).context("stream sink")
+        self.sink.consume_chunk(&out).context("stream sink")
+    }
+}
+
+/// Apply the shared stage chain to one merged chunk. The identity chain
+/// (no stages) passes the chunk through untouched — the refcount path
+/// that keeps stateless topologies copy-free end to end; a real chain
+/// materializes its output buffer once, which every branch then shares.
+fn process_shared<P: BatchProcessor + ?Sized>(
+    shared: &mut P,
+    batch: EventChunk,
+) -> Result<EventChunk> {
+    if shared.is_identity() {
+        Ok(batch)
+    } else {
+        Ok(EventChunk::from_vec(shared.process_batch(batch.as_slice())?))
     }
 }
 
@@ -1216,6 +1266,13 @@ where
         report.dropped += summary.dropped;
         sink_reports.push(report);
     }
+    let sources = merged.node_reports();
+    let all_nodes = sources.iter().chain(stages.iter()).chain(sink_reports.iter());
+    let (mut bytes_moved, mut chunks_cloned) = (0u64, 0u64);
+    for node in all_nodes {
+        bytes_moved += node.bytes_moved;
+        chunks_cloned += node.chunks_cloned;
+    }
     let report = StreamReport {
         events_in: outcome.events_in,
         events_out: outcome.events_out,
@@ -1225,9 +1282,11 @@ where
         backpressure_waits: outcome.backpressure_waits,
         wall: t0.elapsed(),
         resolution: final_res,
-        sources: merged.node_reports(),
+        sources,
         stages,
         sinks: sink_reports,
+        bytes_moved,
+        chunks_cloned,
         merge_peak_buffered: merged.peak_buffered(),
         merge_dropped: merged.layout_dropped(),
         merge_stalls_broken: merged.stalls_broken(),
@@ -1274,29 +1333,22 @@ where
         outcome.events_in += batch.len() as u64;
         outcome.batches += 1;
         outcome.peak_in_flight = outcome.peak_in_flight.max(batch.len());
-        let processed = shared.process_batch(&batch).context("pipeline stage")?;
+        let processed =
+            process_shared(shared, EventChunk::from_vec(batch)).context("pipeline stage")?;
         outcome.events_out += processed.len() as u64;
         if m == 1 {
             branches[0].deliver(processed, &sink_nodes[0], true)?;
         } else if !processed.is_empty() {
-            if *route == RoutePolicy::Broadcast && branches.iter().all(|b| b.graph.is_none()) {
-                // Sinks borrow the batch; the chain-free sync path needs
-                // no owned copies (the coroutine path does, for its
-                // channels, and branch chains need owned inputs).
-                for (i, branch) in branches.iter_mut().enumerate() {
-                    sink_nodes[i].add_events(processed.len() as u64);
-                    sink_nodes[i].add_batch();
-                    branch.sink.consume(&processed).context("stream sink")?;
+            // Broadcast parts are refcount views of one buffer, so the
+            // uniform partition path is as copy-free as the old
+            // borrow-the-batch special case was.
+            let parts = partition(processed, route, canvas, m);
+            note_partition_traffic(route, &parts, sink_nodes);
+            for (i, part) in parts.into_iter().enumerate() {
+                if part.is_empty() {
+                    continue;
                 }
-            } else {
-                for (i, part) in
-                    partition(processed, route, canvas, m).into_iter().enumerate()
-                {
-                    if part.is_empty() {
-                        continue;
-                    }
-                    branches[i].deliver(part, &sink_nodes[i], false)?;
-                }
+                branches[i].deliver(part, &sink_nodes[i], false)?;
             }
         }
         if let Some(adaptor) = adaptor.as_mut() {
@@ -1332,7 +1384,7 @@ struct ProducerGauges {
 fn spawn_producer<'a, S: EventSource>(
     ex: &LocalExecutor<'a>,
     source: &'a mut FusedSource<S>,
-    tx: Sender<Vec<Event>>,
+    tx: Sender<EventChunk>,
     gauges: &'a ProducerGauges,
     source_err: &'a RefCell<Option<anyhow::Error>>,
     chunk_request: &'a Cell<Option<usize>>,
@@ -1363,7 +1415,9 @@ fn spawn_producer<'a, S: EventSource>(
             let n = batch.len();
             gauges.events_in.set(gauges.events_in.get() + n as u64);
             gauges.batches.set(gauges.batches.get() + 1);
-            match tx.try_send(batch) {
+            // The source's owned batch becomes the refcounted chunk the
+            // whole downstream graph shares — a pointer move, no copy.
+            match tx.try_send(EventChunk::from_vec(batch)) {
                 Ok(()) => {}
                 Err(TrySendError::Closed(_)) => break, // consumer died
                 Err(TrySendError::Full(batch)) => {
@@ -1408,7 +1462,7 @@ where
 
     {
         let ex = LocalExecutor::new();
-        let (tx, mut rx) = channel::<Vec<Event>>(channel_capacity);
+        let (tx, mut rx) = channel::<EventChunk>(channel_capacity);
         spawn_producer(&ex, source, tx, &gauges, &source_err, &chunk_request);
 
         // ---------------------------------------------------- consumer
@@ -1424,7 +1478,7 @@ where
             ex.spawn(async move {
                 while let Some(batch) = rx.recv().await {
                     gauges.in_flight.set(gauges.in_flight.get() - batch.len());
-                    let processed = match shared.process_batch(&batch) {
+                    let processed = match process_shared(shared, batch) {
                         Ok(processed) => processed,
                         Err(e) => {
                             *stage_err.borrow_mut() = Some(e);
@@ -1510,13 +1564,13 @@ where
 
     {
         let ex = LocalExecutor::new();
-        let (tx, mut rx) = channel::<Vec<Event>>(channel_capacity);
+        let (tx, mut rx) = channel::<EventChunk>(channel_capacity);
         spawn_producer(&ex, source, tx, &gauges, &source_err, &chunk_request);
 
         // ------------------------------------------------- branch tasks
         let mut sink_txs = Vec::with_capacity(m);
         for (i, branch) in branches.iter_mut().enumerate() {
-            let (stx, mut srx) = channel::<Vec<Event>>(channel_capacity);
+            let (stx, mut srx) = channel::<EventChunk>(channel_capacity);
             sink_txs.push(stx);
             let err = &sink_errs[i];
             let node = sink_nodes[i].clone();
@@ -1544,7 +1598,7 @@ where
                 let txs = sink_txs;
                 'route: while let Some(batch) = rx.recv().await {
                     gauges.in_flight.set(gauges.in_flight.get() - batch.len());
-                    let processed = match shared.process_batch(&batch) {
+                    let processed = match process_shared(shared, batch) {
                         Ok(processed) => processed,
                         Err(e) => {
                             *stage_err.borrow_mut() = Some(e);
@@ -1553,9 +1607,9 @@ where
                     };
                     events_out.set(events_out.get() + processed.len() as u64);
                     if !processed.is_empty() {
-                        for (i, part) in
-                            partition(processed, &route, canvas, m).into_iter().enumerate()
-                        {
+                        let parts = partition(processed, &route, canvas, m);
+                        note_partition_traffic(&route, &parts, &sink_nodes);
+                        for (i, part) in parts.into_iter().enumerate() {
                             if part.is_empty() {
                                 continue;
                             }

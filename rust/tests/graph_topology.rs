@@ -191,6 +191,106 @@ fn per_source_threads_lower_byte_identically() {
     }
 }
 
+/// Serial Vec-baseline partition of an already-processed stream: the
+/// routing semantics written out longhand over owned `Vec`s, which is
+/// exactly what the pre-chunk topology computed.
+fn route_reference(
+    processed: &[Event],
+    route: RoutePolicy,
+    m: usize,
+    canvas: Resolution,
+) -> Vec<Vec<Event>> {
+    match route {
+        RoutePolicy::Broadcast => vec![processed.to_vec(); m],
+        RoutePolicy::Polarity => {
+            let (on, off): (Vec<Event>, Vec<Event>) =
+                processed.iter().copied().partition(|ev| ev.p.is_on());
+            vec![on, off]
+        }
+        RoutePolicy::Stripes => {
+            let stripe = (canvas.width as usize).div_ceil(m).max(1);
+            let mut parts = vec![Vec::new(); m];
+            for &ev in processed {
+                parts[(ev.x as usize / stripe).min(m - 1)].push(ev);
+            }
+            parts
+        }
+    }
+}
+
+/// The zero-copy currency property: across chunk sizes 1–7 (splitting
+/// batches at every alignment), shards 1–4, all three route policies,
+/// and inline vs threaded sources+shards, per-sink output is
+/// byte-identical to the serial Vec baseline (batch fuse → batch
+/// pipeline → longhand partition) — and the streaming core performs
+/// **zero** whole-chunk deep copies, asserted through the per-run
+/// `chunks_cloned` counters. Any future copy sneaking back into the
+/// broadcast/stripe/delivery path trips this test.
+#[test]
+fn chunk_views_match_the_vec_baseline_with_zero_clones() {
+    let events = streams(2);
+    let layout = SourceLayout::side_by_side(&[RES, RES]);
+    let (fused, _) = aestream::pipeline::fusion::fuse(&[&events[0], &events[1]], &layout);
+    let processed = stage_spec().build_pipeline(layout.canvas).process(&fused);
+    for &(route, m) in
+        &[(RoutePolicy::Broadcast, 2), (RoutePolicy::Polarity, 2), (RoutePolicy::Stripes, 3)]
+    {
+        let expect = route_reference(&processed, route, m, layout.canvas);
+        for chunk in 1..=7usize {
+            for shards in 1..=4usize {
+                for threaded in [false, true] {
+                    let tag = format!(
+                        "route={route:?} chunk={chunk} shards={shards} threaded={threaded}"
+                    );
+                    let mut builder = Topology::builder();
+                    for (i, stream) in events.iter().enumerate() {
+                        builder = builder.source_with(
+                            &format!("in{i}"),
+                            MemorySource::new(stream.clone(), RES, chunk),
+                            SourceOptions { offset: None, threaded },
+                        );
+                    }
+                    builder = builder
+                        .merge_with_layout("fuse", &["in0", "in1"], FusionLayout::SideBySide)
+                        .stages_with(
+                            "filters",
+                            stage_spec(),
+                            StageOptions { shards, shard_threads: threaded },
+                        )
+                        .route("split", route);
+                    let mut handles = Vec::new();
+                    for j in 0..m {
+                        let (sink, handle) = CaptureSink::new();
+                        builder = builder.after("split").sink(&format!("out{j}"), sink);
+                        handles.push(handle);
+                    }
+                    let config = GraphConfig {
+                        chunk_size: chunk,
+                        driver: StreamDriver::Coroutine { channel_capacity: 1 },
+                        adaptive: None,
+                        report_json: None,
+                    };
+                    let report = builder.build().run(config).unwrap();
+                    let got: Vec<Vec<Event>> =
+                        handles.iter().map(|h| h.lock().unwrap().clone()).collect();
+                    assert_eq!(got, expect, "{tag}: sink bytes diverged from the Vec baseline");
+                    assert_eq!(
+                        report.chunks_cloned, 0,
+                        "{tag}: the streaming core deep-copied a chunk"
+                    );
+                    for sink in &report.sinks {
+                        assert_eq!(
+                            sink.chunks_cloned, 0,
+                            "{tag}: sink {} cloned its deliveries",
+                            sink.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Golden lowering: parsing CLI clauses and hand-building the same
 /// topology with the fluent builder yield the same `GraphSpec`.
 #[test]

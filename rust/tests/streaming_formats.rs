@@ -4,7 +4,7 @@
 //! split packed words, packet headers, and CSV lines.
 
 use aestream::aer::{Event, Resolution};
-use aestream::formats::{self, Format};
+use aestream::formats::{self, EventCodec, Format};
 use aestream::pipeline::Pipeline;
 use aestream::stream::{self, EventSink, EventSource, FileSink, FileSource, StreamConfig};
 use aestream::testutil::{synthetic_events, synthetic_events_seeded};
@@ -99,6 +99,79 @@ fn streamed_files_match_batch_written_files_event_for_event() {
         assert_eq!(drain(&mut source), events, "{format}: batch-written, stream-read");
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// SIMD-vs-scalar equivalence fuzz: the dispatching word decoders in
+/// `formats::simd` must be word-for-word identical to their scalar
+/// reference loops no matter where the stream is split. Every piece
+/// size below breaks the body at word multiples that land the SSE2
+/// blocks (4×u32 for EVT2, 8×u16 for EVT3) across piece boundaries,
+/// forcing the dispatcher to re-enter mid-run with carried decoder
+/// state. Compiled in every configuration; built with `--features simd`
+/// this is the SIMD equivalence gate, and on the default build it pins
+/// the dispatcher to the reference semantics.
+#[test]
+fn word_decoders_match_scalar_reference_at_every_split() {
+    use aestream::formats::simd;
+
+    /// Skip the `%`-comment header lines of a Prophesee-style file.
+    fn percent_body(bytes: &[u8]) -> &[u8] {
+        let mut off = 0;
+        while off < bytes.len() && bytes[off] == b'%' {
+            off += bytes[off..].iter().position(|&b| b == b'\n').unwrap() + 1;
+        }
+        &bytes[off..]
+    }
+
+    let events = synthetic_events_seeded(5000, 640, 480, 0x51D2);
+    let res = Resolution::new(640, 480);
+
+    // EVT2: 4-byte words, SSE2 classifies 4-word blocks.
+    let mut enc = Vec::new();
+    Format::Evt2.codec().encode(&events, res, &mut enc).unwrap();
+    let body = percent_body(&enc);
+    let mut want = Vec::new();
+    let mut want_th = None;
+    simd::decode_evt2_words_scalar(body, &mut want_th, &mut want).unwrap();
+    for words in [1usize, 2, 3, 5, 7, 61] {
+        let (mut got, mut th) = (Vec::new(), None);
+        for piece in body.chunks(words * 4) {
+            simd::decode_evt2_words(piece, &mut th, &mut got).unwrap();
+        }
+        assert_eq!(got, want, "evt2 split into {words}-word pieces");
+        assert_eq!(th, want_th, "evt2 carried TIME_HIGH, {words}-word pieces");
+    }
+
+    // EVT3: 2-byte words, SSE2 classifies 8-word ADDR_X runs.
+    let mut enc = Vec::new();
+    Format::Evt3.codec().encode(&events, res, &mut enc).unwrap();
+    let body = percent_body(&enc);
+    let mut want = Vec::new();
+    let mut want_state = simd::Evt3State::default();
+    simd::decode_evt3_words_scalar(body, &mut want_state, &mut want).unwrap();
+    for words in [1usize, 3, 5, 7, 9, 127] {
+        let (mut got, mut state) = (Vec::new(), simd::Evt3State::default());
+        for piece in body.chunks(words * 2) {
+            simd::decode_evt3_words(piece, &mut state, &mut got).unwrap();
+        }
+        assert_eq!(got, want, "evt3 split into {words}-word pieces");
+    }
+
+    // Raw: 8-byte packed words behind a fixed 16-byte header; the
+    // dispatcher is the unrolled autovectorized loop on every target.
+    let mut enc = Vec::new();
+    Format::Raw.codec().encode(&events, res, &mut enc).unwrap();
+    let body = &enc[16..];
+    let mut want = Vec::new();
+    simd::decode_raw_words_scalar(body, &mut want);
+    assert_eq!(want, events, "raw scalar decode is the identity");
+    for words in [1usize, 2, 3, 5, 129] {
+        let mut got = Vec::new();
+        for piece in body.chunks(words * 8) {
+            simd::decode_raw_words(piece, &mut got);
+        }
+        assert_eq!(got, want, "raw split into {words}-word pieces");
+    }
 }
 
 #[test]
