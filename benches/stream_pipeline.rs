@@ -12,6 +12,12 @@
 //! order either by the single-thread coroutine merge or with one OS
 //! thread per source feeding the executor over the lock-free ring.
 //!
+//! A merge lane-sweep section benchmarks the k-way merge core alone at
+//! 1/4/16/128 lanes on bursty streams: bulk drain (loser tree + run
+//! gallop) vs the per-event linear scan kept as `pop_min_linear`, with
+//! pool hit rate per row and an asserted ≥2× bulk win at 128 lanes,
+//! plus a zero-clone tripwire on the single-active-lane fused path.
+//!
 //! A graph section runs the same fan-in shape twice — through the
 //! legacy `stream::run_topology` entry and described as a `GraphSpec`
 //! (built + validated + compiled per iteration) — and asserts the
@@ -227,6 +233,170 @@ fn main() {
                 stats.throughput((per * k) as u64),
             ));
         }
+    }
+
+    // --- merge lane sweep: the k-way merge core itself, fed bursty
+    // per-lane batches (64 consecutive timestamps per burst, bursts
+    // round-robined over lanes), drained either in bulk (loser tree +
+    // run gallop) or through the old O(k) per-event linear scan kept as
+    // `pop_min_linear`. Both paths share the identical segment feed and
+    // buffer pool, so the rows isolate pure selection/emission cost.
+    // The 128-lane ratio is asserted: bulk must be ≥2× the scan.
+    {
+        use aestream::aer::Polarity;
+        use aestream::stream::merge::MergeCore;
+        use aestream::stream::{copy_counters, ChunkPool, FusedSource, PoolCounters};
+
+        /// Events per burst (one contiguous run through the merge).
+        const BURST: usize = 64;
+        /// Events per pushed segment (the producer batch size).
+        const SEG: usize = 4096;
+
+        /// Split `n` strictly-increasing timestamps into `k` per-lane
+        /// streams, `BURST` consecutive events at a time.
+        fn burst_lanes(n: usize, k: usize, res: Resolution) -> Vec<Vec<Event>> {
+            let mut lanes = vec![Vec::new(); k];
+            for b in 0..n / BURST {
+                let lane = &mut lanes[b % k];
+                for j in 0..BURST {
+                    let t = (b * BURST + j) as u64;
+                    lane.push(Event {
+                        t,
+                        x: (t % res.width as u64) as u16,
+                        y: ((t / res.width as u64) % res.height as u64) as u16,
+                        p: Polarity::from_bool(t & 1 == 1),
+                    });
+                }
+            }
+            lanes
+        }
+
+        /// One full merge: refill every dry lane from its stream (one
+        /// pooled segment per refill), drain until a lane dries, repeat.
+        /// Identical feed for both modes; only the pop differs.
+        fn drive(lanes_data: &[Vec<Event>], bulk: bool) -> (u64, PoolCounters) {
+            let k = lanes_data.len();
+            let pool = ChunkPool::new();
+            let mut core: MergeCore<Event> = MergeCore::new(k);
+            core.set_keep_drained(true);
+            let mut pos = vec![0usize; k];
+            let mut out = 0u64;
+            while !core.all_done() {
+                for i in 0..k {
+                    if core.lane_len(i) > 0 {
+                        continue;
+                    }
+                    if pos[i] < lanes_data[i].len() {
+                        let end = (pos[i] + SEG).min(lanes_data[i].len());
+                        let mut buf = pool.get(end - pos[i]);
+                        buf.extend_from_slice(&lanes_data[i][pos[i]..end]);
+                        pos[i] = end;
+                        core.push_vec(i, buf);
+                    } else if !core.is_exhausted(i) {
+                        core.exhaust(i);
+                    }
+                }
+                // Every lane is now non-empty or exhausted, so popping
+                // cannot leapfrog pending data; stop when the consumed
+                // lane dries (the refill point).
+                if bulk {
+                    while let Some(run) = core.pop_run(usize::MAX, |ev: &Event| ev.t) {
+                        out += run.len() as u64;
+                        let lane = run.lane();
+                        std::hint::black_box(run.as_slice().as_ptr());
+                        if core.lane_len(lane) == 0 {
+                            break;
+                        }
+                    }
+                } else {
+                    while let Some((lane, ev)) = core.pop_min_linear(|ev: &Event| ev.t) {
+                        out += 1;
+                        std::hint::black_box(ev.t);
+                        if core.lane_len(lane) == 0 {
+                            break;
+                        }
+                    }
+                }
+                for buf in core.take_drained() {
+                    pool.recycle_arc(buf);
+                }
+            }
+            (out, pool.counters())
+        }
+
+        let mut means = std::collections::HashMap::new();
+        for &k in &[1usize, 4, 16, 128] {
+            let lanes = burst_lanes(n, k, res);
+            let total: u64 = lanes.iter().map(|l| l.len() as u64).sum();
+            for &bulk in &[true, false] {
+                let name = format!("merge{k}-{}", if bulk { "bulk" } else { "linear" });
+                let mut hit_rate = 0.0f64;
+                let stats = measure(1, samples, || {
+                    let (out, counters) = drive(&lanes, bulk);
+                    assert_eq!(out, total, "{name}: merge lost events");
+                    let served = counters.hits + counters.misses;
+                    hit_rate = if served == 0 {
+                        0.0
+                    } else {
+                        counters.hits as f64 / served as f64
+                    };
+                    std::hint::black_box(out);
+                });
+                means.insert((k, bulk), stats.mean_s);
+                table.row(&[
+                    name.clone(),
+                    SEG.to_string(),
+                    stats.display_mean(),
+                    fmt_rate(stats.throughput(total), "ev/s"),
+                    format!("pool {:.0}%", hit_rate * 100.0),
+                    "-".into(),
+                ]);
+                json_lines.push(format!(
+                    "{{\"name\":\"{name}\",\"chunk\":{SEG},\"mean_s\":{:.6},\
+                     \"std_s\":{:.6},\"min_s\":{:.6},\"throughput_ev_s\":{:.0},\
+                     \"events_per_sec\":{:.0},\"pool_hit_rate\":{hit_rate:.3}}}",
+                    stats.mean_s,
+                    stats.std_s,
+                    stats.min_s,
+                    stats.throughput(total),
+                    stats.throughput(total),
+                ));
+            }
+        }
+        assert!(
+            means[&(128usize, true)] * 2.0 <= means[&(128usize, false)],
+            "bulk merge must be ≥2× the linear scan at 128 lanes ({:.6}s vs {:.6}s)",
+            means[&(128usize, true)],
+            means[&(128usize, false)]
+        );
+
+        // Zero-copy tripwire (benches run sequentially, so the
+        // process-wide counters are exact): a fused merge whose second
+        // lane is exhausted has one active lane and must emit pure run
+        // views — zero chunk clones end to end.
+        let events = synthetic_events_seeded(n.min(200_000), res.width, res.height, 0x2E0C);
+        let mut fused = FusedSource::new(
+            vec![
+                MemorySource::new(events.clone(), res, SEG),
+                MemorySource::new(Vec::new(), res, SEG),
+            ],
+            None,
+            SEG,
+        );
+        let before = copy_counters();
+        let mut out = 0u64;
+        while let Some(chunk) = fused.next_chunk().unwrap() {
+            out += chunk.len() as u64;
+            std::hint::black_box(chunk.as_slice().as_ptr());
+        }
+        assert_eq!(out, events.len() as u64);
+        let zero_d = copy_counters().delta(&before);
+        assert_eq!(zero_d.chunks_cloned, 0, "single-active-lane merge must stay zero-copy");
+        json_lines.push(format!(
+            "{{\"name\":\"merge1-zerocopy\",\"chunk\":{SEG},\"events\":{out},\
+             \"chunks_cloned\":{},\"bytes_moved\":{}}}",
+            zero_d.chunks_cloned, zero_d.bytes_moved,
+        ));
     }
 
     // --- graph-compiled topology vs the legacy engine entry: the same
@@ -700,6 +870,8 @@ fn main() {
     println!("peak in-flight is the memory bound: batch-collect holds the whole");
     println!("stream; the incremental drivers hold ≤ capacity × chunk events;");
     println!("fan-in runs additionally hold ≤ sources × chunk in merge carries;");
+    println!("merge* rows drive the k-way merge core directly (bulk runs vs the");
+    println!("linear scan); their 5th column is the buffer-pool hit rate.");
     println!("shard runs additionally hold ≤ one batch in flight per shard.");
     println!("adaptive-* rows stream a hotspot (90% of events in one eighth of");
     println!("the canvas); their 5th column is the final shard skew under the");

@@ -31,17 +31,25 @@
 //!   [`stream::EventChunk`] range views, so broadcast/stripe routing
 //!   and delivery are refcount bumps, with per-node
 //!   `bytes_moved`/`chunks_cloned` copy-traffic counters surfaced in
-//!   `StreamReport` and `--report-json`;
+//!   `StreamReport` and `--report-json`; batch buffers recycle through
+//!   the sole-owner [`stream::ChunkPool`] (`pool_hits`/`pool_misses`
+//!   metered alongside the copy counters);
+//! * [`stream::merge`] — the shared k-way merge core: a loser tree
+//!   selects the next lane in O(log k) and emits whole *runs*
+//!   (galloped via `partition_point`) as zero-copy views of the
+//!   producer's buffer, with the old linear scan retained as the
+//!   property-tested equivalence oracle;
 //! * [`stream::stage`] — pipeline stages as first-class topology
 //!   nodes: shardable stages run as N stripe-shard workers (inline or
 //!   one OS thread each) with halo ghost events and a sequence-keyed
 //!   re-merge, byte-identical to the serial pipeline;
 //! * [`stream::topology`] — fan-in/fan-out graphs over that layer:
-//!   N sources merged in timestamp order (optionally one OS thread per
-//!   source over the lock-free ring; idle live sources heartbeat after
-//!   a bounded grace instead of stalling the merge), one shared stage
-//!   chain, M routed sinks (optionally one pump thread per sink), with
-//!   per-node counters in `StreamReport`;
+//!   N sources merged in timestamp order through the bulk merge core
+//!   (optionally one OS thread per source over the lock-free ring;
+//!   idle live sources heartbeat after a bounded grace instead of
+//!   stalling the merge; a single active lane streams zero-copy run
+//!   views), one shared stage chain, M routed sinks (optionally one
+//!   pump thread per sink), with per-node counters in `StreamReport`;
 //! * [`stream::graph`] — declarative topology graphs: a
 //!   [`stream::GraphSpec`] of named source/merge/stage/router/sink
 //!   nodes with explicit edges, built via [`stream::Topology`]'s
@@ -64,7 +72,8 @@
 //! * [`engine`] — the Fig. 3 concurrency contenders (sync / threads /
 //!   coroutines / lock-free ring);
 //! * [`rt`] — the hand-rolled cooperative async runtime (coroutines);
-//! * [`sync`] — lock-free SPSC ring;
+//! * [`sync`] — lock-free SPSC ring (head/tail on separate cache lines
+//!   to kill false sharing between producer and consumer);
 //! * [`runtime`] — XLA/PJRT device runtime with host→device transfer
 //!   accounting (the paper's GPU stand-in);
 //! * [`snn`] — pure-Rust LIF + convolution reference edge detector;

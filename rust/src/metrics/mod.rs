@@ -49,6 +49,11 @@ pub struct NodeReport {
     /// stateless zero-copy delivery paths (broadcast and stripe/polarity
     /// routing) — asserted by the chunk-semantics tests.
     pub chunks_cloned: u64,
+    /// Output buffers this node obtained from the chunk pool's free
+    /// list (no allocation).
+    pub pool_hits: u64,
+    /// Output buffers this node had to allocate fresh (empty pool).
+    pub pool_misses: u64,
     /// Sharded stage nodes: home events routed to each shard (ghost
     /// copies excluded). Empty for unsharded nodes. Sums to
     /// [`events`](NodeReport::events).
@@ -114,6 +119,8 @@ pub struct LiveNode {
     dropped: AtomicU64,
     bytes_moved: AtomicU64,
     chunks_cloned: AtomicU64,
+    pool_hits: AtomicU64,
+    pool_misses: AtomicU64,
     shards: Mutex<ShardCells>,
 }
 
@@ -137,6 +144,8 @@ impl LiveNode {
             dropped: AtomicU64::new(0),
             bytes_moved: AtomicU64::new(0),
             chunks_cloned: AtomicU64::new(0),
+            pool_hits: AtomicU64::new(0),
+            pool_misses: AtomicU64::new(0),
             shards: Mutex::new(ShardCells::default()),
         }
     }
@@ -174,6 +183,16 @@ impl LiveNode {
     /// Count one whole-batch deep copy made for this node.
     pub fn add_chunk_cloned(&self) {
         self.chunks_cloned.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one pooled-buffer reuse (no allocation) for this node.
+    pub fn add_pool_hit(&self) {
+        self.pool_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one fresh buffer allocation (pool empty) for this node.
+    pub fn add_pool_miss(&self) {
+        self.pool_misses.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one batch's per-shard home-event counts (both lanes).
@@ -223,6 +242,8 @@ impl LiveNode {
             frames: 0,
             bytes_moved: self.bytes_moved.load(Ordering::Relaxed),
             chunks_cloned: self.chunks_cloned.load(Ordering::Relaxed),
+            pool_hits: self.pool_hits.load(Ordering::Relaxed),
+            pool_misses: self.pool_misses.load(Ordering::Relaxed),
             shard_events: self.shards.lock().unwrap().cut.clone(),
         }
     }

@@ -47,7 +47,7 @@
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::aer::Event;
 
@@ -130,9 +130,32 @@ impl EventChunk {
         EventChunk::from_vec(events.to_vec())
     }
 
-    /// The empty chunk.
+    /// The empty chunk. Every call clones one process-wide shared
+    /// buffer — stall polls and idle heartbeats that emit empties on
+    /// the hot path cost a refcount bump, not an allocation.
     pub fn empty() -> EventChunk {
-        EventChunk { buf: Arc::new(Vec::new()), start: 0, len: 0 }
+        static EMPTY: OnceLock<Arc<Vec<Event>>> = OnceLock::new();
+        let buf = EMPTY.get_or_init(|| Arc::new(Vec::new()));
+        EventChunk { buf: Arc::clone(buf), start: 0, len: 0 }
+    }
+
+    /// Reassemble a chunk from a shared buffer and a range — the
+    /// merge's zero-copy run-emission path. Counterpart of
+    /// [`into_parts`](Self::into_parts); never counted.
+    pub(crate) fn from_parts(buf: Arc<Vec<Event>>, start: usize, len: usize) -> EventChunk {
+        debug_assert!(start + len <= buf.len(), "parts out of bounds");
+        EventChunk { buf, start, len }
+    }
+
+    /// Decompose the view into its shared buffer and range (free).
+    pub(crate) fn into_parts(self) -> (Arc<Vec<Event>>, usize, usize) {
+        (self.buf, self.start, self.len)
+    }
+
+    /// Borrow the shared backing buffer (for pool recycling, which
+    /// needs the `Arc` identity rather than the event data).
+    pub(crate) fn shared_buf(&self) -> &Arc<Vec<Event>> {
+        &self.buf
     }
 
     /// Number of events in this view.
@@ -156,7 +179,11 @@ impl EventChunk {
     /// # Panics
     /// If the range exceeds the view.
     pub fn slice(&self, range: Range<usize>) -> EventChunk {
-        assert!(range.start <= range.end && range.end <= self.len, "slice {range:?} out of bounds for chunk of {}", self.len);
+        assert!(
+            range.start <= range.end && range.end <= self.len,
+            "slice {range:?} out of bounds for chunk of {}",
+            self.len
+        );
         EventChunk {
             buf: Arc::clone(&self.buf),
             start: self.start + range.start,
@@ -181,6 +208,12 @@ impl EventChunk {
     /// [`to_vec`](EventChunk::to_vec). This is the escape hatch for
     /// stateful consumers that need an owned buffer.
     pub fn into_vec(self) -> Vec<Event> {
+        if self.len == 0 {
+            // Empty views (including the shared static empty chunk)
+            // extract to a fresh empty Vec: no data, no copy, and no
+            // `chunks_cloned` tick for a zero-event "clone".
+            return Vec::new();
+        }
         if self.start == 0 && self.len == self.buf.len() {
             match Arc::try_unwrap(self.buf) {
                 Ok(vec) => return vec,
@@ -285,6 +318,37 @@ mod tests {
         let owned = part.into_vec(); // partial view: must copy
         assert_eq!(owned, &events[8..24]);
         assert_eq!(copy_counters().delta(&before).chunks_cloned, 1);
+    }
+
+    #[test]
+    fn empty_chunks_share_one_buffer_and_never_count() {
+        let before = copy_counters();
+        let a = EventChunk::empty();
+        let b = EventChunk::empty();
+        assert!(
+            Arc::ptr_eq(&a.buf, &b.buf),
+            "every empty chunk must clone the one shared static buffer"
+        );
+        let c = a.clone();
+        assert!(Arc::ptr_eq(&a.buf, &c.buf));
+        assert!(c.is_empty());
+        let owned = c.into_vec();
+        assert!(owned.is_empty());
+        let d = copy_counters().delta(&before);
+        assert_eq!(d.chunks_cloned, 0, "empty(), clone(), into_vec() must all be uncounted");
+        assert_eq!(d.bytes_moved, 0);
+    }
+
+    #[test]
+    fn parts_round_trip_without_copying() {
+        let events = synthetic_events(20, 64, 64);
+        let chunk = EventChunk::from_vec(events.clone());
+        let before = copy_counters();
+        let (buf, start, len) = chunk.into_parts();
+        assert_eq!((start, len), (0, 20));
+        let view = EventChunk::from_parts(buf, 5, 10);
+        assert_eq!(view.as_slice(), &events[5..15]);
+        assert_eq!(copy_counters().delta(&before), CopyCounters::default());
     }
 
     #[test]

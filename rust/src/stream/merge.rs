@@ -10,43 +10,166 @@
 //!   shard outputs back into serial order, keyed by the per-batch
 //!   sequence number each event carried through its shard.
 //!
-//! A [`MergeCore`] holds one carry buffer per lane. Lanes are *blocking*
-//! by default: an empty, unexhausted, blocking lane stalls the merge
+//! A [`MergeCore`] holds one carry per lane. Lanes are *blocking* by
+//! default: an empty, unexhausted, blocking lane stalls the merge
 //! (emitting could violate key order because the lane's next key is
 //! unknown). Lanes whose future keys are known not to matter — an
 //! exhausted source, a heartbeating idle live source, a shard that
 //! already delivered its whole batch — are non-blocking.
+//!
+//! ## Bulk operation
+//!
+//! The merge is designed around two observations from the fan-in hot
+//! path (and from EventNet-style event-by-event systems: dispatch cost,
+//! not compute, caps throughput):
+//!
+//! 1. **Selection is `O(log k)`, not `O(k)`.** Lane heads compete in a
+//!    *loser tree* (tournament tree storing the loser at each internal
+//!    node and the overall winner at the root). After consuming from
+//!    the winner, only its root path — `⌈log₂ k⌉` nodes — is replayed.
+//!    Structural changes (a batch landing on an empty lane, a new lane
+//!    attaching) mark the tree dirty; it is rebuilt bottom-up, `O(k)`,
+//!    on the next pop — amortized across the whole batch.
+//! 2. **Emission is per-run, not per-event.** Carries are kept at chunk
+//!    granularity: a `VecDeque` of [`Arc`]-backed segments plus a start
+//!    offset, never per-event ring buffers. [`pop_run`] finds how far
+//!    the winning lane extends below the runner-up's next key with one
+//!    `partition_point` gallop and hands back that whole region as a
+//!    [`Run`] — a refcounted view into the producer's original buffer,
+//!    so an uncontended stretch of events crosses the merge without
+//!    being copied at all.
+//!
+//! Fully-drained segment buffers can be collected (see
+//! [`MergeCore::set_keep_drained`]) and recycled through
+//! [`super::pool::ChunkPool`], closing the allocation loop between
+//! sources and the merge.
+//!
+//! [`pop_run`]: MergeCore::pop_run
 
 use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::aer::Event;
+
+use super::chunk::EventChunk;
+
+/// Sentinel lane id meaning "no contender" (always loses).
+const NOBODY: usize = usize::MAX;
+
+/// Bound on drained buffers retained for recycling when
+/// [`MergeCore::set_keep_drained`] is on; beyond it, buffers are simply
+/// dropped (correct, just not recycled).
+const DRAIN_CAP: usize = 32;
+
+/// A contiguous, individually key-ordered region of a shared buffer:
+/// one producer batch (or the unconsumed suffix of one) sitting in a
+/// lane's carry.
+struct Segment<T> {
+    buf: Arc<Vec<T>>,
+    start: usize,
+    len: usize,
+}
 
 /// One input lane of the merge.
 struct Lane<T> {
-    carry: VecDeque<T>,
+    segs: VecDeque<Segment<T>>,
+    /// Total items across `segs` (cached so occupancy is O(1)).
+    len: usize,
     exhausted: bool,
     blocking: bool,
 }
 
-/// N carry buffers plus the min-key pop logic of an ordered k-way
-/// merge. Generic over the item and the (per-pop) sort key.
-pub(crate) struct MergeCore<T> {
+impl<T> Lane<T> {
+    fn new(blocking: bool) -> Self {
+        Lane { segs: VecDeque::new(), len: 0, exhausted: false, blocking }
+    }
+}
+
+/// A maximal (up to the caller's cap) stretch of items popped from one
+/// lane in a single step: a refcounted view into the buffer the
+/// producer pushed, never a copy.
+pub struct Run<T> {
+    lane: usize,
+    buf: Arc<Vec<T>>,
+    start: usize,
+    len: usize,
+}
+
+impl<T> Run<T> {
+    /// Lane the run was emitted from.
+    pub fn lane(&self) -> usize {
+        self.lane
+    }
+
+    /// Number of items in the run (always ≥ 1).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Never true — runs are non-empty by construction — but paired
+    /// with [`len`](Self::len) for form.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The run's items.
+    pub fn as_slice(&self) -> &[T] {
+        &self.buf[self.start..self.start + self.len]
+    }
+}
+
+impl Run<Event> {
+    /// Convert the run into an [`EventChunk`] view of the same buffer:
+    /// a refcount bump, not a copy.
+    pub fn into_chunk(self) -> EventChunk {
+        EventChunk::from_parts(self.buf, self.start, self.len)
+    }
+}
+
+/// N chunk-granularity carries plus the loser-tree selection logic of
+/// an ordered k-way merge. Generic over the item and the (per-call)
+/// sort key.
+pub struct MergeCore<T> {
     lanes: Vec<Lane<T>>,
+    /// Loser tree over lane heads: `tree[0]` is the overall winner,
+    /// `tree[1..k]` hold the loser of each internal match (leaf for
+    /// lane `i` is conceptual node `k + i`, parent of node `n` is
+    /// `n / 2`). Valid only while `built`.
+    tree: Vec<usize>,
+    /// Scratch for bottom-up rebuilds (winner per node), kept to avoid
+    /// re-allocating it every rebuild.
+    scratch: Vec<usize>,
+    /// False whenever a lane head may have changed behind the tree's
+    /// back (push onto an empty lane, a new lane, a linear pop); the
+    /// next selection rebuilds lazily.
+    built: bool,
+    /// Total items across all lanes (cached).
+    buffered: usize,
     peak_buffered: usize,
+    /// When set, fully-consumed segment buffers are parked in
+    /// `drained` for the owner to recycle instead of being dropped.
+    keep_drained: bool,
+    drained: Vec<Arc<Vec<T>>>,
 }
 
 impl<T> MergeCore<T> {
     /// A merge over `n` initially-empty, blocking lanes.
-    pub(crate) fn new(n: usize) -> Self {
+    pub fn new(n: usize) -> Self {
         assert!(n > 0, "merge needs at least one lane");
         MergeCore {
-            lanes: (0..n)
-                .map(|_| Lane { carry: VecDeque::new(), exhausted: false, blocking: true })
-                .collect(),
+            lanes: (0..n).map(|_| Lane::new(true)).collect(),
+            tree: Vec::new(),
+            scratch: Vec::new(),
+            built: false,
+            buffered: 0,
             peak_buffered: 0,
+            keep_drained: false,
+            drained: Vec::new(),
         }
     }
 
     /// Number of lanes.
-    pub(crate) fn lanes(&self) -> usize {
+    pub fn lanes(&self) -> usize {
         self.lanes.len()
     }
 
@@ -57,8 +180,9 @@ impl<T> MergeCore<T> {
     /// quiet connection cannot stall the frontier; the owner flips it
     /// blocking once the lane first delivers data, exactly like a
     /// heartbeat recovery.
-    pub(crate) fn add_lane(&mut self, blocking: bool) -> usize {
-        self.lanes.push(Lane { carry: VecDeque::new(), exhausted: false, blocking });
+    pub fn add_lane(&mut self, blocking: bool) -> usize {
+        self.lanes.push(Lane::new(blocking));
+        self.built = false;
         self.lanes.len() - 1
     }
 
@@ -67,69 +191,232 @@ impl<T> MergeCore<T> {
     /// [`exhaust`](Self::exhaust) by another name, kept separate so the
     /// serving-plane call sites read as what they mean) — a client
     /// hang-up is a clean end of its lane, never an error.
-    pub(crate) fn retire_lane(&mut self, lane: usize) {
+    pub fn retire_lane(&mut self, lane: usize) {
         self.exhaust(lane);
     }
 
     /// Append items to a lane's carry (items must be in key order and
     /// keyed at or above everything previously pushed to that lane).
-    pub(crate) fn push(&mut self, lane: usize, items: impl IntoIterator<Item = T>) {
-        self.lanes[lane].carry.extend(items);
+    pub fn push(&mut self, lane: usize, items: impl IntoIterator<Item = T>) {
+        self.push_vec(lane, items.into_iter().collect());
+    }
+
+    /// Append one producer batch to a lane's carry as a single shared
+    /// segment (same ordering contract as [`push`](Self::push)). The
+    /// `Vec` becomes the backing store for any [`Run`]s later emitted
+    /// from this stretch — no per-item copying on either side.
+    pub fn push_vec(&mut self, lane: usize, items: Vec<T>) {
+        if items.is_empty() {
+            return;
+        }
+        let n = items.len();
+        let l = &mut self.lanes[lane];
+        if l.len == 0 {
+            // The lane head changed; selection state is stale.
+            self.built = false;
+        }
+        l.segs.push_back(Segment { buf: Arc::new(items), start: 0, len: n });
+        l.len += n;
+        self.buffered += n;
     }
 
     /// Mark a lane as ended: it can never produce again and stops
     /// blocking the merge once drained.
-    pub(crate) fn exhaust(&mut self, lane: usize) {
+    pub fn exhaust(&mut self, lane: usize) {
         self.lanes[lane].exhausted = true;
     }
 
     /// `true` once `lane` was exhausted.
-    pub(crate) fn is_exhausted(&self, lane: usize) -> bool {
+    pub fn is_exhausted(&self, lane: usize) -> bool {
         self.lanes[lane].exhausted
     }
 
     /// Set whether an *unexhausted* empty `lane` stalls the merge.
     /// Heartbeating live sources flip this off so one quiet sensor
     /// cannot freeze its siblings.
-    pub(crate) fn set_blocking(&mut self, lane: usize, blocking: bool) {
+    pub fn set_blocking(&mut self, lane: usize, blocking: bool) {
         self.lanes[lane].blocking = blocking;
     }
 
     /// Events currently buffered in `lane`.
-    pub(crate) fn lane_len(&self, lane: usize) -> usize {
-        self.lanes[lane].carry.len()
+    pub fn lane_len(&self, lane: usize) -> usize {
+        self.lanes[lane].len
     }
 
     /// Every lane exhausted and drained: the merge is complete.
-    pub(crate) fn all_done(&self) -> bool {
-        self.lanes.iter().all(|l| l.exhausted && l.carry.is_empty())
+    pub fn all_done(&self) -> bool {
+        self.lanes.iter().all(|l| l.exhausted && l.len == 0)
     }
 
     /// Some blocking, unexhausted lane is empty: emitting now could
     /// violate key order.
-    pub(crate) fn stalled(&self) -> bool {
-        self.lanes.iter().any(|l| !l.exhausted && l.blocking && l.carry.is_empty())
+    pub fn stalled(&self) -> bool {
+        self.lanes.iter().any(|l| !l.exhausted && l.blocking && l.len == 0)
     }
 
     /// Record the current total occupancy into the peak gauge.
-    pub(crate) fn note_peak(&mut self) {
-        let buffered: usize = self.lanes.iter().map(|l| l.carry.len()).sum();
-        self.peak_buffered = self.peak_buffered.max(buffered);
+    pub fn note_peak(&mut self) {
+        self.peak_buffered = self.peak_buffered.max(self.buffered);
     }
 
     /// Peak events resident across all carries (the reorder depth).
-    pub(crate) fn peak_buffered(&self) -> usize {
+    pub fn peak_buffered(&self) -> usize {
         self.peak_buffered
+    }
+
+    /// Park fully-drained segment buffers for the owner to recycle
+    /// (see [`take_drained`](Self::take_drained)) instead of dropping
+    /// them. Off by default: consumers that never drain the parking
+    /// lot must not accumulate buffers.
+    pub fn set_keep_drained(&mut self, keep: bool) {
+        self.keep_drained = keep;
+        if !keep {
+            self.drained.clear();
+        }
+    }
+
+    /// Take the buffers whose last item has been popped since the
+    /// previous call. Each may still be aliased by emitted [`Run`]s /
+    /// [`EventChunk`]s — recycling them through a pool's sole-owner
+    /// reclaim is what makes that safe.
+    pub fn take_drained(&mut self) -> Vec<Arc<Vec<T>>> {
+        std::mem::take(&mut self.drained)
+    }
+
+    /// Key of a lane's head item; `None` for an empty lane.
+    fn head_key<K: Ord>(&self, lane: usize, key: &impl Fn(&T) -> K) -> Option<K> {
+        self.lanes[lane].segs.front().map(|s| key(&s.buf[s.start]))
+    }
+
+    /// Strict "lane `a` wins against lane `b`" on (head key, lane id):
+    /// empty lanes (and the `NOBODY` sentinel) always lose; equal keys
+    /// break to the lowest lane id — the same total order the linear
+    /// scan applied, so winners are bit-identical.
+    fn beats<K: Ord>(&self, a: usize, b: usize, key: &impl Fn(&T) -> K) -> bool {
+        if a == NOBODY {
+            return false;
+        }
+        if b == NOBODY {
+            return true;
+        }
+        match (self.head_key(a, key), self.head_key(b, key)) {
+            (None, None) => a < b,
+            (None, Some(_)) => false,
+            (Some(_), None) => true,
+            (Some(ka), Some(kb)) => match ka.cmp(&kb) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => a < b,
+            },
+        }
+    }
+
+    /// Full bottom-up rebuild of the loser tree. Safe for *any* prior
+    /// state (incremental replay is only sound along the champion's
+    /// path, so head changes on arbitrary lanes funnel through here).
+    fn rebuild<K: Ord>(&mut self, key: &impl Fn(&T) -> K) {
+        let k = self.lanes.len();
+        self.tree.clear();
+        self.tree.resize(k, NOBODY);
+        if k == 1 {
+            self.tree[0] = 0;
+            self.built = true;
+            return;
+        }
+        // scratch[n] = winner of the subtree rooted at node n
+        // (leaves are nodes k..2k, leaf k + i holding lane i).
+        self.scratch.clear();
+        self.scratch.resize(2 * k, NOBODY);
+        for i in 0..k {
+            self.scratch[k + i] = i;
+        }
+        for n in (1..k).rev() {
+            let a = self.scratch[2 * n];
+            let b = self.scratch[2 * n + 1];
+            let (w, l) = if self.beats(b, a, key) { (b, a) } else { (a, b) };
+            self.scratch[n] = w;
+            self.tree[n] = l;
+        }
+        self.tree[0] = self.scratch[1];
+        self.built = true;
+    }
+
+    /// Replay the champion's root path after its head changed (items
+    /// consumed, possibly emptying the lane). `O(log k)`; sound only
+    /// for the lane currently at `tree[0]`.
+    fn replay_champion<K: Ord>(&mut self, key: &impl Fn(&T) -> K) {
+        let k = self.lanes.len();
+        if k == 1 {
+            return;
+        }
+        let mut winner = self.tree[0];
+        let mut node = (k + winner) / 2;
+        while node > 0 {
+            let other = self.tree[node];
+            if self.beats(other, winner, key) {
+                self.tree[node] = winner;
+                winner = other;
+            }
+            node /= 2;
+        }
+        self.tree[0] = winner;
+    }
+
+    fn ensure_tree<K: Ord>(&mut self, key: &impl Fn(&T) -> K) {
+        if !self.built {
+            self.rebuild(key);
+        }
+    }
+
+    /// Consume the first `n` items of `lane`'s carry, parking the
+    /// backing buffer if it drained (and parking is on).
+    fn advance(&mut self, lane: usize, n: usize) {
+        let l = &mut self.lanes[lane];
+        let seg = l.segs.front_mut().expect("advance on empty lane");
+        debug_assert!(n <= seg.len, "run longer than its segment");
+        seg.start += n;
+        seg.len -= n;
+        l.len -= n;
+        self.buffered -= n;
+        if seg.len == 0 {
+            let seg = l.segs.pop_front().expect("front segment vanished");
+            if self.keep_drained && self.drained.len() < DRAIN_CAP {
+                self.drained.push(seg.buf);
+            }
+        }
     }
 
     /// Pop the item with the minimal key across lane heads; ties break
     /// to the lowest lane id (full determinism). `None` when every
-    /// carry is empty.
-    pub(crate) fn pop_min<K: Ord>(&mut self, key: impl Fn(&T) -> K) -> Option<(usize, T)> {
+    /// carry is empty. `O(log k)` via the loser tree.
+    pub fn pop_min<K: Ord>(&mut self, key: impl Fn(&T) -> K) -> Option<(usize, T)>
+    where
+        T: Clone,
+    {
+        self.ensure_tree(&key);
+        let w = self.tree[0];
+        if w == NOBODY || self.lanes[w].len == 0 {
+            return None;
+        }
+        let seg = self.lanes[w].segs.front().expect("winner lane is non-empty");
+        let item = seg.buf[seg.start].clone();
+        self.advance(w, 1);
+        self.replay_champion(&key);
+        Some((w, item))
+    }
+
+    /// The pre-tournament reference: pop the minimum via an `O(k)`
+    /// linear scan over lane heads. Kept verbatim as the equivalence
+    /// oracle for property tests and the baseline for the lane-sweep
+    /// bench; it bypasses (and invalidates) the tree.
+    pub fn pop_min_linear<K: Ord>(&mut self, key: impl Fn(&T) -> K) -> Option<(usize, T)>
+    where
+        T: Clone,
+    {
         let mut best: Option<(K, usize)> = None;
         for (i, lane) in self.lanes.iter().enumerate() {
-            if let Some(head) = lane.carry.front() {
-                let k = key(head);
+            if let Some(seg) = lane.segs.front() {
+                let k = key(&seg.buf[seg.start]);
                 let better = match &best {
                     None => true,
                     Some((bk, _)) => k < *bk,
@@ -140,27 +427,91 @@ impl<T> MergeCore<T> {
             }
         }
         let (_, i) = best?;
-        let item = self.lanes[i].carry.pop_front().expect("nonempty carry");
+        let seg = self.lanes[i].segs.front().expect("nonempty carry");
+        let item = seg.buf[seg.start].clone();
+        self.advance(i, 1);
+        // The tree (if any) did not see this consumption.
+        self.built = false;
         Some((i, item))
+    }
+
+    /// Pop a maximal run: the longest stretch (≤ `max`) of the winning
+    /// lane's front segment that sorts before the runner-up lane's
+    /// next key under the same (key, lane-id) order `pop_min` applies.
+    /// One `partition_point` gallop replaces up to `run.len()`
+    /// individual pops, and the returned [`Run`] aliases the
+    /// producer's buffer instead of copying out of it.
+    ///
+    /// `None` when every carry is empty (or `max == 0`). Runs never
+    /// span segment boundaries: within one batch order is the
+    /// producer's promise, across batches it is re-checked.
+    pub fn pop_run<K: Ord>(&mut self, max: usize, key: impl Fn(&T) -> K) -> Option<Run<T>> {
+        if max == 0 {
+            return None;
+        }
+        self.ensure_tree(&key);
+        let w = self.tree[0];
+        if w == NOBODY || self.lanes[w].len == 0 {
+            return None;
+        }
+        // Runner-up = best among the losers on the winner's root path
+        // (every lane that lost its match directly against the
+        // champion sits there; one of them is the global #2).
+        let k = self.lanes.len();
+        let mut runner = NOBODY;
+        if k > 1 {
+            let mut node = (k + w) / 2;
+            while node > 0 {
+                let cand = self.tree[node];
+                if cand != NOBODY
+                    && self.lanes[cand].len > 0
+                    && (runner == NOBODY || self.beats(cand, runner, &key))
+                {
+                    runner = cand;
+                }
+                node /= 2;
+            }
+        }
+        let seg = self.lanes[w].segs.front().expect("winner lane is non-empty");
+        let slice = &seg.buf[seg.start..seg.start + seg.len];
+        let limit = slice.len().min(max);
+        let end = if runner == NOBODY {
+            limit
+        } else {
+            let rseg = self.lanes[runner].segs.front().expect("runner lane is non-empty");
+            let rk = key(&rseg.buf[rseg.start]);
+            slice[..limit].partition_point(|item| {
+                let ik = key(item);
+                ik < rk || (ik == rk && w < runner)
+            })
+        };
+        // The winner beat the runner on its own head, so at least the
+        // head itself is below the runner's key.
+        debug_assert!(end >= 1, "winner's head must precede the runner-up");
+        let run = Run { lane: w, buf: Arc::clone(&seg.buf), start: seg.start, len: end };
+        self.advance(w, end);
+        self.replay_champion(&key);
+        Some(run)
     }
 }
 
 /// One-shot merge of fully-materialized, individually key-ordered lanes
 /// — the shard re-merge path (each shard's batch output is complete
-/// before reassembly, so no lane ever blocks).
-pub(crate) fn merge_ordered<T, K: Ord>(
-    parts: Vec<Vec<T>>,
-    key: impl Fn(&T) -> K,
-) -> Vec<T> {
+/// before reassembly, so no lane ever blocks). Rides [`MergeCore::
+/// pop_run`], so long single-shard stretches move as bulk copies.
+pub fn merge_ordered<T: Clone, K: Ord>(mut parts: Vec<Vec<T>>, key: impl Fn(&T) -> K) -> Vec<T> {
+    if parts.len() == 1 {
+        return parts.pop().expect("len checked");
+    }
     let total: usize = parts.iter().map(Vec::len).sum();
     let mut core = MergeCore::new(parts.len().max(1));
     for (i, part) in parts.into_iter().enumerate() {
-        core.push(i, part);
+        core.push_vec(i, part);
         core.exhaust(i);
     }
     let mut out = Vec::with_capacity(total);
-    while let Some((_, item)) = core.pop_min(&key) {
-        out.push(item);
+    while let Some(run) = core.pop_run(usize::MAX, &key) {
+        out.extend_from_slice(run.as_slice());
     }
     out
 }
@@ -242,5 +593,95 @@ mod tests {
         let merged = merge_ordered(parts, |it| it.0);
         assert_eq!(merged, vec![(0, 'a'), (1, 'c'), (2, 'd'), (3, 'b')]);
         assert!(merge_ordered(Vec::<Vec<u32>>::new(), |&v| v).is_empty());
+    }
+
+    #[test]
+    fn tree_pop_min_matches_linear_reference() {
+        // Two identically-fed cores, drained through the loser tree and
+        // the linear scan respectively, with mid-drain pushes landing
+        // on emptied lanes (the rebuild trigger).
+        let feed: [&[u64]; 3] = [&[1, 4, 4, 9], &[2, 4, 7], &[4, 4]];
+        let mut tree: MergeCore<u64> = MergeCore::new(3);
+        let mut lin: MergeCore<u64> = MergeCore::new(3);
+        for (i, part) in feed.iter().enumerate() {
+            tree.push_vec(i, part.to_vec());
+            lin.push_vec(i, part.to_vec());
+        }
+        for step in 0..7 {
+            assert_eq!(tree.pop_min(|&v| v), lin.pop_min(|&v| v), "step {step}");
+        }
+        // Lane 2 has drained; refill it below the others' heads.
+        tree.push_vec(2, vec![5, 6]);
+        lin.push_vec(2, vec![5, 6]);
+        loop {
+            let a = tree.pop_min(|&v| v);
+            let b = lin.pop_min(|&v| v);
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn runs_cap_at_max_and_alias_the_pushed_buffer() {
+        let mut core: MergeCore<u64> = MergeCore::new(2);
+        let batch = vec![1u64, 2, 3, 4];
+        let base = batch.as_ptr();
+        core.push_vec(0, batch);
+        core.push_vec(1, vec![10u64]);
+        (0..2).for_each(|i| core.exhaust(i));
+        // All four lane-0 items sort below lane 1's head, but the cap
+        // splits them into 3 + 1.
+        let run = core.pop_run(3, |&v| v).expect("run");
+        assert_eq!((run.lane(), run.as_slice()), (0, &[1u64, 2, 3][..]));
+        assert_eq!(run.as_slice().as_ptr(), base, "run must alias the pushed buffer");
+        let run = core.pop_run(usize::MAX, |&v| v).expect("run");
+        assert_eq!((run.lane(), run.as_slice()), (0, &[4u64][..]));
+        let run = core.pop_run(usize::MAX, |&v| v).expect("run");
+        assert_eq!((run.lane(), run.as_slice()), (1, &[10u64][..]));
+        assert!(core.pop_run(usize::MAX, |&v| v).is_none());
+        assert!(core.all_done());
+    }
+
+    #[test]
+    fn run_tie_break_matches_pop_min() {
+        // Duplicate keys across lanes: a run from lane 1 must stop at
+        // a tie with lane 0 (lower id wins), but a run from lane 0 may
+        // gallop through a tie with lane 1.
+        let mut core: MergeCore<(u64, char)> = MergeCore::new(2);
+        core.push_vec(0, vec![(3, 'a'), (5, 'b')]);
+        core.push_vec(1, vec![(1, 'c'), (3, 'd'), (3, 'e')]);
+        (0..2).for_each(|i| core.exhaust(i));
+        let mut got = Vec::new();
+        while let Some(run) = core.pop_run(usize::MAX, |it| it.0) {
+            got.extend(run.as_slice().iter().map(|it| (run.lane(), it.1)));
+        }
+        assert_eq!(
+            got,
+            vec![(1, 'c'), (0, 'a'), (1, 'd'), (1, 'e'), (0, 'b')],
+            "ties break to the lowest lane id, run-wise exactly as pop-wise"
+        );
+    }
+
+    #[test]
+    fn drained_buffers_park_for_recycling() {
+        let mut core: MergeCore<u64> = MergeCore::new(1);
+        core.set_keep_drained(true);
+        let batch = vec![1u64, 2];
+        let base = batch.as_ptr();
+        core.push_vec(0, batch);
+        core.exhaust(0);
+        assert!(core.take_drained().is_empty(), "nothing drained yet");
+        let run = core.pop_run(usize::MAX, |&v| v).expect("run");
+        assert_eq!(run.len(), 2);
+        let drained = core.take_drained();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].as_ptr(), base, "the drained Arc is the pushed buffer");
+        assert_eq!(
+            Arc::strong_count(&drained[0]),
+            2,
+            "still aliased by the emitted run until the consumer drops it"
+        );
     }
 }

@@ -35,8 +35,9 @@
 //! stateless/stateful stages stripe-sharded across N workers (inline
 //! coroutines or one OS thread each) with a sequence-keyed re-merge,
 //! barrier stages pinned to single nodes. The k-way merge logic itself
-//! lives once, in the internal `merge` module, shared by the fan-in
-//! merge and the shard re-merge.
+//! lives once, in [`merge`] — a loser-tree core that emits zero-copy
+//! *runs* instead of single events — shared by the fan-in merge and the
+//! shard re-merge, with batch buffers recycled through [`pool`].
 //!
 //! The split mirrors vector's `FunctionTransform`/`TaskTransform`
 //! idiom: per-event functions stay in [`crate::pipeline`] and declare a
@@ -55,7 +56,8 @@
 pub mod adapt;
 pub mod chunk;
 pub mod graph;
-pub(crate) mod merge;
+pub mod merge;
+pub mod pool;
 pub mod report;
 pub mod sinks;
 pub mod sources;
@@ -77,6 +79,7 @@ pub use adapt::{
     EpochSample, Reconfigure, SkewController, StageSample, StageTelemetry, WindowChange,
 };
 pub use chunk::{copy_counters, CopyCounters, EventChunk, EVENT_BYTES};
+pub use pool::{pool_counters, ChunkPool, PoolCounters};
 pub use graph::{
     CompiledTopology, FusionLayout, GraphConfig, GraphSpec, SourceOptions, Topology,
     TopologyBuilder,
@@ -142,6 +145,13 @@ pub trait EventSource: Send {
     /// ignored.
     fn set_chunk_hint(&mut self, _chunk: usize) {}
 
+    /// Adopt a shared buffer pool for batch allocations. Sources that
+    /// materialize their own batch `Vec`s (memory/file chunkers) draw
+    /// them from the pool so the fan-in merge can hand buffers back
+    /// after emission; sources whose batches arrive from the outside
+    /// world (datagrams, pump rings) may ignore it. Default: ignored.
+    fn set_buffer_pool(&mut self, _pool: Arc<pool::ChunkPool>) {}
+
     /// Human-readable description (logs, reports).
     fn describe(&self) -> String {
         "source".into()
@@ -177,6 +187,9 @@ impl<S: EventSource + ?Sized> EventSource for &mut S {
     fn set_chunk_hint(&mut self, chunk: usize) {
         (**self).set_chunk_hint(chunk)
     }
+    fn set_buffer_pool(&mut self, pool: Arc<pool::ChunkPool>) {
+        (**self).set_buffer_pool(pool)
+    }
     fn describe(&self) -> String {
         (**self).describe()
     }
@@ -203,6 +216,9 @@ impl<S: EventSource + ?Sized> EventSource for Box<S> {
     }
     fn set_chunk_hint(&mut self, chunk: usize) {
         (**self).set_chunk_hint(chunk)
+    }
+    fn set_buffer_pool(&mut self, pool: Arc<pool::ChunkPool>) {
+        (**self).set_buffer_pool(pool)
     }
     fn describe(&self) -> String {
         (**self).describe()
@@ -423,6 +439,14 @@ pub struct StreamReport {
     /// report. Zero on the stateless zero-copy paths — asserted by the
     /// chunk-semantics tests.
     pub chunks_cloned: u64,
+    /// Batch buffers served from a chunk pool's free list during the
+    /// run (no allocation): per-node pool hits summed with the fused
+    /// source/merge pool's own counters.
+    pub pool_hits: u64,
+    /// Batch buffers allocated fresh because the pool had nothing to
+    /// reuse. In steady state `pool_hits / (pool_hits + pool_misses)`
+    /// approaches 1 — the allocation loop is closed.
+    pub pool_misses: u64,
 }
 
 impl StreamReport {

@@ -1,0 +1,286 @@
+//! Chunk buffer pooling: sole-owner reclaim of batch allocations.
+//!
+//! The zero-copy chunk currency ([`super::chunk::EventChunk`]) removed
+//! per-hop *copies*; what remained was a fresh `Arc<Vec<Event>>`
+//! **allocation** per batch at every producer (sources, the merge's
+//! owned-output path, stateful stage outputs). At camera rates that is
+//! tens of thousands of heap round-trips per second for buffers with
+//! identical lifetimes and sizes. [`ChunkPool`] closes the loop:
+//!
+//! * producers call [`get`](ChunkPool::get) for a cleared `Vec<Event>`
+//!   with capacity already paid for;
+//! * consumers return buffers either directly
+//!   ([`recycle_vec`](ChunkPool::recycle_vec), for buffers they own) or
+//!   by parking a refcounted handle
+//!   ([`recycle`](ChunkPool::recycle)/[`recycle_arc`](ChunkPool::recycle_arc))
+//!   that the pool reclaims **only once it is the sole owner**
+//!   (`Arc::try_unwrap`) — a buffer still aliased by a live
+//!   [`EventChunk`] view downstream is never handed out again, so the
+//!   immutability guarantee of emitted chunks survives recycling.
+//!
+//! Hit/miss counters run at two scopes, mirroring the copy accounting
+//! in [`super::chunk`]: per-pool (surfaced through
+//! [`crate::metrics::LiveNode`] → `StreamReport` → `--report-json`)
+//! and process-wide ([`pool_counters`]) for the sequential bench suite.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::aer::Event;
+use crate::metrics::LiveNode;
+
+use super::chunk::EventChunk;
+
+/// Bound on parked (still-aliased) buffers awaiting sole ownership.
+/// Beyond it the oldest handle is dropped — the buffer frees normally
+/// when its last view goes, it just isn't recycled.
+const MAX_PENDING: usize = 32;
+
+/// Bound on reclaimed free buffers held for reuse.
+const MAX_FREE: usize = 16;
+
+/// Process-wide pool hits (buffer served from the free list).
+static POOL_HITS: AtomicU64 = AtomicU64::new(0);
+/// Process-wide pool misses (fresh allocation).
+static POOL_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of pool hit/miss counters (per-pool or process-wide).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolCounters {
+    /// Buffers served from the free list (no allocation).
+    pub hits: u64,
+    /// Buffers freshly allocated because the free list was empty.
+    pub misses: u64,
+}
+
+impl PoolCounters {
+    /// Counters accumulated since an earlier snapshot.
+    pub fn delta(&self, since: &PoolCounters) -> PoolCounters {
+        PoolCounters { hits: self.hits - since.hits, misses: self.misses - since.misses }
+    }
+}
+
+/// Read the process-wide pool counters. Exact only when nothing else
+/// streams concurrently (the bench suite's situation); parallel tests
+/// must assert on per-pool [`ChunkPool::counters`] or the per-run
+/// totals in [`crate::stream::StreamReport`].
+pub fn pool_counters() -> PoolCounters {
+    PoolCounters {
+        hits: POOL_HITS.load(Ordering::Relaxed),
+        misses: POOL_MISSES.load(Ordering::Relaxed),
+    }
+}
+
+struct PoolInner {
+    /// Cleared buffers ready to hand out.
+    free: Vec<Vec<Event>>,
+    /// Buffers still aliased by live views, awaiting sole ownership.
+    pending: VecDeque<Arc<Vec<Event>>>,
+}
+
+/// A shared recycling pool of `Vec<Event>` batch buffers.
+///
+/// Thread-safe (one `Mutex` around the free/pending lists — the lock
+/// is held for pointer shuffling only, never while copying events);
+/// shared as `Arc<ChunkPool>` between a topology's sources, merge, and
+/// stages.
+pub struct ChunkPool {
+    inner: Mutex<PoolInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ChunkPool {
+    /// An empty pool.
+    pub fn new() -> ChunkPool {
+        ChunkPool {
+            inner: Mutex::new(PoolInner { free: Vec::new(), pending: VecDeque::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Get a cleared buffer with at least `cap` capacity: recycled when
+    /// one is available (hit), freshly allocated otherwise (miss).
+    pub fn get(&self, cap: usize) -> Vec<Event> {
+        self.get_inner(cap).0
+    }
+
+    /// [`get`](Self::get), additionally mirroring the hit/miss into a
+    /// node's live telemetry (the per-node `pool_hits`/`pool_misses`
+    /// report columns).
+    pub fn get_counted(&self, cap: usize, node: &LiveNode) -> Vec<Event> {
+        let (buf, hit) = self.get_inner(cap);
+        if hit {
+            node.add_pool_hit();
+        } else {
+            node.add_pool_miss();
+        }
+        buf
+    }
+
+    fn get_inner(&self, cap: usize) -> (Vec<Event>, bool) {
+        let reclaimed = {
+            let mut inner = self.inner.lock().expect("pool lock");
+            Self::reclaim_locked(&mut inner);
+            inner.free.pop()
+        };
+        match reclaimed {
+            Some(mut buf) => {
+                debug_assert!(buf.is_empty());
+                if buf.capacity() < cap {
+                    buf.reserve(cap);
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                POOL_HITS.fetch_add(1, Ordering::Relaxed);
+                (buf, true)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                POOL_MISSES.fetch_add(1, Ordering::Relaxed);
+                (Vec::with_capacity(cap), false)
+            }
+        }
+    }
+
+    /// Park a chunk's backing buffer for reclaim once every view of it
+    /// has been dropped. Safe to call while views are live — that is
+    /// the point.
+    pub fn recycle(&self, chunk: &EventChunk) {
+        self.recycle_arc(Arc::clone(chunk.shared_buf()));
+    }
+
+    /// Park a shared buffer handle (the merge's drained-segment path).
+    pub fn recycle_arc(&self, buf: Arc<Vec<Event>>) {
+        if buf.capacity() == 0 {
+            // Nothing worth recycling (e.g. the shared empty chunk).
+            return;
+        }
+        let mut inner = self.inner.lock().expect("pool lock");
+        inner.pending.push_back(buf);
+        while inner.pending.len() > MAX_PENDING {
+            inner.pending.pop_front();
+        }
+    }
+
+    /// Return an owned buffer directly to the free list (cleared).
+    pub fn recycle_vec(&self, mut buf: Vec<Event>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        let mut inner = self.inner.lock().expect("pool lock");
+        if inner.free.len() < MAX_FREE {
+            inner.free.push(buf);
+        }
+    }
+
+    /// Move every pending buffer whose views have all dropped onto the
+    /// free list. `strong_count == 1` means the pool's handle is the
+    /// last one, so no other thread can clone it concurrently —
+    /// `try_unwrap` then cannot race.
+    fn reclaim_locked(inner: &mut PoolInner) {
+        let mut i = 0;
+        while i < inner.pending.len() {
+            if Arc::strong_count(&inner.pending[i]) == 1 {
+                let arc = inner.pending.remove(i).expect("index in bounds");
+                match Arc::try_unwrap(arc) {
+                    Ok(mut buf) => {
+                        buf.clear();
+                        if inner.free.len() < MAX_FREE {
+                            inner.free.push(buf);
+                        }
+                    }
+                    Err(arc) => {
+                        // Lost a race we argued can't happen; put it
+                        // back rather than leak correctness on it.
+                        inner.pending.insert(i, arc);
+                        i += 1;
+                    }
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// This pool's hit/miss counters.
+    pub fn counters(&self) -> PoolCounters {
+        PoolCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for ChunkPool {
+    fn default() -> Self {
+        ChunkPool::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    #[test]
+    fn live_views_gate_reclaim() {
+        let pool = ChunkPool::new();
+        let chunk = EventChunk::from_vec(synthetic_events(100, 64, 64));
+        let base = chunk.as_slice().as_ptr() as usize;
+        pool.recycle(&chunk);
+        // The chunk is still alive: the pool must allocate fresh.
+        let b1 = pool.get(100);
+        assert_ne!(b1.as_ptr() as usize, base, "aliased buffer must not be handed out");
+        assert_eq!(pool.counters(), PoolCounters { hits: 0, misses: 1 });
+        drop(chunk);
+        // Sole owner now: the original allocation comes back cleared.
+        let b2 = pool.get(100);
+        assert_eq!(b2.as_ptr() as usize, base, "sole-owner buffer must be reclaimed");
+        assert!(b2.is_empty());
+        assert!(b2.capacity() >= 100);
+        assert_eq!(pool.counters(), PoolCounters { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn owned_buffers_recycle_directly() {
+        let pool = ChunkPool::new();
+        let mut buf = pool.get(64);
+        assert_eq!(pool.counters().misses, 1);
+        buf.extend_from_slice(&synthetic_events(64, 32, 32));
+        let base = buf.as_ptr() as usize;
+        pool.recycle_vec(buf);
+        let again = pool.get(64);
+        assert_eq!(again.as_ptr() as usize, base);
+        assert!(again.is_empty(), "recycled buffers come back cleared");
+        assert_eq!(pool.counters().hits, 1);
+    }
+
+    #[test]
+    fn empty_buffers_are_not_pooled() {
+        let pool = ChunkPool::new();
+        pool.recycle(&EventChunk::empty());
+        pool.recycle_vec(Vec::new());
+        let got = pool.get(8);
+        assert_eq!(pool.counters(), PoolCounters { hits: 0, misses: 1 });
+        assert!(got.capacity() >= 8);
+    }
+
+    #[test]
+    fn pending_ring_is_bounded() {
+        let pool = ChunkPool::new();
+        let chunks: Vec<EventChunk> =
+            (0..2 * MAX_PENDING).map(|_| EventChunk::from_vec(synthetic_events(4, 8, 8))).collect();
+        for c in &chunks {
+            pool.recycle(c);
+        }
+        assert!(pool.inner.lock().unwrap().pending.len() <= MAX_PENDING);
+        drop(chunks);
+        // Reclaim everything that survived the bound; the free list is
+        // bounded too.
+        let _ = pool.get(1);
+        assert!(pool.inner.lock().unwrap().free.len() <= MAX_FREE);
+    }
+}

@@ -133,7 +133,8 @@ impl ReportEmitter {
             "{{\"type\":\"final\",\"events_in\":{},\"events_out\":{},\"frames\":{},\
              \"batches\":{},\"peak_in_flight\":{},\"backpressure_waits\":{},\
              \"wall_s\":{:.6},\"resolution\":[{},{}],\
-             \"bytes_moved\":{},\"chunks_cloned\":{},\"merge\":{{\
+             \"bytes_moved\":{},\"chunks_cloned\":{},\
+             \"pool_hits\":{},\"pool_misses\":{},\"merge\":{{\
              \"peak_buffered\":{},\"dropped\":{},\"stalls_broken\":{},\"late_events\":{}}}",
             report.events_in,
             report.events_out,
@@ -146,6 +147,8 @@ impl ReportEmitter {
             report.resolution.height,
             report.bytes_moved,
             report.chunks_cloned,
+            report.pool_hits,
+            report.pool_misses,
             report.merge_peak_buffered,
             report.merge_dropped,
             report.merge_stalls_broken,
@@ -163,7 +166,8 @@ impl ReportEmitter {
                     line,
                     "{{\"name\":{},\"events\":{},\"batches\":{},\
                      \"backpressure_waits\":{},\"dropped\":{},\"frames\":{},\
-                     \"bytes_moved\":{},\"chunks_cloned\":{}}}",
+                     \"bytes_moved\":{},\"chunks_cloned\":{},\
+                     \"pool_hits\":{},\"pool_misses\":{}}}",
                     json_str(&node.name),
                     node.events,
                     node.batches,
@@ -172,6 +176,8 @@ impl ReportEmitter {
                     node.frames,
                     node.bytes_moved,
                     node.chunks_cloned,
+                    node.pool_hits,
+                    node.pool_misses,
                 );
             }
             line.push(']');

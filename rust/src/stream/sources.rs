@@ -4,6 +4,7 @@
 use std::collections::VecDeque;
 use std::io::Read;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -14,6 +15,7 @@ use crate::formats::streaming::StreamingDecoder;
 use crate::formats::{detect_format, Format};
 use crate::net::UdpEventReceiver;
 
+use super::pool::ChunkPool;
 use super::EventSource;
 
 /// Grow `res` to cover every event of `batch` — the incremental form of
@@ -35,12 +37,14 @@ pub struct MemorySource {
     pos: usize,
     chunk: usize,
     res: Resolution,
+    /// Recycled batch buffers, adopted from the driving topology.
+    pool: Option<Arc<ChunkPool>>,
 }
 
 impl MemorySource {
     /// Serve `events` in batches of at most `chunk`.
     pub fn new(events: Vec<Event>, res: Resolution, chunk: usize) -> Self {
-        MemorySource { events, pos: 0, chunk: chunk.max(1), res }
+        MemorySource { events, pos: 0, chunk: chunk.max(1), res, pool: None }
     }
 }
 
@@ -50,7 +54,11 @@ impl EventSource for MemorySource {
             return Ok(None);
         }
         let end = (self.pos + self.chunk).min(self.events.len());
-        let batch = self.events[self.pos..end].to_vec();
+        let mut batch = match &self.pool {
+            Some(pool) => pool.get(end - self.pos),
+            None => Vec::with_capacity(end - self.pos),
+        };
+        batch.extend_from_slice(&self.events[self.pos..end]);
         self.pos = end;
         Ok(Some(batch))
     }
@@ -61,6 +69,10 @@ impl EventSource for MemorySource {
 
     fn set_chunk_hint(&mut self, chunk: usize) {
         self.chunk = chunk.max(1);
+    }
+
+    fn set_buffer_pool(&mut self, pool: Arc<ChunkPool>) {
+        self.pool = Some(pool);
     }
 
     fn describe(&self) -> String {
@@ -140,6 +152,8 @@ pub struct FileSource {
     claimed: Option<Resolution>,
     /// Events dropped for falling outside the claimed geometry.
     out_of_claim: u64,
+    /// Recycled batch buffers, adopted from the driving topology.
+    pool: Option<Arc<ChunkPool>>,
 }
 
 impl FileSource {
@@ -173,6 +187,7 @@ impl FileSource {
             observed_res: Resolution::new(1, 1),
             claimed: None,
             out_of_claim: 0,
+            pool: None,
         };
         source.prime()?;
         Ok(source)
@@ -247,7 +262,11 @@ impl EventSource for FileSource {
                 return Ok(None);
             }
             let take = self.chunk.min(self.ready.len());
-            let mut batch: Vec<Event> = self.ready.drain(..take).collect();
+            let mut batch = match &self.pool {
+                Some(pool) => pool.get(take),
+                None => Vec::with_capacity(take),
+            };
+            batch.extend(self.ready.drain(..take));
             if self.decoder.resolution().is_none() {
                 if let Some(claim) = self.claimed {
                     // The declared geometry is authoritative for
@@ -285,6 +304,10 @@ impl EventSource for FileSource {
 
     fn set_chunk_hint(&mut self, chunk: usize) {
         self.chunk = chunk.max(1);
+    }
+
+    fn set_buffer_pool(&mut self, pool: Arc<ChunkPool>) {
+        self.pool = Some(pool);
     }
 
     fn describe(&self) -> String {

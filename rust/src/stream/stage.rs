@@ -40,6 +40,7 @@ use crate::rt::{block_on, sync_channel, SyncReceiver, SyncSender};
 
 use super::adapt::{Reconfigure, StageTelemetry};
 use super::merge::merge_ordered;
+use super::pool::ChunkPool;
 
 /// An event travelling through a sharded node: batch sequence number
 /// (the re-merge key), payload, and whether it is a ghost copy (state
@@ -285,6 +286,10 @@ struct StageNode {
 /// and hand it to [`super::run_topology`] in place of a [`Pipeline`].
 pub struct StageGraph {
     nodes: Vec<StageNode>,
+    /// Recycles the per-node output buffers: each batch hand-off
+    /// between chained nodes returns the superseded `Vec` here instead
+    /// of freeing it, so a steady-state chain allocates nothing.
+    pool: Arc<ChunkPool>,
     /// Set by [`BatchProcessor::finish_stages`]: threaded shard workers
     /// are gone, so further batches must fail loudly, not drop events.
     finished: bool,
@@ -347,13 +352,13 @@ impl StageGraph {
                 StageNode { node, exec }
             })
             .collect();
-        StageGraph { nodes, finished: false }
+        StageGraph { nodes, pool: Arc::new(ChunkPool::new()), finished: false }
     }
 
     /// The identity graph (no stage nodes) — the seed for
     /// [`append`](Self::append)-built chains.
     pub(crate) fn empty() -> StageGraph {
-        StageGraph { nodes: Vec::new(), finished: false }
+        StageGraph { nodes: Vec::new(), pool: Arc::new(ChunkPool::new()), finished: false }
     }
 
     /// Move `other`'s stage nodes onto the end of this chain. The graph
@@ -501,13 +506,13 @@ fn route_stripes(
 }
 
 impl StageNode {
-    fn process(&mut self, batch: &[Event]) -> Result<Vec<Event>> {
+    fn process(&mut self, batch: &[Event], pool: &ChunkPool) -> Result<Vec<Event>> {
         self.node.add_events(batch.len() as u64);
         self.node.add_batch();
         let name = self.node.name();
         let out = match &mut self.exec {
             NodeExec::Serial(stage) => {
-                let mut out = Vec::with_capacity(batch.len());
+                let mut out = pool.get_counted(batch.len(), &self.node);
                 for &ev in batch {
                     if let Some(next) = stage.apply(ev) {
                         out.push(next);
@@ -673,17 +678,20 @@ impl BatchProcessor for StageGraph {
         // node materializes one output Vec (the per-node counters and
         // shard hand-offs need owned batches — the cost of stages
         // being individually observable nodes).
+        let pool = Arc::clone(&self.pool);
         let mut nodes = self.nodes.iter_mut();
         let Some(first) = nodes.next() else {
             return Ok(batch.to_vec()); // identity graph
         };
-        let mut current = first.process(batch)?;
+        let mut current = first.process(batch, &pool)?;
         for node in nodes {
             if current.is_empty() {
                 // No events ⇒ no state updates anywhere downstream.
                 break;
             }
-            current = node.process(&current)?;
+            let next = node.process(&current, &pool)?;
+            pool.recycle_vec(current);
+            current = next;
         }
         Ok(current)
     }

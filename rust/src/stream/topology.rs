@@ -64,6 +64,7 @@ use crate::rt::{
 use super::adapt::{Adaptor, AdaptiveConfig, AdaptiveRuntime, DEFAULT_EPOCH_BATCHES};
 use super::chunk::{self, EventChunk, EVENT_BYTES};
 use super::merge::MergeCore;
+use super::pool::{ChunkPool, PoolCounters};
 use super::report::{ReportEmitter, ReportTarget};
 use super::sources::grow_resolution;
 use super::stage::{stripe_cut, stripe_index, BatchProcessor, StageGraph};
@@ -264,7 +265,10 @@ fn poll_one<T: EventSource>(
                 input.heartbeat = false;
                 core.set_blocking(lane, true);
             }
-            core.push(lane, batch);
+            // The whole batch becomes one shared carry segment: runs
+            // emitted from it are views, and the buffer flows back to
+            // the pool once drained.
+            core.push_vec(lane, batch);
             Ok(Poll::Data)
         }
     }
@@ -297,6 +301,11 @@ pub struct FusedSource<S: EventSource> {
     /// polled for freshly admitted clients at every merge round.
     planes: Vec<Arc<dyn ClientPlane>>,
     core: MergeCore<Event>,
+    /// Batch buffer pool shared with every input ([`EventSource::
+    /// set_buffer_pool`]): carry segments drained by the merge are
+    /// reclaimed here once downstream drops its views, and the merge's
+    /// own owned-output batches draw from it too.
+    pool: Arc<ChunkPool>,
     layout: Option<SourceLayout>,
     chunk: usize,
     /// Events rejected by the layout (outside their source's geometry).
@@ -325,9 +334,11 @@ impl<S: EventSource> FusedSource<S> {
             );
         }
         let n = sources.len();
+        let pool = Arc::new(ChunkPool::new());
         let inputs: Vec<FusedInput<S>> = sources
             .into_iter()
-            .map(|source| {
+            .map(|mut source| {
+                source.set_buffer_pool(Arc::clone(&pool));
                 let node = Arc::new(LiveNode::new(source.describe()));
                 FusedInput {
                     source,
@@ -339,11 +350,16 @@ impl<S: EventSource> FusedSource<S> {
             })
             .collect();
         let planes = inputs.iter().filter_map(|input| input.source.client_plane()).collect();
+        let mut core = MergeCore::new(n);
+        // Drained carry buffers park for recycling instead of dropping:
+        // the sources above draw their next batches from the same pool.
+        core.set_keep_drained(true);
         FusedSource {
             inputs,
             clients: Vec::new(),
             planes,
-            core: MergeCore::new(n),
+            core,
+            pool,
             layout,
             chunk: chunk.max(1),
             dropped: 0,
@@ -370,6 +386,13 @@ impl<S: EventSource> FusedSource<S> {
     /// stopped blocking the merge (fan-in stalls broken).
     pub fn stalls_broken(&self) -> u64 {
         self.stalls_broken
+    }
+
+    /// Hit/miss counters of the buffer pool shared between this merge
+    /// and its sources (rolled into [`StreamReport::pool_hits`] /
+    /// [`StreamReport::pool_misses`]).
+    pub fn pool_counters(&self) -> PoolCounters {
+        self.pool.counters()
     }
 
     /// Events that arrived behind the merge frontier after a heartbeat
@@ -475,6 +498,7 @@ impl<S: EventSource> FusedSource<S> {
                 debug_assert_eq!(lane, self.inputs.len() + self.clients.len());
                 let mut source = client.source;
                 source.set_chunk_hint(self.chunk);
+                source.set_buffer_pool(Arc::clone(&self.pool));
                 self.clients.push(FusedInput {
                     source,
                     node: client.node,
@@ -486,7 +510,7 @@ impl<S: EventSource> FusedSource<S> {
         }
     }
 
-    fn next_merged(&mut self) -> Result<Option<Vec<Event>>> {
+    fn next_merged(&mut self) -> Result<Option<EventChunk>> {
         self.attach_clients();
         // Refill every empty lane — one pull per input per call, so
         // each call does bounded work even over slow live sources.
@@ -503,38 +527,92 @@ impl<S: EventSource> FusedSource<S> {
             // emitting now could violate global timestamp order (its
             // next event may be earlier than every buffered one).
             // Report idle upward; the driver waits a bounded amount.
-            return Ok(Some(Vec::new()));
+            return Ok(Some(EventChunk::empty()));
         }
         self.core.note_peak();
-        let mut out = Vec::with_capacity(self.chunk);
-        while out.len() < self.chunk {
-            // Ties break to the lowest source id inside the core,
-            // matching `fusion::merge_streams` determinism.
-            let Some((i, mut ev)) = self.core.pop_min(|ev| ev.t) else { break };
-            if ev.t < self.frontier {
-                // Possible only after a heartbeat override let the
-                // merge run ahead of this source. Clamp the straggler
-                // to the frontier (watermark semantics): downstream
-                // consumers — frame binners above all — rely on the
-                // merge's globally monotonic timestamps, so late data
-                // joins the *current* window instead of reopening an
-                // already-emitted one. Counted per event.
-                self.late_events += 1;
-                ev.t = self.frontier;
-            } else {
-                self.frontier = ev.t;
+        // The round emits whole *runs* (loser-tree winner galloped to
+        // the runner-up's key). `zero` holds the round's first run
+        // while it can still go out as a zero-copy view of its
+        // producer's buffer; the moment a second run — or any
+        // per-event transform (layout placement, frontier clamping) —
+        // joins the batch, it spills into the pooled accumulator
+        // `out`.
+        let mut zero: Option<EventChunk> = None;
+        let mut out: Vec<Event> = Vec::new();
+        loop {
+            let have = zero.as_ref().map_or(0, EventChunk::len) + out.len();
+            if have >= self.chunk {
+                break;
             }
-            match &self.layout {
-                // Layout placements cover the static inputs only; a
-                // dynamic client lane already conforms to the serving
-                // plane's declared geometry (the hub filters and counts
-                // out-of-bounds events at ingest), so its events pass
-                // through unplaced.
-                Some(layout) if i < self.inputs.len() => match layout.place(i, &ev) {
-                    Some(placed) => out.push(placed),
-                    None => self.dropped += 1,
-                },
-                _ => out.push(ev),
+            // Ties break to the lowest source id inside the core,
+            // matching `fusion::merge_streams` determinism — run-wise
+            // exactly as the per-event pop applied it.
+            let Some(run) = self.core.pop_run(self.chunk - have, |ev: &Event| ev.t) else {
+                break;
+            };
+            let i = run.lane();
+            let (first_t, last_t) = {
+                let events = run.as_slice();
+                (events[0].t, events[events.len() - 1].t)
+            };
+            let needs_layout = self.layout.is_some() && i < self.inputs.len();
+            if !needs_layout && first_t >= self.frontier {
+                // In-order, un-transformed run: within a run the
+                // producer's key order makes timestamps non-decreasing,
+                // so the frontier advances straight to the run's end
+                // and no event needs touching at all.
+                self.frontier = last_t;
+                if zero.is_none() && out.is_empty() {
+                    zero = Some(run.into_chunk());
+                } else {
+                    if out.capacity() == 0 {
+                        out = self.pool.get(self.chunk);
+                    }
+                    if let Some(z) = zero.take() {
+                        out.extend_from_slice(z.as_slice());
+                    }
+                    out.extend_from_slice(run.as_slice());
+                }
+            } else {
+                // Per-event path: layout placement for static inputs,
+                // and/or frontier clamping after a heartbeat override.
+                if out.capacity() == 0 {
+                    out = self.pool.get(self.chunk);
+                }
+                if let Some(z) = zero.take() {
+                    out.extend_from_slice(z.as_slice());
+                }
+                for &ev in run.as_slice() {
+                    let mut ev = ev;
+                    if ev.t < self.frontier {
+                        // Possible only after a heartbeat override let
+                        // the merge run ahead of this source. Clamp the
+                        // straggler to the frontier (watermark
+                        // semantics): downstream consumers — frame
+                        // binners above all — rely on the merge's
+                        // globally monotonic timestamps, so late data
+                        // joins the *current* window instead of
+                        // reopening an already-emitted one. Counted per
+                        // event.
+                        self.late_events += 1;
+                        ev.t = self.frontier;
+                    } else {
+                        self.frontier = ev.t;
+                    }
+                    match &self.layout {
+                        // Layout placements cover the static inputs
+                        // only; a dynamic client lane already conforms
+                        // to the serving plane's declared geometry (the
+                        // hub filters and counts out-of-bounds events
+                        // at ingest), so its events pass through
+                        // unplaced.
+                        Some(layout) if i < self.inputs.len() => match layout.place(i, &ev) {
+                            Some(placed) => out.push(placed),
+                            None => self.dropped += 1,
+                        },
+                        _ => out.push(ev),
+                    }
+                }
             }
             if self.core.lane_len(i) == 0 && !self.core.is_exhausted(i) {
                 match self.poll_lane(i)? {
@@ -551,19 +629,53 @@ impl<S: EventSource> FusedSource<S> {
                 }
             }
         }
-        Ok(Some(out))
+        // Hand the carry buffers fully drained this round back to the
+        // pool; they free up for reuse once downstream drops the last
+        // chunk view into them (sole-owner reclaim).
+        for buf in self.core.take_drained() {
+            self.pool.recycle_arc(buf);
+        }
+        let chunk = match zero {
+            Some(z) => z,
+            None if out.is_empty() => EventChunk::empty(),
+            None => {
+                let chunk = EventChunk::from_vec(out);
+                // Park the emitted buffer too: the next owned round
+                // reuses it after downstream lets go.
+                self.pool.recycle(&chunk);
+                chunk
+            }
+        };
+        Ok(Some(chunk))
+    }
+
+    /// Pull the next merged batch as a refcounted chunk — the
+    /// zero-copy entry point the topology drivers use. Single-source
+    /// pass-through wraps the batch without copying; merged rounds
+    /// emit either a zero-copy run view or a pooled owned buffer.
+    pub fn next_chunk(&mut self) -> Result<Option<EventChunk>> {
+        // The pass-through fast path is only sound when no serving
+        // plane can attach dynamic lanes behind the single input.
+        if self.inputs.len() == 1 && self.layout.is_none() && self.planes.is_empty() {
+            Ok(self.next_single()?.map(|batch| {
+                if batch.is_empty() {
+                    EventChunk::empty()
+                } else {
+                    EventChunk::from_vec(batch)
+                }
+            }))
+        } else {
+            self.next_merged()
+        }
     }
 }
 
 impl<S: EventSource> EventSource for FusedSource<S> {
     fn next_batch(&mut self) -> Result<Option<Vec<Event>>> {
-        // The pass-through fast path is only sound when no serving
-        // plane can attach dynamic lanes behind the single input.
-        if self.inputs.len() == 1 && self.layout.is_none() && self.planes.is_empty() {
-            self.next_single()
-        } else {
-            self.next_merged()
-        }
+        // Legacy batch entry: the chunk either extracts for free (sole
+        // owner) or pays one counted copy. Drivers use
+        // [`Self::next_chunk`] directly.
+        Ok(self.next_chunk()?.map(EventChunk::into_vec))
     }
 
     fn resolution(&self) -> Resolution {
@@ -595,6 +707,18 @@ impl<S: EventSource> EventSource for FusedSource<S> {
 
     fn set_chunk_hint(&mut self, chunk: usize) {
         self.set_chunk(chunk);
+    }
+
+    fn set_buffer_pool(&mut self, pool: Arc<ChunkPool>) {
+        // Adopt the caller's pool (nested fusion) and re-distribute it
+        // to every input so the whole tree recycles from one place.
+        self.pool = Arc::clone(&pool);
+        for input in &mut self.inputs {
+            input.source.set_buffer_pool(Arc::clone(&pool));
+        }
+        for client in &mut self.clients {
+            client.source.set_buffer_pool(Arc::clone(&pool));
+        }
     }
 
     fn describe(&self) -> String {
@@ -947,6 +1071,17 @@ impl<S: EventSource> EventSource for Lane<'_, S> {
             Lane::Pumped(s) => s.set_chunk_hint(chunk),
         }
     }
+    fn set_buffer_pool(&mut self, pool: Arc<ChunkPool>) {
+        match self {
+            Lane::Direct(s) => s.set_buffer_pool(pool),
+            // A pumped lane's batches are materialized on the pump
+            // thread and cross the ring by move; recycling them from
+            // the merge thread would bounce the buffers (and their
+            // cache lines) back across cores, so pumped sources opt
+            // out of the pool.
+            Lane::Pumped(_) => {}
+        }
+    }
     fn describe(&self) -> String {
         match self {
             Lane::Direct(s) => s.describe(),
@@ -1269,10 +1404,18 @@ where
     let sources = merged.node_reports();
     let all_nodes = sources.iter().chain(stages.iter()).chain(sink_reports.iter());
     let (mut bytes_moved, mut chunks_cloned) = (0u64, 0u64);
+    let (mut pool_hits, mut pool_misses) = (0u64, 0u64);
     for node in all_nodes {
         bytes_moved += node.bytes_moved;
         chunks_cloned += node.chunks_cloned;
+        pool_hits += node.pool_hits;
+        pool_misses += node.pool_misses;
     }
+    // The fused source/merge pool counts for itself (its gets are not
+    // attributed to any single node); stage-graph pools counted above.
+    let merge_pool = merged.pool_counters();
+    pool_hits += merge_pool.hits;
+    pool_misses += merge_pool.misses;
     let report = StreamReport {
         events_in: outcome.events_in,
         events_out: outcome.events_out,
@@ -1287,6 +1430,8 @@ where
         sinks: sink_reports,
         bytes_moved,
         chunks_cloned,
+        pool_hits,
+        pool_misses,
         merge_peak_buffered: merged.peak_buffered(),
         merge_dropped: merged.layout_dropped(),
         merge_stalls_broken: merged.stalls_broken(),
@@ -1324,7 +1469,7 @@ where
         backpressure_waits: 0,
     };
     let mut idle = IdleBackoff::new();
-    while let Some(batch) = source.next_batch().context("stream source")? {
+    while let Some(batch) = source.next_chunk().context("stream source")? {
         if batch.is_empty() {
             idle.wait(); // live source idle: bounded escalating wait
             continue;
@@ -1333,8 +1478,7 @@ where
         outcome.events_in += batch.len() as u64;
         outcome.batches += 1;
         outcome.peak_in_flight = outcome.peak_in_flight.max(batch.len());
-        let processed =
-            process_shared(shared, EventChunk::from_vec(batch)).context("pipeline stage")?;
+        let processed = process_shared(shared, batch).context("pipeline stage")?;
         outcome.events_out += processed.len() as u64;
         if m == 1 {
             branches[0].deliver(processed, &sink_nodes[0], true)?;
@@ -1395,7 +1539,7 @@ fn spawn_producer<'a, S: EventSource>(
             if let Some(chunk) = chunk_request.take() {
                 source.set_chunk(chunk);
             }
-            let batch = match source.next_batch() {
+            let batch = match source.next_chunk() {
                 Ok(Some(batch)) => batch,
                 Ok(None) => break,
                 Err(e) => {
@@ -1415,9 +1559,10 @@ fn spawn_producer<'a, S: EventSource>(
             let n = batch.len();
             gauges.events_in.set(gauges.events_in.get() + n as u64);
             gauges.batches.set(gauges.batches.get() + 1);
-            // The source's owned batch becomes the refcounted chunk the
-            // whole downstream graph shares — a pointer move, no copy.
-            match tx.try_send(EventChunk::from_vec(batch)) {
+            // The merge already emitted a refcounted chunk (a
+            // zero-copy run view or a pooled owned buffer); the whole
+            // downstream graph shares it — a pointer move, no copy.
+            match tx.try_send(batch) {
                 Ok(()) => {}
                 Err(TrySendError::Closed(_)) => break, // consumer died
                 Err(TrySendError::Full(batch)) => {
