@@ -41,6 +41,14 @@
 //! RSS proxy (`VmHWM` from /proc/self/status) as the memory-bound
 //! check.
 //!
+//! A codec-plane group closes the sweep: a decode-bound EVT2/raw
+//! recording replayed through `FileSource` inline vs the shared decode
+//! pool (pooled must win ≥1.5× at 4 workers, asserted where the host
+//! has the cores), a camera-like-trace copy ablation (zero-copy vs
+//! forced deep clone vs pooled decode), and the 128-client serve again
+//! on a fixed 4-thread decode budget with a live `codec:` thread
+//! census asserted against the budget.
+//!
 //! Emits the human table plus one JSON object per configuration (the
 //! same flat `{"name": …, "mean_s": …, …}` shape as the other benches'
 //! stats), so dashboards can scrape either.
@@ -187,6 +195,7 @@ fn main() {
                     ThreadMode::Inline
                 },
                 route: RoutePolicy::Broadcast,
+                decode_threads: None,
                 adaptive: None,
             };
             let mut peak = 0usize;
@@ -418,6 +427,7 @@ fn main() {
             threads: ThreadMode::Inline,
             route: RoutePolicy::Broadcast,
             adaptive: None,
+            decode_threads: None,
         };
         let mut means = std::collections::HashMap::new();
         for &graphed in &[false, true] {
@@ -443,6 +453,7 @@ fn main() {
                             driver: config.driver,
                             adaptive: None,
                             report_json: None,
+                            decode_threads: None,
                         })
                         .unwrap()
                 } else {
@@ -534,6 +545,7 @@ fn main() {
                     threads: ThreadMode::Inline,
                     route: RoutePolicy::Broadcast,
                     adaptive: None,
+                    decode_threads: None,
                 };
                 let mut bpe = 0.0f64;
                 let mut cloned = 0u64;
@@ -619,6 +631,7 @@ fn main() {
                     threads: ThreadMode::Inline,
                     route: RoutePolicy::Broadcast,
                     adaptive: None,
+                    decode_threads: None,
                 };
                 let spec = stage_spec();
                 let mut peak = 0usize;
@@ -705,6 +718,7 @@ fn main() {
                 threads: ThreadMode::Inline,
                 route: RoutePolicy::Broadcast,
                 adaptive,
+                decode_threads: None,
             };
             let spec = stage_spec();
             let mut skew = 0.0f64;
@@ -866,6 +880,332 @@ fn main() {
         }
     }
 
+    // --- codec plane, file replay: a decode-bound recording (EVT2 and
+    // raw) replayed through FileSource, inline decode vs the shared
+    // worker pool at 4 workers. The event count is held fixed — decode
+    // cost only dominates at scale, and the asserted ratio would be
+    // meaningless on a toy file. The pool must win ≥1.5× (asserted when
+    // the host actually has the cores to run 4 workers).
+    {
+        use aestream::formats::Format;
+        use aestream::stream::{
+            CodecPlane, CodecPlaneConfig, EventSink, EventSource, FileSink, FileSource,
+        };
+
+        const DECODE_WORKERS: usize = 4;
+        let decode_n = 1_500_000usize;
+        let decode_samples = if fast { 2 } else { 5 };
+        let trace = synthetic_events_seeded(decode_n, res.width, res.height, 0xDECD);
+        let dir = std::env::temp_dir()
+            .join(format!("aestream-bench-decode-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        for format in [Format::Evt2, Format::Raw] {
+            let path = dir.join(format!("replay.{}", format.codec().name()));
+            let mut sink = FileSink::create(&path, format, res).unwrap();
+            sink.consume(&trace).unwrap();
+            sink.finish().unwrap();
+            let mut means = std::collections::HashMap::new();
+            for &workers in &[0usize, DECODE_WORKERS] {
+                let name = if workers == 0 {
+                    format!("replay-{format}-inline")
+                } else {
+                    format!("replay-{format}-pool{workers}")
+                };
+                let stats = measure(1, decode_samples, || {
+                    let plane = (workers > 0)
+                        .then(|| CodecPlane::new(CodecPlaneConfig::with_workers(workers)));
+                    let mut source = FileSource::open(&path, 16384).unwrap();
+                    if let Some(plane) = &plane {
+                        source.set_codec_plane(plane.clone());
+                    }
+                    let mut out = 0u64;
+                    while let Some(batch) = source.next_batch().unwrap() {
+                        out += batch.len() as u64;
+                        std::hint::black_box(batch.len());
+                    }
+                    assert_eq!(out, decode_n as u64, "{name}: replay lost events");
+                });
+                means.insert(workers, stats.mean_s);
+                table.row(&[
+                    name.clone(),
+                    "16384".into(),
+                    stats.display_mean(),
+                    fmt_rate(stats.throughput(decode_n as u64), "ev/s"),
+                    if workers == 0 { "inline".into() } else { format!("{workers} workers") },
+                    "-".into(),
+                ]);
+                json_lines.push(format!(
+                    "{{\"name\":\"{name}\",\"chunk\":16384,\"mean_s\":{:.6},\
+                     \"std_s\":{:.6},\"min_s\":{:.6},\"throughput_ev_s\":{:.0},\
+                     \"events_per_sec\":{:.0},\"decode_workers\":{workers}}}",
+                    stats.mean_s,
+                    stats.std_s,
+                    stats.min_s,
+                    stats.throughput(decode_n as u64),
+                    stats.throughput(decode_n as u64),
+                ));
+            }
+            if cores >= DECODE_WORKERS {
+                assert!(
+                    means[&DECODE_WORKERS] * 1.5 <= means[&0],
+                    "pooled decode must be ≥1.5× inline for {format} replay \
+                     ({:.6}s vs {:.6}s)",
+                    means[&DECODE_WORKERS],
+                    means[&0]
+                );
+            } else {
+                println!(
+                    "note: {cores} cores < {DECODE_WORKERS} workers — \
+                     skipping the {format} replay speedup assert"
+                );
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // --- real-trace copy ablation: a camera-like trace (bursty object
+    // hotspots drifting under a pan, over sensor noise) through three
+    // delivery strategies — the zero-copy chunk currency, a sink that
+    // forces the pre-refactor deep copy per delivery, and file replay
+    // decoded on the shared pool. Same flat JSON schema as every other
+    // row, so the ablation is scrapeable.
+    {
+        use aestream::formats::Format;
+        use aestream::stream::{
+            copy_counters, CodecPlane, CodecPlaneConfig, EventChunk, EventSink, EventSource,
+            FileSink, FileSource, SinkSummary,
+        };
+        use aestream::testutil::camera_trace_events_seeded;
+
+        struct CloningSink(NullSink);
+        impl EventSink for CloningSink {
+            fn consume(&mut self, batch: &[Event]) -> anyhow::Result<()> {
+                self.0.consume(batch)
+            }
+            fn consume_chunk(&mut self, chunk: &EventChunk) -> anyhow::Result<()> {
+                let owned = chunk.to_vec(); // the counted deep copy
+                self.0.consume(&owned)
+            }
+            fn finish(&mut self) -> anyhow::Result<SinkSummary> {
+                self.0.finish()
+            }
+            fn describe(&self) -> String {
+                "cloning-null".into()
+            }
+        }
+
+        let cam_n = if fast { 200_000 } else { 2_000_000 };
+        let cam = camera_trace_events_seeded(cam_n, res.width, res.height, 0xCA3);
+        let dir = std::env::temp_dir()
+            .join(format!("aestream-bench-ablate-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("camera.raw");
+        let mut sink = FileSink::create(&path, Format::Raw, res).unwrap();
+        sink.consume(&cam).unwrap();
+        sink.finish().unwrap();
+
+        let config = TopologyConfig {
+            chunk_size: 4096,
+            driver: StreamDriver::Coroutine { channel_capacity: 1 },
+            threads: ThreadMode::Inline,
+            route: RoutePolicy::Broadcast,
+            adaptive: None,
+            decode_threads: None,
+        };
+        for variant in ["zerocopy", "clone", "pooled-decode"] {
+            let name = format!("ablate-{variant}");
+            let mut bpe = 0.0f64;
+            let stats = measure(1, samples, || {
+                let before = copy_counters();
+                let out = match variant {
+                    "zerocopy" => {
+                        let mut source = MemorySource::new(cam.clone(), res, config.chunk_size);
+                        let report = run_topology(
+                            vec![&mut source],
+                            &mut Pipeline::new(),
+                            vec![NullSink::default()],
+                            None,
+                            &config,
+                        )
+                        .unwrap();
+                        report.events_in
+                    }
+                    "clone" => {
+                        let mut source = MemorySource::new(cam.clone(), res, config.chunk_size);
+                        let report = run_topology(
+                            vec![&mut source],
+                            &mut Pipeline::new(),
+                            vec![CloningSink(NullSink::default())],
+                            None,
+                            &config,
+                        )
+                        .unwrap();
+                        report.events_in
+                    }
+                    _ => {
+                        let plane = CodecPlane::new(CodecPlaneConfig::with_workers(4));
+                        let mut source = FileSource::open(&path, config.chunk_size).unwrap();
+                        source.set_codec_plane(plane.clone());
+                        let mut out = 0u64;
+                        while let Some(batch) = source.next_batch().unwrap() {
+                            out += batch.len() as u64;
+                            std::hint::black_box(batch.len());
+                        }
+                        out
+                    }
+                };
+                let delta = copy_counters().delta(&before);
+                assert_eq!(out, cam_n as u64, "{name}: lost events");
+                bpe = delta.bytes_moved as f64 / cam_n as f64;
+            });
+            table.row(&[
+                name.clone(),
+                config.chunk_size.to_string(),
+                stats.display_mean(),
+                fmt_rate(stats.throughput(cam_n as u64), "ev/s"),
+                format!("{bpe:.1} B/ev"),
+                "-".into(),
+            ]);
+            json_lines.push(format!(
+                "{{\"name\":\"{name}\",\"chunk\":{},\"mean_s\":{:.6},\
+                 \"std_s\":{:.6},\"min_s\":{:.6},\"throughput_ev_s\":{:.0},\
+                 \"events_per_sec\":{:.0},\"bytes_moved_per_event\":{bpe:.3}}}",
+                config.chunk_size,
+                stats.mean_s,
+                stats.std_s,
+                stats.min_s,
+                stats.throughput(cam_n as u64),
+                stats.throughput(cam_n as u64),
+            ));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // --- serving plane on the shared decode pool: the 128-client shape
+    // again, but with `decode_threads` set — decode comes off the 128
+    // reader threads onto a 4-worker budget. A live census of threads
+    // named `codec:` asserts the budget held, and zero loss is asserted
+    // per iteration.
+    {
+        use aestream::net::spif;
+        use aestream::serve::{ListenerConfig, ListenerSource};
+        use aestream::stream::{GraphConfig, Topology};
+        use std::io::Write;
+        use std::net::TcpStream;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        const WORKERS: usize = 4;
+        let k = 128usize;
+        let serve_n: usize = if fast { 96_000 } else { 1_920_000 };
+        let serve_samples = if fast { 2 } else { 4 };
+        let per = serve_n / k;
+        let payloads: Vec<Vec<u8>> = (0..k)
+            .map(|i| {
+                let events =
+                    synthetic_events_seeded(per, res.width, res.height, 0x9E47 + i as u64);
+                let mut bytes = Vec::with_capacity(events.len() * 4);
+                for ev in &events {
+                    bytes.extend_from_slice(&spif::pack_word(ev).to_le_bytes());
+                }
+                bytes
+            })
+            .collect();
+        let census_peak = Arc::new(AtomicUsize::new(0));
+        let mut peak = 0usize;
+        let mut waits = 0u64;
+        let stats = measure(1, serve_samples, || {
+            let listener = ListenerSource::bind_tcp(
+                "127.0.0.1:0",
+                ListenerConfig::new(res)
+                    .max_clients(k + 8)
+                    .idle_timeout(std::time::Duration::from_secs(10)),
+            )
+            .unwrap();
+            let addr = listener.local_addr();
+            let hub = listener.hub();
+            // Senders wait for the plane so every reader takes the
+            // pooled path (clients admitted earlier decode inline).
+            let senders: Vec<_> = payloads
+                .iter()
+                .map(|payload| {
+                    let payload = payload.clone();
+                    let hub = hub.clone();
+                    std::thread::spawn(move || {
+                        while hub.decode_plane().is_none() && !hub.is_closed() {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        let mut conn = TcpStream::connect(addr).unwrap();
+                        for chunk in payload.chunks(16 * 1024) {
+                            conn.write_all(chunk).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            let supervisor = {
+                let hub = hub.clone();
+                let census_peak = census_peak.clone();
+                let k = k as u64;
+                std::thread::spawn(move || {
+                    while hub.admitted() < k || hub.active_clients() > 0 {
+                        census_peak.fetch_max(codec_thread_count(), Ordering::Relaxed);
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    hub.shutdown();
+                })
+            };
+            let report = Topology::builder()
+                .listen("net", listener)
+                .sink("out", NullSink::default())
+                .build()
+                .run(GraphConfig {
+                    chunk_size: 4096,
+                    decode_threads: Some(WORKERS),
+                    ..Default::default()
+                })
+                .unwrap();
+            for sender in senders {
+                sender.join().unwrap();
+            }
+            supervisor.join().unwrap();
+            assert_eq!(report.events_in, (per * k) as u64, "serve128-pooled: lost events");
+            assert_eq!(report.merge_dropped, 0, "serve128-pooled: merge dropped events");
+            assert_eq!(report.decode_workers, WORKERS as u64);
+            peak = report.merge_peak_buffered;
+            waits = report.backpressure_waits;
+            std::hint::black_box(report.events_out);
+        });
+        let census = census_peak.load(Ordering::Relaxed);
+        if cfg!(target_os = "linux") {
+            assert!(census >= 1, "serve128-pooled: decode threads never observed");
+            assert!(
+                census <= WORKERS,
+                "serve128-pooled: {census} codec threads observed, budget {WORKERS}"
+            );
+        }
+        let rss_kb = peak_rss_kb();
+        table.row(&[
+            "serve128-pooled".into(),
+            "4096".into(),
+            stats.display_mean(),
+            fmt_rate(stats.throughput((per * k) as u64), "ev/s"),
+            format!("{census} codec thr"),
+            waits.to_string(),
+        ]);
+        json_lines.push(format!(
+            "{{\"name\":\"serve128-pooled\",\"chunk\":4096,\"mean_s\":{:.6},\
+             \"std_s\":{:.6},\"min_s\":{:.6},\"throughput_ev_s\":{:.0},\
+             \"peak_in_flight\":{peak},\"backpressure_waits\":{waits},\
+             \"decode_workers\":{WORKERS},\"decode_threads_peak\":{census},\
+             \"peak_rss_kb\":{rss_kb}}}",
+            stats.mean_s,
+            stats.std_s,
+            stats.min_s,
+            stats.throughput((per * k) as u64),
+        ));
+    }
+
     println!("{}", table.render());
     println!("peak in-flight is the memory bound: batch-collect holds the whole");
     println!("stream; the incremental drivers hold ≤ capacity × chunk events;");
@@ -878,10 +1218,30 @@ fn main() {
     println!("run's last stripe cut (1.0 = perfectly balanced).");
     println!("serve* rows push the stream over loopback TCP from 1/16/128");
     println!("concurrent clients; their 5th column is the merge's peak buffered");
-    println!("events and the JSON adds peak_rss_kb (VmHWM) as the memory check.\n");
+    println!("events and the JSON adds peak_rss_kb (VmHWM) as the memory check.");
+    println!("replay-* rows replay a decode-bound recording through FileSource,");
+    println!("inline vs the shared codec pool (pooled must win ≥1.5× at 4");
+    println!("workers); ablate-* rows run a camera-like trace through zero-copy,");
+    println!("forced-clone, and pooled-decode delivery; serve128-pooled repeats");
+    println!("the 128-client serve on a 4-thread decode budget, with the live");
+    println!("codec-thread census asserted ≤ the budget.\n");
     for line in &json_lines {
         println!("{line}");
     }
+}
+
+/// Threads of this process currently named `codec:<i>` — 0 where
+/// /proc is unavailable (non-Linux).
+fn codec_thread_count() -> usize {
+    let Ok(entries) = std::fs::read_dir("/proc/self/task") else { return 0 };
+    entries
+        .flatten()
+        .filter(|entry| {
+            std::fs::read_to_string(entry.path().join("comm"))
+                .map(|comm| comm.trim_end().starts_with("codec:"))
+                .unwrap_or(false)
+        })
+        .count()
 }
 
 /// Peak resident set (`VmHWM`, kB) from /proc/self/status — 0 where

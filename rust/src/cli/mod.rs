@@ -83,6 +83,10 @@ pub enum Command {
         /// Stream one JSON line per telemetry epoch, plus a final
         /// report line, to a file or `-` for stdout (`--report-json`).
         report_json: Option<ReportTarget>,
+        /// `--decode-threads N|auto`: decode worker budget for the
+        /// shared codec plane (`None` keeps decode inline on each
+        /// ingest thread; `auto` derives from `available_parallelism`).
+        decode_threads: Option<usize>,
     },
     /// Run the four Fig. 4 scenarios.
     Scenarios {
@@ -426,6 +430,7 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
     let mut controllers = None;
     let mut epoch_batches: Option<u64> = None;
     let mut report_json = None;
+    let mut decode_threads = None;
     while let Some(tok) = toks.next() {
         match tok {
             "--chunk" => {
@@ -496,6 +501,18 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
                     toks.next().context("--report-json needs a path (or - for stdout)")?,
                 ));
             }
+            "--decode-threads" => {
+                let value = toks.next().context("--decode-threads needs a count (or auto)")?;
+                decode_threads = Some(if value == "auto" {
+                    crate::stream::CodecPlaneConfig::default().workers
+                } else {
+                    let n: usize = value.parse().context("bad --decode-threads")?;
+                    if n == 0 {
+                        bail!("--decode-threads must be at least 1 (or auto)");
+                    }
+                    n
+                });
+            }
             extra => bail!("unexpected trailing argument {extra:?}"),
         }
     }
@@ -533,6 +550,7 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
         sink_threads,
         adaptive,
         report_json,
+        decode_threads,
     })
 }
 
@@ -610,7 +628,7 @@ USAGE:
            [--layout side-by-side|grid|overlay]
            [--shards N] [--shard-threads] [--sink-threads]
            [--adaptive skew,chunk,client-window] [--epoch BATCHES]
-           [--report-json PATH|-]
+           [--report-json PATH|-] [--decode-threads N|auto]
   aestream scenarios [--duration D] [--time-scale X]
   aestream table1
   aestream help
@@ -668,6 +686,14 @@ SPIF words; a slow consumer drops deliveries and is eventually
 evicted, never stalling the pipeline. --report-json streams one JSON
 line per telemetry epoch (and a final full report) to a file or `-`
 for stdout — per-client windows, stalls, and admissions included.
+
+--decode-threads N (or `auto`) moves packed-format decode off the
+ingest threads onto a shared pool of N codec workers: readers hand raw
+byte buffers to the pool, splittable formats (raw, evt2, aedat2, dat,
+spif) decode in parallel slices, and sequence-keyed reassembly keeps
+every stream's event order byte-identical to inline decode. The pool
+is the process-wide decode budget — thread count stays N no matter how
+many files or clients are in flight.
 
 EXAMPLES (paper Fig. 2B and §6 fusion):
   aestream input file recording.aedat output udp 10.0.0.1:3333

@@ -235,6 +235,10 @@ pub struct TopologyOptions {
     /// line on shutdown — to a file or stdout (`--report-json
     /// <path|->`). `None` keeps reporting end-of-run only.
     pub report_json: Option<ReportTarget>,
+    /// Decode worker budget for the shared codec plane
+    /// (`--decode-threads N|auto`); `None` keeps packed-format decode
+    /// inline on each ingest thread.
+    pub decode_threads: Option<usize>,
 }
 
 impl Default for TopologyOptions {
@@ -249,6 +253,7 @@ impl Default for TopologyOptions {
             sink_threads: false,
             adaptive: None,
             report_json: None,
+            decode_threads: None,
         }
     }
 }
@@ -318,6 +323,7 @@ fn edge_config(opts: &TopologyOptions) -> TopologyConfig {
         },
         route: opts.route,
         adaptive: opts.adaptive.clone(),
+        decode_threads: opts.decode_threads,
     }
 }
 
@@ -358,6 +364,7 @@ pub fn run_graph(
         driver: opts.config.driver,
         adaptive: opts.adaptive.clone(),
         report_json: opts.report_json.clone(),
+        decode_threads: opts.decode_threads,
     };
     lower_to_graph(inputs, spec, branches, &opts)?.run(config)
 }

@@ -13,23 +13,31 @@
 //! * **EVT2** and **EVT3** are state machines, which defeats naive
 //!   vectorization — but real streams are dominated by long runs of
 //!   *event* words (CD words in EVT2, `ADDR_X` words in EVT3) between
-//!   sparse state words. The `simd` feature adds SSE2 kernels that
-//!   classify a whole block of words at once: if every word in the
+//!   sparse state words. The `simd` feature adds block kernels — SSE2
+//!   on x86_64, NEON on aarch64, mirroring each other block-for-block —
+//!   that classify a whole block of words at once: if every word in the
 //!   block is an event word, its fields are extracted lane-parallel
 //!   with the current state applied uniformly; otherwise the block
 //!   falls back to the scalar machine one word at a time, preserving
 //!   exact state and error semantics.
 //!
 //! The scalar decoders are always compiled (and are the only path on
-//! non-x86_64 targets or without the `simd` feature); the equivalence
-//! tests here and in `rust/tests/streaming_formats.rs` fuzz-compare the
-//! two word-for-word, including at word-splitting chunk boundaries.
+//! other targets or without the `simd` feature); the equivalence tests
+//! here and in `rust/tests/streaming_formats.rs` fuzz-compare the two
+//! word-for-word, including at word-splitting chunk boundaries.
 
 use anyhow::{bail, Result};
 
 use crate::aer::{packed, Event, Polarity};
 
-use super::{evt2, evt3};
+use super::{aedat2, evt2, evt3};
+
+/// The explicit-SIMD kernel module for the current target, when one
+/// exists: SSE2 (baseline on x86_64) or NEON (baseline on aarch64).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use x86 as kern;
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+use neon as kern;
 
 /// The EVT3 decoder state machine (the batch decoder's local variables,
 /// lifted into a struct so it survives chunk breaks in the streaming
@@ -110,11 +118,11 @@ pub fn decode_evt2_words(
     out: &mut Vec<Event>,
 ) -> Result<()> {
     debug_assert_eq!(bytes.len() % 4, 0);
-    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
     {
         let mut off = 0;
         while off + 16 <= bytes.len() {
-            if x86::evt2_block4(&bytes[off..off + 16], *time_high, out) {
+            if kern::evt2_block4(&bytes[off..off + 16], *time_high, out) {
                 off += 16;
             } else {
                 // The block holds a state word (TIME_HIGH, trigger, or
@@ -127,8 +135,37 @@ pub fn decode_evt2_words(
         }
         return decode_evt2_words_scalar(&bytes[off..], time_high, out);
     }
-    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
     decode_evt2_words_scalar(bytes, time_high, out)
+}
+
+/// Find the value of the *last* `TIME_HIGH` word in a complete-word
+/// EVT2 slice, or `None` if the slice carries no `TIME_HIGH` at all.
+///
+/// `TIME_HIGH` fully resets the EVT2 decoder's only state, so this is
+/// exactly the entry state the bytes *after* this slice decode under —
+/// the cut-point pre-scan for parallel EVT2 decode
+/// ([`SplitPoints::ScanBoundaries`](super::streaming::SplitPoints)).
+/// Scans backwards (state words are sparse but regular, so the scan
+/// usually touches a few dozen words); with `simd`, 4-lane blocks are
+/// classified at once and only a matching block is scanned per-word.
+pub fn evt2_scan_last_time_high(bytes: &[u8]) -> Option<u64> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let mut end = bytes.len();
+    #[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    while end >= 16 {
+        if kern::evt2_any_time_high(&bytes[end - 16..end]) {
+            break; // the match is inside this block: finish per-word
+        }
+        end -= 16;
+    }
+    for word in bytes[..end].chunks_exact(4).rev() {
+        let w = u32::from_le_bytes(word.try_into().unwrap());
+        if w >> 28 == evt2::TYPE_TIME_HIGH {
+            return Some((w & 0x0FFF_FFFF) as u64);
+        }
+    }
+    None
 }
 
 /// Scalar reference EVT2 word decoder (always compiled; the SIMD path
@@ -167,14 +204,14 @@ pub fn decode_evt2_words_scalar(
 /// advancing the state machine across calls.
 pub fn decode_evt3_words(bytes: &[u8], st: &mut Evt3State, out: &mut Vec<Event>) -> Result<()> {
     debug_assert_eq!(bytes.len() % 2, 0);
-    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
     {
         let mut off = 0;
         while off + 16 <= bytes.len() {
             // ADDR_X words read the (y, time) state but never modify
             // it, so a block of eight decodes with one shared (t, y).
             let consumed =
-                st.have_time && x86::evt3_block8(&bytes[off..off + 16], st.t(), st.y, out);
+                st.have_time && kern::evt3_block8(&bytes[off..off + 16], st.t(), st.y, out);
             if consumed {
                 off += 16;
             } else {
@@ -184,8 +221,44 @@ pub fn decode_evt3_words(bytes: &[u8], st: &mut Evt3State, out: &mut Vec<Event>)
         }
         return decode_evt3_words_scalar(&bytes[off..], st, out);
     }
-    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
     decode_evt3_words_scalar(bytes, st, out)
+}
+
+// --------------------------------------------- aedat2 / dat (scalar)
+
+/// Decode complete AEDAT 2.0 records (8-byte big-endian address+time
+/// pairs; `bytes.len()` must be a multiple of 8). Stateless.
+pub fn decode_aedat2_words(bytes: &[u8], out: &mut Vec<Event>) {
+    debug_assert_eq!(bytes.len() % 8, 0);
+    out.reserve(bytes.len() / 8);
+    for rec in bytes.chunks_exact(8) {
+        let addr = u32::from_be_bytes(rec[0..4].try_into().unwrap());
+        let t = u32::from_be_bytes(rec[4..8].try_into().unwrap()) as u64;
+        out.push(Event {
+            t,
+            x: ((addr >> aedat2::X_SHIFT) & aedat2::COORD_MASK) as u16,
+            y: ((addr >> aedat2::Y_SHIFT) & aedat2::COORD_MASK) as u16,
+            p: Polarity::from_bool(addr & 1 == 1),
+        });
+    }
+}
+
+/// Decode complete Prophesee DAT CD records (8-byte little-endian
+/// time+data pairs; `bytes.len()` must be a multiple of 8). Stateless.
+pub fn decode_dat_words(bytes: &[u8], out: &mut Vec<Event>) {
+    debug_assert_eq!(bytes.len() % 8, 0);
+    out.reserve(bytes.len() / 8);
+    for rec in bytes.chunks_exact(8) {
+        let t = u32::from_le_bytes(rec[0..4].try_into().unwrap()) as u64;
+        let data = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+        out.push(Event {
+            t,
+            x: (data & 0x3FFF) as u16,
+            y: ((data >> 14) & 0x3FFF) as u16,
+            p: Polarity::from_bool((data >> 28) & 0xF != 0),
+        });
+    }
 }
 
 /// Scalar reference EVT3 word decoder (always compiled; the SIMD path
@@ -261,7 +334,7 @@ mod x86 {
     use core::arch::x86_64::*;
 
     use crate::aer::{Event, Polarity};
-    use crate::formats::evt3;
+    use crate::formats::{evt2, evt3};
 
     /// Decode a 16-byte block of four EVT2 words iff all four are CD
     /// events. Returns `true` when the block was consumed.
@@ -339,6 +412,122 @@ mod x86 {
         }
         true
     }
+
+    /// `true` iff any of the four EVT2 words in the 16-byte block is a
+    /// `TIME_HIGH` word — the cut-point pre-scan's block classifier.
+    #[inline]
+    pub(super) fn evt2_any_time_high(block: &[u8]) -> bool {
+        debug_assert_eq!(block.len(), 16);
+        unsafe {
+            let v = _mm_loadu_si128(block.as_ptr() as *const __m128i);
+            let ty = _mm_srli_epi32::<28>(v);
+            let th = _mm_cmpeq_epi32(ty, _mm_set1_epi32(evt2::TYPE_TIME_HIGH as i32));
+            _mm_movemask_epi8(th) != 0
+        }
+    }
+}
+
+// ------------------------------------------------------- NEON kernels
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    //! NEON block kernels, mirroring the SSE2 module block-for-block.
+    //! Advanced SIMD is baseline on aarch64, so — like SSE2 on x86_64 —
+    //! there is no runtime feature detection: the kernels compile
+    //! whenever the `simd` feature targets aarch64. One asymmetry works
+    //! in our favor: NEON compares unsigned natively (`vcltq_u32`), so
+    //! the EVT2 classifier needs no sign-bias trick.
+
+    use core::arch::aarch64::*;
+
+    use crate::aer::{Event, Polarity};
+    use crate::formats::{evt2, evt3};
+
+    /// Decode a 16-byte block of four EVT2 words iff all four are CD
+    /// events. Returns `true` when the block was consumed.
+    #[inline]
+    pub(super) fn evt2_block4(block: &[u8], time_high: Option<u64>, out: &mut Vec<Event>) -> bool {
+        debug_assert_eq!(block.len(), 16);
+        let Some(th) = time_high else {
+            return false; // a CD word here must error: scalar handles it
+        };
+        unsafe {
+            let v = vld1q_u32(block.as_ptr() as *const u32);
+            // CD words are exactly the types 0x0/0x1, i.e. the whole
+            // word is < 0x2000_0000 unsigned.
+            let cd = vcltq_u32(v, vdupq_n_u32(0x2000_0000));
+            if vminvq_u32(cd) != u32::MAX {
+                return false;
+            }
+            // All four lanes are CD: extract every field lane-parallel.
+            let t6 = vandq_u32(vshrq_n_u32::<22>(v), vdupq_n_u32(0x3F));
+            let xs = vandq_u32(vshrq_n_u32::<11>(v), vdupq_n_u32(0x7FF));
+            let ys = vandq_u32(v, vdupq_n_u32(0x7FF));
+            let ps = vshrq_n_u32::<28>(v); // 0x0 = OFF, 0x1 = ON
+            let mut t6a = [0u32; 4];
+            let mut xsa = [0u32; 4];
+            let mut ysa = [0u32; 4];
+            let mut psa = [0u32; 4];
+            vst1q_u32(t6a.as_mut_ptr(), t6);
+            vst1q_u32(xsa.as_mut_ptr(), xs);
+            vst1q_u32(ysa.as_mut_ptr(), ys);
+            vst1q_u32(psa.as_mut_ptr(), ps);
+            for i in 0..4 {
+                out.push(Event {
+                    t: (th << 6) | t6a[i] as u64,
+                    x: xsa[i] as u16,
+                    y: ysa[i] as u16,
+                    p: Polarity::from_bool(psa[i] == 1),
+                });
+            }
+        }
+        true
+    }
+
+    /// Decode a 16-byte block of eight EVT3 words iff all eight are
+    /// `ADDR_X` events (which read but never modify the decoder state,
+    /// so the shared `(t, y)` applies to the whole block). The caller
+    /// guarantees `have_time`. Returns `true` when consumed.
+    #[inline]
+    pub(super) fn evt3_block8(block: &[u8], t: u64, y: u16, out: &mut Vec<Event>) -> bool {
+        debug_assert_eq!(block.len(), 16);
+        unsafe {
+            let v = vld1q_u16(block.as_ptr() as *const u16);
+            let ty = vshrq_n_u16::<12>(v);
+            let addr_x = vceqq_u16(ty, vdupq_n_u16(evt3::TY_ADDR_X));
+            if vminvq_u16(addr_x) != u16::MAX {
+                return false;
+            }
+            let xs = vandq_u16(v, vdupq_n_u16(0x7FF));
+            let ps = vandq_u16(vshrq_n_u16::<11>(v), vdupq_n_u16(1));
+            let mut xsa = [0u16; 8];
+            let mut psa = [0u16; 8];
+            vst1q_u16(xsa.as_mut_ptr(), xs);
+            vst1q_u16(psa.as_mut_ptr(), ps);
+            for i in 0..8 {
+                out.push(Event {
+                    t,
+                    x: xsa[i],
+                    y,
+                    p: Polarity::from_bool(psa[i] == 1),
+                });
+            }
+        }
+        true
+    }
+
+    /// `true` iff any of the four EVT2 words in the 16-byte block is a
+    /// `TIME_HIGH` word — the cut-point pre-scan's block classifier.
+    #[inline]
+    pub(super) fn evt2_any_time_high(block: &[u8]) -> bool {
+        debug_assert_eq!(block.len(), 16);
+        unsafe {
+            let v = vld1q_u32(block.as_ptr() as *const u32);
+            let ty = vshrq_n_u32::<28>(v);
+            let th = vceqq_u32(ty, vdupq_n_u32(evt2::TYPE_TIME_HIGH));
+            vmaxvq_u32(th) != 0
+        }
+    }
 }
 
 #[cfg(test)]
@@ -393,6 +582,52 @@ mod tests {
         decode_raw_words_scalar(&body, &mut slow);
         assert_eq!(fast, slow);
         assert_eq!(fast, events);
+    }
+
+    #[test]
+    fn aedat2_and_dat_word_decoders_match_the_batch_codecs() {
+        let events = synthetic_events_seeded(1500, 640, 480, 0xDA7);
+        for (format, decode) in [
+            (Format::Aedat2, decode_aedat2_words as fn(&[u8], &mut Vec<Event>)),
+            (Format::Dat, decode_dat_words as fn(&[u8], &mut Vec<Event>)),
+        ] {
+            let mut buf = Vec::new();
+            format.codec().encode(&events, Resolution::new(640, 480), &mut buf).unwrap();
+            let body = match format {
+                // AEDAT 2.0: '#' comment lines, then 8-byte records.
+                Format::Aedat2 => {
+                    let mut off = 0;
+                    while off < buf.len() && buf[off] == b'#' {
+                        off += buf[off..].iter().position(|&b| b == b'\n').unwrap() + 1;
+                    }
+                    buf[off..].to_vec()
+                }
+                // DAT: '%' header plus the 2-byte binary preamble.
+                _ => {
+                    let (_, body) = crate::formats::evt2::split_percent_header(&buf);
+                    body[2..].to_vec()
+                }
+            };
+            let mut out = Vec::new();
+            decode(&body, &mut out);
+            assert_eq!(out, events, "{format}");
+        }
+    }
+
+    #[test]
+    fn evt2_time_high_scan_matches_naive_backward_scan() {
+        let events = synthetic_events_seeded(3000, 640, 480, 0x7157);
+        let body = body_bytes(Format::Evt2, &events);
+        // Every word-aligned prefix must agree with the one-word-at-a-
+        // time reference, including prefixes with no TIME_HIGH at all.
+        for end in (0..=body.len()).step_by(4) {
+            let slice = &body[..end];
+            let naive = slice.chunks_exact(4).rev().find_map(|w| {
+                let w = u32::from_le_bytes(w.try_into().unwrap());
+                (w >> 28 == evt2::TYPE_TIME_HIGH).then(|| (w & 0x0FFF_FFFF) as u64)
+            });
+            assert_eq!(evt2_scan_last_time_high(slice), naive, "prefix {end}");
+        }
     }
 
     #[test]

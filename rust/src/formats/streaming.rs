@@ -40,6 +40,52 @@ const MAX_PACKET_BYTES: usize = 1 << 24;
 /// buffer the whole input waiting for one.
 const MAX_LINE_BYTES: usize = 1 << 20;
 
+/// How a format's body bytes may be cut for parallel decode — the
+/// contract between [`StreamingDecoder`] and the shared codec worker
+/// plane ([`crate::stream::CodecPlane`]). The variants are ordered by
+/// how much concurrency they admit:
+///
+/// * [`Stateless`](SplitPoints::Stateless): records are independent
+///   fixed-width words — any word-aligned cut decodes identically, so
+///   one stream's bytes can fan out across workers freely.
+/// * [`ScanBoundaries`](SplitPoints::ScanBoundaries): records are
+///   fixed-width but carry decoder state; a cheap scan can find words
+///   that fully *reset* that state (EVT2 `TIME_HIGH`), and cuts at
+///   those words decode independently.
+/// * [`Sequential`](SplitPoints::Sequential): the state machine is
+///   inherently serial (variable-width records, packet framing, CSV
+///   lines) — pieces may still decode *off* the ingest thread, but one
+///   piece at a time per stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitPoints {
+    /// Any `word`-aligned byte offset is a valid cut.
+    Stateless {
+        /// Record width in bytes.
+        word: usize,
+    },
+    /// `word`-aligned cuts are valid only at scanned state-reset words.
+    ScanBoundaries {
+        /// Record width in bytes.
+        word: usize,
+    },
+    /// No intra-stream cuts: decode pieces in order, one at a time.
+    Sequential,
+}
+
+/// The splittability class of each container format's *body* (headers
+/// are always consumed sequentially before any splitting happens).
+pub fn split_points(format: Format) -> SplitPoints {
+    match format {
+        // 8-byte records, no carried state.
+        Format::Raw | Format::Aedat2 | Format::Dat => SplitPoints::Stateless { word: 8 },
+        // 4-byte words; `TIME_HIGH` resets the only decoder state.
+        Format::Evt2 => SplitPoints::ScanBoundaries { word: 4 },
+        // EVT3's (y, time, vect-base) machine, AEDAT 3.1 packet
+        // framing, and CSV lines are all serial.
+        Format::Evt3 | Format::Aedat | Format::Text => SplitPoints::Sequential,
+    }
+}
+
 /// Per-format body decoding state.
 #[derive(Debug)]
 enum Body {
@@ -106,6 +152,47 @@ impl StreamingDecoder {
     /// running bounding box).
     pub fn resolution(&self) -> Option<Resolution> {
         self.res
+    }
+
+    /// `true` once the framing header has been fully consumed and
+    /// every byte fed from here on is body.
+    pub fn header_done(&self) -> bool {
+        self.header_done
+    }
+
+    /// Header-only feed for split-capable formats: buffer `bytes` and
+    /// try to complete the header, returning [`header_done`]
+    /// (`Self::header_done`). Once it returns `true`, any body bytes
+    /// that arrived with the header tail are waiting in `pending` —
+    /// take them with [`take_pending_body`](Self::take_pending_body)
+    /// and switch to direct word decoding.
+    pub fn feed_header(&mut self, bytes: &[u8]) -> Result<bool> {
+        self.pending.extend_from_slice(bytes);
+        if !self.header_done {
+            if !self.try_header()? && self.pending.len() > MAX_HEADER_BYTES {
+                bail!("{}: header exceeds {} bytes", self.format, MAX_HEADER_BYTES);
+            }
+        }
+        Ok(self.header_done)
+    }
+
+    /// Take the undecoded body bytes buffered past the header (the tail
+    /// of the chunk that completed it). Only meaningful once
+    /// [`header_done`](Self::header_done); the decoder keeps running
+    /// with an empty carry.
+    pub fn take_pending_body(&mut self) -> Vec<u8> {
+        debug_assert!(self.header_done, "body bytes exist only after the header");
+        std::mem::take(&mut self.pending)
+    }
+
+    /// End-of-stream while still inside the header: resolve it the way
+    /// [`finish`](Self::finish) would (legal for the comment-header
+    /// formats, a truncation error otherwise).
+    pub fn finish_header_at_eof(&mut self) -> Result<()> {
+        if !self.header_done {
+            self.finish_header()?;
+        }
+        Ok(())
     }
 
     /// Feed one chunk of bytes, appending decoded events to `out`.
@@ -336,31 +423,13 @@ impl StreamingDecoder {
             }
             Body::Aedat2 => {
                 let n = self.pending.len() / 8 * 8;
-                for rec in self.pending[..n].chunks_exact(8) {
-                    let addr = u32::from_be_bytes(rec[0..4].try_into().unwrap());
-                    let t = u32::from_be_bytes(rec[4..8].try_into().unwrap()) as u64;
-                    out.push(Event {
-                        t,
-                        x: ((addr >> aedat2::X_SHIFT) & aedat2::COORD_MASK) as u16,
-                        y: ((addr >> aedat2::Y_SHIFT) & aedat2::COORD_MASK) as u16,
-                        p: Polarity::from_bool(addr & 1 == 1),
-                    });
-                }
+                simd::decode_aedat2_words(&self.pending[..n], out);
                 self.pending.drain(..n);
                 Ok(())
             }
             Body::Dat => {
                 let n = self.pending.len() / 8 * 8;
-                for rec in self.pending[..n].chunks_exact(8) {
-                    let t = u32::from_le_bytes(rec[0..4].try_into().unwrap()) as u64;
-                    let data = u32::from_le_bytes(rec[4..8].try_into().unwrap());
-                    out.push(Event {
-                        t,
-                        x: (data & 0x3FFF) as u16,
-                        y: ((data >> 14) & 0x3FFF) as u16,
-                        p: Polarity::from_bool((data >> 28) & 0xF != 0),
-                    });
-                }
+                simd::decode_dat_words(&self.pending[..n], out);
                 self.pending.drain(..n);
                 Ok(())
             }
@@ -634,6 +703,64 @@ mod tests {
             let fed = dec.feed(&bytes, &mut out);
             let result = fed.and_then(|_| dec.finish(&mut out));
             assert!(result.is_err(), "{format} accepted a truncated stream");
+        }
+    }
+
+    #[test]
+    fn header_feed_path_hands_over_exact_body_bytes() {
+        // The codec plane's front end consumes the header through
+        // `feed_header`/`take_pending_body`; the handover must be
+        // byte-exact for every format, at adversarial chunk sizes.
+        let events = synthetic_events(200, 64, 64);
+        let res = Resolution::new(64, 64);
+        for format in Format::ALL {
+            let mut bytes = Vec::new();
+            format.codec().encode(&events, res, &mut bytes).unwrap();
+            for chunk in [1usize, 3, 16, 97] {
+                let mut dec = StreamingDecoder::new(format);
+                let mut body = Vec::new();
+                let mut fed = 0usize;
+                for piece in bytes.chunks(chunk) {
+                    if !dec.header_done() {
+                        fed += piece.len();
+                        if dec.feed_header(piece).unwrap() {
+                            body.extend_from_slice(&dec.take_pending_body());
+                        }
+                    } else {
+                        body.extend_from_slice(piece);
+                        fed += piece.len();
+                    }
+                }
+                assert!(dec.header_done(), "{format} chunk={chunk}: header never completed");
+                assert_eq!(fed, bytes.len());
+                // Decoding the handed-over body through a *fresh* body
+                // decode must reproduce the inline result.
+                let mut inline = StreamingDecoder::new(format);
+                let mut expect = Vec::new();
+                inline.feed(&bytes, &mut expect).unwrap();
+                inline.finish(&mut expect).unwrap();
+                let mut out = Vec::new();
+                dec.feed(&body, &mut out).unwrap();
+                dec.finish(&mut out).unwrap();
+                assert_eq!(out, expect, "{format} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_points_classify_every_format() {
+        use SplitPoints::*;
+        for format in Format::ALL {
+            let class = split_points(format);
+            match format {
+                Format::Raw | Format::Aedat2 | Format::Dat => {
+                    assert_eq!(class, Stateless { word: 8 }, "{format}")
+                }
+                Format::Evt2 => assert_eq!(class, ScanBoundaries { word: 4 }),
+                Format::Evt3 | Format::Aedat | Format::Text => {
+                    assert_eq!(class, Sequential, "{format}")
+                }
+            }
         }
     }
 

@@ -16,8 +16,9 @@
 //!   raw, text), each with batch ([`formats::EventCodec`]) and
 //!   incremental ([`formats::streaming`]) decode/encode; the packed
 //!   formats' per-word decode loops live in one kernel layer
-//!   ([`formats::simd`]) with explicit SSE2 fast paths behind the
-//!   `simd` cargo feature and a property-tested scalar reference;
+//!   ([`formats::simd`]) with explicit SSE2 (x86_64) and NEON
+//!   (aarch64) fast paths behind the `simd` cargo feature and a
+//!   property-tested scalar reference;
 //! * [`net`] — SPIF wire protocol over UDP;
 //! * [`camera`] — synthetic event-camera source;
 //! * [`pipeline`] — composable per-event transforms (the paper's
@@ -34,6 +35,14 @@
 //!   `StreamReport` and `--report-json`; batch buffers recycle through
 //!   the sole-owner [`stream::ChunkPool`] (`pool_hits`/`pool_misses`
 //!   metered alongside the copy counters);
+//! * [`stream::codec_plane`] — the shared codec worker plane: a
+//!   fixed-size decode pool (`--decode-threads`) that ingest paths
+//!   hand raw byte buffers to instead of decoding inline; splittable
+//!   formats (raw/AEDAT2/DAT per-word, EVT2 at `TIME_HIGH` boundaries
+//!   via a vectorized pre-scan) decode in parallel, sequential ones
+//!   pipeline through a checked-out decoder, and sequence-keyed
+//!   reassembly restores per-stream order — byte-identical to inline
+//!   decode, with worker/queue/reassembly counters in `StreamReport`;
 //! * [`stream::merge`] — the shared k-way merge core: a loser tree
 //!   selects the next lane in O(log k) and emits whole *runs*
 //!   (galloped via `partition_point`) as zero-copy views of the

@@ -33,6 +33,7 @@ fn main() -> Result<()> {
             sink_threads,
             adaptive,
             report_json,
+            decode_threads,
         } => {
             let multi = inputs.len() > 1 || branches.len() > 1;
             let branched = branches.iter().any(|b| !b.spec.is_empty());
@@ -51,6 +52,7 @@ fn main() -> Result<()> {
                     sink_threads,
                     adaptive,
                     report_json,
+                    decode_threads,
                 },
             )?;
             eprintln!(
@@ -66,6 +68,17 @@ fn main() -> Result<()> {
                 report.peak_in_flight,
                 report.backpressure_waits,
             );
+            if report.decode_workers > 0 {
+                eprintln!(
+                    "  decode: {} workers / {} jobs, peak queue {}, peak busy {}, \
+                     peak reassembly lag {}",
+                    report.decode_workers,
+                    report.decode_jobs,
+                    report.decode_queue_depth,
+                    report.decode_worker_busy,
+                    report.decode_reassembly_lag,
+                );
+            }
             let source_dropped: u64 = report.sources.iter().map(|s| s.dropped).sum();
             if !multi && source_dropped > 0 {
                 eprintln!(

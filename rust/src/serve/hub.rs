@@ -30,7 +30,7 @@ use anyhow::Result;
 
 use crate::aer::{Event, Resolution};
 use crate::metrics::LiveNode;
-use crate::stream::{ClientLane, ClientPlane, ClientSample, EventSource};
+use crate::stream::{ClientLane, ClientPlane, ClientSample, CodecPlane, EventSource};
 
 /// Bounded sleep per credit-wait step: long enough not to burn a core,
 /// short enough that a freed window resumes ingest promptly.
@@ -65,6 +65,11 @@ pub struct ClientHub {
     disconnected: AtomicU64,
     next_id: AtomicU64,
     inner: Mutex<HubInner>,
+    /// Shared decode worker pool, when the topology runs one: readers
+    /// hand raw wire bytes to it instead of decoding inline, so the
+    /// decode thread budget stays fixed no matter how many clients
+    /// connect.
+    decode: Mutex<Option<Arc<CodecPlane>>>,
 }
 
 struct HubInner {
@@ -89,7 +94,19 @@ impl ClientHub {
             disconnected: AtomicU64::new(0),
             next_id: AtomicU64::new(0),
             inner: Mutex::new(HubInner { clients: Vec::new(), pending: Vec::new() }),
+            decode: Mutex::new(None),
         })
+    }
+
+    /// Route every client's packed-word decode through `plane` (readers
+    /// admitted before this call keep decoding inline).
+    pub fn set_decode_plane(&self, plane: Arc<CodecPlane>) {
+        *self.decode.lock().unwrap() = Some(plane);
+    }
+
+    /// The shared decode pool, when one is attached.
+    pub fn decode_plane(&self) -> Option<Arc<CodecPlane>> {
+        self.decode.lock().unwrap().clone()
     }
 
     /// Microseconds since the hub came up — the arrival timestamp
@@ -242,6 +259,12 @@ impl ClientIngest {
     /// The geometry to filter decoded events against.
     pub fn geometry(&self) -> Resolution {
         self.hub.geometry()
+    }
+
+    /// The shared decode pool to hand wire bytes to, when the topology
+    /// runs one (`None` means decode inline on the reader thread).
+    pub fn decode_plane(&self) -> Option<Arc<CodecPlane>> {
+        self.hub.decode_plane()
     }
 
     /// `true` while both the hub and this client's lane are up.

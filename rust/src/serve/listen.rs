@@ -20,7 +20,8 @@ use anyhow::{Context, Result};
 
 use crate::aer::{Event, Resolution};
 use crate::net::spif;
-use crate::stream::{ClientPlane, EventSource};
+use crate::stream::codec_plane::MAX_BACKLOG;
+use crate::stream::{ClientPlane, CodecPlane, DecodeStream, EventSource};
 
 use super::hub::{ClientHub, ClientIngest};
 use super::thread_label;
@@ -183,6 +184,12 @@ impl EventSource for ListenerSource {
     fn client_plane(&self) -> Option<Arc<dyn ClientPlane>> {
         Some(self.hub.clone())
     }
+
+    /// Every client admitted from here on hands its wire bytes to the
+    /// shared pool instead of decoding on its reader thread.
+    fn set_codec_plane(&mut self, plane: Arc<CodecPlane>) {
+        self.hub.set_decode_plane(plane);
+    }
 }
 
 impl Drop for ListenerSource {
@@ -221,9 +228,10 @@ fn accept_loop(listener: TcpListener, hub: Arc<ClientHub>, protocol: Protocol) {
 
 fn spawn_reader(stream: TcpStream, ingest: ClientIngest, protocol: Protocol) {
     let name = thread_label(ingest.name());
-    let run = move || match protocol {
-        Protocol::Tcp => read_spif_stream(stream, &ingest),
-        Protocol::Http => serve_http(stream, &ingest),
+    let run = move || match (protocol, ingest.decode_plane()) {
+        (Protocol::Tcp, Some(plane)) => read_spif_stream_pooled(stream, &ingest, &plane),
+        (Protocol::Tcp, None) => read_spif_stream(stream, &ingest),
+        (Protocol::Http, plane) => serve_http(stream, &ingest, plane.as_ref()),
     };
     if let Err(err) = std::thread::Builder::new().name(name).spawn(run) {
         // Thread exhaustion: the dropped ingest counts the disconnect.
@@ -286,10 +294,114 @@ fn read_spif_stream(mut stream: TcpStream, ingest: &ClientIngest) {
     }
 }
 
+/// [`read_spif_stream`], decoupled: wire bytes go to the shared codec
+/// plane and come back in order through the per-stream reassembly, so
+/// this thread does socket I/O and credit accounting only. The credit
+/// window still blocks *here* — backpressure lands on the reader, never
+/// on a decode worker.
+fn read_spif_stream_pooled(mut stream: TcpStream, ingest: &ClientIngest, plane: &Arc<CodecPlane>) {
+    let mut dstream = plane.open_spif_stream(ingest.geometry());
+    let mut buf = [0u8; READ_BUF];
+    loop {
+        let read = match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(err)
+                if err.kind() == ErrorKind::WouldBlock
+                    || err.kind() == ErrorKind::TimedOut =>
+            {
+                if !ingest.open() {
+                    break;
+                }
+                // Idle socket: flush anything the workers finished so
+                // decoded events never wait on the next wire read.
+                let mut batch = Vec::new();
+                match dstream.poll(&mut batch) {
+                    Ok(rejected) => {
+                        if rejected > 0 {
+                            ingest.count_dropped(rejected);
+                        }
+                        if !batch.is_empty() && !ingest.push(batch) {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+                continue;
+            }
+            Err(err) if err.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        };
+        if dstream.submit_stamped(&buf[..read], ingest.now_us()).is_err() {
+            break;
+        }
+        let mut batch = Vec::new();
+        // A reader that outruns the workers waits here, bounding
+        // per-client memory at O(MAX_BACKLOG × piece).
+        let drained = if dstream.backlog() > MAX_BACKLOG {
+            dstream.poll_wait(&mut batch)
+        } else {
+            dstream.poll(&mut batch)
+        };
+        match drained {
+            Ok(rejected) => {
+                if rejected > 0 {
+                    ingest.count_dropped(rejected);
+                }
+                if !ingest.push(batch) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    // Disconnect: drain what is still in flight (a torn trailing word
+    // is dropped, exactly as the inline loop drops its carry).
+    if dstream.finish().is_err() {
+        return;
+    }
+    let mut batch = Vec::new();
+    let mut rejected = 0;
+    while !dstream.done() {
+        match dstream.poll_wait(&mut batch) {
+            Ok(r) => rejected += r,
+            Err(_) => return,
+        }
+    }
+    if rejected > 0 {
+        ingest.count_dropped(rejected);
+    }
+    let _ = ingest.push(batch);
+}
+
+/// Decode one HTTP request body through the shared pool: submit, then
+/// drain to completion so the reply can carry the accepted count. The
+/// wire contract (whole words only) is checked up front — the plane
+/// carries torn words across submits, which a datagram body must not
+/// need.
+fn decode_body_pooled(
+    dstream: &mut DecodeStream,
+    body: &[u8],
+    t: u64,
+) -> Result<(Vec<Event>, u64)> {
+    if body.len() % 4 != 0 {
+        anyhow::bail!("spif: body length {} not a multiple of 4", body.len());
+    }
+    dstream.submit_stamped(body, t)?;
+    let mut batch = Vec::new();
+    let mut rejected = 0;
+    while !dstream.done() {
+        rejected += dstream.poll_wait(&mut batch)?;
+    }
+    Ok((batch, rejected))
+}
+
 /// Serve keep-alive HTTP on one connection: `POST` bodies of SPIF
-/// words are decoded, filtered, and pushed as one batch each.
-fn serve_http(mut stream: TcpStream, ingest: &ClientIngest) {
+/// words are decoded (on the shared pool, when one is attached),
+/// filtered, and pushed as one batch each.
+fn serve_http(mut stream: TcpStream, ingest: &ClientIngest, plane: Option<&Arc<CodecPlane>>) {
     let geometry = ingest.geometry();
+    let mut dstream = plane.map(|plane| plane.open_spif_stream(geometry));
     let mut pending: Vec<u8> = Vec::new();
     'requests: loop {
         // Accumulate until the blank line ending the request head.
@@ -338,12 +450,18 @@ fn serve_http(mut stream: TcpStream, ingest: &ClientIngest) {
             }
             continue;
         }
-        match spif::decode_datagram(&body, ingest.now_us()) {
-            Ok(events) => {
+        let decoded = match &mut dstream {
+            Some(dstream) => decode_body_pooled(dstream, &body, ingest.now_us()),
+            None => spif::decode_datagram(&body, ingest.now_us()).map(|events| {
                 let total = events.len();
                 let batch: Vec<Event> =
                     events.into_iter().filter(|ev| geometry.contains(ev)).collect();
                 let rejected = (total - batch.len()) as u64;
+                (batch, rejected)
+            }),
+        };
+        match decoded {
+            Ok((batch, rejected)) => {
                 if rejected > 0 {
                     ingest.count_dropped(rejected);
                 }

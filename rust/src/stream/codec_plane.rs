@@ -1,0 +1,907 @@
+//! The shared codec worker plane: packed-format decode off the ingest
+//! threads, on a *bounded* pool.
+//!
+//! The paper's thesis is that event production must be decoupled from
+//! event consumption for throughput on conventional hardware. The
+//! ingest side used to violate it twice over: every file pump and every
+//! serving-plane client ran byte I/O **and** the packed-format state
+//! machine on the same thread — decode latency stalled reads, and 128
+//! clients cost 128 decoding threads. This module is the decoupling
+//! point:
+//!
+//! * Readers fill pooled byte buffers ([`super::pool::BytePool`]) and
+//!   [`submit`](DecodeStream::submit) them; each buffer is cut into
+//!   `(stream, seq)`-tagged pieces (ranges over one `Arc<Vec<u8>>` —
+//!   the split itself is zero-copy) on a shared work queue.
+//! * `W` workers (`--decode-threads`, default derived from
+//!   `available_parallelism`) run the [`crate::formats::simd`] kernels.
+//!   The thread budget is fixed: client count no longer buys threads.
+//! * A sequence-keyed reassembly per stream (the same pattern as the
+//!   shard re-merge in [`super::stage`]) restores order at
+//!   [`poll`](DecodeStream::poll) — byte-identical to inline decode.
+//!
+//! How much *intra*-stream concurrency a format admits is its
+//! [`SplitPoints`] class: `raw`/AEDAT 2.0/DAT pieces are fully
+//! independent; EVT2 pieces decode under the exact entry state found by
+//! a vectorized backward pre-scan for the last `TIME_HIGH` word
+//! ([`crate::formats::simd::evt2_scan_last_time_high`] — `TIME_HIGH`
+//! resets the decoder's only state, so the scan result *is* the inline
+//! state at the cut); EVT3/AEDAT 3.1/CSV streams stay sequential, one
+//! in-flight piece batch per stream, but still decode off the reader
+//! thread and concurrently *across* streams.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::aer::{Event, Resolution};
+use crate::formats::simd;
+use crate::formats::streaming::{split_points, SplitPoints, StreamingDecoder};
+use crate::formats::Format;
+use crate::net::spif;
+
+use super::pool::BytePool;
+
+/// Target bytes per parallel decode piece: large enough that per-job
+/// decode time dwarfs queue/wakeup overhead (~64 KiB ≈ 8k events),
+/// small enough that one read fans out across several workers.
+const PIECE_BYTES: usize = 64 << 10;
+
+/// Soft cap on undelivered pieces per stream before a submitter should
+/// drain ([`DecodeStream::backlog`]): bounds per-stream memory at
+/// `O(backlog × piece)` when readers outrun the workers.
+pub const MAX_BACKLOG: usize = 16;
+
+/// Sizing for the worker pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CodecPlaneConfig {
+    /// Decode worker threads (`--decode-threads`).
+    pub workers: usize,
+}
+
+impl CodecPlaneConfig {
+    /// Exactly `workers` threads (floored at 1).
+    pub fn with_workers(workers: usize) -> CodecPlaneConfig {
+        CodecPlaneConfig { workers: workers.max(1) }
+    }
+}
+
+impl Default for CodecPlaneConfig {
+    /// `available_parallelism`-derived: leave a core for the merge
+    /// driver and one for ingest, cap at 8 (decode is memory-bound well
+    /// before that).
+    fn default() -> Self {
+        let cores =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        CodecPlaneConfig { workers: cores.saturating_sub(2).clamp(1, 8) }
+    }
+}
+
+/// Lifetime counters for the plane (peaks are high-water marks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CodecPlaneCounters {
+    /// Worker threads in the pool.
+    pub workers: u64,
+    /// Decode jobs executed.
+    pub jobs: u64,
+    /// Peak depth of the shared work queue.
+    pub queue_depth: u64,
+    /// Peak concurrently-busy workers.
+    pub worker_busy: u64,
+    /// Peak out-of-order results buffered in any stream's reassembly.
+    pub reassembly_lag: u64,
+}
+
+/// What a worker must know to decode one piece independently.
+#[derive(Debug, Clone, Copy)]
+enum Entry {
+    Raw,
+    Aedat2,
+    Dat,
+    /// Entry `TIME_HIGH` state — exactly the inline decoder state at
+    /// the cut, from the submitter's pre-scan.
+    Evt2 { time_high: Option<u64> },
+    /// SPIF wire words: arrival timestamp and the canvas to filter to.
+    Spif { t: u64, geometry: Resolution },
+}
+
+/// One decoded piece, keyed into the reassembly map by its seq.
+#[derive(Debug, Default)]
+struct PieceOutput {
+    events: Vec<Event>,
+    /// Events rejected by the geometry filter (SPIF streams).
+    rejected: u64,
+}
+
+/// A sequential stream's queued input piece.
+struct SeqPiece {
+    seq: u64,
+    bytes: Arc<Vec<u8>>,
+    start: usize,
+    end: usize,
+    /// End-of-stream marker: run `finish()` after this piece.
+    finish: bool,
+}
+
+/// Per-stream state shared between the submitting reader, the workers,
+/// and the polling side (all three may be the same thread for files).
+struct StreamShared {
+    state: Mutex<StreamState>,
+    /// Signaled whenever a result lands in `done`.
+    delivered: Condvar,
+}
+
+struct StreamState {
+    /// Sequential formats only: the live decoder, `None` while checked
+    /// out by the worker that owns the current drain.
+    seqdec: Option<StreamingDecoder>,
+    /// Sequential formats only: pieces awaiting the next drain.
+    seq_input: VecDeque<SeqPiece>,
+    /// A `Drain` job for this stream is queued or running (at most one
+    /// worker touches a sequential decoder at a time).
+    scheduled: bool,
+    /// The stream hit a decode error; later pieces complete empty (the
+    /// error surfaces, once, at its own seq during in-order poll).
+    errored: bool,
+    /// Seq-keyed reassembly: results land here in completion order and
+    /// leave in seq order.
+    done: BTreeMap<u64, Result<PieceOutput>>,
+    /// Next seq to hand to the poller.
+    next_emit: u64,
+    /// Geometry discovered by a worker-held sequential decoder.
+    res: Option<Resolution>,
+}
+
+enum Job {
+    /// An independently decodable piece (split-capable formats).
+    Piece { stream: Arc<StreamShared>, seq: u64, bytes: Arc<Vec<u8>>, start: usize, end: usize, entry: Entry },
+    /// Drain a sequential stream's input queue through its decoder.
+    Drain { stream: Arc<StreamShared> },
+}
+
+struct PlaneShared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    jobs: AtomicU64,
+    queue_depth_peak: AtomicU64,
+    busy_now: AtomicU64,
+    busy_peak: AtomicU64,
+    lag_peak: AtomicU64,
+}
+
+impl PlaneShared {
+    fn bump_peak(peak: &AtomicU64, value: u64) {
+        peak.fetch_max(value, Ordering::Relaxed);
+    }
+
+    fn enqueue(&self, job: Job) {
+        let mut q = self.queue.lock().expect("codec queue lock");
+        q.push_back(job);
+        Self::bump_peak(&self.queue_depth_peak, q.len() as u64);
+        drop(q);
+        self.available.notify_one();
+    }
+}
+
+/// The fixed-size shared decode worker pool. One per topology run
+/// (`Arc`-shared into every packed-format ingest path via
+/// [`EventSource::set_codec_plane`](super::EventSource::set_codec_plane)).
+pub struct CodecPlane {
+    shared: Arc<PlaneShared>,
+    bytes: Arc<BytePool>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    worker_count: usize,
+}
+
+impl CodecPlane {
+    /// Spawn the worker pool (threads are named `codec:<i>` so a thread
+    /// census can assert the budget).
+    pub fn new(config: CodecPlaneConfig) -> Arc<CodecPlane> {
+        let shared = Arc::new(PlaneShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            jobs: AtomicU64::new(0),
+            queue_depth_peak: AtomicU64::new(0),
+            busy_now: AtomicU64::new(0),
+            busy_peak: AtomicU64::new(0),
+            lag_peak: AtomicU64::new(0),
+        });
+        let worker_count = config.workers.max(1);
+        let workers = (0..worker_count)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("codec:{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn codec worker")
+            })
+            .collect();
+        Arc::new(CodecPlane {
+            shared,
+            bytes: Arc::new(BytePool::new()),
+            workers: Mutex::new(workers),
+            worker_count,
+        })
+    }
+
+    /// Worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.worker_count
+    }
+
+    /// The plane's pooled byte buffers (readers draw read buffers here
+    /// so steady-state ingest allocates nothing).
+    pub fn byte_pool(&self) -> &Arc<BytePool> {
+        &self.bytes
+    }
+
+    /// Lifetime counters (peaks are high-water marks).
+    pub fn counters(&self) -> CodecPlaneCounters {
+        CodecPlaneCounters {
+            workers: self.worker_count as u64,
+            jobs: self.shared.jobs.load(Ordering::Relaxed),
+            queue_depth: self.shared.queue_depth_peak.load(Ordering::Relaxed),
+            worker_busy: self.shared.busy_peak.load(Ordering::Relaxed),
+            reassembly_lag: self.shared.lag_peak.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Open a decode stream for a container format. The submitter-side
+    /// handle consumes the header sequentially, then fans body pieces
+    /// out per the format's [`SplitPoints`] class.
+    pub fn open_stream(self: &Arc<Self>, format: Format) -> DecodeStream {
+        let kind = match split_points(format) {
+            SplitPoints::Stateless { word } | SplitPoints::ScanBoundaries { word } => {
+                StreamKind::Parallel { format, word }
+            }
+            SplitPoints::Sequential => StreamKind::Sequential,
+        };
+        DecodeStream::new(Arc::clone(self), kind, StreamingDecoder::new(format))
+    }
+
+    /// Open a decode stream for SPIF wire words (the serving plane's
+    /// TCP framing): headerless 4-byte words, stateless, filtered to
+    /// `geometry` with rejects counted per piece.
+    pub fn open_spif_stream(self: &Arc<Self>, geometry: Resolution) -> DecodeStream {
+        DecodeStream {
+            plane: Arc::clone(self),
+            shared: Arc::new(StreamShared::new(None)),
+            kind: StreamKind::Spif { geometry },
+            header: None,
+            carry: Vec::new(),
+            evt2_entry: None,
+            next_seq: 0,
+            finished: false,
+            failed: None,
+            res: Some(geometry),
+        }
+    }
+
+    /// `true` once the plane has shut down and its workers are joined:
+    /// anything submitted from here on will never decode.
+    fn is_closed(&self) -> bool {
+        self.shared.shutdown.load(Ordering::Relaxed)
+            && self.workers.lock().expect("codec workers lock").is_empty()
+    }
+
+    /// Stop accepting work, finish queued jobs, and join the workers.
+    /// Idempotent; also run by `Drop`.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.available.notify_all();
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.workers.lock().expect("codec workers lock"));
+        for handle in handles {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for CodecPlane {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl StreamShared {
+    fn new(seqdec: Option<StreamingDecoder>) -> StreamShared {
+        StreamShared {
+            state: Mutex::new(StreamState {
+                seqdec,
+                seq_input: VecDeque::new(),
+                scheduled: false,
+                errored: false,
+                done: BTreeMap::new(),
+                next_emit: 0,
+                res: None,
+            }),
+            delivered: Condvar::new(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum StreamKind {
+    /// Stateless or scan-boundary format: body pieces fan out.
+    Parallel { format: Format, word: usize },
+    /// Serial state machine: pieces queue through one decoder.
+    Sequential,
+    /// Headerless SPIF wire words (stateless, geometry-filtered).
+    Spif { geometry: Resolution },
+}
+
+/// Submitter-side handle for one stream. Single-owner (`Send`, not
+/// `Sync`): the reader thread that fills it also polls it. Pieces
+/// submitted here decode on the plane's workers; [`poll`](Self::poll)
+/// returns them in submission order, byte-identical to inline decode.
+pub struct DecodeStream {
+    plane: Arc<CodecPlane>,
+    shared: Arc<StreamShared>,
+    kind: StreamKind,
+    /// Parallel formats: the header-phase decoder, `Some` until the
+    /// framing header is fully consumed.
+    header: Option<StreamingDecoder>,
+    /// Bytes of a torn trailing word, carried to the next submit.
+    carry: Vec<u8>,
+    /// EVT2: entry state for the next piece (the last `TIME_HIGH` seen
+    /// by the pre-scan across every byte submitted so far).
+    evt2_entry: Option<u64>,
+    next_seq: u64,
+    finished: bool,
+    /// Sticky: the first error surfaced, re-returned on later polls.
+    failed: Option<String>,
+    res: Option<Resolution>,
+}
+
+impl DecodeStream {
+    fn new(plane: Arc<CodecPlane>, kind: StreamKind, decoder: StreamingDecoder) -> DecodeStream {
+        let (header, seqdec) = match kind {
+            // The sequential decoder lives with the stream state so any
+            // worker can check it out; header handling is part of it.
+            StreamKind::Sequential => (None, Some(decoder)),
+            // Parallel formats consume the header on the submit side.
+            _ => (Some(decoder), None),
+        };
+        DecodeStream {
+            plane,
+            shared: Arc::new(StreamShared::new(seqdec)),
+            kind,
+            header,
+            carry: Vec::new(),
+            evt2_entry: None,
+            next_seq: 0,
+            finished: false,
+            failed: None,
+            res: None,
+        }
+    }
+
+    /// Geometry, once known (parallel formats: after the header;
+    /// sequential formats: once a worker's decoder has seen it; SPIF:
+    /// the declared canvas).
+    pub fn resolution(&self) -> Option<Resolution> {
+        if self.res.is_some() {
+            return self.res;
+        }
+        self.shared.state.lock().expect("stream state lock").res
+    }
+
+    /// Pieces submitted but not yet delivered through `poll`.
+    pub fn backlog(&self) -> usize {
+        let state = self.shared.state.lock().expect("stream state lock");
+        (self.next_seq - state.next_emit) as usize
+    }
+
+    /// Submit one chunk of stream bytes (file read, socket read) for
+    /// decode. Byte boundaries are arbitrary — torn words and split
+    /// headers carry exactly as they do in [`StreamingDecoder::feed`].
+    pub fn submit(&mut self, bytes: &[u8]) -> Result<()> {
+        self.submit_stamped(bytes, 0)
+    }
+
+    /// [`submit`](Self::submit) with an arrival timestamp, for wire
+    /// formats that carry none (SPIF words are stamped `t`).
+    pub fn submit_stamped(&mut self, bytes: &[u8], t: u64) -> Result<()> {
+        debug_assert!(!self.finished, "submit after finish");
+        match self.kind {
+            StreamKind::Sequential => {
+                self.submit_sequential(bytes, false);
+                Ok(())
+            }
+            StreamKind::Spif { geometry } => {
+                self.submit_words(bytes, 4, |_| Entry::Spif { t, geometry });
+                Ok(())
+            }
+            StreamKind::Parallel { format, word } => {
+                let body_owned;
+                let mut body = bytes;
+                if let Some(dec) = self.header.as_mut() {
+                    if !dec.feed_header(bytes)? {
+                        return Ok(()); // still inside the header
+                    }
+                    let mut dec = self.header.take().expect("header decoder present");
+                    self.res = dec.resolution();
+                    body_owned = dec.take_pending_body();
+                    body = &body_owned;
+                }
+                self.submit_parallel_body(body, format, word);
+                Ok(())
+            }
+        }
+    }
+
+    /// Split word-aligned body bytes into pieces and queue them, with
+    /// per-format entry state.
+    fn submit_parallel_body(&mut self, body: &[u8], format: Format, word: usize) {
+        match format {
+            Format::Raw => self.submit_words(body, word, |_| Entry::Raw),
+            Format::Aedat2 => self.submit_words(body, word, |_| Entry::Aedat2),
+            Format::Dat => self.submit_words(body, word, |_| Entry::Dat),
+            Format::Evt2 => {
+                // Thread the pre-scanned TIME_HIGH state through the
+                // pieces: each decodes under exactly the inline state.
+                let mut entry = self.evt2_entry;
+                self.submit_words(body, word, |piece| {
+                    let this = Entry::Evt2 { time_high: entry };
+                    if let Some(th) = simd::evt2_scan_last_time_high(piece) {
+                        entry = Some(th);
+                    }
+                    this
+                });
+                self.evt2_entry = entry;
+            }
+            _ => unreachable!("sequential formats never take the parallel path"),
+        }
+    }
+
+    /// Copy `carry + bytes` into one pooled buffer, cut it into
+    /// word-aligned pieces (ranges over the shared allocation), and
+    /// queue each with the entry state `entry_for` assigns. The torn
+    /// tail becomes the next carry.
+    fn submit_words(
+        &mut self,
+        bytes: &[u8],
+        word: usize,
+        mut entry_for: impl FnMut(&[u8]) -> Entry,
+    ) {
+        let total = self.carry.len() + bytes.len();
+        let aligned = total / word * word;
+        if aligned == 0 {
+            self.carry.extend_from_slice(bytes);
+            return;
+        }
+        let mut buf = self.plane.bytes.get(aligned);
+        let from_carry = self.carry.len().min(aligned);
+        buf.extend_from_slice(&self.carry[..from_carry]);
+        buf.extend_from_slice(&bytes[..aligned - from_carry]);
+        self.carry.drain(..from_carry);
+        self.carry.extend_from_slice(&bytes[aligned - from_carry..]);
+        let shared_buf = Arc::new(buf);
+        let pieces = aligned.div_ceil(PIECE_BYTES);
+        let per = (aligned / pieces / word).max(1) * word;
+        let mut start = 0;
+        while start < aligned {
+            let end = if aligned - start < per + word { aligned } else { start + per };
+            let entry = entry_for(&shared_buf[start..end]);
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.plane.shared.enqueue(Job::Piece {
+                stream: Arc::clone(&self.shared),
+                seq,
+                bytes: Arc::clone(&shared_buf),
+                start,
+                end,
+                entry,
+            });
+            start = end;
+        }
+        // Reclaimed for a future read once every piece has decoded.
+        self.plane.bytes.recycle_arc(shared_buf);
+    }
+
+    /// Queue bytes for a sequential stream and make sure a drain job
+    /// is scheduled (at most one in flight per stream).
+    fn submit_sequential(&mut self, bytes: &[u8], finish: bool) {
+        let mut buf = self.plane.bytes.get(bytes.len());
+        buf.extend_from_slice(bytes);
+        let end = buf.len();
+        let shared_buf = Arc::new(buf);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let mut state = self.shared.state.lock().expect("stream state lock");
+        state.seq_input.push_back(SeqPiece {
+            seq,
+            bytes: Arc::clone(&shared_buf),
+            start: 0,
+            end,
+            finish,
+        });
+        let need_job = !state.scheduled;
+        state.scheduled = true;
+        drop(state);
+        self.plane.bytes.recycle_arc(shared_buf);
+        if need_job {
+            self.plane.shared.enqueue(Job::Drain { stream: Arc::clone(&self.shared) });
+        }
+    }
+
+    /// End of stream: flush trailing state and validate completeness
+    /// with the same errors inline decode raises. Results still in
+    /// flight after `finish` are drained with [`poll`](Self::poll) /
+    /// [`poll_wait`](Self::poll_wait) until [`done`](Self::done).
+    pub fn finish(&mut self) -> Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        match self.kind {
+            StreamKind::Sequential => {
+                self.submit_sequential(&[], true);
+                Ok(())
+            }
+            // A torn SPIF word at disconnect is dropped, exactly as the
+            // inline reader loop drops its carry.
+            StreamKind::Spif { .. } => Ok(()),
+            StreamKind::Parallel { format, word } => {
+                if let Some(dec) = self.header.as_mut() {
+                    // EOF inside the header: legal only for the
+                    // comment-header formats, same as inline.
+                    dec.finish_header_at_eof()?;
+                    let mut dec = self.header.take().expect("header decoder present");
+                    self.res = dec.resolution();
+                    let body = dec.take_pending_body();
+                    self.submit_parallel_body(&body, format, word);
+                }
+                if !self.carry.is_empty() {
+                    // Short names exactly as StreamingDecoder::finish
+                    // spells them (Display says "aedat2.0").
+                    let name = match format {
+                        Format::Raw => "raw",
+                        Format::Aedat2 => "aedat2",
+                        Format::Dat => "dat",
+                        _ => "evt2",
+                    };
+                    let n = self.carry.len();
+                    bail!("{name}: trailing {n} bytes (body not a multiple of {word})");
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// `true` once every submitted piece has been delivered (or the
+    /// stream failed).
+    pub fn done(&self) -> bool {
+        let state = self.shared.state.lock().expect("stream state lock");
+        state.next_emit >= self.next_seq || self.failed.is_some()
+    }
+
+    /// Non-blocking drain: append every in-order completed result to
+    /// `out`, returning the geometry-rejected count surfaced with them.
+    pub fn poll(&mut self, out: &mut Vec<Event>) -> Result<u64> {
+        let mut state = self.shared.state.lock().expect("stream state lock");
+        self.drain_ready(&mut state, out)
+    }
+
+    /// Blocking drain: wait until at least the next in-order result is
+    /// available (no-op when nothing is outstanding), then drain.
+    pub fn poll_wait(&mut self, out: &mut Vec<Event>) -> Result<u64> {
+        if let Some(msg) = &self.failed {
+            return Err(anyhow!("{msg}"));
+        }
+        let mut state = self.shared.state.lock().expect("stream state lock");
+        while state.next_emit < self.next_seq && !state.done.contains_key(&state.next_emit) {
+            // Bounded waits: workers drain everything queued before a
+            // shutdown joins them, but a piece submitted *after* the
+            // join will never decode — surface that instead of hanging
+            // a detached reader thread forever.
+            let (next, timeout) = self
+                .shared
+                .delivered
+                .wait_timeout(state, std::time::Duration::from_millis(50))
+                .expect("stream state lock");
+            state = next;
+            if timeout.timed_out()
+                && self.plane.is_closed()
+                && !state.done.contains_key(&state.next_emit)
+            {
+                bail!("codec plane shut down with pieces still undecoded");
+            }
+        }
+        self.drain_ready(&mut state, out)
+    }
+
+    fn drain_ready(&mut self, state: &mut StreamState, out: &mut Vec<Event>) -> Result<u64> {
+        if let Some(msg) = &self.failed {
+            return Err(anyhow!("{msg}"));
+        }
+        let mut rejected = 0u64;
+        while let Some(result) = state.done.remove(&state.next_emit) {
+            state.next_emit += 1;
+            match result {
+                Ok(mut piece) => {
+                    rejected += piece.rejected;
+                    if out.is_empty() {
+                        *out = std::mem::take(&mut piece.events);
+                    } else {
+                        out.append(&mut piece.events);
+                    }
+                }
+                Err(e) => {
+                    self.failed = Some(format!("{e:#}"));
+                    return Err(e);
+                }
+            }
+        }
+        if self.res.is_none() {
+            self.res = state.res;
+        }
+        Ok(rejected)
+    }
+}
+
+/// One worker: pull jobs until shutdown *and* the queue is empty.
+fn worker_loop(shared: &PlaneShared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("codec queue lock");
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break Some(job);
+                }
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    break None;
+                }
+                q = shared.available.wait(q).expect("codec queue lock");
+            }
+        };
+        let Some(job) = job else { return };
+        let busy = shared.busy_now.fetch_add(1, Ordering::Relaxed) + 1;
+        PlaneShared::bump_peak(&shared.busy_peak, busy);
+        shared.jobs.fetch_add(1, Ordering::Relaxed);
+        match job {
+            Job::Piece { stream, seq, bytes, start, end, entry } => {
+                let result = decode_piece(&bytes[start..end], entry);
+                drop(bytes); // release the pooled buffer before parking
+                deliver(shared, &stream, seq, result);
+            }
+            Job::Drain { stream } => drain_sequential(shared, &stream),
+        }
+        shared.busy_now.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Decode one independent piece under its entry state.
+fn decode_piece(bytes: &[u8], entry: Entry) -> Result<PieceOutput> {
+    let mut out = PieceOutput::default();
+    match entry {
+        Entry::Raw => simd::decode_raw_words(bytes, &mut out.events),
+        Entry::Aedat2 => simd::decode_aedat2_words(bytes, &mut out.events),
+        Entry::Dat => simd::decode_dat_words(bytes, &mut out.events),
+        Entry::Evt2 { time_high } => {
+            let mut th = time_high;
+            simd::decode_evt2_words(bytes, &mut th, &mut out.events)?;
+        }
+        Entry::Spif { t, geometry } => {
+            out.events.reserve(bytes.len() / 4);
+            for word in bytes.chunks_exact(4) {
+                let ev = spif::unpack_word(u32::from_le_bytes(word.try_into().unwrap()), t);
+                if geometry.contains(&ev) {
+                    out.events.push(ev);
+                } else {
+                    out.rejected += 1;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Check the sequential decoder out of the stream, run every queued
+/// piece through it, and check it back in — re-enqueueing another drain
+/// if input raced in meanwhile.
+fn drain_sequential(shared: &PlaneShared, stream: &Arc<StreamShared>) {
+    loop {
+        let (mut dec, pieces, errored) = {
+            let mut state = stream.state.lock().expect("stream state lock");
+            debug_assert!(state.scheduled);
+            if state.seq_input.is_empty() {
+                state.scheduled = false;
+                return;
+            }
+            let pieces: Vec<SeqPiece> = state.seq_input.drain(..).collect();
+            (state.seqdec.take(), pieces, state.errored)
+        };
+        let mut results: Vec<(u64, Result<PieceOutput>)> = Vec::with_capacity(pieces.len());
+        for piece in pieces {
+            if errored || dec.is_none() {
+                // The stream already failed: later pieces complete
+                // empty (the error surfaced at its own seq).
+                results.push((piece.seq, Ok(PieceOutput::default())));
+                continue;
+            }
+            let decoder = dec.as_mut().expect("sequential decoder checked out");
+            let mut out = PieceOutput::default();
+            let fed = decoder.feed(&piece.bytes[piece.start..piece.end], &mut out.events);
+            let finished = match (fed, piece.finish) {
+                (Ok(()), true) => decoder.finish(&mut out.events),
+                (result, _) => result,
+            };
+            match finished {
+                Ok(()) => results.push((piece.seq, Ok(out))),
+                Err(e) => {
+                    results.push((piece.seq, Err(e)));
+                    dec = None; // the state machine is poisoned
+                }
+            }
+        }
+        let mut state = stream.state.lock().expect("stream state lock");
+        if dec.is_none() {
+            state.errored = true;
+        }
+        if let Some(decoder) = &dec {
+            if state.res.is_none() {
+                state.res = decoder.resolution();
+            }
+        }
+        state.seqdec = dec;
+        for (seq, result) in results {
+            state.done.insert(seq, result);
+        }
+        PlaneShared::bump_peak(&shared.lag_peak, state.done.len() as u64);
+        let more = !state.seq_input.is_empty();
+        if !more {
+            state.scheduled = false;
+        }
+        drop(state);
+        stream.delivered.notify_all();
+        if !more {
+            return;
+        }
+    }
+}
+
+/// Insert one piece result into its stream's reassembly and wake the
+/// poller.
+fn deliver(shared: &PlaneShared, stream: &StreamShared, seq: u64, result: Result<PieceOutput>) {
+    let mut state = stream.state.lock().expect("stream state lock");
+    state.done.insert(seq, result);
+    PlaneShared::bump_peak(&shared.lag_peak, state.done.len() as u64);
+    drop(state);
+    stream.delivered.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::EventCodec;
+    use crate::testutil::synthetic_events_seeded;
+
+    fn plane(workers: usize) -> Arc<CodecPlane> {
+        CodecPlane::new(CodecPlaneConfig::with_workers(workers))
+    }
+
+    #[test]
+    fn every_format_decodes_identically_through_the_plane() {
+        let events = synthetic_events_seeded(5000, 346, 260, 0xC0DEC);
+        let res = Resolution::DAVIS_346;
+        let plane = plane(3);
+        for format in Format::ALL {
+            let mut bytes = Vec::new();
+            format.codec().encode(&events, res, &mut bytes).unwrap();
+            // The contract is inline equivalence: same events, same
+            // discovered geometry, for any submit chunking.
+            let mut inline = Vec::new();
+            let mut dec = StreamingDecoder::new(format);
+            dec.feed(&bytes, &mut inline).unwrap();
+            dec.finish(&mut inline).unwrap();
+            for chunk in [13usize, 1024, 65536] {
+                let mut stream = plane.open_stream(format);
+                let mut out = Vec::new();
+                for piece in bytes.chunks(chunk) {
+                    stream.submit(piece).unwrap();
+                    stream.poll(&mut out).unwrap();
+                }
+                stream.finish().unwrap();
+                while !stream.done() {
+                    stream.poll_wait(&mut out).unwrap();
+                }
+                assert_eq!(out, inline, "{format} chunk={chunk}");
+                assert_eq!(stream.resolution(), dec.resolution(), "{format} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_streams_error_like_inline_decode() {
+        let events = synthetic_events_seeded(300, 64, 64, 0xBAD);
+        for format in [Format::Raw, Format::Evt2, Format::Evt3, Format::Aedat] {
+            let mut bytes = Vec::new();
+            format.codec().encode(&events, Resolution::new(64, 64), &mut bytes).unwrap();
+            bytes.truncate(bytes.len() - 1);
+            let plane = plane(2);
+            let mut stream = plane.open_stream(format);
+            let mut out = Vec::new();
+            let result = stream
+                .submit(&bytes)
+                .and_then(|()| stream.finish())
+                .and_then(|()| {
+                    while !stream.done() {
+                        stream.poll_wait(&mut out)?;
+                    }
+                    Ok(())
+                });
+            assert!(result.is_err(), "{format} accepted a truncated stream");
+        }
+    }
+
+    #[test]
+    fn evt2_cd_before_time_high_surfaces_at_the_right_seq() {
+        // An EVT2 stream whose very first body word is CD (type 0x1,
+        // no preceding TIME_HIGH): the error belongs to seq 0 and must
+        // surface exactly once.
+        let mut bytes = Vec::new();
+        Format::Evt2.codec().encode(&[], Resolution::new(64, 64), &mut bytes).unwrap();
+        bytes.extend_from_slice(&((0x1u32 << 28) | 7).to_le_bytes());
+        let plane = plane(2);
+        let mut stream = plane.open_stream(Format::Evt2);
+        stream.submit(&bytes).unwrap();
+        stream.finish().unwrap();
+        let mut out = Vec::new();
+        let err = loop {
+            match stream.poll_wait(&mut out) {
+                Err(e) => break e,
+                Ok(_) if stream.done() => panic!("expected a decode error"),
+                Ok(_) => continue,
+            }
+        };
+        assert!(format!("{err}").contains("before any TIME_HIGH"), "{err}");
+        // Sticky: the poller keeps seeing the failure.
+        assert!(stream.poll(&mut out).is_err());
+    }
+
+    #[test]
+    fn spif_streams_stamp_filter_and_count_rejects() {
+        let geometry = Resolution::new(16, 16);
+        let plane = plane(2);
+        let mut stream = plane.open_spif_stream(geometry);
+        let inside = Event::on(3, 4, 0);
+        let outside = Event::on(300, 4, 0);
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&spif::pack_word(&inside).to_le_bytes());
+        wire.extend_from_slice(&spif::pack_word(&outside).to_le_bytes());
+        stream.submit_stamped(&wire, 77).unwrap();
+        stream.finish().unwrap();
+        let mut out = Vec::new();
+        let mut rejected = 0;
+        while !stream.done() {
+            rejected += stream.poll_wait(&mut out).unwrap();
+        }
+        assert_eq!(rejected, 1);
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].x, out[0].y, out[0].t), (3, 4, 77));
+    }
+
+    #[test]
+    fn shutdown_finishes_queued_work_and_joins() {
+        let events = synthetic_events_seeded(2000, 128, 128, 0x0FF);
+        let mut bytes = Vec::new();
+        Format::Raw.codec().encode(&events, Resolution::new(128, 128), &mut bytes).unwrap();
+        let plane = plane(4);
+        let mut stream = plane.open_stream(Format::Raw);
+        stream.submit(&bytes).unwrap();
+        stream.finish().unwrap();
+        plane.shutdown(); // queued pieces still complete
+        let mut out = Vec::new();
+        while !stream.done() {
+            stream.poll_wait(&mut out).unwrap();
+        }
+        assert_eq!(out, events);
+        assert!(plane.counters().jobs >= 1);
+    }
+}

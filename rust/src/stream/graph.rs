@@ -139,6 +139,10 @@ pub struct GraphConfig {
     /// adaptive config an empty epoch loop is synthesized so the
     /// emitter still ticks.
     pub report_json: Option<ReportTarget>,
+    /// Decode worker budget for the shared codec plane
+    /// (`--decode-threads`); `None` keeps packed-format decode inline
+    /// on each ingest thread. See [`super::codec_plane`].
+    pub decode_threads: Option<usize>,
 }
 
 impl From<StreamConfig> for GraphConfig {
@@ -148,6 +152,7 @@ impl From<StreamConfig> for GraphConfig {
             driver: config.driver,
             adaptive: None,
             report_json: None,
+            decode_threads: None,
         }
     }
 }
@@ -969,6 +974,7 @@ impl CompiledTopology<'_> {
             self.config.driver,
             adaptive,
             self.config.report_json.take(),
+            self.config.decode_threads,
         )
     }
 }

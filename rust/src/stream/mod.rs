@@ -55,6 +55,7 @@
 
 pub mod adapt;
 pub mod chunk;
+pub mod codec_plane;
 pub mod graph;
 pub mod merge;
 pub mod pool;
@@ -79,7 +80,8 @@ pub use adapt::{
     EpochSample, Reconfigure, SkewController, StageSample, StageTelemetry, WindowChange,
 };
 pub use chunk::{copy_counters, CopyCounters, EventChunk, EVENT_BYTES};
-pub use pool::{pool_counters, ChunkPool, PoolCounters};
+pub use codec_plane::{CodecPlane, CodecPlaneConfig, CodecPlaneCounters, DecodeStream};
+pub use pool::{pool_counters, BytePool, ChunkPool, PoolCounters};
 pub use graph::{
     CompiledTopology, FusionLayout, GraphConfig, GraphSpec, SourceOptions, Topology,
     TopologyBuilder,
@@ -152,6 +154,14 @@ pub trait EventSource: Send {
     /// world (datagrams, pump rings) may ignore it. Default: ignored.
     fn set_buffer_pool(&mut self, _pool: Arc<pool::ChunkPool>) {}
 
+    /// Adopt the shared codec worker plane. Sources that decode a
+    /// packed wire/file format inline (file chunkers, serving-plane
+    /// listeners) submit raw byte buffers to the plane's bounded worker
+    /// pool instead, keeping their own thread on I/O; sources that
+    /// produce events directly (memory, cameras) ignore it. Default:
+    /// ignored.
+    fn set_codec_plane(&mut self, _plane: Arc<codec_plane::CodecPlane>) {}
+
     /// Human-readable description (logs, reports).
     fn describe(&self) -> String {
         "source".into()
@@ -190,6 +200,9 @@ impl<S: EventSource + ?Sized> EventSource for &mut S {
     fn set_buffer_pool(&mut self, pool: Arc<pool::ChunkPool>) {
         (**self).set_buffer_pool(pool)
     }
+    fn set_codec_plane(&mut self, plane: Arc<codec_plane::CodecPlane>) {
+        (**self).set_codec_plane(plane)
+    }
     fn describe(&self) -> String {
         (**self).describe()
     }
@@ -219,6 +232,9 @@ impl<S: EventSource + ?Sized> EventSource for Box<S> {
     }
     fn set_buffer_pool(&mut self, pool: Arc<pool::ChunkPool>) {
         (**self).set_buffer_pool(pool)
+    }
+    fn set_codec_plane(&mut self, plane: Arc<codec_plane::CodecPlane>) {
+        (**self).set_codec_plane(plane)
     }
     fn describe(&self) -> String {
         (**self).describe()
@@ -447,6 +463,20 @@ pub struct StreamReport {
     /// reuse. In steady state `pool_hits / (pool_hits + pool_misses)`
     /// approaches 1 — the allocation loop is closed.
     pub pool_misses: u64,
+    /// Codec-plane worker threads (`--decode-threads`); 0 when ingest
+    /// decoded inline (no plane configured).
+    pub decode_workers: u64,
+    /// Decode jobs executed on the codec plane.
+    pub decode_jobs: u64,
+    /// Peak depth of the codec plane's shared work queue: a sustained
+    /// high-water mark means readers outpace the worker budget.
+    pub decode_queue_depth: u64,
+    /// Peak concurrently-busy codec workers: how much of the budget the
+    /// run actually used.
+    pub decode_worker_busy: u64,
+    /// Peak out-of-order decoded pieces buffered in any single stream's
+    /// sequence-keyed reassembly.
+    pub decode_reassembly_lag: u64,
 }
 
 impl StreamReport {

@@ -220,6 +220,122 @@ impl Default for ChunkPool {
     }
 }
 
+struct BytePoolInner {
+    free: Vec<Vec<u8>>,
+    /// Byte buffers still referenced by in-flight decode pieces.
+    pending: VecDeque<Arc<Vec<u8>>>,
+}
+
+/// The raw-bytes sibling of [`ChunkPool`]: recycles the `Vec<u8>` read
+/// buffers that ingest threads fill and hand to the codec worker plane
+/// as `Arc<Vec<u8>>` piece ranges. Identical sole-owner discipline —
+/// a buffer is reclaimed only once every piece range over it has been
+/// decoded and dropped — and identical hit/miss accounting (folded into
+/// the same process-wide [`pool_counters`]).
+pub struct BytePool {
+    inner: Mutex<BytePoolInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl BytePool {
+    /// An empty pool.
+    pub fn new() -> BytePool {
+        BytePool {
+            inner: Mutex::new(BytePoolInner { free: Vec::new(), pending: VecDeque::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Get a cleared byte buffer with at least `cap` capacity.
+    pub fn get(&self, cap: usize) -> Vec<u8> {
+        let reclaimed = {
+            let mut inner = self.inner.lock().expect("byte pool lock");
+            Self::reclaim_locked(&mut inner);
+            inner.free.pop()
+        };
+        match reclaimed {
+            Some(mut buf) => {
+                debug_assert!(buf.is_empty());
+                if buf.capacity() < cap {
+                    buf.reserve(cap);
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                POOL_HITS.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                POOL_MISSES.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(cap)
+            }
+        }
+    }
+
+    /// Park a shared byte buffer for reclaim once the last decode piece
+    /// over it drops.
+    pub fn recycle_arc(&self, buf: Arc<Vec<u8>>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("byte pool lock");
+        inner.pending.push_back(buf);
+        while inner.pending.len() > MAX_PENDING {
+            inner.pending.pop_front();
+        }
+    }
+
+    /// Return an owned byte buffer directly to the free list (cleared).
+    pub fn recycle_vec(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        let mut inner = self.inner.lock().expect("byte pool lock");
+        if inner.free.len() < MAX_FREE {
+            inner.free.push(buf);
+        }
+    }
+
+    fn reclaim_locked(inner: &mut BytePoolInner) {
+        let mut i = 0;
+        while i < inner.pending.len() {
+            if Arc::strong_count(&inner.pending[i]) == 1 {
+                let arc = inner.pending.remove(i).expect("index in bounds");
+                match Arc::try_unwrap(arc) {
+                    Ok(mut buf) => {
+                        buf.clear();
+                        if inner.free.len() < MAX_FREE {
+                            inner.free.push(buf);
+                        }
+                    }
+                    Err(arc) => {
+                        inner.pending.insert(i, arc);
+                        i += 1;
+                    }
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// This pool's hit/miss counters.
+    pub fn counters(&self) -> PoolCounters {
+        PoolCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for BytePool {
+    fn default() -> Self {
+        BytePool::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,6 +382,27 @@ mod tests {
         let got = pool.get(8);
         assert_eq!(pool.counters(), PoolCounters { hits: 0, misses: 1 });
         assert!(got.capacity() >= 8);
+    }
+
+    #[test]
+    fn byte_pool_mirrors_the_event_pool_discipline() {
+        let pool = BytePool::new();
+        let mut buf = pool.get(4096);
+        assert_eq!(pool.counters(), PoolCounters { hits: 0, misses: 1 });
+        buf.extend_from_slice(&[7u8; 128]);
+        let base = buf.as_ptr() as usize;
+        let shared = Arc::new(buf);
+        let piece = Arc::clone(&shared); // an in-flight decode piece
+        pool.recycle_arc(shared);
+        let fresh = pool.get(4096);
+        assert_ne!(fresh.as_ptr() as usize, base, "aliased buffer must not be handed out");
+        drop(piece);
+        let back = pool.get(4096);
+        assert_eq!(back.as_ptr() as usize, base, "sole-owner buffer reclaimed");
+        assert!(back.is_empty());
+        assert_eq!(pool.counters(), PoolCounters { hits: 1, misses: 2 });
+        pool.recycle_vec(back);
+        assert_eq!(pool.get(1).as_ptr() as usize, base);
     }
 
     #[test]

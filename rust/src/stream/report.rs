@@ -154,6 +154,16 @@ impl ReportEmitter {
             report.merge_stalls_broken,
             report.merge_late_events,
         );
+        let _ = write!(
+            line,
+            ",\"decode\":{{\"workers\":{},\"jobs\":{},\"queue_depth\":{},\
+             \"worker_busy\":{},\"reassembly_lag\":{}}}",
+            report.decode_workers,
+            report.decode_jobs,
+            report.decode_queue_depth,
+            report.decode_worker_busy,
+            report.decode_reassembly_lag,
+        );
         for (key, nodes) in
             [("sources", &report.sources), ("stages", &report.stages), ("sinks", &report.sinks)]
         {

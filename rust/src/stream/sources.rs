@@ -15,6 +15,7 @@ use crate::formats::streaming::StreamingDecoder;
 use crate::formats::{detect_format, Format};
 use crate::net::UdpEventReceiver;
 
+use super::codec_plane::{CodecPlane, DecodeStream, MAX_BACKLOG};
 use super::pool::ChunkPool;
 use super::EventSource;
 
@@ -143,6 +144,15 @@ pub struct FileSource {
     ready: VecDeque<Event>,
     chunk: usize,
     read_buf: Vec<u8>,
+    /// Scratch for one fill's worth of decoded events, drained into
+    /// `ready` — reused so steady-state fills allocate nothing.
+    scratch: Vec<Event>,
+    /// Decode stream on the shared codec plane, when one is attached:
+    /// reads submit bytes here instead of feeding `decoder` inline.
+    pstream: Option<DecodeStream>,
+    /// A batch has been handed out; a late plane attach can no longer
+    /// restart the stream and is ignored.
+    consumed: bool,
     eof: bool,
     /// Bounding-box fallback for formats without recorded geometry.
     observed_res: Resolution,
@@ -159,6 +169,11 @@ pub struct FileSource {
 impl FileSource {
     /// Bytes per read syscall.
     const READ_SIZE: usize = 64 * 1024;
+
+    /// Bytes per read syscall when a codec plane is attached: larger
+    /// reads fan out across several ~64 KiB decode pieces, so one
+    /// syscall keeps multiple workers busy.
+    const PLANE_READ_SIZE: usize = 256 * 1024;
 
     /// Open a file, sniffing the format from leading bytes first and
     /// the extension second (same policy as `read_events_auto`).
@@ -183,6 +198,9 @@ impl FileSource {
             ready: VecDeque::new(),
             chunk: chunk.max(1),
             read_buf: vec![0u8; Self::READ_SIZE],
+            scratch: Vec::new(),
+            pstream: None,
+            consumed: false,
             eof: false,
             observed_res: Resolution::new(1, 1),
             claimed: None,
@@ -213,12 +231,20 @@ impl FileSource {
         self.decoder.format()
     }
 
+    /// Geometry from the recorded header, whichever side decoded it.
+    fn header_res(&self) -> Option<Resolution> {
+        match &self.pstream {
+            Some(stream) => stream.resolution(),
+            None => self.decoder.resolution(),
+        }
+    }
+
     /// Read ahead until the header yields the recorded geometry (or the
     /// body starts / EOF for headerless streams), so geometry-consuming
     /// sinks can be built before the first batch. Bounded: stops as
     /// soon as any event decodes.
     fn prime(&mut self) -> Result<()> {
-        while self.decoder.resolution().is_none() && self.ready.is_empty() && !self.eof {
+        while self.header_res().is_none() && self.ready.is_empty() && !self.eof {
             self.fill_once()?;
         }
         Ok(())
@@ -226,24 +252,41 @@ impl FileSource {
 
     /// One read syscall's worth of progress: pull bytes, run them
     /// through the decoder (or finish it at EOF), queue the events.
+    /// Decoding happens inline, or on the codec plane when one is
+    /// attached — in which case this thread only reads, submits, and
+    /// collects whatever has finished (blocking only when the decode
+    /// backlog hits its bound).
     fn fill_once(&mut self) -> Result<()> {
         let n = self
             .reader
             .read(&mut self.read_buf)
             .with_context(|| format!("reading {}", self.path.display()))?;
-        let mut decoded = Vec::new();
-        if n == 0 {
+        self.scratch.clear();
+        let path = &self.path;
+        let ctx = || format!("decoding {}", path.display());
+        if let Some(stream) = self.pstream.as_mut() {
+            if n == 0 {
+                self.eof = true;
+                stream.finish().with_context(ctx)?;
+                while !stream.done() {
+                    stream.poll_wait(&mut self.scratch).with_context(ctx)?;
+                }
+            } else {
+                stream.submit(&self.read_buf[..n]).with_context(ctx)?;
+                if stream.backlog() > MAX_BACKLOG {
+                    stream.poll_wait(&mut self.scratch).with_context(ctx)?;
+                } else {
+                    stream.poll(&mut self.scratch).with_context(ctx)?;
+                }
+            }
+        } else if n == 0 {
             self.eof = true;
-            self.decoder
-                .finish(&mut decoded)
-                .with_context(|| format!("decoding {}", self.path.display()))?;
+            self.decoder.finish(&mut self.scratch).with_context(ctx)?;
         } else {
-            self.decoder
-                .feed(&self.read_buf[..n], &mut decoded)
-                .with_context(|| format!("decoding {}", self.path.display()))?;
+            self.decoder.feed(&self.read_buf[..n], &mut self.scratch).with_context(ctx)?;
         }
-        grow_resolution(&mut self.observed_res, &decoded);
-        self.ready.extend(decoded);
+        grow_resolution(&mut self.observed_res, &self.scratch);
+        self.ready.extend(self.scratch.drain(..));
         Ok(())
     }
 }
@@ -267,7 +310,8 @@ impl EventSource for FileSource {
                 None => Vec::with_capacity(take),
             };
             batch.extend(self.ready.drain(..take));
-            if self.decoder.resolution().is_none() {
+            self.consumed = true;
+            if self.header_res().is_none() {
                 if let Some(claim) = self.claimed {
                     // The declared geometry is authoritative for
                     // headerless recordings (layouts were cut from
@@ -286,16 +330,13 @@ impl EventSource for FileSource {
 
     fn resolution(&self) -> Resolution {
         // Recorded header first, operator claim second, observation last.
-        self.decoder
-            .resolution()
-            .or(self.claimed)
-            .unwrap_or(self.observed_res)
+        self.header_res().or(self.claimed).unwrap_or(self.observed_res)
     }
 
     fn geometry_known(&self) -> bool {
         // Exact iff the header recorded it or the operator declared it;
         // otherwise only the events seen so far bound it.
-        self.decoder.resolution().is_some() || self.claimed.is_some()
+        self.header_res().is_some() || self.claimed.is_some()
     }
 
     fn dropped(&self) -> u64 {
@@ -308,6 +349,27 @@ impl EventSource for FileSource {
 
     fn set_buffer_pool(&mut self, pool: Arc<ChunkPool>) {
         self.pool = Some(pool);
+    }
+
+    fn set_codec_plane(&mut self, plane: Arc<CodecPlane>) {
+        use std::io::{Seek, SeekFrom};
+
+        // Attach happens at topology setup, before any batch is handed
+        // out; the stream restarts from byte 0 through the plane so the
+        // header and the bytes primed inline aren't decoded twice. A
+        // late attach (or an unseekable input) keeps inline decode.
+        if self.consumed || self.reader.seek(SeekFrom::Start(0)).is_err() {
+            return;
+        }
+        let format = self.format();
+        self.decoder = StreamingDecoder::new(format);
+        self.ready.clear();
+        self.eof = false;
+        self.read_buf.resize(Self::PLANE_READ_SIZE, 0);
+        self.pstream = Some(plane.open_stream(format));
+        // Re-prime so geometry-consuming callers still see the header;
+        // a decode error here re-surfaces on the first next_batch.
+        let _ = self.prime();
     }
 
     fn describe(&self) -> String {
@@ -473,7 +535,71 @@ impl EventSource for CameraSource {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::EventCodec;
+    use crate::stream::codec_plane::{CodecPlane, CodecPlaneConfig};
     use crate::testutil::synthetic_events;
+
+    fn write_trace(tag: &str, format: Format, events: &[Event], res: Resolution) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("aestream-src-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(tag);
+        let mut bytes = Vec::new();
+        format.codec().encode(events, res, &mut bytes).unwrap();
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn steady_state_file_fills_hit_the_pool() {
+        // Regression: fill_once used to allocate a fresh Vec per read
+        // syscall; with the scratch buffer and a chunk pool, a warmed
+        // file replay must run allocation-free (pool misses stay flat).
+        let events = synthetic_events(20_000, 128, 128);
+        let path = write_trace("steady.aeraw", Format::Raw, &events, Resolution::DVS_128);
+        let mut src = FileSource::open(&path, 1024).unwrap();
+        let pool = Arc::new(ChunkPool::new());
+        src.set_buffer_pool(Arc::clone(&pool));
+        // Warm-up: the first batches miss while the free list builds.
+        for _ in 0..2 {
+            let batch = src.next_batch().unwrap().expect("warm-up batch");
+            pool.recycle_vec(batch);
+        }
+        let warmed = pool.counters();
+        let mut total = 2 * 1024;
+        while let Some(batch) = src.next_batch().unwrap() {
+            total += batch.len();
+            pool.recycle_vec(batch);
+        }
+        assert_eq!(total, events.len());
+        let steady = pool.counters().delta(&warmed);
+        assert_eq!(steady.misses, 0, "steady-state fills must reuse pooled buffers");
+        assert!(steady.hits > 0);
+    }
+
+    #[test]
+    fn file_source_through_the_plane_matches_inline_decode() {
+        let events = synthetic_events(30_000, 346, 260);
+        for format in [Format::Evt2, Format::Raw, Format::Aedat] {
+            let tag = format!("plane.{format}");
+            let path = write_trace(&tag, format, &events, Resolution::DAVIS_346);
+            let mut inline = FileSource::open(&path, 2048).unwrap();
+            let mut planed = FileSource::open(&path, 2048).unwrap();
+            let plane = CodecPlane::new(CodecPlaneConfig::with_workers(3));
+            planed.set_codec_plane(Arc::clone(&plane));
+            assert_eq!(planed.resolution(), inline.resolution(), "{format}");
+            assert_eq!(planed.geometry_known(), inline.geometry_known(), "{format}");
+            let mut a = Vec::new();
+            while let Some(batch) = inline.next_batch().unwrap() {
+                a.extend(batch);
+            }
+            let mut b = Vec::new();
+            while let Some(batch) = planed.next_batch().unwrap() {
+                b.extend(batch);
+            }
+            assert_eq!(a, b, "{format}");
+            assert_eq!(a, events, "{format}");
+        }
+    }
 
     #[test]
     fn memory_source_chunks_exactly() {

@@ -63,6 +63,7 @@ use crate::rt::{
 
 use super::adapt::{Adaptor, AdaptiveConfig, AdaptiveRuntime, DEFAULT_EPOCH_BATCHES};
 use super::chunk::{self, EventChunk, EVENT_BYTES};
+use super::codec_plane::{CodecPlane, CodecPlaneConfig};
 use super::merge::MergeCore;
 use super::pool::{ChunkPool, PoolCounters};
 use super::report::{ReportEmitter, ReportTarget};
@@ -118,6 +119,12 @@ pub struct TopologyConfig {
     /// Adaptive controllers to run at epoch barriers (`None` = the
     /// static runtime). See [`super::adapt`].
     pub adaptive: Option<AdaptiveConfig>,
+    /// Decode worker budget for the shared codec plane
+    /// (`--decode-threads`). `None` keeps packed-format decode inline
+    /// on each ingest thread; `Some(w)` spawns a plane of `w` workers
+    /// and hands it to every source (see
+    /// [`super::codec_plane`]).
+    pub decode_threads: Option<usize>,
 }
 
 impl From<StreamConfig> for TopologyConfig {
@@ -128,6 +135,7 @@ impl From<StreamConfig> for TopologyConfig {
             threads: ThreadMode::Inline,
             route: RoutePolicy::Broadcast,
             adaptive: None,
+            decode_threads: None,
         }
     }
 }
@@ -1115,6 +1123,7 @@ pub(crate) fn run_nodes<S, P, K>(
     driver: StreamDriver,
     adaptive: Option<AdaptiveRuntime>,
     report_json: Option<ReportTarget>,
+    decode_threads: Option<usize>,
 ) -> Result<StreamReport>
 where
     S: EventSource,
@@ -1144,6 +1153,11 @@ where
         }),
         (adaptive, _) => adaptive,
     };
+    // The shared codec plane, when a decode-thread budget is set: one
+    // bounded worker pool handed to every source before its lane is
+    // wrapped (file pumps restart their read through it; serving-plane
+    // listeners store it in their hub for client reader loops).
+    let plane = decode_threads.map(|w| CodecPlane::new(CodecPlaneConfig::with_workers(w)));
     let t0 = Instant::now();
     let n = sources.len();
     let pump_errs: Vec<Mutex<Option<anyhow::Error>>> = (0..n).map(|_| Mutex::new(None)).collect();
@@ -1154,6 +1168,10 @@ where
         let pumped = &mut pumped;
         let mut lanes: Vec<Lane<S>> = Vec::with_capacity(n);
         for (i, (source, threaded)) in sources.into_iter().enumerate() {
+            let mut source = source;
+            if let Some(plane) = &plane {
+                source.set_codec_plane(Arc::clone(plane));
+            }
             if threaded {
                 pumped[i] = true;
                 let res = source.resolution();
@@ -1182,12 +1200,27 @@ where
             adaptive,
             emitter,
             t0,
+            plane.as_deref(),
         )
         // `merged` (and with it every ring receiver) drops here, so any
         // pump still parked in a full-ring send unblocks before the
         // scope joins the threads.
     });
+    // The run is over: join the decode workers before reading their
+    // counters, so peaks are final and no `codec:` thread outlives the
+    // topology.
+    let decode = plane.map(|plane| {
+        plane.shutdown();
+        plane.counters()
+    });
     let mut report = result?;
+    if let Some(counters) = decode {
+        report.decode_workers = counters.workers;
+        report.decode_jobs = counters.jobs;
+        report.decode_queue_depth = counters.queue_depth;
+        report.decode_worker_busy = counters.worker_busy;
+        report.decode_reassembly_lag = counters.reassembly_lag;
+    }
     for (i, err) in pump_errs.into_iter().enumerate() {
         if let Some(e) = err.into_inner().unwrap() {
             return Err(e.context(format!("stream source {i} (thread)")));
@@ -1307,6 +1340,7 @@ pub fn run_topology_with_adaptive<S: EventSource, P: BatchProcessor, K: EventSin
         config.driver,
         adaptive,
         None,
+        config.decode_threads,
     )
 }
 
@@ -1326,6 +1360,7 @@ fn drive_and_report<S, P, K>(
     adaptive: Option<AdaptiveRuntime>,
     emitter: Option<Arc<ReportEmitter>>,
     t0: Instant,
+    plane: Option<&CodecPlane>,
 ) -> Result<StreamReport>
 where
     S: EventSource,
@@ -1416,6 +1451,10 @@ where
     let merge_pool = merged.pool_counters();
     pool_hits += merge_pool.hits;
     pool_misses += merge_pool.misses;
+    // Plane counters snapshot at drive end: the sources are exhausted,
+    // so the queue has drained — run_nodes re-reads them after the
+    // worker join for the returned report.
+    let decode = plane.map(CodecPlane::counters).unwrap_or_default();
     let report = StreamReport {
         events_in: outcome.events_in,
         events_out: outcome.events_out,
@@ -1437,6 +1476,11 @@ where
         merge_stalls_broken: merged.stalls_broken(),
         merge_late_events: merged.late_events(),
         adaptive: adaptor.map(Adaptor::finish),
+        decode_workers: decode.workers,
+        decode_jobs: decode.jobs,
+        decode_queue_depth: decode.queue_depth,
+        decode_worker_busy: decode.worker_busy,
+        decode_reassembly_lag: decode.reassembly_lag,
     };
     if let Some(emitter) = &emitter {
         emitter.emit_final(&report)?;

@@ -61,6 +61,60 @@ pub fn hotspot_events_seeded(n: usize, width: u16, height: u16, seed: u64) -> Ve
         .collect()
 }
 
+/// A camera-like synthetic trace for copy/decode ablations: a few
+/// bursty object hotspots drifting under a slow global pan, over a
+/// floor of uniform sensor noise. Events arrive in µs-dense bursts
+/// separated by quiet gaps — the texture a real sensor produces under
+/// motion, which is what makes batch sizes and copy costs realistic.
+/// Deterministic for a seed.
+pub fn camera_trace_events_seeded(n: usize, width: u16, height: u16, seed: u64) -> Vec<Event> {
+    const OBJECTS: usize = 4;
+    let mut rng = SplitMix64::new(seed);
+    let w = i64::from(width.max(1));
+    let h = i64::from(height.max(1));
+    let mut cx = [0i64; OBJECTS];
+    let mut cy = [0i64; OBJECTS];
+    let mut vx = [0i64; OBJECTS];
+    let mut vy = [0i64; OBJECTS];
+    for k in 0..OBJECTS {
+        cx[k] = rng.next_below(w as u64) as i64;
+        cy[k] = rng.next_below(h as u64) as i64;
+        vx[k] = rng.next_below(3) as i64 - 1;
+        vy[k] = rng.next_below(3) as i64 - 1;
+    }
+    let spread = (w.min(h) / 16).max(1);
+    let mut pan = 0i64;
+    let mut t = 0u64;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        if i % 256 == 0 {
+            // Between bursts: a quiet gap, the pan advances, and every
+            // object drifts one step along its velocity.
+            t += 50 + rng.next_below(200);
+            pan += 1;
+            for k in 0..OBJECTS {
+                cx[k] += vx[k];
+                cy[k] += vy[k];
+            }
+        } else {
+            t += rng.next_below(2);
+        }
+        let (x, y) = if rng.next_bool(0.85) {
+            let k = rng.next_below(OBJECTS as u64) as usize;
+            let dx = rng.next_below(2 * spread as u64) as i64 - spread;
+            let dy = rng.next_below(2 * spread as u64) as i64 - spread;
+            (
+                (cx[k] + pan + dx).rem_euclid(w) as u16,
+                (cy[k] + dy).rem_euclid(h) as u16,
+            )
+        } else {
+            (rng.next_below(w as u64) as u16, rng.next_below(h as u64) as u16)
+        };
+        out.push(Event { t, x, y, p: Polarity::from_bool(rng.next_u64() & 1 == 1) });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +145,28 @@ mod tests {
         assert!(hot as f64 > 0.85 * events.len() as f64, "hot band holds {hot}");
         // 1-wide canvases must not divide by zero.
         assert_eq!(hotspot_events_seeded(10, 1, 1, 1).len(), 10);
+    }
+
+    #[test]
+    fn camera_trace_is_valid_bursty_and_clustered() {
+        let events = camera_trace_events_seeded(20_000, 346, 260, 9);
+        assert_eq!(events, camera_trace_events_seeded(20_000, 346, 260, 9));
+        assert_eq!(validate_stream(&events, Resolution::new(346, 260)), None);
+        assert!(events.windows(2).all(|w| w[0].t <= w[1].t));
+        // Bursty: inter-burst gaps dwarf the in-burst µs deltas.
+        let max_gap =
+            events.windows(2).map(|w| w[1].t - w[0].t).max().unwrap();
+        assert!(max_gap >= 50, "expected quiet gaps, max delta {max_gap}");
+        // Clustered: a 16-bin x histogram is far from uniform.
+        let mut bins = [0usize; 16];
+        for ev in &events {
+            bins[(ev.x as usize * 16) / 346] += 1;
+        }
+        let peak = *bins.iter().max().unwrap();
+        assert!(
+            peak > 2 * events.len() / 16,
+            "expected hotspots, flat histogram {bins:?}"
+        );
+        assert_eq!(camera_trace_events_seeded(10, 1, 1, 1).len(), 10);
     }
 }

@@ -1,0 +1,251 @@
+//! Codec-plane integration: the PR-9 acceptance criteria.
+//!
+//! * Decode through the shared worker pool is **byte-identical** to
+//!   inline [`StreamingDecoder`] decode for every format, under
+//!   randomized submit sizes (torn words, split headers, one-byte
+//!   dribbles) and 1–4 workers — the reassembly contract.
+//! * A 64-client `tcp-listen` topology with `decode_threads` set keeps
+//!   the decode thread census at exactly the budget `W` while every
+//!   client's events are delivered exactly once.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use aestream::aer::{Event, Resolution};
+use aestream::formats::streaming::StreamingDecoder;
+use aestream::formats::{EventCodec, Format};
+use aestream::net::spif;
+use aestream::serve::{ClientHub, ListenerConfig, ListenerSource};
+use aestream::stream::{
+    CodecPlane, CodecPlaneConfig, EventSink, GraphConfig, SinkSummary, Topology,
+};
+use aestream::testutil::{synthetic_events_seeded, SplitMix64};
+
+/// Both tests spawn `codec:` threads and one of them censuses the
+/// process for that name, so they must not overlap in time.
+static PLANE_LOCK: Mutex<()> = Mutex::new(());
+
+// ------------------------------------------------------------- helpers
+
+/// Inline reference decode: one pass through [`StreamingDecoder`].
+fn inline_decode(format: Format, bytes: &[u8]) -> (Vec<Event>, Option<Resolution>) {
+    let mut dec = StreamingDecoder::new(format);
+    let mut out = Vec::new();
+    dec.feed(bytes, &mut out).unwrap();
+    dec.finish(&mut out).unwrap();
+    (out, dec.resolution())
+}
+
+/// Pooled decode of `bytes` submitted in the given piece sizes.
+fn pooled_decode(
+    plane: &Arc<CodecPlane>,
+    format: Format,
+    bytes: &[u8],
+    sizes: &[usize],
+) -> (Vec<Event>, Option<Resolution>) {
+    let mut stream = plane.open_stream(format);
+    let mut out = Vec::new();
+    let mut offset = 0;
+    let mut sizes = sizes.iter().cycle();
+    while offset < bytes.len() {
+        let take = (*sizes.next().unwrap()).min(bytes.len() - offset);
+        stream.submit(&bytes[offset..offset + take]).unwrap();
+        offset += take;
+        stream.poll(&mut out).unwrap();
+    }
+    stream.finish().unwrap();
+    while !stream.done() {
+        stream.poll_wait(&mut out).unwrap();
+    }
+    (out, stream.resolution())
+}
+
+/// SPIF-over-TCP wire bytes for `events` (little-endian words).
+fn wire_bytes(events: &[Event]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(events.len() * 4);
+    for ev in events {
+        bytes.extend_from_slice(&spif::pack_word(ev).to_le_bytes());
+    }
+    bytes
+}
+
+/// `count` events all at column `x`, so the sink can attribute each
+/// delivered event to the client that sent it.
+fn column_events(x: u16, count: usize, height: u16) -> Vec<Event> {
+    (0..count).map(|j| Event::on(x, (j % height as usize) as u16, j as u64)).collect()
+}
+
+/// Close the hub once every expected client was admitted and drained.
+fn shutdown_when_drained(hub: &Arc<ClientHub>, expected: u64) -> thread::JoinHandle<()> {
+    let hub = hub.clone();
+    thread::spawn(move || {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while (hub.admitted() < expected || hub.active_clients() > 0)
+            && Instant::now() < deadline
+        {
+            thread::sleep(Duration::from_millis(1));
+        }
+        hub.shutdown();
+    })
+}
+
+/// Threads of this process currently named `codec:<i>`.
+fn codec_thread_count() -> usize {
+    let Ok(entries) = std::fs::read_dir("/proc/self/task") else { return 0 };
+    entries
+        .flatten()
+        .filter(|entry| {
+            std::fs::read_to_string(entry.path().join("comm"))
+                .map(|comm| comm.trim_end().starts_with("codec:"))
+                .unwrap_or(false)
+        })
+        .count()
+}
+
+struct ColumnCountSink {
+    counts: Arc<Mutex<Vec<u64>>>,
+}
+
+impl EventSink for ColumnCountSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        let mut counts = self.counts.lock().unwrap();
+        for ev in batch {
+            counts[ev.x as usize] += 1;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        Ok(SinkSummary::default())
+    }
+}
+
+// --------------------------------------------------------------- tests
+
+/// The reassembly contract: pooled decode ≡ inline decode, for every
+/// format, any worker count, and adversarial submit chunking.
+#[test]
+fn randomized_piece_sizes_decode_identically_across_worker_counts() {
+    let _guard = PLANE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let res = Resolution::DAVIS_346;
+    let events = synthetic_events_seeded(20_000, res.width, res.height, 0x9_CAFE);
+    for format in Format::ALL {
+        let mut bytes = Vec::new();
+        format.codec().encode(&events, res, &mut bytes).unwrap();
+        let (inline_events, inline_res) = inline_decode(format, &bytes);
+        assert_eq!(inline_events, events, "{format}: codec round-trip broke");
+        for workers in 1..=4usize {
+            let plane = CodecPlane::new(CodecPlaneConfig::with_workers(workers));
+            let mut rng = SplitMix64::new(0x9A5_5EED ^ workers as u64);
+            for round in 0..3 {
+                // Random sizes from 1 byte (worst-case torn words and
+                // split headers) up past the 64 KiB piece target.
+                let sizes: Vec<usize> = (0..64)
+                    .map(|_| 1 + rng.next_below(100_000) as usize)
+                    .collect();
+                let (got, got_res) = pooled_decode(&plane, format, &bytes, &sizes);
+                assert_eq!(
+                    got, inline_events,
+                    "{format}: workers={workers} round={round} diverged from inline"
+                );
+                assert_eq!(got_res, inline_res, "{format}: geometry diverged");
+            }
+        }
+    }
+}
+
+/// The serving-plane budget: 64 concurrent clients share exactly `W`
+/// decode threads, and every event still arrives exactly once.
+#[test]
+fn sixty_four_clients_share_a_bounded_decode_pool_exactly_once() {
+    let _guard = PLANE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    const CLIENTS: usize = 64;
+    const PER_CLIENT: usize = 4_000;
+    const WORKERS: usize = 3;
+
+    let res = Resolution::new(128, 128);
+    let listener = ListenerSource::bind_tcp(
+        "127.0.0.1:0",
+        ListenerConfig::new(res).window(4096).max_clients(CLIENTS + 8),
+    )
+    .unwrap();
+    let addr = listener.local_addr();
+    let hub = listener.hub();
+
+    // Senders connect only once the topology has attached the decode
+    // plane: clients admitted earlier would (correctly) decode inline.
+    let senders: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            let hub = hub.clone();
+            thread::spawn(move || {
+                let deadline = Instant::now() + Duration::from_secs(10);
+                while hub.decode_plane().is_none() {
+                    assert!(Instant::now() < deadline, "decode plane never attached");
+                    thread::sleep(Duration::from_millis(1));
+                }
+                let bytes = wire_bytes(&column_events(i as u16, PER_CLIENT, res.height));
+                let mut stream = TcpStream::connect(addr).unwrap();
+                // Several writes per client so reads interleave and the
+                // plane sees many small submits, not one per client.
+                for piece in bytes.chunks(8192) {
+                    stream.write_all(piece).unwrap();
+                }
+            })
+        })
+        .collect();
+    let supervisor = shutdown_when_drained(&hub, CLIENTS as u64);
+
+    // Census the decode threads while the run is live.
+    let census_hub = hub.clone();
+    let census = thread::spawn(move || {
+        let mut peak = 0;
+        while !census_hub.is_closed() {
+            peak = peak.max(codec_thread_count());
+            thread::sleep(Duration::from_millis(1));
+        }
+        peak
+    });
+
+    let counts = Arc::new(Mutex::new(vec![0u64; res.width as usize]));
+    let sink = ColumnCountSink { counts: counts.clone() };
+    let report = Topology::builder()
+        .listen("net", listener)
+        .sink("out", sink)
+        .build()
+        .run(GraphConfig {
+            chunk_size: 1024,
+            decode_threads: Some(WORKERS),
+            ..Default::default()
+        })
+        .unwrap();
+    for sender in senders {
+        sender.join().unwrap();
+    }
+    supervisor.join().unwrap();
+    let peak_threads = census.join().unwrap();
+
+    // Exactly-once delivery, per client and in total.
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(report.events_in, total, "merge lost or duplicated events");
+    assert_eq!(report.merge_dropped, 0);
+    let counts = counts.lock().unwrap();
+    for (x, &n) in counts.iter().enumerate().take(CLIENTS) {
+        assert_eq!(n, PER_CLIENT as u64, "client {x} was not delivered exactly once");
+    }
+
+    // The thread budget held: W codec threads, never one per client.
+    if cfg!(target_os = "linux") {
+        assert!(peak_threads > 0, "decode plane threads never observed");
+        assert!(
+            peak_threads <= WORKERS,
+            "decode thread census peaked at {peak_threads}, budget {WORKERS}"
+        );
+    }
+    assert_eq!(report.decode_workers, WORKERS as u64);
+    assert!(report.decode_jobs > 0, "no jobs reached the plane");
+}

@@ -76,6 +76,7 @@ fn run_legacy(
         threads: if source_threads { ThreadMode::PerSourceThread } else { ThreadMode::Inline },
         route,
         adaptive: None,
+        decode_threads: None,
     };
     let report = run_topology(sources, &mut graph, sinks, layout, &config).unwrap();
     let got = handles.iter().map(|h| h.lock().unwrap().clone()).collect();
@@ -121,6 +122,7 @@ fn run_graph_shape(
         driver: StreamDriver::Coroutine { channel_capacity: 1 },
         adaptive: None,
         report_json: None,
+        decode_threads: None,
     };
     let report = builder.build().run(config).unwrap();
     let got = handles.iter().map(|h| h.lock().unwrap().clone()).collect();
@@ -269,6 +271,7 @@ fn chunk_views_match_the_vec_baseline_with_zero_clones() {
                         driver: StreamDriver::Coroutine { channel_capacity: 1 },
                         adaptive: None,
                         report_json: None,
+                        decode_threads: None,
                     };
                     let report = builder.build().run(config).unwrap();
                     let got: Vec<Vec<Event>> =
@@ -316,6 +319,7 @@ fn cli_clauses_and_builder_yield_the_same_graph() {
         sink_threads,
         adaptive,
         report_json,
+        decode_threads,
     } = cli::parse(&args).unwrap()
     else {
         panic!("wrong parse");
@@ -330,6 +334,7 @@ fn cli_clauses_and_builder_yield_the_same_graph() {
         sink_threads,
         adaptive,
         report_json,
+        decode_threads,
     };
     let from_cli = lower_to_graph(inputs, spec, branches, &opts).unwrap();
 

@@ -143,6 +143,7 @@ fn threaded_topology_is_ordered_and_memory_bounded() {
         threads: ThreadMode::PerSourceThread,
         route: RoutePolicy::Broadcast,
         adaptive: None,
+        decode_threads: None,
     };
     let report =
         run_topology(sources, &mut Pipeline::new(), sinks, None, &config).unwrap();
