@@ -49,6 +49,13 @@
 //! on a fixed 4-thread decode budget with a live `codec:` thread
 //! census asserted against the budget.
 //!
+//! A durable-edge section feeds a throttled sink through an unbounded
+//! in-memory queue vs the disk-buffered edge (`stream::buffer`): same
+//! producer and slow sink, with the memory edge's peak queued bytes
+//! reported against the disk edge's asserted bounded front
+//! (`peak_mem_batches ≤ front_batches`) — the memory-vs-durability
+//! trade in two rows.
+//!
 //! Emits the human table plus one JSON object per configuration (the
 //! same flat `{"name": …, "mean_s": …, …}` shape as the other benches'
 //! stats), so dashboards can scrape either.
@@ -1206,6 +1213,183 @@ fn main() {
         ));
     }
 
+    // --- durable edge: a throttled sink behind an unbounded in-memory
+    // queue vs the disk-buffered edge. Same producer, same slow sink;
+    // the memory edge's backlog grows with the stream while the disk
+    // edge holds its bounded front and spills the rest to the journal.
+    {
+        use aestream::stream::{DiskBufferConfig, DiskBufferedSink, EventSink, SinkSummary};
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+
+        const CHUNK: usize = 512;
+        const FRONT: usize = 4;
+        let bn: usize = if fast { 50_000 } else { 400_000 };
+        let delay = std::time::Duration::from_micros(150);
+        let bev = synthetic_events_seeded(bn, res.width, res.height, 0xB0FF);
+        let batches = bev.len().div_ceil(CHUNK) as u64;
+
+        /// The slow far end: counts deliveries, sleeps per batch.
+        struct ThrottledNull {
+            delay: std::time::Duration,
+            delivered: Arc<AtomicU64>,
+        }
+        impl EventSink for ThrottledNull {
+            fn consume(&mut self, batch: &[Event]) -> anyhow::Result<()> {
+                std::thread::sleep(self.delay);
+                self.delivered.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                Ok(())
+            }
+            fn finish(&mut self) -> anyhow::Result<SinkSummary> {
+                Ok(SinkSummary::default())
+            }
+        }
+
+        /// The memory edge: an unbounded queue feeding a pump thread,
+        /// tracking the peak bytes it ever held — what a slow sink
+        /// costs when the edge cannot spill.
+        struct QueueingSink {
+            tx: Option<std::sync::mpsc::Sender<Vec<Event>>>,
+            pump: Option<std::thread::JoinHandle<()>>,
+            queued: Arc<AtomicU64>,
+            peak: Arc<AtomicU64>,
+        }
+        impl QueueingSink {
+            fn spawn(mut inner: ThrottledNull) -> QueueingSink {
+                let (tx, rx) = std::sync::mpsc::channel::<Vec<Event>>();
+                let queued = Arc::new(AtomicU64::new(0));
+                let peak = Arc::new(AtomicU64::new(0));
+                let q = queued.clone();
+                let pump = std::thread::spawn(move || {
+                    while let Ok(batch) = rx.recv() {
+                        inner.consume(&batch).unwrap();
+                        q.fetch_sub((batch.len() * 16) as u64, Ordering::Relaxed);
+                    }
+                });
+                QueueingSink { tx: Some(tx), pump: Some(pump), queued, peak }
+            }
+        }
+        impl EventSink for QueueingSink {
+            fn consume(&mut self, batch: &[Event]) -> anyhow::Result<()> {
+                let now = self
+                    .queued
+                    .fetch_add((batch.len() * 16) as u64, Ordering::Relaxed)
+                    + (batch.len() * 16) as u64;
+                self.peak.fetch_max(now, Ordering::Relaxed);
+                self.tx.as_ref().unwrap().send(batch.to_vec()).unwrap();
+                Ok(())
+            }
+            fn finish(&mut self) -> anyhow::Result<SinkSummary> {
+                drop(self.tx.take());
+                if let Some(pump) = self.pump.take() {
+                    pump.join().unwrap();
+                }
+                Ok(SinkSummary::default())
+            }
+        }
+
+        let front_bytes = (FRONT * CHUNK * 16) as u64;
+
+        // Memory edge: backlog is unbounded.
+        let delivered = Arc::new(AtomicU64::new(0));
+        let mut peak_queued = 0u64;
+        let stats = measure(1, samples.min(3), || {
+            delivered.store(0, Ordering::Relaxed);
+            let mut sink = QueueingSink::spawn(ThrottledNull {
+                delay,
+                delivered: delivered.clone(),
+            });
+            for batch in bev.chunks(CHUNK) {
+                sink.consume(batch).unwrap();
+            }
+            sink.finish().unwrap();
+            assert_eq!(delivered.load(Ordering::Relaxed), bn as u64, "bufedge-mem lost events");
+            peak_queued = peak_queued.max(sink.peak.load(Ordering::Relaxed));
+        });
+        assert!(
+            peak_queued > 4 * front_bytes,
+            "bufedge-mem: expected the unbounded queue to grow well past the \
+             disk edge's front ({peak_queued} B vs front {front_bytes} B)"
+        );
+        let rss_kb = peak_rss_kb();
+        table.row(&[
+            "bufedge-mem".into(),
+            CHUNK.to_string(),
+            stats.display_mean(),
+            fmt_rate(stats.throughput(bn as u64), "ev/s"),
+            format!("{} KiB queued", peak_queued / 1024),
+            "0".into(),
+        ]);
+        json_lines.push(format!(
+            "{{\"name\":\"bufedge-mem\",\"chunk\":{CHUNK},\"mean_s\":{:.6},\
+             \"std_s\":{:.6},\"min_s\":{:.6},\"throughput_ev_s\":{:.0},\
+             \"peak_in_flight\":{},\"backpressure_waits\":0,\
+             \"peak_queued_bytes\":{peak_queued},\"peak_rss_kb\":{rss_kb}}}",
+            stats.mean_s,
+            stats.std_s,
+            stats.min_s,
+            stats.throughput(bn as u64),
+            peak_queued / 16,
+        ));
+
+        // Disk edge: bounded front + journal spill.
+        let dir = std::env::temp_dir()
+            .join(format!("aestream-bench-bufedge-{}", std::process::id()));
+        let delivered = Arc::new(AtomicU64::new(0));
+        let mut peak_front = 0u64;
+        let mut spilled = 0u64;
+        let stats = measure(1, samples.min(3), || {
+            std::fs::remove_dir_all(&dir).ok();
+            delivered.store(0, Ordering::Relaxed);
+            let mut config = DiskBufferConfig::new(dir.clone(), 1 << 30);
+            config.front_batches = FRONT;
+            config.fsync_per_batch = false;
+            let mut sink = DiskBufferedSink::spawn(
+                Box::new(ThrottledNull { delay, delivered: delivered.clone() }),
+                config,
+                "bench",
+            )
+            .unwrap();
+            for batch in bev.chunks(CHUNK) {
+                sink.consume(batch).unwrap();
+            }
+            sink.finish().unwrap();
+            assert_eq!(delivered.load(Ordering::Relaxed), bn as u64, "bufedge-disk lost events");
+            let snap = sink.stats();
+            assert!(
+                snap.peak_mem_batches <= FRONT as u64,
+                "bufedge-disk: front exceeded its bound ({} > {FRONT})",
+                snap.peak_mem_batches
+            );
+            assert!(snap.records_spilled > 0, "bufedge-disk: throttled sink never spilled");
+            peak_front = peak_front.max(snap.peak_mem_batches);
+            spilled = spilled.max(snap.records_spilled);
+        });
+        std::fs::remove_dir_all(&dir).ok();
+        let rss_kb = peak_rss_kb();
+        table.row(&[
+            "bufedge-disk".into(),
+            CHUNK.to_string(),
+            stats.display_mean(),
+            fmt_rate(stats.throughput(bn as u64), "ev/s"),
+            format!("{peak_front}/{FRONT} front batches"),
+            "0".into(),
+        ]);
+        json_lines.push(format!(
+            "{{\"name\":\"bufedge-disk\",\"chunk\":{CHUNK},\"mean_s\":{:.6},\
+             \"std_s\":{:.6},\"min_s\":{:.6},\"throughput_ev_s\":{:.0},\
+             \"peak_in_flight\":{},\"backpressure_waits\":0,\
+             \"front_batches\":{FRONT},\"peak_mem_batches\":{peak_front},\
+             \"records_spilled\":{spilled},\"batches\":{batches},\
+             \"peak_rss_kb\":{rss_kb}}}",
+            stats.mean_s,
+            stats.std_s,
+            stats.min_s,
+            stats.throughput(bn as u64),
+            peak_front as usize * CHUNK,
+        ));
+    }
+
     println!("{}", table.render());
     println!("peak in-flight is the memory bound: batch-collect holds the whole");
     println!("stream; the incremental drivers hold ≤ capacity × chunk events;");
@@ -1224,7 +1408,11 @@ fn main() {
     println!("workers); ablate-* rows run a camera-like trace through zero-copy,");
     println!("forced-clone, and pooled-decode delivery; serve128-pooled repeats");
     println!("the 128-client serve on a 4-thread decode budget, with the live");
-    println!("codec-thread census asserted ≤ the budget.\n");
+    println!("codec-thread census asserted ≤ the budget. bufedge-* rows feed a");
+    println!("throttled sink through an unbounded memory queue vs the durable");
+    println!("disk-buffered edge: the memory edge's peak queued bytes grow with");
+    println!("the backlog while the disk edge is asserted to hold its bounded");
+    println!("front (peak_mem_batches ≤ front_batches) and spill the rest.\n");
     for line in &json_lines {
         println!("{line}");
     }

@@ -39,8 +39,8 @@ use anyhow::{bail, Context, Result};
 use crate::aer::{Polarity, Resolution};
 use crate::camera::CameraConfig;
 use crate::coordinator::stream::{
-    AdaptiveConfig, BranchSpec, FusionLayout, Input, ReportTarget, RoutePolicy, Sink, Source,
-    StreamConfig, StreamDriver,
+    AdaptiveConfig, BranchSpec, DiskBufferConfig, FusionLayout, Input, ReplaySpeed,
+    ReportTarget, RoutePolicy, Sink, Source, StreamConfig, StreamDriver,
 };
 use crate::formats::Format;
 use crate::pipeline::{ops, PipelineSpec, StageSpec};
@@ -87,6 +87,11 @@ pub enum Command {
         /// shared codec plane (`None` keeps decode inline on each
         /// ingest thread; `auto` derives from `available_parallelism`).
         decode_threads: Option<usize>,
+        /// `--buffer disk=<dir>[:cap_bytes]`: make every output edge
+        /// durable — each sink drains through its own crash-safe disk
+        /// journal under `<dir>/out{j}` (`None` / `--buffer memory`
+        /// keeps pure-memory edges).
+        buffer: Option<DiskBufferConfig>,
     },
     /// Run the four Fig. 4 scenarios.
     Scenarios {
@@ -154,7 +159,14 @@ fn parse_input<'a, I: Iterator<Item = &'a str>>(
             )
         }
         "synthetic" => {}
-        other => bail!("unknown input kind {other:?} (file|udp|tcp-listen|http-listen|synthetic)"),
+        "replay" => {
+            path = Some(PathBuf::from(
+                toks.next().context("input replay needs a journal directory")?,
+            ))
+        }
+        other => bail!(
+            "unknown input kind {other:?} (file|udp|tcp-listen|http-listen|synthetic|replay)"
+        ),
     }
     let listener = matches!(kind, "tcp-listen" | "http-listen");
     // Per-input flags, any order after the positional part.
@@ -163,6 +175,8 @@ fn parse_input<'a, I: Iterator<Item = &'a str>>(
     let mut duration_us = 1_000_000u64;
     let mut window = None;
     let mut max_clients = None;
+    let mut from_offset = 0u64;
+    let mut speed = ReplaySpeed::default();
     loop {
         match toks.peek() {
             Some(&"--geometry") => {
@@ -203,6 +217,20 @@ fn parse_input<'a, I: Iterator<Item = &'a str>>(
                 }
                 max_clients = Some(n);
             }
+            Some(&"--from-offset") if kind == "replay" => {
+                toks.next();
+                from_offset = toks
+                    .next()
+                    .context("--from-offset needs a record count")?
+                    .parse()
+                    .context("bad --from-offset")?;
+            }
+            Some(&"--speed") if kind == "replay" => {
+                toks.next();
+                let value = toks.next().context("--speed needs orig|max")?;
+                speed = ReplaySpeed::parse(value)
+                    .with_context(|| format!("--speed must be orig|max, got {value:?}"))?;
+            }
             _ => break,
         }
     }
@@ -238,6 +266,12 @@ fn parse_input<'a, I: Iterator<Item = &'a str>>(
                 bail!("input synthetic has a fixed geometry; drop --geometry");
             }
             Source::Synthetic { config: CameraConfig::default(), duration_us }
+        }
+        "replay" => {
+            if geometry.is_some() {
+                bail!("input replay observes geometry from the journal; drop --geometry");
+            }
+            Source::Replay { dir: path.expect("parsed above"), from_offset, speed }
         }
         _ => unreachable!("kind validated above"),
     };
@@ -431,6 +465,7 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
     let mut epoch_batches: Option<u64> = None;
     let mut report_json = None;
     let mut decode_threads = None;
+    let mut buffer = None;
     while let Some(tok) = toks.next() {
         match tok {
             "--chunk" => {
@@ -513,6 +548,11 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
                     n
                 });
             }
+            "--buffer" => {
+                buffer = parse_buffer(
+                    toks.next().context("--buffer needs memory or disk=<dir>[:cap_bytes]")?,
+                )?;
+            }
             extra => bail!("unexpected trailing argument {extra:?}"),
         }
     }
@@ -551,7 +591,38 @@ fn parse_stream<'a, I: Iterator<Item = &'a str>>(
         adaptive,
         report_json,
         decode_threads,
+        buffer,
     })
+}
+
+/// Parse the `--buffer` edge-durability policy: `memory` (the default
+/// pure-memory edge) or `disk=<dir>[:cap_bytes]` for a crash-safe
+/// journal per output edge, capped at `cap_bytes` on disk (default
+/// 1 GiB when omitted).
+fn parse_buffer(s: &str) -> Result<Option<DiskBufferConfig>> {
+    if s == "memory" {
+        return Ok(None);
+    }
+    let dir = s
+        .strip_prefix("disk=")
+        .with_context(|| format!("--buffer must be memory or disk=<dir>[:cap_bytes], got {s:?}"))?;
+    const DEFAULT_CAP_BYTES: u64 = 1 << 30;
+    let (dir, cap_bytes) = match dir.rsplit_once(':') {
+        Some((dir, cap)) => {
+            let cap: u64 = cap
+                .parse()
+                .with_context(|| format!("bad --buffer cap_bytes {cap:?}"))?;
+            if cap == 0 {
+                bail!("--buffer disk cap_bytes must be > 0");
+            }
+            (dir, cap)
+        }
+        None => (dir, DEFAULT_CAP_BYTES),
+    };
+    if dir.is_empty() {
+        bail!("--buffer disk needs a journal directory");
+    }
+    Ok(Some(DiskBufferConfig::new(PathBuf::from(dir), cap_bytes)))
 }
 
 /// Filter reference rendered from the op registry
@@ -616,7 +687,8 @@ USAGE:
   aestream input <file PATH [--geometry WxH] | udp ADDR [--geometry WxH] |
                   tcp-listen ADDR --geometry WxH [--window N] [--max-clients N] |
                   http-listen ADDR --geometry WxH [--window N] [--max-clients N] |
-                  synthetic [--duration D]> [--offset X,Y] ...
+                  synthetic [--duration D] |
+                  replay DIR [--from-offset N] [--speed orig|max]> [--offset X,Y] ...
            [filter <polarity on|off | crop X Y W H | downsample F |
                     refractory US | denoise US | flip-x | flip-y |
                     transpose | time-shift US> [@serial]]...
@@ -629,6 +701,7 @@ USAGE:
            [--shards N] [--shard-threads] [--sink-threads]
            [--adaptive skew,chunk,client-window] [--epoch BATCHES]
            [--report-json PATH|-] [--decode-threads N|auto]
+           [--buffer memory|disk=<dir>[:cap_bytes]]
   aestream scenarios [--duration D] [--time-scale X]
   aestream table1
   aestream help
@@ -694,6 +767,19 @@ spif) decode in parallel slices, and sequence-keyed reassembly keeps
 every stream's event order byte-identical to inline decode. The pool
 is the process-wide decode budget — thread count stays N no matter how
 many files or clients are in flight.
+
+--buffer disk=<dir>[:cap_bytes] makes every output edge durable: each
+sink drains through its own crash-safe append-only journal under
+<dir>/out{j} (length-prefixed, CRC32-framed record batches), so a slow
+or crashing sink spills to disk instead of growing memory — the
+in-memory front stays bounded and disk use stays under cap_bytes
+(default 1 GiB). On restart, `input replay <dir>/out{j}` re-serves the
+recorded edge through the normal source API, byte-identical and in
+order; --from-offset N skips the first N records (pair it with the
+journal's acked offset for at-least-once resume) and --speed orig
+paces emission to the recorded timestamps (default `max` replays as
+fast as possible). The report counts bytes_on_disk, records
+spilled/replayed, and corrupt records skipped.
 
 EXAMPLES (paper Fig. 2B and §6 fusion):
   aestream input file recording.aedat output udp 10.0.0.1:3333
@@ -1005,6 +1091,95 @@ mod tests {
                 assert!(matches!(branches[1].sink, Sink::Null));
             }
             _ => panic!("wrong parse"),
+        }
+    }
+
+    #[test]
+    fn parses_replay_input() {
+        let cmd = parse(&sv(&[
+            "input", "replay", "/tmp/journal/out0", "--from-offset", "1000", "--speed",
+            "orig", "output", "null",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { inputs, .. } => match &inputs[0].source {
+                Source::Replay { dir, from_offset, speed } => {
+                    assert_eq!(*dir, PathBuf::from("/tmp/journal/out0"));
+                    assert_eq!(*from_offset, 1000);
+                    assert_eq!(*speed, ReplaySpeed::Orig);
+                }
+                _ => panic!("wrong parse"),
+            },
+            _ => panic!("wrong parse"),
+        }
+        // Defaults: offset 0, max-speed replay.
+        match parse(&sv(&["input", "replay", "j", "output", "null"])).unwrap() {
+            Command::Stream { inputs, .. } => match &inputs[0].source {
+                Source::Replay { from_offset, speed, .. } => {
+                    assert_eq!(*from_offset, 0);
+                    assert_eq!(*speed, ReplaySpeed::Max);
+                }
+                _ => panic!("wrong parse"),
+            },
+            _ => panic!("wrong parse"),
+        }
+        // Rejections: geometry is observed from the journal; bad speed;
+        // replay-only flags on other input kinds; missing dir.
+        assert!(parse(&sv(&[
+            "input", "replay", "j", "--geometry", "10x10", "output", "null",
+        ]))
+        .is_err());
+        assert!(parse(&sv(&[
+            "input", "replay", "j", "--speed", "warp", "output", "null",
+        ]))
+        .is_err());
+        assert!(parse(&sv(&[
+            "input", "synthetic", "--from-offset", "5", "output", "null",
+        ]))
+        .is_err());
+        assert!(parse(&sv(&["input", "replay", "output", "null"])).is_err());
+    }
+
+    #[test]
+    fn parses_buffer_flag() {
+        match parse(&sv(&[
+            "input", "synthetic", "output", "null", "--buffer", "disk=/tmp/buf:65536",
+        ]))
+        .unwrap()
+        {
+            Command::Stream { buffer, .. } => {
+                let buffer = buffer.expect("--buffer disk parsed");
+                assert_eq!(buffer.dir, PathBuf::from("/tmp/buf"));
+                assert_eq!(buffer.cap_bytes, 65536);
+            }
+            _ => panic!("wrong parse"),
+        }
+        // Cap defaults to 1 GiB when omitted.
+        match parse(&sv(&[
+            "input", "synthetic", "output", "null", "--buffer", "disk=/tmp/buf",
+        ]))
+        .unwrap()
+        {
+            Command::Stream { buffer, .. } => {
+                assert_eq!(buffer.expect("parsed").cap_bytes, 1 << 30);
+            }
+            _ => panic!("wrong parse"),
+        }
+        // `memory` is the explicit default; bad shapes are rejected.
+        match parse(&sv(&[
+            "input", "synthetic", "output", "null", "--buffer", "memory",
+        ]))
+        .unwrap()
+        {
+            Command::Stream { buffer, .. } => assert!(buffer.is_none()),
+            _ => panic!("wrong parse"),
+        }
+        for bad in ["tape=/tmp/x", "disk=", "disk=/tmp/x:0", "disk=/tmp/x:lots"] {
+            assert!(
+                parse(&sv(&["input", "synthetic", "output", "null", "--buffer", bad]))
+                    .is_err(),
+                "--buffer {bad} should be rejected"
+            );
         }
     }
 

@@ -44,13 +44,14 @@ use crate::pipeline::{Pipeline, PipelineSpec};
 use crate::serve::{ListenerConfig, ListenerSource, SubscribeSink};
 use crate::stream::{
     self, CameraSource, EventSink, EventSource, FileSink, FileSource, FrameSink, GraphConfig,
-    GraphSpec, MemorySource, NullSink, SourceOptions, StageOptions, StdoutSink, Topology,
-    UdpSink, UdpSource, ViewSink,
+    GraphSpec, MemorySource, NullSink, ReplaySource, SourceOptions, StageOptions, StdoutSink,
+    Topology, UdpSink, UdpSource, ViewSink,
 };
 
 pub use crate::stream::{
-    AdaptiveConfig, AdaptiveReport, ControllerKind, FusionLayout, ReportTarget, RoutePolicy,
-    StreamConfig, StreamDriver, StreamReport, ThreadMode, TopologyConfig,
+    AdaptiveConfig, AdaptiveReport, ControllerKind, DiskBufferConfig, FusionLayout,
+    ReplaySpeed, ReportTarget, RoutePolicy, StreamConfig, StreamDriver, StreamReport,
+    ThreadMode, TopologyConfig,
 };
 
 /// Where events come from.
@@ -77,6 +78,13 @@ pub enum Source {
     /// Serve HTTP `POST` ingest of the same words (`input http-listen
     /// ADDR --geometry WxH`).
     HttpListen { bind: String, config: ListenerConfig },
+    /// Re-serve a recorded buffer directory (`input replay <dir>
+    /// [--from-offset N] [--speed orig|max]`): the journal a
+    /// disk-buffered edge wrote, replayed through the normal source
+    /// API. Offsets count records from the journal start — the
+    /// coordinate `acked.offset` uses, so `--from-offset $(acked)`
+    /// resumes an interrupted consumer at-least-once.
+    Replay { dir: PathBuf, from_offset: u64, speed: ReplaySpeed },
 }
 
 impl Source {
@@ -111,6 +119,9 @@ impl Source {
             }
             Source::HttpListen { bind, config } => {
                 Box::new(ListenerSource::bind_http(bind.as_str(), config)?)
+            }
+            Source::Replay { dir, from_offset, speed } => {
+                Box::new(ReplaySource::open(&dir, from_offset, speed))
             }
         })
     }
@@ -239,6 +250,13 @@ pub struct TopologyOptions {
     /// (`--decode-threads N|auto`); `None` keeps packed-format decode
     /// inline on each ingest thread.
     pub decode_threads: Option<usize>,
+    /// Make every sink edge durable (`--buffer disk=<dir>[:cap]`):
+    /// each `out{j}` sink drains through its own disk journal under
+    /// `<dir>/out{j}`. Takes precedence over
+    /// [`sink_threads`](Self::sink_threads) — the buffer brings its own
+    /// writer/drainer thread pair. `None` (default) keeps pure-memory
+    /// edges.
+    pub buffer: Option<DiskBufferConfig>,
 }
 
 impl Default for TopologyOptions {
@@ -254,6 +272,7 @@ impl Default for TopologyOptions {
             adaptive: None,
             report_json: None,
             decode_threads: None,
+            buffer: None,
         }
     }
 }
@@ -456,7 +475,16 @@ pub fn lower_to_graph(
         }
         let sink = branch.sink.into_sink(canvas, geometry_known)?;
         let name = format!("out{j}");
-        builder = if opts.sink_threads {
+        builder = if let Some(buffer) = &opts.buffer {
+            // Durable edge: each sink gets its own journal under the
+            // shared base dir, keyed by edge name so replays address
+            // exactly one edge. The buffer's writer/drainer pair
+            // already decouples the sink from the router, so it
+            // supersedes the plain pump.
+            let mut config = buffer.clone();
+            config.dir = config.dir.join(&name);
+            builder.sink_buffered(&name, sink, config)
+        } else if opts.sink_threads {
             // Mirror of per-source threads: each sink's blocking I/O
             // moves onto its own pump, fed through a bounded ring.
             builder.sink_threaded(&name, sink)
@@ -743,6 +771,66 @@ mod tests {
         )
         .unwrap();
         assert!(untouched.adaptive.is_none());
+    }
+
+    #[test]
+    fn disk_buffered_edge_matches_memory_edge_and_replays() {
+        let dir = std::env::temp_dir()
+            .join(format!("aestream-coord-buf-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let events = synthetic_events(3000, 64, 64);
+        let res = Resolution::new(64, 64);
+        let mem_out = dir.join("mem.aedat");
+        let buf_out = dir.join("buf.aedat");
+        std::fs::create_dir_all(&dir).unwrap();
+        run_topology(
+            vec![Source::Memory(events.clone(), res).into()],
+            PipelineSpec::new(),
+            vec![Sink::File(mem_out.clone(), Format::Aedat)],
+            TopologyOptions::default(),
+        )
+        .unwrap();
+        let mut config = DiskBufferConfig::new(dir.join("journal"), 64 * 1024 * 1024);
+        config.fsync_per_batch = false;
+        let report = run_topology(
+            vec![Source::Memory(events.clone(), res).into()],
+            PipelineSpec::new(),
+            vec![Sink::File(buf_out.clone(), Format::Aedat)],
+            TopologyOptions { buffer: Some(config), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(report.events_in, 3000);
+        assert_eq!(
+            std::fs::read(&mem_out).unwrap(),
+            std::fs::read(&buf_out).unwrap(),
+            "disk-buffered edge must be byte-identical to the memory edge"
+        );
+        assert!(!report.buffer_spill_active, "journal must drain by stream end");
+        assert!(
+            report.buffer_bytes_on_disk > 0,
+            "retained journal keeps its bytes for replay"
+        );
+        assert!(report.sinks.iter().any(|s| s.name.starts_with("diskbuf(")));
+
+        // The retained journal re-serves the same events, from 0 and
+        // from a mid-stream offset.
+        let journal = dir.join("journal").join("out0");
+        assert_eq!(crate::stream::read_acked_offset(&journal), 3000);
+        let full = run_stream(
+            Source::Replay { dir: journal.clone(), from_offset: 0, speed: ReplaySpeed::Max },
+            Pipeline::new(),
+            Sink::Null,
+        )
+        .unwrap();
+        assert_eq!(full.events_in, 3000);
+        let tail = run_stream(
+            Source::Replay { dir: journal, from_offset: 1000, speed: ReplaySpeed::Max },
+            Pipeline::new(),
+            Sink::Null,
+        )
+        .unwrap();
+        assert_eq!(tail.events_in, 2000);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -66,6 +66,16 @@
 //!   readable errors) and compiled onto the same driver — per-branch
 //!   stage chains into independent sinks, per-node thread placement;
 //!   the legacy fixed shape and the CLI clause syntax are lowerings;
+//! * [`stream::buffer`] — durable spill-to-disk edge buffers: a
+//!   crash-safe segmented journal (append-only segments of
+//!   length-prefixed, CRC32-framed record batches; torn tails detected
+//!   and truncated on reopen) behind every `sink_buffered` edge, with
+//!   a bounded in-memory front that spills when the sink lags and
+//!   drains FIFO byte-identically to a pure-memory edge; journals
+//!   replay through [`stream::ReplaySource`] (`input replay <dir>`,
+//!   `--from-offset`, `--speed orig|max`) with a persisted acked
+//!   offset for at-least-once resume, and
+//!   `buffer_*` gauges surface in `StreamReport`/`--report-json`;
 //! * [`stream::adapt`] — the adaptive runtime: controllers sample the
 //!   live telemetry plane ([`metrics::LiveNode`]) every N batches and
 //!   re-cut shard stripe boundaries / re-tune the chunk size at epoch

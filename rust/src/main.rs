@@ -34,6 +34,7 @@ fn main() -> Result<()> {
             adaptive,
             report_json,
             decode_threads,
+            buffer,
         } => {
             let multi = inputs.len() > 1 || branches.len() > 1;
             let branched = branches.iter().any(|b| !b.spec.is_empty());
@@ -53,6 +54,7 @@ fn main() -> Result<()> {
                     adaptive,
                     report_json,
                     decode_threads,
+                    buffer,
                 },
             )?;
             eprintln!(
@@ -77,6 +79,21 @@ fn main() -> Result<()> {
                     report.decode_queue_depth,
                     report.decode_worker_busy,
                     report.decode_reassembly_lag,
+                );
+            }
+            if report.buffer_bytes_on_disk > 0
+                || report.buffer_records_spilled > 0
+                || report.buffer_records_replayed > 0
+                || report.buffer_corrupt_records_skipped > 0
+            {
+                eprintln!(
+                    "  buffer: {} bytes on disk, {} records spilled, {} replayed, \
+                     {} corrupt skipped{}",
+                    report.buffer_bytes_on_disk,
+                    report.buffer_records_spilled,
+                    report.buffer_records_replayed,
+                    report.buffer_corrupt_records_skipped,
+                    if report.buffer_spill_active { " (spill active)" } else { "" },
                 );
             }
             let source_dropped: u64 = report.sources.iter().map(|s| s.dropped).sum();

@@ -54,6 +54,20 @@ pub struct NodeReport {
     pub pool_hits: u64,
     /// Output buffers this node had to allocate fresh (empty pool).
     pub pool_misses: u64,
+    /// Disk-buffered edges: journal bytes currently on disk behind this
+    /// node (a gauge — the last published value, not a running sum).
+    pub buffer_bytes_on_disk: u64,
+    /// Disk-buffered edges: records whose in-memory copy was dropped
+    /// because the bounded front was full (they drain from disk).
+    pub buffer_records_spilled: u64,
+    /// Records read back from a disk journal (buffered-edge drains and
+    /// replay sources).
+    pub buffer_records_replayed: u64,
+    /// Records lost to CRC-failed journal frames (bit rot) and skipped.
+    pub buffer_corrupt_records_skipped: u64,
+    /// Whether spilled batches were still waiting on disk at the last
+    /// sample (gauge).
+    pub buffer_spill_active: bool,
     /// Sharded stage nodes: home events routed to each shard (ghost
     /// copies excluded). Empty for unsharded nodes. Sums to
     /// [`events`](NodeReport::events).
@@ -121,6 +135,11 @@ pub struct LiveNode {
     chunks_cloned: AtomicU64,
     pool_hits: AtomicU64,
     pool_misses: AtomicU64,
+    buffer_bytes_on_disk: AtomicU64,
+    buffer_records_spilled: AtomicU64,
+    buffer_records_replayed: AtomicU64,
+    buffer_corrupt_records_skipped: AtomicU64,
+    buffer_spill_active: AtomicU64,
     shards: Mutex<ShardCells>,
 }
 
@@ -146,6 +165,11 @@ impl LiveNode {
             chunks_cloned: AtomicU64::new(0),
             pool_hits: AtomicU64::new(0),
             pool_misses: AtomicU64::new(0),
+            buffer_bytes_on_disk: AtomicU64::new(0),
+            buffer_records_spilled: AtomicU64::new(0),
+            buffer_records_replayed: AtomicU64::new(0),
+            buffer_corrupt_records_skipped: AtomicU64::new(0),
+            buffer_spill_active: AtomicU64::new(0),
             shards: Mutex::new(ShardCells::default()),
         }
     }
@@ -193,6 +217,24 @@ impl LiveNode {
     /// Count one fresh buffer allocation (pool empty) for this node.
     pub fn add_pool_miss(&self) {
         self.pool_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish a disk-buffer snapshot (buffered edges and replay
+    /// sources own these cells; idempotent gauge stores, so re-publish
+    /// on every batch is free of double counting).
+    pub fn set_buffer_gauges(
+        &self,
+        bytes_on_disk: u64,
+        records_spilled: u64,
+        records_replayed: u64,
+        corrupt_records_skipped: u64,
+        spill_active: bool,
+    ) {
+        self.buffer_bytes_on_disk.store(bytes_on_disk, Ordering::Relaxed);
+        self.buffer_records_spilled.store(records_spilled, Ordering::Relaxed);
+        self.buffer_records_replayed.store(records_replayed, Ordering::Relaxed);
+        self.buffer_corrupt_records_skipped.store(corrupt_records_skipped, Ordering::Relaxed);
+        self.buffer_spill_active.store(u64::from(spill_active), Ordering::Relaxed);
     }
 
     /// Record one batch's per-shard home-event counts (both lanes).
@@ -244,6 +286,13 @@ impl LiveNode {
             chunks_cloned: self.chunks_cloned.load(Ordering::Relaxed),
             pool_hits: self.pool_hits.load(Ordering::Relaxed),
             pool_misses: self.pool_misses.load(Ordering::Relaxed),
+            buffer_bytes_on_disk: self.buffer_bytes_on_disk.load(Ordering::Relaxed),
+            buffer_records_spilled: self.buffer_records_spilled.load(Ordering::Relaxed),
+            buffer_records_replayed: self.buffer_records_replayed.load(Ordering::Relaxed),
+            buffer_corrupt_records_skipped: self
+                .buffer_corrupt_records_skipped
+                .load(Ordering::Relaxed),
+            buffer_spill_active: self.buffer_spill_active.load(Ordering::Relaxed) != 0,
             shard_events: self.shards.lock().unwrap().cut.clone(),
         }
     }

@@ -1,0 +1,681 @@
+//! Durable spill-to-disk edge buffers (ROADMAP item 2).
+//!
+//! Every other edge in the engine is an in-memory ring, so one slow
+//! sink or a burst beyond RAM means drops or stalls. This module makes
+//! an edge *durable*: [`DiskBufferedSink`] wraps any
+//! [`EventSink`](super::EventSink) behind a write-ahead journal of
+//! CRC32-framed record batches ([`segment`]), a bounded in-memory
+//! front, and a pair of named OS threads:
+//!
+//! ```text
+//! feeder (driver) ──ring──▶ buf:w/<edge> ──tokens──▶ buf:r/<edge> ──▶ sink
+//!                            │ journals every batch      │ drains FIFO
+//!                            ▼                           ▼
+//!                        segment-000000, segment-000001, …   acked.offset
+//! ```
+//!
+//! The writer journals **every** batch to disk first (write-ahead: the
+//! recording is complete and replayable, and delivery is at-least-once
+//! across a crash), then enqueues a delivery token. While the bounded
+//! front has room the token carries the in-memory chunk and the drainer
+//! never touches the disk for it (the journal write is sequential and
+//! the read is skipped — the fast path costs one framed append). When
+//! the front is full the token drops the memory copy — the **spill** —
+//! and the drainer reads the batch back from the journal when the sink
+//! catches up. Order is a single FIFO token queue either way, so the
+//! wrapped sink sees exactly the byte sequence a pure-memory edge would
+//! have delivered.
+//!
+//! Cap semantics (`cap_bytes` bounds the journal): in pure-spill mode
+//! (`retain_acked = false`) the writer reclaims fully-consumed sealed
+//! segments to free space, waiting for the drainer when the journal is
+//! full — and if nothing is left to reclaim (a single frame larger than
+//! the remaining cap), it overshoots by that one frame rather than
+//! deadlock. With retention (`retain_acked = true`, the default —
+//! that's what makes the edge *replayable*) nothing ever frees, so a
+//! full journal degrades to a bounded in-memory pass-through: batches
+//! keep flowing with bounded memory and zero loss, they are just no
+//! longer journaled (counted as backpressure on the edge).
+//!
+//! `acked.offset` tracks delivery: after a crash,
+//! [`read_acked_offset`](segment::read_acked_offset) names the first
+//! record that still needs re-serving and [`ReplaySource`] re-serves
+//! the journal from any offset at original or max speed.
+
+pub mod segment;
+
+mod replay;
+
+pub use replay::{ReplaySource, ReplaySpeed};
+pub use segment::read_acked_offset;
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::aer::{Event, Resolution};
+use crate::metrics::LiveNode;
+use crate::rt::{block_on, sync_channel, SyncReceiver, SyncSender};
+
+use super::chunk::EventChunk;
+use super::{EventSink, SinkSummary};
+
+use segment::{
+    write_acked_offset, FrameRead, SegmentReader, SegmentWriter, DEFAULT_SEGMENT_BYTES,
+    FRAME_HEADER_BYTES, RECORD_BYTES,
+};
+
+/// Batches buffered in the feeder→writer ring (mirrors the sink pumps'
+/// queue): enough to decouple the driver from journal latency, small
+/// enough to keep the edge's memory O(chunk).
+const FEED_QUEUE_BATCHES: usize = 2;
+
+/// Configuration of one disk-buffered edge (`buffer = disk{cap, dir}`
+/// in a graph spec).
+#[derive(Debug, Clone)]
+pub struct DiskBufferConfig {
+    /// Journal directory (created if missing; an existing journal is
+    /// recovered — torn tail truncated — and appended after).
+    pub dir: PathBuf,
+    /// Journal size cap in bytes. See the module docs for what happens
+    /// at the cap in each retention mode.
+    pub cap_bytes: u64,
+    /// Bounded in-memory front: how many batches may wait for the sink
+    /// in RAM before their memory copy is dropped (spilled). ≥ 1.
+    pub front_batches: usize,
+    /// `true` (default): fsync after every appended frame — a committed
+    /// batch survives power loss. `false`: fsync only at segment
+    /// rotation and finish (faster; a crash may lose the OS-cached
+    /// tail, recovery still truncates to the last committed frame).
+    pub fsync_per_batch: bool,
+    /// `true` (default): keep delivered segments on disk so the whole
+    /// edge stays replayable. `false`: reclaim fully-delivered segments
+    /// under cap pressure (pure spill-queue mode).
+    pub retain_acked: bool,
+    /// Segment rotation threshold in bytes (clamped to `cap_bytes / 4`
+    /// so reclaim granularity can keep up with the cap).
+    pub segment_bytes: u64,
+}
+
+impl DiskBufferConfig {
+    /// Durable defaults: 8-batch front, per-frame fsync, retained
+    /// journal, 8 MiB segments.
+    pub fn new(dir: impl Into<PathBuf>, cap_bytes: u64) -> DiskBufferConfig {
+        DiskBufferConfig {
+            dir: dir.into(),
+            cap_bytes,
+            front_batches: 8,
+            fsync_per_batch: true,
+            retain_acked: true,
+            segment_bytes: DEFAULT_SEGMENT_BYTES,
+        }
+    }
+}
+
+/// Counters shared by the feeder, writer, and drainer threads.
+#[derive(Debug, Default)]
+struct BufferStats {
+    bytes_on_disk: AtomicU64,
+    records_spilled: AtomicU64,
+    records_replayed: AtomicU64,
+    corrupt_records_skipped: AtomicU64,
+    /// Spilled batches journaled but not yet drained (spill_active
+    /// gauge).
+    disk_pending: AtomicU64,
+    /// High-water mark of batches held in the bounded memory front.
+    peak_mem_batches: AtomicU64,
+}
+
+/// A point-in-time view of a buffered edge's counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BufferSnapshot {
+    /// Journal bytes currently on disk.
+    pub bytes_on_disk: u64,
+    /// Records whose memory copy was dropped (they drain from disk).
+    pub records_spilled: u64,
+    /// Records read back from the journal by the drainer.
+    pub records_replayed: u64,
+    /// Records lost to CRC-failed journal frames and skipped.
+    pub corrupt_records_skipped: u64,
+    /// Whether spilled batches are still waiting on disk.
+    pub spill_active: bool,
+    /// High-water mark of batches held in the bounded memory front —
+    /// the buffered edge's memory bound (≤ `front_batches` by
+    /// construction).
+    pub peak_mem_batches: u64,
+}
+
+impl BufferStats {
+    fn snapshot(&self) -> BufferSnapshot {
+        BufferSnapshot {
+            bytes_on_disk: self.bytes_on_disk.load(Ordering::Relaxed),
+            records_spilled: self.records_spilled.load(Ordering::Relaxed),
+            records_replayed: self.records_replayed.load(Ordering::Relaxed),
+            corrupt_records_skipped: self.corrupt_records_skipped.load(Ordering::Relaxed),
+            spill_active: self.disk_pending.load(Ordering::Relaxed) > 0,
+            peak_mem_batches: self.peak_mem_batches.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What the feeder hands the writer thread (mirrors `SinkMsg` on the
+/// sink pumps; chunks cross by refcount, never by copy).
+enum FeedMsg {
+    Batch(EventChunk),
+    Geometry(Resolution),
+}
+
+/// One FIFO delivery unit from writer to drainer. Order of tokens is
+/// delivery order; a `Disk` token coalesces consecutive spilled batches
+/// so the queue stays O(front) even when millions of batches are on
+/// disk.
+enum Token {
+    /// Batch still in the memory front. `journaled` says whether a
+    /// journal frame backs it (the drainer must hop its disk cursor
+    /// past that frame); `false` only for cap-degraded pass-through.
+    Mem { chunk: EventChunk, journaled: bool },
+    /// This many consecutive batches whose memory copy was dropped:
+    /// read each back from the journal.
+    Disk { batches: u64 },
+    Geometry(Resolution),
+    /// Writer-side failure, delivered in order so the drainer stops at
+    /// the same point the journal did.
+    Fail(anyhow::Error),
+}
+
+/// Token queue + wakeups shared by writer and drainer.
+#[derive(Default)]
+struct QueueShared {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct QueueState {
+    tokens: VecDeque<Token>,
+    /// Batches currently held in the memory front.
+    mem_batches: usize,
+    /// Journal frames fully processed by the drainer (read or hopped) —
+    /// what the writer's cap reclaim keys on.
+    consumed_frames: u64,
+    done_writing: bool,
+    drainer_dead: bool,
+}
+
+/// Clip a thread name to the 15-byte Linux limit at a char boundary
+/// (longer names silently fail to apply).
+fn thread_name(prefix: &str, label: &str) -> String {
+    let mut name = format!("{prefix}{label}");
+    let mut end = name.len().min(15);
+    while !name.is_char_boundary(end) {
+        end -= 1;
+    }
+    name.truncate(end);
+    name
+}
+
+// --------------------------------------------------------------- writer
+
+fn writer_loop(
+    mut rx: SyncReceiver<FeedMsg>,
+    mut seg: SegmentWriter,
+    shared: &QueueShared,
+    stats: &BufferStats,
+    cfg: &DiskBufferConfig,
+) {
+    let result = (|| -> Result<()> {
+        while let Some(msg) = block_on(rx.recv()) {
+            let chunk = match msg {
+                FeedMsg::Geometry(res) => {
+                    let mut q = shared.q.lock().unwrap();
+                    if q.drainer_dead {
+                        return Ok(());
+                    }
+                    q.tokens.push_back(Token::Geometry(res));
+                    shared.cv.notify_all();
+                    continue;
+                }
+                FeedMsg::Batch(chunk) => chunk,
+            };
+            let frame_bytes = (FRAME_HEADER_BYTES + chunk.len() * RECORD_BYTES) as u64;
+            if stats.bytes_on_disk.load(Ordering::Relaxed) + frame_bytes > cfg.cap_bytes {
+                if cfg.retain_acked {
+                    // Retention means nothing ever frees: degrade to a
+                    // bounded in-memory pass-through. No loss, bounded
+                    // memory — the batch just is not journaled.
+                    let mut q = shared.q.lock().unwrap();
+                    loop {
+                        if q.drainer_dead {
+                            return Ok(());
+                        }
+                        if q.mem_batches < cfg.front_batches {
+                            break;
+                        }
+                        q = shared.cv.wait(q).unwrap();
+                    }
+                    q.mem_batches += 1;
+                    stats.peak_mem_batches.fetch_max(q.mem_batches as u64, Ordering::Relaxed);
+                    q.tokens.push_back(Token::Mem { chunk, journaled: false });
+                    shared.cv.notify_all();
+                    continue;
+                }
+                // Pure spill mode: fully-consumed sealed segments are
+                // garbage — reclaim them, waiting for the drainer to
+                // consume more when that is not yet enough.
+                let mut q = shared.q.lock().unwrap();
+                loop {
+                    if q.drainer_dead {
+                        return Ok(());
+                    }
+                    let freed = seg.reclaim(q.consumed_frames)?;
+                    if freed > 0 {
+                        stats.bytes_on_disk.fetch_sub(freed, Ordering::Relaxed);
+                        shared.cv.notify_all();
+                    }
+                    if stats.bytes_on_disk.load(Ordering::Relaxed) + frame_bytes
+                        <= cfg.cap_bytes
+                    {
+                        break;
+                    }
+                    if !seg.reclaimable() {
+                        // Everything reclaimable is gone and this one
+                        // frame still does not fit: overshoot the cap by
+                        // one frame rather than deadlock.
+                        break;
+                    }
+                    q = shared.cv.wait(q).unwrap();
+                }
+            }
+            let bytes = seg.append(chunk.as_slice())?;
+            stats.bytes_on_disk.fetch_add(bytes, Ordering::Relaxed);
+            let mut q = shared.q.lock().unwrap();
+            if q.drainer_dead {
+                return Ok(());
+            }
+            if q.mem_batches < cfg.front_batches {
+                // Fast path: the batch rides through memory; the disk
+                // copy is write-ahead durability only.
+                q.mem_batches += 1;
+                stats.peak_mem_batches.fetch_max(q.mem_batches as u64, Ordering::Relaxed);
+                q.tokens.push_back(Token::Mem { chunk, journaled: true });
+            } else {
+                // Spill: drop the RAM copy; the drainer reads it back.
+                stats.records_spilled.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                stats.disk_pending.fetch_add(1, Ordering::Relaxed);
+                match q.tokens.back_mut() {
+                    Some(Token::Disk { batches }) => *batches += 1,
+                    _ => q.tokens.push_back(Token::Disk { batches: 1 }),
+                }
+            }
+            shared.cv.notify_all();
+        }
+        if !cfg.fsync_per_batch {
+            seg.sync()?;
+        }
+        Ok(())
+    })();
+    let mut q = shared.q.lock().unwrap();
+    if let Err(e) = result {
+        q.tokens.push_back(Token::Fail(e));
+    }
+    q.done_writing = true;
+    shared.cv.notify_all();
+}
+
+// -------------------------------------------------------------- drainer
+
+#[allow(clippy::too_many_arguments)]
+fn drainer_loop(
+    mut sink: Box<dyn EventSink>,
+    dir: &std::path::Path,
+    start_index: u64,
+    ack_base: u64,
+    shared: &QueueShared,
+    stats: &BufferStats,
+) -> Result<SinkSummary> {
+    let mut reader = SegmentReader::open_at(dir, start_index);
+    let mut delivered = ack_base;
+    let mut scratch: Vec<Event> = Vec::new();
+    loop {
+        let token = {
+            let mut q = shared.q.lock().unwrap();
+            loop {
+                if let Some(t) = q.tokens.pop_front() {
+                    break Some(t);
+                }
+                if q.done_writing {
+                    break None;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        let Some(token) = token else { break };
+        match token {
+            Token::Geometry(res) => sink.observe_geometry(res),
+            Token::Mem { chunk, journaled } => {
+                if journaled {
+                    // Hop the disk cursor past this batch's journal
+                    // frame without reading it.
+                    match reader.skip_frame().context("advancing disk journal cursor")? {
+                        FrameRead::Frame(_) => {}
+                        _ => bail!("disk buffer journal ended before a committed frame"),
+                    }
+                }
+                sink.consume_chunk(&chunk)?;
+                delivered += chunk.len() as u64;
+                let mut q = shared.q.lock().unwrap();
+                q.mem_batches -= 1;
+                q.consumed_frames += u64::from(journaled);
+                drop(q);
+                shared.cv.notify_all();
+            }
+            Token::Disk { batches } => {
+                for _ in 0..batches {
+                    scratch.clear();
+                    match reader.next_frame(&mut scratch).context("reading spilled batch")? {
+                        FrameRead::Frame(n) => {
+                            sink.consume(&scratch)?;
+                            delivered += n as u64;
+                            stats.records_replayed.fetch_add(n as u64, Ordering::Relaxed);
+                        }
+                        FrameRead::Corrupt(n) => {
+                            // Bit rot between write and read-back: the
+                            // frame is gone either way; count it and
+                            // advance the ack past it so replay does not
+                            // loop on it forever.
+                            stats
+                                .corrupt_records_skipped
+                                .fetch_add(n, Ordering::Relaxed);
+                            delivered += n;
+                        }
+                        FrameRead::Torn | FrameRead::Eof => {
+                            bail!("disk buffer journal ended before a committed frame")
+                        }
+                    }
+                    stats.disk_pending.fetch_sub(1, Ordering::Relaxed);
+                    let mut q = shared.q.lock().unwrap();
+                    q.consumed_frames += 1;
+                    drop(q);
+                    shared.cv.notify_all();
+                }
+            }
+            Token::Fail(e) => return Err(e),
+        }
+        write_acked_offset(dir, delivered)?;
+    }
+    let summary = sink.finish().context("disk-buffered sink finish")?;
+    write_acked_offset(dir, delivered)?;
+    Ok(summary)
+}
+
+// ----------------------------------------------------------------- sink
+
+/// Any [`EventSink`] behind a crash-safe disk journal with a bounded
+/// memory front — see the module docs for the full data path. The
+/// wrapper is itself an `EventSink`, so it slots into any topology
+/// unchanged (graphs compile it in for edges with `buffer =
+/// disk{cap, dir}`).
+pub struct DiskBufferedSink {
+    /// `None` once finished (the close signal is dropping the sender).
+    tx: Option<SyncSender<FeedMsg>>,
+    done: SyncReceiver<Result<SinkSummary>>,
+    writer: Option<std::thread::JoinHandle<()>>,
+    drainer: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<BufferStats>,
+    node: Option<Arc<LiveNode>>,
+    name: String,
+    /// Full-ring suspensions of the feeder side (our half of the
+    /// backpressure ledger).
+    waits: u64,
+}
+
+impl DiskBufferedSink {
+    /// Wrap `sink` behind the journal at `config.dir`. `label` names
+    /// the edge (thread names `buf:w/<label>`, `buf:r/<label>`).
+    /// Journal recovery (torn-tail truncation) happens here, on the
+    /// caller's thread, so directory problems surface at compile time
+    /// rather than mid-stream.
+    pub fn spawn(
+        sink: Box<dyn EventSink>,
+        config: DiskBufferConfig,
+        label: &str,
+    ) -> Result<DiskBufferedSink> {
+        if config.cap_bytes == 0 {
+            bail!("disk buffer cap_bytes must be > 0");
+        }
+        if config.front_batches == 0 {
+            bail!("disk buffer front_batches must be ≥ 1");
+        }
+        let mut config = config;
+        // Reclaim granularity is whole segments: keep several per cap
+        // so pure-spill mode can actually free space under pressure.
+        config.segment_bytes =
+            config.segment_bytes.clamp(1, (config.cap_bytes / 4).max(1));
+        let name = sink.describe();
+        let (seg, recovery) =
+            SegmentWriter::open(&config.dir, config.segment_bytes, config.fsync_per_batch)?;
+        let start_index = seg.start_index();
+        let stats = Arc::new(BufferStats::default());
+        stats.bytes_on_disk.store(recovery.committed_bytes, Ordering::Relaxed);
+        let shared = Arc::new(QueueShared::default());
+        let (tx, rx) = sync_channel::<FeedMsg>(FEED_QUEUE_BATCHES);
+        let (mut done_tx, done) = sync_channel::<Result<SinkSummary>>(1);
+
+        let writer = {
+            let (shared, stats, cfg) = (Arc::clone(&shared), Arc::clone(&stats), config.clone());
+            std::thread::Builder::new()
+                .name(thread_name("buf:w/", label))
+                .spawn(move || writer_loop(rx, seg, &shared, &stats, &cfg))
+                .expect("spawn buffer writer thread")
+        };
+        let drainer = {
+            let (shared, stats) = (Arc::clone(&shared), Arc::clone(&stats));
+            let dir = config.dir.clone();
+            let ack_base = recovery.committed_records;
+            std::thread::Builder::new()
+                .name(thread_name("buf:r/", label))
+                .spawn(move || {
+                    let result =
+                        drainer_loop(sink, &dir, start_index, ack_base, &shared, &stats);
+                    if result.is_err() {
+                        let mut q = shared.q.lock().unwrap();
+                        q.drainer_dead = true;
+                        drop(q);
+                        shared.cv.notify_all();
+                    }
+                    let _ = block_on(done_tx.send(result));
+                })
+                .expect("spawn buffer drainer thread")
+        };
+        Ok(DiskBufferedSink {
+            tx: Some(tx),
+            done,
+            writer: Some(writer),
+            drainer: Some(drainer),
+            stats,
+            node: None,
+            name,
+            waits: 0,
+        })
+    }
+
+    /// A point-in-time view of the edge's counters (the bounded-front
+    /// assertion in tier-1 tests reads `peak_mem_batches` here).
+    pub fn stats(&self) -> BufferSnapshot {
+        self.stats.snapshot()
+    }
+
+    fn publish(&self) {
+        if let Some(node) = &self.node {
+            let s = self.stats.snapshot();
+            node.set_buffer_gauges(
+                s.bytes_on_disk,
+                s.records_spilled,
+                s.records_replayed,
+                s.corrupt_records_skipped,
+                s.spill_active,
+            );
+        }
+    }
+
+    /// Push one message into the feed ring, suspending on a full ring
+    /// and surfacing a dead pipeline's error immediately.
+    fn send_to_writer(&mut self, msg: FeedMsg) -> Result<()> {
+        let Some(tx) = self.tx.as_mut() else {
+            bail!("disk-buffered sink {:?} already finished", self.name);
+        };
+        match tx.try_send(msg) {
+            Ok(()) => Ok(()),
+            Err(msg) => {
+                // Ring full (backpressure) or writer gone: the blocking
+                // send distinguishes them.
+                self.waits += 1;
+                if block_on(tx.send(msg)).is_ok() {
+                    return Ok(());
+                }
+                match self.join() {
+                    Ok(_) => {
+                        bail!("buffer threads for {:?} exited early", self.name)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+        }
+    }
+
+    /// Close the feed ring, collect the drainer's result, join both
+    /// threads. Idempotent via `tx`/handles being `Option`s.
+    fn join(&mut self) -> Result<SinkSummary> {
+        drop(self.tx.take()); // close: writer drains, drainer finishes
+        let result = block_on(self.done.recv());
+        for handle in [self.writer.take(), self.drainer.take()].into_iter().flatten() {
+            if handle.join().is_err() {
+                bail!("buffer thread for {:?} panicked", self.name);
+            }
+        }
+        let mut summary = result
+            .with_context(|| format!("buffer drainer for {:?} vanished", self.name))??;
+        summary.backpressure_waits += self.waits;
+        self.publish();
+        Ok(summary)
+    }
+}
+
+impl EventSink for DiskBufferedSink {
+    fn consume(&mut self, batch: &[Event]) -> Result<()> {
+        // Borrowed-slice entry point: the copy is unavoidable (counted).
+        self.consume_chunk(&EventChunk::from_slice(batch))
+    }
+
+    fn consume_chunk(&mut self, chunk: &EventChunk) -> Result<()> {
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        self.send_to_writer(FeedMsg::Batch(chunk.clone()))?; // refcount bump
+        self.publish();
+        Ok(())
+    }
+
+    fn observe_geometry(&mut self, res: Resolution) {
+        if let Some(tx) = self.tx.as_mut() {
+            // Best-effort: a dead pipeline's error surfaces at finish.
+            if tx.try_send(FeedMsg::Geometry(res)).is_err() {
+                let _ = block_on(tx.send(FeedMsg::Geometry(res)));
+            }
+        }
+    }
+
+    fn finish(&mut self) -> Result<SinkSummary> {
+        self.join()
+    }
+
+    fn set_live_node(&mut self, node: Arc<LiveNode>) {
+        self.node = Some(node);
+        self.publish();
+    }
+
+    fn describe(&self) -> String {
+        format!("diskbuf({})", self.name)
+    }
+}
+
+impl Drop for DiskBufferedSink {
+    fn drop(&mut self) {
+        // Error paths skip finish(): close the ring and join so no
+        // buf:* thread outlives the topology (best effort).
+        drop(self.tx.take());
+        for handle in [self.writer.take(), self.drainer.take()].into_iter().flatten() {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::CaptureSink;
+    use crate::testutil::synthetic_events;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("aestream-buf-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    /// Byte-identity vs a pure-memory edge, with a front small enough
+    /// that most batches spill.
+    #[test]
+    fn buffered_edge_is_byte_identical_and_spills() {
+        let dir = tmp_dir("identity");
+        let events = synthetic_events(5000, 320, 240);
+        let (capture, captured) = CaptureSink::new();
+        let mut config = DiskBufferConfig::new(&dir, 64 * 1024 * 1024);
+        config.front_batches = 1;
+        config.fsync_per_batch = false;
+        let mut sink = DiskBufferedSink::spawn(Box::new(capture), config, "t").unwrap();
+        for batch in events.chunks(100) {
+            sink.consume(batch).unwrap();
+        }
+        let summary = sink.finish().unwrap();
+        assert_eq!(summary.dropped, 0);
+        let got = captured.lock().unwrap().clone();
+        assert_eq!(got, events, "buffered edge must preserve byte identity");
+        let stats = sink.stats();
+        assert!(stats.peak_mem_batches <= 1, "front bound violated: {stats:?}");
+        assert_eq!(stats.corrupt_records_skipped, 0);
+        assert!(!stats.spill_active, "drained journal must clear spill_active");
+        assert_eq!(read_acked_offset(&dir), 5000);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Pure spill mode under a tight cap: the writer reclaims consumed
+    /// segments instead of growing the journal without bound.
+    #[test]
+    fn pure_spill_mode_reclaims_under_cap() {
+        let dir = tmp_dir("reclaim");
+        let events = synthetic_events(20_000, 128, 128);
+        let (capture, captured) = CaptureSink::new();
+        // 20k events × 16 B ≈ 320 KiB of payload through a 64 KiB cap.
+        let mut config = DiskBufferConfig::new(&dir, 64 * 1024);
+        config.front_batches = 2;
+        config.fsync_per_batch = false;
+        config.retain_acked = false;
+        let mut sink = DiskBufferedSink::spawn(Box::new(capture), config, "r").unwrap();
+        for batch in events.chunks(500) {
+            sink.consume(batch).unwrap();
+        }
+        sink.finish().unwrap();
+        assert_eq!(captured.lock().unwrap().clone(), events);
+        let stats = sink.stats();
+        // One frame of slack over the cap is the documented overshoot.
+        assert!(
+            stats.bytes_on_disk <= 64 * 1024 + (FRAME_HEADER_BYTES + 500 * RECORD_BYTES) as u64,
+            "journal exceeded its cap: {stats:?}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

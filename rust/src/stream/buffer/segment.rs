@@ -1,0 +1,679 @@
+//! Crash-safe segmented frame storage: the disk layer under
+//! [`DiskBufferedSink`](super::DiskBufferedSink) and
+//! [`ReplaySource`](super::ReplaySource).
+//!
+//! A buffer directory holds an append-only chain of `segment-NNNNNN`
+//! files. Each segment is a sequence of **frames**:
+//!
+//! ```text
+//! [u32 LE record count][u32 LE CRC32 of payload][payload]
+//! payload = count × 16-byte spool records (t u64 LE, x u16 LE,
+//!           y u16 LE, p u8, 3 zero pad — the FileSink spool layout)
+//! ```
+//!
+//! Every frame is written with one `write_all` and (per the fsync
+//! policy) one `sync_data`, so after a crash the journal is a prefix of
+//! fully-committed frames followed by at most one torn tail. Recovery
+//! on open scans each segment by header hopscotch, truncates the torn
+//! tail back to the last committed frame boundary, and reports the
+//! committed totals. Truncation can never fabricate events: a cut
+//! inside a payload reads as "payload extends past EOF" (torn), never
+//! as a CRC-valid frame. A *complete* frame whose checksum fails is bit
+//! rot, not a torn tail — readers skip it and count its records instead
+//! of stopping.
+//!
+//! `acked.offset` in the same directory records how many records have
+//! been delivered downstream (atomic tmp+rename), giving at-least-once
+//! restart: replay the journal from [`read_acked_offset`] after a
+//! crash.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context as _, Result};
+
+use crate::aer::{Event, Polarity};
+
+/// Bytes per spool record (matches `stream::sinks`' spool layout).
+pub const RECORD_BYTES: usize = 16;
+
+/// Bytes per frame header (record count + payload CRC32).
+pub const FRAME_HEADER_BYTES: usize = 8;
+
+/// Sanity cap on a frame's record count: a header claiming more is
+/// treated as corruption (stop, don't allocate gigabytes).
+pub const MAX_FRAME_RECORDS: u32 = 1 << 22;
+
+/// Default segment rotation threshold.
+pub const DEFAULT_SEGMENT_BYTES: u64 = 8 * 1024 * 1024;
+
+const ACKED_FILE: &str = "acked.offset";
+
+// ------------------------------------------------------------------ crc
+
+/// CRC32 (IEEE 802.3, reflected poly 0xEDB88320) lookup table, built at
+/// compile time — `aer::checksum` is the paper's coordinate-sum
+/// workload, not a real checksum, so the framing brings its own.
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            j += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+/// CRC32 of `data` (IEEE, as used by gzip/zip/PNG).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = (crc >> 8) ^ CRC_TABLE[((crc ^ u32::from(b)) & 0xFF) as usize];
+    }
+    !crc
+}
+
+// -------------------------------------------------------------- records
+
+/// Append one event as a 16-byte spool record.
+pub(crate) fn encode_record(ev: &Event, out: &mut Vec<u8>) {
+    out.extend_from_slice(&ev.t.to_le_bytes());
+    out.extend_from_slice(&ev.x.to_le_bytes());
+    out.extend_from_slice(&ev.y.to_le_bytes());
+    out.push(u8::from(ev.p.is_on()));
+    out.extend_from_slice(&[0u8; 3]);
+}
+
+/// Decode one 16-byte spool record (lossless inverse of
+/// [`encode_record`]).
+pub(crate) fn decode_record(rec: &[u8]) -> Event {
+    Event {
+        t: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
+        x: u16::from_le_bytes(rec[8..10].try_into().unwrap()),
+        y: u16::from_le_bytes(rec[10..12].try_into().unwrap()),
+        p: Polarity::from_bool(rec[12] != 0),
+    }
+}
+
+// --------------------------------------------------------------- frames
+
+/// Serialize one batch as a framed blob into `out` (cleared first).
+pub fn encode_frame(events: &[Event], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(FRAME_HEADER_BYTES + events.len() * RECORD_BYTES);
+    out.extend_from_slice(&(events.len() as u32).to_le_bytes());
+    out.extend_from_slice(&[0u8; 4]); // CRC placeholder
+    for ev in events {
+        encode_record(ev, out);
+    }
+    let crc = crc32(&out[FRAME_HEADER_BYTES..]);
+    out[4..8].copy_from_slice(&crc.to_le_bytes());
+}
+
+/// Frame one batch onto any writer, reusing `scratch` for the encode.
+/// Returns the frame's on-disk size in bytes.
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    events: &[Event],
+    scratch: &mut Vec<u8>,
+) -> std::io::Result<u64> {
+    encode_frame(events, scratch);
+    w.write_all(scratch)?;
+    Ok(scratch.len() as u64)
+}
+
+/// Outcome of pulling one frame off a journal.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A committed, checksum-valid frame of this many records
+    /// (appended to the caller's buffer).
+    Frame(usize),
+    /// A complete frame whose payload failed its CRC (bit rot): the
+    /// cursor advanced past it, nothing was decoded; this many records
+    /// were lost.
+    Corrupt(u64),
+    /// The stream ends inside a frame header or payload — the torn
+    /// tail of a crashed writer. Nothing before it is affected.
+    Torn,
+    /// Clean end of stream at a frame boundary.
+    Eof,
+}
+
+/// Read exactly `buf.len()` bytes unless the stream ends first; returns
+/// how many bytes actually landed (distinguishing clean EOF at 0 from a
+/// torn partial read).
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..])? {
+            0 => break,
+            n => got += n,
+        }
+    }
+    Ok(got)
+}
+
+/// Pull one frame off `r`, appending its events to `out` on success.
+/// `payload` is a reusable scratch buffer.
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    payload: &mut Vec<u8>,
+    out: &mut Vec<Event>,
+) -> std::io::Result<FrameRead> {
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    let got = read_full(r, &mut header)?;
+    if got == 0 {
+        return Ok(FrameRead::Eof);
+    }
+    if got < FRAME_HEADER_BYTES {
+        return Ok(FrameRead::Torn);
+    }
+    let count = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if count > MAX_FRAME_RECORDS {
+        // An insane header is indistinguishable from garbage: stop
+        // rather than seek into the void.
+        return Ok(FrameRead::Torn);
+    }
+    let payload_len = count as usize * RECORD_BYTES;
+    payload.clear();
+    payload.resize(payload_len, 0);
+    if read_full(r, payload)? < payload_len {
+        return Ok(FrameRead::Torn);
+    }
+    if crc32(payload) != crc {
+        return Ok(FrameRead::Corrupt(u64::from(count)));
+    }
+    out.reserve(count as usize);
+    for rec in payload.chunks_exact(RECORD_BYTES) {
+        out.push(decode_record(rec));
+    }
+    Ok(FrameRead::Frame(count as usize))
+}
+
+// ------------------------------------------------------------- segments
+
+fn segment_path(dir: &Path, index: u64) -> PathBuf {
+    dir.join(format!("segment-{index:06}"))
+}
+
+/// Sorted indices of the segment files present in `dir`.
+fn list_segments(dir: &Path) -> Result<Vec<u64>> {
+    let mut indices = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("listing buffer dir {}", dir.display()))?
+    {
+        let entry = entry?;
+        if let Some(rest) =
+            entry.file_name().to_str().and_then(|n| n.strip_prefix("segment-").map(String::from))
+        {
+            if let Ok(index) = rest.parse::<u64>() {
+                indices.push(index);
+            }
+        }
+    }
+    indices.sort_unstable();
+    Ok(indices)
+}
+
+/// What one segment's committed prefix holds.
+struct SegmentScan {
+    frames: u64,
+    records: u64,
+    /// Byte offset of the last committed frame boundary.
+    valid_end: u64,
+    file_len: u64,
+}
+
+/// Scan a segment by header hopscotch (no payload reads, no CRC): a
+/// frame is *committed* iff its header and full payload fit inside the
+/// file. CRC-corrupt frames still count as committed — readers skip
+/// them at read time.
+fn scan_segment(path: &Path) -> Result<SegmentScan> {
+    let file =
+        File::open(path).with_context(|| format!("opening segment {}", path.display()))?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    let mut scan = SegmentScan { frames: 0, records: 0, valid_end: 0, file_len };
+    let mut pos = 0u64;
+    loop {
+        let mut header = [0u8; FRAME_HEADER_BYTES];
+        let got = read_full(&mut r, &mut header)?;
+        if got < FRAME_HEADER_BYTES {
+            break; // clean end (0) or torn header (partial)
+        }
+        let count = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        if count > MAX_FRAME_RECORDS {
+            break; // insane header: treat as the torn tail
+        }
+        let payload_len = count as u64 * RECORD_BYTES as u64;
+        if pos + FRAME_HEADER_BYTES as u64 + payload_len > file_len {
+            break; // payload extends past EOF: torn tail
+        }
+        r.seek_relative(payload_len as i64)?;
+        pos += FRAME_HEADER_BYTES as u64 + payload_len;
+        scan.frames += 1;
+        scan.records += u64::from(count);
+        scan.valid_end = pos;
+    }
+    Ok(scan)
+}
+
+/// What [`SegmentWriter::open`] found (and fixed) in an existing
+/// buffer directory.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Recovery {
+    /// Committed frames across all pre-existing segments.
+    pub committed_frames: u64,
+    /// Committed records across all pre-existing segments.
+    pub committed_records: u64,
+    /// Bytes of committed journal on disk after recovery.
+    pub committed_bytes: u64,
+    /// Torn-tail bytes truncated away.
+    pub truncated_bytes: u64,
+}
+
+/// A rotated-out (or pre-existing) segment the writer may reclaim once
+/// its frames are consumed.
+struct SealedSegment {
+    index: u64,
+    /// Cumulative this-run frame count at this segment's end (0 for
+    /// segments inherited from a previous run: reclaimable first).
+    end_frame: u64,
+    bytes: u64,
+}
+
+/// Append side of a buffer directory: rotating segment files of framed
+/// batches, torn-tail recovery on open, optional fsync per frame.
+pub struct SegmentWriter {
+    dir: PathBuf,
+    file: File,
+    index: u64,
+    first_index: u64,
+    /// Frames appended by *this* writer (recovery frames excluded).
+    frames: u64,
+    written: u64,
+    target: u64,
+    fsync: bool,
+    scratch: Vec<u8>,
+    sealed: VecDeque<SealedSegment>,
+}
+
+impl SegmentWriter {
+    /// Open `dir` for appending: create it if missing, truncate any
+    /// torn tail in existing segments back to the last committed frame,
+    /// and start a fresh segment after the newest existing one.
+    pub fn open(dir: &Path, target: u64, fsync: bool) -> Result<(SegmentWriter, Recovery)> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating buffer dir {}", dir.display()))?;
+        let indices = list_segments(dir)?;
+        let mut recovery = Recovery::default();
+        let mut sealed = VecDeque::new();
+        for &i in &indices {
+            let path = segment_path(dir, i);
+            let scan = scan_segment(&path)?;
+            if scan.valid_end < scan.file_len {
+                // Torn tail (crash mid-frame): truncate back to the
+                // last committed boundary so the chain stays parseable.
+                let f = std::fs::OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .with_context(|| format!("truncating {}", path.display()))?;
+                f.set_len(scan.valid_end)?;
+                recovery.truncated_bytes += scan.file_len - scan.valid_end;
+            }
+            recovery.committed_frames += scan.frames;
+            recovery.committed_records += scan.records;
+            recovery.committed_bytes += scan.valid_end;
+            sealed.push_back(SealedSegment { index: i, end_frame: 0, bytes: scan.valid_end });
+        }
+        let index = indices.last().map_or(0, |last| last + 1);
+        let path = segment_path(dir, index);
+        let file = File::create(&path)
+            .with_context(|| format!("creating segment {}", path.display()))?;
+        Ok((
+            SegmentWriter {
+                dir: dir.to_path_buf(),
+                file,
+                index,
+                first_index: index,
+                frames: 0,
+                written: 0,
+                target: target.max(FRAME_HEADER_BYTES as u64 + RECORD_BYTES as u64),
+                fsync,
+                scratch: Vec::new(),
+                sealed,
+            },
+            recovery,
+        ))
+    }
+
+    /// Index of the first segment this writer appends to (where a
+    /// paired reader starts).
+    pub fn start_index(&self) -> u64 {
+        self.first_index
+    }
+
+    /// Frames appended by this writer so far.
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    /// Append one batch as a committed frame; returns its on-disk size.
+    /// Frames never split across segments: rotation happens between
+    /// frames once the current segment passes its target size.
+    pub fn append(&mut self, events: &[Event]) -> Result<u64> {
+        if self.written >= self.target {
+            self.rotate()?;
+        }
+        let bytes = write_frame(&mut self.file, events, &mut self.scratch)
+            .with_context(|| format!("appending to segment {}", self.index))?;
+        if self.fsync {
+            self.file.sync_data().context("fsync of buffer segment")?;
+        }
+        self.written += bytes;
+        self.frames += 1;
+        Ok(bytes)
+    }
+
+    fn rotate(&mut self) -> Result<()> {
+        if !self.fsync {
+            // Rotation is the durability boundary when per-frame fsync
+            // is off: settle the sealed segment once.
+            self.file.sync_data().context("fsync of sealed segment")?;
+        }
+        self.sealed.push_back(SealedSegment {
+            index: self.index,
+            end_frame: self.frames,
+            bytes: self.written,
+        });
+        self.index += 1;
+        let path = segment_path(&self.dir, self.index);
+        self.file = File::create(&path)
+            .with_context(|| format!("creating segment {}", path.display()))?;
+        self.written = 0;
+        Ok(())
+    }
+
+    /// Flush the current segment to stable storage (clean shutdown when
+    /// per-frame fsync is off).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_data().context("fsync of buffer segment")
+    }
+
+    /// Delete sealed segments whose every frame is already consumed
+    /// (pure-spill mode's cap reclaim). Returns the bytes freed. The
+    /// paired reader never revisits a fully-consumed segment, and an
+    /// open file handle survives the unlink, so this is safe while the
+    /// drainer holds the file.
+    pub(crate) fn reclaim(&mut self, consumed_frames: u64) -> Result<u64> {
+        let mut freed = 0;
+        while self.sealed.front().is_some_and(|s| s.end_frame <= consumed_frames) {
+            let seg = self.sealed.pop_front().expect("checked front");
+            std::fs::remove_file(segment_path(&self.dir, seg.index)).ok();
+            freed += seg.bytes;
+        }
+        Ok(freed)
+    }
+
+    /// Whether any sealed segment could still be reclaimed by more
+    /// consumption (if not, waiting for the drainer frees nothing).
+    pub(crate) fn reclaimable(&self) -> bool {
+        !self.sealed.is_empty()
+    }
+}
+
+/// Read side of a buffer directory: pulls committed frames across the
+/// segment chain, skipping CRC-corrupt frames (counted) and stopping at
+/// the torn tail or journal end.
+pub struct SegmentReader {
+    dir: PathBuf,
+    index: u64,
+    file: Option<BufReader<File>>,
+    payload: Vec<u8>,
+}
+
+impl SegmentReader {
+    /// Open `dir` starting at its oldest segment (replay).
+    pub fn open(dir: &Path) -> Result<SegmentReader> {
+        let start = list_segments(dir)?.first().copied().unwrap_or(0);
+        Ok(SegmentReader::open_at(dir, start))
+    }
+
+    /// Open `dir` starting at segment `index` (a [`SegmentWriter`]
+    /// pairs its drainer with [`SegmentWriter::start_index`]). The
+    /// segment file may not exist yet; it is opened lazily.
+    pub fn open_at(dir: &Path, index: u64) -> SegmentReader {
+        SegmentReader { dir: dir.to_path_buf(), index, file: None, payload: Vec::new() }
+    }
+
+    fn ensure_file(&mut self) -> Result<bool> {
+        if self.file.is_some() {
+            return Ok(true);
+        }
+        let path = segment_path(&self.dir, self.index);
+        match File::open(&path) {
+            Ok(f) => {
+                self.file = Some(BufReader::new(f));
+                Ok(true)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e).with_context(|| format!("opening segment {}", path.display())),
+        }
+    }
+
+    fn advance(&mut self) -> Result<bool> {
+        let next = segment_path(&self.dir, self.index + 1);
+        match File::open(&next) {
+            Ok(f) => {
+                self.index += 1;
+                self.file = Some(BufReader::new(f));
+                Ok(true)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e).with_context(|| format!("opening segment {}", next.display())),
+        }
+    }
+
+    /// Pull the next committed frame, appending its events to `out`.
+    /// `Eof` here means the whole chain is exhausted (segment
+    /// boundaries are crossed transparently).
+    pub fn next_frame(&mut self, out: &mut Vec<Event>) -> Result<FrameRead> {
+        loop {
+            if !self.ensure_file()? {
+                return Ok(FrameRead::Eof);
+            }
+            let r = self.file.as_mut().expect("ensured file");
+            match read_frame(r, &mut self.payload, out)? {
+                FrameRead::Eof => {
+                    if !self.advance()? {
+                        return Ok(FrameRead::Eof);
+                    }
+                }
+                other => return Ok(other),
+            }
+        }
+    }
+
+    /// Advance past the next frame without decoding it, returning its
+    /// record count — the drainer's cursor hop for batches it already
+    /// delivered from memory. No CRC check: the payload was never read.
+    pub fn skip_frame(&mut self) -> Result<FrameRead> {
+        loop {
+            if !self.ensure_file()? {
+                return Ok(FrameRead::Eof);
+            }
+            let r = self.file.as_mut().expect("ensured file");
+            let mut header = [0u8; FRAME_HEADER_BYTES];
+            let got = read_full(r, &mut header)?;
+            if got == 0 {
+                if !self.advance()? {
+                    return Ok(FrameRead::Eof);
+                }
+                continue;
+            }
+            if got < FRAME_HEADER_BYTES {
+                return Ok(FrameRead::Torn);
+            }
+            let count = u32::from_le_bytes(header[0..4].try_into().unwrap());
+            if count > MAX_FRAME_RECORDS {
+                return Ok(FrameRead::Torn);
+            }
+            r.seek_relative(count as i64 * RECORD_BYTES as i64)?;
+            return Ok(FrameRead::Frame(count as usize));
+        }
+    }
+}
+
+// --------------------------------------------------------- acked offset
+
+/// Records delivered downstream from this buffer directory, as last
+/// durably acknowledged. 0 when no ack has ever been written.
+pub fn read_acked_offset(dir: &Path) -> u64 {
+    match std::fs::read(dir.join(ACKED_FILE)) {
+        Ok(bytes) if bytes.len() >= 8 => {
+            u64::from_le_bytes(bytes[0..8].try_into().expect("checked length"))
+        }
+        _ => 0,
+    }
+}
+
+/// Durably record that `records` records have been delivered
+/// downstream (atomic tmp+rename, so a crash leaves either the old or
+/// the new value, never a torn one).
+pub fn write_acked_offset(dir: &Path, records: u64) -> Result<()> {
+    let tmp = dir.join("acked.offset.tmp");
+    std::fs::write(&tmp, records.to_le_bytes())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, dir.join(ACKED_FILE)).context("publishing acked offset")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::synthetic_events;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("aestream-seg-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // The IEEE check value: CRC32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_roundtrip_and_record_identity() {
+        let events = synthetic_events(257, 640, 480);
+        let mut blob = Vec::new();
+        encode_frame(&events, &mut blob);
+        assert_eq!(blob.len(), FRAME_HEADER_BYTES + events.len() * RECORD_BYTES);
+        let mut cursor = std::io::Cursor::new(&blob);
+        let (mut payload, mut out) = (Vec::new(), Vec::new());
+        match read_frame(&mut cursor, &mut payload, &mut out).unwrap() {
+            FrameRead::Frame(n) => assert_eq!(n, events.len()),
+            other => panic!("expected frame, got {other:?}"),
+        }
+        assert_eq!(out, events);
+    }
+
+    #[test]
+    fn corrupt_payload_is_skipped_not_decoded() {
+        let events = synthetic_events(100, 64, 64);
+        let mut blob = Vec::new();
+        encode_frame(&events, &mut blob);
+        blob[FRAME_HEADER_BYTES + 5] ^= 0xFF; // flip a payload bit
+        let mut cursor = std::io::Cursor::new(&blob);
+        let (mut payload, mut out) = (Vec::new(), Vec::new());
+        match read_frame(&mut cursor, &mut payload, &mut out).unwrap() {
+            FrameRead::Corrupt(n) => assert_eq!(n, 100),
+            other => panic!("expected corrupt, got {other:?}"),
+        }
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn writer_rotates_and_reader_crosses_segments() {
+        let dir = tmp_dir("rotate");
+        let events = synthetic_events(1000, 128, 128);
+        {
+            // Tiny target: every batch rotates into its own segment.
+            let (mut w, rec) = SegmentWriter::open(&dir, 64, false).unwrap();
+            assert_eq!(rec.committed_frames, 0);
+            for batch in events.chunks(100) {
+                w.append(batch).unwrap();
+            }
+            w.sync().unwrap();
+        }
+        let mut r = SegmentReader::open(&dir).unwrap();
+        let mut out = Vec::new();
+        loop {
+            match r.next_frame(&mut out).unwrap() {
+                FrameRead::Frame(_) => {}
+                FrameRead::Eof => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(out, events);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reopen_recovers_torn_tail_and_appends_cleanly() {
+        let dir = tmp_dir("reopen");
+        let events = synthetic_events(300, 64, 64);
+        {
+            let (mut w, _) = SegmentWriter::open(&dir, DEFAULT_SEGMENT_BYTES, false).unwrap();
+            for batch in events.chunks(100) {
+                w.append(batch).unwrap();
+            }
+            w.sync().unwrap();
+        }
+        // Tear the tail mid-payload.
+        let seg = segment_path(&dir, 0);
+        let len = std::fs::metadata(&seg).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&seg).unwrap();
+        f.set_len(len - 7).unwrap();
+        drop(f);
+        let (mut w, rec) = SegmentWriter::open(&dir, DEFAULT_SEGMENT_BYTES, false).unwrap();
+        assert_eq!(rec.committed_frames, 2);
+        assert_eq!(rec.committed_records, 200);
+        assert_eq!(rec.truncated_bytes, (FRAME_HEADER_BYTES + 100 * RECORD_BYTES) as u64 - 7);
+        assert_eq!(w.start_index(), 1);
+        w.append(&events[200..]).unwrap();
+        w.sync().unwrap();
+        let mut r = SegmentReader::open(&dir).unwrap();
+        let mut out = Vec::new();
+        while let FrameRead::Frame(_) = r.next_frame(&mut out).unwrap() {}
+        assert_eq!(out, events); // first 200 committed + 100 re-appended
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn acked_offset_roundtrip() {
+        let dir = tmp_dir("acked");
+        assert_eq!(read_acked_offset(&dir), 0);
+        write_acked_offset(&dir, 12345).unwrap();
+        assert_eq!(read_acked_offset(&dir), 12345);
+        write_acked_offset(&dir, 99999).unwrap();
+        assert_eq!(read_acked_offset(&dir), 99999);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

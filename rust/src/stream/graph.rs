@@ -77,6 +77,7 @@ use crate::pipeline::fusion::SourceLayout;
 use crate::pipeline::PipelineSpec;
 
 use super::adapt::AdaptiveConfig;
+use super::buffer::{DiskBufferConfig, DiskBufferedSink};
 use super::report::ReportTarget;
 use super::stage::{StageGraph, StageOptions};
 use super::topology::{
@@ -169,6 +170,10 @@ impl Default for GraphConfig {
 enum SinkSlot<'a> {
     Inline(Box<dyn EventSink + 'a>),
     Threaded { describe: String, spawn: Box<dyn FnOnce() -> ThreadedSink + Send + 'a> },
+    /// A durable edge (`buffer = disk{cap, dir}`): the sink drains
+    /// through a [`DiskBufferedSink`] journal, spawned at compile like
+    /// the pump above.
+    Buffered { describe: String, config: DiskBufferConfig, sink: Box<dyn EventSink> },
 }
 
 impl SinkSlot<'_> {
@@ -176,6 +181,7 @@ impl SinkSlot<'_> {
         match self {
             SinkSlot::Inline(sink) => sink.describe(),
             SinkSlot::Threaded { describe, .. } => format!("thread({describe})"),
+            SinkSlot::Buffered { describe, .. } => format!("diskbuf({describe})"),
         }
     }
 }
@@ -359,6 +365,28 @@ impl<'a> TopologyBuilder<'a> {
                     spawn: Box::new(move || ThreadedSink::spawn(sink)),
                 },
             },
+            true,
+        );
+        self
+    }
+
+    /// [`sink`](Self::sink) behind a durable spill-to-disk edge: every
+    /// batch is journaled to `config.dir` with CRC framing, a bounded
+    /// in-memory front spills to the journal when the sink falls
+    /// behind, and delivery is tracked in `acked.offset` for
+    /// at-least-once replay ([`super::buffer`]). Requires a `'static`
+    /// sink because the drainer thread outlives the builder's borrows.
+    pub fn sink_buffered(
+        mut self,
+        name: &str,
+        sink: impl EventSink + 'static,
+        config: DiskBufferConfig,
+    ) -> Self {
+        let sink: Box<dyn EventSink> = Box::new(sink);
+        let describe = sink.describe();
+        self.push(
+            name,
+            NodeKind::Sink { slot: SinkSlot::Buffered { describe, config, sink } },
             true,
         );
         self
@@ -575,6 +603,17 @@ impl<'a> GraphSpec<'a> {
     }
 
     fn plan(&self) -> Result<Plan> {
+        // ---- per-node config sanity (cheap, before any graph walk).
+        for node in &self.nodes {
+            if let NodeKind::Sink { slot: SinkSlot::Buffered { config, .. } } = &node.kind {
+                if config.cap_bytes == 0 {
+                    bail!("buffered sink {:?}: cap_bytes must be > 0", node.name);
+                }
+                if config.front_batches == 0 {
+                    bail!("buffered sink {:?}: front_batches must be >= 1", node.name);
+                }
+            }
+        }
         // ---- names and edges resolve.
         let mut index: HashMap<&str, usize> = HashMap::new();
         for (i, node) in self.nodes.iter().enumerate() {
@@ -923,6 +962,11 @@ impl<'a> GraphSpec<'a> {
             let sink: Box<dyn EventSink + 'a> = match slot {
                 SinkSlot::Inline(sink) => sink,
                 SinkSlot::Threaded { spawn, .. } => Box::new(spawn()),
+                SinkSlot::Buffered { config, sink, .. } => {
+                    // The edge (node) name labels the buf:w/buf:r
+                    // threads and telemetry.
+                    Box::new(DiskBufferedSink::spawn(sink, config, &names[*sink_idx])?)
+                }
             };
             branches.push(BranchRun { graph, sink, label: names[*sink_idx].clone() });
         }

@@ -54,6 +54,7 @@
 //! stays byte-identical to serial across arbitrarily many re-cuts.
 
 pub mod adapt;
+pub mod buffer;
 pub mod chunk;
 pub mod codec_plane;
 pub mod graph;
@@ -78,6 +79,10 @@ pub use adapt::{
     registry::register_controller, AdaptiveConfig, AdaptiveReport, AdaptiveRuntime, Aimd,
     ChunkController, ClientSample, ClientWindowController, Controller, ControllerKind,
     EpochSample, Reconfigure, SkewController, StageSample, StageTelemetry, WindowChange,
+};
+pub use buffer::{
+    read_acked_offset, BufferSnapshot, DiskBufferConfig, DiskBufferedSink, ReplaySource,
+    ReplaySpeed,
 };
 pub use chunk::{copy_counters, CopyCounters, EventChunk, EVENT_BYTES};
 pub use codec_plane::{CodecPlane, CodecPlaneConfig, CodecPlaneCounters, DecodeStream};
@@ -162,6 +167,12 @@ pub trait EventSource: Send {
     /// ignored.
     fn set_codec_plane(&mut self, _plane: Arc<codec_plane::CodecPlane>) {}
 
+    /// Adopt this source's live telemetry node. Sources with internal
+    /// machinery worth reporting (replay progress, buffer gauges)
+    /// publish through it; plain sources ignore it — the driver counts
+    /// their batches externally either way. Default: ignored.
+    fn set_live_node(&mut self, _node: Arc<LiveNode>) {}
+
     /// Human-readable description (logs, reports).
     fn describe(&self) -> String {
         "source".into()
@@ -203,6 +214,9 @@ impl<S: EventSource + ?Sized> EventSource for &mut S {
     fn set_codec_plane(&mut self, plane: Arc<codec_plane::CodecPlane>) {
         (**self).set_codec_plane(plane)
     }
+    fn set_live_node(&mut self, node: Arc<LiveNode>) {
+        (**self).set_live_node(node)
+    }
     fn describe(&self) -> String {
         (**self).describe()
     }
@@ -235,6 +249,9 @@ impl<S: EventSource + ?Sized> EventSource for Box<S> {
     }
     fn set_codec_plane(&mut self, plane: Arc<codec_plane::CodecPlane>) {
         (**self).set_codec_plane(plane)
+    }
+    fn set_live_node(&mut self, node: Arc<LiveNode>) {
+        (**self).set_live_node(node)
     }
     fn describe(&self) -> String {
         (**self).describe()
@@ -298,6 +315,11 @@ pub trait EventSink: Send {
     /// (parity with the batch path). Default: ignored.
     fn observe_geometry(&mut self, _res: Resolution) {}
 
+    /// Adopt this sink's live telemetry node. Sinks with internal
+    /// machinery worth reporting (disk-buffer gauges) publish through
+    /// it; plain sinks ignore it. Default: ignored.
+    fn set_live_node(&mut self, _node: Arc<LiveNode>) {}
+
     /// End of stream: flush buffered state and report sink-side totals.
     /// Called exactly once, after the last `consume`.
     fn finish(&mut self) -> Result<SinkSummary>;
@@ -318,6 +340,9 @@ impl<K: EventSink + ?Sized> EventSink for &mut K {
     fn observe_geometry(&mut self, res: Resolution) {
         (**self).observe_geometry(res)
     }
+    fn set_live_node(&mut self, node: Arc<LiveNode>) {
+        (**self).set_live_node(node)
+    }
     fn finish(&mut self) -> Result<SinkSummary> {
         (**self).finish()
     }
@@ -335,6 +360,9 @@ impl<K: EventSink + ?Sized> EventSink for Box<K> {
     }
     fn observe_geometry(&mut self, res: Resolution) {
         (**self).observe_geometry(res)
+    }
+    fn set_live_node(&mut self, node: Arc<LiveNode>) {
+        (**self).set_live_node(node)
     }
     fn finish(&mut self) -> Result<SinkSummary> {
         (**self).finish()
@@ -477,6 +505,19 @@ pub struct StreamReport {
     /// Peak out-of-order decoded pieces buffered in any single stream's
     /// sequence-keyed reassembly.
     pub decode_reassembly_lag: u64,
+    /// Journal bytes held by disk-buffered edges at stream end (gauge,
+    /// summed over edges; retained journals keep their bytes).
+    pub buffer_bytes_on_disk: u64,
+    /// Records whose in-memory copy was dropped by a disk-buffered edge
+    /// (they drained from the journal instead).
+    pub buffer_records_spilled: u64,
+    /// Records read back from edge journals (spill drain + replay).
+    pub buffer_records_replayed: u64,
+    /// Records lost to CRC-corrupt journal frames and skipped.
+    pub buffer_corrupt_records_skipped: u64,
+    /// `true` if any edge still had spilled batches on disk when
+    /// sampled last (should settle to `false` by stream end).
+    pub buffer_spill_active: bool,
 }
 
 impl StreamReport {

@@ -164,6 +164,17 @@ impl ReportEmitter {
             report.decode_worker_busy,
             report.decode_reassembly_lag,
         );
+        let _ = write!(
+            line,
+            ",\"buffer\":{{\"bytes_on_disk\":{},\"records_spilled\":{},\
+             \"records_replayed\":{},\"corrupt_records_skipped\":{},\
+             \"spill_active\":{}}}",
+            report.buffer_bytes_on_disk,
+            report.buffer_records_spilled,
+            report.buffer_records_replayed,
+            report.buffer_corrupt_records_skipped,
+            report.buffer_spill_active,
+        );
         for (key, nodes) in
             [("sources", &report.sources), ("stages", &report.stages), ("sinks", &report.sinks)]
         {

@@ -146,38 +146,22 @@ enum FileSinkMode {
         tmp_path: PathBuf,
         writer: std::io::BufWriter<std::fs::File>,
         observed: Resolution,
+        scratch: Vec<u8>,
     },
 }
 
-/// Spool record layout: fixed 16 bytes, lossless for any [`Event`]
-/// (the packed raw format masks coordinates to 11 bits and timestamps
-/// to 40, so it cannot serve as a spool for formats with wider ranges).
-const SPOOL_RECORD: usize = 16;
-
-fn spool_write(batch: &[Event], w: &mut impl Write) -> std::io::Result<()> {
-    let mut buf = Vec::with_capacity(SPOOL_RECORD * batch.len());
-    for ev in batch {
-        buf.extend_from_slice(&ev.t.to_le_bytes());
-        buf.extend_from_slice(&ev.x.to_le_bytes());
-        buf.extend_from_slice(&ev.y.to_le_bytes());
-        buf.push(u8::from(ev.p.is_on()));
-        buf.extend_from_slice(&[0u8; 3]);
-    }
-    w.write_all(&buf)
-}
-
-fn spool_decode(rec: &[u8]) -> Event {
-    Event {
-        t: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
-        x: u16::from_le_bytes(rec[8..10].try_into().unwrap()),
-        y: u16::from_le_bytes(rec[10..12].try_into().unwrap()),
-        p: crate::aer::Polarity::from_bool(rec[12] != 0),
-    }
+/// Remove a stale `<path>.spool` left behind by a crashed observing
+/// run targeting the same output file.
+fn remove_orphan_spool(path: &Path) {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".spool");
+    std::fs::remove_file(PathBuf::from(tmp).as_path()).ok();
 }
 
 impl FileSink {
     /// Create/truncate `path`, writing a stream for geometry `res`.
     pub fn create(path: &Path, format: Format, res: Resolution) -> Result<Self> {
+        remove_orphan_spool(path);
         let file = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
         Ok(FileSink {
@@ -205,6 +189,7 @@ impl FileSink {
                 writer: std::io::BufWriter::new(file),
                 observed: Resolution::new(1, 1),
                 tmp_path,
+                scratch: Vec::new(),
             },
         })
     }
@@ -233,9 +218,10 @@ impl EventSink for FileSink {
             FileSinkMode::Direct { writer, encoder } => encoder
                 .write_batch(batch, writer)
                 .with_context(|| format!("writing {}", self.path.display())),
-            FileSinkMode::Spooled { writer, observed, .. } => {
+            FileSinkMode::Spooled { writer, observed, scratch, .. } => {
                 super::sources::grow_resolution(observed, batch);
-                spool_write(batch, writer)
+                super::buffer::segment::write_frame(writer, batch, scratch)
+                    .map(|_| ())
                     .with_context(|| format!("spooling for {}", self.path.display()))
             }
         }
@@ -258,13 +244,16 @@ impl EventSink for FileSink {
                     .flush()
                     .with_context(|| format!("flushing {}", self.path.display()))?;
             }
-            FileSinkMode::Spooled { format, tmp_path, writer, observed } => {
+            FileSinkMode::Spooled { format, tmp_path, writer, observed, .. } => {
                 writer
                     .flush()
                     .with_context(|| format!("flushing {}", tmp_path.display()))?;
                 // Second pass: re-encode the spool with the now-exact
-                // geometry, still one chunk at a time.
-                use std::io::Read;
+                // geometry, still one frame at a time. The spool lives
+                // entirely within this process, so a torn or corrupt
+                // frame here is a real disk error, not a crash to
+                // recover from — bail instead of truncating.
+                use super::buffer::segment::{read_frame, FrameRead};
                 let mut spool = std::io::BufReader::new(
                     std::fs::File::open(&tmp_path)
                         .with_context(|| format!("reopening {}", tmp_path.display()))?,
@@ -273,26 +262,30 @@ impl EventSink for FileSink {
                     .with_context(|| format!("creating {}", self.path.display()))?;
                 let mut out = std::io::BufWriter::new(file);
                 let mut enc = StreamingEncoder::new(*format, *observed)?;
-                let mut rec = [0u8; SPOOL_RECORD];
-                let mut batch = Vec::with_capacity(4096);
+                let mut payload = Vec::new();
+                let mut batch = Vec::new();
                 loop {
-                    match spool.read_exact(&mut rec) {
-                        Ok(()) => {
-                            batch.push(spool_decode(&rec));
-                            if batch.len() == 4096 {
-                                enc.write_batch(&batch, &mut out)?;
-                                batch.clear();
-                            }
+                    batch.clear();
+                    match read_frame(&mut spool, &mut payload, &mut batch)
+                        .with_context(|| format!("reading {}", tmp_path.display()))?
+                    {
+                        FrameRead::Frame(_) => enc.write_batch(&batch, &mut out)?,
+                        FrameRead::Eof => break,
+                        FrameRead::Torn => {
+                            anyhow::bail!(
+                                "spool {} ends mid-frame: disk error or external \
+                                 truncation",
+                                tmp_path.display()
+                            );
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
-                        Err(e) => {
-                            return Err(e)
-                                .with_context(|| format!("reading {}", tmp_path.display()));
+                        FrameRead::Corrupt(lost) => {
+                            anyhow::bail!(
+                                "spool {} has a corrupt frame ({lost} records): \
+                                 disk error or external modification",
+                                tmp_path.display()
+                            );
                         }
                     }
-                }
-                if !batch.is_empty() {
-                    enc.write_batch(&batch, &mut out)?;
                 }
                 enc.finish(&mut out)?;
                 out.flush().with_context(|| format!("flushing {}", self.path.display()))?;

@@ -348,6 +348,7 @@ impl<S: EventSource> FusedSource<S> {
             .map(|mut source| {
                 source.set_buffer_pool(Arc::clone(&pool));
                 let node = Arc::new(LiveNode::new(source.describe()));
+                source.set_live_node(Arc::clone(&node));
                 FusedInput {
                     source,
                     node,
@@ -507,6 +508,7 @@ impl<S: EventSource> FusedSource<S> {
                 let mut source = client.source;
                 source.set_chunk_hint(self.chunk);
                 source.set_buffer_pool(Arc::clone(&self.pool));
+                source.set_live_node(Arc::clone(&client.node));
                 self.clients.push(FusedInput {
                     source,
                     node: client.node,
@@ -1090,6 +1092,14 @@ impl<S: EventSource> EventSource for Lane<'_, S> {
             Lane::Pumped(_) => {}
         }
     }
+    fn set_live_node(&mut self, node: Arc<LiveNode>) {
+        match self {
+            Lane::Direct(s) => s.set_live_node(node),
+            // A pumped lane's real source lives on the pump thread; its
+            // counters are tracked by the pump's ProducerGauges instead.
+            Lane::Pumped(_) => {}
+        }
+    }
     fn describe(&self) -> String {
         match self {
             Lane::Direct(s) => s.describe(),
@@ -1370,6 +1380,11 @@ where
     let canvas = merged.resolution();
     let sink_nodes: Vec<Arc<LiveNode>> =
         branches.iter().map(|b| Arc::new(LiveNode::new(b.sink.describe()))).collect();
+    // Sinks with internal machinery (disk-buffered edges) publish their
+    // gauges straight onto the node the driver samples.
+    for (branch, node) in branches.iter_mut().zip(&sink_nodes) {
+        branch.sink.set_live_node(Arc::clone(node));
+    }
     // Only the coroutine drivers have a bounded edge channel whose
     // full-queue suspensions mean anything; the sync loop's zero is
     // "no gauge", and backpressure-keyed controllers must know that.
@@ -1440,11 +1455,19 @@ where
     let all_nodes = sources.iter().chain(stages.iter()).chain(sink_reports.iter());
     let (mut bytes_moved, mut chunks_cloned) = (0u64, 0u64);
     let (mut pool_hits, mut pool_misses) = (0u64, 0u64);
+    let (mut buffer_bytes_on_disk, mut buffer_records_spilled) = (0u64, 0u64);
+    let (mut buffer_records_replayed, mut buffer_corrupt_records_skipped) = (0u64, 0u64);
+    let mut buffer_spill_active = false;
     for node in all_nodes {
         bytes_moved += node.bytes_moved;
         chunks_cloned += node.chunks_cloned;
         pool_hits += node.pool_hits;
         pool_misses += node.pool_misses;
+        buffer_bytes_on_disk += node.buffer_bytes_on_disk;
+        buffer_records_spilled += node.buffer_records_spilled;
+        buffer_records_replayed += node.buffer_records_replayed;
+        buffer_corrupt_records_skipped += node.buffer_corrupt_records_skipped;
+        buffer_spill_active |= node.buffer_spill_active;
     }
     // The fused source/merge pool counts for itself (its gets are not
     // attributed to any single node); stage-graph pools counted above.
@@ -1481,6 +1504,11 @@ where
         decode_queue_depth: decode.queue_depth,
         decode_worker_busy: decode.worker_busy,
         decode_reassembly_lag: decode.reassembly_lag,
+        buffer_bytes_on_disk,
+        buffer_records_spilled,
+        buffer_records_replayed,
+        buffer_corrupt_records_skipped,
+        buffer_spill_active,
     };
     if let Some(emitter) = &emitter {
         emitter.emit_final(&report)?;

@@ -1,0 +1,310 @@
+//! Durable edge-buffer acceptance (ROADMAP item 2's durability slice):
+//!
+//! * **Crash-safety property**: a journal truncated at *every* byte
+//!   offset recovers exactly the committed-frame prefix — no panic, no
+//!   phantom events, and `SegmentWriter` recovery agrees byte-for-byte
+//!   with what `ReplaySource` re-serves.
+//! * **Kill mid-spill**: a journal torn mid-frame (crashed writer)
+//!   reopens to the committed prefix and replays it byte-identically.
+//! * **Bounded-memory spill**: a slow sink behind a `disk{cap}` edge
+//!   loses nothing, stays byte-identical to the pure-memory edge, and
+//!   holds the in-memory front at `front_batches` while spilling.
+//! * **Replay-from-offset**: the recorded edge re-serves from offset 0
+//!   and from mid-stream (including mid-frame offsets).
+//! * **Thread budget**: each buffered edge costs exactly one `buf:w/…`
+//!   and one `buf:r/…` thread, both reaped at `finish()`.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use aestream::aer::{Event, Resolution};
+use aestream::stream::buffer::segment::{SegmentWriter, FRAME_HEADER_BYTES, RECORD_BYTES};
+use aestream::stream::{
+    read_acked_offset, CaptureSink, DiskBufferConfig, DiskBufferedSink, EventSink, EventSource,
+    GraphConfig, MemorySource, ReplaySource, ReplaySpeed, SinkSummary, Topology,
+};
+use aestream::testutil::synthetic_events_seeded;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "aestream-bufdur-{}-{tag}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Drain a replay source to completion through the `EventSource` API.
+fn drain(mut src: ReplaySource) -> Vec<Event> {
+    let mut out = Vec::new();
+    while let Some(batch) = src.next_batch().unwrap() {
+        out.extend_from_slice(&batch);
+    }
+    out
+}
+
+/// The journal's segment files, sorted by index.
+fn segment_files(dir: &std::path::Path) -> Vec<PathBuf> {
+    let mut segs: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("segment-"))
+        })
+        .collect();
+    segs.sort();
+    segs
+}
+
+/// Truncate-at-every-byte-offset property: for each cut point the
+/// reader yields exactly the frames wholly before the cut (truncation
+/// never corrupts a complete frame's CRC, so committed = complete),
+/// and writer recovery truncates to the same boundary.
+#[test]
+fn truncation_at_every_byte_offset_recovers_exactly_the_committed_prefix() {
+    const FRAMES: usize = 6;
+    const PER_FRAME: usize = 17;
+    let events = synthetic_events_seeded(FRAMES * PER_FRAME, 64, 64, 0xD15C);
+
+    let master = tmp_dir("truncate-master");
+    {
+        let (mut writer, recovery) = SegmentWriter::open(&master, u64::MAX, false).unwrap();
+        assert_eq!(recovery.committed_records, 0, "fresh dir recovers nothing");
+        for frame in events.chunks(PER_FRAME) {
+            writer.append(frame).unwrap();
+        }
+        writer.sync().unwrap();
+    }
+    let segs = segment_files(&master);
+    assert_eq!(segs.len(), 1, "unbounded target keeps one segment");
+    let seg_name = segs[0].file_name().unwrap().to_owned();
+    let bytes = std::fs::read(&segs[0]).unwrap();
+    let frame_bytes = FRAME_HEADER_BYTES + PER_FRAME * RECORD_BYTES;
+    assert_eq!(bytes.len(), FRAMES * frame_bytes, "fixed-width frames");
+
+    let cut_dir = tmp_dir("truncate-cut");
+    for cut in 0..=bytes.len() {
+        std::fs::remove_dir_all(&cut_dir).ok();
+        std::fs::create_dir_all(&cut_dir).unwrap();
+        std::fs::write(cut_dir.join(&seg_name), &bytes[..cut]).unwrap();
+        let committed_frames = cut / frame_bytes;
+        let expect = &events[..committed_frames * PER_FRAME];
+
+        // Reader path: no panic, no phantom events, exact prefix.
+        let got = drain(ReplaySource::open(&cut_dir, 0, ReplaySpeed::Max));
+        assert_eq!(got, expect, "replay after cut at byte {cut}");
+
+        // Writer path: recovery lands on the same frame boundary and
+        // truncates the torn tail away.
+        let (_writer, recovery) = SegmentWriter::open(&cut_dir, u64::MAX, false).unwrap();
+        assert_eq!(
+            recovery.committed_records as usize,
+            expect.len(),
+            "recovery record count at byte {cut}"
+        );
+        assert_eq!(
+            recovery.truncated_bytes as usize,
+            cut - committed_frames * frame_bytes,
+            "torn-tail bytes at cut {cut}"
+        );
+    }
+    std::fs::remove_dir_all(&master).ok();
+    std::fs::remove_dir_all(&cut_dir).ok();
+}
+
+/// Kill mid-spill: a writer that dies mid-frame leaves a torn tail;
+/// reopening recovers the committed prefix and the replay of that
+/// prefix is byte-identical to the original stream.
+#[test]
+fn torn_journal_reopens_and_replays_the_committed_prefix() {
+    const CHUNK: usize = 256;
+    let dir = tmp_dir("torn");
+    let events = synthetic_events_seeded(8_000, 128, 128, 0xACED);
+    {
+        let (capture, _captured) = CaptureSink::new();
+        let mut config = DiskBufferConfig::new(dir.clone(), 64 << 20);
+        config.fsync_per_batch = false;
+        config.front_batches = 1;
+        let mut sink = DiskBufferedSink::spawn(Box::new(capture), config, "torn").unwrap();
+        for batch in events.chunks(CHUNK) {
+            sink.consume(batch).unwrap();
+        }
+        sink.finish().unwrap();
+    }
+    // Tear the tail mid-frame, as a crash between write() and the
+    // frame's last byte would.
+    let last = segment_files(&dir).pop().expect("journal has a segment");
+    let len = std::fs::metadata(&last).unwrap().len();
+    let file = std::fs::OpenOptions::new().write(true).open(&last).unwrap();
+    file.set_len(len - 5).unwrap();
+    drop(file);
+
+    let whole_frames = (events.len() / CHUNK) * CHUNK; // the torn frame is the short tail
+    let expect = &events[..whole_frames];
+    let got = drain(ReplaySource::open(&dir, 0, ReplaySpeed::Max));
+    assert_eq!(got, expect, "torn tail must not surface partial frames");
+
+    // Writer recovery truncates to the same boundary and appends cleanly.
+    let (mut writer, recovery) = SegmentWriter::open(&dir, u64::MAX, false).unwrap();
+    assert_eq!(recovery.committed_records as usize, whole_frames);
+    writer.append(&events[whole_frames..]).unwrap();
+    writer.sync().unwrap();
+    drop(writer);
+    assert_eq!(
+        drain(ReplaySource::open(&dir, 0, ReplaySpeed::Max)),
+        events,
+        "recovered journal accepts the re-sent tail"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A sink that holds every batch for a while — the throttled far end
+/// that forces the buffered edge to spill.
+struct ThrottledSink<S> {
+    inner: S,
+    delay: Duration,
+}
+
+impl<S: EventSink> EventSink for ThrottledSink<S> {
+    fn consume(&mut self, batch: &[Event]) -> anyhow::Result<()> {
+        std::thread::sleep(self.delay);
+        self.inner.consume(batch)
+    }
+    fn finish(&mut self) -> anyhow::Result<SinkSummary> {
+        self.inner.finish()
+    }
+    fn describe(&self) -> String {
+        format!("throttled({})", self.inner.describe())
+    }
+}
+
+/// The tier-1 acceptance topology: slow sink behind a `disk{cap}` edge
+/// completes with zero loss and byte-identical output, spills while
+/// running, acks everything, and the journal replays from offset 0 and
+/// mid-stream.
+#[test]
+fn slow_sink_disk_edge_is_lossless_byte_identical_and_replayable() {
+    const CHUNK: usize = 173;
+    let base = tmp_dir("graph");
+    let res = Resolution { width: 96, height: 48 };
+    let events = synthetic_events_seeded(12_000, res.width, res.height, 0x5111);
+
+    let (capture, captured) = CaptureSink::new();
+    let mut config = DiskBufferConfig::new(base.clone(), 64 << 20);
+    config.fsync_per_batch = false;
+    config.front_batches = 2;
+    let report = Topology::builder()
+        .source("in", MemorySource::new(events.clone(), res, CHUNK))
+        .sink_buffered(
+            "out",
+            ThrottledSink { inner: capture, delay: Duration::from_micros(300) },
+            config,
+        )
+        .build()
+        .run(GraphConfig { chunk_size: CHUNK, ..Default::default() })
+        .unwrap();
+
+    assert_eq!(
+        &*captured.lock().unwrap(),
+        &events,
+        "disk edge must be byte-identical to the memory edge"
+    );
+    assert_eq!(report.events_in, events.len() as u64);
+    assert!(report.buffer_records_spilled > 0, "throttled sink never spilled");
+    assert!(report.buffer_bytes_on_disk > 0, "journal gauge never reported");
+    assert_eq!(report.buffer_corrupt_records_skipped, 0);
+    assert!(!report.buffer_spill_active, "drained edge still flagged as spilling");
+    assert_eq!(read_acked_offset(&base), events.len() as u64, "at-least-once ack cursor");
+
+    // The retained journal replays the whole edge, and from mid-stream
+    // offsets that land inside frames.
+    assert_eq!(drain(ReplaySource::open(&base, 0, ReplaySpeed::Max)), events);
+    for offset in [1usize, CHUNK - 1, 5_000, events.len() - 7] {
+        assert_eq!(
+            drain(ReplaySource::open(&base, offset as u64, ReplaySpeed::Max)),
+            events[offset..],
+            "replay from offset {offset}"
+        );
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// The memory bound that justifies the subsystem: while the drainer is
+/// throttled, the front never holds more than `front_batches` batches
+/// in memory — everything else waits on disk.
+#[test]
+fn memory_front_stays_bounded_while_spilling() {
+    const FRONT: usize = 2;
+    let dir = tmp_dir("bounded");
+    let events = synthetic_events_seeded(10_000, 64, 64, 0xB0B);
+    let (capture, captured) = CaptureSink::new();
+    let mut config = DiskBufferConfig::new(dir.clone(), 64 << 20);
+    config.fsync_per_batch = false;
+    config.front_batches = FRONT;
+    let mut sink = DiskBufferedSink::spawn(
+        Box::new(ThrottledSink { inner: capture, delay: Duration::from_micros(200) }),
+        config,
+        "bounded",
+    )
+    .unwrap();
+    for batch in events.chunks(100) {
+        sink.consume(batch).unwrap();
+    }
+    sink.finish().unwrap();
+    let snap = sink.stats();
+    assert_eq!(&*captured.lock().unwrap(), &events, "zero loss");
+    assert!(snap.records_spilled > 0, "feeding 100 batches through a slow sink must spill");
+    assert!(
+        snap.peak_mem_batches <= FRONT as u64,
+        "memory front exceeded its bound: peak {} > {FRONT}",
+        snap.peak_mem_batches
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Threads of this process whose comm equals `name` exactly.
+fn threads_named(name: &str) -> usize {
+    let Ok(entries) = std::fs::read_dir("/proc/self/task") else { return 0 };
+    entries
+        .flatten()
+        .filter(|entry| {
+            std::fs::read_to_string(entry.path().join("comm"))
+                .map(|comm| comm.trim_end() == name)
+                .unwrap_or(false)
+        })
+        .count()
+}
+
+/// Serve-plane thread budget: one `buf:w/<edge>` + one `buf:r/<edge>`
+/// per buffered edge while it runs, zero after `finish()`.
+#[test]
+fn buffer_threads_are_named_per_edge_and_reaped_at_finish() {
+    if !cfg!(target_os = "linux") {
+        return; // /proc census is linux-only
+    }
+    let dir = tmp_dir("census");
+    let (capture, _captured) = CaptureSink::new();
+    let mut config = DiskBufferConfig::new(dir.clone(), 1 << 20);
+    config.fsync_per_batch = false;
+    let mut sink = DiskBufferedSink::spawn(Box::new(capture), config, "census").unwrap();
+    sink.consume(&synthetic_events_seeded(1_000, 32, 32, 1)).unwrap();
+
+    // The names are set by the spawned threads themselves; poll briefly.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if threads_named("buf:w/census") == 1 && threads_named("buf:r/census") == 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "edge threads never appeared in the census");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    sink.finish().unwrap();
+    assert_eq!(threads_named("buf:w/census"), 0, "writer thread must be reaped");
+    assert_eq!(threads_named("buf:r/census"), 0, "drainer thread must be reaped");
+    std::fs::remove_dir_all(&dir).ok();
+}
